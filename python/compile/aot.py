@@ -1,0 +1,112 @@
+"""AOT compilation: lower the Layer-2 graphs to HLO text artifacts.
+
+Run once at build time (`make artifacts`); the Rust coordinator then
+loads and executes the artifacts via PJRT with no Python anywhere on the
+inference path.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 rejects (proto.id() <= INT_MAX); the text parser reassigns ids and
+round-trips cleanly. See /opt/xla-example/load_hlo.
+
+Each named config fixes the static shapes (m inducing points, q latent
+dims, d output dims, B shard capacity). Shards smaller than B are padded
+and masked, so one compiled executable serves any fill level.
+
+Usage:  python -m compile.aot [--out DIR] [--config NAME ...]
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+jax.config.update("jax_enable_x64", True)
+
+DTYPE = jnp.float64
+
+# name -> (m, q, d, B, block_n)
+CONFIGS = {
+    "test":   dict(m=8,  q=2, d=3,   B=32,   block_n=16),
+    "small":  dict(m=16, q=2, d=3,   B=256,  block_n=64),
+    # B sized for ~10-node shards of the n<=1000 oilflow runs (fig4/fig7):
+    # oversized caps just burn padded FLOPs on every chunk.
+    "oil":    dict(m=32, q=6, d=12,  B=64,   block_n=32),
+    "digits": dict(m=48, q=8, d=256, B=128,  block_n=32),
+    "perf":   dict(m=64, q=2, d=3,   B=2048, block_n=256),
+}
+
+ENTRIES = ("shard_stats", "shard_grads", "kmm_grads", "predict")
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(*shape):
+    return jax.ShapeDtypeStruct(shape, DTYPE)
+
+
+def lower_entry(entry, cfg):
+    m, q, d, B = cfg["m"], cfg["q"], cfg["d"], cfg["B"]
+    Z, ls, sf2 = _spec(m, q), _spec(q), _spec(1)
+    Xmu, Xvar, Y, mask, klw = _spec(B, q), _spec(B, q), _spec(B, d), _spec(B), _spec(1)
+    if entry == "shard_stats":
+        fn = functools.partial(model.shard_stats, block_n=cfg["block_n"])
+        args = (Z, ls, sf2, Xmu, Xvar, Y, mask, klw)
+    elif entry == "shard_grads":
+        adj = (_spec(1), _spec(m, d), _spec(m, m), _spec(1))
+        fn = model.shard_grads
+        args = (Z, ls, sf2, Xmu, Xvar, Y, mask, klw) + adj
+    elif entry == "kmm_grads":
+        fn = model.kmm_grads
+        args = (Z, ls, sf2, _spec(m, m))
+    elif entry == "predict":
+        fn = model.predict
+        args = (Z, ls, sf2, Xmu, Xvar, _spec(m, d), _spec(m, m))
+    else:
+        raise ValueError(entry)
+    return to_hlo_text(jax.jit(fn).lower(*args))
+
+
+def build(out_dir, config_names):
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"version": 1, "dtype": "f64", "configs": {}}
+    for name in config_names:
+        cfg = CONFIGS[name]
+        entries = {}
+        for entry in ENTRIES:
+            text = lower_entry(entry, cfg)
+            fname = f"{entry}_{name}.hlo.txt"
+            with open(os.path.join(out_dir, fname), "w") as f:
+                f.write(text)
+            entries[entry] = fname
+            print(f"  {fname}: {len(text)} chars")
+        manifest["configs"][name] = {**cfg, "entries": entries}
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {out_dir}/manifest.json ({len(config_names)} configs)")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--config", action="append", default=None,
+                    help="config name(s); default: all")
+    args = ap.parse_args()
+    names = args.config or list(CONFIGS)
+    build(args.out, names)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,99 @@
+"""Collapsed-bound oracle (build/test-time only; uses jnp.linalg).
+
+Implements eq. 3.3 of the paper — the unifying lower bound with the
+optimal q(u) substituted analytically:
+
+  F = -nd/2 log 2pi + nd/2 log beta + d/2 log|Kmm| - d/2 log|Sigma|
+      - beta/2 a - beta d/2 psi0 + beta d/2 tr(Kmm^-1 D)
+      + beta^2/2 tr(C^T Sigma^-1 C) - KL,        Sigma = Kmm + beta D
+
+This module is the single source of truth the Rust global step
+(rust/src/gp/bound.rs) is validated against: gen_testvectors.py dumps
+F, the adjoints dF/d{psi0, C, D, KL, Kmm, log_beta} and the end-to-end
+parameter gradients (all via jax autodiff, cholesky included) to JSON,
+and cargo tests assert the hand-derived Rust algebra matches to ~1e-9.
+
+It never becomes an artifact: jax >= 0.8 lowers cholesky to typed-FFI
+lapack custom-calls that xla_extension 0.5.1 cannot compile.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+
+jax.config.update("jax_enable_x64", True)
+
+
+def bound_from_stats(a, p0, C, D, kl, Kmm, log_beta, n, d):
+    """Eq. 3.3 given accumulated statistics and Kmm (jitter pre-added).
+
+    D and Kmm are symmetrized first: the bound is treated as an explicitly
+    symmetric function of both, which fixes the adjoint convention to the
+    symmetric "full-matrix" gradient that the hand-derived Rust global
+    step (rust/src/gp/bound.rs) produces.
+    """
+    D = 0.5 * (D + D.T)
+    Kmm = 0.5 * (Kmm + Kmm.T)
+    beta = jnp.exp(log_beta)
+    Sigma = Kmm + beta * D
+    Lk = jnp.linalg.cholesky(Kmm)
+    Ls = jnp.linalg.cholesky(Sigma)
+    logdet_K = 2.0 * jnp.sum(jnp.log(jnp.diagonal(Lk)))
+    logdet_S = 2.0 * jnp.sum(jnp.log(jnp.diagonal(Ls)))
+    Kinv_D = jax.scipy.linalg.cho_solve((Lk, True), D)
+    Sinv_C = jax.scipy.linalg.cho_solve((Ls, True), C)
+    return (
+        -0.5 * n * d * jnp.log(2.0 * jnp.pi)
+        + 0.5 * n * d * log_beta
+        + 0.5 * d * logdet_K
+        - 0.5 * d * logdet_S
+        - 0.5 * beta * a
+        - 0.5 * beta * d * p0
+        + 0.5 * beta * d * jnp.trace(Kinv_D)
+        + 0.5 * beta * beta * jnp.sum(C * Sinv_C)
+        - kl
+    )
+
+
+def full_bound(Z, log_ls, log_sf2, log_beta, Xmu, Xvar, Y, mask, kl_weight,
+               jitter=1e-6):
+    """End-to-end collapsed bound from raw parameters (oracle path)."""
+    a, p0, C, D, kl = ref.shard_stats_ref(
+        Z, log_ls, log_sf2, Xmu, Xvar, Y, mask, kl_weight
+    )
+    m = Z.shape[0]
+    Kmm = ref.seard_kernel(Z, Z, log_ls, log_sf2) + jitter * jnp.eye(m)
+    n = jnp.sum(mask)
+    d = Y.shape[1]
+    return bound_from_stats(a, p0, C, D, kl, Kmm, log_beta, n, d)
+
+
+def bound_adjoints(a, p0, C, D, kl, Kmm, log_beta, n, d):
+    """dF/d{p0, C, D, kl, Kmm, log_beta} — the constant-size message the
+    central node broadcasts in map step 2 (oracle for rust gp::adjoints)."""
+    g = jax.grad(bound_from_stats, argnums=(1, 2, 3, 4, 5, 6))(
+        a, p0, C, D, kl, Kmm, log_beta, n, d
+    )
+    return g
+
+
+def full_bound_grads(Z, log_ls, log_sf2, log_beta, Xmu, Xvar, Y, mask,
+                     kl_weight, jitter=1e-6):
+    """End-to-end gradient oracle w.r.t. all parameters."""
+    return jax.grad(full_bound, argnums=(0, 1, 2, 3, 4, 5))(
+        Z, log_ls, log_sf2, log_beta, Xmu, Xvar, Y, mask, kl_weight, jitter
+    )
+
+
+def optimal_qu(C, D, Kmm, log_beta):
+    """Optimal variational q(u) = N(mu_u, S_u) (paper §3; supp. §3):
+
+    mu_u = beta Kmm Sigma^-1 C,   S_u = Kmm Sigma^-1 Kmm.
+    """
+    beta = jnp.exp(log_beta)
+    Sigma = Kmm + beta * D
+    Ls = jnp.linalg.cholesky(Sigma)
+    Sinv_C = jax.scipy.linalg.cho_solve((Ls, True), C)
+    Sinv_K = jax.scipy.linalg.cho_solve((Ls, True), Kmm)
+    return beta * Kmm @ Sinv_C, Kmm @ Sinv_K

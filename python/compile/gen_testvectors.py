@@ -1,0 +1,124 @@
+"""Dump cross-layer test vectors to artifacts/testvectors.json.
+
+A small random sparse-GP/GPLVM instance is pushed through the full JAX
+oracle (statistics -> collapsed bound -> adjoints -> parameter
+gradients -> optimal q(u) -> predictions). The Rust crate's unit tests
+parse this file and assert that the hand-derived native global step
+(rust/src/gp/) reproduces every number to ~1e-9 — the strongest
+cross-language correctness signal in the repo.
+
+Usage: python -m compile.gen_testvectors [--out ../artifacts/testvectors.json]
+"""
+
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import bound_ref, model
+from .kernels import ref
+
+jax.config.update("jax_enable_x64", True)
+
+
+def _tolist(x):
+    return np.asarray(x).tolist()
+
+
+def make_case(seed, B, m, q, d, kl_weight, name):
+    rng = np.random.default_rng(seed)
+    Z = jnp.array(rng.normal(size=(m, q)))
+    log_ls = jnp.array(rng.normal(size=q) * 0.2)
+    log_sf2 = jnp.array(rng.normal() * 0.2)
+    log_beta = jnp.array(rng.normal() * 0.2 + 1.0)
+    Xmu = jnp.array(rng.normal(size=(B, q)))
+    if kl_weight > 0.0:
+        Xvar = jnp.array(rng.uniform(0.05, 1.0, size=(B, q)))
+    else:
+        Xvar = jnp.zeros((B, q))
+    Y = jnp.array(rng.normal(size=(B, d)))
+    mask = jnp.array((rng.uniform(size=B) > 0.15).astype(np.float64))
+    jitter = 1e-6
+
+    a, p0, C, D, kl = ref.shard_stats_ref(
+        Z, log_ls, log_sf2, Xmu, Xvar, Y, mask, kl_weight
+    )
+    Kmm = ref.seard_kernel(Z, Z, log_ls, log_sf2) + jitter * jnp.eye(m)
+    n = jnp.sum(mask)
+    F = bound_ref.bound_from_stats(a, p0, C, D, kl, Kmm, log_beta, n, d)
+    adj = bound_ref.bound_adjoints(a, p0, C, D, kl, Kmm, log_beta, n, d)
+    adj_p0, adj_C, adj_D, adj_kl, adj_Kmm, dlog_beta = adj
+    grads = bound_ref.full_bound_grads(
+        Z, log_ls, log_sf2, log_beta, Xmu, Xvar, Y, mask, kl_weight, jitter
+    )
+    dZ, dlog_ls, dlog_sf2, dlog_beta_full, dXmu, dXvar = grads
+    mu_u, S_u = bound_ref.optimal_qu(C, D, Kmm, log_beta)
+
+    # prediction weights the Rust side must reproduce
+    beta = jnp.exp(log_beta)
+    Sigma = Kmm + beta * D
+    W1 = beta * jnp.linalg.solve(Sigma, C)
+    Wv = jnp.linalg.inv(Kmm) - jnp.linalg.inv(Sigma)
+    Xt_mu = jnp.array(rng.normal(size=(5, q)))
+    Xt_var = jnp.zeros((5, q)) if kl_weight == 0.0 else jnp.array(
+        rng.uniform(0.05, 0.5, size=(5, q)))
+    mean, var = model.predict(
+        Z, log_ls, jnp.array([log_sf2]), Xt_mu, Xt_var, W1, Wv
+    )
+
+    return {
+        "name": name,
+        "B": B, "m": m, "q": q, "d": d,
+        "kl_weight": kl_weight, "jitter": jitter,
+        "inputs": {
+            "Z": _tolist(Z), "log_ls": _tolist(log_ls),
+            "log_sf2": float(log_sf2), "log_beta": float(log_beta),
+            "Xmu": _tolist(Xmu), "Xvar": _tolist(Xvar),
+            "Y": _tolist(Y), "mask": _tolist(mask),
+        },
+        "stats": {
+            "a": float(a), "psi0": float(p0),
+            "C": _tolist(C), "D": _tolist(D), "kl": float(kl),
+            "Kmm": _tolist(Kmm), "n": float(n),
+        },
+        "bound": float(F),
+        "adjoints": {
+            "psi0": float(adj_p0), "C": _tolist(adj_C), "D": _tolist(adj_D),
+            "kl": float(adj_kl), "Kmm": _tolist(adj_Kmm),
+            "log_beta": float(dlog_beta),
+        },
+        "grads": {
+            "Z": _tolist(dZ), "log_ls": _tolist(dlog_ls),
+            "log_sf2": float(dlog_sf2), "log_beta": float(dlog_beta_full),
+            "Xmu": _tolist(dXmu), "Xvar": _tolist(dXvar),
+        },
+        "qu": {"mu": _tolist(mu_u), "S": _tolist(S_u)},
+        "predict": {
+            "Xt_mu": _tolist(Xt_mu), "Xt_var": _tolist(Xt_var),
+            "W1": _tolist(W1), "Wv": _tolist(Wv),
+            "mean": _tolist(mean), "var": _tolist(var),
+        },
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts/testvectors.json")
+    args = ap.parse_args()
+    # the first two cases match the "test" artifact config (m=8, q=2, d=3,
+    # B<=32) so the PJRT integration tests can replay them through the
+    # compiled artifacts; lvm_wide exercises the native path at odd shapes.
+    cases = [
+        make_case(seed=7,  B=24, m=8, q=2, d=3, kl_weight=1.0, name="lvm_small"),
+        make_case(seed=11, B=24, m=8, q=2, d=3, kl_weight=0.0, name="reg_small"),
+        make_case(seed=13, B=40, m=9, q=4, d=7, kl_weight=1.0, name="lvm_wide"),
+    ]
+    with open(args.out, "w") as f:
+        json.dump({"cases": cases}, f)
+    print(f"wrote {args.out} ({len(cases)} cases)")
+
+
+if __name__ == "__main__":
+    main()

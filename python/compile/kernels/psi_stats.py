@@ -1,0 +1,172 @@
+"""Layer-1 Pallas kernel: fused psi-statistics for one data shard.
+
+This is the hot spot of the paper's map step: O(B * m^2 * q) work per
+shard, producing the constant-size partial statistics
+(a, psi0, C = Psi1^T Y, D = Psi2, KL) that the coordinator reduces.
+
+Hardware adaptation (DESIGN.md §2): the original GParML computed these
+with NumPy broadcasting on CPU cores. For a TPU-shaped memory hierarchy we
+
+  * stream data points HBM->VMEM in blocks of `block_n` rows via the
+    BlockSpec grid (the inducing-point tensors Z, and the m x m / m x d
+    accumulators stay resident in VMEM across the whole grid);
+  * expand the Gaussian quadratic forms
+        (mu - z)^2 / denom = mu^2/denom - 2 (mu/denom) z + (1/denom) z^2
+    so the cross terms become [bn, q] @ [q, m] / [q, m^2] contractions —
+    MXU-shaped matmuls instead of [bn, m, m, q] broadcast subtractions.
+    This drops the per-block intermediate from O(bn m^2 q) to O(bn m^2)
+    and puts ~all FLOPs on the systolic array;
+  * accumulate all five statistics in-place across grid steps
+    (initialised at program_id == 0), so the kernel emits exactly the
+    constant-size message the paper's reduce step transmits.
+
+interpret=True everywhere: the CPU PJRT runtime cannot execute Mosaic
+custom-calls; numerics are validated against kernels/ref.py and real-TPU
+performance is estimated analytically (EXPERIMENTS.md §Perf).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+jax.config.update("jax_enable_x64", True)
+
+
+def _psi_stats_kernel(
+    z_ref,        # [m, q]      resident
+    log_ls_ref,   # [q]         resident
+    log_sf2_ref,  # [1]         resident
+    klw_ref,      # [1]         resident
+    xmu_ref,      # [bn, q]     streamed
+    xvar_ref,     # [bn, q]     streamed
+    y_ref,        # [bn, d]     streamed
+    mask_ref,     # [bn]        streamed
+    a_ref,        # [1]         accumulator
+    p0_ref,       # [1]         accumulator
+    c_ref,        # [m, d]      accumulator
+    d_ref,        # [m, m]      accumulator
+    kl_ref,       # [1]         accumulator
+):
+    Z = z_ref[...]
+    ls2 = jnp.exp(2.0 * log_ls_ref[...])          # [q]
+    sf2 = jnp.exp(log_sf2_ref[0])
+    klw = klw_ref[0]
+    Xmu = xmu_ref[...]                            # [bn, q]
+    Xvar = xvar_ref[...]                          # [bn, q]
+    Y = y_ref[...]                                # [bn, d]
+    mask = mask_ref[...]                          # [bn]
+    m = Z.shape[0]
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        a_ref[...] = jnp.zeros_like(a_ref)
+        p0_ref[...] = jnp.zeros_like(p0_ref)
+        c_ref[...] = jnp.zeros_like(c_ref)
+        d_ref[...] = jnp.zeros_like(d_ref)
+        kl_ref[...] = jnp.zeros_like(kl_ref)
+
+    Ym = Y * mask[:, None]
+
+    # --- a = sum_i mask_i |Y_i|^2 and psi0 = sf2 * sum_i mask_i ----------
+    a_ref[...] += jnp.sum(Ym * Y)[None]
+    p0_ref[...] += (sf2 * jnp.sum(mask))[None]
+
+    # --- Psi1 block [bn, m], expanded quadratic => MXU contraction ------
+    denom1 = ls2[None, :] + Xvar                  # [bn, q]
+    w1 = 1.0 / denom1                             # [bn, q]
+    scale1 = jnp.exp(-0.5 * jnp.sum(jnp.log1p(Xvar / ls2[None, :]), axis=1))
+    r1 = jnp.sum(Xmu * Xmu * w1, axis=1)          # [bn]
+    cross1 = (Xmu * w1) @ Z.T                     # [bn, m]  (MXU)
+    zsq1 = w1 @ (Z * Z).T                         # [bn, m]  (MXU)
+    quad1 = r1[:, None] - 2.0 * cross1 + zsq1
+    psi1 = sf2 * scale1[:, None] * jnp.exp(-0.5 * quad1)
+
+    # C += Psi1^T (mask * Y)   [m, d]  (MXU)
+    c_ref[...] += psi1.T @ Ym
+
+    # --- Psi2 block: sum_i mask_i Psi2_i [m, m] --------------------------
+    zbar = 0.5 * (Z[:, None, :] + Z[None, :, :])  # [m, m, q]
+    zb = zbar.reshape(m * m, Z.shape[1])          # [m^2, q]
+    dz = Z[:, None, :] - Z[None, :, :]
+    log_dist = -jnp.sum(dz * dz / (4.0 * ls2), axis=-1).reshape(m * m)
+    denom2 = ls2[None, :] + 2.0 * Xvar            # [bn, q]
+    w2 = 1.0 / denom2
+    log_scale2 = -jnp.sum(jnp.log1p(2.0 * Xvar / ls2[None, :]), axis=1)  # [bn]
+    r2 = jnp.sum(Xmu * Xmu * w2, axis=1)          # [bn]
+    cross2 = (Xmu * w2) @ zb.T                    # [bn, m^2]  (MXU)
+    zsq2 = w2 @ (zb * zb).T                       # [bn, m^2]  (MXU)
+    quad2 = r2[:, None] - 2.0 * cross2 + zsq2
+    contrib = jnp.exp(
+        0.5 * log_scale2[:, None] + log_dist[None, :] - quad2
+    )  # exp(log_scale2/... ) see note below
+    # note: prod_q (1+2s/ls2)^(-1/2) = exp(-0.5 sum log1p(2s/ls2)); we folded
+    # the -0.5 into log_scale2 by summing with weight -1 then halving here.
+    d_ref[...] += (sf2 * sf2) * (mask @ contrib).reshape(m, m)
+
+    # --- KL (gated; 0 in the regression case) ---------------------------
+    safe = jnp.where(Xvar > 0.0, Xvar, 1.0)
+    per_point = 0.5 * jnp.sum(Xmu * Xmu + Xvar - jnp.log(safe) - 1.0, axis=1)
+    kl_ref[...] += (klw * jnp.sum(mask * per_point))[None]
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def shard_stats_pallas(Z, log_ls, log_sf2, Xmu, Xvar, Y, mask, kl_weight,
+                       block_n=None):
+    """Fused shard statistics via the Pallas kernel.
+
+    Shapes: Z [m,q], log_ls [q], log_sf2 [1], Xmu/Xvar [B,q], Y [B,d],
+    mask [B], kl_weight [1].  B must be divisible by block_n.
+    Returns (a [1], psi0 [1], C [m,d], D [m,m], kl [1]).
+    """
+    B, q = Xmu.shape
+    m = Z.shape[0]
+    d = Y.shape[1]
+    bn = block_n or min(B, 128)
+    assert B % bn == 0, f"B={B} not divisible by block_n={bn}"
+    grid = (B // bn,)
+    dt = Xmu.dtype
+
+    resident = lambda shape: pl.BlockSpec(shape, lambda i: (0,) * len(shape))
+    out_shapes = (
+        jax.ShapeDtypeStruct((1,), dt),
+        jax.ShapeDtypeStruct((1,), dt),
+        jax.ShapeDtypeStruct((m, d), dt),
+        jax.ShapeDtypeStruct((m, m), dt),
+        jax.ShapeDtypeStruct((1,), dt),
+    )
+    return pl.pallas_call(
+        _psi_stats_kernel,
+        grid=grid,
+        in_specs=[
+            resident((m, q)),
+            resident((q,)),
+            resident((1,)),
+            resident((1,)),
+            pl.BlockSpec((bn, q), lambda i: (i, 0)),
+            pl.BlockSpec((bn, q), lambda i: (i, 0)),
+            pl.BlockSpec((bn, d), lambda i: (i, 0)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+        ],
+        out_specs=[
+            resident((1,)),
+            resident((1,)),
+            resident((m, d)),
+            resident((m, m)),
+            resident((1,)),
+        ],
+        out_shape=out_shapes,
+        interpret=True,
+    )(Z, log_ls, log_sf2, kl_weight, Xmu, Xvar, Y, mask)
+
+
+def vmem_estimate_bytes(m, q, d, bn, itemsize=4):
+    """Analytic VMEM footprint of one grid step (TPU sizing aid, f32).
+
+    Resident: Z, accumulators C/D, zbar-derived [m^2, q] tables.
+    Streamed per block: Xmu, Xvar, Y, mask, and the [bn, m^2] quad tile.
+    """
+    resident = m * q + m * d + m * m + 2 * (m * m * q) + m * m
+    streamed = bn * (2 * q + d + 1) + 2 * bn * m + 2 * bn * m * m
+    return (resident + streamed) * itemsize

@@ -1,0 +1,108 @@
+"""Pure-jnp oracle for the SE-ARD psi-statistics.
+
+These are the expectations of kernel quantities under the variational
+posterior q(X_i) = N(mu_i, diag(s_i)) that the paper's re-parametrised
+bound is built from (supplementary material sections 3-4; see DESIGN.md §1):
+
+    psi0      = sum_i <k(x_i, x_i)>_{q(X_i)}                  (scalar)
+    Psi1[i,j] = <k(x_i, z_j)>_{q(X_i)}                        (n x m)
+    Psi2      = sum_i <k(Z, x_i) k(x_i, Z)>_{q(X_i)}          (m x m)
+    KL        = sum_i KL(q(X_i) || N(0, I))                   (scalar)
+
+At s_i = 0 these reduce exactly to the Titsias (2009) regression
+quantities: Psi1 = Knm, Psi2 = Kmn Knm, psi0 = n * sigma^2 — the
+unification between sparse GP regression and the GPLVM the paper uses.
+
+Everything here is the CORRECTNESS ORACLE: the Pallas kernel in
+psi_stats.py must match these to ~1e-12 (f64), and the gradient artifact
+is jax.grad through these expressions.
+"""
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+
+def seard_kernel(X1, X2, log_ls, log_sf2):
+    """Plain SE-ARD kernel matrix k(X1, X2): sf2 * exp(-0.5 sum_q d_q^2/ls_q^2)."""
+    ls2 = jnp.exp(2.0 * log_ls)  # [q]
+    sf2 = jnp.exp(log_sf2)
+    d = X1[:, None, :] - X2[None, :, :]  # [n1, n2, q]
+    return sf2 * jnp.exp(-0.5 * jnp.sum(d * d / ls2, axis=-1))
+
+
+def psi0(log_sf2, mask):
+    """sum_i <k(x_i,x_i)> = sigma^2 per (live) point, for SE kernels."""
+    return jnp.exp(log_sf2) * jnp.sum(mask)
+
+
+def psi1(Z, log_ls, log_sf2, Xmu, Xvar):
+    """Psi1[i,j] = <k(x_i, z_j)>_{N(x_i; mu_i, diag(s_i))}   [B, m].
+
+    Psi1[i,j] = sf2 * prod_q (1 + s_iq/ls_q^2)^(-1/2)
+                    * exp(-(mu_iq - z_jq)^2 / (2 (ls_q^2 + s_iq)))
+    """
+    ls2 = jnp.exp(2.0 * log_ls)  # [q]
+    sf2 = jnp.exp(log_sf2)
+    denom = ls2[None, :] + Xvar  # [B, q]
+    # prod_q sqrt(ls2 / (ls2 + s)) == exp(-0.5 sum_q log(1 + s/ls2))
+    scale = jnp.exp(-0.5 * jnp.sum(jnp.log1p(Xvar / ls2[None, :]), axis=1))  # [B]
+    diff = Xmu[:, None, :] - Z[None, :, :]  # [B, m, q]
+    quad = jnp.sum(diff * diff / denom[:, None, :], axis=-1)  # [B, m]
+    return sf2 * scale[:, None] * jnp.exp(-0.5 * quad)
+
+
+def psi2(Z, log_ls, log_sf2, Xmu, Xvar, mask):
+    """Psi2 = sum_i mask_i <k(Z, x_i) k(x_i, Z)>   [m, m].
+
+    Psi2_i[j,k] = sf2^2 * prod_q (1 + 2 s_iq/ls_q^2)^(-1/2)
+                  * exp(-(z_jq - z_kq)^2/(4 ls_q^2)
+                        - (mu_iq - zbar_q)^2/(ls_q^2 + 2 s_iq)),
+    with zbar = (z_j + z_k)/2.
+    """
+    ls2 = jnp.exp(2.0 * log_ls)
+    sf2 = jnp.exp(log_sf2)
+    zbar = 0.5 * (Z[:, None, :] + Z[None, :, :])  # [m, m, q]
+    dz = Z[:, None, :] - Z[None, :, :]
+    log_dist = -jnp.sum(dz * dz / (4.0 * ls2), axis=-1)  # [m, m]
+    denom = ls2[None, :] + 2.0 * Xvar  # [B, q]
+    log_scale = -0.5 * jnp.sum(jnp.log1p(2.0 * Xvar / ls2[None, :]), axis=1)  # [B]
+    diff = Xmu[:, None, None, :] - zbar[None, :, :, :]  # [B, m, m, q]
+    quad = jnp.sum(diff * diff / denom[:, None, None, :], axis=-1)  # [B, m, m]
+    contrib = sf2 * sf2 * jnp.exp(
+        log_scale[:, None, None] + log_dist[None, :, :] - quad
+    )
+    return jnp.sum(mask[:, None, None] * contrib, axis=0)
+
+
+def kl_term(Xmu, Xvar, mask, kl_weight):
+    """sum_i mask_i KL(N(mu_i, diag(s_i)) || N(0, I)), gated by kl_weight.
+
+    kl_weight = 0.0 selects the regression model (observed inputs, no KL);
+    kl_weight = 1.0 selects the LVM. The safe-log guards s = 0 in the
+    regression case (where the whole term is multiplied away anyway).
+    """
+    safe = jnp.where(Xvar > 0.0, Xvar, 1.0)
+    per_point = 0.5 * jnp.sum(Xmu * Xmu + Xvar - jnp.log(safe) - 1.0, axis=1)
+    return kl_weight * jnp.sum(mask * per_point)
+
+
+def shard_stats_ref(Z, log_ls, log_sf2, Xmu, Xvar, Y, mask, kl_weight):
+    """Reference partial statistics for one shard (paper §3.2 map step 1).
+
+    Returns (a, p0, C, D, kl):
+      a  = sum_i mask_i |Y_i|^2        (scalar)
+      p0 = psi0                        (scalar)
+      C  = Psi1^T (mask * Y)           [m, d]
+      D  = Psi2 (masked sum)           [m, m]
+      kl = KL term                     (scalar)
+    """
+    Ym = Y * mask[:, None]
+    a = jnp.sum(Ym * Y)
+    p0 = psi0(log_sf2, mask)
+    P1 = psi1(Z, log_ls, log_sf2, Xmu, Xvar)
+    C = P1.T @ Ym
+    D = psi2(Z, log_ls, log_sf2, Xmu, Xvar, mask)
+    kl = kl_term(Xmu, Xvar, mask, kl_weight)
+    return a, p0, C, D, kl

@@ -1,0 +1,76 @@
+"""L1 performance model: block-size selection for the psi-statistics
+Pallas kernel on a TPU-like memory hierarchy.
+
+`interpret=True` wall-clock is CPU-numpy time, NOT a TPU proxy, so the
+kernel is tuned structurally (DESIGN.md §6): this module models the VMEM
+footprint and FLOP mix per grid step and picks the largest block size
+that fits the VMEM budget with double buffering — larger blocks amortise
+the resident Z/zbar tables and keep the [bn, q] x [q, m^2] contraction
+MXU-shaped.
+
+Usage: python -m compile.kernels.tuning [--m 64] [--q 2] [--d 3]
+"""
+
+import argparse
+
+from .psi_stats import vmem_estimate_bytes
+
+# per-core VMEM on TPU v4-class hardware
+VMEM_BYTES = 16 * 1024 * 1024
+# double buffering of streamed inputs halves the usable budget headroom
+STREAM_OVERLAP_FACTOR = 2.0
+
+
+def flops_per_block(m, q, d, bn):
+    """Approximate FLOP count of one grid step (fused kernel)."""
+    psi1_mm = 2 * bn * q * m * 2          # cross + zsq contractions
+    psi1_ew = 8 * bn * m                   # exp/scale/mask
+    c_acc = 2 * bn * m * d                 # Psi1^T Y
+    psi2_mm = 2 * bn * q * m * m * 2       # cross2 + zsq2 contractions
+    psi2_ew = 10 * bn * m * m              # exp + accumulation
+    kl = 8 * bn * q
+    return psi1_mm + psi1_ew + c_acc + psi2_mm + psi2_ew + kl
+
+
+def mxu_fraction(m, q, d, bn):
+    """Fraction of FLOPs landing on the systolic array (matmul-shaped)."""
+    total = flops_per_block(m, q, d, bn)
+    mm = 2 * bn * q * m * 2 + 2 * bn * m * d + 2 * bn * q * m * m * 2
+    return mm / total
+
+
+def pick_block_n(m, q, d, candidates=(32, 64, 128, 256, 512, 1024),
+                 vmem=VMEM_BYTES, itemsize=4):
+    """Largest candidate whose double-buffered footprint fits VMEM."""
+    best = None
+    rows = []
+    for bn in candidates:
+        bytes_needed = vmem_estimate_bytes(m, q, d, bn, itemsize)
+        fits = bytes_needed * STREAM_OVERLAP_FACTOR <= vmem
+        rows.append((bn, bytes_needed, fits, mxu_fraction(m, q, d, bn)))
+        if fits:
+            best = bn
+    return best, rows
+
+
+def report(m, q, d):
+    best, rows = pick_block_n(m, q, d)
+    print(f"psi-stats kernel sizing: m={m}, q={q}, d={d} (f32, 16MiB VMEM)")
+    print(f"{'bn':>6} {'VMEM/step':>12} {'2x fits':>8} {'MXU frac':>9}")
+    for bn, b, fits, frac in rows:
+        print(f"{bn:>6} {b/2**20:>10.2f}Mi {str(fits):>8} {frac:>9.3f}")
+    print(f"selected block_n = {best}")
+    return best
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--m", type=int, default=64)
+    ap.add_argument("--q", type=int, default=2)
+    ap.add_argument("--d", type=int, default=3)
+    args = ap.parse_args()
+    report(args.m, args.q, args.d)
+
+
+if __name__ == "__main__":
+    main()

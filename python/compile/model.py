@@ -1,0 +1,132 @@
+"""Layer-2 JAX model: the artifact entry points.
+
+Four computation graphs get AOT-lowered to HLO text (aot.py) and executed
+from the Rust coordinator via PJRT. Together with the native-Rust global
+step (rust/src/gp/) they implement the paper's two Map-Reduce rounds:
+
+  shard_stats  — map step 1: partial statistics (a, psi0, C, D, KL) for one
+                 shard. Hot path: the Pallas kernel (kernels/psi_stats.py).
+  shard_grads  — map step 2: given the adjoints dF/d{psi0, C, D, KL}
+                 computed by the central node, chain-rule to the partial
+                 gradients w.r.t. the global parameters (Z, log_ls,
+                 log_sf2) and this shard's local parameters (Xmu, Xvar).
+                 Implemented as jax.grad through the jnp reference
+                 statistics — the same math as the Pallas kernel (pytest
+                 asserts equality), kept differentiable.
+  kmm_grads    — central direct term: Kmm and the pullback of an adjoint
+                 dF/dKmm onto (Z, log_ls, log_sf2).
+  predict      — sparse posterior predictions with (optionally) uncertain
+                 inputs, given the solved weight matrices W1 = beta
+                 Sigma^-1 C and Wv = Kmm^-1 - Sigma^-1 from the Rust side.
+
+All graphs are decomposition-free (no cholesky/solve custom-calls): the
+O(m^3) algebra lives in native Rust. See DESIGN.md §2 for why.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.psi_stats import shard_stats_pallas
+
+jax.config.update("jax_enable_x64", True)
+
+
+# --------------------------------------------------------------------------
+# map step 1: partial statistics
+# --------------------------------------------------------------------------
+
+def shard_stats(Z, log_ls, log_sf2, Xmu, Xvar, Y, mask, kl_weight,
+                block_n=None):
+    """Partial statistics for one shard — Pallas kernel under the hood.
+
+    Returns (a [1], psi0 [1], C [m,d], D [m,m], kl [1]).
+    """
+    return shard_stats_pallas(
+        Z, log_ls, log_sf2, Xmu, Xvar, Y, mask, kl_weight, block_n=block_n
+    )
+
+
+# --------------------------------------------------------------------------
+# map step 2: partial gradients via the adjoint chain rule
+# --------------------------------------------------------------------------
+
+def _weighted_stats(Z, log_ls, log_sf2, Xmu, Xvar, Y, mask, kl_weight,
+                    adj_p0, adj_C, adj_D, adj_kl):
+    """Scalar <adjoints, statistics> whose gradient is the shard gradient."""
+    _, p0, C, D, kl = ref.shard_stats_ref(
+        Z, log_ls, log_sf2[0], Xmu, Xvar, Y, mask, kl_weight[0]
+    )
+    return (
+        adj_p0[0] * p0
+        + jnp.sum(adj_C * C)
+        + jnp.sum(adj_D * D)
+        + adj_kl[0] * kl
+    )
+
+
+def shard_grads(Z, log_ls, log_sf2, Xmu, Xvar, Y, mask, kl_weight,
+                adj_p0, adj_C, adj_D, adj_kl):
+    """Partial gradients for one shard (paper §3.2 step 4 inputs).
+
+    Returns (dZ [m,q], dlog_ls [q], dlog_sf2 [1], dXmu [B,q], dXvar [B,q]).
+    dXvar is w.r.t. the raw variance s (the coordinator applies the
+    log-reparameterisation chain rule: d/dlog s = s * d/ds).
+    """
+    g = jax.grad(_weighted_stats, argnums=(0, 1, 2, 3, 4))(
+        Z, log_ls, log_sf2, Xmu, Xvar, Y, mask, kl_weight,
+        adj_p0, adj_C, adj_D, adj_kl,
+    )
+    return g
+
+
+# --------------------------------------------------------------------------
+# central direct term: Kmm and its pullback
+# --------------------------------------------------------------------------
+
+def kmm_grads(Z, log_ls, log_sf2, adj_Kmm):
+    """Kmm plus the pullback of dF/dKmm onto the kernel parameters.
+
+    Returns (Kmm [m,m], dZ [m,q], dlog_ls [q], dlog_sf2 [1]).
+    """
+    def inner(Z_, log_ls_, log_sf2_):
+        K = ref.seard_kernel(Z_, Z_, log_ls_, log_sf2_[0])
+        return jnp.sum(adj_Kmm * K), K
+
+    (_, Kmm), grads = jax.value_and_grad(inner, argnums=(0, 1, 2),
+                                         has_aux=True)(Z, log_ls, log_sf2)
+    return (Kmm,) + grads
+
+
+# --------------------------------------------------------------------------
+# prediction
+# --------------------------------------------------------------------------
+
+def _psi2_per_point(Z, log_ls, log_sf2, Xmu, Xvar):
+    """Psi2_i[j,k] for each test point — [B, m, m] (no data-sum)."""
+    ls2 = jnp.exp(2.0 * log_ls)
+    sf2 = jnp.exp(log_sf2)
+    zbar = 0.5 * (Z[:, None, :] + Z[None, :, :])
+    dz = Z[:, None, :] - Z[None, :, :]
+    log_dist = -jnp.sum(dz * dz / (4.0 * ls2), axis=-1)
+    denom = ls2[None, :] + 2.0 * Xvar
+    log_scale = -0.5 * jnp.sum(jnp.log1p(2.0 * Xvar / ls2[None, :]), axis=1)
+    diff = Xmu[:, None, None, :] - zbar[None, :, :, :]
+    quad = jnp.sum(diff * diff / denom[:, None, None, :], axis=-1)
+    return sf2 * sf2 * jnp.exp(log_scale[:, None, None] + log_dist[None] - quad)
+
+
+def predict(Z, log_ls, log_sf2, Xt_mu, Xt_var, W1, Wv):
+    """Sparse GP posterior at (possibly uncertain) test inputs.
+
+    mean = Psi1* W1                      with W1 = beta Sigma^-1 C  [m, d]
+    var  = psi0* - tr(Wv Psi2*_i)        with Wv = Kmm^-1 - Sigma^-1 [m, m]
+
+    (observation noise 1/beta is added by the caller when wanted).
+    Returns (mean [B, d], var [B]).
+    """
+    P1 = ref.psi1(Z, log_ls, log_sf2[0], Xt_mu, Xt_var)
+    mean = P1 @ W1
+    P2 = _psi2_per_point(Z, log_ls, log_sf2[0], Xt_mu, Xt_var)
+    var = jnp.exp(log_sf2[0]) - jnp.einsum("bjk,jk->b", P2, Wv)
+    return mean, var

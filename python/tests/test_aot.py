@@ -1,0 +1,66 @@
+"""AOT artifact generation: lowerability, manifest integrity, and the
+runtime-compatibility constraint (no typed-FFI custom-calls, which
+xla_extension 0.5.1 rejects at compile time).
+"""
+
+import json
+import os
+
+import pytest
+
+from compile import aot
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    aot.build(out, ["test"])
+    return out
+
+
+def test_all_entries_emitted(built):
+    for entry in aot.ENTRIES:
+        path = os.path.join(built, f"{entry}_test.hlo.txt")
+        assert os.path.exists(path), entry
+        assert os.path.getsize(path) > 200
+
+
+def test_manifest_schema(built):
+    with open(os.path.join(built, "manifest.json")) as f:
+        man = json.load(f)
+    assert man["dtype"] == "f64"
+    cfg = man["configs"]["test"]
+    for key in ("m", "q", "d", "B", "block_n", "entries"):
+        assert key in cfg
+    assert set(cfg["entries"]) == set(aot.ENTRIES)
+    # every referenced file exists
+    for fname in cfg["entries"].values():
+        assert os.path.exists(os.path.join(built, fname))
+
+
+def test_no_unsupported_custom_calls(built):
+    """The deployment constraint that shaped the whole design (DESIGN.md §2):
+    artifacts must be free of typed-FFI custom-calls (lapack_*_ffi etc.)."""
+    for entry in aot.ENTRIES:
+        with open(os.path.join(built, f"{entry}_test.hlo.txt")) as f:
+            text = f.read()
+        assert "API_VERSION_TYPED_FFI" not in text, entry
+        assert "lapack" not in text, entry
+
+
+def test_hlo_is_f64(built):
+    with open(os.path.join(built, "shard_stats_test.hlo.txt")) as f:
+        text = f.read()
+    assert "f64[" in text
+
+
+def test_entry_shapes_in_hlo(built):
+    """Parameter shapes in the HLO must match the manifest config."""
+    with open(os.path.join(built, "manifest.json")) as f:
+        cfg = json.load(f)["configs"]["test"]
+    m, q, B, d = cfg["m"], cfg["q"], cfg["B"], cfg["d"]
+    with open(os.path.join(built, "shard_stats_test.hlo.txt")) as f:
+        text = f.read()
+    assert f"f64[{m},{q}]" in text   # Z
+    assert f"f64[{B},{q}]" in text   # Xmu / Xvar
+    assert f"f64[{B},{d}]" in text   # Y

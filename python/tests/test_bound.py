@@ -1,0 +1,119 @@
+"""Model-level properties of the collapsed bound (eq. 3.3).
+
+These pin the *statistical* correctness: the bound is a true lower bound
+on the exact log marginal likelihood, is tight when Z = X, and the
+optimal q(u) reproduces the exact sparse posterior.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import bound_ref
+from compile.kernels import ref
+
+jax.config.update("jax_enable_x64", True)
+
+
+def make_regression(seed, n=20, m=6, q=2, d=2):
+    rng = np.random.default_rng(seed)
+    X = jnp.array(rng.normal(size=(n, q)))
+    Z = jnp.array(rng.normal(size=(m, q)))
+    log_ls = jnp.array(rng.normal(size=q) * 0.1)
+    log_sf2 = jnp.array(0.1)
+    log_beta = jnp.array(1.5)
+    Y = jnp.array(rng.normal(size=(n, d)))
+    mask = jnp.ones(n)
+    return X, Z, log_ls, log_sf2, log_beta, Y, mask
+
+
+def exact_log_marginal(X, log_ls, log_sf2, log_beta, Y):
+    """log N(Y; 0, Knn + beta^-1 I), summed over output dims."""
+    n, d = Y.shape
+    K = ref.seard_kernel(X, X, log_ls, log_sf2)
+    Ky = K + jnp.exp(-log_beta) * jnp.eye(n)
+    L = jnp.linalg.cholesky(Ky)
+    logdet = 2.0 * jnp.sum(jnp.log(jnp.diagonal(L)))
+    alpha = jax.scipy.linalg.cho_solve((L, True), Y)
+    return (-0.5 * n * d * jnp.log(2 * jnp.pi) - 0.5 * d * logdet
+            - 0.5 * jnp.sum(Y * alpha))
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_bound_is_lower_bound(seed):
+    X, Z, log_ls, log_sf2, log_beta, Y, mask = make_regression(seed)
+    F = bound_ref.full_bound(Z, log_ls, log_sf2, log_beta,
+                             X, jnp.zeros_like(X), Y, mask, 0.0, jitter=1e-10)
+    exact = exact_log_marginal(X, log_ls, log_sf2, log_beta, Y)
+    assert float(F) <= float(exact) + 1e-8
+
+
+def test_bound_tight_when_z_equals_x():
+    """Titsias (2009): with Z = X the collapsed bound is exact."""
+    X, Z, log_ls, log_sf2, log_beta, Y, mask = make_regression(5, n=15, m=15)
+    F = bound_ref.full_bound(X, log_ls, log_sf2, log_beta,
+                             X, jnp.zeros_like(X), Y, mask, 0.0, jitter=1e-10)
+    exact = exact_log_marginal(X, log_ls, log_sf2, log_beta, Y)
+    np.testing.assert_allclose(float(F), float(exact), rtol=1e-7)
+
+
+def test_more_inducing_points_tighten_bound():
+    """Adding inducing points (superset) can only improve the optimum.
+
+    We check the weaker monotone-in-practice form: Z = first k points of X,
+    bound increases with k.
+    """
+    X, _, log_ls, log_sf2, log_beta, Y, mask = make_regression(6, n=24, q=2)
+    vals = []
+    for k in (2, 6, 12, 24):
+        F = bound_ref.full_bound(X[:k], log_ls, log_sf2, log_beta,
+                                 X, jnp.zeros_like(X), Y, mask, 0.0,
+                                 jitter=1e-10)
+        vals.append(float(F))
+    assert all(b >= a - 1e-9 for a, b in zip(vals, vals[1:])), vals
+
+
+def test_optimal_qu_matches_titsias_posterior():
+    """mu_u = beta Kmm Sigma^-1 C must equal the standard sparse posterior
+    mean at the inducing points (cross-checked via predictive equations)."""
+    X, Z, log_ls, log_sf2, log_beta, Y, mask = make_regression(7)
+    a, p0, C, D, kl = ref.shard_stats_ref(
+        Z, log_ls, log_sf2, X, jnp.zeros_like(X), Y, mask, 0.0)
+    m = Z.shape[0]
+    Kmm = ref.seard_kernel(Z, Z, log_ls, log_sf2) + 1e-10 * jnp.eye(m)
+    mu_u, S_u = bound_ref.optimal_qu(C, D, Kmm, log_beta)
+    # Titsias eq: q(u) mean = beta Kmm (Kmm + beta Kmn Knm)^-1 Kmn Y
+    beta = jnp.exp(log_beta)
+    Knm = ref.seard_kernel(X, Z, log_ls, log_sf2)
+    Sigma = Kmm + beta * Knm.T @ Knm
+    expect = beta * Kmm @ jnp.linalg.solve(Sigma, Knm.T @ Y)
+    np.testing.assert_allclose(np.asarray(mu_u), np.asarray(expect),
+                               rtol=1e-8, atol=1e-10)
+    # S_u is a valid covariance: symmetric positive definite
+    S = np.asarray(S_u)
+    np.testing.assert_allclose(S, S.T, atol=1e-10)
+    assert np.all(np.linalg.eigvalsh((S + S.T) / 2) > 0)
+
+
+def test_kl_zero_iff_prior():
+    """KL(q||p) = 0 exactly at mu=0, s=1, positive elsewhere."""
+    mu = jnp.zeros((4, 3))
+    s = jnp.ones((4, 3))
+    mask = jnp.ones(4)
+    assert float(ref.kl_term(mu, s, mask, 1.0)) == pytest.approx(0.0, abs=1e-12)
+    rng = np.random.default_rng(0)
+    mu2 = jnp.array(rng.normal(size=(4, 3)))
+    s2 = jnp.array(rng.uniform(0.1, 3.0, size=(4, 3)))
+    assert float(ref.kl_term(mu2, s2, mask, 1.0)) > 0.0
+
+
+def test_lvm_bound_below_regression_bound_at_true_inputs():
+    """Adding input uncertainty (s > 0) plus KL can only lower the bound
+    when the regression inputs are the truth."""
+    X, Z, log_ls, log_sf2, log_beta, Y, mask = make_regression(9)
+    F_reg = bound_ref.full_bound(Z, log_ls, log_sf2, log_beta,
+                                 X, jnp.zeros_like(X), Y, mask, 0.0)
+    F_lvm = bound_ref.full_bound(Z, log_ls, log_sf2, log_beta,
+                                 X, 0.5 * jnp.ones_like(X), Y, mask, 1.0)
+    assert float(F_lvm) < float(F_reg)

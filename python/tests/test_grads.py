@@ -1,0 +1,138 @@
+"""L2 correctness: the adjoint chain rule and gradient artifacts.
+
+The key identity behind the paper's step-3/step-4 message protocol:
+
+    dF/dtheta = shard_grads(theta; adjoints)          (through statistics)
+              + kmm_grads(theta; dF/dKmm)             (direct Kmm term)
+
+i.e. the distributed two-round gradient must equal jax.grad of the
+monolithic collapsed bound. These tests pin that identity to ~1e-9.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import bound_ref, model
+from compile.kernels import ref
+
+jax.config.update("jax_enable_x64", True)
+
+
+def make_case(seed, B=24, m=6, q=2, d=3, lvm=True):
+    rng = np.random.default_rng(seed)
+    Z = jnp.array(rng.normal(size=(m, q)))
+    log_ls = jnp.array(rng.normal(size=q) * 0.2)
+    log_sf2 = jnp.array(rng.normal() * 0.2)
+    log_beta = jnp.array(1.0 + 0.2 * rng.normal())
+    Xmu = jnp.array(rng.normal(size=(B, q)))
+    Xvar = (jnp.array(rng.uniform(0.05, 1.0, size=(B, q)))
+            if lvm else jnp.zeros((B, q)))
+    Y = jnp.array(rng.normal(size=(B, d)))
+    mask = jnp.array((rng.uniform(size=B) > 0.1).astype(np.float64))
+    klw = 1.0 if lvm else 0.0
+    return Z, log_ls, log_sf2, log_beta, Xmu, Xvar, Y, mask, klw
+
+
+@pytest.mark.parametrize("lvm", [True, False])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_distributed_gradient_equals_monolithic(seed, lvm):
+    Z, log_ls, log_sf2, log_beta, Xmu, Xvar, Y, mask, klw = make_case(
+        seed, lvm=lvm)
+    m, d = Z.shape[0], Y.shape[1]
+    jitter = 1e-6
+
+    # --- monolithic oracle ------------------------------------------------
+    g_Z, g_ls, g_sf2, g_beta, g_Xmu, g_Xvar = bound_ref.full_bound_grads(
+        Z, log_ls, log_sf2, log_beta, Xmu, Xvar, Y, mask, klw, jitter)
+
+    # --- the protocol path ------------------------------------------------
+    a, p0, C, D, kl = ref.shard_stats_ref(
+        Z, log_ls, log_sf2, Xmu, Xvar, Y, mask, klw)
+    Kmm = ref.seard_kernel(Z, Z, log_ls, log_sf2) + jitter * jnp.eye(m)
+    n = jnp.sum(mask)
+    adj_p0, adj_C, adj_D, adj_kl, adj_Kmm, adj_lb = bound_ref.bound_adjoints(
+        a, p0, C, D, kl, Kmm, log_beta, n, d)
+
+    # map step 2 on the (single) shard
+    dZ_s, dls_s, dsf2_s, dXmu_s, dXvar_s = model.shard_grads(
+        Z, log_ls, jnp.array([log_sf2]), Xmu, Xvar, Y, mask,
+        jnp.array([klw]),
+        jnp.array([adj_p0]), adj_C, adj_D, jnp.array([adj_kl]))
+
+    # central direct term. note: jitter*I has zero kernel-param gradient,
+    # so pulling adj_Kmm back through the un-jittered Kmm is exact.
+    Kmm_art, dZ_k, dls_k, dsf2_k = model.kmm_grads(
+        Z, log_ls, jnp.array([log_sf2]), adj_Kmm)
+
+    np.testing.assert_allclose(np.asarray(Kmm_art) + jitter * np.eye(m),
+                               np.asarray(Kmm), rtol=1e-12)
+    np.testing.assert_allclose(np.asarray(dZ_s + dZ_k), np.asarray(g_Z),
+                               rtol=1e-8, atol=1e-10)
+    np.testing.assert_allclose(np.asarray(dls_s + dls_k), np.asarray(g_ls),
+                               rtol=1e-8, atol=1e-10)
+    np.testing.assert_allclose(float(dsf2_s[0] + dsf2_k[0]), float(g_sf2),
+                               rtol=1e-8)
+    # beta only enters the bound directly (stats are beta-free)
+    np.testing.assert_allclose(float(adj_lb), float(g_beta), rtol=1e-9)
+    np.testing.assert_allclose(np.asarray(dXmu_s), np.asarray(g_Xmu),
+                               rtol=1e-8, atol=1e-10)
+    if lvm:
+        np.testing.assert_allclose(np.asarray(dXvar_s), np.asarray(g_Xvar),
+                                   rtol=1e-8, atol=1e-10)
+
+
+def test_shard_grads_additive_over_shards():
+    """Gradient partial terms must sum across shards like the stats do."""
+    Z, log_ls, log_sf2, log_beta, Xmu, Xvar, Y, mask, klw = make_case(4)
+    m, d = Z.shape[0], Y.shape[1]
+    adj_p0 = jnp.array([0.3])
+    adj_C = jnp.array(np.random.default_rng(0).normal(size=(m, d)))
+    adj_D = jnp.array(np.random.default_rng(1).normal(size=(m, m)))
+    adj_kl = jnp.array([-1.0])
+    args = (Z, log_ls, jnp.array([log_sf2]))
+    whole = model.shard_grads(*args, Xmu, Xvar, Y, mask, jnp.array([klw]),
+                              adj_p0, adj_C, adj_D, adj_kl)
+    h = Xmu.shape[0] // 2
+    p1 = model.shard_grads(*args, Xmu[:h], Xvar[:h], Y[:h], mask[:h],
+                           jnp.array([klw]), adj_p0, adj_C, adj_D, adj_kl)
+    p2 = model.shard_grads(*args, Xmu[h:], Xvar[h:], Y[h:], mask[h:],
+                           jnp.array([klw]), adj_p0, adj_C, adj_D, adj_kl)
+    for w, g1, g2 in zip(whole[:3], p1[:3], p2[:3]):  # global params add
+        np.testing.assert_allclose(np.asarray(g1) + np.asarray(g2),
+                                   np.asarray(w), rtol=1e-9, atol=1e-12)
+    # local params concatenate
+    np.testing.assert_allclose(
+        np.concatenate([np.asarray(p1[3]), np.asarray(p2[3])]),
+        np.asarray(whole[3]), rtol=1e-9, atol=1e-12)
+
+
+def test_finite_difference_spotcheck():
+    """Independent-of-autodiff check of the full bound gradient."""
+    case = make_case(6, B=12, m=4, q=2, d=2)
+    Z, log_ls, log_sf2, log_beta, Xmu, Xvar, Y, mask, klw = case
+
+    def f(z00):
+        Z2 = Z.at[0, 0].set(z00)
+        return bound_ref.full_bound(Z2, log_ls, log_sf2, log_beta,
+                                    Xmu, Xvar, Y, mask, klw)
+
+    eps = 1e-5
+    fd = (f(Z[0, 0] + eps) - f(Z[0, 0] - eps)) / (2 * eps)
+    g = bound_ref.full_bound_grads(*case)[0][0, 0]
+    np.testing.assert_allclose(float(g), float(fd), rtol=1e-5)
+
+
+def test_masked_rows_have_zero_local_gradient():
+    Z, log_ls, log_sf2, log_beta, Xmu, Xvar, Y, mask, klw = make_case(7)
+    mask = mask.at[:5].set(0.0)
+    m, d = Z.shape[0], Y.shape[1]
+    rng = np.random.default_rng(2)
+    out = model.shard_grads(
+        Z, log_ls, jnp.array([log_sf2]), Xmu, Xvar, Y, mask,
+        jnp.array([klw]), jnp.array([0.5]),
+        jnp.array(rng.normal(size=(m, d))), jnp.array(rng.normal(size=(m, m))),
+        jnp.array([1.0]))
+    np.testing.assert_allclose(np.asarray(out[3][:5]), 0.0, atol=1e-14)
+    np.testing.assert_allclose(np.asarray(out[4][:5]), 0.0, atol=1e-14)

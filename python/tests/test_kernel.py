@@ -1,0 +1,169 @@
+"""L1 correctness: the Pallas psi-statistics kernel vs the pure-jnp oracle.
+
+This is the core correctness signal for the kernel layer: the fused
+Pallas kernel must agree with kernels/ref.py to near machine precision
+across shapes, dtypes, block sizes, masks and the regression (s = 0)
+special case. Shape/dtype sweeps use hypothesis.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.psi_stats import shard_stats_pallas, vmem_estimate_bytes
+
+jax.config.update("jax_enable_x64", True)
+
+
+def random_case(rng, B, m, q, d, lvm=True, dtype=jnp.float64):
+    Z = jnp.array(rng.normal(size=(m, q)), dtype)
+    log_ls = jnp.array(rng.normal(size=q) * 0.3, dtype)
+    log_sf2 = jnp.array([rng.normal() * 0.3], dtype)
+    Xmu = jnp.array(rng.normal(size=(B, q)), dtype)
+    Xvar = (
+        jnp.array(rng.uniform(0.01, 1.5, size=(B, q)), dtype)
+        if lvm else jnp.zeros((B, q), dtype)
+    )
+    Y = jnp.array(rng.normal(size=(B, d)), dtype)
+    mask = jnp.array((rng.uniform(size=B) > 0.2).astype(float), dtype)
+    klw = jnp.array([1.0 if lvm else 0.0], dtype)
+    return Z, log_ls, log_sf2, Xmu, Xvar, Y, mask, klw
+
+
+def assert_stats_match(out, expected, rtol):
+    names = ("a", "psi0", "C", "D", "kl")
+    for name, o, r in zip(names, out, expected):
+        r = np.asarray(r)
+        np.testing.assert_allclose(
+            np.asarray(o).reshape(r.shape), r, rtol=rtol, atol=rtol,
+            err_msg=f"statistic {name} mismatch",
+        )
+
+
+def ref_stats(Z, log_ls, log_sf2, Xmu, Xvar, Y, mask, klw):
+    return ref.shard_stats_ref(Z, log_ls, log_sf2[0], Xmu, Xvar, Y, mask, klw[0])
+
+
+class TestPallasVsRef:
+    @pytest.mark.parametrize("lvm", [True, False])
+    @pytest.mark.parametrize("block_n", [8, 16, 64])
+    def test_matches_reference(self, lvm, block_n):
+        rng = np.random.default_rng(0)
+        case = random_case(rng, B=64, m=8, q=3, d=5, lvm=lvm)
+        out = shard_stats_pallas(*case, block_n=block_n)
+        assert_stats_match(out, ref_stats(*case), rtol=1e-12)
+
+    def test_block_size_invariance(self):
+        """Accumulation across grid steps must not depend on the tiling."""
+        rng = np.random.default_rng(1)
+        case = random_case(rng, B=96, m=6, q=2, d=4)
+        outs = [shard_stats_pallas(*case, block_n=bn) for bn in (8, 24, 96)]
+        for o in outs[1:]:
+            assert_stats_match(o, outs[0], rtol=1e-12)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        B=st.sampled_from([16, 32, 48]),
+        m=st.integers(2, 12),
+        q=st.integers(1, 5),
+        d=st.integers(1, 8),
+        seed=st.integers(0, 10_000),
+        lvm=st.booleans(),
+    )
+    def test_shape_sweep(self, B, m, q, d, seed, lvm):
+        rng = np.random.default_rng(seed)
+        case = random_case(rng, B=B, m=m, q=q, d=d, lvm=lvm)
+        out = shard_stats_pallas(*case, block_n=16)
+        assert_stats_match(out, ref_stats(*case), rtol=1e-11)
+
+    def test_f32_dtype(self):
+        rng = np.random.default_rng(3)
+        case = random_case(rng, B=32, m=6, q=2, d=3, dtype=jnp.float32)
+        out = shard_stats_pallas(*case, block_n=16)
+        exp = ref_stats(*case)
+        assert out[2].dtype == jnp.float32
+        assert_stats_match(out, exp, rtol=2e-5)
+
+
+class TestRegressionSpecialCase:
+    """s = 0 must reduce to the exact Titsias (2009) quantities."""
+
+    def setup_method(self):
+        rng = np.random.default_rng(5)
+        self.case = random_case(rng, B=48, m=7, q=3, d=2, lvm=False)
+
+    def test_psi1_is_knm(self):
+        Z, log_ls, log_sf2, Xmu, Xvar, Y, mask, klw = self.case
+        P1 = ref.psi1(Z, log_ls, log_sf2[0], Xmu, Xvar)
+        Knm = ref.seard_kernel(Xmu, Z, log_ls, log_sf2[0])
+        np.testing.assert_allclose(np.asarray(P1), np.asarray(Knm), rtol=1e-13)
+
+    def test_psi2_is_kmn_knm(self):
+        Z, log_ls, log_sf2, Xmu, Xvar, Y, mask, klw = self.case
+        out = shard_stats_pallas(*self.case, block_n=16)
+        Knm = ref.seard_kernel(Xmu, Z, log_ls, log_sf2[0])
+        D_exact = (np.asarray(Knm) * np.asarray(mask)[:, None]).T @ np.asarray(Knm)
+        np.testing.assert_allclose(np.asarray(out[3]), D_exact, rtol=1e-11, atol=1e-12)
+
+    def test_kl_is_zero(self):
+        out = shard_stats_pallas(*self.case, block_n=16)
+        assert float(out[4][0]) == 0.0
+
+    def test_psi0_counts_live_points(self):
+        Z, log_ls, log_sf2, Xmu, Xvar, Y, mask, klw = self.case
+        out = shard_stats_pallas(*self.case, block_n=16)
+        expected = float(jnp.exp(log_sf2[0]) * jnp.sum(mask))
+        np.testing.assert_allclose(float(out[1][0]), expected, rtol=1e-13)
+
+
+class TestMaskSemantics:
+    def test_masked_points_do_not_contribute(self):
+        """Padding rows with garbage must not change any statistic."""
+        rng = np.random.default_rng(8)
+        Z, log_ls, log_sf2, Xmu, Xvar, Y, mask, klw = random_case(
+            rng, B=32, m=5, q=2, d=3
+        )
+        mask = jnp.concatenate([jnp.ones(24), jnp.zeros(8)])
+        out1 = shard_stats_pallas(Z, log_ls, log_sf2, Xmu, Xvar, Y, mask, klw,
+                                  block_n=16)
+        # poison the dead rows
+        Xmu2 = Xmu.at[24:].set(1e3)
+        Y2 = Y.at[24:].set(-1e3)
+        Xvar2 = Xvar.at[24:].set(42.0)
+        out2 = shard_stats_pallas(Z, log_ls, log_sf2, Xmu2, Xvar2, Y2, mask, klw,
+                                  block_n=16)
+        assert_stats_match(out2, [np.asarray(o).squeeze() for o in out1],
+                           rtol=1e-12)
+
+    def test_shard_additivity(self):
+        """stats(shard1) + stats(shard2) == stats(shard1 ++ shard2).
+
+        This is the invariant the whole distributed reduce relies on.
+        """
+        rng = np.random.default_rng(9)
+        Z, log_ls, log_sf2, Xmu, Xvar, Y, mask, klw = random_case(
+            rng, B=64, m=6, q=2, d=3
+        )
+        whole = shard_stats_pallas(Z, log_ls, log_sf2, Xmu, Xvar, Y, mask, klw,
+                                   block_n=16)
+        h = 32
+        p1 = shard_stats_pallas(Z, log_ls, log_sf2, Xmu[:h], Xvar[:h], Y[:h],
+                                mask[:h], klw, block_n=16)
+        p2 = shard_stats_pallas(Z, log_ls, log_sf2, Xmu[h:], Xvar[h:], Y[h:],
+                                mask[h:], klw, block_n=16)
+        for w, a_, b_ in zip(whole, p1, p2):
+            np.testing.assert_allclose(
+                np.asarray(a_) + np.asarray(b_), np.asarray(w), rtol=1e-12
+            )
+
+
+def test_vmem_estimate_monotone():
+    """Sizing aid sanity: footprint grows with every dimension."""
+    base = vmem_estimate_bytes(m=32, q=4, d=8, bn=64)
+    assert vmem_estimate_bytes(64, 4, 8, 64) > base
+    assert vmem_estimate_bytes(32, 8, 8, 64) > base
+    assert vmem_estimate_bytes(32, 4, 16, 64) > base
+    assert vmem_estimate_bytes(32, 4, 8, 128) > base

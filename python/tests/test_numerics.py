@@ -1,0 +1,130 @@
+"""Numerical robustness of the kernel/bound stack: extreme
+hyperparameters, clustered inducing points, dtype sensitivity, and
+hypothesis sweeps over the statistics' structural invariants.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import bound_ref
+from compile.kernels import ref
+from compile.kernels.psi_stats import shard_stats_pallas
+
+jax.config.update("jax_enable_x64", True)
+
+
+def case(seed, B=24, m=6, q=2, d=3, ls_scale=1.0, var_hi=1.0):
+    rng = np.random.default_rng(seed)
+    return dict(
+        Z=jnp.array(rng.normal(size=(m, q))),
+        log_ls=jnp.array(np.log(ls_scale) + 0.1 * rng.normal(size=q)),
+        log_sf2=jnp.array(0.1 * rng.normal()),
+        Xmu=jnp.array(rng.normal(size=(B, q))),
+        Xvar=jnp.array(rng.uniform(0.01, var_hi, size=(B, q))),
+        Y=jnp.array(rng.normal(size=(B, d))),
+        mask=jnp.ones(B),
+    )
+
+
+@pytest.mark.parametrize("ls_scale", [1e-2, 1e2])
+def test_extreme_lengthscales_stay_finite(ls_scale):
+    c = case(0, ls_scale=ls_scale)
+    a, p0, C, D, kl = ref.shard_stats_ref(
+        c["Z"], c["log_ls"], c["log_sf2"], c["Xmu"], c["Xvar"], c["Y"],
+        c["mask"], 1.0)
+    for name, v in [("a", a), ("p0", p0), ("C", C), ("D", D), ("kl", kl)]:
+        assert np.all(np.isfinite(np.asarray(v))), name
+
+
+def test_huge_input_variance_kills_psi1():
+    """s -> inf: <k(x, z)> -> 0 (the latent point knows nothing)."""
+    c = case(1)
+    P1 = ref.psi1(c["Z"], c["log_ls"], c["log_sf2"], c["Xmu"],
+                  1e8 * jnp.ones_like(c["Xvar"]))
+    assert float(jnp.max(jnp.abs(P1))) < 1e-3
+
+
+def test_coincident_inducing_points_bound_recoverable():
+    """Duplicated rows of Z make Kmm singular; the jittered bound must
+    still evaluate (the paper's implementation faces this constantly
+    during optimisation)."""
+    c = case(2, m=5)
+    Z = c["Z"].at[1].set(c["Z"][0])  # exact duplicate
+    F = bound_ref.full_bound(Z, c["log_ls"], c["log_sf2"], jnp.array(1.0),
+                             c["Xmu"], c["Xvar"], c["Y"], c["mask"], 1.0,
+                             jitter=1e-6)
+    assert np.isfinite(float(F))
+
+
+def test_f32_vs_f64_statistics_error():
+    """The f32 kernel path agrees to ~1e-5 relative — documents why the
+    artifact path is f64 (log-det assembly amplifies stat errors)."""
+    c = case(3, B=32)
+    klw = jnp.array([1.0])
+    out64 = shard_stats_pallas(
+        c["Z"], c["log_ls"], jnp.array([c["log_sf2"]]), c["Xmu"], c["Xvar"],
+        c["Y"], c["mask"], klw, block_n=16)
+    to32 = lambda x: jnp.asarray(x, jnp.float32)
+    out32 = shard_stats_pallas(
+        to32(c["Z"]), to32(c["log_ls"]), to32(jnp.array([c["log_sf2"]])),
+        to32(c["Xmu"]), to32(c["Xvar"]), to32(c["Y"]), to32(c["mask"]),
+        to32(klw), block_n=16)
+    for v64, v32 in zip(out64, out32):
+        rel = np.max(np.abs(np.asarray(v64) - np.asarray(v32, np.float64))) / (
+            1.0 + np.max(np.abs(np.asarray(v64))))
+        assert rel < 1e-4
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000), q=st.integers(1, 4))
+def test_psi2_psd_property(seed, q):
+    """Psi2 = sum_i E[k k^T] must be PSD for any inputs."""
+    rng = np.random.default_rng(seed)
+    B, m = 12, 5
+    Z = jnp.array(rng.normal(size=(m, q)))
+    log_ls = jnp.array(0.3 * rng.normal(size=q))
+    log_sf2 = jnp.array(0.2 * rng.normal())
+    Xmu = jnp.array(rng.normal(size=(B, q)))
+    Xvar = jnp.array(rng.uniform(0.01, 2.0, size=(B, q)))
+    D = ref.psi2(Z, log_ls, log_sf2, Xmu, Xvar, jnp.ones(B))
+    eig = np.linalg.eigvalsh(np.asarray(D))
+    assert eig.min() > -1e-9 * max(1.0, eig.max())
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_psi1_bounded_by_sf2(seed):
+    """|Psi1| <= sigma^2: an expectation of a bounded kernel."""
+    rng = np.random.default_rng(seed)
+    q = 3
+    Z = jnp.array(rng.normal(size=(6, q)))
+    log_ls = jnp.array(0.3 * rng.normal(size=q))
+    log_sf2 = jnp.array(rng.normal())
+    Xmu = jnp.array(rng.normal(size=(10, q)))
+    Xvar = jnp.array(rng.uniform(0.0, 3.0, size=(10, q)))
+    P1 = ref.psi1(Z, log_ls, log_sf2, Xmu, Xvar)
+    assert float(jnp.max(P1)) <= float(jnp.exp(log_sf2)) + 1e-12
+    assert float(jnp.min(P1)) >= 0.0
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_bound_monotone_in_noise_mismatch(seed):
+    """With data generated at noise 1/beta*, the bound at beta = beta* is
+    at least the bound at a wildly wrong beta (model selection works)."""
+    rng = np.random.default_rng(seed)
+    n, q, d = 30, 1, 2
+    X = jnp.array(rng.normal(size=(n, q)))
+    F_true = jnp.sin(2.0 * X)
+    Y = jnp.tile(F_true, (1, d)) + 0.1 * jnp.array(rng.normal(size=(n, d)))
+    Z = jnp.array(rng.normal(size=(8, q)))
+    log_ls = jnp.array([np.log(0.7)])
+    args = (X, jnp.zeros_like(X), Y, jnp.ones(n), 0.0)
+    f_good = bound_ref.full_bound(Z, log_ls, jnp.array(0.0),
+                                  jnp.array(np.log(1 / 0.1**2)), *args)
+    f_bad = bound_ref.full_bound(Z, log_ls, jnp.array(0.0),
+                                 jnp.array(np.log(1e6)), *args)
+    assert float(f_good) > float(f_bad)

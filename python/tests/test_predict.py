@@ -1,0 +1,113 @@
+"""Prediction-path semantics: the predict graph must implement the
+standard sparse posterior (and its uncertain-input generalisation)
+given the weight matrices W1 = beta Sigma^-1 C and Wv = Kmm^-1 - Sigma^-1.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import bound_ref, model
+from compile.kernels import ref
+
+jax.config.update("jax_enable_x64", True)
+
+
+@pytest.fixture(scope="module")
+def fitted():
+    """A small regression fit with everything precomputed."""
+    rng = np.random.default_rng(0)
+    n, m, q, d = 40, 9, 2, 3
+    X = jnp.array(rng.normal(size=(n, q)))
+    Z = jnp.array(rng.normal(size=(m, q)))
+    log_ls = jnp.zeros(q)
+    log_sf2 = jnp.array(0.0)
+    log_beta = jnp.array(3.0)
+    Y = jnp.array(rng.normal(size=(n, d)))
+    a, p0, C, D, kl = ref.shard_stats_ref(
+        Z, log_ls, log_sf2, X, jnp.zeros_like(X), Y, jnp.ones(n), 0.0)
+    Kmm = ref.seard_kernel(Z, Z, log_ls, log_sf2) + 1e-8 * jnp.eye(m)
+    beta = jnp.exp(log_beta)
+    Sigma = Kmm + beta * D
+    W1 = beta * jnp.linalg.solve(Sigma, C)
+    Wv = jnp.linalg.inv(Kmm) - jnp.linalg.inv(Sigma)
+    return dict(X=X, Z=Z, log_ls=log_ls, log_sf2=log_sf2, log_beta=log_beta,
+                Y=Y, Kmm=Kmm, Sigma=Sigma, W1=W1, Wv=Wv, C=C, D=D)
+
+
+def test_mean_matches_textbook_sparse_posterior(fitted):
+    """mean = K*m (Kmm + beta Kmn Knm)^-1 beta Kmn Y (Titsias 2009)."""
+    f = fitted
+    rng = np.random.default_rng(1)
+    Xt = jnp.array(rng.normal(size=(7, 2)))
+    mean, _ = model.predict(f["Z"], f["log_ls"], jnp.array([f["log_sf2"]]),
+                            Xt, jnp.zeros_like(Xt), f["W1"], f["Wv"])
+    Ktm = ref.seard_kernel(Xt, f["Z"], f["log_ls"], f["log_sf2"])
+    beta = jnp.exp(f["log_beta"])
+    expect = Ktm @ jnp.linalg.solve(f["Sigma"], beta * f["C"])
+    np.testing.assert_allclose(np.asarray(mean), np.asarray(expect), rtol=1e-10)
+
+
+def test_variance_positive_and_reverts_to_prior(fitted):
+    f = fitted
+    near = f["X"][:5]
+    far = near + 100.0
+    _, v_near = model.predict(f["Z"], f["log_ls"], jnp.array([f["log_sf2"]]),
+                              near, jnp.zeros_like(near), f["W1"], f["Wv"])
+    _, v_far = model.predict(f["Z"], f["log_ls"], jnp.array([f["log_sf2"]]),
+                             far, jnp.zeros_like(far), f["W1"], f["Wv"])
+    assert np.all(np.asarray(v_near) > -1e-10)
+    # far from data and inducing points, the posterior reverts to the prior
+    np.testing.assert_allclose(np.asarray(v_far), np.exp(f["log_sf2"]),
+                               rtol=1e-6)
+    assert np.all(np.asarray(v_near) < np.asarray(v_far))
+
+
+def test_uncertain_inputs_inflate_nothing_at_zero_variance(fitted):
+    """Xt_var = 0 must agree exactly with the deterministic path."""
+    f = fitted
+    rng = np.random.default_rng(2)
+    Xt = jnp.array(rng.normal(size=(6, 2)))
+    m0, v0 = model.predict(f["Z"], f["log_ls"], jnp.array([f["log_sf2"]]),
+                           Xt, jnp.zeros_like(Xt), f["W1"], f["Wv"])
+    m1, v1 = model.predict(f["Z"], f["log_ls"], jnp.array([f["log_sf2"]]),
+                           Xt, 1e-14 * jnp.ones_like(Xt), f["W1"], f["Wv"])
+    np.testing.assert_allclose(np.asarray(m0), np.asarray(m1), atol=1e-9)
+    np.testing.assert_allclose(np.asarray(v0), np.asarray(v1), atol=1e-9)
+
+
+def test_uncertain_inputs_smooth_the_mean(fitted):
+    """Increasing input variance shrinks Psi1, pulling the mean toward 0
+    (the prior mean) — the qualitative behaviour reconstruction relies on."""
+    f = fitted
+    rng = np.random.default_rng(3)
+    Xt = jnp.array(rng.normal(size=(10, 2)))
+    m0, _ = model.predict(f["Z"], f["log_ls"], jnp.array([f["log_sf2"]]),
+                          Xt, jnp.zeros_like(Xt), f["W1"], f["Wv"])
+    m2, _ = model.predict(f["Z"], f["log_ls"], jnp.array([f["log_sf2"]]),
+                          Xt, 4.0 * jnp.ones_like(Xt), f["W1"], f["Wv"])
+    assert np.mean(np.abs(np.asarray(m2))) < np.mean(np.abs(np.asarray(m0)))
+
+
+def test_optimal_qu_predictions_interpolate(fitted):
+    """With enough inducing points and low noise, predictions at training
+    inputs track the targets."""
+    rng = np.random.default_rng(4)
+    n, m = 60, 20
+    X = jnp.array(np.sort(rng.uniform(-2, 2, size=(n, 1)), axis=0))
+    Y = jnp.sin(2.0 * X)
+    Z = jnp.array(np.linspace(-2, 2, m)[:, None])
+    log_ls, log_sf2, log_beta = jnp.zeros(1) - 0.5, jnp.array(0.0), jnp.array(6.0)
+    a, p0, C, D, kl = ref.shard_stats_ref(
+        Z, log_ls, log_sf2, X, jnp.zeros_like(X), Y, jnp.ones(n), 0.0)
+    Kmm = ref.seard_kernel(Z, Z, log_ls, log_sf2) + 1e-8 * jnp.eye(m)
+    beta = jnp.exp(log_beta)
+    Sigma = Kmm + beta * D
+    W1 = beta * jnp.linalg.solve(Sigma, C)
+    Wv = jnp.linalg.inv(Kmm) - jnp.linalg.inv(Sigma)
+    mean, var = model.predict(Z, log_ls, jnp.array([log_sf2]), X,
+                              jnp.zeros_like(X), W1, Wv)
+    rmse = float(jnp.sqrt(jnp.mean((mean - Y) ** 2)))
+    assert rmse < 0.01, rmse
+    assert np.all(np.asarray(var) < 0.05)

@@ -1,0 +1,33 @@
+"""The L1 sizing model behind the kernel's block-size choice."""
+
+from compile.kernels import tuning
+from compile.kernels.psi_stats import vmem_estimate_bytes
+
+
+def test_pick_block_respects_vmem():
+    best, rows = tuning.pick_block_n(m=64, q=2, d=3)
+    assert best is not None
+    bytes_needed = vmem_estimate_bytes(64, 2, 3, best)
+    assert bytes_needed * tuning.STREAM_OVERLAP_FACTOR <= tuning.VMEM_BYTES
+    # every larger candidate that was rejected really does not fit
+    for bn, b, fits, _ in rows:
+        if bn > best:
+            assert not fits
+
+
+def test_large_m_shrinks_block():
+    small_m, _ = tuning.pick_block_n(m=32, q=2, d=3)
+    big_m, _ = tuning.pick_block_n(m=256, q=2, d=3)
+    assert big_m is None or big_m <= small_m
+
+
+def test_mxu_fraction_grows_with_q():
+    lo = tuning.mxu_fraction(m=64, q=1, d=3, bn=128)
+    hi = tuning.mxu_fraction(m=64, q=8, d=3, bn=128)
+    assert hi > lo  # contractions scale with q, elementwise does not
+
+
+def test_flops_scale_linearly_in_block():
+    f1 = tuning.flops_per_block(64, 2, 3, 128)
+    f2 = tuning.flops_per_block(64, 2, 3, 256)
+    assert abs(f2 / f1 - 2.0) < 1e-9

@@ -1,0 +1,33 @@
+//! Bench: paper Fig. 2 — per-iteration time vs worker count at a fixed
+//! dataset size (scaled down from 100K for bench time; run
+//! `gparml experiment fig2 --n 100000` for the full version).
+
+use gparml::experiments::fig2_core_scaling::measure;
+use gparml::util::cli::Args;
+
+fn main() {
+    // cargo bench passes --bench; ignore unknown flags
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let n = args.get_usize("n", 8_000).unwrap();
+    let iters = args.get_usize("iters", 2).unwrap();
+    println!("fig2 bench: n={n}, iters={iters} (per-iteration means)");
+    println!(
+        "{:>8} {:>18} {:>18} {:>14}",
+        "workers", "modeled par (s)", "map compute (s)", "wall (s)"
+    );
+    let mut baseline = None;
+    for workers in [1usize, 2, 5, 10, 20] {
+        let (p, _) = measure(&args, n, workers, iters, 0).expect("measure");
+        println!(
+            "{:>8} {:>18.4} {:>18.4} {:>14.4}",
+            workers, p.modeled_parallel, p.total_compute, p.measured_wall
+        );
+        let base = *baseline.get_or_insert(p.modeled_parallel);
+        if workers > 1 {
+            println!(
+                "{:>8}   speedup vs 1 worker: {:.2}x (ideal {:.0}x)",
+                "", base / p.modeled_parallel, workers as f64
+            );
+        }
+    }
+}

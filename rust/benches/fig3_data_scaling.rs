@@ -1,0 +1,36 @@
+//! Bench: paper Fig. 3 — time per iteration with data scaled
+//! proportionally to workers (weak scaling), plus the sequential path.
+
+use gparml::experiments::fig2_core_scaling::measure;
+use gparml::util::cli::Args;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let base_n = args.get_usize("base-n", 1_000).unwrap();
+    let iters = args.get_usize("iters", 2).unwrap();
+    println!("fig3 bench: weak scaling, n = {base_n} x workers");
+    println!(
+        "{:>8} {:>9} {:>18} {:>18}",
+        "workers", "n", "modeled par (s)", "per-worker map (s)"
+    );
+    let mut first: Option<f64> = None;
+    for workers in [1usize, 2, 4, 8, 16] {
+        let n = base_n * workers;
+        let (p, _) = measure(&args, n, workers, iters, 0).expect("measure");
+        println!(
+            "{:>8} {:>9} {:>18.4} {:>18.4}",
+            workers,
+            n,
+            p.modeled_parallel,
+            p.total_compute / workers as f64
+        );
+        let f = *first.get_or_insert(p.modeled_parallel);
+        if workers > 1 {
+            println!(
+                "{:>8}   growth vs ideal-constant: {:+.1}%",
+                "",
+                (p.modeled_parallel / f - 1.0) * 100.0
+            );
+        }
+    }
+}

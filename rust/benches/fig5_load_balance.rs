@@ -1,0 +1,56 @@
+//! Bench: paper Fig. 5 — min/mean/max worker execution time per
+//! iteration (the reduce barrier waits for the max).
+
+use gparml::coordinator::{partition, GlobalOpt, ModelKind, TrainConfig, Trainer};
+use gparml::data::synthetic;
+use gparml::gp::GlobalParams;
+use gparml::linalg::Matrix;
+use gparml::util::cli::Args;
+use gparml::util::rng::Rng;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let n = args.get_usize("n", 8_000).unwrap();
+    let iters = args.get_usize("iters", 4).unwrap();
+    for workers in [5usize, 10] {
+        let data = synthetic::generate(n, 0.05, 0);
+        let mut rng = Rng::new(9);
+        let xmu = Matrix::from_fn(n, 2, |i, j| {
+            if j == 0 {
+                data.latent[i]
+            } else {
+                0.1 * rng.normal()
+            }
+        });
+        let shards = partition(&xmu, &Matrix::zeros(n, 2), &data.y, 0.0, workers);
+        let params = GlobalParams {
+            z: Matrix::from_fn(64, 2, |_, _| rng.range(-3.0, 3.0)),
+            log_ls: vec![0.0, 0.0],
+            log_sf2: 0.0,
+            log_beta: 1.0,
+        };
+        let cfg = TrainConfig {
+            artifact: "perf".into(),
+            workers,
+            model: ModelKind::Regression,
+            global_opt: GlobalOpt::Scg,
+            ..Default::default()
+        };
+        let mut t = Trainer::new(cfg, params, shards).expect("trainer");
+        t.train(1).unwrap();
+        t.log.iterations.clear();
+        t.train(iters).unwrap();
+        println!("fig5 bench: n={n}, workers={workers}");
+        for it in &t.log.iterations {
+            let (mn, mean, mx) = it.load_min_mean_max();
+            println!(
+                "  iter {:>3}: min {:.5}s mean {:.5}s max {:.5}s",
+                it.iter, mn, mean, mx
+            );
+        }
+        println!(
+            "  mean (max-mean)/mean gap: {:.2}%  (paper: 3.7%)",
+            t.log.mean_load_gap() * 100.0
+        );
+    }
+}

@@ -1,0 +1,113 @@
+//! Hot-path microbenchmarks (the §Perf inventory in EXPERIMENTS.md):
+//! artifact execution latency per entry and per config, literal
+//! marshalling, the native O(m^3) global step, and the pure-native
+//! statistics for comparison.
+
+use std::path::PathBuf;
+
+use gparml::gp::{self, kernel, GlobalParams};
+use gparml::linalg::{Cholesky, Matrix};
+use gparml::runtime::{Manifest, ShardData, ShardExecutor};
+use gparml::util::bench::bench;
+use gparml::util::rng::Rng;
+
+fn artifacts_dir() -> PathBuf {
+    std::env::var_os("GPARML_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+fn random_params(m: usize, q: usize, seed: u64) -> GlobalParams {
+    let mut rng = Rng::new(seed);
+    GlobalParams {
+        z: Matrix::from_fn(m, q, |_, _| rng.range(-2.0, 2.0)),
+        log_ls: vec![0.0; q],
+        log_sf2: 0.0,
+        log_beta: 1.0,
+    }
+}
+
+fn random_shard(b: usize, q: usize, d: usize, lvm: bool, seed: u64) -> ShardData {
+    let mut rng = Rng::new(seed);
+    ShardData {
+        xmu: Matrix::from_fn(b, q, |_, _| rng.normal()),
+        xvar: if lvm {
+            Matrix::from_fn(b, q, |_, _| 0.1 + rng.uniform())
+        } else {
+            Matrix::zeros(b, q)
+        },
+        y: Matrix::from_fn(b, d, |_, _| rng.normal()),
+        kl_weight: if lvm { 1.0 } else { 0.0 },
+    }
+}
+
+fn main() {
+    let manifest = Manifest::load(&artifacts_dir()).expect("run `make artifacts`");
+    println!("== artifact execution latency (per shard pass) ==");
+    for cfg_name in ["small", "perf", "oil"] {
+        let exec = ShardExecutor::new(&manifest, cfg_name).expect("compile");
+        let c = exec.config().clone();
+        let params = random_params(c.m, c.q, 1);
+        let shard = random_shard(c.cap, c.q, c.d, true, 2);
+        let kmm = kernel::kmm(&params, 1e-6);
+
+        let stats = exec.shard_stats(&params, &shard).unwrap();
+        let (_, adj) = gp::assemble_bound(&stats, &kmm, params.log_beta, c.d).unwrap();
+        bench(
+            &format!("{cfg_name}: shard_stats (B={}, m={})", c.cap, c.m),
+            2,
+            10,
+            || exec.shard_stats(&params, &shard).unwrap(),
+        );
+        bench(&format!("{cfg_name}: shard_grads"), 2, 10, || {
+            exec.shard_grads(&params, &shard, &adj).unwrap()
+        });
+        bench(&format!("{cfg_name}: kmm_grads"), 2, 10, || {
+            exec.kmm_grads(&params, &adj.d_kmm).unwrap()
+        });
+
+        // native mirror for the same shard (what the pre-AOT world costs)
+        bench(&format!("{cfg_name}: native shard_stats"), 1, 3, || {
+            kernel::shard_stats(
+                &params,
+                &shard.xmu,
+                &shard.xvar,
+                &shard.y,
+                &vec![1.0; shard.len()],
+                1.0,
+            )
+        });
+    }
+
+    println!("\n== central global step (O(m^3), constant in n) ==");
+    for m in [16usize, 32, 64, 128] {
+        let params = random_params(m, 2, 3);
+        let shard = random_shard(256, 2, 3, true, 4);
+        let stats = kernel::shard_stats(
+            &params,
+            &shard.xmu,
+            &shard.xvar,
+            &shard.y,
+            &vec![1.0; 256],
+            1.0,
+        );
+        let kmm = kernel::kmm(&params, 1e-6);
+        bench(&format!("assemble_bound m={m}"), 2, 20, || {
+            gp::assemble_bound(&stats, &kmm, params.log_beta, 3).unwrap()
+        });
+        bench(&format!("cholesky m={m}"), 2, 20, || {
+            Cholesky::new(&kmm).unwrap()
+        });
+        bench(&format!("kmm_vjp m={m}"), 2, 20, || {
+            kernel::kmm_vjp(&params, &kmm)
+        });
+    }
+
+    println!("\n== linalg primitives ==");
+    let mut rng = Rng::new(7);
+    for m in [64usize, 128, 256] {
+        let a = Matrix::from_fn(m, m, |_, _| rng.normal());
+        let b = Matrix::from_fn(m, m, |_, _| rng.normal());
+        bench(&format!("matmul {m}x{m}"), 2, 10, || a.matmul(&b));
+    }
+}

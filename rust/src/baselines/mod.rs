@@ -1,0 +1,11 @@
+//! Baselines the paper compares against (or that anchor correctness):
+//!
+//! * [`sequential`] — single-threaded trainer with identical numerics
+//!   (stands in for GPy in Figs. 3-4: same bound, no distribution).
+//! * [`svi`] — the Hensman et al. (2013) explicit-q(u) bound (related
+//!   work §6; drives the Fig. 8 fixed-vs-optimal q(u) experiment).
+//! * full GP — exact O(n^3) regression lives in [`crate::gp::exact`].
+//! * PCA — the linear embedding baseline lives in [`crate::data::pca`].
+
+pub mod sequential;
+pub mod svi;

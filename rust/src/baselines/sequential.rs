@@ -1,0 +1,167 @@
+//! Single-threaded reference trainer — the "GPy" stand-in.
+//!
+//! Identical numerics to the distributed coordinator (same artifacts,
+//! same global step, same SCG) but no worker pool, no channels, no
+//! barriers: the honest sequential comparator for the paper's Fig. 3
+//! ("GPy running time, a sequential implementation of the inference").
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::gp::params::GlobalParams;
+use crate::gp::{self, kernel};
+use crate::linalg::Matrix;
+use crate::optim::{Adam, Scg};
+use crate::runtime::{Manifest, ShardData, ShardExecutor};
+
+/// Sequential trainer over the whole dataset in one shard.
+pub struct SequentialTrainer {
+    exec: ShardExecutor,
+    shard: ShardData,
+    pub params: GlobalParams,
+    dout: usize,
+    jitter: f64,
+    lvm: bool,
+    local_lr: f64,
+    scg: Option<Scg>,
+    adam_mu: Option<Adam>,
+    adam_ls: Option<Adam>,
+    /// Bound value per iteration.
+    pub history: Vec<f64>,
+    /// Wall seconds per iteration (the Fig. 3 sequential series).
+    pub iter_secs: Vec<f64>,
+    last_f: f64,
+    update_locals_next: bool,
+    min_xvar: f64,
+}
+
+impl SequentialTrainer {
+    pub fn new(
+        manifest: &Manifest,
+        artifact: &str,
+        params: GlobalParams,
+        shard: ShardData,
+        lvm: bool,
+        local_lr: f64,
+    ) -> Result<SequentialTrainer> {
+        let exec = ShardExecutor::new(manifest, artifact)?;
+        let dout = exec.config().d;
+        let dof = shard.xmu.rows() * shard.xmu.cols();
+        Ok(SequentialTrainer {
+            exec,
+            shard,
+            params,
+            dout,
+            jitter: 1e-6,
+            lvm,
+            local_lr,
+            scg: None,
+            adam_mu: if lvm { Some(Adam::new(dof, local_lr)) } else { None },
+            adam_ls: if lvm { Some(Adam::new(dof, local_lr)) } else { None },
+            history: Vec::new(),
+            iter_secs: Vec::new(),
+            last_f: f64::NAN,
+            update_locals_next: false,
+            min_xvar: 1e-6,
+        })
+    }
+
+    fn eval(&mut self, theta: &[f64]) -> Result<(f64, Vec<f64>)> {
+        let params = self.params.unflatten(theta);
+        let stats = self.exec.shard_stats(&params, &self.shard)?;
+        let kmm = kernel::kmm(&params, self.jitter);
+        let (bv, adj) = gp::assemble_bound(&stats, &kmm, params.log_beta, self.dout)?;
+        let (mut g, local) = self.exec.shard_grads(&params, &self.shard, &adj)?;
+        if self.update_locals_next && self.lvm {
+            self.update_locals_next = false;
+            self.apply_local(&local.d_xmu, &local.d_xvar);
+        }
+        g.accumulate(&kernel::kmm_vjp(&params, &adj.d_kmm));
+        g.d_log_beta = adj.d_log_beta;
+        self.last_f = bv.f;
+        Ok((-bv.f, g.flatten().iter().map(|v| -v).collect()))
+    }
+
+    fn apply_local(&mut self, d_xmu: &Matrix, d_xvar: &Matrix) {
+        let g_mu: Vec<f64> = d_xmu.data().iter().map(|g| -g).collect();
+        let g_ls: Vec<f64> = d_xvar
+            .data()
+            .iter()
+            .zip(self.shard.xvar.data())
+            .map(|(g, s)| -g * s)
+            .collect();
+        self.adam_mu
+            .as_mut()
+            .unwrap()
+            .step(self.shard.xmu.data_mut(), &g_mu);
+        let mut log_s: Vec<f64> = self
+            .shard
+            .xvar
+            .data()
+            .iter()
+            .map(|s| s.max(self.min_xvar).ln())
+            .collect();
+        self.adam_ls.as_mut().unwrap().step(&mut log_s, &g_ls);
+        for (s, l) in self.shard.xvar.data_mut().iter_mut().zip(&log_s) {
+            *s = l.exp().max(self.min_xvar);
+        }
+    }
+
+    /// One outer iteration; mirrors `coordinator::Trainer::step`.
+    pub fn step(&mut self) -> Result<f64> {
+        let t0 = Instant::now();
+        let mut scg = self.scg.take();
+        let theta0 = self.params.flatten();
+        self.update_locals_next = self.lvm;
+        {
+            let mut err: Option<anyhow::Error> = None;
+            let mut obj = |x: &[f64]| match self.eval(x) {
+                Ok(v) => v,
+                Err(e) => {
+                    err = Some(e);
+                    (f64::INFINITY, vec![0.0; x.len()])
+                }
+            };
+            match scg.as_mut() {
+                None => scg = Some(Scg::new(theta0, &mut obj)),
+                Some(s) => s.refresh(&mut obj),
+            }
+            scg.as_mut().unwrap().step(&mut obj);
+            if let Some(e) = err {
+                return Err(e);
+            }
+        }
+        let scg = scg.expect("initialised");
+        self.params = self.params.unflatten(scg.x());
+        self.scg = Some(scg);
+        self.history.push(self.last_f);
+        self.iter_secs.push(t0.elapsed().as_secs_f64());
+        Ok(self.last_f)
+    }
+
+    pub fn train(&mut self, iters: usize) -> Result<f64> {
+        let mut f = f64::NAN;
+        for _ in 0..iters {
+            f = self.step()?;
+        }
+        Ok(f)
+    }
+
+    /// Current bound without stepping.
+    pub fn evaluate(&mut self) -> Result<f64> {
+        let theta = self.params.flatten();
+        let (nf, _) = self.eval(&theta)?;
+        Ok(-nf)
+    }
+
+    pub fn locals(&self) -> (&Matrix, &Matrix) {
+        (&self.shard.xmu, &self.shard.xvar)
+    }
+
+    pub fn posterior(&mut self) -> Result<gp::PosteriorWeights> {
+        let stats = self.exec.shard_stats(&self.params, &self.shard)?;
+        let kmm = kernel::kmm(&self.params, self.jitter);
+        gp::bound::posterior_weights(&stats, &kmm, self.params.log_beta)
+    }
+}

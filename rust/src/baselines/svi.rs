@@ -1,0 +1,173 @@
+//! The Hensman et al. (2013) "GPs for big data" bound with an EXPLICIT
+//! variational distribution q(u) = N(m_u, S) — the related-work
+//! comparison of paper §6 and the engine behind Fig. 8.
+//!
+//! For sparse GP regression with outputs Y (n x d), shared S across
+//! output dimensions:
+//!
+//! ```text
+//! F_svi(m_u, S) = sum_i [ log N(y_i; k_i^T Kmm^-1 m_u, beta^-1)
+//!                        - beta/2 (K_ii - k_i^T Kmm^-1 k_i)
+//!                        - beta d/2 k_i^T Kmm^-1 S Kmm^-1 k_i / d ... ]
+//!               - KL(q(u) || N(0, Kmm))
+//! ```
+//!
+//! The key property (tested below and plotted in Fig. 8): maximising
+//! F_svi over (m_u, S) recovers the collapsed Titsias bound exactly —
+//! but at any FIXED q(u), the landscape over the inducing-point
+//! locations Z is different, which is the paper's §6 argument for why
+//! SVI must pin Z while the collapsed parametrisation can optimise it.
+
+use anyhow::Result;
+
+use crate::gp::params::GlobalParams;
+use crate::gp::{kernel, Stats};
+use crate::linalg::{Cholesky, Matrix};
+
+/// An explicit variational distribution over the inducing outputs:
+/// mean m_u (m x d), covariance S (m x m, shared across output dims).
+#[derive(Debug, Clone)]
+pub struct ExplicitQu {
+    pub mean: Matrix,
+    pub cov: Matrix,
+}
+
+/// Evaluate the Hensman bound at a fixed q(u). X observed (regression).
+pub fn svi_bound(
+    p: &GlobalParams,
+    qu: &ExplicitQu,
+    x: &Matrix,
+    y: &Matrix,
+    jitter: f64,
+) -> Result<f64> {
+    let (n, d) = (y.rows(), y.cols() as f64);
+    let beta = p.beta();
+    let kmm = kernel::kmm(p, jitter);
+    let chol = Cholesky::new_with_jitter(&kmm, 1e-10, 8)?;
+    let knm = kernel::seard(x, &p.z, p); // n x m
+    let kinv_kmn = chol.solve(&knm.transpose()); // m x n  (Kmm^-1 k_i columns)
+
+    // predictive means at the training points: A^T m_u with A = Kmm^-1 Kmn
+    let mean = kinv_kmn.t_matmul(&qu.mean); // n x d
+
+    let sf2 = p.sf2();
+    let mut f = 0.0;
+    // log-likelihood terms
+    f += -0.5 * n as f64 * d * ((2.0 * std::f64::consts::PI).ln() - p.log_beta);
+    for i in 0..n {
+        let mut se = 0.0;
+        for j in 0..y.cols() {
+            let r = y[(i, j)] - mean[(i, j)];
+            se += r * r;
+        }
+        f -= 0.5 * beta * se;
+
+        // k_i^T Kmm^-1 k_i
+        let mut kqk = 0.0;
+        // k_i^T Kmm^-1 S Kmm^-1 k_i
+        let mut ksk = 0.0;
+        for a in 0..p.m() {
+            kqk += knm[(i, a)] * kinv_kmn[(a, i)];
+            for b in 0..p.m() {
+                ksk += kinv_kmn[(a, i)] * qu.cov[(a, b)] * kinv_kmn[(b, i)];
+            }
+        }
+        // trace corrections (each output dim pays them once)
+        f -= 0.5 * beta * d * (sf2 - kqk);
+        f -= 0.5 * beta * d * ksk;
+    }
+
+    // KL(N(m_u, S) || N(0, Kmm)), S shared across d output dims
+    let chol_s = Cholesky::new_with_jitter(&qu.cov, 1e-12, 8)?;
+    let m = p.m() as f64;
+    let tr = chol.solve(&qu.cov).trace();
+    let kinv_mu = chol.solve(&qu.mean);
+    let maha = qu.mean.dot(&kinv_mu);
+    let kl = 0.5 * d * (tr - m + chol.log_det() - chol_s.log_det()) + 0.5 * maha;
+    Ok(f - kl)
+}
+
+/// The optimal q(u) for the current statistics (the collapsed solution):
+/// mean = beta Kmm Sigma^-1 C, cov = Kmm Sigma^-1 Kmm.
+pub fn optimal_qu(p: &GlobalParams, stats: &Stats, jitter: f64) -> Result<ExplicitQu> {
+    let kmm = kernel::kmm(p, jitter);
+    let w = crate::gp::bound::posterior_weights(stats, &kmm, p.log_beta)?;
+    Ok(ExplicitQu {
+        mean: w.qu_mean,
+        cov: w.qu_cov,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gp::{self};
+    use crate::util::rng::Rng;
+
+    fn setup(seed: u64) -> (GlobalParams, Matrix, Matrix) {
+        let mut rng = Rng::new(seed);
+        let n = 30;
+        let x = Matrix::from_fn(n, 1, |_, _| rng.range(-2.0, 2.0));
+        let y = Matrix::from_fn(n, 2, |i, j| {
+            (x[(i, 0)] * (1.0 + j as f64)).sin() + 0.05 * rng.normal()
+        });
+        let p = GlobalParams {
+            z: Matrix::from_fn(7, 1, |i, _| -2.0 + i as f64 * 0.6),
+            log_ls: vec![(0.7_f64).ln()],
+            log_sf2: 0.0,
+            log_beta: (100.0_f64).ln(),
+        };
+        (p, x, y)
+    }
+
+    #[test]
+    fn optimal_qu_recovers_collapsed_bound() {
+        // F_svi(q*) must equal the collapsed Titsias bound — the
+        // analytic-optimum property the paper's derivation rests on.
+        let (p, x, y) = setup(0);
+        let jitter = 1e-8;
+        let stats = kernel::shard_stats(&p, &x, &Matrix::zeros(x.rows(), 1), &y,
+                                        &vec![1.0; x.rows()], 0.0);
+        let kmm = kernel::kmm(&p, jitter);
+        let (bv, _) = gp::assemble_bound(&stats, &kmm, p.log_beta, 2).unwrap();
+        let qu = optimal_qu(&p, &stats, jitter).unwrap();
+        let f_svi = svi_bound(&p, &qu, &x, &y, jitter).unwrap();
+        assert!(
+            (f_svi - bv.f).abs() < 1e-6 * (1.0 + bv.f.abs()),
+            "F_svi(q*) = {f_svi} vs collapsed {}",
+            bv.f
+        );
+    }
+
+    #[test]
+    fn any_other_qu_is_worse() {
+        let (p, x, y) = setup(1);
+        let jitter = 1e-8;
+        let stats = kernel::shard_stats(&p, &x, &Matrix::zeros(x.rows(), 1), &y,
+                                        &vec![1.0; x.rows()], 0.0);
+        let qu = optimal_qu(&p, &stats, jitter).unwrap();
+        let f_star = svi_bound(&p, &qu, &x, &y, jitter).unwrap();
+        let mut rng = Rng::new(2);
+        for _ in 0..5 {
+            let perturbed = ExplicitQu {
+                mean: Matrix::from_fn(qu.mean.rows(), qu.mean.cols(), |i, j| {
+                    qu.mean[(i, j)] + 0.3 * rng.normal()
+                }),
+                cov: qu.cov.clone(),
+            };
+            let f = svi_bound(&p, &perturbed, &x, &y, jitter).unwrap();
+            assert!(f < f_star, "perturbed q(u) beat the optimum: {f} > {f_star}");
+        }
+    }
+
+    #[test]
+    fn svi_bound_is_below_exact_marginal() {
+        let (p, x, y) = setup(3);
+        let stats = kernel::shard_stats(&p, &x, &Matrix::zeros(x.rows(), 1), &y,
+                                        &vec![1.0; x.rows()], 0.0);
+        let qu = optimal_qu(&p, &stats, 1e-8).unwrap();
+        let f = svi_bound(&p, &qu, &x, &y, 1e-8).unwrap();
+        let exact = gp::exact::log_marginal(&p, &x, &y).unwrap();
+        assert!(f <= exact + 1e-8, "bound {f} above exact {exact}");
+    }
+}

@@ -1,0 +1,24 @@
+//! Layer-3 coordinator: the paper's distributed inference.
+//!
+//! A leader drives a [`crate::mapreduce::Pool`] of worker nodes, each
+//! owning a data shard and its own compiled PJRT executables. One outer
+//! iteration implements the paper's §3.2 protocol:
+//!
+//! 1. broadcast the global parameters G = (Z, kernel hypers, beta);
+//! 2. map: each worker computes its partial statistics
+//!    (a, psi0, C, D, KL) via the Pallas/HLO artifact; reduce: sum
+//!    (constant-size messages, m x m and m x d);
+//! 3. central: assemble the collapsed bound F and adjoint matrices
+//!    dF/d{psi0, C, D, KL, Kmm, log beta} (O(m^3), `gp::bound`);
+//!    broadcast the adjoints;
+//! 4. map: workers chain-rule to partial global gradients and update
+//!    their local q(X) parameters; reduce: sum global gradients; the
+//!    central node takes a scaled-conjugate-gradient step on G.
+//!
+//! Node failure (paper §5.2): a failed node's partial terms are dropped
+//! from both reduces for that iteration, yielding a noisy gradient
+//! rather than a stall.
+
+mod trainer;
+
+pub use trainer::{partition, GlobalOpt, ModelKind, TrainConfig, Trainer};

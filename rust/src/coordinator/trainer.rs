@@ -1,0 +1,597 @@
+//! The distributed trainer: leader state machine + worker node state.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::gp::params::{GlobalGrads, GlobalParams};
+use crate::gp::{self, kernel, Stats};
+use crate::linalg::Matrix;
+use crate::mapreduce::Pool;
+use crate::optim::{Adam, Scg};
+use crate::runtime::{Manifest, ShardData, ShardExecutor};
+use crate::telemetry::{IterationLog, RoundTiming, RunLog};
+use crate::util::rng::Rng;
+
+/// Which of the paper's two models is being fit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ModelKind {
+    /// Sparse GP regression (Titsias 2009): inputs observed, q(X) a delta.
+    Regression,
+    /// Bayesian GPLVM (Titsias & Lawrence 2010): latent inputs, local
+    /// variational parameters (mu_i, s_i) optimised on the workers.
+    Lvm,
+}
+
+/// Optimiser for the global parameters.
+#[derive(Debug, Clone, Copy)]
+pub enum GlobalOpt {
+    /// Scaled conjugate gradients (the paper's optimiser).
+    Scg,
+    /// Adam ablation (DESIGN.md ablation index).
+    Adam { lr: f64 },
+}
+
+/// Training configuration.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    /// Artifact config name in `artifacts/manifest.json`.
+    pub artifact: String,
+    /// Artifacts directory.
+    pub artifacts_dir: PathBuf,
+    /// Number of worker nodes (threads).
+    pub workers: usize,
+    pub model: ModelKind,
+    pub global_opt: GlobalOpt,
+    /// Adam learning rate for the workers' local q(X) updates.
+    pub local_lr: f64,
+    /// Kmm jitter.
+    pub jitter: f64,
+    /// Per-iteration, per-node failure probability (paper Fig. 7).
+    pub failure_rate: f64,
+    /// Floor on the local variances (keeps log s finite).
+    pub min_xvar: f64,
+    pub seed: u64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            artifact: "small".into(),
+            artifacts_dir: crate::runtime::default_artifacts_dir(),
+            workers: 4,
+            model: ModelKind::Regression,
+            global_opt: GlobalOpt::Scg,
+            local_lr: 0.05,
+            jitter: 1e-6,
+            failure_rate: 0.0,
+            min_xvar: 1e-6,
+            seed: 0,
+        }
+    }
+}
+
+/// Per-node state living on its own thread: compiled executables, the
+/// data shard, and local optimiser state.
+struct WorkerState {
+    exec: ShardExecutor,
+    shard: ShardData,
+    adam_mu: Adam,
+    adam_ls: Adam, // over log s
+    min_xvar: f64,
+    lvm: bool,
+}
+
+impl WorkerState {
+    /// Apply one local ascent step on (mu, log s) from raw-space grads.
+    fn local_update(&mut self, d_xmu: &Matrix, d_xvar: &Matrix) {
+        if !self.lvm || self.shard.len() == 0 {
+            return;
+        }
+        let (b, q) = (self.shard.xmu.rows(), self.shard.xmu.cols());
+        // minimise -F: negate the ascent gradients
+        let g_mu: Vec<f64> = d_xmu.data().iter().map(|g| -g).collect();
+        // chain rule d/dlog s = s * d/ds
+        let g_ls: Vec<f64> = d_xvar
+            .data()
+            .iter()
+            .zip(self.shard.xvar.data())
+            .map(|(g, s)| -g * s)
+            .collect();
+        self.adam_mu.step(self.shard.xmu.data_mut(), &g_mu);
+        let mut log_s: Vec<f64> = self
+            .shard
+            .xvar
+            .data()
+            .iter()
+            .map(|s| s.max(self.min_xvar).ln())
+            .collect();
+        self.adam_ls.step(&mut log_s, &g_ls);
+        for (s, l) in self.shard.xvar.data_mut().iter_mut().zip(&log_s) {
+            *s = l.exp().max(self.min_xvar);
+        }
+        debug_assert_eq!(b * q, g_mu.len());
+    }
+}
+
+/// The distributed trainer (leader).
+pub struct Trainer {
+    pool: Pool<WorkerState>,
+    pub params: GlobalParams,
+    cfg: TrainConfig,
+    dout: usize,
+    pub log: RunLog,
+    rng: Rng,
+    scg: Option<Scg>,
+    adam: Option<Adam>,
+    /// workers alive this iteration
+    alive: Vec<bool>,
+    /// permanently decommissioned workers (elastic recovery)
+    dead: Vec<bool>,
+    /// scratch: rounds recorded during the current iteration
+    rounds: Vec<RoundTiming>,
+    central_secs: f64,
+    /// apply local updates on the next gradient round
+    update_locals_next: bool,
+    last_f: f64,
+    /// the objective changed since SCG last anchored (locals moved or a
+    /// node failed) — a refresh evaluation is needed before stepping
+    objective_dirty: bool,
+}
+
+impl Trainer {
+    /// Spawn the cluster. `shards[k]` becomes worker k's slice; local
+    /// parameters (Xmu, Xvar) live only on the workers from here on.
+    pub fn new(cfg: TrainConfig, params: GlobalParams, shards: Vec<ShardData>) -> Result<Trainer> {
+        ensure!(
+            shards.len() == cfg.workers,
+            "need exactly one shard per worker ({} vs {})",
+            shards.len(),
+            cfg.workers
+        );
+        let manifest = Manifest::load(&cfg.artifacts_dir)?;
+        let art = manifest.config(&cfg.artifact)?;
+        ensure!(
+            art.m == params.m() && art.q == params.q(),
+            "params shape (m={}, q={}) does not match artifact {} (m={}, q={})",
+            params.m(),
+            params.q(),
+            cfg.artifact,
+            art.m,
+            art.q
+        );
+        let dout = art.d;
+        let lvm = cfg.model == ModelKind::Lvm;
+        let local_lr = cfg.local_lr;
+        let min_xvar = cfg.min_xvar;
+        let artifact = cfg.artifact.clone();
+        let shards = Arc::new(shards);
+        let manifest = Arc::new(manifest);
+        let t0 = Instant::now();
+        let pool = Pool::new(cfg.workers, move |k| {
+            let exec = ShardExecutor::new(&manifest, &artifact)
+                .with_context(|| format!("worker {k}: compiling artifacts"))?;
+            let shard = shards[k].clone();
+            let dof = shard.xmu.rows() * shard.xmu.cols();
+            Ok(WorkerState {
+                exec,
+                shard,
+                adam_mu: Adam::new(dof, local_lr),
+                adam_ls: Adam::new(dof, local_lr),
+                min_xvar,
+                lvm,
+            })
+        })?;
+        let startup_secs = t0.elapsed().as_secs_f64();
+        let alive = vec![true; cfg.workers];
+        let dead = vec![false; cfg.workers];
+        let rng = Rng::new(cfg.seed ^ 0xC0FFEE);
+        let mut log = RunLog::default();
+        log.startup_secs = startup_secs;
+        Ok(Trainer {
+            pool,
+            params,
+            cfg,
+            dout,
+            log,
+            rng,
+            scg: None,
+            adam: None,
+            alive,
+            dead,
+            rounds: Vec::new(),
+            central_secs: 0.0,
+            update_locals_next: false,
+            last_f: f64::NAN,
+            objective_dirty: false,
+        })
+    }
+
+    pub fn dout(&self) -> usize {
+        self.dout
+    }
+
+    pub fn workers(&self) -> usize {
+        self.cfg.workers
+    }
+
+    /// Adjust the per-iteration node failure probability (Fig. 7 sweeps).
+    pub fn set_failure_rate(&mut self, rate: f64) {
+        self.cfg.failure_rate = rate;
+    }
+
+    /// Permanently decommission worker `k`, re-sharding its data across
+    /// the survivors — the paper's §5.2 *alternative* recovery strategy
+    /// ("load the data to a different node and restart the calculation").
+    /// In-process we fetch the shard back from the dying worker, which
+    /// stands in for re-reading it from replicated storage; the survivors'
+    /// local optimiser state is rebuilt at the new shapes.
+    pub fn decommission(&mut self, k: usize) -> Result<()> {
+        ensure!(k < self.cfg.workers, "no such worker {k}");
+        ensure!(!self.dead[k], "worker {k} already decommissioned");
+        let survivors: Vec<usize> = (0..self.cfg.workers)
+            .filter(|i| *i != k && !self.dead[*i])
+            .collect();
+        ensure!(!survivors.is_empty(), "cannot decommission the last worker");
+
+        // fetch the doomed shard (replica read)
+        let orphan = self
+            .pool
+            .map_one(k, |_, w: &mut WorkerState| {
+                let s = w.shard.clone();
+                // drop the local data so the dead node holds nothing
+                w.shard = ShardData {
+                    xmu: Matrix::zeros(0, s.xmu.cols()),
+                    xvar: Matrix::zeros(0, s.xvar.cols()),
+                    y: Matrix::zeros(0, s.y.cols()),
+                    kl_weight: s.kl_weight,
+                };
+                s
+            })
+            .ok_or_else(|| anyhow::anyhow!("worker {k} unreachable"))?
+            .value;
+
+        // split the orphan shard across the survivors
+        let parts = partition(
+            &orphan.xmu,
+            &orphan.xvar,
+            &orphan.y,
+            orphan.kl_weight,
+            survivors.len(),
+        );
+        let local_lr = self.cfg.local_lr;
+        for (s, part) in survivors.iter().zip(parts) {
+            self.pool
+                .map_one(*s, move |_, w: &mut WorkerState| {
+                    w.shard.xmu = w.shard.xmu.vstack(&part.xmu);
+                    w.shard.xvar = w.shard.xvar.vstack(&part.xvar);
+                    w.shard.y = w.shard.y.vstack(&part.y);
+                    // optimiser state is shape-bound: rebuild (documented
+                    // trade-off of the reassign strategy)
+                    let dof = w.shard.xmu.rows() * w.shard.xmu.cols();
+                    w.adam_mu = Adam::new(dof, local_lr);
+                    w.adam_ls = Adam::new(dof, local_lr);
+                })
+                .ok_or_else(|| anyhow::anyhow!("survivor {s} unreachable"))?;
+        }
+        self.dead[k] = true;
+        self.objective_dirty = true;
+        Ok(())
+    }
+
+    /// Workers currently decommissioned.
+    pub fn dead_workers(&self) -> Vec<usize> {
+        (0..self.cfg.workers).filter(|k| self.dead[*k]).collect()
+    }
+
+    fn record_round<R>(&mut self, results: &[crate::mapreduce::MapResult<R>], wall: f64) {
+        let mut worker_secs = vec![0.0; self.cfg.workers];
+        for r in results {
+            worker_secs[r.worker] = r.secs;
+        }
+        self.rounds.push(RoundTiming {
+            worker_secs,
+            wall_secs: wall,
+        });
+    }
+
+    /// Rounds 1+2 at global parameters `theta`: distributed bound value
+    /// and gradient. Applies local worker updates when the one-shot
+    /// `update_locals_next` flag is set (paper step 4's "at the same
+    /// time the end-point nodes optimise L_k").
+    fn eval_globals(&mut self, theta: &[f64]) -> Result<(f64, Vec<f64>)> {
+        let params = self.params.unflatten(theta);
+        let alive = self.alive.clone();
+
+        // ---- round 1: partial statistics --------------------------------
+        let p1 = params.clone();
+        let t0 = Instant::now();
+        let results = self
+            .pool
+            .map_subset(&alive, move |_, w: &mut WorkerState| {
+                w.exec.shard_stats(&p1, &w.shard)
+            });
+        let wall = t0.elapsed().as_secs_f64();
+        self.record_round(&results, wall);
+        let m = params.m();
+        let mut stats = Stats::zeros(m, self.dout);
+        for r in &results {
+            let s = r.value.as_ref().map_err(|e| anyhow::anyhow!("{e}"))?;
+            stats.accumulate(s);
+        }
+
+        // ---- central: bound + adjoints -----------------------------------
+        let tc = Instant::now();
+        let kmm = kernel::kmm(&params, self.cfg.jitter);
+        let (bv, adj) = gp::assemble_bound(&stats, &kmm, params.log_beta, self.dout)?;
+        self.central_secs += tc.elapsed().as_secs_f64();
+
+        // ---- round 2: chain-rule gradients (+ local updates) -------------
+        let p2 = params.clone();
+        let adj2 = Arc::new(adj);
+        let adj_for_round = Arc::clone(&adj2);
+        let do_locals = self.update_locals_next;
+        self.update_locals_next = false;
+        let t1 = Instant::now();
+        let gresults = self
+            .pool
+            .map_subset(&alive, move |_, w: &mut WorkerState| -> Result<GlobalGrads> {
+                let (g, local) = w.exec.shard_grads(&p2, &w.shard, &adj_for_round)?;
+                if do_locals {
+                    w.local_update(&local.d_xmu, &local.d_xvar);
+                }
+                Ok(g)
+            });
+        let wall1 = t1.elapsed().as_secs_f64();
+        self.record_round(&gresults, wall1);
+
+        let tc2 = Instant::now();
+        let mut total = GlobalGrads::zeros(m, params.q());
+        for r in &gresults {
+            let g = r.value.as_ref().map_err(|e| anyhow::anyhow!("{e}"))?;
+            total.accumulate(g);
+        }
+        // central direct term (native pullback of dF/dKmm through Kmm(Z))
+        total.accumulate(&kernel::kmm_vjp(&params, &adj2.d_kmm));
+        total.d_log_beta = adj2.d_log_beta;
+        self.central_secs += tc2.elapsed().as_secs_f64();
+
+        self.last_f = bv.f;
+        // minimise -F
+        Ok((-bv.f, total.flatten().iter().map(|g| -g).collect()))
+    }
+
+    /// One outer iteration of the §3.2 protocol. Returns the bound F at
+    /// the iteration's accepted point.
+    pub fn step(&mut self) -> Result<f64> {
+        let iter = self.log.iterations.len();
+        self.rounds.clear();
+        self.central_secs = 0.0;
+
+        // node-failure injection for this iteration (paper Fig. 7);
+        // permanently decommissioned nodes stay down
+        let mut failed = Vec::new();
+        for k in 0..self.cfg.workers {
+            if self.dead[k] {
+                self.alive[k] = false;
+                continue;
+            }
+            let down = self.cfg.failure_rate > 0.0 && self.rng.flip(self.cfg.failure_rate);
+            self.alive[k] = !down;
+            if down {
+                failed.push(k);
+            }
+        }
+        if !self.alive.iter().any(|a| *a) {
+            // never drop the whole cluster; revive the first live node
+            let k = (0..self.cfg.workers).find(|k| !self.dead[*k]).unwrap();
+            self.alive[k] = true;
+            failed.retain(|f| *f != k);
+        }
+
+        let mut accepted_f = f64::NAN;
+        match self.cfg.global_opt {
+            GlobalOpt::Scg => {
+                // take SCG out of self to avoid a double borrow in the
+                // objective closure
+                let mut scg = self.scg.take();
+                let theta0 = self.params.flatten();
+                // the first eval of the iteration happens at the current
+                // accepted point and carries the workers' local updates
+                // ("at the same time the end-point nodes optimise L_k");
+                // SCG's probe/candidate evals do not.
+                let lvm = self.cfg.model == ModelKind::Lvm;
+                self.update_locals_next = lvm;
+                // re-anchoring is only needed when the objective moved under
+                // SCG's feet: local updates (LVM) or dropped nodes. Pure
+                // regression with no failures skips the refresh eval —
+                // a 1/3 round saving per iteration (EXPERIMENTS.md §Perf).
+                let dirty = self.objective_dirty || lvm || !failed.is_empty();
+                self.objective_dirty = !failed.is_empty();
+                let result = (|| -> Result<()> {
+                    let mut err: Option<anyhow::Error> = None;
+                    {
+                        let mut obj = |x: &[f64]| match self.eval_globals(x) {
+                            Ok(v) => v,
+                            Err(e) => {
+                                err = Some(e);
+                                (f64::INFINITY, vec![0.0; x.len()])
+                            }
+                        };
+                        match scg.as_mut() {
+                            None => {
+                                scg = Some(Scg::new(theta0, &mut obj));
+                            }
+                            Some(s) => {
+                                if dirty {
+                                    s.refresh(&mut obj);
+                                }
+                            }
+                        }
+                        scg.as_mut().unwrap().step(&mut obj);
+                    }
+                    if let Some(e) = err {
+                        return Err(e);
+                    }
+                    Ok(())
+                })();
+                let scg = scg.expect("scg initialised above");
+                self.params = self.params.unflatten(scg.x());
+                // report the bound at the ACCEPTED point (scg minimises -F),
+                // not at whatever probe/candidate ran last
+                accepted_f = -scg.f();
+                self.scg = Some(scg);
+                result?;
+            }
+            GlobalOpt::Adam { lr } => {
+                let mut theta = self.params.flatten();
+                self.update_locals_next = self.cfg.model == ModelKind::Lvm;
+                let (_, grad) = self.eval_globals(&theta)?;
+                if self.adam.is_none() {
+                    self.adam = Some(Adam::new(theta.len(), lr));
+                }
+                self.adam.as_mut().unwrap().step(&mut theta, &grad);
+                self.params = self.params.unflatten(&theta);
+                accepted_f = self.last_f;
+            }
+        }
+
+        let f = accepted_f;
+        self.log.iterations.push(IterationLog {
+            iter,
+            f,
+            rounds: std::mem::take(&mut self.rounds),
+            central_secs: self.central_secs,
+            failed_workers: failed,
+        });
+        Ok(f)
+    }
+
+    /// Run `iters` outer iterations; returns the final bound.
+    pub fn train(&mut self, iters: usize) -> Result<f64> {
+        let mut f = f64::NAN;
+        for _ in 0..iters {
+            f = self.step()?;
+        }
+        Ok(f)
+    }
+
+    /// Evaluate the bound at the current parameters without stepping
+    /// (all nodes, no failure injection).
+    pub fn evaluate(&mut self) -> Result<f64> {
+        let saved = self.alive.clone();
+        self.alive = (0..self.cfg.workers).map(|k| !self.dead[k]).collect();
+        let theta = self.params.flatten();
+        let (neg_f, _) = self.eval_globals(&theta)?;
+        self.alive = saved;
+        Ok(-neg_f)
+    }
+
+    /// Accumulated statistics at the current parameters (for posterior
+    /// weights / prediction).
+    pub fn current_stats(&mut self) -> Result<Stats> {
+        let params = self.params.clone();
+        let m = params.m();
+        let results = self.pool.map(move |_, w: &mut WorkerState| {
+            w.exec.shard_stats(&params, &w.shard)
+        });
+        let mut stats = Stats::zeros(m, self.dout);
+        for r in &results {
+            stats.accumulate(r.value.as_ref().map_err(|e| anyhow::anyhow!("{e}"))?);
+        }
+        Ok(stats)
+    }
+
+    /// Posterior weights at the current parameters.
+    pub fn posterior(&mut self) -> Result<gp::PosteriorWeights> {
+        let stats = self.current_stats()?;
+        let kmm = kernel::kmm(&self.params, self.cfg.jitter);
+        gp::bound::posterior_weights(&stats, &kmm, self.params.log_beta)
+    }
+
+    /// Fetch the workers' current local parameters (gather; used by the
+    /// LVM experiments to inspect the learned embedding).
+    pub fn gather_locals(&self) -> Vec<(Matrix, Matrix)> {
+        self.pool
+            .map(|_, w: &mut WorkerState| (w.shard.xmu.clone(), w.shard.xvar.clone()))
+            .into_iter()
+            .map(|r| r.value)
+            .collect()
+    }
+
+    /// Predict through the first live worker's executor (any node serves).
+    pub fn predict(
+        &mut self,
+        xt_mu: &Matrix,
+        xt_var: &Matrix,
+    ) -> Result<(Matrix, Vec<f64>)> {
+        let w = self.posterior()?;
+        let params = self.params.clone();
+        let xt_mu = xt_mu.clone();
+        let xt_var = xt_var.clone();
+        let k = (0..self.cfg.workers)
+            .find(|k| !self.dead[*k])
+            .ok_or_else(|| anyhow::anyhow!("no live workers"))?;
+        self.pool
+            .map_one(k, move |_, ws: &mut WorkerState| {
+                ws.exec.predict(&params, &xt_mu, &xt_var, &w.w1, &w.wv)
+            })
+            .expect("live worker reachable")
+            .value
+    }
+}
+
+/// Partition a dataset into `k` contiguous shards of near-equal size
+/// (the paper distributes points evenly across nodes).
+pub fn partition(
+    xmu: &Matrix,
+    xvar: &Matrix,
+    y: &Matrix,
+    kl_weight: f64,
+    k: usize,
+) -> Vec<ShardData> {
+    let n = xmu.rows();
+    let mut out = Vec::with_capacity(k);
+    let base = n / k;
+    let extra = n % k;
+    let mut lo = 0;
+    for i in 0..k {
+        let len = base + usize::from(i < extra);
+        let hi = lo + len;
+        let take = |src: &Matrix| {
+            Matrix::from_fn(hi - lo, src.cols(), |r, c| src[(lo + r, c)])
+        };
+        out.push(ShardData {
+            xmu: take(xmu),
+            xvar: take(xvar),
+            y: take(y),
+            kl_weight,
+        });
+        lo = hi;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partition_covers_all_points_once() {
+        let n = 23;
+        let xmu = Matrix::from_fn(n, 2, |i, j| (i * 2 + j) as f64);
+        let xvar = Matrix::zeros(n, 2);
+        let y = Matrix::from_fn(n, 3, |i, _| i as f64);
+        let shards = partition(&xmu, &xvar, &y, 0.0, 5);
+        assert_eq!(shards.len(), 5);
+        let total: usize = shards.iter().map(|s| s.len()).sum();
+        assert_eq!(total, n);
+        // sizes differ by at most 1
+        let sizes: Vec<usize> = shards.iter().map(|s| s.len()).collect();
+        assert!(sizes.iter().max().unwrap() - sizes.iter().min().unwrap() <= 1);
+        // first row of shard 1 follows last row of shard 0
+        assert_eq!(shards[1].y[(0, 0)], shards[0].len() as f64);
+    }
+}

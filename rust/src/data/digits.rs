@@ -1,0 +1,168 @@
+//! USPS-like synthetic digit images (substitute for the USPS dataset of
+//! §4.5/Fig. 6 — not redistributable here).
+//!
+//! 16x16 grayscale digits rendered from hand-coded stroke templates with
+//! random affine jitter (shift, scale) and pixel noise, so the GPLVM
+//! faces the same task shape: a density model over 256-dimensional
+//! images with ~10 modes, evaluated by reconstructing missing pixels.
+
+use crate::linalg::Matrix;
+use crate::util::rng::Rng;
+
+pub const SIDE: usize = 16;
+pub const PIXELS: usize = SIDE * SIDE;
+
+/// 8x12 coarse glyph templates for digits 0-9 ('#' = ink).
+const GLYPHS: [[&str; 12]; 10] = [
+    [
+        " ###### ", "##    ##", "##    ##", "##    ##", "##    ##", "##    ##", "##    ##",
+        "##    ##", "##    ##", "##    ##", "##    ##", " ###### ",
+    ],
+    [
+        "   ##   ", "  ###   ", " ####   ", "   ##   ", "   ##   ", "   ##   ", "   ##   ",
+        "   ##   ", "   ##   ", "   ##   ", "   ##   ", " ###### ",
+    ],
+    [
+        " ###### ", "##    ##", "      ##", "      ##", "     ## ", "    ##  ", "   ##   ",
+        "  ##    ", " ##     ", "##      ", "##      ", "########",
+    ],
+    [
+        " ###### ", "##    ##", "      ##", "      ##", "  ##### ", "  ##### ", "      ##",
+        "      ##", "      ##", "      ##", "##    ##", " ###### ",
+    ],
+    [
+        "##   ## ", "##   ## ", "##   ## ", "##   ## ", "##   ## ", "########", "########",
+        "     ## ", "     ## ", "     ## ", "     ## ", "     ## ",
+    ],
+    [
+        "########", "##      ", "##      ", "##      ", "####### ", "      ##", "      ##",
+        "      ##", "      ##", "      ##", "##    ##", " ###### ",
+    ],
+    [
+        " ###### ", "##    ##", "##      ", "##      ", "####### ", "##    ##", "##    ##",
+        "##    ##", "##    ##", "##    ##", "##    ##", " ###### ",
+    ],
+    [
+        "########", "      ##", "      ##", "     ## ", "     ## ", "    ##  ", "    ##  ",
+        "   ##   ", "   ##   ", "  ##    ", "  ##    ", "  ##    ",
+    ],
+    [
+        " ###### ", "##    ##", "##    ##", "##    ##", " ###### ", " ###### ", "##    ##",
+        "##    ##", "##    ##", "##    ##", "##    ##", " ###### ",
+    ],
+    [
+        " ###### ", "##    ##", "##    ##", "##    ##", "##    ##", " #######", "      ##",
+        "      ##", "      ##", "      ##", "##    ##", " ###### ",
+    ],
+];
+
+/// Bilinear sample of the template for digit `d` at continuous
+/// coordinates (u, v) in template space.
+fn template_at(d: usize, u: f64, v: f64) -> f64 {
+    let (w, h) = (8.0, 12.0);
+    if u < 0.0 || v < 0.0 || u >= w - 1.0 || v >= h - 1.0 {
+        return 0.0;
+    }
+    let (x0, y0) = (u.floor() as usize, v.floor() as usize);
+    let (fx, fy) = (u - u.floor(), v - v.floor());
+    let ink = |x: usize, y: usize| -> f64 {
+        if GLYPHS[d][y].as_bytes()[x] == b'#' {
+            1.0
+        } else {
+            0.0
+        }
+    };
+    ink(x0, y0) * (1.0 - fx) * (1.0 - fy)
+        + ink(x0 + 1, y0) * fx * (1.0 - fy)
+        + ink(x0, y0 + 1) * (1.0 - fx) * fy
+        + ink(x0 + 1, y0 + 1) * fx * fy
+}
+
+pub struct Digits {
+    /// Flattened images, n x 256, values in [0, 1] plus noise.
+    pub y: Matrix,
+    /// Digit label per image.
+    pub labels: Vec<usize>,
+}
+
+/// Render `n` digits cycling through 0-9 with random affine jitter.
+pub fn generate(n: usize, noise: f64, seed: u64) -> Digits {
+    let mut rng = Rng::new(seed);
+    let mut y = Matrix::zeros(n, PIXELS);
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let d = i % 10;
+        labels.push(d);
+        let scale = rng.range(0.85, 1.15);
+        let dx = rng.range(-1.5, 1.5);
+        let dy = rng.range(-1.5, 1.5);
+        for py in 0..SIDE {
+            for px in 0..SIDE {
+                // map the 16x16 canvas into 8x12 template coordinates
+                let u = ((px as f64 - dx) / SIDE as f64 - 0.5) / scale * 8.0 + 3.5;
+                let v = ((py as f64 - dy) / SIDE as f64 - 0.5) / scale * 12.0 + 5.5;
+                let val = template_at(d, u, v) + noise * rng.normal();
+                y[(i, py * SIDE + px)] = val.clamp(-0.25, 1.25);
+            }
+        }
+    }
+    Digits { y, labels }
+}
+
+/// Knock out a random fraction of pixels (returns the mask: true = kept).
+pub fn drop_pixels(image: &[f64], frac: f64, rng: &mut Rng) -> (Vec<f64>, Vec<bool>) {
+    let mut out = image.to_vec();
+    let mut kept = vec![true; image.len()];
+    for i in 0..image.len() {
+        if rng.flip(frac) {
+            out[i] = 0.0;
+            kept[i] = false;
+        }
+    }
+    (out, kept)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_all_digits() {
+        let d = generate(20, 0.0, 3);
+        assert_eq!(d.y.rows(), 20);
+        assert_eq!(d.y.cols(), 256);
+        // each image has a sensible amount of ink
+        for i in 0..20 {
+            let ink: f64 = d.y.row(i).iter().sum();
+            assert!(ink > 10.0 && ink < 200.0, "image {i} ink {ink}");
+        }
+    }
+
+    #[test]
+    fn same_digit_images_are_more_similar_than_different() {
+        let d = generate(40, 0.02, 5);
+        let dist = |a: usize, b: usize| -> f64 {
+            d.y.row(a)
+                .iter()
+                .zip(d.y.row(b))
+                .map(|(x, y)| (x - y) * (x - y))
+                .sum()
+        };
+        // 0 vs 10 are both '0's; 0 vs 1 differ
+        let same = dist(0, 10) + dist(1, 11) + dist(2, 12);
+        let diff = dist(0, 1) + dist(1, 2) + dist(2, 3);
+        assert!(same < diff, "same {same} diff {diff}");
+    }
+
+    #[test]
+    fn drop_pixels_masks_requested_fraction() {
+        let mut rng = Rng::new(0);
+        let img = vec![1.0; 1000];
+        let (out, kept) = drop_pixels(&img, 0.34, &mut rng);
+        let dropped = kept.iter().filter(|k| !**k).count();
+        assert!((dropped as f64 / 1000.0 - 0.34).abs() < 0.06);
+        for (i, k) in kept.iter().enumerate() {
+            assert_eq!(out[i], if *k { 1.0 } else { 0.0 });
+        }
+    }
+}

@@ -1,0 +1,130 @@
+//! Lloyd's k-means — the paper initialises the inducing-point locations
+//! with "k-means with added noise" (§4.1).
+
+use crate::linalg::Matrix;
+use crate::util::rng::Rng;
+
+/// k-means centres of `x` (n x q), k centres, `iters` Lloyd steps.
+pub fn kmeans(x: &Matrix, k: usize, iters: usize, rng: &mut Rng) -> Matrix {
+    let (n, q) = (x.rows(), x.cols());
+    assert!(k <= n, "more centres than points");
+    // k-means++ seeding: first centre uniform, then proportional to the
+    // squared distance to the closest chosen centre
+    let mut chosen: Vec<usize> = vec![rng.below(n)];
+    let mut d2 = vec![f64::INFINITY; n];
+    while chosen.len() < k {
+        let last = *chosen.last().unwrap();
+        for i in 0..n {
+            let dist: f64 = (0..q).map(|j| (x[(i, j)] - x[(last, j)]).powi(2)).sum();
+            if dist < d2[i] {
+                d2[i] = dist;
+            }
+        }
+        let total: f64 = d2.iter().sum();
+        let mut target = rng.uniform() * total;
+        let mut pick = n - 1;
+        for i in 0..n {
+            target -= d2[i];
+            if target <= 0.0 {
+                pick = i;
+                break;
+            }
+        }
+        chosen.push(pick);
+    }
+    let mut centres = Matrix::from_fn(k, q, |c, j| x[(chosen[c], j)]);
+
+    let mut assign = vec![0usize; n];
+    for _ in 0..iters {
+        // assignment step
+        for i in 0..n {
+            let mut best = (f64::INFINITY, 0usize);
+            for c in 0..k {
+                let d: f64 = (0..q)
+                    .map(|j| (x[(i, j)] - centres[(c, j)]).powi(2))
+                    .sum();
+                if d < best.0 {
+                    best = (d, c);
+                }
+            }
+            assign[i] = best.1;
+        }
+        // update step
+        let mut sums = Matrix::zeros(k, q);
+        let mut counts = vec![0usize; k];
+        for i in 0..n {
+            counts[assign[i]] += 1;
+            for j in 0..q {
+                sums[(assign[i], j)] += x[(i, j)];
+            }
+        }
+        for c in 0..k {
+            if counts[c] == 0 {
+                // re-seed an empty cluster at a random point
+                let r = rng.below(n);
+                for j in 0..q {
+                    centres[(c, j)] = x[(r, j)];
+                }
+            } else {
+                for j in 0..q {
+                    centres[(c, j)] = sums[(c, j)] / counts[c] as f64;
+                }
+            }
+        }
+    }
+    centres
+}
+
+/// The paper's inducing-point initialisation: k-means centres plus a
+/// little noise (breaks exact symmetries between Z and data points).
+pub fn inducing_init(x: &Matrix, k: usize, noise: f64, rng: &mut Rng) -> Matrix {
+    let mut z = kmeans(x, k, 20, rng);
+    for v in z.data_mut() {
+        *v += noise * rng.normal();
+    }
+    z
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn finds_separated_clusters() {
+        let mut rng = Rng::new(0);
+        let n = 300;
+        let x = Matrix::from_fn(n, 2, |i, j| {
+            let c = i % 3;
+            let centre = [[0.0, 0.0], [10.0, 0.0], [0.0, 10.0]][c][j];
+            centre + 0.3 * rng.normal()
+        });
+        let centres = kmeans(&x, 3, 30, &mut rng);
+        // each true centre has a kmeans centre within 0.5
+        for truth in [[0.0, 0.0], [10.0, 0.0], [0.0, 10.0]] {
+            let closest = (0..3)
+                .map(|c| {
+                    ((centres[(c, 0)] - truth[0]).powi(2)
+                        + (centres[(c, 1)] - truth[1]).powi(2))
+                    .sqrt()
+                })
+                .fold(f64::INFINITY, f64::min);
+            assert!(closest < 0.5, "no centre near {truth:?} ({closest})");
+        }
+    }
+
+    #[test]
+    fn inducing_init_shape_and_jitter() {
+        let mut rng = Rng::new(1);
+        let x = Matrix::from_fn(50, 3, |_, _| rng.normal());
+        let z = inducing_init(&x, 8, 0.05, &mut rng);
+        assert_eq!((z.rows(), z.cols()), (8, 3));
+    }
+
+    #[test]
+    fn handles_k_equals_n() {
+        let mut rng = Rng::new(2);
+        let x = Matrix::from_fn(5, 2, |i, j| (i * 2 + j) as f64);
+        let z = kmeans(&x, 5, 10, &mut rng);
+        assert_eq!(z.rows(), 5);
+    }
+}

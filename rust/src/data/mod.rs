@@ -1,0 +1,13 @@
+//! Dataset generators and initialisation utilities.
+//!
+//! The paper's real datasets (oil-flow, USPS) are not redistributable
+//! here; `oilflow` and `digits` generate structurally equivalent
+//! synthetic versions (DESIGN.md §5 documents why each substitution
+//! preserves the behaviour being measured). `synthetic` is the paper's
+//! own synthetic benchmark (Figs. 1-3).
+
+pub mod digits;
+pub mod kmeans;
+pub mod oilflow;
+pub mod pca;
+pub mod synthetic;

@@ -1,0 +1,99 @@
+//! Oil-flow-like dataset (substitute for the 3-phase oil flow data used
+//! in the paper's Fig. 4 / Fig. 7 experiments — the original is not
+//! redistributable).
+//!
+//! Structure preserved (DESIGN.md §5): 12-dimensional observations
+//! generated from a low-dimensional latent space with three distinct
+//! flow-regime clusters, so that (a) a GPLVM with an ARD kernel should
+//! discover a low intrinsic dimensionality, and (b) the classes separate
+//! in the learned latent space.
+
+use crate::linalg::Matrix;
+use crate::util::rng::Rng;
+
+pub struct OilFlow {
+    /// Observations, n x 12.
+    pub y: Matrix,
+    /// Class label (flow regime) per point, values 0..3.
+    pub labels: Vec<usize>,
+    /// Ground-truth 2D latent coordinates.
+    pub latent: Matrix,
+}
+
+/// Generate `n` points, roughly balanced across the three regimes.
+pub fn generate(n: usize, seed: u64) -> OilFlow {
+    let mut rng = Rng::new(seed);
+    let dim = 12;
+    // class centres in the 2D latent space, well separated
+    let centres = [(-2.0, 0.0), (1.2, 1.8), (1.2, -1.8)];
+    // one smooth nonlinear map shared by all classes: 12 random
+    // sinusoidal features of the latent position
+    let mut prng = Rng::new(seed ^ 0xABCD);
+    let w1: Vec<f64> = (0..dim).map(|_| prng.range(-1.0, 1.0)).collect();
+    let w2: Vec<f64> = (0..dim).map(|_| prng.range(-1.0, 1.0)).collect();
+    let ph: Vec<f64> = (0..dim).map(|_| prng.range(0.0, 6.28)).collect();
+    let amp: Vec<f64> = (0..dim).map(|_| prng.range(0.5, 1.5)).collect();
+
+    let mut y = Matrix::zeros(n, dim);
+    let mut labels = Vec::with_capacity(n);
+    let mut latent = Matrix::zeros(n, 2);
+    for i in 0..n {
+        let cls = i % 3;
+        labels.push(cls);
+        let (cx, cy) = centres[cls];
+        let lx = cx + 0.45 * rng.normal();
+        let ly = cy + 0.45 * rng.normal();
+        latent[(i, 0)] = lx;
+        latent[(i, 1)] = ly;
+        for j in 0..dim {
+            let u = w1[j] * lx + w2[j] * ly;
+            y[(i, j)] = amp[j] * (u + ph[j]).sin() + 0.4 * u + 0.05 * rng.normal();
+        }
+    }
+    OilFlow { y, labels, latent }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn balanced_classes_and_shapes() {
+        let d = generate(300, 0);
+        assert_eq!(d.y.rows(), 300);
+        assert_eq!(d.y.cols(), 12);
+        for c in 0..3 {
+            let count = d.labels.iter().filter(|&&l| l == c).count();
+            assert_eq!(count, 100);
+        }
+    }
+
+    #[test]
+    fn classes_are_separated_in_observation_space() {
+        let d = generate(300, 1);
+        // mean vectors per class should be pairwise distinct
+        let mut means = vec![vec![0.0; 12]; 3];
+        let mut counts = [0usize; 3];
+        for i in 0..300 {
+            let c = d.labels[i];
+            counts[c] += 1;
+            for j in 0..12 {
+                means[c][j] += d.y[(i, j)];
+            }
+        }
+        for c in 0..3 {
+            for j in 0..12 {
+                means[c][j] /= counts[c] as f64;
+            }
+        }
+        for a in 0..3 {
+            for b in (a + 1)..3 {
+                let dist: f64 = (0..12)
+                    .map(|j| (means[a][j] - means[b][j]).powi(2))
+                    .sum::<f64>()
+                    .sqrt();
+                assert!(dist > 0.5, "classes {a} and {b} overlap (dist {dist})");
+            }
+        }
+    }
+}

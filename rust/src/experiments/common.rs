@@ -1,0 +1,176 @@
+//! Shared plumbing for the experiment harness.
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::coordinator::{partition, GlobalOpt, ModelKind, TrainConfig, Trainer};
+use crate::data::{kmeans, pca};
+use crate::gp::GlobalParams;
+use crate::linalg::Matrix;
+use crate::runtime::Manifest;
+use crate::util::cli::Args;
+use crate::util::rng::Rng;
+
+/// Where experiment CSVs land.
+pub fn results_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.get_str("out", "results"))
+}
+
+pub fn artifacts_dir(args: &Args) -> PathBuf {
+    args.get("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(crate::runtime::default_artifacts_dir)
+}
+
+pub fn manifest(args: &Args) -> Result<Manifest> {
+    Manifest::load(&artifacts_dir(args))
+}
+
+/// Standard GPLVM initialisation (paper §4.1): PCA-whitened latents,
+/// k-means(+noise) inducing points, unit hypers.
+pub struct LvmInit {
+    pub params: GlobalParams,
+    pub xmu: Matrix,
+    pub xvar: Matrix,
+}
+
+pub fn lvm_init(y: &Matrix, m: usize, q: usize, seed: u64) -> LvmInit {
+    let mut rng = Rng::new(seed);
+    let p = pca::pca(y, q, 50, seed ^ 0xACE);
+    let xmu = pca::whitened_scores(&p);
+    let xvar = Matrix::from_fn(xmu.rows(), q, |_, _| 0.5);
+    let z = kmeans::inducing_init(&xmu, m, 0.05, &mut rng);
+    LvmInit {
+        params: GlobalParams {
+            z,
+            log_ls: vec![0.0; q],
+            log_sf2: 0.0,
+            log_beta: 1.0,
+        },
+        xmu,
+        xvar,
+    }
+}
+
+/// Build a distributed LVM trainer over `workers` nodes.
+pub fn lvm_trainer(
+    args: &Args,
+    artifact: &str,
+    y: &Matrix,
+    m: usize,
+    q: usize,
+    workers: usize,
+    seed: u64,
+) -> Result<(Trainer, LvmInit)> {
+    let init = lvm_init(y, m, q, seed);
+    let shards = partition(&init.xmu, &init.xvar, y, 1.0, workers);
+    let cfg = TrainConfig {
+        artifact: artifact.into(),
+        artifacts_dir: artifacts_dir(args),
+        workers,
+        model: ModelKind::Lvm,
+        global_opt: GlobalOpt::Scg,
+        seed,
+        ..Default::default()
+    };
+    let trainer = Trainer::new(cfg, init.params.clone(), shards)?;
+    Ok((trainer, init))
+}
+
+/// ARD relevance per latent dimension: 1/lengthscale^2 normalised to the
+/// largest (paper §4.4/§5.2 report which dimensions "switch off").
+pub fn ard_relevance(params: &GlobalParams) -> Vec<f64> {
+    let inv: Vec<f64> = params.log_ls.iter().map(|l| (-2.0 * l).exp()).collect();
+    let max = inv.iter().cloned().fold(f64::MIN, f64::max).max(1e-300);
+    inv.iter().map(|v| v / max).collect()
+}
+
+/// Gather the full latent means from a trainer (ordered by worker).
+pub fn gathered_xmu(t: &Trainer, q: usize) -> Matrix {
+    let locals = t.gather_locals();
+    let n: usize = locals.iter().map(|(mu, _)| mu.rows()).sum();
+    let mut out = Matrix::zeros(n, q);
+    let mut row = 0;
+    for (mu, _) in &locals {
+        for i in 0..mu.rows() {
+            out.row_mut(row).copy_from_slice(mu.row(i));
+            row += 1;
+        }
+    }
+    out
+}
+
+/// Between-class / within-class scatter ratio of a labelled embedding —
+/// the separation metric used to compare latent spaces (Fig. 4).
+pub fn class_separation(x: &Matrix, labels: &[usize]) -> f64 {
+    let n = x.rows();
+    let q = x.cols();
+    let k = labels.iter().copied().max().unwrap_or(0) + 1;
+    let mut means = vec![vec![0.0; q]; k];
+    let mut counts = vec![0usize; k];
+    let mut grand = vec![0.0; q];
+    for i in 0..n {
+        counts[labels[i]] += 1;
+        for j in 0..q {
+            means[labels[i]][j] += x[(i, j)];
+            grand[j] += x[(i, j)];
+        }
+    }
+    for j in 0..q {
+        grand[j] /= n as f64;
+    }
+    for c in 0..k {
+        for j in 0..q {
+            means[c][j] /= counts[c].max(1) as f64;
+        }
+    }
+    let mut between = 0.0;
+    for c in 0..k {
+        let mut d = 0.0;
+        for j in 0..q {
+            d += (means[c][j] - grand[j]).powi(2);
+        }
+        between += counts[c] as f64 * d;
+    }
+    let mut within = 0.0;
+    for i in 0..n {
+        for j in 0..q {
+            within += (x[(i, j)] - means[labels[i]][j]).powi(2);
+        }
+    }
+    between / within.max(1e-12)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ard_relevance_normalised() {
+        let p = GlobalParams {
+            z: Matrix::zeros(2, 3),
+            log_ls: vec![0.0, 1.0, 3.0],
+            log_sf2: 0.0,
+            log_beta: 0.0,
+        };
+        let r = ard_relevance(&p);
+        assert!((r[0] - 1.0).abs() < 1e-12);
+        assert!(r[1] < r[0] && r[2] < r[1]);
+    }
+
+    #[test]
+    fn class_separation_orders_embeddings() {
+        // well separated clusters vs mixed labels
+        let x = Matrix::from_fn(40, 2, |i, j| {
+            if i < 20 {
+                0.0 + 0.05 * (i * 7 % 13) as f64 * if j == 0 { 1.0 } else { -1.0 }
+            } else {
+                5.0 + 0.05 * (i * 5 % 11) as f64
+            }
+        });
+        let good: Vec<usize> = (0..40).map(|i| usize::from(i >= 20)).collect();
+        let bad: Vec<usize> = (0..40).map(|i| i % 2).collect();
+        assert!(class_separation(&x, &good) > class_separation(&x, &bad) * 10.0);
+    }
+}

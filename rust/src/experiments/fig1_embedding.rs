@@ -1,0 +1,70 @@
+//! Fig. 1: the synthetic 1D-latent dataset and its lower-dimensional
+//! embedding by the GPLVM vs PCA.
+//!
+//! Paper shows the 3D sample (left), the GPLVM embedding (centre) and
+//! PCA (right). The quantitative form we print: correlation between the
+//! recovered dominant latent dimension and the true 1D latent, for both
+//! methods, plus the ARD relevances showing the GPLVM discovered the
+//! intrinsic dimensionality.
+
+use anyhow::Result;
+
+use crate::data::{pca, synthetic};
+use crate::experiments::common;
+use crate::util::cli::Args;
+use crate::util::csv::CsvWriter;
+use crate::util::stats;
+
+pub fn run(args: &Args) -> Result<()> {
+    let n = args.get_usize("n", 100)?;
+    let iters = args.get_usize("iters", 60)?;
+    let seed = args.get_usize("seed", 0)? as u64;
+    let data = synthetic::generate(n, 0.05, seed);
+
+    // --- GPLVM via the distributed coordinator (small artifact q=2) ----
+    let (mut trainer, _init) =
+        common::lvm_trainer(args, "small", &data.y, 16, 2, 2, seed)?;
+    let f0 = trainer.evaluate()?;
+    let f1 = trainer.train(iters)?;
+    let xmu = common::gathered_xmu(&trainer, 2);
+    let ard = common::ard_relevance(&trainer.params);
+
+    // dominant latent dimension: ARD relevance weighted by the empirical
+    // variance of the latent coordinates (early in training the variances
+    // reflect the switch-off before the lengthscales fully adapt)
+    let var_of = |d: usize| {
+        let col: Vec<f64> = (0..n).map(|i| xmu[(i, d)]).collect();
+        stats::std_dev(&col).powi(2)
+    };
+    let dom = if ard[0] * var_of(0) >= ard[1] * var_of(1) { 0 } else { 1 };
+    let gplvm_dim: Vec<f64> = (0..n).map(|i| xmu[(i, dom)]).collect();
+    let r_gplvm = stats::pearson(&data.latent, &gplvm_dim).abs();
+
+    // --- PCA baseline ----------------------------------------------------
+    let p = pca::pca(&data.y, 2, 60, seed ^ 1);
+    let pca_dim: Vec<f64> = (0..n).map(|i| p.scores[(i, 0)]).collect();
+    let r_pca = stats::pearson(&data.latent, &pca_dim).abs();
+
+    println!("fig1: synthetic 1D latent -> 3D observations, n={n}");
+    println!("  GPLVM bound: {f0:.2} -> {f1:.2} over {iters} iterations");
+    println!("  ARD relevances (normalised): {ard:.3?}  (dominant dim {dom})");
+    println!("  |corr(true latent, GPLVM dim{dom})| = {r_gplvm:.4}");
+    println!("  |corr(true latent, PCA pc1)|       = {r_pca:.4}");
+    println!("  paper claim: GPLVM recovers the 1D structure (non-linear map),");
+    println!("  PCA captures it only up to the linear component.");
+
+    let mut csv = CsvWriter::new(&["true_latent", "gplvm_x1", "gplvm_x2", "pca_1", "pca_2"]);
+    for i in 0..n {
+        csv.row(&[
+            data.latent[i],
+            xmu[(i, 0)],
+            xmu[(i, 1)],
+            p.scores[(i, 0)],
+            p.scores[(i, 1)],
+        ]);
+    }
+    let path = common::results_dir(args).join("fig1_embedding.csv");
+    csv.save(&path)?;
+    println!("  series -> {}", path.display());
+    Ok(())
+}

@@ -1,0 +1,125 @@
+//! Fig. 3: time per iteration when scaling the computational resources
+//! proportionally to the dataset size, with the sequential ("GPy")
+//! implementation for comparison.
+//!
+//! Ideal: constant time as (n, workers) double together. Paper's
+//! measured shape: +67% total / +35% map-only over a 60x data scale;
+//! the sequential implementation grows linearly and becomes untenable.
+
+use anyhow::Result;
+
+use crate::baselines::sequential::SequentialTrainer;
+use crate::data::synthetic;
+use crate::experiments::common::{self};
+use crate::experiments::fig2_core_scaling::measure;
+use crate::gp::GlobalParams;
+use crate::linalg::Matrix;
+use crate::runtime::ShardData;
+use crate::util::cli::Args;
+use crate::util::csv::CsvWriter;
+use crate::util::rng::Rng;
+use crate::util::stats;
+
+pub fn run(args: &Args) -> Result<()> {
+    let base_n = args.get_usize("base-n", 2000)?;
+    let iters = args.get_usize("iters", 2)?;
+    let seed = args.get_usize("seed", 0)? as u64;
+    let max_workers = args.get_usize("max-workers", 50)?;
+    // (workers, n) pairs: n scales with workers (paper: 60x range)
+    let sweep: Vec<usize> = [1usize, 2, 5, 10, 20, 50]
+        .into_iter()
+        .filter(|w| *w <= max_workers)
+        .collect();
+
+    println!("fig3: data scaled with workers, base n/worker = {base_n}");
+    println!(
+        "{:>8} {:>9} {:>16} {:>16} {:>16} {:>16}",
+        "workers", "n", "modeled par (s)", "map compute (s)", "wall (s)", "sequential (s)"
+    );
+    let mut csv = CsvWriter::new(&[
+        "workers",
+        "n",
+        "modeled_parallel_s",
+        "map_compute_s",
+        "measured_wall_s",
+        "sequential_s",
+    ]);
+    let mut first_modeled = None;
+    let mut last_modeled = None;
+    let mut first_compute = None;
+    let mut last_compute = None;
+    for &w in &sweep {
+        let n = base_n * w;
+        let (p, _) = measure(args, n, w, iters, seed)?;
+        // sequential reference on the same data size (single shard,
+        // single thread, identical numerics) — the "GPy" line
+        let seq_secs = sequential_iteration_secs(args, n, iters.min(2), seed)?;
+        println!(
+            "{:>8} {:>9} {:>16.4} {:>16.4} {:>16.4} {:>16.4}",
+            w, n, p.modeled_parallel, p.total_compute, p.measured_wall, seq_secs
+        );
+        csv.row(&[
+            w as f64,
+            n as f64,
+            p.modeled_parallel,
+            p.total_compute,
+            p.measured_wall,
+            seq_secs,
+        ]);
+        if first_modeled.is_none() {
+            first_modeled = Some(p.modeled_parallel);
+            first_compute = Some(p.total_compute / w as f64);
+        }
+        last_modeled = Some(p.modeled_parallel);
+        last_compute = Some(p.total_compute / w as f64);
+    }
+    if let (Some(f), Some(l)) = (first_modeled, last_modeled) {
+        println!(
+            "  modeled per-iteration growth over {}x data: {:+.1}%   (paper total: +67%)",
+            sweep.last().unwrap(),
+            (l / f - 1.0) * 100.0
+        );
+    }
+    if let (Some(f), Some(l)) = (first_compute, last_compute) {
+        println!(
+            "  per-worker map compute growth: {:+.1}%               (paper map-only: +35%)",
+            (l / f - 1.0) * 100.0
+        );
+    }
+    let path = common::results_dir(args).join("fig3_data_scaling.csv");
+    csv.save(&path)?;
+    println!("  series -> {}", path.display());
+    Ok(())
+}
+
+/// Mean per-iteration seconds of the sequential trainer at size n.
+fn sequential_iteration_secs(args: &Args, n: usize, iters: usize, seed: u64) -> Result<f64> {
+    let data = synthetic::generate(n, 0.05, seed);
+    let mut rng = Rng::new(seed ^ 77);
+    let xmu = Matrix::from_fn(n, 2, |i, j| {
+        if j == 0 {
+            data.latent[i]
+        } else {
+            0.1 * rng.normal()
+        }
+    });
+    let shard = ShardData {
+        xvar: Matrix::zeros(n, 2),
+        xmu,
+        y: data.y,
+        kl_weight: 0.0,
+    };
+    let mut prng = Rng::new(seed ^ 3);
+    let params = GlobalParams {
+        z: Matrix::from_fn(64, 2, |_, _| prng.range(-3.0, 3.0)),
+        log_ls: vec![0.0, 0.0],
+        log_sf2: 0.0,
+        log_beta: 1.0,
+    };
+    let manifest = common::manifest(args)?;
+    let mut t = SequentialTrainer::new(&manifest, "perf", params, shard, false, 0.0)?;
+    t.step()?; // warmup
+    t.iter_secs.clear();
+    t.train(iters)?;
+    Ok(stats::mean(&t.iter_secs))
+}

@@ -1,0 +1,76 @@
+//! Fig. 5: distribution of the load across nodes — min / mean / max
+//! worker execution time per iteration, at a small and a large worker
+//! count. The paper reports a 3.7% average gap between mean and max,
+//! i.e. an even load distribution (requirement 1 of its introduction).
+
+use anyhow::Result;
+
+use crate::coordinator::{partition, GlobalOpt, ModelKind, TrainConfig, Trainer};
+use crate::data::synthetic;
+use crate::experiments::common;
+use crate::gp::GlobalParams;
+use crate::linalg::Matrix;
+use crate::util::cli::Args;
+use crate::util::csv::CsvWriter;
+use crate::util::rng::Rng;
+
+fn run_one(args: &Args, n: usize, workers: usize, iters: usize, seed: u64) -> Result<Trainer> {
+    let data = synthetic::generate(n, 0.05, seed);
+    let mut rng = Rng::new(seed ^ 9);
+    let xmu = Matrix::from_fn(n, 2, |i, j| {
+        if j == 0 {
+            data.latent[i]
+        } else {
+            0.1 * rng.normal()
+        }
+    });
+    let shards = partition(&xmu, &Matrix::zeros(n, 2), &data.y, 0.0, workers);
+    let mut prng = Rng::new(seed ^ 5);
+    let params = GlobalParams {
+        z: Matrix::from_fn(64, 2, |_, _| prng.range(-3.0, 3.0)),
+        log_ls: vec![0.0, 0.0],
+        log_sf2: 0.0,
+        log_beta: 1.0,
+    };
+    let cfg = TrainConfig {
+        artifact: "perf".into(),
+        artifacts_dir: common::artifacts_dir(args),
+        workers,
+        model: ModelKind::Regression,
+        global_opt: GlobalOpt::Scg,
+        seed,
+        ..Default::default()
+    };
+    let mut t = Trainer::new(cfg, params, shards)?;
+    t.train(1)?; // warmup
+    t.log.iterations.clear();
+    t.train(iters)?;
+    Ok(t)
+}
+
+pub fn run(args: &Args) -> Result<()> {
+    let n = args.get_usize("n", 40_000)?;
+    let iters = args.get_usize("iters", 5)?;
+    let seed = args.get_usize("seed", 0)? as u64;
+    let small = args.get_usize("small", 5)?;
+    let large = args.get_usize("large", 20)?;
+
+    println!("fig5: per-iteration worker load distribution, n={n}");
+    let mut csv = CsvWriter::new(&["workers", "iter", "min_s", "mean_s", "max_s"]);
+    for &w in &[small, large] {
+        let t = run_one(args, n, w, iters, seed)?;
+        println!("  workers = {w}:");
+        println!("    {:>5} {:>12} {:>12} {:>12}", "iter", "min", "mean", "max");
+        for it in &t.log.iterations {
+            let (mn, mean, mx) = it.load_min_mean_max();
+            println!("    {:>5} {:>12.5} {:>12.5} {:>12.5}", it.iter, mn, mean, mx);
+            csv.row(&[w as f64, it.iter as f64, mn, mean, mx]);
+        }
+        let gap = t.log.mean_load_gap() * 100.0;
+        println!("    mean (max-mean)/mean gap: {gap:.2}%   (paper: 3.7%)");
+    }
+    let path = common::results_dir(args).join("fig5_load.csv");
+    csv.save(&path)?;
+    println!("  series -> {}", path.display());
+    Ok(())
+}

@@ -1,0 +1,93 @@
+//! Fig. 7: robustness to node failure — log marginal likelihood (bound)
+//! per iteration with per-iteration node failure frequencies of 0%, 1%
+//! and 2% on 10 nodes, averaged over repeats.
+//!
+//! The failure strategy is the paper's §5.2 choice: drop the failed
+//! node's partial terms for that iteration and optimise with the noisy
+//! gradient (SCG's finite-difference curvature makes it sensitive to
+//! this noise — the paper observes convergence to worse optima with
+//! higher failure rates; ARD parameters stay qualitatively correct).
+
+use anyhow::Result;
+
+use crate::data::oilflow;
+use crate::experiments::common;
+use crate::util::cli::Args;
+use crate::util::csv::CsvWriter;
+use crate::util::stats;
+
+pub fn run(args: &Args) -> Result<()> {
+    let n = args.get_usize("n", 500)?;
+    let iters = args.get_usize("iters", 120)?;
+    let repeats = args.get_usize("repeats", 2)?;
+    let workers = args.get_usize("workers", 10)?;
+    let seed = args.get_usize("seed", 0)? as u64;
+    let rates = [0.0, 0.01, 0.02];
+
+    let data = oilflow::generate(n, seed);
+    println!(
+        "fig7: node failure test, {workers} nodes, {iters} iterations, {repeats} repeats"
+    );
+
+    let mut curves: Vec<Vec<f64>> = Vec::new();
+    let mut finals = Vec::new();
+    let mut ards = Vec::new();
+    for &rate in &rates {
+        let mut avg = vec![0.0; iters];
+        let mut ard_last = Vec::new();
+        for rep in 0..repeats {
+            let (mut t, _) =
+                common::lvm_trainer(args, "oil", &data.y, 32, 6, workers, seed + rep as u64)?;
+            t.set_failure_rate(rate);
+            for i in 0..iters {
+                let f = t.step()?;
+                avg[i] += f / repeats as f64;
+            }
+            if rep == repeats - 1 {
+                ard_last = common::ard_relevance(&t.params);
+            }
+        }
+        let f_final = *avg.last().unwrap();
+        println!(
+            "  rate {:>4.1}%: final avg bound {:>12.2}, ARD {:?}",
+            rate * 100.0,
+            f_final,
+            ard_last
+                .iter()
+                .map(|v| (v * 1000.0).round() / 1000.0)
+                .collect::<Vec<_>>()
+        );
+        finals.push(f_final);
+        ards.push(ard_last);
+        curves.push(avg);
+    }
+
+    println!(
+        "  paper shape: 0% converges best; 1% / 2% converge to worse optima \
+         (paper: -1500 vs -5000 on oilflow); ordering reproduced: {}",
+        if finals[0] >= finals[1] && finals[1] >= finals[2] - 1e-9 {
+            "yes"
+        } else {
+            "partially (stochastic)"
+        }
+    );
+    // paper also reports the failure runs keep one dominant latent dim
+    for (rate, ard) in rates.iter().zip(&ards) {
+        let dominant = ard.iter().filter(|v| **v > 0.5).count();
+        println!(
+            "  rate {:>4.1}%: {} dominant latent dim(s)",
+            rate * 100.0,
+            dominant
+        );
+    }
+
+    let mut csv = CsvWriter::new(&["iter", "rate0", "rate1", "rate2"]);
+    for i in 0..iters {
+        csv.row(&[i as f64, curves[0][i], curves[1][i], curves[2][i]]);
+    }
+    let path = common::results_dir(args).join("fig7_failure.csv");
+    csv.save(&path)?;
+    println!("  curves -> {}", path.display());
+    let _ = stats::mean(&finals);
+    Ok(())
+}

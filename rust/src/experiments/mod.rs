@@ -1,0 +1,44 @@
+//! Experiment harness: one module per figure/table in the paper's
+//! evaluation, each regenerating the corresponding series (printed and
+//! saved as CSV under `results/`). See DESIGN.md §4 for the index and
+//! EXPERIMENTS.md for paper-vs-measured.
+
+pub mod ablations;
+pub mod common;
+pub mod fig1_embedding;
+pub mod fig2_core_scaling;
+pub mod fig3_data_scaling;
+pub mod fig4_oilflow;
+pub mod fig5_load;
+pub mod fig6_digits;
+pub mod fig7_failure;
+pub mod fig8_inducing;
+
+use anyhow::{bail, Result};
+
+use crate::util::cli::Args;
+
+/// Run one experiment by name (or `all`).
+pub fn run(name: &str, args: &Args) -> Result<()> {
+    match name {
+        "fig1" => fig1_embedding::run(args),
+        "fig2" => fig2_core_scaling::run(args),
+        "fig3" => fig3_data_scaling::run(args),
+        "fig4" => fig4_oilflow::run(args),
+        "fig5" => fig5_load::run(args),
+        "fig6" => fig6_digits::run(args),
+        "fig7" => fig7_failure::run(args),
+        "fig8" => fig8_inducing::run(args),
+        "ablations" => ablations::run(args),
+        "all" => {
+            for f in [
+                "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8",
+            ] {
+                println!("\n================ {f} ================");
+                run(f, args)?;
+            }
+            Ok(())
+        }
+        other => bail!("unknown experiment {other:?} (fig1..fig8 or all)"),
+    }
+}

@@ -1,0 +1,286 @@
+//! Native SE-ARD kernel and psi-statistics — the Rust mirror of
+//! `python/compile/kernels/ref.py`.
+//!
+//! Used by the native baselines (sequential / SVI / exact GP), the Fig-8
+//! experiment, and as a cross-check against the HLO artifact path in the
+//! integration tests. The distributed hot path does NOT go through this
+//! code — workers run the AOT Pallas kernel.
+
+use crate::linalg::Matrix;
+
+use super::params::GlobalParams;
+use super::stats::Stats;
+
+/// k(X1, X2) for the SE-ARD kernel, [n1 x n2].
+pub fn seard(x1: &Matrix, x2: &Matrix, p: &GlobalParams) -> Matrix {
+    let q = p.q();
+    assert_eq!(x1.cols(), q);
+    assert_eq!(x2.cols(), q);
+    let ls2: Vec<f64> = p.log_ls.iter().map(|l| (2.0 * l).exp()).collect();
+    let sf2 = p.sf2();
+    Matrix::from_fn(x1.rows(), x2.rows(), |i, j| {
+        let mut s = 0.0;
+        for (k, &l2) in ls2.iter().enumerate() {
+            let d = x1[(i, k)] - x2[(j, k)];
+            s += d * d / l2;
+        }
+        sf2 * (-0.5 * s).exp()
+    })
+}
+
+/// Kmm = k(Z, Z) + jitter I.
+pub fn kmm(p: &GlobalParams, jitter: f64) -> Matrix {
+    seard(&p.z, &p.z, p).add_diag(jitter)
+}
+
+/// Psi1[i, j] = <k(x_i, z_j)>_{N(mu_i, diag(s_i))}, [B x m].
+pub fn psi1(p: &GlobalParams, xmu: &Matrix, xvar: &Matrix) -> Matrix {
+    let (bq, q) = (xmu.rows(), p.q());
+    let m = p.m();
+    let ls2: Vec<f64> = p.log_ls.iter().map(|l| (2.0 * l).exp()).collect();
+    let sf2 = p.sf2();
+    let mut out = Matrix::zeros(bq, m);
+    for i in 0..bq {
+        let mut log_scale = 0.0;
+        for k in 0..q {
+            log_scale -= 0.5 * (xvar[(i, k)] / ls2[k]).ln_1p();
+        }
+        for j in 0..m {
+            let mut quad = 0.0;
+            for k in 0..q {
+                let d = xmu[(i, k)] - p.z[(j, k)];
+                quad += d * d / (ls2[k] + xvar[(i, k)]);
+            }
+            out[(i, j)] = sf2 * (log_scale - 0.5 * quad).exp();
+        }
+    }
+    out
+}
+
+/// Psi2_i[j, l] for a single point i, [m x m].
+pub fn psi2_point(p: &GlobalParams, xmu_i: &[f64], xvar_i: &[f64]) -> Matrix {
+    let (m, q) = (p.m(), p.q());
+    let ls2: Vec<f64> = p.log_ls.iter().map(|l| (2.0 * l).exp()).collect();
+    let sf2 = p.sf2();
+    let mut log_scale = 0.0;
+    for k in 0..q {
+        log_scale -= 0.5 * (2.0 * xvar_i[k] / ls2[k]).ln_1p();
+    }
+    Matrix::from_fn(m, m, |j, l| {
+        let mut e = log_scale;
+        for k in 0..q {
+            let dz = p.z[(j, k)] - p.z[(l, k)];
+            let zbar = 0.5 * (p.z[(j, k)] + p.z[(l, k)]);
+            let dm = xmu_i[k] - zbar;
+            e -= dz * dz / (4.0 * ls2[k]) + dm * dm / (ls2[k] + 2.0 * xvar_i[k]);
+        }
+        sf2 * sf2 * e.exp()
+    })
+}
+
+/// Full shard statistics (native path). `kl_weight` = 0 selects the
+/// regression model, 1 the LVM; matches `ref.shard_stats_ref`.
+pub fn shard_stats(
+    p: &GlobalParams,
+    xmu: &Matrix,
+    xvar: &Matrix,
+    y: &Matrix,
+    mask: &[f64],
+    kl_weight: f64,
+) -> Stats {
+    let b = xmu.rows();
+    assert_eq!(mask.len(), b);
+    let m = p.m();
+    let mut st = Stats::zeros(m, y.cols());
+    let p1 = psi1(p, xmu, xvar);
+    for i in 0..b {
+        let w = mask[i];
+        if w == 0.0 {
+            continue;
+        }
+        st.n += w;
+        let yi = y.row(i);
+        st.a += w * yi.iter().map(|v| v * v).sum::<f64>();
+        // C += w * psi1_i^T y_i
+        for j in 0..m {
+            let pj = w * p1[(i, j)];
+            for (cjd, &yv) in st.c.row_mut(j).iter_mut().zip(yi) {
+                *cjd += pj * yv;
+            }
+        }
+        st.d.axpy(w, &psi2_point(p, xmu.row(i), xvar.row(i)));
+        if kl_weight > 0.0 {
+            let mut kli = 0.0;
+            for k in 0..p.q() {
+                let (mu, s) = (xmu[(i, k)], xvar[(i, k)]);
+                let log_s = if s > 0.0 { s.ln() } else { 0.0 };
+                kli += mu * mu + s - log_s - 1.0;
+            }
+            st.kl += kl_weight * w * 0.5 * kli;
+        }
+    }
+    st.psi0 = p.sf2() * st.n;
+    st
+}
+
+/// Pullback of an adjoint A = dF/dKmm onto the kernel parameters
+/// (the central node's direct term, paper §3.2 step 3) — the native
+/// mirror of the `kmm_grads` artifact:
+///
+/// ```text
+/// dF/dZ[j,q]    = sum_l (A[j,l] + A[l,j]) K[j,l] (z_lq - z_jq)/ls_q^2
+/// dF/dlog_ls_q  = sum_{j,l} A[j,l] K[j,l] (z_jq - z_lq)^2 / ls_q^2
+/// dF/dlog_sf2   = <A, K>
+/// ```
+pub fn kmm_vjp(p: &GlobalParams, adj: &Matrix) -> super::params::GlobalGrads {
+    let (m, q) = (p.m(), p.q());
+    let ls2: Vec<f64> = p.log_ls.iter().map(|l| (2.0 * l).exp()).collect();
+    let k = seard(&p.z, &p.z, p);
+    let mut g = super::params::GlobalGrads::zeros(m, q);
+    for j in 0..m {
+        for l in 0..m {
+            let ak = adj[(j, l)] * k[(j, l)];
+            g.d_log_sf2 += ak;
+            for t in 0..q {
+                let dz = p.z[(j, t)] - p.z[(l, t)];
+                g.d_log_ls[t] += ak * dz * dz / ls2[t];
+                // d/dZ[j,t] picks up both A[j,l] and A[l,j] terms; do the
+                // A[j,l] half here, the transpose half lands when the loop
+                // visits (l, j).
+                g.d_z[(j, t)] += ak * (-dz / ls2[t]);
+                g.d_z[(l, t)] += ak * (dz / ls2[t]);
+            }
+        }
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn params(m: usize, q: usize, seed: u64) -> GlobalParams {
+        let mut rng = Rng::new(seed);
+        GlobalParams {
+            z: Matrix::from_fn(m, q, |_, _| rng.normal()),
+            log_ls: (0..q).map(|_| 0.3 * rng.normal()).collect(),
+            log_sf2: 0.2,
+            log_beta: 1.0,
+        }
+    }
+
+    #[test]
+    fn seard_diag_is_sf2() {
+        let p = params(4, 2, 0);
+        let k = seard(&p.z, &p.z, &p);
+        for i in 0..4 {
+            assert!((k[(i, i)] - p.sf2()).abs() < 1e-14);
+        }
+    }
+
+    #[test]
+    fn seard_symmetric_and_bounded() {
+        let p = params(5, 3, 1);
+        let k = seard(&p.z, &p.z, &p);
+        assert!(k.max_abs_diff(&k.transpose()) < 1e-15);
+        for v in k.data() {
+            assert!(*v > 0.0 && *v <= p.sf2() + 1e-14);
+        }
+    }
+
+    #[test]
+    fn psi1_reduces_to_kernel_at_zero_variance() {
+        let p = params(4, 2, 2);
+        let mut rng = Rng::new(3);
+        let xmu = Matrix::from_fn(6, 2, |_, _| rng.normal());
+        let xvar = Matrix::zeros(6, 2);
+        let p1 = psi1(&p, &xmu, &xvar);
+        let knm = seard(&xmu, &p.z, &p);
+        assert!(p1.max_abs_diff(&knm) < 1e-13);
+    }
+
+    #[test]
+    fn psi2_reduces_to_outer_product_at_zero_variance() {
+        let p = params(3, 2, 4);
+        let mut rng = Rng::new(5);
+        let x: Vec<f64> = vec![rng.normal(), rng.normal()];
+        let xm = Matrix::from_vec(1, 2, x.clone());
+        let k = seard(&xm, &p.z, &p); // [1, m]
+        let p2 = psi2_point(&p, &x, &[0.0, 0.0]);
+        for j in 0..3 {
+            for l in 0..3 {
+                assert!((p2[(j, l)] - k[(0, j)] * k[(0, l)]).abs() < 1e-13);
+            }
+        }
+    }
+
+    #[test]
+    fn kmm_vjp_matches_finite_difference() {
+        let p = params(4, 3, 10);
+        let mut rng = Rng::new(11);
+        let adj = Matrix::from_fn(4, 4, |_, _| rng.normal());
+        let g = kmm_vjp(&p, &adj);
+        let f_of = |p: &GlobalParams| adj.dot(&seard(&p.z, &p.z, p));
+        let eps = 1e-6;
+        // Z entries
+        for &(j, t) in &[(0, 0), (2, 1), (3, 2)] {
+            let mut pp = p.clone();
+            pp.z[(j, t)] += eps;
+            let mut pm = p.clone();
+            pm.z[(j, t)] -= eps;
+            let fd = (f_of(&pp) - f_of(&pm)) / (2.0 * eps);
+            assert!(
+                (g.d_z[(j, t)] - fd).abs() < 1e-6 * (1.0 + fd.abs()),
+                "dZ[{j},{t}] {} vs {}",
+                g.d_z[(j, t)],
+                fd
+            );
+        }
+        // log lengthscales
+        for t in 0..3 {
+            let mut pp = p.clone();
+            pp.log_ls[t] += eps;
+            let mut pm = p.clone();
+            pm.log_ls[t] -= eps;
+            let fd = (f_of(&pp) - f_of(&pm)) / (2.0 * eps);
+            assert!((g.d_log_ls[t] - fd).abs() < 1e-6 * (1.0 + fd.abs()));
+        }
+        // log sf2
+        let mut pp = p.clone();
+        pp.log_sf2 += eps;
+        let mut pm = p.clone();
+        pm.log_sf2 -= eps;
+        let fd = (f_of(&pp) - f_of(&pm)) / (2.0 * eps);
+        assert!((g.d_log_sf2 - fd).abs() < 1e-6 * (1.0 + fd.abs()));
+    }
+
+    #[test]
+    fn stats_additive_over_split() {
+        let p = params(4, 2, 6);
+        let mut rng = Rng::new(7);
+        let b = 10;
+        let xmu = Matrix::from_fn(b, 2, |_, _| rng.normal());
+        let xvar = Matrix::from_fn(b, 2, |_, _| rng.uniform() + 0.05);
+        let y = Matrix::from_fn(b, 3, |_, _| rng.normal());
+        let mask = vec![1.0; b];
+        let whole = shard_stats(&p, &xmu, &xvar, &y, &mask, 1.0);
+        let take = |r0: usize, r1: usize| {
+            let rows = r1 - r0;
+            (
+                Matrix::from_fn(rows, 2, |i, j| xmu[(r0 + i, j)]),
+                Matrix::from_fn(rows, 2, |i, j| xvar[(r0 + i, j)]),
+                Matrix::from_fn(rows, 3, |i, j| y[(r0 + i, j)]),
+            )
+        };
+        let (x1, v1, y1) = take(0, 4);
+        let (x2, v2, y2) = take(4, 10);
+        let mut acc = shard_stats(&p, &x1, &v1, &y1, &vec![1.0; 4], 1.0);
+        acc.accumulate(&shard_stats(&p, &x2, &v2, &y2, &vec![1.0; 6], 1.0));
+        assert!((acc.a - whole.a).abs() < 1e-12);
+        assert!((acc.psi0 - whole.psi0).abs() < 1e-12);
+        assert!((acc.kl - whole.kl).abs() < 1e-12);
+        assert!(acc.c.max_abs_diff(&whole.c) < 1e-12);
+        assert!(acc.d.max_abs_diff(&whole.d) < 1e-12);
+    }
+}

@@ -1,0 +1,19 @@
+//! Native GP core: the constant-size global step of the paper's
+//! algorithm, plus native mirrors of the kernel statistics used by the
+//! baselines and tests.
+//!
+//! The split of labour (DESIGN.md §2): worker nodes execute the AOT
+//! Pallas/HLO artifacts for the O(n m^2 q) statistics and chain-rule
+//! gradients; this module owns the O(m^3) algebra the central node runs —
+//! assembling the collapsed bound (eq. 3.3) from accumulated statistics
+//! and producing the adjoints that are broadcast back in map step 2.
+
+pub mod bound;
+pub mod exact;
+pub mod kernel;
+pub mod params;
+pub mod stats;
+
+pub use bound::{assemble_bound, Adjoints, BoundValue, PosteriorWeights};
+pub use params::GlobalParams;
+pub use stats::Stats;

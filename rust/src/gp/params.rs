@@ -1,0 +1,144 @@
+//! Global parameter set G = (Z, log lengthscales, log signal variance,
+//! log noise precision) with flattening for the optimiser.
+
+use crate::linalg::Matrix;
+
+/// The global parameters the central node optimises (paper §3.2).
+#[derive(Debug, Clone)]
+pub struct GlobalParams {
+    /// Inducing-point locations, m x q.
+    pub z: Matrix,
+    /// Log ARD lengthscales, length q.
+    pub log_ls: Vec<f64>,
+    /// Log signal variance log sigma^2.
+    pub log_sf2: f64,
+    /// Log noise precision log beta.
+    pub log_beta: f64,
+}
+
+impl GlobalParams {
+    pub fn m(&self) -> usize {
+        self.z.rows()
+    }
+
+    pub fn q(&self) -> usize {
+        self.z.cols()
+    }
+
+    pub fn beta(&self) -> f64 {
+        self.log_beta.exp()
+    }
+
+    pub fn sf2(&self) -> f64 {
+        self.log_sf2.exp()
+    }
+
+    /// ARD lengthscales (not squared).
+    pub fn lengthscales(&self) -> Vec<f64> {
+        self.log_ls.iter().map(|l| l.exp()).collect()
+    }
+
+    /// Number of scalar degrees of freedom.
+    pub fn dof(&self) -> usize {
+        self.m() * self.q() + self.q() + 2
+    }
+
+    /// Flatten to a parameter vector: [Z (row-major), log_ls, log_sf2, log_beta].
+    pub fn flatten(&self) -> Vec<f64> {
+        let mut v = Vec::with_capacity(self.dof());
+        v.extend_from_slice(self.z.data());
+        v.extend_from_slice(&self.log_ls);
+        v.push(self.log_sf2);
+        v.push(self.log_beta);
+        v
+    }
+
+    /// Inverse of [`flatten`]; shape is taken from `self`.
+    pub fn unflatten(&self, v: &[f64]) -> GlobalParams {
+        assert_eq!(v.len(), self.dof());
+        let (m, q) = (self.m(), self.q());
+        GlobalParams {
+            z: Matrix::from_vec(m, q, v[..m * q].to_vec()),
+            log_ls: v[m * q..m * q + q].to_vec(),
+            log_sf2: v[m * q + q],
+            log_beta: v[m * q + q + 1],
+        }
+    }
+}
+
+/// Gradient w.r.t. the global parameters, same layout as [`GlobalParams`].
+#[derive(Debug, Clone)]
+pub struct GlobalGrads {
+    pub d_z: Matrix,
+    pub d_log_ls: Vec<f64>,
+    pub d_log_sf2: f64,
+    pub d_log_beta: f64,
+}
+
+impl GlobalGrads {
+    pub fn zeros(m: usize, q: usize) -> GlobalGrads {
+        GlobalGrads {
+            d_z: Matrix::zeros(m, q),
+            d_log_ls: vec![0.0; q],
+            d_log_sf2: 0.0,
+            d_log_beta: 0.0,
+        }
+    }
+
+    /// Accumulate another partial gradient (the reduce of map step 2).
+    pub fn accumulate(&mut self, other: &GlobalGrads) {
+        self.d_z.axpy(1.0, &other.d_z);
+        for (a, b) in self.d_log_ls.iter_mut().zip(&other.d_log_ls) {
+            *a += b;
+        }
+        self.d_log_sf2 += other.d_log_sf2;
+        self.d_log_beta += other.d_log_beta;
+    }
+
+    pub fn flatten(&self) -> Vec<f64> {
+        let mut v = Vec::new();
+        v.extend_from_slice(self.d_z.data());
+        v.extend_from_slice(&self.d_log_ls);
+        v.push(self.d_log_sf2);
+        v.push(self.d_log_beta);
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> GlobalParams {
+        GlobalParams {
+            z: Matrix::from_fn(3, 2, |i, j| (i * 2 + j) as f64),
+            log_ls: vec![0.1, -0.2],
+            log_sf2: 0.3,
+            log_beta: 1.2,
+        }
+    }
+
+    #[test]
+    fn flatten_roundtrip() {
+        let p = sample();
+        let v = p.flatten();
+        assert_eq!(v.len(), p.dof());
+        let p2 = p.unflatten(&v);
+        assert_eq!(p2.z.data(), p.z.data());
+        assert_eq!(p2.log_ls, p.log_ls);
+        assert_eq!(p2.log_sf2, p.log_sf2);
+        assert_eq!(p2.log_beta, p.log_beta);
+    }
+
+    #[test]
+    fn grads_accumulate() {
+        let mut g = GlobalGrads::zeros(2, 2);
+        let mut h = GlobalGrads::zeros(2, 2);
+        h.d_log_sf2 = 1.5;
+        h.d_z[(0, 1)] = 2.0;
+        g.accumulate(&h);
+        g.accumulate(&h);
+        assert_eq!(g.d_log_sf2, 3.0);
+        assert_eq!(g.d_z[(0, 1)], 4.0);
+    }
+}

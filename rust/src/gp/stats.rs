@@ -1,0 +1,84 @@
+//! The sufficient statistics of the re-parametrised bound (paper §3.1)
+//! and their accumulation — the constant-size reduce messages.
+
+use crate::linalg::Matrix;
+
+/// Partial (or accumulated) statistics:
+///
+/// ```text
+/// a    = sum_i |Y_i|^2          psi0 = sum_i <k(x_i, x_i)>
+/// c    = Psi1^T Y  (m x d)      d    = Psi2 (m x m)
+/// kl   = sum_i KL(q(X_i)||p)    n    = number of live points
+/// ```
+///
+/// Statistics are additive over shards — the invariant the whole
+/// Map-Reduce inference rests on (tested in `properties.rs`).
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub a: f64,
+    pub psi0: f64,
+    pub c: Matrix,
+    pub d: Matrix,
+    pub kl: f64,
+    pub n: f64,
+}
+
+impl Stats {
+    pub fn zeros(m: usize, dout: usize) -> Stats {
+        Stats {
+            a: 0.0,
+            psi0: 0.0,
+            c: Matrix::zeros(m, dout),
+            d: Matrix::zeros(m, m),
+            kl: 0.0,
+            n: 0.0,
+        }
+    }
+
+    /// The reduce operation: element-wise sum.
+    pub fn accumulate(&mut self, other: &Stats) {
+        self.a += other.a;
+        self.psi0 += other.psi0;
+        self.c.axpy(1.0, &other.c);
+        self.d.axpy(1.0, &other.d);
+        self.kl += other.kl;
+        self.n += other.n;
+    }
+
+    /// Size of the reduce message in scalars — constant in the data size
+    /// (requirement 3 in the paper's introduction).
+    pub fn message_scalars(&self) -> usize {
+        3 + 1 + self.c.rows() * self.c.cols() + self.d.rows() * self.d.cols()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulate_is_elementwise_sum() {
+        let mut s = Stats::zeros(2, 3);
+        let mut t = Stats::zeros(2, 3);
+        t.a = 1.0;
+        t.psi0 = 2.0;
+        t.kl = 3.0;
+        t.n = 4.0;
+        t.c[(1, 2)] = 5.0;
+        t.d[(0, 1)] = 6.0;
+        s.accumulate(&t);
+        s.accumulate(&t);
+        assert_eq!(s.a, 2.0);
+        assert_eq!(s.psi0, 4.0);
+        assert_eq!(s.kl, 6.0);
+        assert_eq!(s.n, 8.0);
+        assert_eq!(s.c[(1, 2)], 10.0);
+        assert_eq!(s.d[(0, 1)], 12.0);
+    }
+
+    #[test]
+    fn message_size_independent_of_data() {
+        let s = Stats::zeros(8, 3);
+        assert_eq!(s.message_scalars(), 3 + 1 + 24 + 64);
+    }
+}

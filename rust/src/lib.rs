@@ -1,0 +1,34 @@
+//! # GParML-RS
+//!
+//! Distributed variational inference for sparse Gaussian process regression
+//! and the Bayesian GP latent variable model (GPLVM), reproducing
+//! *Gal, van der Wilk & Rasmussen (2014)* as a three-layer
+//! Rust + JAX + Pallas system:
+//!
+//! * **Layer 3** (this crate): the paper's contribution — a leader/worker
+//!   Map-Reduce coordinator with distributed scaled-conjugate-gradient
+//!   optimisation, constant-size global messages, load accounting and
+//!   node-failure tolerance ([`coordinator`], [`mapreduce`], [`optim`]).
+//! * **Layer 2**: per-shard statistic/gradient graphs authored in JAX,
+//!   AOT-lowered to HLO text at build time (`python/compile/`), executed
+//!   here via PJRT ([`runtime`]).
+//! * **Layer 1**: the fused psi-statistics Pallas kernel inside the
+//!   Layer-2 graphs (`python/compile/kernels/psi_stats.py`).
+//!
+//! The native [`gp`] module owns the constant-size global step (the
+//! collapsed bound of eq. 3.3 and its hand-derived adjoints) plus a full
+//! native fallback used by the [`baselines`]. See `DESIGN.md` for the
+//! system inventory and the experiment index.
+
+pub mod baselines;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod gp;
+pub mod linalg;
+pub mod mapreduce;
+pub mod optim;
+pub mod runtime;
+pub mod telemetry;
+pub mod testing;
+pub mod util;

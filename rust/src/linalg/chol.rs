@@ -1,0 +1,217 @@
+//! Cholesky factorisation with jitter escalation, triangular solves,
+//! log-determinants and SPD inverses — the O(m^3) toolbox of the
+//! central node's global step.
+
+use anyhow::{bail, Result};
+
+use super::Matrix;
+
+/// Lower-triangular Cholesky factor of an SPD matrix.
+pub struct Cholesky {
+    l: Matrix,
+    /// jitter that had to be added to the diagonal for success (0 if none).
+    pub jitter_used: f64,
+}
+
+impl Cholesky {
+    /// Factor `a` (symmetric positive definite). Fails if not SPD.
+    pub fn new(a: &Matrix) -> Result<Cholesky> {
+        match Self::factor(a) {
+            Some(l) => Ok(Cholesky { l, jitter_used: 0.0 }),
+            None => bail!("matrix is not positive definite"),
+        }
+    }
+
+    /// Factor with escalating diagonal jitter (the standard GP trick:
+    /// start at `base` * mean-diagonal and multiply by 10 up to `tries`
+    /// times). Mirrors what GPy/GParML do for nearly singular Kmm.
+    pub fn new_with_jitter(a: &Matrix, base: f64, tries: usize) -> Result<Cholesky> {
+        if let Some(l) = Self::factor(a) {
+            return Ok(Cholesky { l, jitter_used: 0.0 });
+        }
+        let scale = a.trace() / a.rows() as f64;
+        let mut jitter = base * scale.max(1e-300);
+        for _ in 0..tries {
+            if let Some(l) = Self::factor(&a.add_diag(jitter)) {
+                return Ok(Cholesky { l, jitter_used: jitter });
+            }
+            jitter *= 10.0;
+        }
+        bail!("cholesky failed even with jitter {jitter:e}")
+    }
+
+    fn factor(a: &Matrix) -> Option<Matrix> {
+        let n = a.rows();
+        assert_eq!(n, a.cols(), "cholesky requires square input");
+        let mut l = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                // s = a[i][j] - sum_k l[i][k] l[j][k]
+                let mut s = a[(i, j)];
+                let (li, lj) = (l.row(i), l.row(j));
+                for k in 0..j {
+                    s -= li[k] * lj[k];
+                }
+                if i == j {
+                    if s <= 0.0 || !s.is_finite() {
+                        return None;
+                    }
+                    l[(i, i)] = s.sqrt();
+                } else {
+                    l[(i, j)] = s / l[(j, j)];
+                }
+            }
+        }
+        Some(l)
+    }
+
+    pub fn l(&self) -> &Matrix {
+        &self.l
+    }
+
+    pub fn dim(&self) -> usize {
+        self.l.rows()
+    }
+
+    /// log |A| = 2 sum_i log L_ii.
+    pub fn log_det(&self) -> f64 {
+        (0..self.dim()).map(|i| self.l[(i, i)].ln()).sum::<f64>() * 2.0
+    }
+
+    /// Solve L x = b (forward substitution) for each column of b.
+    pub fn solve_lower(&self, b: &Matrix) -> Matrix {
+        let n = self.dim();
+        assert_eq!(b.rows(), n);
+        let mut x = b.clone();
+        for i in 0..n {
+            for k in 0..i {
+                let lik = self.l[(i, k)];
+                if lik == 0.0 {
+                    continue;
+                }
+                // x[i] -= l[i][k] * x[k]  (whole row)
+                let (head, tail) = x.data_mut().split_at_mut(i * b.cols());
+                let xk = &head[k * b.cols()..(k + 1) * b.cols()];
+                let xi = &mut tail[..b.cols()];
+                for (a, &c) in xi.iter_mut().zip(xk) {
+                    *a -= lik * c;
+                }
+            }
+            let d = self.l[(i, i)];
+            for v in x.row_mut(i) {
+                *v /= d;
+            }
+        }
+        x
+    }
+
+    /// Solve L^T x = b (back substitution) for each column of b.
+    pub fn solve_upper(&self, b: &Matrix) -> Matrix {
+        let n = self.dim();
+        assert_eq!(b.rows(), n);
+        let mut x = b.clone();
+        for i in (0..n).rev() {
+            for k in (i + 1)..n {
+                let lki = self.l[(k, i)];
+                if lki == 0.0 {
+                    continue;
+                }
+                let (head, tail) = x.data_mut().split_at_mut(k * b.cols());
+                let xi = &mut head[i * b.cols()..(i + 1) * b.cols()];
+                let xk = &tail[..b.cols()];
+                for (a, &c) in xi.iter_mut().zip(xk) {
+                    *a -= lki * c;
+                }
+            }
+            let d = self.l[(i, i)];
+            for v in x.row_mut(i) {
+                *v /= d;
+            }
+        }
+        x
+    }
+
+    /// Solve A x = b via the factorisation.
+    pub fn solve(&self, b: &Matrix) -> Matrix {
+        self.solve_upper(&self.solve_lower(b))
+    }
+
+    /// A^{-1} (dense).
+    pub fn inverse(&self) -> Matrix {
+        self.solve(&Matrix::eye(self.dim()))
+    }
+
+    /// tr(A^{-1} B).
+    pub fn trace_solve(&self, b: &Matrix) -> f64 {
+        self.solve(b).trace()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_spd(n: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        let g = Matrix::from_fn(n, n + 2, |_, _| rng.normal());
+        g.matmul_t(&g).add_diag(0.5)
+    }
+
+    #[test]
+    fn reconstructs_matrix() {
+        let a = random_spd(8, 0);
+        let ch = Cholesky::new(&a).unwrap();
+        let rec = ch.l().matmul_t(ch.l());
+        assert!(rec.max_abs_diff(&a) < 1e-10);
+    }
+
+    #[test]
+    fn solve_matches_direct() {
+        let a = random_spd(6, 1);
+        let mut rng = Rng::new(2);
+        let b = Matrix::from_fn(6, 3, |_, _| rng.normal());
+        let ch = Cholesky::new(&a).unwrap();
+        let x = ch.solve(&b);
+        assert!(a.matmul(&x).max_abs_diff(&b) < 1e-10);
+    }
+
+    #[test]
+    fn log_det_matches_2x2() {
+        let a = Matrix::from_vec(2, 2, vec![4.0, 1.0, 1.0, 3.0]);
+        let ch = Cholesky::new(&a).unwrap();
+        assert!((ch.log_det() - (11.0_f64).ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn inverse_is_inverse() {
+        let a = random_spd(5, 3);
+        let inv = Cholesky::new(&a).unwrap().inverse();
+        assert!(a.matmul(&inv).max_abs_diff(&Matrix::eye(5)) < 1e-10);
+    }
+
+    #[test]
+    fn rejects_indefinite() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 2.0, 1.0]); // eigvals 3, -1
+        assert!(Cholesky::new(&a).is_err());
+    }
+
+    #[test]
+    fn jitter_escalation_recovers_singular() {
+        // rank-deficient PSD matrix
+        let g = Matrix::from_vec(3, 1, vec![1.0, 2.0, 3.0]);
+        let a = g.matmul_t(&g);
+        assert!(Cholesky::new(&a).is_err());
+        let ch = Cholesky::new_with_jitter(&a, 1e-10, 12).unwrap();
+        assert!(ch.jitter_used > 0.0);
+    }
+
+    #[test]
+    fn trace_solve_matches_explicit() {
+        let a = random_spd(4, 5);
+        let b = random_spd(4, 6);
+        let ch = Cholesky::new(&a).unwrap();
+        let explicit = ch.inverse().matmul(&b).trace();
+        assert!((ch.trace_solve(&b) - explicit).abs() < 1e-10);
+    }
+}

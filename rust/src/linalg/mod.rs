@@ -1,0 +1,13 @@
+//! Dense f64 linear algebra for the constant-size global step and the
+//! native baselines.
+//!
+//! The global step of the paper's algorithm is O(m^3) in the number of
+//! inducing points (m ~ 10..200), so a compact, cache-friendly
+//! implementation is ample: the heavy O(n m^2 q) work lives in the AOT
+//! Pallas/HLO artifacts executed by the workers.
+
+mod chol;
+mod matrix;
+
+pub use chol::Cholesky;
+pub use matrix::Matrix;

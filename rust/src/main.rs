@@ -1,0 +1,144 @@
+//! `gparml` — distributed variational inference for sparse GPs and the
+//! GPLVM (Gal, van der Wilk & Rasmussen, 2014).
+//!
+//! ```text
+//! gparml experiment <fig1..fig8|all> [--n N] [--iters I] [--workers W] ...
+//! gparml train [--data synthetic|oilflow|digits] [--model reg|lvm] ...
+//! gparml info                      # artifact manifest summary
+//! ```
+
+use anyhow::{bail, Context, Result};
+
+use gparml::coordinator::{partition, GlobalOpt, ModelKind, TrainConfig, Trainer};
+use gparml::data::{digits, oilflow, synthetic};
+use gparml::experiments::{self, common};
+use gparml::linalg::Matrix;
+use gparml::runtime::Manifest;
+use gparml::util::cli::Args;
+use gparml::util::rng::Rng;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("experiment") => {
+            let name = args
+                .positional
+                .get(1)
+                .context("usage: gparml experiment <fig1..fig8|all>")?;
+            experiments::run(name, &args)
+        }
+        Some("train") => train(&args),
+        Some("info") => info(&args),
+        _ => {
+            eprintln!(
+                "usage: gparml <experiment|train|info> [flags]\n\
+                 experiments: fig1 fig2 fig3 fig4 fig5 fig6 fig7 fig8 all\n\
+                 common flags: --n --iters --workers --seed --out DIR --artifacts DIR"
+            );
+            bail!("no command given")
+        }
+    }
+}
+
+fn info(args: &Args) -> Result<()> {
+    let man = Manifest::load(&common::artifacts_dir(args))?;
+    println!("artifacts in {} (dtype {}):", man.dir.display(), man.dtype);
+    for (name, cfg) in &man.configs {
+        println!(
+            "  {name:>8}: m={:<4} q={:<3} d={:<4} B={:<5} block_n={:<4} entries={}",
+            cfg.m,
+            cfg.q,
+            cfg.d,
+            cfg.cap,
+            cfg.block_n,
+            cfg.entries.len()
+        );
+    }
+    Ok(())
+}
+
+fn train(args: &Args) -> Result<()> {
+    let dataset = args.get_str("data", "synthetic");
+    let iters = args.get_usize("iters", 30)?;
+    let workers = args.get_usize("workers", 4)?;
+    let seed = args.get_usize("seed", 0)? as u64;
+    let model = match args.get_str("model", "lvm") {
+        "reg" | "regression" => ModelKind::Regression,
+        _ => ModelKind::Lvm,
+    };
+
+    match dataset {
+        "synthetic" => {
+            let n = args.get_usize("n", 2000)?;
+            let data = synthetic::generate(n, 0.05, seed);
+            if model == ModelKind::Lvm {
+                let (mut t, _) = common::lvm_trainer(args, "small", &data.y, 16, 2, workers, seed)?;
+                run_loop(&mut t, iters)
+            } else {
+                let mut rng = Rng::new(seed);
+                let xmu = Matrix::from_fn(n, 2, |i, j| {
+                    if j == 0 {
+                        data.latent[i]
+                    } else {
+                        0.1 * rng.normal()
+                    }
+                });
+                let shards = partition(&xmu, &Matrix::zeros(n, 2), &data.y, 0.0, workers);
+                let mut prng = Rng::new(seed ^ 1);
+                let params = gparml::gp::GlobalParams {
+                    z: Matrix::from_fn(16, 2, |_, _| prng.range(-3.0, 3.0)),
+                    log_ls: vec![0.0, 0.0],
+                    log_sf2: 0.0,
+                    log_beta: 1.0,
+                };
+                let cfg = TrainConfig {
+                    artifact: "small".into(),
+                    artifacts_dir: common::artifacts_dir(args),
+                    workers,
+                    model,
+                    global_opt: GlobalOpt::Scg,
+                    seed,
+                    ..Default::default()
+                };
+                let mut t = Trainer::new(cfg, params, shards)?;
+                run_loop(&mut t, iters)
+            }
+        }
+        "oilflow" => {
+            let n = args.get_usize("n", 600)?;
+            let data = oilflow::generate(n, seed);
+            let (mut t, _) = common::lvm_trainer(args, "oil", &data.y, 32, 6, workers, seed)?;
+            run_loop(&mut t, iters)
+        }
+        "digits" => {
+            let n = args.get_usize("n", 300)?;
+            let data = digits::generate(n, 0.02, seed);
+            let (mut t, _) = common::lvm_trainer(args, "digits", &data.y, 48, 8, workers, seed)?;
+            run_loop(&mut t, iters)
+        }
+        other => bail!("unknown dataset {other:?} (synthetic|oilflow|digits)"),
+    }
+}
+
+fn run_loop(t: &mut Trainer, iters: usize) -> Result<()> {
+    println!("training: {} workers, {} iterations", t.workers(), iters);
+    for i in 0..iters {
+        let f = t.step()?;
+        if i % 5 == 0 || i == iters - 1 {
+            let it = t.log.iterations.last().unwrap();
+            println!(
+                "iter {i:>4}: F = {f:>14.3}  modeled {:.4}s  compute {:.4}s  failed {:?}",
+                it.modeled_parallel_secs(),
+                it.total_compute_secs(),
+                it.failed_workers
+            );
+        }
+    }
+    println!(
+        "done. startup {:.2}s, mean iteration (modeled parallel) {:.4}s, load gap {:.2}%",
+        t.log.startup_secs,
+        t.log.mean_iteration_modeled_secs(),
+        t.log.mean_load_gap() * 100.0
+    );
+    Ok(())
+}

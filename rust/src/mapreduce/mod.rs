@@ -1,0 +1,267 @@
+//! A small typed Map-Reduce runtime over OS threads — the substrate the
+//! paper's inference runs on (Dean & Ghemawat-style, scoped to one box,
+//! matching the original GParML multicore setting).
+//!
+//! Each worker thread owns non-`Send` state `W` (for us: a PJRT client,
+//! compiled executables and the data shard), built *on* the thread by a
+//! factory. A map round broadcasts a closure to every worker and collects
+//! `(worker_id, result, compute_seconds)`; per-worker timings feed the
+//! load-distribution telemetry (paper Fig. 5) and the simulated-cluster
+//! clock (DESIGN.md §5: this container has 1 core, so parallel wall-clock
+//! is *modeled* as `max_k t_k` + central time, exactly the paper's
+//! "time spent in the computations alone" accounting).
+
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Result};
+
+type Job<W> = Box<dyn FnOnce(&mut W) + Send>;
+
+/// One result of a map round.
+#[derive(Debug, Clone)]
+pub struct MapResult<R> {
+    pub worker: usize,
+    pub value: R,
+    /// Thread-CPU seconds the worker spent inside the map function
+    /// (robust to time-slicing when workers outnumber physical cores).
+    pub secs: f64,
+}
+
+/// A pool of worker threads, each owning a `W`.
+pub struct Pool<W> {
+    senders: Vec<Sender<Job<W>>>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl<W: 'static> Pool<W> {
+    /// Spawn `n` workers. `factory(k)` runs on worker `k`'s own thread to
+    /// build its state (PJRT clients are not `Send`, so this is the only
+    /// sound construction order). Fails if any factory fails.
+    pub fn new<F>(n: usize, factory: F) -> Result<Pool<W>>
+    where
+        F: Fn(usize) -> Result<W> + Send + Sync + 'static,
+    {
+        let factory = Arc::new(factory);
+        let mut senders = Vec::with_capacity(n);
+        let mut handles = Vec::with_capacity(n);
+        let (ready_tx, ready_rx) = channel::<Result<()>>();
+        for k in 0..n {
+            let (tx, rx) = channel::<Job<W>>();
+            senders.push(tx);
+            let factory = Arc::clone(&factory);
+            let ready = ready_tx.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("gparml-worker-{k}"))
+                    .spawn(move || {
+                        let mut state = match factory(k) {
+                            Ok(s) => {
+                                let _ = ready.send(Ok(()));
+                                s
+                            }
+                            Err(e) => {
+                                let _ = ready.send(Err(e));
+                                return;
+                            }
+                        };
+                        while let Ok(job) = rx.recv() {
+                            job(&mut state);
+                        }
+                    })?,
+            );
+        }
+        drop(ready_tx);
+        for _ in 0..n {
+            ready_rx
+                .recv()
+                .map_err(|_| anyhow!("worker thread died during startup"))??;
+        }
+        Ok(Pool { senders, handles })
+    }
+
+    pub fn len(&self) -> usize {
+        self.senders.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.senders.is_empty()
+    }
+
+    /// One map round: run `f` on every worker, collect all results
+    /// (ordered by worker id). This is a barrier — the reduce step can
+    /// only start when the slowest map finishes, which is what the
+    /// paper's Fig. 5 measures.
+    pub fn map<R, F>(&self, f: F) -> Vec<MapResult<R>>
+    where
+        R: Send + 'static,
+        F: Fn(usize, &mut W) -> R + Send + Sync + 'static,
+    {
+        let f = Arc::new(f);
+        let (tx, rx) = channel::<MapResult<R>>();
+        for (k, sender) in self.senders.iter().enumerate() {
+            let f = Arc::clone(&f);
+            let tx = tx.clone();
+            let job: Job<W> = Box::new(move |state: &mut W| {
+                let c0 = crate::util::timer::thread_cpu_secs();
+                let value = f(k, state);
+                let secs = crate::util::timer::thread_cpu_secs() - c0;
+                let _ = tx.send(MapResult {
+                    worker: k,
+                    value,
+                    secs,
+                });
+            });
+            // a worker that exited drops its receiver; treat as crashed node
+            let _ = sender.send(job);
+        }
+        drop(tx);
+        let mut out: Vec<MapResult<R>> = rx.iter().collect();
+        out.sort_by_key(|r| r.worker);
+        out
+    }
+
+    /// Map round over a subset of workers (`include[k]`): failed nodes
+    /// are simply not scheduled, which is the paper's §5.2 recovery
+    /// strategy — drop the partial term and accept a noisy gradient for
+    /// one iteration instead of stalling on a reload.
+    pub fn map_subset<R, F>(&self, include: &[bool], f: F) -> Vec<MapResult<R>>
+    where
+        R: Send + 'static,
+        F: Fn(usize, &mut W) -> R + Send + Sync + 'static,
+    {
+        assert_eq!(include.len(), self.senders.len());
+        let f = Arc::new(f);
+        let (tx, rx) = channel::<MapResult<R>>();
+        let mut expected = 0;
+        for (k, sender) in self.senders.iter().enumerate() {
+            if !include[k] {
+                continue;
+            }
+            expected += 1;
+            let f = Arc::clone(&f);
+            let tx = tx.clone();
+            let job: Job<W> = Box::new(move |state: &mut W| {
+                let c0 = crate::util::timer::thread_cpu_secs();
+                let value = f(k, state);
+                let secs = crate::util::timer::thread_cpu_secs() - c0;
+                let _ = tx.send(MapResult {
+                    worker: k,
+                    value,
+                    secs,
+                });
+            });
+            let _ = sender.send(job);
+        }
+        drop(tx);
+        let mut out: Vec<MapResult<R>> = rx.iter().take(expected).collect();
+        out.sort_by_key(|r| r.worker);
+        out
+    }
+
+    /// Map on a single worker (used for targeted updates).
+    pub fn map_one<R, F>(&self, k: usize, f: F) -> Option<MapResult<R>>
+    where
+        R: Send + 'static,
+        F: FnOnce(usize, &mut W) -> R + Send + 'static,
+    {
+        let (tx, rx) = channel::<MapResult<R>>();
+        let job: Job<W> = Box::new(move |state: &mut W| {
+            let c0 = crate::util::timer::thread_cpu_secs();
+            let value = f(k, state);
+            let secs = crate::util::timer::thread_cpu_secs() - c0;
+            let _ = tx.send(MapResult {
+                worker: k,
+                value,
+                secs,
+            });
+        });
+        self.senders[k].send(job).ok()?;
+        rx.recv().ok()
+    }
+}
+
+impl<W> Drop for Pool<W> {
+    fn drop(&mut self) {
+        self.senders.clear(); // closes the channels; workers exit
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Reduce helper: fold map results in worker order (deterministic — the
+/// accumulation order does not depend on thread timing, keeping runs
+/// bit-reproducible for a fixed seed).
+pub fn reduce<R, A>(results: &[MapResult<R>], init: A, mut f: impl FnMut(A, &R) -> A) -> A {
+    let mut acc = init;
+    for r in results {
+        acc = f(acc, &r.value);
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_runs_on_every_worker() {
+        let pool = Pool::new(4, |k| Ok(k * 10)).unwrap();
+        let results = pool.map(|k, state| {
+            assert_eq!(*state, k * 10);
+            k + 1
+        });
+        assert_eq!(results.len(), 4);
+        let vals: Vec<usize> = results.iter().map(|r| r.value).collect();
+        assert_eq!(vals, vec![1, 2, 3, 4]);
+        assert!(results.iter().all(|r| r.secs >= 0.0));
+    }
+
+    #[test]
+    fn state_persists_across_rounds() {
+        let pool = Pool::new(3, |_| Ok(0u64)).unwrap();
+        for _ in 0..5 {
+            pool.map(|_, state| {
+                *state += 1;
+            });
+        }
+        let counts = pool.map(|_, state| *state);
+        assert!(counts.iter().all(|r| r.value == 5));
+    }
+
+    #[test]
+    fn map_one_targets_single_worker() {
+        let pool = Pool::new(3, |_| Ok(Vec::<usize>::new())).unwrap();
+        pool.map_one(1, |_, state| state.push(42)).unwrap();
+        let lens = pool.map(|_, state| state.len());
+        assert_eq!(
+            lens.iter().map(|r| r.value).collect::<Vec<_>>(),
+            vec![0, 1, 0]
+        );
+    }
+
+    #[test]
+    fn factory_failure_propagates() {
+        let res = Pool::new(2, |k| {
+            if k == 1 {
+                anyhow::bail!("boom")
+            } else {
+                Ok(())
+            }
+        });
+        assert!(res.is_err());
+    }
+
+    #[test]
+    fn reduce_is_worker_ordered() {
+        let pool = Pool::new(4, Ok).unwrap();
+        let results = pool.map(|k, _| k);
+        let order = reduce(&results, Vec::new(), |mut acc, v| {
+            acc.push(*v);
+            acc
+        });
+        assert_eq!(order, vec![0, 1, 2, 3]);
+    }
+}

@@ -1,0 +1,72 @@
+//! Adam — used for the workers' local q(X) parameter updates (the paper
+//! allows "parallelising SCG or using local gradient descent"; adaptive
+//! steps are the modern equivalent) and as an ablation optimiser for the
+//! global step.
+
+/// Adam optimiser state over a flat parameter vector.
+#[derive(Debug, Clone)]
+pub struct Adam {
+    pub lr: f64,
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+    m: Vec<f64>,
+    v: Vec<f64>,
+    t: u64,
+}
+
+impl Adam {
+    pub fn new(dim: usize, lr: f64) -> Adam {
+        Adam {
+            lr,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            m: vec![0.0; dim],
+            v: vec![0.0; dim],
+            t: 0,
+        }
+    }
+
+    /// In-place descent step: params -= lr * mhat / (sqrt(vhat) + eps).
+    pub fn step(&mut self, params: &mut [f64], grad: &[f64]) {
+        assert_eq!(params.len(), self.m.len());
+        assert_eq!(grad.len(), self.m.len());
+        self.t += 1;
+        let b1t = 1.0 - self.beta1.powi(self.t as i32);
+        let b2t = 1.0 - self.beta2.powi(self.t as i32);
+        for i in 0..params.len() {
+            self.m[i] = self.beta1 * self.m[i] + (1.0 - self.beta1) * grad[i];
+            self.v[i] = self.beta2 * self.v[i] + (1.0 - self.beta2) * grad[i] * grad[i];
+            let mhat = self.m[i] / b1t;
+            let vhat = self.v[i] / b2t;
+            params[i] -= self.lr * mhat / (vhat.sqrt() + self.eps);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn converges_on_quadratic() {
+        let mut x = vec![5.0, -4.0];
+        let mut adam = Adam::new(2, 0.1);
+        for _ in 0..500 {
+            let g = vec![2.0 * (x[0] - 1.0), 2.0 * (x[1] + 2.0)];
+            adam.step(&mut x, &g);
+        }
+        assert!((x[0] - 1.0).abs() < 1e-3);
+        assert!((x[1] + 2.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn step_size_bounded_by_lr() {
+        let mut x = vec![0.0];
+        let mut adam = Adam::new(1, 0.01);
+        adam.step(&mut x, &[1e9]);
+        // Adam normalises the step to ~lr regardless of gradient scale
+        assert!(x[0].abs() < 0.011);
+    }
+}

@@ -1,0 +1,36 @@
+//! Optimisers: scaled conjugate gradients (the paper's choice) plus
+//! Adam and plain gradient descent for local steps and ablations.
+
+mod adam;
+mod scg;
+
+pub use adam::Adam;
+pub use scg::{Scg, ScgStep};
+
+/// Objective interface: value and gradient at a parameter vector.
+/// All optimisers MINIMISE; the trainer negates the bound.
+pub trait Objective {
+    fn value_grad(&mut self, x: &[f64]) -> (f64, Vec<f64>);
+
+    /// Gradient only (SCG's curvature probe). Default: discard the value.
+    fn grad(&mut self, x: &[f64]) -> Vec<f64> {
+        self.value_grad(x).1
+    }
+}
+
+impl<F> Objective for F
+where
+    F: FnMut(&[f64]) -> (f64, Vec<f64>),
+{
+    fn value_grad(&mut self, x: &[f64]) -> (f64, Vec<f64>) {
+        self(x)
+    }
+}
+
+pub(crate) fn dot(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+pub(crate) fn norm_sq(a: &[f64]) -> f64 {
+    dot(a, a)
+}

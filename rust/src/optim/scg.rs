@@ -1,0 +1,266 @@
+//! Scaled Conjugate Gradients (Møller, 1993) — the optimiser the paper
+//! uses for the global parameters, with the finite-difference curvature
+//! probe the paper's Fig. 7 discussion refers to (it is this probe that
+//! makes SCG sensitive to noisy gradients under node failure).
+//!
+//! The implementation keeps its state across [`Scg::step`] calls so the
+//! trainer can interleave distributed function evaluations with local
+//! worker updates; each `step` performs one SCG iteration and calls the
+//! objective 1-2 times (curvature probe + candidate evaluation).
+
+use super::{dot, norm_sq, Objective};
+
+/// Outcome of one SCG iteration.
+#[derive(Debug, Clone)]
+pub struct ScgStep {
+    /// Objective value at the (possibly unchanged) current point.
+    pub f: f64,
+    /// Whether the candidate step was accepted.
+    pub accepted: bool,
+    /// |gradient|^2 at the current point.
+    pub grad_norm_sq: f64,
+}
+
+/// Møller's SCG state.
+pub struct Scg {
+    w: Vec<f64>,
+    f: f64,
+    r: Vec<f64>, // -grad at w
+    p: Vec<f64>, // search direction
+    lambda: f64,
+    lambda_bar: f64,
+    success: bool,
+    k: usize,
+    sigma0: f64,
+    fresh: bool,
+    /// curvature from the last probe (reused while success == false)
+    last_delta: f64,
+}
+
+impl Scg {
+    /// Initialise at `w0`; evaluates the objective once.
+    pub fn new(w0: Vec<f64>, obj: &mut impl Objective) -> Scg {
+        let (f, g) = obj.value_grad(&w0);
+        let r: Vec<f64> = g.iter().map(|x| -x).collect();
+        Scg {
+            p: r.clone(),
+            r,
+            w: w0,
+            f,
+            lambda: 1e-6,
+            lambda_bar: 0.0,
+            success: true,
+            k: 0,
+            sigma0: 1e-5,
+            fresh: true,
+            last_delta: 1.0,
+        }
+    }
+
+    pub fn x(&self) -> &[f64] {
+        &self.w
+    }
+
+    pub fn f(&self) -> f64 {
+        self.f
+    }
+
+    /// Re-evaluate f and the gradient at the current point (needed when
+    /// the objective itself changed between steps, e.g. the workers
+    /// updated their local parameters or a node failed).
+    pub fn refresh(&mut self, obj: &mut impl Objective) {
+        let (f, g) = obj.value_grad(&self.w);
+        self.f = f;
+        self.r = g.iter().map(|x| -x).collect();
+        if !self.success || self.fresh {
+            self.p = self.r.clone();
+        }
+        self.fresh = false;
+    }
+
+    /// One SCG iteration (Møller 1993, steps 2-9).
+    pub fn step(&mut self, obj: &mut impl Objective) -> ScgStep {
+        self.fresh = false;
+        let n = self.w.len();
+        let p_norm_sq = norm_sq(&self.p);
+        if p_norm_sq == 0.0 {
+            return ScgStep {
+                f: self.f,
+                accepted: false,
+                grad_norm_sq: norm_sq(&self.r),
+            };
+        }
+        let p_norm = p_norm_sq.sqrt();
+
+        // 2. curvature probe via finite differences along p
+        let mut delta = if self.success {
+            let sigma = self.sigma0 / p_norm;
+            let w_probe: Vec<f64> = self
+                .w
+                .iter()
+                .zip(&self.p)
+                .map(|(w, p)| w + sigma * p)
+                .collect();
+            let g_probe = obj.grad(&w_probe);
+            // s = (f'(w+sigma p) - f'(w)) / sigma ; note r = -f'(w)
+            let mut d = 0.0;
+            for i in 0..n {
+                d += self.p[i] * (g_probe[i] + self.r[i]);
+            }
+            d / sigma
+        } else {
+            self.last_delta
+        };
+
+        // 3. scale
+        delta += (self.lambda - self.lambda_bar) * p_norm_sq;
+
+        // 4. make positive definite
+        if delta <= 0.0 {
+            self.lambda_bar = 2.0 * (self.lambda - delta / p_norm_sq);
+            delta = -delta + self.lambda * p_norm_sq;
+            self.lambda = self.lambda_bar;
+        }
+        self.last_delta = delta;
+
+        // 5. step size
+        let mu = dot(&self.p, &self.r);
+        let alpha = mu / delta;
+
+        // 6. comparison parameter
+        let w_new: Vec<f64> = self
+            .w
+            .iter()
+            .zip(&self.p)
+            .map(|(w, p)| w + alpha * p)
+            .collect();
+        let (f_new, g_new) = obj.value_grad(&w_new);
+        let big_delta = 2.0 * delta * (self.f - f_new) / (mu * mu);
+
+        let accepted = big_delta >= 0.0 && f_new.is_finite();
+        if accepted {
+            // 7. successful reduction
+            self.w = w_new;
+            self.f = f_new;
+            let r_new: Vec<f64> = g_new.iter().map(|x| -x).collect();
+            self.lambda_bar = 0.0;
+            self.success = true;
+            self.k += 1;
+            if self.k % n == 0 {
+                // restart
+                self.p = r_new.clone();
+            } else {
+                let beta = (norm_sq(&r_new) - dot(&r_new, &self.r)) / mu;
+                for i in 0..n {
+                    self.p[i] = r_new[i] + beta * self.p[i];
+                }
+            }
+            self.r = r_new;
+            if big_delta >= 0.75 {
+                self.lambda = (self.lambda * 0.25).max(1e-15);
+            }
+        } else {
+            self.lambda_bar = self.lambda;
+            self.success = false;
+        }
+
+        // 8. increase scale on poor agreement
+        if big_delta < 0.25 {
+            self.lambda += delta * (1.0 - big_delta) / p_norm_sq;
+            self.lambda = self.lambda.min(1e15);
+        }
+
+        ScgStep {
+            f: self.f,
+            accepted,
+            grad_norm_sq: norm_sq(&self.r),
+        }
+    }
+
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run(scg: &mut Scg, obj: &mut impl Objective, iters: usize) -> f64 {
+        for _ in 0..iters {
+            scg.step(obj);
+        }
+        scg.f()
+    }
+
+    #[test]
+    fn minimises_quadratic() {
+        // f(x) = 0.5 x^T A x - b^T x with SPD A
+        let a = [[4.0, 1.0], [1.0, 3.0]];
+        let b = [1.0, 2.0];
+        let mut obj = |x: &[f64]| {
+            let ax = [
+                a[0][0] * x[0] + a[0][1] * x[1],
+                a[1][0] * x[0] + a[1][1] * x[1],
+            ];
+            let f = 0.5 * (x[0] * ax[0] + x[1] * ax[1]) - b[0] * x[0] - b[1] * x[1];
+            (f, vec![ax[0] - b[0], ax[1] - b[1]])
+        };
+        let mut scg = Scg::new(vec![5.0, -3.0], &mut obj);
+        run(&mut scg, &mut obj, 30);
+        // solution: A x = b -> x = [1/11, 7/11]
+        assert!((scg.x()[0] - 1.0 / 11.0).abs() < 1e-6, "{:?}", scg.x());
+        assert!((scg.x()[1] - 7.0 / 11.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn minimises_rosenbrock() {
+        let mut obj = |x: &[f64]| {
+            let (a, b) = (1.0, 100.0);
+            let f = (a - x[0]).powi(2) + b * (x[1] - x[0] * x[0]).powi(2);
+            let g = vec![
+                -2.0 * (a - x[0]) - 4.0 * b * x[0] * (x[1] - x[0] * x[0]),
+                2.0 * b * (x[1] - x[0] * x[0]),
+            ];
+            (f, g)
+        };
+        let mut scg = Scg::new(vec![-1.2, 1.0], &mut obj);
+        let f = run(&mut scg, &mut obj, 400);
+        assert!(f < 1e-5, "f={f}, x={:?}", scg.x());
+    }
+
+    #[test]
+    fn monotone_nonincreasing_objective() {
+        let mut obj = |x: &[f64]| {
+            let f: f64 = x.iter().map(|v| v.cosh()).sum();
+            (f, x.iter().map(|v| v.sinh()).collect())
+        };
+        let mut scg = Scg::new(vec![2.0, -1.5, 0.7], &mut obj);
+        let mut prev = scg.f();
+        for _ in 0..50 {
+            let s = scg.step(&mut obj);
+            assert!(s.f <= prev + 1e-12, "objective increased");
+            prev = s.f;
+        }
+        assert!(prev < 3.0 + 1e-6); // min is 3 at x = 0
+    }
+
+    #[test]
+    fn refresh_handles_changed_objective() {
+        // minimise (x - c)^2 where c jumps between refreshes
+        let mut c = 0.0;
+        {
+            let mut obj = |x: &[f64]| ((x[0] - c).powi(2), vec![2.0 * (x[0] - c)]);
+            let mut scg = Scg::new(vec![4.0], &mut obj);
+            for _ in 0..20 {
+                scg.step(&mut obj);
+            }
+            assert!((scg.x()[0] - c).abs() < 1e-5);
+        }
+        c = 3.0;
+        let mut obj2 = |x: &[f64]| ((x[0] - c).powi(2), vec![2.0 * (x[0] - c)]);
+        let mut scg = Scg::new(vec![0.0], &mut obj2);
+        scg.refresh(&mut obj2);
+        for _ in 0..20 {
+            scg.step(&mut obj2);
+        }
+        assert!((scg.x()[0] - 3.0).abs() < 1e-5);
+    }
+}

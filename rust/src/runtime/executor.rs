@@ -1,0 +1,337 @@
+//! Per-worker PJRT executor: compiles the four artifact entries once and
+//! runs them for arbitrary-size shards by chunking to the artifact's
+//! static capacity B with mask padding.
+
+use anyhow::{anyhow, Context, Result};
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use crate::gp::params::{GlobalGrads, GlobalParams};
+use crate::gp::Stats;
+use crate::linalg::Matrix;
+
+use super::manifest::{ArtifactConfig, Manifest};
+
+/// One worker's slice of the dataset (variational means/variances of
+/// q(X) plus targets). In the regression model `xvar` is all zeros and
+/// `kl_weight` is 0.
+#[derive(Debug, Clone)]
+pub struct ShardData {
+    pub xmu: Matrix,
+    pub xvar: Matrix,
+    pub y: Matrix,
+    pub kl_weight: f64,
+}
+
+impl ShardData {
+    pub fn len(&self) -> usize {
+        self.xmu.rows()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Gradients w.r.t. a shard's local parameters (raw variance space).
+#[derive(Debug, Clone)]
+pub struct LocalGrads {
+    pub d_xmu: Matrix,
+    pub d_xvar: Matrix,
+}
+
+/// A compiled set of artifact executables bound to one PJRT CPU client.
+///
+/// Not `Send`: each worker thread builds its own (matching the paper's
+/// one-process-per-node model; compilation happens once at startup).
+pub struct ShardExecutor {
+    client: PjRtClient,
+    cfg: ArtifactConfig,
+    stats_exe: PjRtLoadedExecutable,
+    grads_exe: PjRtLoadedExecutable,
+    /// kmm/predict are off the per-iteration hot path and only used by
+    /// the leader / prediction flows — compiled lazily so worker startup
+    /// pays for exactly the two entries it runs every round
+    /// (EXPERIMENTS.md §Perf: halves cluster startup time).
+    kmm_exe: std::cell::OnceCell<PjRtLoadedExecutable>,
+    predict_exe: std::cell::OnceCell<PjRtLoadedExecutable>,
+    kmm_path: std::path::PathBuf,
+    predict_path: std::path::PathBuf,
+}
+
+fn compile(client: &PjRtClient, path: &std::path::Path) -> Result<PjRtLoadedExecutable> {
+    let proto = HloModuleProto::from_text_file(
+        path.to_str()
+            .ok_or_else(|| anyhow!("non-utf8 path {path:?}"))?,
+    )
+    .with_context(|| format!("parsing HLO {}", path.display()))?;
+    let comp = XlaComputation::from_proto(&proto);
+    client
+        .compile(&comp)
+        .with_context(|| format!("compiling {}", path.display()))
+}
+
+fn mat_lit(m: &Matrix) -> Result<Literal> {
+    Ok(Literal::vec1(m.data()).reshape(&[m.rows() as i64, m.cols() as i64])?)
+}
+
+fn vec_lit(v: &[f64]) -> Literal {
+    Literal::vec1(v)
+}
+
+fn lit_mat(l: &Literal, rows: usize, cols: usize) -> Result<Matrix> {
+    let v = l.to_vec::<f64>()?;
+    anyhow::ensure!(v.len() == rows * cols, "literal size mismatch");
+    Ok(Matrix::from_vec(rows, cols, v))
+}
+
+fn lit_scalar(l: &Literal) -> Result<f64> {
+    let v = l.to_vec::<f64>()?;
+    anyhow::ensure!(v.len() == 1, "expected 1-element literal");
+    Ok(v[0])
+}
+
+impl ShardExecutor {
+    /// Build a client and compile all entries of `config`.
+    pub fn new(manifest: &Manifest, config: &str) -> Result<ShardExecutor> {
+        let cfg = manifest.config(config)?.clone();
+        let client = PjRtClient::cpu()?;
+        let stats_exe = compile(&client, &manifest.entry_path(&cfg, "shard_stats")?)?;
+        let grads_exe = compile(&client, &manifest.entry_path(&cfg, "shard_grads")?)?;
+        let kmm_path = manifest.entry_path(&cfg, "kmm_grads")?;
+        let predict_path = manifest.entry_path(&cfg, "predict")?;
+        Ok(ShardExecutor {
+            client,
+            cfg,
+            stats_exe,
+            grads_exe,
+            kmm_exe: std::cell::OnceCell::new(),
+            predict_exe: std::cell::OnceCell::new(),
+            kmm_path,
+            predict_path,
+        })
+    }
+
+    fn kmm_exe(&self) -> Result<&PjRtLoadedExecutable> {
+        if self.kmm_exe.get().is_none() {
+            let exe = compile(&self.client, &self.kmm_path)?;
+            let _ = self.kmm_exe.set(exe);
+        }
+        Ok(self.kmm_exe.get().expect("just set"))
+    }
+
+    fn predict_exe(&self) -> Result<&PjRtLoadedExecutable> {
+        if self.predict_exe.get().is_none() {
+            let exe = compile(&self.client, &self.predict_path)?;
+            let _ = self.predict_exe.set(exe);
+        }
+        Ok(self.predict_exe.get().expect("just set"))
+    }
+
+    pub fn config(&self) -> &ArtifactConfig {
+        &self.cfg
+    }
+
+    fn check_params(&self, p: &GlobalParams) -> Result<()> {
+        anyhow::ensure!(
+            p.m() == self.cfg.m && p.q() == self.cfg.q,
+            "params (m={}, q={}) do not match artifact config {} (m={}, q={})",
+            p.m(),
+            p.q(),
+            self.cfg.name,
+            self.cfg.m,
+            self.cfg.q
+        );
+        Ok(())
+    }
+
+    /// Pad rows [lo, hi) of `src` into a cap x cols matrix.
+    fn pad(&self, src: &Matrix, lo: usize, hi: usize, cols: usize) -> Matrix {
+        let mut out = Matrix::zeros(self.cfg.cap, cols);
+        for (r, i) in (lo..hi).enumerate() {
+            out.row_mut(r).copy_from_slice(&src.row(i)[..cols]);
+        }
+        out
+    }
+
+    /// Literals that do not change across the chunks of one shard pass
+    /// (global parameters + kl weight). Hoisted out of the chunk loop:
+    /// literal construction showed up in the hot-path profile
+    /// (EXPERIMENTS.md §Perf).
+    fn invariant_inputs(&self, p: &GlobalParams, kl_weight: f64) -> Result<[Literal; 4]> {
+        Ok([
+            mat_lit(&p.z)?,
+            vec_lit(&p.log_ls),
+            vec_lit(&[p.log_sf2]),
+            vec_lit(&[kl_weight]),
+        ])
+    }
+
+    fn chunk_inputs(
+        &self,
+        inv: &[Literal; 4],
+        shard: &ShardData,
+        lo: usize,
+        hi: usize,
+    ) -> Result<Vec<Literal>> {
+        let cfg = &self.cfg;
+        let mut mask = vec![0.0; cfg.cap];
+        for v in mask.iter_mut().take(hi - lo) {
+            *v = 1.0;
+        }
+        // clones of Literal are shallow C++ copies of the backing buffer;
+        // cheaper than re-encoding the matrices every chunk
+        Ok(vec![
+            inv[0].clone(),
+            inv[1].clone(),
+            inv[2].clone(),
+            mat_lit(&self.pad(&shard.xmu, lo, hi, cfg.q))?,
+            mat_lit(&self.pad(&shard.xvar, lo, hi, cfg.q))?,
+            mat_lit(&self.pad(&shard.y, lo, hi, cfg.d))?,
+            vec_lit(&mask),
+            inv[3].clone(),
+        ])
+    }
+
+    fn run(&self, exe: &PjRtLoadedExecutable, inputs: &[Literal]) -> Result<Vec<Literal>> {
+        let bufs = exe.execute::<Literal>(inputs)?;
+        let lit = bufs[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+
+    /// Map step 1: the shard's partial statistics (chunked over cap).
+    pub fn shard_stats(&self, p: &GlobalParams, shard: &ShardData) -> Result<Stats> {
+        self.check_params(p)?;
+        let cfg = &self.cfg;
+        let mut total = Stats::zeros(cfg.m, cfg.d);
+        let b = shard.len();
+        let inv = self.invariant_inputs(p, shard.kl_weight)?;
+        let mut lo = 0;
+        while lo < b {
+            let hi = (lo + cfg.cap).min(b);
+            let inputs = self.chunk_inputs(&inv, shard, lo, hi)?;
+            let out = self.run(&self.stats_exe, &inputs)?;
+            anyhow::ensure!(out.len() == 5, "shard_stats returned {} outputs", out.len());
+            total.a += lit_scalar(&out[0])?;
+            total.psi0 += lit_scalar(&out[1])?;
+            total.c.axpy(1.0, &lit_mat(&out[2], cfg.m, cfg.d)?);
+            total.d.axpy(1.0, &lit_mat(&out[3], cfg.m, cfg.m)?);
+            total.kl += lit_scalar(&out[4])?;
+            total.n += (hi - lo) as f64;
+            lo = hi;
+        }
+        Ok(total)
+    }
+
+    /// Map step 2: chain-rule the adjoints into partial global gradients
+    /// and this shard's local gradients.
+    pub fn shard_grads(
+        &self,
+        p: &GlobalParams,
+        shard: &ShardData,
+        adj: &crate::gp::Adjoints,
+    ) -> Result<(GlobalGrads, LocalGrads)> {
+        self.check_params(p)?;
+        let cfg = &self.cfg;
+        let b = shard.len();
+        let mut g = GlobalGrads::zeros(cfg.m, cfg.q);
+        let mut local = LocalGrads {
+            d_xmu: Matrix::zeros(b, cfg.q),
+            d_xvar: Matrix::zeros(b, cfg.q),
+        };
+        let inv = self.invariant_inputs(p, shard.kl_weight)?;
+        let adj_inv = [
+            vec_lit(&[adj.d_psi0]),
+            mat_lit(&adj.d_c)?,
+            mat_lit(&adj.d_d)?,
+            vec_lit(&[adj.d_kl]),
+        ];
+        let mut lo = 0;
+        while lo < b {
+            let hi = (lo + cfg.cap).min(b);
+            let mut inputs = self.chunk_inputs(&inv, shard, lo, hi)?;
+            for l in &adj_inv {
+                inputs.push(l.clone());
+            }
+            let out = self.run(&self.grads_exe, &inputs)?;
+            anyhow::ensure!(out.len() == 5, "shard_grads returned {} outputs", out.len());
+            g.d_z.axpy(1.0, &lit_mat(&out[0], cfg.m, cfg.q)?);
+            let dls = out[1].to_vec::<f64>()?;
+            for (acc, v) in g.d_log_ls.iter_mut().zip(&dls) {
+                *acc += v;
+            }
+            g.d_log_sf2 += lit_scalar(&out[2])?;
+            let dxmu = lit_mat(&out[3], cfg.cap, cfg.q)?;
+            let dxvar = lit_mat(&out[4], cfg.cap, cfg.q)?;
+            for (r, i) in (lo..hi).enumerate() {
+                local.d_xmu.row_mut(i).copy_from_slice(dxmu.row(r));
+                local.d_xvar.row_mut(i).copy_from_slice(dxvar.row(r));
+            }
+            lo = hi;
+        }
+        Ok((g, local))
+    }
+
+    /// Central direct term: Kmm and the pullback of dF/dKmm.
+    pub fn kmm_grads(
+        &self,
+        p: &GlobalParams,
+        adj_kmm: &Matrix,
+    ) -> Result<(Matrix, GlobalGrads)> {
+        self.check_params(p)?;
+        let cfg = &self.cfg;
+        let inputs = vec![
+            mat_lit(&p.z)?,
+            vec_lit(&p.log_ls),
+            vec_lit(&[p.log_sf2]),
+            mat_lit(adj_kmm)?,
+        ];
+        let out = self.run(self.kmm_exe()?, &inputs)?;
+        anyhow::ensure!(out.len() == 4, "kmm_grads returned {} outputs", out.len());
+        let kmm = lit_mat(&out[0], cfg.m, cfg.m)?;
+        let mut g = GlobalGrads::zeros(cfg.m, cfg.q);
+        g.d_z = lit_mat(&out[1], cfg.m, cfg.q)?;
+        g.d_log_ls = out[2].to_vec::<f64>()?;
+        g.d_log_sf2 = lit_scalar(&out[3])?;
+        Ok((kmm, g))
+    }
+
+    /// Posterior prediction at (possibly uncertain) test inputs.
+    /// Returns (mean [t x d], var [t]) without observation noise.
+    pub fn predict(
+        &self,
+        p: &GlobalParams,
+        xt_mu: &Matrix,
+        xt_var: &Matrix,
+        w1: &Matrix,
+        wv: &Matrix,
+    ) -> Result<(Matrix, Vec<f64>)> {
+        self.check_params(p)?;
+        let cfg = &self.cfg;
+        let t = xt_mu.rows();
+        let mut mean = Matrix::zeros(t, cfg.d);
+        let mut var = vec![0.0; t];
+        let mut lo = 0;
+        while lo < t {
+            let hi = (lo + cfg.cap).min(t);
+            let inputs = vec![
+                mat_lit(&p.z)?,
+                vec_lit(&p.log_ls),
+                vec_lit(&[p.log_sf2]),
+                mat_lit(&self.pad(xt_mu, lo, hi, cfg.q))?,
+                mat_lit(&self.pad(xt_var, lo, hi, cfg.q))?,
+                mat_lit(w1)?,
+                mat_lit(wv)?,
+            ];
+            let out = self.run(self.predict_exe()?, &inputs)?;
+            anyhow::ensure!(out.len() == 2, "predict returned {} outputs", out.len());
+            let mchunk = lit_mat(&out[0], cfg.cap, cfg.d)?;
+            let vchunk = out[1].to_vec::<f64>()?;
+            for (r, i) in (lo..hi).enumerate() {
+                mean.row_mut(i).copy_from_slice(mchunk.row(r));
+                var[i] = vchunk[r];
+            }
+            lo = hi;
+        }
+        Ok((mean, var))
+    }
+}

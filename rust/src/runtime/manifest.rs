@@ -1,0 +1,128 @@
+//! `artifacts/manifest.json` reader: which HLO files exist, at which
+//! static shapes.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Static shape configuration of one artifact family.
+#[derive(Debug, Clone)]
+pub struct ArtifactConfig {
+    pub name: String,
+    /// number of inducing points
+    pub m: usize,
+    /// latent dimensionality
+    pub q: usize,
+    /// output dimensionality
+    pub d: usize,
+    /// shard capacity (padded block length B)
+    pub cap: usize,
+    /// Pallas grid block size
+    pub block_n: usize,
+    /// entry name -> HLO file name
+    pub entries: BTreeMap<String, String>,
+}
+
+/// Parsed manifest plus the directory it lives in.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub dtype: String,
+    pub configs: BTreeMap<String, ArtifactConfig>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let doc = Json::from_file(&dir.join("manifest.json"))?;
+        let dtype = doc.get("dtype")?.as_str()?.to_string();
+        if dtype != "f64" {
+            bail!("unsupported artifact dtype {dtype:?} (runtime expects f64)");
+        }
+        let mut configs = BTreeMap::new();
+        for (name, cfg) in doc.get("configs")?.as_obj()? {
+            let mut entries = BTreeMap::new();
+            for (entry, file) in cfg.get("entries")?.as_obj()? {
+                entries.insert(entry.clone(), file.as_str()?.to_string());
+            }
+            configs.insert(
+                name.clone(),
+                ArtifactConfig {
+                    name: name.clone(),
+                    m: cfg.get("m")?.as_usize()?,
+                    q: cfg.get("q")?.as_usize()?,
+                    d: cfg.get("d")?.as_usize()?,
+                    cap: cfg.get("B")?.as_usize()?,
+                    block_n: cfg.get("block_n")?.as_usize()?,
+                    entries,
+                },
+            );
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            dtype,
+            configs,
+        })
+    }
+
+    pub fn config(&self, name: &str) -> Result<&ArtifactConfig> {
+        self.configs.get(name).with_context(|| {
+            format!(
+                "no artifact config {name:?}; available: {:?} (run `make artifacts`)",
+                self.configs.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+
+    /// Absolute path of one entry's HLO file.
+    pub fn entry_path(&self, cfg: &ArtifactConfig, entry: &str) -> Result<PathBuf> {
+        let file = cfg
+            .entries
+            .get(entry)
+            .with_context(|| format!("config {} lacks entry {entry:?}", cfg.name))?;
+        Ok(self.dir.join(file))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_minimal_manifest() {
+        let dir = std::env::temp_dir().join(format!("gparml_man_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"version":1,"dtype":"f64","configs":{"t":{"m":4,"q":2,"d":3,"B":16,
+               "block_n":8,"entries":{"shard_stats":"shard_stats_t.hlo.txt"}}}}"#,
+        )
+        .unwrap();
+        let man = Manifest::load(&dir).unwrap();
+        let cfg = man.config("t").unwrap();
+        assert_eq!(cfg.m, 4);
+        assert_eq!(cfg.cap, 16);
+        assert!(man.config("nope").is_err());
+        assert!(man
+            .entry_path(cfg, "shard_stats")
+            .unwrap()
+            .ends_with("shard_stats_t.hlo.txt"));
+        assert!(man.entry_path(cfg, "missing").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_f32_manifest() {
+        let dir = std::env::temp_dir().join(format!("gparml_man32_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"dtype":"f32","configs":{}}"#,
+        )
+        .unwrap();
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,21 @@
+//! PJRT runtime: load the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and execute them from the coordinator's hot
+//! path. Python never runs here — the artifacts are self-contained.
+//!
+//! One [`ShardExecutor`] is created per worker thread (the `xla` crate's
+//! `PjRtClient` is `Rc`-based and not `Send`, which conveniently mirrors
+//! one-PJRT-client-per-node), compiled once at startup, and reused for
+//! every iteration.
+
+mod executor;
+mod manifest;
+
+pub use executor::{LocalGrads, ShardData, ShardExecutor};
+pub use manifest::{ArtifactConfig, Manifest};
+
+/// Locate the artifacts directory: $GPARML_ARTIFACTS or ./artifacts.
+pub fn default_artifacts_dir() -> std::path::PathBuf {
+    std::env::var_os("GPARML_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| std::path::PathBuf::from("artifacts"))
+}

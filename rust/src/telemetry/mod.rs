@@ -1,0 +1,189 @@
+//! Telemetry: per-round per-worker timing and the simulated-cluster
+//! clock used to regenerate the paper's scaling figures on this
+//! single-core container.
+//!
+//! The paper reports two series per scaling experiment (Figs. 2-3):
+//! total running time, and "the amount of time spent only in the two
+//! Map-Reduce functions". We record every worker's in-map compute time
+//! per round; the modeled parallel wall time of a round is
+//! `max_k t_k` (the reduce barrier waits for the slowest node — the
+//! paper's own rate-limiting-step argument in §5.1) and the modeled
+//! sequential time is `sum_k t_k`. Central (global-step) time is
+//! measured directly and added to both.
+
+use crate::util::stats;
+
+/// Timing of one map round across all workers.
+#[derive(Debug, Clone, Default)]
+pub struct RoundTiming {
+    /// In-map compute seconds per worker (index = worker id).
+    pub worker_secs: Vec<f64>,
+    /// Measured wall-clock of the whole round including dispatch/collect.
+    pub wall_secs: f64,
+}
+
+impl RoundTiming {
+    /// Modeled parallel time: the barrier waits for the slowest worker.
+    pub fn modeled_parallel(&self) -> f64 {
+        stats::max(&self.worker_secs).max(0.0)
+    }
+
+    /// Total compute across workers (sequential-equivalent).
+    pub fn total_compute(&self) -> f64 {
+        self.worker_secs.iter().sum()
+    }
+
+    /// Thread-communication / dispatch overhead beyond pure compute.
+    pub fn overhead(&self) -> f64 {
+        (self.wall_secs - self.total_compute()).max(0.0)
+    }
+}
+
+/// Telemetry of one outer training iteration.
+#[derive(Debug, Clone, Default)]
+pub struct IterationLog {
+    pub iter: usize,
+    /// Bound value F at this iteration.
+    pub f: f64,
+    /// Map rounds executed (stats and gradient rounds).
+    pub rounds: Vec<RoundTiming>,
+    /// Seconds spent in the central global step (O(m^3) algebra + SCG).
+    pub central_secs: f64,
+    /// Worker ids that "failed" this iteration (dropped partial terms).
+    pub failed_workers: Vec<usize>,
+}
+
+impl IterationLog {
+    /// Modeled wall time of the iteration on a real cluster:
+    /// sum over rounds of (slowest worker) plus central time.
+    pub fn modeled_parallel_secs(&self) -> f64 {
+        self.rounds.iter().map(|r| r.modeled_parallel()).sum::<f64>() + self.central_secs
+    }
+
+    /// Total map compute (what a sequential run would pay), plus central.
+    pub fn total_compute_secs(&self) -> f64 {
+        self.rounds.iter().map(|r| r.total_compute()).sum::<f64>() + self.central_secs
+    }
+
+    /// Measured wall time including threading overheads.
+    pub fn measured_wall_secs(&self) -> f64 {
+        self.rounds.iter().map(|r| r.wall_secs).sum::<f64>() + self.central_secs
+    }
+
+    /// Per-iteration load-balance summary over all rounds'
+    /// worker times: (min, mean, max) — the Fig. 5 series.
+    pub fn load_min_mean_max(&self) -> (f64, f64, f64) {
+        let mut per_worker: Vec<f64> = Vec::new();
+        if let Some(first) = self.rounds.first() {
+            per_worker = vec![0.0; first.worker_secs.len()];
+        }
+        for r in &self.rounds {
+            for (acc, t) in per_worker.iter_mut().zip(&r.worker_secs) {
+                *acc += t;
+            }
+        }
+        (
+            stats::min(&per_worker),
+            stats::mean(&per_worker),
+            stats::max(&per_worker),
+        )
+    }
+}
+
+/// Whole-run telemetry.
+#[derive(Debug, Clone, Default)]
+pub struct RunLog {
+    pub iterations: Vec<IterationLog>,
+    /// One-off startup cost (client creation + artifact compilation).
+    pub startup_secs: f64,
+}
+
+impl RunLog {
+    pub fn final_bound(&self) -> f64 {
+        self.iterations.last().map(|i| i.f).unwrap_or(f64::NAN)
+    }
+
+    pub fn mean_iteration_modeled_secs(&self) -> f64 {
+        let v: Vec<f64> = self
+            .iterations
+            .iter()
+            .map(|i| i.modeled_parallel_secs())
+            .collect();
+        stats::mean(&v)
+    }
+
+    pub fn mean_iteration_compute_secs(&self) -> f64 {
+        let v: Vec<f64> = self
+            .iterations
+            .iter()
+            .map(|i| i.total_compute_secs())
+            .collect();
+        stats::mean(&v)
+    }
+
+    /// Mean relative gap between max and mean worker load (paper §5.1
+    /// reports 3.7%).
+    pub fn mean_load_gap(&self) -> f64 {
+        let gaps: Vec<f64> = self
+            .iterations
+            .iter()
+            .filter_map(|i| {
+                let (_, mean, max) = i.load_min_mean_max();
+                (mean > 0.0).then_some((max - mean) / mean)
+            })
+            .collect();
+        stats::mean(&gaps)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn round(ws: &[f64], wall: f64) -> RoundTiming {
+        RoundTiming {
+            worker_secs: ws.to_vec(),
+            wall_secs: wall,
+        }
+    }
+
+    #[test]
+    fn modeled_times() {
+        let r = round(&[1.0, 3.0, 2.0], 6.5);
+        assert_eq!(r.modeled_parallel(), 3.0);
+        assert_eq!(r.total_compute(), 6.0);
+        assert!((r.overhead() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn iteration_aggregates() {
+        let it = IterationLog {
+            iter: 0,
+            f: -10.0,
+            rounds: vec![round(&[1.0, 2.0], 3.5), round(&[2.0, 1.0], 3.5)],
+            central_secs: 0.5,
+            failed_workers: vec![],
+        };
+        assert_eq!(it.modeled_parallel_secs(), 2.0 + 2.0 + 0.5);
+        assert_eq!(it.total_compute_secs(), 6.5);
+        let (mn, mean, mx) = it.load_min_mean_max();
+        assert_eq!((mn, mean, mx), (3.0, 3.0, 3.0)); // perfectly balanced
+    }
+
+    #[test]
+    fn load_gap() {
+        let it = IterationLog {
+            iter: 0,
+            f: 0.0,
+            rounds: vec![round(&[1.0, 1.0, 2.0], 4.0)],
+            central_secs: 0.0,
+            failed_workers: vec![],
+        };
+        let log = RunLog {
+            iterations: vec![it],
+            startup_secs: 0.0,
+        };
+        let expected = (2.0 - 4.0 / 3.0) / (4.0 / 3.0);
+        assert!((log.mean_load_gap() - expected).abs() < 1e-12);
+    }
+}

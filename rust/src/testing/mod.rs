@@ -1,0 +1,88 @@
+//! Property-based testing helpers (proptest is not in the offline crate
+//! set — DESIGN.md §5). Deterministic randomised-invariant checking:
+//! run a property over many seeded random cases; on failure, report the
+//! seed so the case replays exactly.
+
+use crate::linalg::Matrix;
+use crate::util::rng::Rng;
+
+/// Run `prop` over `cases` seeded random instances; panics with the
+/// failing seed on the first violation.
+pub fn check<F>(name: &str, cases: u64, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    for seed in 0..cases {
+        let mut rng = Rng::new(0x9E3779B9u64 ^ (seed.wrapping_mul(0x2545F4914F6CDD1D)));
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property {name:?} failed at seed {seed}: {msg}");
+        }
+    }
+}
+
+/// Random matrix with entries ~ N(0, scale).
+pub fn random_matrix(rng: &mut Rng, rows: usize, cols: usize, scale: f64) -> Matrix {
+    Matrix::from_fn(rows, cols, |_, _| scale * rng.normal())
+}
+
+/// Random SPD matrix with condition control.
+pub fn random_spd(rng: &mut Rng, n: usize, diag: f64) -> Matrix {
+    let g = random_matrix(rng, n, n + 2, 1.0);
+    g.matmul_t(&g).add_diag(diag)
+}
+
+/// Random dimension in [lo, hi].
+pub fn dim(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+    lo + rng.below(hi - lo + 1)
+}
+
+/// Assert two floats agree to a relative tolerance, as a property result.
+pub fn close(a: f64, b: f64, tol: f64, what: &str) -> Result<(), String> {
+    if (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs())) {
+        Ok(())
+    } else {
+        Err(format!("{what}: {a} vs {b}"))
+    }
+}
+
+/// Assert two matrices agree to an absolute-ish tolerance.
+pub fn mat_close(a: &Matrix, b: &Matrix, tol: f64, what: &str) -> Result<(), String> {
+    let scale = 1.0 + a.max_abs().max(b.max_abs());
+    let diff = a.max_abs_diff(b);
+    if diff <= tol * scale {
+        Ok(())
+    } else {
+        Err(format!("{what}: max |diff| = {diff:e}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_good_property() {
+        check("sum-commutes", 50, |rng| {
+            let a = rng.normal();
+            let b = rng.normal();
+            close(a + b, b + a, 1e-15, "commutativity")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "failed at seed")]
+    fn check_reports_failing_seed() {
+        check("always-false", 3, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn random_spd_is_spd() {
+        check("spd", 20, |rng| {
+            let n = dim(rng, 2, 6);
+            let a = random_spd(rng, n, 0.1);
+            crate::linalg::Cholesky::new(&a)
+                .map(|_| ())
+                .map_err(|e| e.to_string())
+        });
+    }
+}

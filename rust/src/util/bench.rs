@@ -1,0 +1,67 @@
+//! Minimal benchmark harness (criterion is not in the offline crate
+//! set). Warms up, runs a fixed number of timed repetitions, and
+//! reports median / mean / sigma. `cargo bench` drives the
+//! `harness = false` targets in `rust/benches/`.
+
+use crate::util::stats;
+use crate::util::timer::thread_cpu_secs;
+
+/// One measured series.
+pub struct BenchResult {
+    pub name: String,
+    pub median_s: f64,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub reps: usize,
+}
+
+impl BenchResult {
+    pub fn print(&self) {
+        println!(
+            "{:<44} median {:>10.6}s  mean {:>10.6}s  sd {:>9.6}s  ({} reps)",
+            self.name, self.median_s, self.mean_s, self.std_s, self.reps
+        );
+    }
+}
+
+/// Time `f` for `reps` repetitions after `warmup` runs (thread-CPU time,
+/// stable under the container's time-slicing).
+pub fn bench<T>(name: &str, warmup: usize, reps: usize, mut f: impl FnMut() -> T) -> BenchResult {
+    for _ in 0..warmup {
+        let _ = f();
+    }
+    let mut times = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let c0 = thread_cpu_secs();
+        let _ = f();
+        times.push(thread_cpu_secs() - c0);
+    }
+    let r = BenchResult {
+        name: name.to_string(),
+        median_s: stats::median(&times),
+        mean_s: stats::mean(&times),
+        std_s: stats::std_dev(&times),
+        reps,
+    };
+    r.print();
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_numbers() {
+        let r = bench("spin", 1, 5, || {
+            let mut s = 0u64;
+            for i in 0..10_000 {
+                s = s.wrapping_add(i);
+            }
+            s
+        });
+        assert!(r.median_s >= 0.0);
+        assert!(r.median_s < 1.0);
+        assert_eq!(r.reps, 5);
+    }
+}

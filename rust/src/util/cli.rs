@@ -1,0 +1,116 @@
+//! Tiny flag parser for the `gparml` binary, examples and benches
+//! (clap is unavailable offline).
+//!
+//! Grammar: positional arguments plus `--key value` / `--flag` pairs.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+/// Parsed command-line arguments.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (not including argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(key) = arg.strip_prefix("--") {
+                if let Some((k, v)) = key.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.flags.insert(key.to_string(), v);
+                } else {
+                    out.flags.insert(key.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    /// Parse the process arguments.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{key} expects a number, got {v:?}")),
+        }
+    }
+
+    pub fn get_str<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn positionals_and_flags() {
+        let a = parse("experiment fig2 --workers 8 --verbose --out=results");
+        assert_eq!(a.positional, vec!["experiment", "fig2"]);
+        assert_eq!(a.get("workers"), Some("8"));
+        assert_eq!(a.get("out"), Some("results"));
+        assert!(a.has("verbose"));
+        assert_eq!(a.get_usize("workers", 1).unwrap(), 8);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("train");
+        assert_eq!(a.get_usize("workers", 4).unwrap(), 4);
+        assert_eq!(a.get_f64("lr", 0.1).unwrap(), 0.1);
+        assert_eq!(a.get_str("config", "small"), "small");
+    }
+
+    #[test]
+    fn bad_numbers_error() {
+        let a = parse("--workers abc");
+        assert!(a.get_usize("workers", 1).is_err());
+    }
+
+    #[test]
+    fn negative_number_as_value() {
+        let a = parse("--offset -3.5");
+        assert_eq!(a.get_f64("offset", 0.0).unwrap(), -3.5);
+    }
+}

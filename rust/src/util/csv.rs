@@ -1,0 +1,77 @@
+//! CSV result writers. Every experiment emits its series to `results/`
+//! so figures can be regenerated/plotted externally (EXPERIMENTS.md).
+
+use std::fs;
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// A CSV table accumulated in memory and flushed to disk.
+pub struct CsvWriter {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl CsvWriter {
+    pub fn new(columns: &[&str]) -> Self {
+        CsvWriter {
+            header: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append a row of f64 cells (formatted with full precision).
+    pub fn row(&mut self, cells: &[f64]) {
+        assert_eq!(cells.len(), self.header.len(), "column count mismatch");
+        self.rows
+            .push(cells.iter().map(|x| format!("{x}")).collect());
+    }
+
+    /// Append a row of preformatted cells.
+    pub fn row_str(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "column count mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut out = self.header.join(",");
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write to `path`, creating parent directories.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            fs::create_dir_all(dir)?;
+        }
+        let mut f =
+            fs::File::create(path).with_context(|| format!("creating {}", path.display()))?;
+        f.write_all(self.to_string().as_bytes())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn formats_rows() {
+        let mut w = CsvWriter::new(&["a", "b"]);
+        w.row(&[1.0, 2.5]);
+        w.row_str(&["x".into(), "y".into()]);
+        assert_eq!(w.to_string(), "a,b\n1,2.5\nx,y\n");
+    }
+
+    #[test]
+    #[should_panic]
+    fn panics_on_column_mismatch() {
+        let mut w = CsvWriter::new(&["a"]);
+        w.row(&[1.0, 2.0]);
+    }
+}

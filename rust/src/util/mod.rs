@@ -1,0 +1,13 @@
+//! Small self-contained substrates: JSON, PRNG, CSV, timing, stats, CLI.
+//!
+//! The offline crate set for this build contains no serde / rand /
+//! clap / criterion, so the handful of utilities the system needs are
+//! implemented here from scratch (documented in DESIGN.md §5).
+
+pub mod bench;
+pub mod cli;
+pub mod csv;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod timer;

@@ -1,0 +1,104 @@
+//! Wall-clock timing helpers for telemetry and the bench harness.
+
+use std::time::Instant;
+
+/// Measure the wall-clock seconds `f` takes, returning (result, secs).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Per-thread CPU seconds (CLOCK_THREAD_CPUTIME_ID).
+///
+/// On this single-core container worker threads are time-sliced, so a
+/// worker's wall-clock inside a map round includes preemption by its
+/// peers. Thread CPU time measures the *work* a node actually did —
+/// exactly what the paper's "time spent in the computations alone"
+/// series needs for the modeled-cluster clock (DESIGN.md §5).
+pub fn thread_cpu_secs() -> f64 {
+    let mut ts = libc::timespec {
+        tv_sec: 0,
+        tv_nsec: 0,
+    };
+    let rc = unsafe { libc::clock_gettime(libc::CLOCK_THREAD_CPUTIME_ID, &mut ts) };
+    if rc != 0 {
+        return 0.0;
+    }
+    ts.tv_sec as f64 + ts.tv_nsec as f64 * 1e-9
+}
+
+/// Measure thread-CPU seconds spent in `f`.
+pub fn cpu_timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let c0 = thread_cpu_secs();
+    let out = f();
+    (out, thread_cpu_secs() - c0)
+}
+
+/// A simple accumulating stopwatch: `start`/`stop` pairs add up.
+#[derive(Debug, Default, Clone)]
+pub struct Stopwatch {
+    total: f64,
+    started: Option<f64>,
+    origin: Option<Instant>,
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn now(&mut self) -> f64 {
+        let origin = *self.origin.get_or_insert_with(Instant::now);
+        origin.elapsed().as_secs_f64()
+    }
+
+    pub fn start(&mut self) {
+        let t = self.now();
+        self.started = Some(t);
+    }
+
+    pub fn stop(&mut self) {
+        if let Some(s) = self.started.take() {
+            let t = self.now();
+            self.total += t - s;
+        }
+    }
+
+    pub fn total_secs(&self) -> f64 {
+        self.total
+    }
+
+    pub fn reset(&mut self) {
+        self.total = 0.0;
+        self.started = None;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timed_returns_value_and_positive_time() {
+        let (v, t) = timed(|| (0..1000).sum::<u64>());
+        assert_eq!(v, 499_500);
+        assert!(t >= 0.0);
+    }
+
+    #[test]
+    fn stopwatch_accumulates() {
+        let mut sw = Stopwatch::new();
+        sw.start();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        sw.stop();
+        let t1 = sw.total_secs();
+        assert!(t1 >= 0.004);
+        sw.start();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        sw.stop();
+        assert!(sw.total_secs() > t1);
+        sw.reset();
+        assert_eq!(sw.total_secs(), 0.0);
+    }
+}

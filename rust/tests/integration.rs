@@ -1,0 +1,289 @@
+//! PJRT runtime integration: the compiled HLO artifacts, executed via
+//! [`gparml::runtime::ShardExecutor`], must agree with (a) the native
+//! Rust mirrors and (b) the recorded JAX oracle totals — proving the
+//! three layers compose with no Python on the execution path.
+
+use std::path::Path;
+
+use gparml::gp::{self, kernel, GlobalParams, Stats};
+use gparml::linalg::Matrix;
+use gparml::runtime::{Manifest, ShardData, ShardExecutor};
+use gparml::util::json::Json;
+use gparml::util::rng::Rng;
+
+fn manifest() -> Manifest {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    Manifest::load(&dir).expect("run `make artifacts` first")
+}
+
+fn mat(j: &Json, rows: usize, cols: usize) -> Matrix {
+    Matrix::from_vec(rows, cols, j.as_f64_flat().unwrap())
+}
+
+/// Load the testvector cases whose shapes match the `test` artifact
+/// config (m=8, q=2, d=3).
+fn artifact_cases() -> Vec<Json> {
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/testvectors.json");
+    let doc = Json::from_file(&path).unwrap();
+    doc.get("cases")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .filter(|c| c.get("m").unwrap().as_usize().unwrap() == 8)
+        .cloned()
+        .collect()
+}
+
+fn case_inputs(c: &Json) -> (GlobalParams, ShardData, Vec<f64>, usize) {
+    let b = c.get("B").unwrap().as_usize().unwrap();
+    let m = c.get("m").unwrap().as_usize().unwrap();
+    let q = c.get("q").unwrap().as_usize().unwrap();
+    let d = c.get("d").unwrap().as_usize().unwrap();
+    let inputs = c.get("inputs").unwrap();
+    let params = GlobalParams {
+        z: mat(inputs.get("Z").unwrap(), m, q),
+        log_ls: inputs.get("log_ls").unwrap().as_f64_flat().unwrap(),
+        log_sf2: inputs.get("log_sf2").unwrap().as_f64().unwrap(),
+        log_beta: inputs.get("log_beta").unwrap().as_f64().unwrap(),
+    };
+    let shard = ShardData {
+        xmu: mat(inputs.get("Xmu").unwrap(), b, q),
+        xvar: mat(inputs.get("Xvar").unwrap(), b, q),
+        y: mat(inputs.get("Y").unwrap(), b, d),
+        kl_weight: c.get("kl_weight").unwrap().as_f64().unwrap(),
+    };
+    let mask = inputs.get("mask").unwrap().as_f64_flat().unwrap();
+    (params, shard, mask, d)
+}
+
+/// Drop the masked-out rows (the oracle uses a random mask; the executor
+/// only masks padding, so bake the oracle mask in by filtering rows).
+fn filter_shard(shard: &ShardData, mask: &[f64], q: usize, d: usize) -> (ShardData, Vec<usize>) {
+    let live: Vec<usize> = mask
+        .iter()
+        .enumerate()
+        .filter(|(_, &m)| m > 0.0)
+        .map(|(i, _)| i)
+        .collect();
+    let filter =
+        |src: &Matrix, cols: usize| Matrix::from_fn(live.len(), cols, |r, j| src[(live[r], j)]);
+    (
+        ShardData {
+            xmu: filter(&shard.xmu, q),
+            xvar: filter(&shard.xvar, q),
+            y: filter(&shard.y, d),
+            kl_weight: shard.kl_weight,
+        },
+        live,
+    )
+}
+
+fn close(a: f64, b: f64, tol: f64) -> bool {
+    (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs()))
+}
+
+#[test]
+fn artifact_stats_match_oracle_stats() {
+    let exec = ShardExecutor::new(&manifest(), "test").unwrap();
+    for c in artifact_cases() {
+        let (params, shard, mask, d) = case_inputs(&c);
+        let (fshard, _) = filter_shard(&shard, &mask, params.q(), d);
+        let st = exec.shard_stats(&params, &fshard).unwrap();
+        let stats_j = c.get("stats").unwrap();
+        let name = c.get("name").unwrap().as_str().unwrap();
+        assert!(
+            close(st.a, stats_j.get("a").unwrap().as_f64().unwrap(), 1e-11),
+            "{name}: a"
+        );
+        assert!(
+            close(st.psi0, stats_j.get("psi0").unwrap().as_f64().unwrap(), 1e-11),
+            "{name}: psi0"
+        );
+        assert!(
+            close(st.kl, stats_j.get("kl").unwrap().as_f64().unwrap(), 1e-11),
+            "{name}: kl"
+        );
+        let m = params.m();
+        let c_exp = mat(stats_j.get("C").unwrap(), m, d);
+        let d_exp = mat(stats_j.get("D").unwrap(), m, m);
+        assert!(st.c.max_abs_diff(&c_exp) < 1e-10, "{name}: C");
+        assert!(st.d.max_abs_diff(&d_exp) < 1e-10, "{name}: D");
+    }
+}
+
+#[test]
+fn full_distributed_gradient_matches_jax_monolithic() {
+    // The complete two-round protocol on one shard:
+    //   stats (artifact) -> bound + adjoints (native) ->
+    //   shard_grads + kmm_grads (artifacts) -> totals == jax.grad totals.
+    let exec = ShardExecutor::new(&manifest(), "test").unwrap();
+    for c in artifact_cases() {
+        let (params, shard, mask, dout) = case_inputs(&c);
+        let name = c.get("name").unwrap().as_str().unwrap();
+        let (fshard, live) = filter_shard(&shard, &mask, params.q(), dout);
+
+        let stats = exec.shard_stats(&params, &fshard).unwrap();
+        let jitter = c.get("jitter").unwrap().as_f64().unwrap();
+        let kmm = kernel::kmm(&params, jitter);
+        let (_bv, adj) = gp::assemble_bound(&stats, &kmm, params.log_beta, dout).unwrap();
+
+        let (mut total, local) = exec.shard_grads(&params, &fshard, &adj).unwrap();
+        let (kmm_art, central) = exec.kmm_grads(&params, &adj.d_kmm).unwrap();
+        assert!(
+            kmm_art.add_diag(jitter).max_abs_diff(&kmm) < 1e-11,
+            "{name}: artifact Kmm"
+        );
+        total.accumulate(&central);
+
+        let grads = c.get("grads").unwrap();
+        let (m, q) = (params.m(), params.q());
+        let dz_exp = mat(grads.get("Z").unwrap(), m, q);
+        assert!(
+            total.d_z.max_abs_diff(&dz_exp) < 1e-7 * (1.0 + dz_exp.max_abs()),
+            "{name}: dZ, max diff {}",
+            total.d_z.max_abs_diff(&dz_exp)
+        );
+        let dls_exp = grads.get("log_ls").unwrap().as_f64_flat().unwrap();
+        for (a, e) in total.d_log_ls.iter().zip(&dls_exp) {
+            assert!(close(*a, *e, 1e-7), "{name}: dlog_ls {a} vs {e}");
+        }
+        assert!(
+            close(
+                total.d_log_sf2,
+                grads.get("log_sf2").unwrap().as_f64().unwrap(),
+                1e-7
+            ),
+            "{name}: dlog_sf2"
+        );
+        assert!(
+            close(
+                adj.d_log_beta,
+                grads.get("log_beta").unwrap().as_f64().unwrap(),
+                1e-8
+            ),
+            "{name}: dlog_beta"
+        );
+
+        // local gradients: oracle rows are indexed by the original layout
+        let b = c.get("B").unwrap().as_usize().unwrap();
+        let dxmu_exp = mat(grads.get("Xmu").unwrap(), b, q);
+        let scale = 1.0 + dxmu_exp.max_abs();
+        for (r, &i) in live.iter().enumerate() {
+            for j in 0..q {
+                let a = local.d_xmu[(r, j)];
+                let e = dxmu_exp[(i, j)];
+                assert!(
+                    (a - e).abs() < 1e-8 * scale,
+                    "{name}: dXmu[{i},{j}] {a} vs {e}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn artifact_predict_matches_native_predict() {
+    let exec = ShardExecutor::new(&manifest(), "test").unwrap();
+    let mut rng = Rng::new(17);
+    let (m, q, d) = (8, 2, 3);
+    let params = GlobalParams {
+        z: Matrix::from_fn(m, q, |_, _| rng.normal()),
+        log_ls: vec![0.1, -0.1],
+        log_sf2: 0.0,
+        log_beta: 2.0,
+    };
+    let n = 40;
+    let shard = ShardData {
+        xmu: Matrix::from_fn(n, q, |_, _| rng.normal()),
+        xvar: Matrix::zeros(n, q),
+        y: Matrix::from_fn(n, d, |_, _| rng.normal()),
+        kl_weight: 0.0,
+    };
+    let stats = exec.shard_stats(&params, &shard).unwrap();
+    let kmm = kernel::kmm(&params, 1e-8);
+    let w = gp::bound::posterior_weights(&stats, &kmm, params.log_beta).unwrap();
+    let t = 7;
+    let xt_mu = Matrix::from_fn(t, q, |_, _| rng.normal());
+    let xt_var = Matrix::zeros(t, q);
+    let (mean_a, var_a) = exec.predict(&params, &xt_mu, &xt_var, &w.w1, &w.wv).unwrap();
+    let (mean_n, var_n) = gp::bound::predict_native(&params, &w, &xt_mu, &xt_var);
+    assert!(mean_a.max_abs_diff(&mean_n) < 1e-10);
+    for (a, b) in var_a.iter().zip(&var_n) {
+        assert!((a - b).abs() < 1e-10);
+    }
+}
+
+#[test]
+fn executor_chunks_large_shards_identically() {
+    // A shard larger than the artifact capacity B must produce the same
+    // statistics as the native path (chunk + pad + mask correctness).
+    let exec = ShardExecutor::new(&manifest(), "test").unwrap();
+    let mut rng = Rng::new(23);
+    let (m, q, d) = (8, 2, 3);
+    let params = GlobalParams {
+        z: Matrix::from_fn(m, q, |_, _| rng.normal()),
+        log_ls: vec![0.0, 0.2],
+        log_sf2: 0.1,
+        log_beta: 1.0,
+    };
+    let n = 101; // deliberately not a multiple of B=32
+    let shard = ShardData {
+        xmu: Matrix::from_fn(n, q, |_, _| rng.normal()),
+        xvar: Matrix::from_fn(n, q, |_, _| 0.05 + rng.uniform()),
+        y: Matrix::from_fn(n, d, |_, _| rng.normal()),
+        kl_weight: 1.0,
+    };
+    let st_art = exec.shard_stats(&params, &shard).unwrap();
+    let st_nat = kernel::shard_stats(
+        &params,
+        &shard.xmu,
+        &shard.xvar,
+        &shard.y,
+        &vec![1.0; n],
+        1.0,
+    );
+    assert!(close(st_art.a, st_nat.a, 1e-11));
+    assert!(close(st_art.psi0, st_nat.psi0, 1e-11));
+    assert!(close(st_art.kl, st_nat.kl, 1e-11));
+    assert!(st_art.c.max_abs_diff(&st_nat.c) < 1e-10);
+    assert!(st_art.d.max_abs_diff(&st_nat.d) < 1e-10);
+    assert_eq!(st_art.n, n as f64);
+}
+
+#[test]
+fn stats_reduce_is_shard_partition_invariant() {
+    // Splitting the data across "nodes" must not change the accumulated
+    // statistics — the core invariant of the paper's reduce step,
+    // exercised through the real artifact path.
+    let exec = ShardExecutor::new(&manifest(), "test").unwrap();
+    let mut rng = Rng::new(29);
+    let (m, q, d) = (8, 2, 3);
+    let params = GlobalParams {
+        z: Matrix::from_fn(m, q, |_, _| rng.normal()),
+        log_ls: vec![0.0, 0.0],
+        log_sf2: 0.0,
+        log_beta: 1.5,
+    };
+    let n = 60;
+    let xmu = Matrix::from_fn(n, q, |_, _| rng.normal());
+    let xvar = Matrix::from_fn(n, q, |_, _| 0.1 + rng.uniform());
+    let y = Matrix::from_fn(n, d, |_, _| rng.normal());
+    let slice = |lo: usize, hi: usize| ShardData {
+        xmu: Matrix::from_fn(hi - lo, q, |i, j| xmu[(lo + i, j)]),
+        xvar: Matrix::from_fn(hi - lo, q, |i, j| xvar[(lo + i, j)]),
+        y: Matrix::from_fn(hi - lo, d, |i, j| y[(lo + i, j)]),
+        kl_weight: 1.0,
+    };
+    let whole = exec.shard_stats(&params, &slice(0, n)).unwrap();
+    for splits in [vec![0, 20, 40, n], vec![0, 7, 13, 44, n]] {
+        let mut acc = Stats::zeros(m, d);
+        for w in splits.windows(2) {
+            acc.accumulate(&exec.shard_stats(&params, &slice(w[0], w[1])).unwrap());
+        }
+        assert!(close(acc.a, whole.a, 1e-12));
+        assert!(acc.c.max_abs_diff(&whole.c) < 1e-11);
+        assert!(acc.d.max_abs_diff(&whole.d) < 1e-11);
+        assert!(close(acc.kl, whole.kl, 1e-12));
+    }
+}

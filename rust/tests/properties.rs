@@ -1,0 +1,286 @@
+//! Property-based tests over the native substrates (randomised invariant
+//! checks via `gparml::testing`; proptest is unavailable offline —
+//! DESIGN.md §5). Every property prints the failing seed on violation.
+
+use gparml::coordinator::partition;
+use gparml::gp::{self, kernel, GlobalParams, Stats};
+use gparml::linalg::{Cholesky, Matrix};
+use gparml::optim::Scg;
+use gparml::testing::{check, close, dim, mat_close, random_matrix, random_spd};
+use gparml::util::json::Json;
+use gparml::util::rng::Rng;
+
+fn random_params(rng: &mut Rng, m: usize, q: usize) -> GlobalParams {
+    GlobalParams {
+        z: random_matrix(rng, m, q, 1.0),
+        log_ls: (0..q).map(|_| 0.3 * rng.normal()).collect(),
+        log_sf2: 0.2 * rng.normal(),
+        log_beta: 1.0 + 0.3 * rng.normal(),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// linalg
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_cholesky_roundtrip() {
+    check("cholesky reconstructs A", 40, |rng| {
+        let n = dim(rng, 1, 10);
+        let a = random_spd(rng, n, 0.3);
+        let ch = Cholesky::new(&a).map_err(|e| e.to_string())?;
+        mat_close(&ch.l().matmul_t(ch.l()), &a, 1e-10, "L L^T")
+    });
+}
+
+#[test]
+fn prop_solve_inverts() {
+    check("A * solve(A, b) == b", 40, |rng| {
+        let n = dim(rng, 1, 9);
+        let a = random_spd(rng, n, 0.4);
+        let cols = dim(rng, 1, 4);
+        let b = random_matrix(rng, n, cols, 1.0);
+        let ch = Cholesky::new(&a).map_err(|e| e.to_string())?;
+        mat_close(&a.matmul(&ch.solve(&b)), &b, 1e-9, "Ax = b")
+    });
+}
+
+#[test]
+fn prop_logdet_scaling() {
+    check("log|cA| = n log c + log|A|", 30, |rng| {
+        let n = dim(rng, 2, 8);
+        let a = random_spd(rng, n, 0.5);
+        let c = 0.5 + rng.uniform() * 2.0;
+        let ld_a = Cholesky::new(&a).unwrap().log_det();
+        let ld_ca = Cholesky::new(&a.scale(c)).unwrap().log_det();
+        close(ld_ca, n as f64 * c.ln() + ld_a, 1e-10, "logdet scaling")
+    });
+}
+
+#[test]
+fn prop_matmul_associative() {
+    check("(AB)C == A(BC)", 30, |rng| {
+        let (a, b, c, d) = (dim(rng, 1, 6), dim(rng, 1, 6), dim(rng, 1, 6), dim(rng, 1, 6));
+        let x = random_matrix(rng, a, b, 1.0);
+        let y = random_matrix(rng, b, c, 1.0);
+        let z = random_matrix(rng, c, d, 1.0);
+        mat_close(
+            &x.matmul(&y).matmul(&z),
+            &x.matmul(&y.matmul(&z)),
+            1e-11,
+            "associativity",
+        )
+    });
+}
+
+// ---------------------------------------------------------------------------
+// kernel statistics
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_stats_additive_under_any_partition() {
+    check("stats additive over random partition", 20, |rng| {
+        let (m, q, d) = (dim(rng, 2, 6), dim(rng, 1, 3), dim(rng, 1, 4));
+        let n = dim(rng, 4, 24);
+        let p = random_params(rng, m, q);
+        let xmu = random_matrix(rng, n, q, 1.0);
+        let xvar = Matrix::from_fn(n, q, |_, _| 0.05 + rng.uniform());
+        let y = random_matrix(rng, n, d, 1.0);
+        let whole = kernel::shard_stats(&p, &xmu, &xvar, &y, &vec![1.0; n], 1.0);
+        // random split point
+        let k = 1 + rng.below(n - 1);
+        let shards = partition(&xmu, &xvar, &y, 1.0, 1 + k.min(4));
+        let mut acc = Stats::zeros(m, d);
+        for s in &shards {
+            acc.accumulate(&kernel::shard_stats(
+                &p, &s.xmu, &s.xvar, &s.y, &vec![1.0; s.len()], 1.0,
+            ));
+        }
+        close(acc.a, whole.a, 1e-11, "a")?;
+        close(acc.psi0, whole.psi0, 1e-11, "psi0")?;
+        close(acc.kl, whole.kl, 1e-11, "kl")?;
+        mat_close(&acc.c, &whole.c, 1e-11, "C")?;
+        mat_close(&acc.d, &whole.d, 1e-11, "D")
+    });
+}
+
+#[test]
+fn prop_psi2_symmetric_psd() {
+    check("Psi2 symmetric and PSD", 25, |rng| {
+        let (m, q) = (dim(rng, 2, 7), dim(rng, 1, 3));
+        let n = dim(rng, 3, 15);
+        let p = random_params(rng, m, q);
+        let xmu = random_matrix(rng, n, q, 1.0);
+        let xvar = Matrix::from_fn(n, q, |_, _| 0.05 + rng.uniform());
+        let y = random_matrix(rng, n, 2, 1.0);
+        let st = kernel::shard_stats(&p, &xmu, &xvar, &y, &vec![1.0; n], 1.0);
+        mat_close(&st.d, &st.d.transpose(), 1e-11, "symmetry")?;
+        // PSD: Psi2 = sum_i E[k k^T] is a sum of PSD expectations
+        Cholesky::new(&st.d.add_diag(1e-9))
+            .map(|_| ())
+            .map_err(|e| format!("not PSD: {e}"))
+    });
+}
+
+#[test]
+fn prop_bound_invariant_to_inducing_permutation() {
+    check("F invariant under permutation of Z rows", 20, |rng| {
+        let (m, q, d) = (dim(rng, 3, 7), dim(rng, 1, 3), dim(rng, 1, 3));
+        let n = dim(rng, 5, 20);
+        let p = random_params(rng, m, q);
+        let xmu = random_matrix(rng, n, q, 1.0);
+        let xvar = Matrix::from_fn(n, q, |_, _| 0.05 + rng.uniform());
+        let y = random_matrix(rng, n, d, 1.0);
+        let f_of = |pp: &GlobalParams| {
+            let st = kernel::shard_stats(pp, &xmu, &xvar, &y, &vec![1.0; n], 1.0);
+            let kmm = kernel::kmm(pp, 1e-8);
+            gp::assemble_bound(&st, &kmm, pp.log_beta, d).unwrap().0.f
+        };
+        let f1 = f_of(&p);
+        // permute inducing points
+        let mut order: Vec<usize> = (0..m).collect();
+        rng.shuffle(&mut order);
+        let p2 = GlobalParams {
+            z: Matrix::from_fn(m, q, |i, j| p.z[(order[i], j)]),
+            ..p.clone()
+        };
+        let f2 = f_of(&p2);
+        // permuting rows changes the Cholesky elimination order, so exact
+        // bit-equality is not expected — only agreement to solver roundoff
+        close(f1, f2, 1e-7, "permutation invariance")
+    });
+}
+
+#[test]
+fn prop_collapsed_bound_below_exact_marginal() {
+    check("F <= exact log marginal (regression)", 20, |rng| {
+        let q = dim(rng, 1, 2);
+        let (m, d) = (dim(rng, 2, 6), dim(rng, 1, 3));
+        let n = dim(rng, 6, 18);
+        let p = random_params(rng, m, q);
+        let x = random_matrix(rng, n, q, 1.0);
+        let y = random_matrix(rng, n, d, 1.0);
+        let st = kernel::shard_stats(&p, &x, &Matrix::zeros(n, q), &y, &vec![1.0; n], 0.0);
+        let kmm = kernel::kmm(&p, 1e-10);
+        let f = gp::assemble_bound(&st, &kmm, p.log_beta, d).unwrap().0.f;
+        let exact = gp::exact::log_marginal(&p, &x, &y).unwrap();
+        if f <= exact + 1e-7 {
+            Ok(())
+        } else {
+            Err(format!("bound {f} above exact {exact}"))
+        }
+    });
+}
+
+#[test]
+fn prop_adjoints_match_finite_differences() {
+    check("adjoint dD/dC match finite differences", 12, |rng| {
+        let (m, d) = (dim(rng, 2, 5), dim(rng, 1, 3));
+        let n = dim(rng, 5, 15);
+        let p = random_params(rng, m, 2);
+        let xmu = random_matrix(rng, n, 2, 1.0);
+        let xvar = Matrix::from_fn(n, 2, |_, _| 0.05 + rng.uniform());
+        let y = random_matrix(rng, n, d, 1.0);
+        let st = kernel::shard_stats(&p, &xmu, &xvar, &y, &vec![1.0; n], 1.0);
+        let kmm = kernel::kmm(&p, 1e-6);
+        let (_, adj) = gp::assemble_bound(&st, &kmm, p.log_beta, d).unwrap();
+        let eps = 1e-6;
+        let (i, j) = (rng.below(m), rng.below(m));
+        let mut sp = st.clone();
+        sp.d[(i, j)] += eps;
+        let fp = gp::assemble_bound(&sp, &kmm, p.log_beta, d).unwrap().0.f;
+        let mut sm = st.clone();
+        sm.d[(i, j)] -= eps;
+        let fm = gp::assemble_bound(&sm, &kmm, p.log_beta, d).unwrap().0.f;
+        close(adj.d_d[(i, j)], (fp - fm) / (2.0 * eps), 2e-4, "dD fd")
+    });
+}
+
+// ---------------------------------------------------------------------------
+// optimiser
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_scg_descends_random_convex_quadratics() {
+    check("SCG minimises random SPD quadratics", 15, |rng| {
+        let n = dim(rng, 2, 8);
+        let a = random_spd(rng, n, 0.5);
+        let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mut obj = |x: &[f64]| {
+            let ax = a.matvec(x);
+            let f = 0.5
+                * x.iter().zip(&ax).map(|(xi, axi)| xi * axi).sum::<f64>()
+                - b.iter().zip(x).map(|(bi, xi)| bi * xi).sum::<f64>();
+            let g: Vec<f64> = ax.iter().zip(&b).map(|(axi, bi)| axi - bi).collect();
+            (f, g)
+        };
+        let x0: Vec<f64> = (0..n).map(|_| 3.0 * rng.normal()).collect();
+        let mut scg = Scg::new(x0, &mut obj);
+        for _ in 0..20 * n {
+            scg.step(&mut obj);
+        }
+        // check gradient is (nearly) zero at the solution
+        let (_, g) = obj(&scg.x().to_vec().as_slice());
+        let gnorm: f64 = g.iter().map(|v| v * v).sum::<f64>().sqrt();
+        if gnorm < 1e-4 {
+            Ok(())
+        } else {
+            Err(format!("gradient norm {gnorm} after convergence"))
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// util substrates
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_json_roundtrip_random_documents() {
+    check("json parse(emit(v)) == v", 50, |rng| {
+        fn random_json(rng: &mut Rng, depth: usize) -> Json {
+            match if depth == 0 { rng.below(3) } else { rng.below(5) } {
+                0 => Json::Num((rng.normal() * 100.0 * 8.0).round() / 8.0),
+                1 => Json::Bool(rng.flip(0.5)),
+                2 => Json::Str(format!("s{}✓\"x\n", rng.below(1000))),
+                3 => Json::Arr((0..rng.below(4)).map(|_| random_json(rng, depth - 1)).collect()),
+                _ => Json::Obj(
+                    (0..rng.below(4))
+                        .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                        .collect(),
+                ),
+            }
+        }
+        let v = random_json(rng, 3);
+        let back = Json::parse(&v.to_string()).map_err(|e| e.to_string())?;
+        if back == v {
+            Ok(())
+        } else {
+            Err(format!("{v:?} != {back:?}"))
+        }
+    });
+}
+
+#[test]
+fn prop_partition_is_exact_cover() {
+    check("partition covers each point exactly once", 30, |rng| {
+        let n = dim(rng, 1, 200);
+        let k = dim(rng, 1, 16).min(n);
+        let xmu = Matrix::from_fn(n, 1, |i, _| i as f64);
+        let shards = partition(&xmu, &Matrix::zeros(n, 1), &Matrix::zeros(n, 1), 0.0, k);
+        let mut seen = vec![false; n];
+        for s in &shards {
+            for i in 0..s.len() {
+                let idx = s.xmu[(i, 0)] as usize;
+                if seen[idx] {
+                    return Err(format!("point {idx} covered twice"));
+                }
+                seen[idx] = true;
+            }
+        }
+        if seen.iter().all(|s| *s) {
+            Ok(())
+        } else {
+            Err("missing points".into())
+        }
+    });
+}

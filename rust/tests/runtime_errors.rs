@@ -1,0 +1,143 @@
+//! Failure-path coverage: the runtime and coordinator must fail loudly
+//! and informatively on bad artifacts, shape mismatches and invalid
+//! configurations — not deep inside the C++ layer.
+
+use std::path::PathBuf;
+
+use gparml::coordinator::{partition, TrainConfig, Trainer};
+use gparml::gp::GlobalParams;
+use gparml::linalg::Matrix;
+use gparml::runtime::{Manifest, ShardData, ShardExecutor};
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("gparml_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn missing_manifest_is_a_clean_error() {
+    let err = Manifest::load(&tmpdir("nomanifest")).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("manifest.json"), "unhelpful error: {msg}");
+}
+
+#[test]
+fn unknown_config_lists_available_ones() {
+    let man = Manifest::load(&artifacts_dir()).unwrap();
+    let err = man.config("nonexistent").unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("nonexistent") && msg.contains("test"), "{msg}");
+}
+
+#[test]
+fn corrupt_hlo_fails_at_compile_with_path() {
+    let dir = tmpdir("corrupt");
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{"dtype":"f64","configs":{"bad":{"m":4,"q":2,"d":3,"B":16,"block_n":8,
+           "entries":{"shard_stats":"bad.hlo.txt","shard_grads":"bad.hlo.txt",
+                      "kmm_grads":"bad.hlo.txt","predict":"bad.hlo.txt"}}}}"#,
+    )
+    .unwrap();
+    std::fs::write(dir.join("bad.hlo.txt"), "this is not HLO").unwrap();
+    let man = Manifest::load(&dir).unwrap();
+    let err = match ShardExecutor::new(&man, "bad") {
+        Err(e) => e,
+        Ok(_) => panic!("corrupt HLO compiled"),
+    };
+    let msg = format!("{err:#}");
+    assert!(msg.contains("bad.hlo.txt"), "error lost the artifact path: {msg}");
+}
+
+#[test]
+fn params_shape_mismatch_rejected_before_execution() {
+    let man = Manifest::load(&artifacts_dir()).unwrap();
+    let exec = ShardExecutor::new(&man, "test").unwrap(); // m=8, q=2
+    let wrong = GlobalParams {
+        z: Matrix::zeros(5, 2), // wrong m
+        log_ls: vec![0.0, 0.0],
+        log_sf2: 0.0,
+        log_beta: 0.0,
+    };
+    let shard = ShardData {
+        xmu: Matrix::zeros(4, 2),
+        xvar: Matrix::zeros(4, 2),
+        y: Matrix::zeros(4, 3),
+        kl_weight: 0.0,
+    };
+    let err = exec.shard_stats(&wrong, &shard).unwrap_err();
+    assert!(format!("{err:#}").contains("match artifact config"));
+}
+
+#[test]
+fn trainer_rejects_mismatched_shard_count() {
+    let cfg = TrainConfig {
+        artifact: "test".into(),
+        artifacts_dir: artifacts_dir(),
+        workers: 3,
+        ..Default::default()
+    };
+    let params = GlobalParams {
+        z: Matrix::zeros(8, 2),
+        log_ls: vec![0.0, 0.0],
+        log_sf2: 0.0,
+        log_beta: 0.0,
+    };
+    let xmu = Matrix::zeros(10, 2);
+    let shards = partition(&xmu, &Matrix::zeros(10, 2), &Matrix::zeros(10, 3), 0.0, 2);
+    let err = match Trainer::new(cfg, params, shards) {
+        Err(e) => e,
+        Ok(_) => panic!("mismatched shard count accepted"),
+    };
+    assert!(format!("{err:#}").contains("one shard per worker"));
+}
+
+#[test]
+fn trainer_rejects_wrong_artifact_shape() {
+    let cfg = TrainConfig {
+        artifact: "test".into(), // m=8
+        artifacts_dir: artifacts_dir(),
+        workers: 1,
+        ..Default::default()
+    };
+    let params = GlobalParams {
+        z: Matrix::zeros(16, 2), // m=16 mismatch
+        log_ls: vec![0.0, 0.0],
+        log_sf2: 0.0,
+        log_beta: 0.0,
+    };
+    let xmu = Matrix::zeros(8, 2);
+    let shards = partition(&xmu, &Matrix::zeros(8, 2), &Matrix::zeros(8, 3), 0.0, 1);
+    let err = match Trainer::new(cfg, params, shards) {
+        Err(e) => e,
+        Ok(_) => panic!("wrong artifact shape accepted"),
+    };
+    assert!(format!("{err:#}").contains("does not match artifact"));
+}
+
+#[test]
+fn empty_shard_yields_zero_stats() {
+    let man = Manifest::load(&artifacts_dir()).unwrap();
+    let exec = ShardExecutor::new(&man, "test").unwrap();
+    let params = GlobalParams {
+        z: Matrix::zeros(8, 2),
+        log_ls: vec![0.0, 0.0],
+        log_sf2: 0.0,
+        log_beta: 0.0,
+    };
+    let shard = ShardData {
+        xmu: Matrix::zeros(0, 2),
+        xvar: Matrix::zeros(0, 2),
+        y: Matrix::zeros(0, 3),
+        kl_weight: 0.0,
+    };
+    let st = exec.shard_stats(&params, &shard).unwrap();
+    assert_eq!(st.n, 0.0);
+    assert_eq!(st.a, 0.0);
+    assert_eq!(st.d.max_abs(), 0.0);
+}
