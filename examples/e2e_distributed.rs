@@ -1,20 +1,31 @@
-//! END-TO-END DRIVER: the full three-layer system on a real workload.
+//! END-TO-END DRIVER: the full system on a real workload.
 //!
 //! Trains the distributed GPLVM/sparse-GP stack on the paper's synthetic
 //! benchmark at a configurable scale (default 20K points — pass
-//! `--n 100000` for the paper's headline size), over a worker pool
-//! executing the AOT Pallas/HLO artifacts via PJRT, with the full
-//! two-round Map-Reduce protocol and distributed SCG. Logs the bound
-//! ("loss curve"), per-iteration load distribution, modeled-parallel and
-//! measured times; writes results/e2e_run.csv (recorded in
-//! EXPERIMENTS.md).
+//! `--n 100000` for the paper's headline size), with the full two-round
+//! Map-Reduce protocol and distributed SCG, over either cluster
+//! backend:
+//!
+//! * `--cluster threads` (default): worker nodes as OS threads;
+//! * `--cluster tcp`: worker nodes as REAL spawned processes — this
+//!   example re-executes itself in worker mode and drives the
+//!   processes over the localhost wire protocol, reporting the
+//!   constant-size network traffic per iteration.
+//!
+//! Logs the bound ("loss curve"), per-iteration load distribution,
+//! modeled-parallel and measured times; writes results/e2e_run.csv
+//! (recorded in EXPERIMENTS.md).
 //!
 //! ```sh
-//! make artifacts && cargo run --release --example e2e_distributed -- \
-//!     [--n 20000] [--workers 8] [--iters 20] [--model lvm|reg]
+//! cargo run --release --example e2e_distributed -- \
+//!     [--n 20000] [--workers 8] [--iters 20] [--model lvm|reg] [--cluster tcp]
 //! ```
 
-use anyhow::Result;
+use std::net::TcpListener;
+use std::process::{Child, Command, Stdio};
+
+use anyhow::{Context, Result};
+use gparml::cluster::Backend;
 use gparml::coordinator::{partition, GlobalOpt, ModelKind, TrainConfig, Trainer};
 use gparml::data::synthetic;
 use gparml::gp::GlobalParams;
@@ -26,16 +37,36 @@ use gparml::util::stats;
 
 fn main() -> Result<()> {
     let args = Args::from_env();
+
+    // hidden worker mode: `--worker-connect ADDR` turns this very
+    // binary into a cluster node (used by `--cluster tcp` below)
+    if let Some(addr) = args.get("worker-connect") {
+        let artifacts = gparml::runtime::default_artifacts_dir();
+        gparml::cluster::node::run_worker_connect(addr, &artifacts)?;
+        return Ok(());
+    }
+
     let n = args.get_usize("n", 20_000)?;
     let workers = args.get_usize("workers", 8)?;
     let iters = args.get_usize("iters", 20)?;
     let seed = args.get_usize("seed", 0)? as u64;
     let lvm = args.get_str("model", "reg") == "lvm";
+    let tcp = args.get_str("cluster", "threads") == "tcp";
 
     println!("=== gparml end-to-end driver ===");
     println!("dataset : {n} points, 1D latent -> 3D observations (paper §4.2)");
-    println!("cluster : {workers} worker nodes (threads), artifacts via PJRT");
-    println!("model   : {}", if lvm { "Bayesian GPLVM" } else { "sparse GP regression" });
+    println!(
+        "cluster : {workers} worker nodes ({})",
+        if tcp {
+            "spawned processes over TCP"
+        } else {
+            "threads in-process"
+        }
+    );
+    println!(
+        "model   : {}",
+        if lvm { "Bayesian GPLVM" } else { "sparse GP regression" }
+    );
 
     let data = synthetic::generate(n, 0.05, seed);
     let mut rng = Rng::new(seed ^ 21);
@@ -83,15 +114,42 @@ fn main() -> Result<()> {
         seed,
         ..Default::default()
     };
-    let mut t = Trainer::new(cfg, params, shards)?;
+
+    if tcp {
+        let listener = TcpListener::bind("127.0.0.1:0").context("binding leader port")?;
+        let addr = listener.local_addr()?.to_string();
+        println!("leader  : listening on {addr}, spawning {workers} worker processes");
+        let me = std::env::current_exe().context("locating own binary")?;
+        let procs: Vec<Child> = (0..workers)
+            .map(|_| {
+                Command::new(&me)
+                    .args(["--worker-connect", &addr])
+                    .stdout(Stdio::null())
+                    .spawn()
+                    .context("spawning worker process")
+            })
+            .collect::<Result<_>>()?;
+        let t = Trainer::accept_tcp(cfg, params, shards, &listener)?;
+        let result = run(t, n, iters, lvm, seed);
+        for mut p in procs {
+            let _ = p.wait();
+        }
+        return result;
+    }
+
+    let t = Trainer::new(cfg, params, shards)?;
+    run(t, n, iters, lvm, seed)
+}
+
+fn run<B: Backend>(mut t: Trainer<B>, n: usize, iters: usize, lvm: bool, seed: u64) -> Result<()> {
     println!(
-        "startup (clients + artifact compilation): {:.2}s\n",
+        "startup (node state + executor construction): {:.2}s\n",
         t.log.startup_secs
     );
 
     println!(
-        "{:>5} {:>16} {:>12} {:>12} {:>12} {:>8}",
-        "iter", "bound F", "modeled(s)", "compute(s)", "wall(s)", "gap%"
+        "{:>5} {:>16} {:>12} {:>12} {:>12} {:>8} {:>12}",
+        "iter", "bound F", "modeled(s)", "compute(s)", "wall(s)", "gap%", "net KiB"
     );
     let mut csv = CsvWriter::new(&[
         "iter",
@@ -100,20 +158,23 @@ fn main() -> Result<()> {
         "total_compute_s",
         "measured_wall_s",
         "load_gap_pct",
+        "net_bytes",
     ]);
     for i in 0..iters {
         let f = t.step()?;
         let it = t.log.iterations.last().unwrap();
         let (_, mean, max) = it.load_min_mean_max();
         let gap = if mean > 0.0 { (max - mean) / mean * 100.0 } else { 0.0 };
+        let (tx, rx) = it.network_bytes();
         println!(
-            "{:>5} {:>16.2} {:>12.4} {:>12.4} {:>12.4} {:>8.2}",
+            "{:>5} {:>16.2} {:>12.4} {:>12.4} {:>12.4} {:>8.2} {:>12.1}",
             i,
             f,
             it.modeled_parallel_secs(),
             it.total_compute_secs(),
             it.measured_wall_secs(),
-            gap
+            gap,
+            (tx + rx) as f64 / 1024.0
         );
         csv.row(&[
             i as f64,
@@ -122,6 +183,7 @@ fn main() -> Result<()> {
             it.total_compute_secs(),
             it.measured_wall_secs(),
             gap,
+            (tx + rx) as f64,
         ]);
     }
 
@@ -136,18 +198,22 @@ fn main() -> Result<()> {
         "  point-throughput (modeled): {:.0} points/s through the full two-round protocol",
         throughput
     );
-    println!("  mean load gap (max vs mean worker): {:.2}%", t.log.mean_load_gap() * 100.0);
+    println!(
+        "  mean load gap (max vs mean worker): {:.2}%",
+        t.log.mean_load_gap() * 100.0
+    );
+    let (tx, rx) = t.log.total_network_bytes();
+    if tx + rx > 0 {
+        println!(
+            "  network total: {:.1} KiB out, {:.1} KiB in — constant per iteration, \
+             independent of n (paper requirement 3)",
+            tx as f64 / 1024.0,
+            rx as f64 / 1024.0
+        );
+    }
 
     // fit quality on a held-out slice
     let nt = 500.min(n / 10);
-    let mut trng = Rng::new(seed ^ 0xE2E);
-    let xt = Matrix::from_fn(nt, 2, |_, j| {
-        if j == 0 {
-            trng.range(-3.0, 3.0)
-        } else {
-            0.0
-        }
-    });
     if !lvm {
         let test = synthetic::generate(nt, 0.0, seed ^ 0x7E57);
         let xt_true = Matrix::from_fn(nt, 2, |i, j| {
@@ -165,7 +231,6 @@ fn main() -> Result<()> {
             }
         }
         println!("  held-out RMSE: {:.4}", stats::mean(&se).sqrt());
-        let _ = xt;
     }
 
     let path = std::path::Path::new("results/e2e_run.csv");

@@ -65,7 +65,7 @@ fn main() -> Result<()> {
     }
 
     // embedding quality: class separation in the learned latent space
-    let locals = trainer.gather_locals();
+    let locals = trainer.gather_locals()?;
     let mut emb = Matrix::zeros(n, q);
     let mut row = 0;
     for (mu, _) in &locals {

@@ -67,7 +67,7 @@ fn main() -> Result<()> {
     }
 
     // gather training latents for reconstruction inits
-    let locals = trainer.gather_locals();
+    let locals = trainer.gather_locals()?;
     let mut latents = Matrix::zeros(n, q);
     let mut row = 0;
     for (mu, _) in &locals {

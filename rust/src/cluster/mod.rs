@@ -1,0 +1,76 @@
+//! The cluster layer: pluggable Map-Reduce backends.
+//!
+//! The paper's inference is two map rounds plus a constant-size reduce
+//! per iteration (§3.2). [`Backend`] abstracts *where* those rounds
+//! run:
+//!
+//! * [`PoolBackend`] — worker nodes as OS threads in this process
+//!   (the original GParML multicore setting; zero-copy, no sockets).
+//! * [`TcpBackend`] — worker nodes as separate processes speaking the
+//!   versioned binary [`wire`] protocol over TCP, with leader-side
+//!   membership: a dead socket or missed heartbeat maps the worker
+//!   onto the paper's §5.2 drop-the-partial-term failure path instead
+//!   of stalling the round.
+//!
+//! Both backends drive the same [`node::WorkerNode`] request handler,
+//! and every number crosses the TCP wire bit-for-bit, so for a fixed
+//! seed the two backends produce *identical* training traces (enforced
+//! by `tests/cluster.rs`).
+
+pub mod node;
+pub mod pool;
+pub mod tcp;
+pub mod wire;
+
+pub use node::WorkerNode;
+pub use pool::PoolBackend;
+pub use tcp::TcpBackend;
+
+/// One worker's reply to a map round, with the accounting the
+/// telemetry layer records per round.
+#[derive(Debug, Clone)]
+pub struct WorkerReply {
+    pub worker: usize,
+    pub value: wire::Response,
+    /// In-map thread-CPU seconds on the worker (the modeled-cluster
+    /// clock; see `telemetry`).
+    pub secs: f64,
+    /// Leader -> worker bytes for this request (0 in-process).
+    pub bytes_tx: u64,
+    /// Worker -> leader bytes for this reply (0 in-process).
+    pub bytes_rx: u64,
+}
+
+/// A Map-Reduce backend: broadcasts one request to a set of workers
+/// and collects per-worker replies.
+///
+/// Every collection method returns **one slot per worker** (length ==
+/// `workers()`): `None` means the worker was excluded from the round
+/// *or* is dead/unreachable — the caller can tell which from its own
+/// `include` mask, and must treat an unexpectedly-missing reply as the
+/// paper's §5.2 dropped partial term, never as "fewer shards".
+pub trait Backend {
+    /// Total worker slots in the cluster (dead ones included).
+    fn workers(&self) -> usize;
+
+    /// Broadcast `req` to the workers with `include[k] == true`;
+    /// barrier-collect their replies. Must not block indefinitely on a
+    /// dead worker.
+    fn map_subset(&mut self, include: &[bool], req: &wire::Request) -> Vec<Option<WorkerReply>>;
+
+    /// Broadcast to every worker.
+    fn map(&mut self, req: &wire::Request) -> Vec<Option<WorkerReply>> {
+        let include = vec![true; self.workers()];
+        self.map_subset(&include, req)
+    }
+
+    /// Send to a single worker.
+    fn map_one(&mut self, k: usize, req: &wire::Request) -> Option<WorkerReply>;
+
+    /// Probe liveness (cheap); returns the current alive mask.
+    fn heartbeat(&mut self) -> Vec<bool>;
+
+    /// Politely stop the cluster (no-op for threads; sends `Shutdown`
+    /// frames over TCP).
+    fn shutdown(&mut self);
+}

@@ -1,0 +1,251 @@
+//! Worker-node state and the worker daemon loop.
+//!
+//! [`WorkerNode`] is the single implementation of the per-node state
+//! machine (executor + data shard + local optimiser state) shared by
+//! *both* backends: the in-process [`PoolBackend`](super::PoolBackend)
+//! runs one `WorkerNode` per OS thread, the TCP daemon runs one per
+//! process. Keeping the request handler identical is what makes the
+//! two backends bit-for-bit interchangeable.
+//!
+//! The daemon (`gparml worker --connect LEADER` or `--listen ADDR`)
+//! speaks the `wire` protocol: handshake (`Hello`/`HelloAck`), one
+//! `Init` frame carrying shapes + shard, then a request/response loop
+//! until `Shutdown` or leader disconnect.
+
+use std::net::{TcpListener, TcpStream};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::linalg::Matrix;
+use crate::optim::Adam;
+use crate::runtime::{build_executor, ShardData, ShardExecutor};
+use crate::util::timer::thread_cpu_secs;
+
+use super::wire::{self, Frame, Init, Request, Response};
+
+/// Per-node state: compiled executor, the data shard, and local
+/// optimiser state for the LVM's q(X) parameters.
+pub struct WorkerNode {
+    exec: ShardExecutor,
+    shard: ShardData,
+    adam_mu: Adam,
+    adam_ls: Adam, // over log s
+    local_lr: f64,
+    min_xvar: f64,
+    lvm: bool,
+}
+
+impl WorkerNode {
+    /// Build the node from an `Init` message. Native builds need only
+    /// the shapes; PJRT builds compile the artifacts from
+    /// `artifacts_dir`.
+    pub fn build(init: &Init, artifacts_dir: &Path) -> Result<WorkerNode> {
+        let exec = build_executor(&init.artifact, artifacts_dir)?;
+        let shard = init.shard.clone();
+        let dof = shard.xmu.rows() * shard.xmu.cols();
+        Ok(WorkerNode {
+            exec,
+            shard,
+            adam_mu: Adam::new(dof, init.local_lr),
+            adam_ls: Adam::new(dof, init.local_lr),
+            local_lr: init.local_lr,
+            min_xvar: init.min_xvar,
+            lvm: init.lvm,
+        })
+    }
+
+    /// Apply one local ascent step on (mu, log s) from raw-space grads
+    /// (paper step 4: "at the same time the end-point nodes optimise
+    /// L_k").
+    fn local_update(&mut self, d_xmu: &Matrix, d_xvar: &Matrix) {
+        if !self.lvm || self.shard.len() == 0 {
+            return;
+        }
+        // minimise -F: negate the ascent gradients
+        let g_mu: Vec<f64> = d_xmu.data().iter().map(|g| -g).collect();
+        // chain rule d/dlog s = s * d/ds
+        let g_ls: Vec<f64> = d_xvar
+            .data()
+            .iter()
+            .zip(self.shard.xvar.data())
+            .map(|(g, s)| -g * s)
+            .collect();
+        self.adam_mu.step(self.shard.xmu.data_mut(), &g_mu);
+        let mut log_s: Vec<f64> = self
+            .shard
+            .xvar
+            .data()
+            .iter()
+            .map(|s| s.max(self.min_xvar).ln())
+            .collect();
+        self.adam_ls.step(&mut log_s, &g_ls);
+        for (s, l) in self.shard.xvar.data_mut().iter_mut().zip(&log_s) {
+            *s = l.exp().max(self.min_xvar);
+        }
+    }
+
+    /// Execute one request. Errors are folded into [`Response::Err`] so
+    /// the node never dies on a bad request — the leader decides.
+    pub fn handle(&mut self, req: &Request) -> Response {
+        match self.dispatch(req) {
+            Ok(resp) => resp,
+            Err(e) => Response::Err(format!("{e:#}")),
+        }
+    }
+
+    fn dispatch(&mut self, req: &Request) -> Result<Response> {
+        Ok(match req {
+            Request::Stats { params } => {
+                Response::Stats(self.exec.shard_stats(params, &self.shard)?)
+            }
+            Request::Grads {
+                params,
+                adj,
+                update_locals,
+            } => {
+                let (g, local) = self.exec.shard_grads(params, &self.shard, adj)?;
+                if *update_locals {
+                    self.local_update(&local.d_xmu, &local.d_xvar);
+                }
+                Response::Grads(g)
+            }
+            Request::FetchShard { clear } => {
+                let s = self.shard.clone();
+                if *clear {
+                    self.shard = ShardData {
+                        xmu: Matrix::zeros(0, s.xmu.cols()),
+                        xvar: Matrix::zeros(0, s.xvar.cols()),
+                        y: Matrix::zeros(0, s.y.cols()),
+                        kl_weight: s.kl_weight,
+                    };
+                }
+                Response::Shard(s)
+            }
+            Request::AppendShard { part } => {
+                self.shard.xmu = self.shard.xmu.vstack(&part.xmu);
+                self.shard.xvar = self.shard.xvar.vstack(&part.xvar);
+                self.shard.y = self.shard.y.vstack(&part.y);
+                // optimiser state is shape-bound: rebuild (documented
+                // trade-off of the reassign strategy)
+                let dof = self.shard.xmu.rows() * self.shard.xmu.cols();
+                self.adam_mu = Adam::new(dof, self.local_lr);
+                self.adam_ls = Adam::new(dof, self.local_lr);
+                Response::Ok
+            }
+            Request::GatherLocals => Response::Locals {
+                xmu: self.shard.xmu.clone(),
+                xvar: self.shard.xvar.clone(),
+            },
+            Request::Predict {
+                params,
+                xt_mu,
+                xt_var,
+                w1,
+                wv,
+            } => {
+                let (mean, var) = self.exec.predict(params, xt_mu, xt_var, w1, wv)?;
+                Response::Predict { mean, var }
+            }
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// worker daemon
+// ---------------------------------------------------------------------------
+
+/// Serve one leader over an established connection until `Shutdown` or
+/// disconnect. Returns the number of requests served.
+pub fn serve_connection(mut stream: TcpStream, artifacts_dir: &Path) -> Result<u64> {
+    stream.set_nodelay(true).ok();
+
+    // handshake: leader assigns our worker id
+    let worker_id = match wire::read_frame(&mut stream)? {
+        Some((Frame::Hello { worker_id }, _)) => worker_id,
+        Some((f, _)) => bail!("expected Hello, got {f:?}"),
+        None => bail!("leader disconnected before Hello"),
+    };
+    wire::write_frame(&mut stream, &Frame::HelloAck)?;
+
+    // initialisation: shapes, model flags and our shard
+    let built = match wire::read_frame(&mut stream)? {
+        Some((Frame::Init(init), _)) => WorkerNode::build(&init, artifacts_dir)
+            .with_context(|| format!("worker {worker_id}: building node state")),
+        Some((f, _)) => bail!("expected Init, got {f:?}"),
+        None => bail!("leader disconnected before Init"),
+    };
+    let mut node = match built {
+        Ok(node) => node,
+        Err(e) => {
+            // tell the leader why before dying, instead of letting its
+            // handshake read run into the timeout
+            let _ = wire::write_frame(
+                &mut stream,
+                &Frame::Response {
+                    secs: 0.0,
+                    resp: Box::new(Response::Err(format!("{e:#}"))),
+                },
+            );
+            return Err(e);
+        }
+    };
+    wire::write_frame(
+        &mut stream,
+        &Frame::Response {
+            secs: 0.0,
+            resp: Box::new(Response::Ok),
+        },
+    )?;
+    eprintln!(
+        "[gparml-worker {worker_id}] initialised: shard of {} points",
+        node.shard.len()
+    );
+
+    let mut served = 0u64;
+    loop {
+        match wire::read_frame(&mut stream)? {
+            None => return Ok(served), // leader gone: exit quietly
+            Some((Frame::Ping, _)) => {
+                wire::write_frame(&mut stream, &Frame::Pong)?;
+            }
+            Some((Frame::Shutdown, _)) => {
+                eprintln!("[gparml-worker {worker_id}] shutdown after {served} requests");
+                return Ok(served);
+            }
+            Some((Frame::Request(req), _)) => {
+                let c0 = thread_cpu_secs();
+                let resp = node.handle(&req);
+                let secs = thread_cpu_secs() - c0;
+                wire::write_frame(
+                    &mut stream,
+                    &Frame::Response {
+                        secs,
+                        resp: Box::new(resp),
+                    },
+                )?;
+                served += 1;
+            }
+            Some((f, _)) => bail!("unexpected frame {f:?}"),
+        }
+    }
+}
+
+/// Dial a listening leader and serve it (the `worker --connect` mode
+/// used by spawned cluster processes).
+pub fn run_worker_connect(addr: &str, artifacts_dir: &Path) -> Result<u64> {
+    let stream =
+        TcpStream::connect(addr).with_context(|| format!("connecting to leader at {addr}"))?;
+    serve_connection(stream, artifacts_dir)
+}
+
+/// Bind `addr`, print the bound address, and serve the first leader
+/// that dials in (the `worker --listen` mode).
+pub fn run_worker_listen(addr: &str, artifacts_dir: &Path) -> Result<u64> {
+    let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+    let local = listener.local_addr()?;
+    println!("gparml worker listening on {local}");
+    let (stream, peer) = listener.accept().context("accepting leader")?;
+    eprintln!("[gparml-worker] leader connected from {peer}");
+    serve_connection(stream, artifacts_dir)
+}

@@ -1,0 +1,76 @@
+//! In-process backend: one [`WorkerNode`] per OS thread via the typed
+//! [`mapreduce::Pool`](crate::mapreduce::Pool).
+//!
+//! Runs the exact same request handler as the TCP worker daemon, minus
+//! the sockets — requests are shared by `Arc` instead of serialised,
+//! so `bytes_tx`/`bytes_rx` are 0. This is the default backend
+//! (`Trainer::new`) and the bit-for-bit reference the TCP backend is
+//! tested against.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::mapreduce::Pool;
+
+use super::node::WorkerNode;
+use super::wire::{Init, Request};
+use super::{Backend, WorkerReply};
+
+/// Thread-pool Map-Reduce backend.
+pub struct PoolBackend {
+    pool: Pool<WorkerNode>,
+}
+
+impl PoolBackend {
+    /// Spawn one worker thread per init; `inits[k]` becomes worker `k`.
+    /// Node state (executor compilation included) is built on each
+    /// worker's own thread.
+    pub fn new(inits: Vec<Init>, artifacts_dir: PathBuf) -> Result<PoolBackend> {
+        let n = inits.len();
+        let inits = Arc::new(inits);
+        let pool = Pool::new(n, move |k| WorkerNode::build(&inits[k], &artifacts_dir))?;
+        Ok(PoolBackend { pool })
+    }
+
+    fn reply(r: crate::mapreduce::MapResult<super::wire::Response>) -> WorkerReply {
+        WorkerReply {
+            worker: r.worker,
+            value: r.value,
+            secs: r.secs,
+            bytes_tx: 0,
+            bytes_rx: 0,
+        }
+    }
+}
+
+impl Backend for PoolBackend {
+    fn workers(&self) -> usize {
+        self.pool.len()
+    }
+
+    fn map_subset(&mut self, include: &[bool], req: &Request) -> Vec<Option<WorkerReply>> {
+        let req = Arc::new(req.clone());
+        self.pool
+            .map_subset(include, move |_, node: &mut WorkerNode| node.handle(&req))
+            .into_iter()
+            .map(|slot| slot.map(Self::reply))
+            .collect()
+    }
+
+    fn map_one(&mut self, k: usize, req: &Request) -> Option<WorkerReply> {
+        let req = req.clone();
+        self.pool
+            .map_one(k, move |_, node: &mut WorkerNode| node.handle(&req))
+            .map(Self::reply)
+    }
+
+    fn heartbeat(&mut self) -> Vec<bool> {
+        self.pool.alive()
+    }
+
+    fn shutdown(&mut self) {
+        // threads exit when the Pool drops its senders
+    }
+}

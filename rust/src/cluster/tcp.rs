@@ -1,0 +1,332 @@
+//! Leader-side TCP backend: drives worker daemons over the [`wire`]
+//! protocol with explicit membership.
+//!
+//! Failure semantics (paper §5.2): any I/O error, protocol violation,
+//! read timeout or missed heartbeat on a worker's socket marks that
+//! worker **dead** — its slot returns `None` from then on, which the
+//! trainer maps onto the drop-the-partial-term recovery path. Nothing
+//! ever blocks indefinitely on a dead node: every read is bounded by
+//! `timeout` (and `heartbeat_timeout` for pings).
+
+use std::io;
+use std::net::{TcpListener, TcpStream};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use super::wire::{self, Frame, Init, Request};
+use super::{Backend, WorkerReply};
+
+struct Conn {
+    stream: TcpStream,
+}
+
+/// Multi-process Map-Reduce backend over localhost (or any) TCP.
+pub struct TcpBackend {
+    conns: Vec<Option<Conn>>,
+    timeout: Duration,
+    heartbeat_timeout: Duration,
+    /// Total bytes sent / received since construction.
+    pub total_tx: u64,
+    pub total_rx: u64,
+}
+
+impl TcpBackend {
+    /// Accept `inits.len()` workers on `listener`, handshake each and
+    /// ship its shapes + shard. Worker ids are assigned in accept
+    /// order. Bounded: a worker that never dials in (crashed before
+    /// connecting) fails the whole construction after the backend
+    /// timeout instead of hanging the leader in `accept` forever.
+    pub fn accept(listener: &TcpListener, inits: Vec<Init>) -> Result<TcpBackend> {
+        let mut backend = TcpBackend {
+            conns: Vec::with_capacity(inits.len()),
+            timeout: Duration::from_secs(60),
+            heartbeat_timeout: Duration::from_secs(5),
+            total_tx: 0,
+            total_rx: 0,
+        };
+        listener
+            .set_nonblocking(true)
+            .context("setting listener non-blocking")?;
+        let deadline = std::time::Instant::now() + backend.timeout;
+        let expected = inits.len();
+        for (k, init) in inits.into_iter().enumerate() {
+            let stream = loop {
+                match listener.accept() {
+                    Ok((stream, _)) => break stream,
+                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                        if std::time::Instant::now() >= deadline {
+                            anyhow::bail!(
+                                "timed out waiting for worker {k} to connect \
+                                 (accepted {k} of {expected} workers)"
+                            );
+                        }
+                        std::thread::sleep(Duration::from_millis(10));
+                    }
+                    Err(e) => {
+                        return Err(e).with_context(|| format!("accepting worker {k}"));
+                    }
+                }
+            };
+            stream
+                .set_nonblocking(false)
+                .context("restoring blocking mode on worker socket")?;
+            backend.handshake(k, stream, &init)?;
+        }
+        listener.set_nonblocking(false).ok();
+        Ok(backend)
+    }
+
+    /// Dial workers that are already listening (`worker --listen`);
+    /// `addrs[k]` becomes worker `k`.
+    pub fn connect(addrs: &[String], inits: Vec<Init>) -> Result<TcpBackend> {
+        anyhow::ensure!(
+            addrs.len() == inits.len(),
+            "need one init per worker address ({} vs {})",
+            inits.len(),
+            addrs.len()
+        );
+        let mut backend = TcpBackend {
+            conns: Vec::with_capacity(inits.len()),
+            timeout: Duration::from_secs(60),
+            heartbeat_timeout: Duration::from_secs(5),
+            total_tx: 0,
+            total_rx: 0,
+        };
+        for (k, (addr, init)) in addrs.iter().zip(inits).enumerate() {
+            let stream = TcpStream::connect(addr)
+                .with_context(|| format!("connecting to worker {k} at {addr}"))?;
+            backend.handshake(k, stream, &init)?;
+        }
+        Ok(backend)
+    }
+
+    fn handshake(&mut self, k: usize, stream: TcpStream, init: &Init) -> Result<()> {
+        stream.set_nodelay(true).ok();
+        stream
+            .set_read_timeout(Some(self.timeout))
+            .context("setting read timeout")?;
+        // writes are bounded too: a wedged (but not dead) worker whose
+        // receive buffer fills must not stall the leader in write_all
+        stream
+            .set_write_timeout(Some(self.timeout))
+            .context("setting write timeout")?;
+        let mut conn = Conn { stream };
+        let tx1 = wire::write_frame(
+            &mut conn.stream,
+            &Frame::Hello {
+                worker_id: k as u32,
+            },
+        )?;
+        let (ack, rx1) = wire::read_frame(&mut conn.stream)?
+            .with_context(|| format!("worker {k} disconnected during handshake"))?;
+        anyhow::ensure!(
+            matches!(ack, Frame::HelloAck),
+            "worker {k}: expected HelloAck, got {ack:?}"
+        );
+        let tx2 = wire::write_frame(&mut conn.stream, &Frame::Init(Box::new(init.clone())))?;
+        let (ready, rx2) = wire::read_frame(&mut conn.stream)?
+            .with_context(|| format!("worker {k} disconnected during init"))?;
+        match ready {
+            Frame::Response { resp, .. } => match *resp {
+                wire::Response::Ok => {}
+                wire::Response::Err(e) => anyhow::bail!("worker {k} failed to initialise: {e}"),
+                r => anyhow::bail!("worker {k}: unexpected init reply {r:?}"),
+            },
+            f => anyhow::bail!("worker {k}: unexpected init frame {f:?}"),
+        }
+        self.total_tx += tx1 + tx2;
+        self.total_rx += rx1 + rx2;
+        self.conns.push(Some(conn));
+        Ok(())
+    }
+
+    /// Bound every response read (and every frame write) by `timeout`
+    /// — dead/wedged-node detection.
+    pub fn set_timeout(&mut self, timeout: Duration) {
+        self.timeout = timeout;
+        for conn in self.conns.iter_mut().flatten() {
+            conn.stream.set_read_timeout(Some(timeout)).ok();
+            conn.stream.set_write_timeout(Some(timeout)).ok();
+        }
+    }
+
+    pub fn set_heartbeat_timeout(&mut self, timeout: Duration) {
+        self.heartbeat_timeout = timeout;
+    }
+
+    /// Workers still reachable.
+    pub fn alive(&self) -> Vec<bool> {
+        self.conns.iter().map(|c| c.is_some()).collect()
+    }
+
+    fn kill(&mut self, k: usize, why: &io::Error) {
+        if self.conns[k].take().is_some() {
+            eprintln!("[gparml-leader] worker {k} marked dead: {why}");
+        }
+    }
+
+    /// Send `frame` to worker `k`; on failure the worker is dead.
+    fn send(&mut self, k: usize, frame: &Frame) -> Option<u64> {
+        let bytes = match wire::encode_frame(frame) {
+            Ok(b) => b,
+            Err(e) => {
+                let err = io::Error::new(io::ErrorKind::InvalidData, format!("{e:#}"));
+                self.kill(k, &err);
+                return None;
+            }
+        };
+        self.send_raw(k, &bytes)
+    }
+
+    /// Write pre-encoded frame bytes to worker `k` (lets a broadcast
+    /// serialise the constant-size global message once, not per
+    /// worker); on failure the worker is dead.
+    fn send_raw(&mut self, k: usize, bytes: &[u8]) -> Option<u64> {
+        use std::io::Write;
+        let conn = self.conns[k].as_mut()?;
+        match conn.stream.write_all(bytes).and_then(|()| conn.stream.flush()) {
+            Ok(()) => {
+                self.total_tx += bytes.len() as u64;
+                Some(bytes.len() as u64)
+            }
+            Err(e) => {
+                let err = io::Error::new(io::ErrorKind::BrokenPipe, format!("{e}"));
+                self.kill(k, &err);
+                None
+            }
+        }
+    }
+
+    /// Read one frame from worker `k`; on error/timeout/EOF the worker
+    /// is dead.
+    fn recv(&mut self, k: usize) -> Option<(Frame, u64)> {
+        let conn = self.conns[k].as_mut()?;
+        match wire::read_frame(&mut conn.stream) {
+            Ok(Some((frame, n))) => {
+                self.total_rx += n;
+                Some((frame, n))
+            }
+            Ok(None) => {
+                let err = io::Error::new(io::ErrorKind::UnexpectedEof, "connection closed");
+                self.kill(k, &err);
+                None
+            }
+            Err(e) => {
+                let err = io::Error::new(io::ErrorKind::Other, format!("{e:#}"));
+                self.kill(k, &err);
+                None
+            }
+        }
+    }
+
+    /// Send a request and collect the typed response from one worker.
+    fn round_one(&mut self, k: usize, req: &Request) -> Option<WorkerReply> {
+        let tx = self.send(k, &Frame::Request(Box::new(req.clone())))?;
+        match self.recv(k)? {
+            (Frame::Response { secs, resp }, rx) => Some(WorkerReply {
+                worker: k,
+                value: *resp,
+                secs,
+                bytes_tx: tx,
+                bytes_rx: rx,
+            }),
+            (f, _) => {
+                let err = io::Error::new(io::ErrorKind::Other, format!("unexpected frame {f:?}"));
+                self.kill(k, &err);
+                None
+            }
+        }
+    }
+}
+
+impl Backend for TcpBackend {
+    fn workers(&self) -> usize {
+        self.conns.len()
+    }
+
+    fn map_subset(&mut self, include: &[bool], req: &Request) -> Vec<Option<WorkerReply>> {
+        assert_eq!(include.len(), self.conns.len());
+        // phase 1: broadcast to all included live workers so the map
+        // round actually runs in parallel across the processes; the
+        // frame is serialised ONCE and the bytes shared across sends
+        let frame = Frame::Request(Box::new(req.clone()));
+        let bytes = match wire::encode_frame(&frame) {
+            Ok(b) => b,
+            Err(_) => return vec![None; self.conns.len()],
+        };
+        let mut sent = vec![None; self.conns.len()];
+        for k in 0..self.conns.len() {
+            if include[k] {
+                sent[k] = self.send_raw(k, &bytes);
+            }
+        }
+        // phase 2: barrier-collect, worker order (deterministic reduce)
+        let mut out: Vec<Option<WorkerReply>> = Vec::with_capacity(self.conns.len());
+        for (k, tx) in sent.into_iter().enumerate() {
+            let Some(tx) = tx else {
+                out.push(None);
+                continue;
+            };
+            let reply = match self.recv(k) {
+                Some((Frame::Response { secs, resp }, rx)) => Some(WorkerReply {
+                    worker: k,
+                    value: *resp,
+                    secs,
+                    bytes_tx: tx,
+                    bytes_rx: rx,
+                }),
+                Some((f, _)) => {
+                    let err = io::Error::new(io::ErrorKind::Other, format!("unexpected frame {f:?}"));
+                    self.kill(k, &err);
+                    None
+                }
+                None => None,
+            };
+            out.push(reply);
+        }
+        out
+    }
+
+    fn map_one(&mut self, k: usize, req: &Request) -> Option<WorkerReply> {
+        self.round_one(k, req)
+    }
+
+    fn heartbeat(&mut self) -> Vec<bool> {
+        for conn in self.conns.iter_mut().flatten() {
+            conn.stream
+                .set_read_timeout(Some(self.heartbeat_timeout))
+                .ok();
+        }
+        for k in 0..self.conns.len() {
+            if self.send(k, &Frame::Ping).is_none() {
+                continue;
+            }
+            match self.recv(k) {
+                Some((Frame::Pong, _)) => {}
+                Some((f, _)) => {
+                    let err = io::Error::new(io::ErrorKind::Other, format!("expected Pong, got {f:?}"));
+                    self.kill(k, &err);
+                }
+                None => {}
+            }
+        }
+        for conn in self.conns.iter_mut().flatten() {
+            conn.stream.set_read_timeout(Some(self.timeout)).ok();
+        }
+        self.alive()
+    }
+
+    fn shutdown(&mut self) {
+        for k in 0..self.conns.len() {
+            let _ = self.send(k, &Frame::Shutdown);
+            self.conns[k] = None;
+        }
+    }
+}
+
+impl Drop for TcpBackend {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}

@@ -1,0 +1,909 @@
+//! The cluster wire protocol: a versioned, length-prefixed binary
+//! framing for everything the §3.2 Map-Reduce protocol sends between
+//! the leader and a worker node.
+//!
+//! ## Frame layout
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic  "GPMR"
+//! 4       2     wire version (u16 LE) — mismatch is rejected on read
+//! 6       1     frame kind
+//! 7       4     payload length (u32 LE), capped at MAX_PAYLOAD
+//! 11      len   payload (kind-specific, see below)
+//! ```
+//!
+//! All integers are little-endian; all floats are IEEE-754 f64
+//! round-tripped via `to_le_bytes`/`from_le_bytes`, so a value crosses
+//! the wire **bit-for-bit** — the TCP backend reproduces the
+//! in-process backend's training trace exactly (tested in
+//! `tests/cluster.rs`).
+//!
+//! Control frames: `Hello`/`HelloAck` (handshake + id assignment),
+//! `Init` (shapes, model flags and the worker's data shard), `Ping`/
+//! `Pong` (heartbeat), `Shutdown`. Data frames: `Request` (a map-round
+//! broadcast: global parameters or adjoints — constant-size messages,
+//! the paper's requirement 2/3) and `Response` (partial statistics /
+//! gradients plus the worker's in-map compute seconds).
+//!
+//! A truncated stream, a foreign magic, an unknown kind/tag, a
+//! mismatched version or trailing payload bytes all fail decoding with
+//! a descriptive error — the membership layer maps any such failure
+//! onto the §5.2 drop-the-partial-term path.
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::gp::params::{GlobalGrads, GlobalParams};
+use crate::gp::{Adjoints, Stats};
+use crate::linalg::Matrix;
+use crate::runtime::{ArtifactConfig, ShardData};
+
+/// Frame magic: "GPMR".
+pub const MAGIC: [u8; 4] = *b"GPMR";
+/// Current wire version. Bump on any layout change.
+pub const VERSION: u16 = 1;
+/// Upper bound on a single frame payload (defends the decoder against
+/// garbage length prefixes).
+pub const MAX_PAYLOAD: usize = 1 << 30;
+
+const HEADER_LEN: usize = 11;
+
+/// A map-round broadcast from the leader.
+#[derive(Debug, Clone)]
+pub enum Request {
+    /// Round 1: compute partial statistics at these global parameters.
+    Stats { params: GlobalParams },
+    /// Round 2: chain-rule the adjoints into partial global gradients;
+    /// optionally apply the local q(X) ascent step first (paper step 4).
+    Grads {
+        params: GlobalParams,
+        adj: Adjoints,
+        update_locals: bool,
+    },
+    /// Return (and optionally drop) the worker's shard — the leader's
+    /// replica read during decommission/re-sharding.
+    FetchShard { clear: bool },
+    /// Append rows to the worker's shard (re-sharding a dead node's
+    /// data onto a survivor); local optimiser state is rebuilt.
+    AppendShard { part: ShardData },
+    /// Return the worker's local variational parameters (Xmu, Xvar).
+    GatherLocals,
+    /// Serve a prediction through this worker's executor.
+    Predict {
+        params: GlobalParams,
+        xt_mu: Matrix,
+        xt_var: Matrix,
+        w1: Matrix,
+        wv: Matrix,
+    },
+}
+
+/// A worker's reply to a [`Request`].
+#[derive(Debug, Clone)]
+pub enum Response {
+    Stats(Stats),
+    Grads(GlobalGrads),
+    Shard(ShardData),
+    Locals { xmu: Matrix, xvar: Matrix },
+    Predict { mean: Matrix, var: Vec<f64> },
+    Ok,
+    /// The worker failed to execute the request (shape mismatch, ...).
+    Err(String),
+}
+
+/// Everything a worker needs to build its node state: executor shapes,
+/// model flags and the data shard (sent once after the handshake).
+#[derive(Debug, Clone)]
+pub struct Init {
+    pub artifact: ArtifactConfig,
+    pub lvm: bool,
+    pub local_lr: f64,
+    pub min_xvar: f64,
+    pub shard: ShardData,
+}
+
+/// One wire frame.
+#[derive(Debug, Clone)]
+pub enum Frame {
+    /// Leader -> worker: you are worker `worker_id`.
+    Hello { worker_id: u32 },
+    /// Worker -> leader: handshake acknowledged.
+    HelloAck,
+    Init(Box<Init>),
+    Request(Box<Request>),
+    /// Worker -> leader: result plus in-map thread-CPU seconds.
+    Response { secs: f64, resp: Box<Response> },
+    Ping,
+    Pong,
+    Shutdown,
+}
+
+// ---------------------------------------------------------------------------
+// payload encoder / decoder
+// ---------------------------------------------------------------------------
+
+/// Append-only payload encoder.
+#[derive(Default)]
+pub struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    pub fn new() -> Enc {
+        Enc::default()
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn bool(&mut self, v: bool) {
+        self.buf.push(u8::from(v));
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    pub fn vec_f64(&mut self, v: &[f64]) {
+        self.u32(v.len() as u32);
+        for x in v {
+            self.f64(*x);
+        }
+    }
+
+    pub fn mat(&mut self, m: &Matrix) {
+        self.u32(m.rows() as u32);
+        self.u32(m.cols() as u32);
+        for x in m.data() {
+            self.f64(*x);
+        }
+    }
+
+    pub fn params(&mut self, p: &GlobalParams) {
+        self.mat(&p.z);
+        self.vec_f64(&p.log_ls);
+        self.f64(p.log_sf2);
+        self.f64(p.log_beta);
+    }
+
+    pub fn stats(&mut self, s: &Stats) {
+        self.f64(s.a);
+        self.f64(s.psi0);
+        self.mat(&s.c);
+        self.mat(&s.d);
+        self.f64(s.kl);
+        self.f64(s.n);
+    }
+
+    pub fn grads(&mut self, g: &GlobalGrads) {
+        self.mat(&g.d_z);
+        self.vec_f64(&g.d_log_ls);
+        self.f64(g.d_log_sf2);
+        self.f64(g.d_log_beta);
+    }
+
+    pub fn adjoints(&mut self, a: &Adjoints) {
+        self.f64(a.d_psi0);
+        self.mat(&a.d_c);
+        self.mat(&a.d_d);
+        self.f64(a.d_kl);
+        self.mat(&a.d_kmm);
+        self.f64(a.d_log_beta);
+    }
+
+    pub fn shard(&mut self, s: &ShardData) {
+        self.mat(&s.xmu);
+        self.mat(&s.xvar);
+        self.mat(&s.y);
+        self.f64(s.kl_weight);
+    }
+
+    pub fn artifact(&mut self, a: &ArtifactConfig) {
+        self.str(&a.name);
+        self.u32(a.m as u32);
+        self.u32(a.q as u32);
+        self.u32(a.d as u32);
+        self.u32(a.cap as u32);
+        self.u32(a.block_n as u32);
+        self.u32(a.entries.len() as u32);
+        for (k, v) in &a.entries {
+            self.str(k);
+            self.str(v);
+        }
+    }
+}
+
+/// Bounds-checked payload decoder.
+pub struct Dec<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Dec<'a> {
+    pub fn new(b: &'a [u8]) -> Dec<'a> {
+        Dec { b, i: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(
+            self.i + n <= self.b.len(),
+            "truncated frame payload (need {} bytes at offset {}, have {})",
+            n,
+            self.i,
+            self.b.len()
+        );
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    pub fn finish(&self) -> Result<()> {
+        ensure!(
+            self.i == self.b.len(),
+            "frame payload has {} trailing bytes",
+            self.b.len() - self.i
+        );
+        Ok(())
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn bool(&mut self) -> Result<bool> {
+        Ok(self.u8()? != 0)
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn str(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        let s = self.take(n)?;
+        Ok(std::str::from_utf8(s)
+            .context("invalid utf-8 string in frame")?
+            .to_string())
+    }
+
+    pub fn vec_f64(&mut self) -> Result<Vec<f64>> {
+        let n = self.u32()? as usize;
+        ensure!(
+            n.saturating_mul(8) <= self.b.len(),
+            "vector length {n} exceeds payload"
+        );
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.f64()?);
+        }
+        Ok(v)
+    }
+
+    pub fn mat(&mut self) -> Result<Matrix> {
+        let rows = self.u32()? as usize;
+        let cols = self.u32()? as usize;
+        ensure!(
+            rows.saturating_mul(cols).saturating_mul(8) <= self.b.len(),
+            "matrix {rows}x{cols} exceeds payload"
+        );
+        let mut data = Vec::with_capacity(rows * cols);
+        for _ in 0..rows * cols {
+            data.push(self.f64()?);
+        }
+        Ok(Matrix::from_vec(rows, cols, data))
+    }
+
+    pub fn params(&mut self) -> Result<GlobalParams> {
+        Ok(GlobalParams {
+            z: self.mat()?,
+            log_ls: self.vec_f64()?,
+            log_sf2: self.f64()?,
+            log_beta: self.f64()?,
+        })
+    }
+
+    pub fn stats(&mut self) -> Result<Stats> {
+        Ok(Stats {
+            a: self.f64()?,
+            psi0: self.f64()?,
+            c: self.mat()?,
+            d: self.mat()?,
+            kl: self.f64()?,
+            n: self.f64()?,
+        })
+    }
+
+    pub fn grads(&mut self) -> Result<GlobalGrads> {
+        Ok(GlobalGrads {
+            d_z: self.mat()?,
+            d_log_ls: self.vec_f64()?,
+            d_log_sf2: self.f64()?,
+            d_log_beta: self.f64()?,
+        })
+    }
+
+    pub fn adjoints(&mut self) -> Result<Adjoints> {
+        Ok(Adjoints {
+            d_psi0: self.f64()?,
+            d_c: self.mat()?,
+            d_d: self.mat()?,
+            d_kl: self.f64()?,
+            d_kmm: self.mat()?,
+            d_log_beta: self.f64()?,
+        })
+    }
+
+    pub fn shard(&mut self) -> Result<ShardData> {
+        Ok(ShardData {
+            xmu: self.mat()?,
+            xvar: self.mat()?,
+            y: self.mat()?,
+            kl_weight: self.f64()?,
+        })
+    }
+
+    pub fn artifact(&mut self) -> Result<ArtifactConfig> {
+        let name = self.str()?;
+        let m = self.u32()? as usize;
+        let q = self.u32()? as usize;
+        let d = self.u32()? as usize;
+        let cap = self.u32()? as usize;
+        let block_n = self.u32()? as usize;
+        let n_entries = self.u32()? as usize;
+        let mut entries = std::collections::BTreeMap::new();
+        for _ in 0..n_entries {
+            let k = self.str()?;
+            let v = self.str()?;
+            entries.insert(k, v);
+        }
+        Ok(ArtifactConfig {
+            name,
+            m,
+            q,
+            d,
+            cap,
+            block_n,
+            entries,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// frame codec
+// ---------------------------------------------------------------------------
+
+impl Request {
+    fn encode(&self, e: &mut Enc) {
+        match self {
+            Request::Stats { params } => {
+                e.u8(1);
+                e.params(params);
+            }
+            Request::Grads {
+                params,
+                adj,
+                update_locals,
+            } => {
+                e.u8(2);
+                e.params(params);
+                e.adjoints(adj);
+                e.bool(*update_locals);
+            }
+            Request::FetchShard { clear } => {
+                e.u8(3);
+                e.bool(*clear);
+            }
+            Request::AppendShard { part } => {
+                e.u8(4);
+                e.shard(part);
+            }
+            Request::GatherLocals => e.u8(5),
+            Request::Predict {
+                params,
+                xt_mu,
+                xt_var,
+                w1,
+                wv,
+            } => {
+                e.u8(6);
+                e.params(params);
+                e.mat(xt_mu);
+                e.mat(xt_var);
+                e.mat(w1);
+                e.mat(wv);
+            }
+        }
+    }
+
+    fn decode(d: &mut Dec) -> Result<Request> {
+        Ok(match d.u8()? {
+            1 => Request::Stats {
+                params: d.params()?,
+            },
+            2 => Request::Grads {
+                params: d.params()?,
+                adj: d.adjoints()?,
+                update_locals: d.bool()?,
+            },
+            3 => Request::FetchShard { clear: d.bool()? },
+            4 => Request::AppendShard { part: d.shard()? },
+            5 => Request::GatherLocals,
+            6 => Request::Predict {
+                params: d.params()?,
+                xt_mu: d.mat()?,
+                xt_var: d.mat()?,
+                w1: d.mat()?,
+                wv: d.mat()?,
+            },
+            t => bail!("unknown request tag {t}"),
+        })
+    }
+}
+
+impl Response {
+    fn encode(&self, e: &mut Enc) {
+        match self {
+            Response::Stats(s) => {
+                e.u8(1);
+                e.stats(s);
+            }
+            Response::Grads(g) => {
+                e.u8(2);
+                e.grads(g);
+            }
+            Response::Shard(s) => {
+                e.u8(3);
+                e.shard(s);
+            }
+            Response::Locals { xmu, xvar } => {
+                e.u8(4);
+                e.mat(xmu);
+                e.mat(xvar);
+            }
+            Response::Predict { mean, var } => {
+                e.u8(5);
+                e.mat(mean);
+                e.vec_f64(var);
+            }
+            Response::Ok => e.u8(6),
+            Response::Err(msg) => {
+                e.u8(7);
+                e.str(msg);
+            }
+        }
+    }
+
+    fn decode(d: &mut Dec) -> Result<Response> {
+        Ok(match d.u8()? {
+            1 => Response::Stats(d.stats()?),
+            2 => Response::Grads(d.grads()?),
+            3 => Response::Shard(d.shard()?),
+            4 => Response::Locals {
+                xmu: d.mat()?,
+                xvar: d.mat()?,
+            },
+            5 => Response::Predict {
+                mean: d.mat()?,
+                var: d.vec_f64()?,
+            },
+            6 => Response::Ok,
+            7 => Response::Err(d.str()?),
+            t => bail!("unknown response tag {t}"),
+        })
+    }
+}
+
+impl Frame {
+    fn kind(&self) -> u8 {
+        match self {
+            Frame::Hello { .. } => 1,
+            Frame::HelloAck => 2,
+            Frame::Init(_) => 3,
+            Frame::Request(_) => 4,
+            Frame::Response { .. } => 5,
+            Frame::Ping => 6,
+            Frame::Pong => 7,
+            Frame::Shutdown => 8,
+        }
+    }
+
+    fn encode_payload(&self, e: &mut Enc) {
+        match self {
+            Frame::Hello { worker_id } => e.u32(*worker_id),
+            Frame::HelloAck | Frame::Ping | Frame::Pong | Frame::Shutdown => {}
+            Frame::Init(init) => {
+                e.artifact(&init.artifact);
+                e.bool(init.lvm);
+                e.f64(init.local_lr);
+                e.f64(init.min_xvar);
+                e.shard(&init.shard);
+            }
+            Frame::Request(r) => r.encode(e),
+            Frame::Response { secs, resp } => {
+                e.f64(*secs);
+                resp.encode(e);
+            }
+        }
+    }
+
+    fn decode_payload(kind: u8, d: &mut Dec) -> Result<Frame> {
+        Ok(match kind {
+            1 => Frame::Hello {
+                worker_id: d.u32()?,
+            },
+            2 => Frame::HelloAck,
+            3 => Frame::Init(Box::new(Init {
+                artifact: d.artifact()?,
+                lvm: d.bool()?,
+                local_lr: d.f64()?,
+                min_xvar: d.f64()?,
+                shard: d.shard()?,
+            })),
+            4 => Frame::Request(Box::new(Request::decode(d)?)),
+            5 => Frame::Response {
+                secs: d.f64()?,
+                resp: Box::new(Response::decode(d)?),
+            },
+            6 => Frame::Ping,
+            7 => Frame::Pong,
+            8 => Frame::Shutdown,
+            k => bail!("unknown frame kind {k}"),
+        })
+    }
+}
+
+/// Serialise a frame to bytes (header + payload).
+pub fn encode_frame(f: &Frame) -> Result<Vec<u8>> {
+    let mut e = Enc::new();
+    f.encode_payload(&mut e);
+    let payload = e.into_bytes();
+    ensure!(
+        payload.len() <= MAX_PAYLOAD,
+        "frame payload of {} bytes exceeds MAX_PAYLOAD",
+        payload.len()
+    );
+    let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
+    out.extend_from_slice(&MAGIC);
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.push(f.kind());
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&payload);
+    Ok(out)
+}
+
+/// Write one frame; returns the bytes put on the wire.
+pub fn write_frame(w: &mut impl Write, f: &Frame) -> Result<u64> {
+    let bytes = encode_frame(f)?;
+    w.write_all(&bytes).context("writing frame")?;
+    w.flush().context("flushing frame")?;
+    Ok(bytes.len() as u64)
+}
+
+/// Read one frame; returns `(frame, bytes read)`. `Ok(None)` means the
+/// peer closed the connection cleanly *between* frames; EOF inside a
+/// frame is a hard "truncated frame" error.
+pub fn read_frame(r: &mut impl Read) -> Result<Option<(Frame, u64)>> {
+    let mut header = [0u8; HEADER_LEN];
+    // distinguish clean EOF (0 bytes) from a mid-header cut
+    let mut got = 0;
+    while got < HEADER_LEN {
+        let n = r.read(&mut header[got..]).context("reading frame header")?;
+        if n == 0 {
+            if got == 0 {
+                return Ok(None);
+            }
+            bail!("truncated frame header ({got} of {HEADER_LEN} bytes)");
+        }
+        got += n;
+    }
+    ensure!(
+        header[..4] == MAGIC,
+        "bad frame magic {:02x?} (expected GPMR)",
+        &header[..4]
+    );
+    let version = u16::from_le_bytes([header[4], header[5]]);
+    ensure!(
+        version == VERSION,
+        "wire version mismatch: peer speaks v{version}, this build speaks v{VERSION}"
+    );
+    let kind = header[6];
+    let len = u32::from_le_bytes([header[7], header[8], header[9], header[10]]) as usize;
+    ensure!(
+        len <= MAX_PAYLOAD,
+        "frame payload length {len} exceeds MAX_PAYLOAD"
+    );
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)
+        .with_context(|| format!("truncated frame payload (expected {len} bytes)"))?;
+    let mut d = Dec::new(&payload);
+    let frame = Frame::decode_payload(kind, &mut d)?;
+    d.finish()?;
+    Ok(Some((frame, (HEADER_LEN + len) as u64)))
+}
+
+/// Decode a frame from a byte slice (testing convenience).
+pub fn decode_frame(mut bytes: &[u8]) -> Result<(Frame, u64)> {
+    read_frame(&mut bytes)?.context("empty buffer")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing;
+    use crate::util::rng::Rng;
+
+    fn rand_mat(rng: &mut Rng, r: usize, c: usize) -> Matrix {
+        testing::random_matrix(rng, r, c, 1.0)
+    }
+
+    fn rand_params(rng: &mut Rng, m: usize, q: usize) -> GlobalParams {
+        GlobalParams {
+            z: rand_mat(rng, m, q),
+            log_ls: (0..q).map(|_| rng.normal()).collect(),
+            log_sf2: rng.normal(),
+            log_beta: rng.normal(),
+        }
+    }
+
+    fn roundtrip(f: &Frame) -> Frame {
+        let bytes = encode_frame(f).unwrap();
+        let (back, n) = decode_frame(&bytes).unwrap();
+        assert_eq!(n as usize, bytes.len());
+        back
+    }
+
+    fn assert_mat_eq(a: &Matrix, b: &Matrix) {
+        assert_eq!(a.rows(), b.rows());
+        assert_eq!(a.cols(), b.cols());
+        // bit-for-bit, not approximate
+        for (x, y) in a.data().iter().zip(b.data()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn prop_params_roundtrip_bitwise() {
+        testing::check("wire params roundtrip", 30, |rng| {
+            let m = testing::dim(rng, 1, 12);
+            let q = testing::dim(rng, 1, 8);
+            let p = rand_params(rng, m, q);
+            let f = Frame::Request(Box::new(Request::Stats { params: p.clone() }));
+            match roundtrip(&f) {
+                Frame::Request(r) => match *r {
+                    Request::Stats { params } => {
+                        assert_mat_eq(&params.z, &p.z);
+                        assert_eq!(params.log_ls, p.log_ls);
+                        assert_eq!(params.log_sf2.to_bits(), p.log_sf2.to_bits());
+                        assert_eq!(params.log_beta.to_bits(), p.log_beta.to_bits());
+                        Ok(())
+                    }
+                    _ => Err("wrong request variant".into()),
+                },
+                _ => Err("wrong frame kind".into()),
+            }
+        });
+    }
+
+    #[test]
+    fn prop_stats_and_grads_roundtrip_bitwise() {
+        testing::check("wire stats/grads roundtrip", 30, |rng| {
+            let m = testing::dim(rng, 1, 10);
+            let d = testing::dim(rng, 1, 6);
+            let q = testing::dim(rng, 1, 5);
+            let st = Stats {
+                a: rng.normal(),
+                psi0: rng.normal(),
+                c: rand_mat(rng, m, d),
+                d: rand_mat(rng, m, m),
+                kl: rng.normal(),
+                n: rng.below(1000) as f64,
+            };
+            let g = GlobalGrads {
+                d_z: rand_mat(rng, m, q),
+                d_log_ls: (0..q).map(|_| rng.normal()).collect(),
+                d_log_sf2: rng.normal(),
+                d_log_beta: rng.normal(),
+            };
+            let fs = Frame::Response {
+                secs: rng.uniform(),
+                resp: Box::new(Response::Stats(st.clone())),
+            };
+            match roundtrip(&fs) {
+                Frame::Response { resp, .. } => match *resp {
+                    Response::Stats(s2) => {
+                        assert_eq!(s2.a.to_bits(), st.a.to_bits());
+                        assert_eq!(s2.psi0.to_bits(), st.psi0.to_bits());
+                        assert_mat_eq(&s2.c, &st.c);
+                        assert_mat_eq(&s2.d, &st.d);
+                        assert_eq!(s2.kl.to_bits(), st.kl.to_bits());
+                        assert_eq!(s2.n, st.n);
+                    }
+                    _ => return Err("wrong response variant".into()),
+                },
+                _ => return Err("wrong frame kind".into()),
+            }
+            let fg = Frame::Response {
+                secs: 0.0,
+                resp: Box::new(Response::Grads(g.clone())),
+            };
+            match roundtrip(&fg) {
+                Frame::Response { resp, .. } => match *resp {
+                    Response::Grads(g2) => {
+                        assert_mat_eq(&g2.d_z, &g.d_z);
+                        assert_eq!(g2.d_log_ls, g.d_log_ls);
+                        Ok(())
+                    }
+                    _ => Err("wrong response variant".into()),
+                },
+                _ => Err("wrong frame kind".into()),
+            }
+        });
+    }
+
+    #[test]
+    fn prop_adjoints_and_shard_roundtrip() {
+        testing::check("wire adjoints/shard roundtrip", 20, |rng| {
+            let m = testing::dim(rng, 1, 8);
+            let q = testing::dim(rng, 1, 4);
+            let d = testing::dim(rng, 1, 5);
+            let b = testing::dim(rng, 0, 20);
+            let adj = Adjoints {
+                d_psi0: rng.normal(),
+                d_c: rand_mat(rng, m, d),
+                d_d: rand_mat(rng, m, m),
+                d_kl: rng.normal(),
+                d_kmm: rand_mat(rng, m, m),
+                d_log_beta: rng.normal(),
+            };
+            let p = rand_params(rng, m, q);
+            let shard = ShardData {
+                xmu: rand_mat(rng, b, q),
+                xvar: rand_mat(rng, b, q),
+                y: rand_mat(rng, b, d),
+                kl_weight: rng.uniform(),
+            };
+            let f = Frame::Request(Box::new(Request::Grads {
+                params: p,
+                adj: adj.clone(),
+                update_locals: rng.flip(0.5),
+            }));
+            match roundtrip(&f) {
+                Frame::Request(r) => match *r {
+                    Request::Grads { adj: a2, .. } => {
+                        assert_mat_eq(&a2.d_c, &adj.d_c);
+                        assert_mat_eq(&a2.d_d, &adj.d_d);
+                        assert_mat_eq(&a2.d_kmm, &adj.d_kmm);
+                        assert_eq!(a2.d_log_beta.to_bits(), adj.d_log_beta.to_bits());
+                    }
+                    _ => return Err("wrong request variant".into()),
+                },
+                _ => return Err("wrong frame kind".into()),
+            }
+            let f2 = Frame::Request(Box::new(Request::AppendShard {
+                part: shard.clone(),
+            }));
+            match roundtrip(&f2) {
+                Frame::Request(r) => match *r {
+                    Request::AppendShard { part } => {
+                        assert_mat_eq(&part.xmu, &shard.xmu);
+                        assert_mat_eq(&part.xvar, &shard.xvar);
+                        assert_mat_eq(&part.y, &shard.y);
+                        Ok(())
+                    }
+                    _ => Err("wrong request variant".into()),
+                },
+                _ => Err("wrong frame kind".into()),
+            }
+        });
+    }
+
+    #[test]
+    fn init_and_control_frames_roundtrip() {
+        let mut rng = Rng::new(3);
+        let art = ArtifactConfig {
+            name: "test".into(),
+            m: 8,
+            q: 2,
+            d: 3,
+            cap: 32,
+            block_n: 8,
+            entries: [("shard_stats".to_string(), "s.hlo.txt".to_string())]
+                .into_iter()
+                .collect(),
+        };
+        let init = Init {
+            artifact: art.clone(),
+            lvm: true,
+            local_lr: 0.05,
+            min_xvar: 1e-6,
+            shard: ShardData {
+                xmu: rand_mat(&mut rng, 4, 2),
+                xvar: rand_mat(&mut rng, 4, 2),
+                y: rand_mat(&mut rng, 4, 3),
+                kl_weight: 1.0,
+            },
+        };
+        match roundtrip(&Frame::Init(Box::new(init))) {
+            Frame::Init(i2) => {
+                assert_eq!(i2.artifact.name, art.name);
+                assert_eq!(i2.artifact.entries, art.entries);
+                assert!(i2.lvm);
+                assert_eq!(i2.shard.len(), 4);
+            }
+            f => panic!("wrong frame {f:?}"),
+        }
+        for f in [
+            Frame::Hello { worker_id: 7 },
+            Frame::HelloAck,
+            Frame::Ping,
+            Frame::Pong,
+            Frame::Shutdown,
+        ] {
+            let back = roundtrip(&f);
+            assert_eq!(back.kind(), f.kind());
+        }
+    }
+
+    #[test]
+    fn truncated_frames_are_rejected_at_every_cut() {
+        let bytes = encode_frame(&Frame::Request(Box::new(Request::FetchShard {
+            clear: true,
+        })))
+        .unwrap();
+        assert!(bytes.len() > HEADER_LEN);
+        for cut in 1..bytes.len() {
+            let err = decode_frame(&bytes[..cut]).unwrap_err();
+            let msg = format!("{err:#}");
+            assert!(
+                msg.contains("truncated") || msg.contains("header"),
+                "cut at {cut}: unhelpful error {msg}"
+            );
+        }
+        // clean EOF between frames is not an error
+        assert!(read_frame(&mut &[][..]).unwrap().is_none());
+    }
+
+    #[test]
+    fn version_mismatch_and_bad_magic_are_rejected() {
+        let mut bytes = encode_frame(&Frame::Ping).unwrap();
+        bytes[4] = 0xFF; // corrupt version
+        bytes[5] = 0x00;
+        let msg = format!("{:#}", decode_frame(&bytes).unwrap_err());
+        assert!(msg.contains("version"), "{msg}");
+
+        let mut bytes = encode_frame(&Frame::Ping).unwrap();
+        bytes[0] = b'X';
+        let msg = format!("{:#}", decode_frame(&bytes).unwrap_err());
+        assert!(msg.contains("magic"), "{msg}");
+    }
+
+    #[test]
+    fn trailing_payload_bytes_are_rejected() {
+        let mut bytes = encode_frame(&Frame::Ping).unwrap();
+        // claim one payload byte and provide it
+        bytes[7] = 1;
+        bytes.push(0xAB);
+        let msg = format!("{:#}", decode_frame(&bytes).unwrap_err());
+        assert!(msg.contains("trailing"), "{msg}");
+    }
+}

@@ -1,13 +1,16 @@
 //! Layer-3 coordinator: the paper's distributed inference.
 //!
-//! A leader drives a [`crate::mapreduce::Pool`] of worker nodes, each
-//! owning a data shard and its own compiled PJRT executables. One outer
-//! iteration implements the paper's §3.2 protocol:
+//! A leader drives a cluster of worker nodes through the
+//! [`crate::cluster::Backend`] trait — OS threads in-process
+//! ([`crate::cluster::PoolBackend`], the default) or real processes
+//! over TCP ([`crate::cluster::TcpBackend`]). Each worker owns a data
+//! shard and its own compiled executor. One outer iteration implements
+//! the paper's §3.2 protocol:
 //!
 //! 1. broadcast the global parameters G = (Z, kernel hypers, beta);
 //! 2. map: each worker computes its partial statistics
-//!    (a, psi0, C, D, KL) via the Pallas/HLO artifact; reduce: sum
-//!    (constant-size messages, m x m and m x d);
+//!    (a, psi0, C, D, KL); reduce: sum (constant-size messages,
+//!    m x m and m x d);
 //! 3. central: assemble the collapsed bound F and adjoint matrices
 //!    dF/d{psi0, C, D, KL, Kmm, log beta} (O(m^3), `gp::bound`);
 //!    broadcast the adjoints;
@@ -17,8 +20,9 @@
 //!
 //! Node failure (paper §5.2): a failed node's partial terms are dropped
 //! from both reduces for that iteration, yielding a noisy gradient
-//! rather than a stall.
+//! rather than a stall. Transient failures (injection, Fig. 7) come
+//! back next iteration; a lost TCP connection is permanent.
 
 mod trainer;
 
-pub use trainer::{partition, GlobalOpt, ModelKind, TrainConfig, Trainer};
+pub use trainer::{make_inits, partition, GlobalOpt, ModelKind, TrainConfig, Trainer};

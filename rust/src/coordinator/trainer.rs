@@ -1,17 +1,19 @@
-//! The distributed trainer: leader state machine + worker node state.
+//! The distributed trainer: the leader state machine, generic over the
+//! cluster [`Backend`] the map rounds run on (in-process threads or
+//! real TCP worker processes — `cluster`).
 
 use std::path::PathBuf;
-use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::{ensure, Context, Result};
+use anyhow::{anyhow, bail, ensure, Result};
 
+use crate::cluster::wire::{self, Request, Response};
+use crate::cluster::{Backend, PoolBackend, WorkerReply};
 use crate::gp::params::{GlobalGrads, GlobalParams};
 use crate::gp::{self, kernel, Stats};
 use crate::linalg::Matrix;
-use crate::mapreduce::Pool;
 use crate::optim::{Adam, Scg};
-use crate::runtime::{Manifest, ShardData, ShardExecutor};
+use crate::runtime::{ArtifactConfig, Manifest, ShardData};
 use crate::telemetry::{IterationLog, RoundTiming, RunLog};
 use crate::util::rng::Rng;
 
@@ -41,7 +43,7 @@ pub struct TrainConfig {
     pub artifact: String,
     /// Artifacts directory.
     pub artifacts_dir: PathBuf,
-    /// Number of worker nodes (threads).
+    /// Number of worker nodes (threads or processes).
     pub workers: usize,
     pub model: ModelKind,
     pub global_opt: GlobalOpt,
@@ -53,6 +55,12 @@ pub struct TrainConfig {
     pub failure_rate: f64,
     /// Floor on the local variances (keeps log s finite).
     pub min_xvar: f64,
+    /// Minimum seconds between backend liveness probes at `step()`
+    /// start. Map rounds already detect mid-round deaths; the periodic
+    /// heartbeat only catches nodes that died while the leader was
+    /// otherwise idle, so it is rate-limited off the per-iteration
+    /// critical path (0 = probe every step).
+    pub heartbeat_secs: f64,
     pub seed: u64,
 }
 
@@ -68,57 +76,34 @@ impl Default for TrainConfig {
             jitter: 1e-6,
             failure_rate: 0.0,
             min_xvar: 1e-6,
+            heartbeat_secs: 5.0,
             seed: 0,
         }
     }
 }
 
-/// Per-node state living on its own thread: compiled executables, the
-/// data shard, and local optimiser state.
-struct WorkerState {
-    exec: ShardExecutor,
-    shard: ShardData,
-    adam_mu: Adam,
-    adam_ls: Adam, // over log s
-    min_xvar: f64,
-    lvm: bool,
-}
-
-impl WorkerState {
-    /// Apply one local ascent step on (mu, log s) from raw-space grads.
-    fn local_update(&mut self, d_xmu: &Matrix, d_xvar: &Matrix) {
-        if !self.lvm || self.shard.len() == 0 {
-            return;
-        }
-        let (b, q) = (self.shard.xmu.rows(), self.shard.xmu.cols());
-        // minimise -F: negate the ascent gradients
-        let g_mu: Vec<f64> = d_xmu.data().iter().map(|g| -g).collect();
-        // chain rule d/dlog s = s * d/ds
-        let g_ls: Vec<f64> = d_xvar
-            .data()
-            .iter()
-            .zip(self.shard.xvar.data())
-            .map(|(g, s)| -g * s)
-            .collect();
-        self.adam_mu.step(self.shard.xmu.data_mut(), &g_mu);
-        let mut log_s: Vec<f64> = self
-            .shard
-            .xvar
-            .data()
-            .iter()
-            .map(|s| s.max(self.min_xvar).ln())
-            .collect();
-        self.adam_ls.step(&mut log_s, &g_ls);
-        for (s, l) in self.shard.xvar.data_mut().iter_mut().zip(&log_s) {
-            *s = l.exp().max(self.min_xvar);
-        }
-        debug_assert_eq!(b * q, g_mu.len());
-    }
+/// Build the per-worker `Init` messages (shapes + model flags + shard)
+/// that initialise a cluster backend; `shards[k]` becomes worker `k`.
+pub fn make_inits(
+    cfg: &TrainConfig,
+    art: &ArtifactConfig,
+    shards: Vec<ShardData>,
+) -> Vec<wire::Init> {
+    shards
+        .into_iter()
+        .map(|shard| wire::Init {
+            artifact: art.clone(),
+            lvm: cfg.model == ModelKind::Lvm,
+            local_lr: cfg.local_lr,
+            min_xvar: cfg.min_xvar,
+            shard,
+        })
+        .collect()
 }
 
 /// The distributed trainer (leader).
-pub struct Trainer {
-    pool: Pool<WorkerState>,
+pub struct Trainer<B: Backend = PoolBackend> {
+    backend: B,
     pub params: GlobalParams,
     cfg: TrainConfig,
     dout: usize,
@@ -126,10 +111,15 @@ pub struct Trainer {
     rng: Rng,
     scg: Option<Scg>,
     adam: Option<Adam>,
-    /// workers alive this iteration
+    /// workers participating in the current iteration's map rounds
     alive: Vec<bool>,
-    /// permanently decommissioned workers (elastic recovery)
+    /// permanently out-of-rotation workers: decommissioned, or their
+    /// backend connection died (drop-the-partial-term forever, §5.2)
     dead: Vec<bool>,
+    /// subset of `dead` whose shard data is GONE (connection died
+    /// before the shard could be fetched back) — unlike decommission,
+    /// which re-shards onto the survivors first
+    lost: Vec<bool>,
     /// scratch: rounds recorded during the current iteration
     rounds: Vec<RoundTiming>,
     central_secs: f64,
@@ -139,74 +129,144 @@ pub struct Trainer {
     /// the objective changed since SCG last anchored (locals moved or a
     /// node failed) — a refresh evaluation is needed before stepping
     objective_dirty: bool,
+    /// workers whose backend connection died during this iteration
+    newly_failed: Vec<usize>,
+    /// when the backend was last liveness-probed (rate limiting)
+    last_heartbeat: Option<Instant>,
 }
 
-impl Trainer {
-    /// Spawn the cluster. `shards[k]` becomes worker k's slice; local
-    /// parameters (Xmu, Xvar) live only on the workers from here on.
-    pub fn new(cfg: TrainConfig, params: GlobalParams, shards: Vec<ShardData>) -> Result<Trainer> {
+impl Trainer<PoolBackend> {
+    /// Spawn an in-process cluster (one worker thread per shard).
+    /// `shards[k]` becomes worker k's slice; local parameters
+    /// (Xmu, Xvar) live only on the workers from here on.
+    pub fn new(
+        cfg: TrainConfig,
+        params: GlobalParams,
+        shards: Vec<ShardData>,
+    ) -> Result<Trainer<PoolBackend>> {
+        let dir = cfg.artifacts_dir.clone();
+        build_with(cfg, params, shards, |inits| PoolBackend::new(inits, dir))
+    }
+}
+
+impl Trainer<crate::cluster::TcpBackend> {
+    /// Leader bring-up over TCP, accept direction: validate shapes
+    /// FIRST (before any shard crosses the wire), then accept
+    /// `cfg.workers` worker connections on `listener` and ship each
+    /// its shard. Startup time (handshakes + shard shipping + remote
+    /// node construction) lands in `log.startup_secs`.
+    pub fn accept_tcp(
+        cfg: TrainConfig,
+        params: GlobalParams,
+        shards: Vec<ShardData>,
+        listener: &std::net::TcpListener,
+    ) -> Result<Trainer<crate::cluster::TcpBackend>> {
+        build_with(cfg, params, shards, |inits| {
+            crate::cluster::TcpBackend::accept(listener, inits)
+        })
+    }
+
+    /// Leader bring-up over TCP, dial direction: like [`Self::accept_tcp`]
+    /// but connecting out to workers already listening (`worker --listen`);
+    /// `addrs[k]` becomes worker `k`.
+    pub fn connect_tcp(
+        cfg: TrainConfig,
+        params: GlobalParams,
+        shards: Vec<ShardData>,
+        addrs: &[String],
+    ) -> Result<Trainer<crate::cluster::TcpBackend>> {
+        build_with(cfg, params, shards, |inits| {
+            crate::cluster::TcpBackend::connect(addrs, inits)
+        })
+    }
+}
+
+/// Shared constructor body for every sharded bring-up: validate that
+/// shards match workers and that the parameter shapes match the
+/// artifact BEFORE any backend exists (or any shard crosses a wire),
+/// then time the backend construction into `log.startup_secs`.
+fn build_with<B: Backend>(
+    cfg: TrainConfig,
+    params: GlobalParams,
+    shards: Vec<ShardData>,
+    make_backend: impl FnOnce(Vec<wire::Init>) -> Result<B>,
+) -> Result<Trainer<B>> {
+    ensure!(
+        shards.len() == cfg.workers,
+        "need exactly one shard per worker ({} vs {})",
+        shards.len(),
+        cfg.workers
+    );
+    let art = load_checked_artifact(&cfg, &params)?;
+    let dout = art.d;
+    let inits = make_inits(&cfg, &art, shards);
+    let t0 = Instant::now();
+    let backend = make_backend(inits)?;
+    let startup_secs = t0.elapsed().as_secs_f64();
+    let mut t = Trainer::from_parts(cfg, params, backend, dout);
+    t.log.startup_secs = startup_secs;
+    Ok(t)
+}
+
+/// Load the artifact configuration named by `cfg` and validate the
+/// global parameter shapes against it — the single validation site
+/// shared by every trainer constructor.
+fn load_checked_artifact(cfg: &TrainConfig, params: &GlobalParams) -> Result<ArtifactConfig> {
+    let manifest = Manifest::load(&cfg.artifacts_dir)?;
+    let art = manifest.config(&cfg.artifact)?;
+    ensure!(
+        art.m == params.m() && art.q == params.q(),
+        "params shape (m={}, q={}) does not match artifact {} (m={}, q={})",
+        params.m(),
+        params.q(),
+        cfg.artifact,
+        art.m,
+        art.q
+    );
+    Ok(art.clone())
+}
+
+impl<B: Backend> Trainer<B> {
+    /// Drive an already-initialised cluster backend (e.g. a
+    /// [`crate::cluster::TcpBackend`] whose worker processes received
+    /// their shards during the handshake).
+    pub fn with_backend(cfg: TrainConfig, params: GlobalParams, backend: B) -> Result<Trainer<B>> {
         ensure!(
-            shards.len() == cfg.workers,
-            "need exactly one shard per worker ({} vs {})",
-            shards.len(),
+            backend.workers() == cfg.workers,
+            "backend has {} workers but the config expects {}",
+            backend.workers(),
             cfg.workers
         );
-        let manifest = Manifest::load(&cfg.artifacts_dir)?;
-        let art = manifest.config(&cfg.artifact)?;
-        ensure!(
-            art.m == params.m() && art.q == params.q(),
-            "params shape (m={}, q={}) does not match artifact {} (m={}, q={})",
-            params.m(),
-            params.q(),
-            cfg.artifact,
-            art.m,
-            art.q
-        );
-        let dout = art.d;
-        let lvm = cfg.model == ModelKind::Lvm;
-        let local_lr = cfg.local_lr;
-        let min_xvar = cfg.min_xvar;
-        let artifact = cfg.artifact.clone();
-        let shards = Arc::new(shards);
-        let manifest = Arc::new(manifest);
-        let t0 = Instant::now();
-        let pool = Pool::new(cfg.workers, move |k| {
-            let exec = ShardExecutor::new(&manifest, &artifact)
-                .with_context(|| format!("worker {k}: compiling artifacts"))?;
-            let shard = shards[k].clone();
-            let dof = shard.xmu.rows() * shard.xmu.cols();
-            Ok(WorkerState {
-                exec,
-                shard,
-                adam_mu: Adam::new(dof, local_lr),
-                adam_ls: Adam::new(dof, local_lr),
-                min_xvar,
-                lvm,
-            })
-        })?;
-        let startup_secs = t0.elapsed().as_secs_f64();
+        let art = load_checked_artifact(&cfg, &params)?;
+        Ok(Self::from_parts(cfg, params, backend, art.d))
+    }
+
+    /// Assemble the leader state (shapes already validated).
+    fn from_parts(cfg: TrainConfig, params: GlobalParams, backend: B, dout: usize) -> Trainer<B> {
         let alive = vec![true; cfg.workers];
         let dead = vec![false; cfg.workers];
+        let lost = vec![false; cfg.workers];
         let rng = Rng::new(cfg.seed ^ 0xC0FFEE);
-        let mut log = RunLog::default();
-        log.startup_secs = startup_secs;
-        Ok(Trainer {
-            pool,
+        Trainer {
+            backend,
             params,
             cfg,
             dout,
-            log,
+            log: RunLog::default(),
             rng,
             scg: None,
             adam: None,
             alive,
             dead,
+            lost,
             rounds: Vec::new(),
             central_secs: 0.0,
             update_locals_next: false,
             last_f: f64::NAN,
             objective_dirty: false,
-        })
+            newly_failed: Vec::new(),
+            last_heartbeat: None,
+        }
     }
 
     pub fn dout(&self) -> usize {
@@ -217,6 +277,16 @@ impl Trainer {
         self.cfg.workers
     }
 
+    /// The backend driving the map rounds (telemetry inspection).
+    pub fn backend(&self) -> &B {
+        &self.backend
+    }
+
+    /// Mutable backend access (e.g. tightening TCP timeouts).
+    pub fn backend_mut(&mut self) -> &mut B {
+        &mut self.backend
+    }
+
     /// Adjust the per-iteration node failure probability (Fig. 7 sweeps).
     pub fn set_failure_rate(&mut self, rate: f64) {
         self.cfg.failure_rate = rate;
@@ -225,9 +295,9 @@ impl Trainer {
     /// Permanently decommission worker `k`, re-sharding its data across
     /// the survivors — the paper's §5.2 *alternative* recovery strategy
     /// ("load the data to a different node and restart the calculation").
-    /// In-process we fetch the shard back from the dying worker, which
-    /// stands in for re-reading it from replicated storage; the survivors'
-    /// local optimiser state is rebuilt at the new shapes.
+    /// The shard is fetched back from the dying worker (standing in for
+    /// a replica read); the survivors' local optimiser state is rebuilt
+    /// at the new shapes.
     pub fn decommission(&mut self, k: usize) -> Result<()> {
         ensure!(k < self.cfg.workers, "no such worker {k}");
         ensure!(!self.dead[k], "worker {k} already decommissioned");
@@ -236,22 +306,16 @@ impl Trainer {
             .collect();
         ensure!(!survivors.is_empty(), "cannot decommission the last worker");
 
-        // fetch the doomed shard (replica read)
-        let orphan = self
-            .pool
-            .map_one(k, |_, w: &mut WorkerState| {
-                let s = w.shard.clone();
-                // drop the local data so the dead node holds nothing
-                w.shard = ShardData {
-                    xmu: Matrix::zeros(0, s.xmu.cols()),
-                    xvar: Matrix::zeros(0, s.xvar.cols()),
-                    y: Matrix::zeros(0, s.y.cols()),
-                    kl_weight: s.kl_weight,
-                };
-                s
-            })
-            .ok_or_else(|| anyhow::anyhow!("worker {k} unreachable"))?
-            .value;
+        // fetch the doomed shard (replica read); the dead node keeps nothing
+        let reply = self
+            .backend
+            .map_one(k, &Request::FetchShard { clear: true })
+            .ok_or_else(|| anyhow!("worker {k} unreachable"))?;
+        let orphan = match reply.value {
+            Response::Shard(s) => s,
+            Response::Err(e) => bail!("worker {k}: {e}"),
+            other => bail!("worker {k}: unexpected reply {other:?}"),
+        };
 
         // split the orphan shard across the survivors
         let parts = partition(
@@ -261,39 +325,57 @@ impl Trainer {
             orphan.kl_weight,
             survivors.len(),
         );
-        let local_lr = self.cfg.local_lr;
         for (s, part) in survivors.iter().zip(parts) {
-            self.pool
-                .map_one(*s, move |_, w: &mut WorkerState| {
-                    w.shard.xmu = w.shard.xmu.vstack(&part.xmu);
-                    w.shard.xvar = w.shard.xvar.vstack(&part.xvar);
-                    w.shard.y = w.shard.y.vstack(&part.y);
-                    // optimiser state is shape-bound: rebuild (documented
-                    // trade-off of the reassign strategy)
-                    let dof = w.shard.xmu.rows() * w.shard.xmu.cols();
-                    w.adam_mu = Adam::new(dof, local_lr);
-                    w.adam_ls = Adam::new(dof, local_lr);
-                })
-                .ok_or_else(|| anyhow::anyhow!("survivor {s} unreachable"))?;
+            let reply = self
+                .backend
+                .map_one(*s, &Request::AppendShard { part })
+                .ok_or_else(|| anyhow!("survivor {s} unreachable"))?;
+            match reply.value {
+                Response::Ok => {}
+                Response::Err(e) => bail!("survivor {s}: {e}"),
+                other => bail!("survivor {s}: unexpected reply {other:?}"),
+            }
         }
         self.dead[k] = true;
         self.objective_dirty = true;
         Ok(())
     }
 
-    /// Workers currently decommissioned.
+    /// Workers currently decommissioned or lost.
     pub fn dead_workers(&self) -> Vec<usize> {
         (0..self.cfg.workers).filter(|k| self.dead[*k]).collect()
     }
 
-    fn record_round<R>(&mut self, results: &[crate::mapreduce::MapResult<R>], wall: f64) {
+    /// Mark workers whose backend connection died mid-round as
+    /// permanently lost (§5.2: their partial terms are dropped; over
+    /// TCP the data cannot be fetched back from a dead process).
+    fn absorb_backend_failures(&mut self, include: &[bool], replies: &[Option<WorkerReply>]) {
+        for k in 0..include.len() {
+            if include[k] && replies[k].is_none() && !self.dead[k] {
+                self.dead[k] = true;
+                self.lost[k] = true; // the shard died with the process
+                self.alive[k] = false;
+                self.objective_dirty = true;
+                if !self.newly_failed.contains(&k) {
+                    self.newly_failed.push(k);
+                }
+            }
+        }
+    }
+
+    fn record_round(&mut self, replies: &[Option<WorkerReply>], wall: f64) {
         let mut worker_secs = vec![0.0; self.cfg.workers];
-        for r in results {
+        let (mut tx, mut rx) = (0u64, 0u64);
+        for r in replies.iter().flatten() {
             worker_secs[r.worker] = r.secs;
+            tx += r.bytes_tx;
+            rx += r.bytes_rx;
         }
         self.rounds.push(RoundTiming {
             worker_secs,
             wall_secs: wall,
+            bytes_tx: tx,
+            bytes_rx: rx,
         });
     }
 
@@ -303,23 +385,27 @@ impl Trainer {
     /// time the end-point nodes optimise L_k").
     fn eval_globals(&mut self, theta: &[f64]) -> Result<(f64, Vec<f64>)> {
         let params = self.params.unflatten(theta);
-        let alive = self.alive.clone();
+        let include = self.alive.clone();
 
         // ---- round 1: partial statistics --------------------------------
-        let p1 = params.clone();
         let t0 = Instant::now();
-        let results = self
-            .pool
-            .map_subset(&alive, move |_, w: &mut WorkerState| {
-                w.exec.shard_stats(&p1, &w.shard)
-            });
+        let replies = self.backend.map_subset(
+            &include,
+            &Request::Stats {
+                params: params.clone(),
+            },
+        );
         let wall = t0.elapsed().as_secs_f64();
-        self.record_round(&results, wall);
+        self.absorb_backend_failures(&include, &replies);
+        self.record_round(&replies, wall);
         let m = params.m();
         let mut stats = Stats::zeros(m, self.dout);
-        for r in &results {
-            let s = r.value.as_ref().map_err(|e| anyhow::anyhow!("{e}"))?;
-            stats.accumulate(s);
+        for r in replies.iter().flatten() {
+            match &r.value {
+                Response::Stats(s) => stats.accumulate(s),
+                Response::Err(e) => bail!("worker {} (stats round): {e}", r.worker),
+                other => bail!("worker {}: unexpected stats reply {other:?}", r.worker),
+            }
         }
 
         // ---- central: bound + adjoints -----------------------------------
@@ -329,33 +415,34 @@ impl Trainer {
         self.central_secs += tc.elapsed().as_secs_f64();
 
         // ---- round 2: chain-rule gradients (+ local updates) -------------
-        let p2 = params.clone();
-        let adj2 = Arc::new(adj);
-        let adj_for_round = Arc::clone(&adj2);
         let do_locals = self.update_locals_next;
         self.update_locals_next = false;
+        let include2 = self.alive.clone();
         let t1 = Instant::now();
-        let gresults = self
-            .pool
-            .map_subset(&alive, move |_, w: &mut WorkerState| -> Result<GlobalGrads> {
-                let (g, local) = w.exec.shard_grads(&p2, &w.shard, &adj_for_round)?;
-                if do_locals {
-                    w.local_update(&local.d_xmu, &local.d_xvar);
-                }
-                Ok(g)
-            });
+        let greplies = self.backend.map_subset(
+            &include2,
+            &Request::Grads {
+                params: params.clone(),
+                adj: adj.clone(),
+                update_locals: do_locals,
+            },
+        );
         let wall1 = t1.elapsed().as_secs_f64();
-        self.record_round(&gresults, wall1);
+        self.absorb_backend_failures(&include2, &greplies);
+        self.record_round(&greplies, wall1);
 
         let tc2 = Instant::now();
         let mut total = GlobalGrads::zeros(m, params.q());
-        for r in &gresults {
-            let g = r.value.as_ref().map_err(|e| anyhow::anyhow!("{e}"))?;
-            total.accumulate(g);
+        for r in greplies.iter().flatten() {
+            match &r.value {
+                Response::Grads(g) => total.accumulate(g),
+                Response::Err(e) => bail!("worker {} (gradient round): {e}", r.worker),
+                other => bail!("worker {}: unexpected gradient reply {other:?}", r.worker),
+            }
         }
         // central direct term (native pullback of dF/dKmm through Kmm(Z))
-        total.accumulate(&kernel::kmm_vjp(&params, &adj2.d_kmm));
-        total.d_log_beta = adj2.d_log_beta;
+        total.accumulate(&kernel::kmm_vjp(&params, &adj.d_kmm));
+        total.d_log_beta = adj.d_log_beta;
         self.central_secs += tc2.elapsed().as_secs_f64();
 
         self.last_f = bv.f;
@@ -369,9 +456,34 @@ impl Trainer {
         let iter = self.log.iterations.len();
         self.rounds.clear();
         self.central_secs = 0.0;
+        // NOTE: newly_failed is NOT cleared here — deaths absorbed
+        // between steps (evaluate/current_stats/predict) carry into
+        // this iteration's failure log instead of vanishing.
+
+        // membership: periodically probe the backend; a lost connection
+        // becomes a permanent §5.2 drop before the round even starts.
+        // Rate-limited: mid-round deaths are caught by the map rounds
+        // themselves (absorb_backend_failures), so the healthy path
+        // does not pay a ping round-trip per iteration.
+        let now = Instant::now();
+        let due = self.last_heartbeat.map_or(true, |t| {
+            now.duration_since(t).as_secs_f64() >= self.cfg.heartbeat_secs
+        });
+        if due {
+            self.last_heartbeat = Some(now);
+            let hb = self.backend.heartbeat();
+            for k in 0..self.cfg.workers {
+                if !hb[k] && !self.dead[k] {
+                    self.dead[k] = true;
+                    self.lost[k] = true; // no chance to fetch the shard back
+                    self.objective_dirty = true;
+                    self.newly_failed.push(k);
+                }
+            }
+        }
 
         // node-failure injection for this iteration (paper Fig. 7);
-        // permanently decommissioned nodes stay down
+        // permanently lost nodes stay down
         let mut failed = Vec::new();
         for k in 0..self.cfg.workers {
             if self.dead[k] {
@@ -386,9 +498,13 @@ impl Trainer {
         }
         if !self.alive.iter().any(|a| *a) {
             // never drop the whole cluster; revive the first live node
-            let k = (0..self.cfg.workers).find(|k| !self.dead[*k]).unwrap();
-            self.alive[k] = true;
-            failed.retain(|f| *f != k);
+            match (0..self.cfg.workers).find(|k| !self.dead[*k]) {
+                Some(k) => {
+                    self.alive[k] = true;
+                    failed.retain(|f| *f != k);
+                }
+                None => bail!("every worker in the cluster is dead"),
+            }
         }
 
         let mut accepted_f = f64::NAN;
@@ -458,6 +574,15 @@ impl Trainer {
             }
         }
 
+        // the iteration's failure record: transient injections plus
+        // connections lost mid-iteration or since the last step
+        for k in std::mem::take(&mut self.newly_failed) {
+            if !failed.contains(&k) {
+                failed.push(k);
+            }
+        }
+        failed.sort_unstable();
+
         let f = accepted_f;
         self.log.iterations.push(IterationLog {
             iter,
@@ -479,7 +604,7 @@ impl Trainer {
     }
 
     /// Evaluate the bound at the current parameters without stepping
-    /// (all nodes, no failure injection).
+    /// (all live nodes, no failure injection).
     pub fn evaluate(&mut self) -> Result<f64> {
         let saved = self.alive.clone();
         self.alive = (0..self.cfg.workers).map(|k| !self.dead[k]).collect();
@@ -492,14 +617,21 @@ impl Trainer {
     /// Accumulated statistics at the current parameters (for posterior
     /// weights / prediction).
     pub fn current_stats(&mut self) -> Result<Stats> {
-        let params = self.params.clone();
-        let m = params.m();
-        let results = self.pool.map(move |_, w: &mut WorkerState| {
-            w.exec.shard_stats(&params, &w.shard)
-        });
-        let mut stats = Stats::zeros(m, self.dout);
-        for r in &results {
-            stats.accumulate(r.value.as_ref().map_err(|e| anyhow::anyhow!("{e}"))?);
+        let include: Vec<bool> = (0..self.cfg.workers).map(|k| !self.dead[k]).collect();
+        let replies = self.backend.map_subset(
+            &include,
+            &Request::Stats {
+                params: self.params.clone(),
+            },
+        );
+        self.absorb_backend_failures(&include, &replies);
+        let mut stats = Stats::zeros(self.params.m(), self.dout);
+        for r in replies.iter().flatten() {
+            match &r.value {
+                Response::Stats(s) => stats.accumulate(s),
+                Response::Err(e) => bail!("worker {}: {e}", r.worker),
+                other => bail!("worker {}: unexpected reply {other:?}", r.worker),
+            }
         }
         Ok(stats)
     }
@@ -511,35 +643,68 @@ impl Trainer {
         gp::bound::posterior_weights(&stats, &kmm, self.params.log_beta)
     }
 
-    /// Fetch the workers' current local parameters (gather; used by the
-    /// LVM experiments to inspect the learned embedding).
-    pub fn gather_locals(&self) -> Vec<(Matrix, Matrix)> {
-        self.pool
-            .map(|_, w: &mut WorkerState| (w.shard.xmu.clone(), w.shard.xvar.clone()))
-            .into_iter()
-            .map(|r| r.value)
-            .collect()
+    /// Fetch the live workers' current local parameters (gather; used by
+    /// the LVM experiments to inspect the learned embedding), in worker
+    /// order. Any unavailable shard is an error — silently omitting one
+    /// would leave rows missing from the assembled embedding. Workers
+    /// whose process died with their shard (`lost`) therefore fail the
+    /// gather. Decommissioned workers keep the gather COMPLETE (their
+    /// rows moved to the survivors), but note the moved rows sit at the
+    /// survivors' shard tails: after a decommission the concatenated
+    /// row order is a permutation of the original dataset order, so
+    /// callers pairing rows 1:1 with dataset labels must re-gather
+    /// positions themselves (none of the in-tree experiments gather
+    /// after a decommission).
+    pub fn gather_locals(&mut self) -> Result<Vec<(Matrix, Matrix)>> {
+        if let Some(k) = (0..self.cfg.workers).find(|k| self.lost[*k]) {
+            bail!(
+                "worker {k}'s shard was lost with its process (§5.2 drop path); \
+                 the gathered local parameters would be incomplete"
+            );
+        }
+        let include: Vec<bool> = (0..self.cfg.workers).map(|k| !self.dead[k]).collect();
+        let replies = self.backend.map_subset(&include, &Request::GatherLocals);
+        let mut out = Vec::new();
+        for (k, slot) in replies.into_iter().enumerate() {
+            let Some(r) = slot else {
+                if include[k] {
+                    bail!("worker {k} unreachable during gather");
+                }
+                continue;
+            };
+            match r.value {
+                Response::Locals { xmu, xvar } => out.push((xmu, xvar)),
+                Response::Err(e) => bail!("worker {k} (gather): {e}"),
+                other => bail!("worker {k}: unexpected gather reply {other:?}"),
+            }
+        }
+        Ok(out)
     }
 
     /// Predict through the first live worker's executor (any node serves).
-    pub fn predict(
-        &mut self,
-        xt_mu: &Matrix,
-        xt_var: &Matrix,
-    ) -> Result<(Matrix, Vec<f64>)> {
+    pub fn predict(&mut self, xt_mu: &Matrix, xt_var: &Matrix) -> Result<(Matrix, Vec<f64>)> {
         let w = self.posterior()?;
-        let params = self.params.clone();
-        let xt_mu = xt_mu.clone();
-        let xt_var = xt_var.clone();
         let k = (0..self.cfg.workers)
             .find(|k| !self.dead[*k])
-            .ok_or_else(|| anyhow::anyhow!("no live workers"))?;
-        self.pool
-            .map_one(k, move |_, ws: &mut WorkerState| {
-                ws.exec.predict(&params, &xt_mu, &xt_var, &w.w1, &w.wv)
-            })
-            .expect("live worker reachable")
-            .value
+            .ok_or_else(|| anyhow!("no live workers"))?;
+        let reply = self
+            .backend
+            .map_one(
+                k,
+                &Request::Predict {
+                    params: self.params.clone(),
+                    xt_mu: xt_mu.clone(),
+                    xt_var: xt_var.clone(),
+                    w1: w.w1,
+                    wv: w.wv,
+                },
+            )
+            .ok_or_else(|| anyhow!("worker {k} unreachable"))?;
+        match reply.value {
+            Response::Predict { mean, var } => Ok((mean, var)),
+            Response::Err(e) => bail!("worker {k}: {e}"),
+            other => bail!("worker {k}: unexpected predict reply {other:?}"),
+        }
     }
 }
 
@@ -560,9 +725,7 @@ pub fn partition(
     for i in 0..k {
         let len = base + usize::from(i < extra);
         let hi = lo + len;
-        let take = |src: &Matrix| {
-            Matrix::from_fn(hi - lo, src.cols(), |r, c| src[(lo + r, c)])
-        };
+        let take = |src: &Matrix| Matrix::from_fn(hi - lo, src.cols(), |r, c| src[(lo + r, c)]);
         out.push(ShardData {
             xmu: take(xmu),
             xvar: take(xvar),

@@ -87,8 +87,8 @@ pub fn ard_relevance(params: &GlobalParams) -> Vec<f64> {
 }
 
 /// Gather the full latent means from a trainer (ordered by worker).
-pub fn gathered_xmu(t: &Trainer, q: usize) -> Matrix {
-    let locals = t.gather_locals();
+pub fn gathered_xmu(t: &mut Trainer, q: usize) -> Result<Matrix> {
+    let locals = t.gather_locals()?;
     let n: usize = locals.iter().map(|(mu, _)| mu.rows()).sum();
     let mut out = Matrix::zeros(n, q);
     let mut row = 0;
@@ -98,7 +98,7 @@ pub fn gathered_xmu(t: &Trainer, q: usize) -> Matrix {
             row += 1;
         }
     }
-    out
+    Ok(out)
 }
 
 /// Between-class / within-class scatter ratio of a labelled embedding —

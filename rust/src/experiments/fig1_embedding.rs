@@ -26,7 +26,7 @@ pub fn run(args: &Args) -> Result<()> {
         common::lvm_trainer(args, "small", &data.y, 16, 2, 2, seed)?;
     let f0 = trainer.evaluate()?;
     let f1 = trainer.train(iters)?;
-    let xmu = common::gathered_xmu(&trainer, 2);
+    let xmu = common::gathered_xmu(&mut trainer, 2)?;
     let ard = common::ard_relevance(&trainer.params);
 
     // dominant latent dimension: ARD relevance weighted by the empirical

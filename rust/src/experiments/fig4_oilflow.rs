@@ -29,7 +29,7 @@ pub fn run(args: &Args) -> Result<()> {
     let (mut dist, init) = common::lvm_trainer(args, "oil", &data.y, m, q, workers, seed)?;
     let f0 = dist.evaluate()?;
     let f_dist = dist.train(iters)?;
-    let xmu_dist = common::gathered_xmu(&dist, q);
+    let xmu_dist = common::gathered_xmu(&mut dist, q)?;
     let ard_dist = common::ard_relevance(&dist.params);
 
     // --- sequential reference (same init) ---------------------------------

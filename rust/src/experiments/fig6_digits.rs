@@ -105,7 +105,7 @@ fn train_model(args: &Args, n: usize, iters: usize, seed: u64) -> Result<Trained
     let (mut t, _) = common::lvm_trainer(args, "digits", &data.y, 48, 8, 4, seed)?;
     t.train(iters)?;
     let weights = t.posterior()?;
-    let latents = common::gathered_xmu(&t, 8);
+    let latents = common::gathered_xmu(&mut t, 8)?;
     Ok(TrainedModel {
         params: t.params.clone(),
         weights,

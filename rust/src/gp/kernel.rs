@@ -155,6 +155,105 @@ pub fn kmm_vjp(p: &GlobalParams, adj: &Matrix) -> super::params::GlobalGrads {
     g
 }
 
+/// Pullback of the map-step-2 adjoints through the psi statistics — the
+/// native mirror of the `shard_grads` artifact. Given the central
+/// node's adjoint message (dF/dpsi0, dF/dC, dF/dD, dF/dKL), chain-rules
+/// through `C = sum_i Psi1_i^T Y_i`, `D = sum_i Psi2_i`,
+/// `psi0 = sf2 * n` and the per-point KL onto the global parameters
+/// (Z, log lengthscales, log sf2) and this shard's local parameters
+/// (Xmu, Xvar in raw variance space).
+///
+/// Returns `(global grads, dF/dXmu [b x q], dF/dXvar [b x q])`;
+/// `d_log_beta` is left 0 (it is central, paper §3.2 step 3).
+/// Derivatives are w.r.t. the same explicit formulas as [`psi1`] /
+/// [`psi2_point`]; validated against finite differences of the
+/// assembled bound in the tests below.
+pub fn shard_grads_vjp(
+    p: &GlobalParams,
+    xmu: &Matrix,
+    xvar: &Matrix,
+    y: &Matrix,
+    kl_weight: f64,
+    adj: &super::bound::Adjoints,
+) -> (super::params::GlobalGrads, Matrix, Matrix) {
+    let (b, q, m) = (xmu.rows(), p.q(), p.m());
+    let dout = y.cols();
+    let ls2: Vec<f64> = p.log_ls.iter().map(|l| (2.0 * l).exp()).collect();
+    let sf2 = p.sf2();
+    let mut g = super::params::GlobalGrads::zeros(m, q);
+    let mut d_xmu = Matrix::zeros(b, q);
+    let mut d_xvar = Matrix::zeros(b, q);
+
+    // ---- Psi1 path: dF/dPsi1[i,j] = sum_d dF/dC[j,d] * Y[i,d] --------------
+    let p1 = psi1(p, xmu, xvar);
+    for i in 0..b {
+        let yi = y.row(i);
+        for j in 0..m {
+            let mut a1 = 0.0;
+            for dd in 0..dout {
+                a1 += adj.d_c[(j, dd)] * yi[dd];
+            }
+            let w = a1 * p1[(i, j)];
+            if w == 0.0 {
+                continue;
+            }
+            g.d_log_sf2 += w;
+            for k in 0..q {
+                let dn = ls2[k] + xvar[(i, k)];
+                let diff = xmu[(i, k)] - p.z[(j, k)];
+                g.d_z[(j, k)] += w * diff / dn;
+                d_xmu[(i, k)] -= w * diff / dn;
+                d_xvar[(i, k)] += w * 0.5 * (diff * diff / (dn * dn) - 1.0 / dn);
+                g.d_log_ls[k] += w * (xvar[(i, k)] / dn + ls2[k] * diff * diff / (dn * dn));
+            }
+        }
+    }
+
+    // ---- Psi2 path: dF/dPsi2_i[j,l] = dF/dD[j,l] --------------------------
+    for i in 0..b {
+        let p2 = psi2_point(p, xmu.row(i), xvar.row(i));
+        for j in 0..m {
+            for l in 0..m {
+                let w = adj.d_d[(j, l)] * p2[(j, l)];
+                if w == 0.0 {
+                    continue;
+                }
+                g.d_log_sf2 += 2.0 * w;
+                for k in 0..q {
+                    let dn2 = ls2[k] + 2.0 * xvar[(i, k)];
+                    let dz = p.z[(j, k)] - p.z[(l, k)];
+                    let dm = xmu[(i, k)] - 0.5 * (p.z[(j, k)] + p.z[(l, k)]);
+                    g.d_z[(j, k)] += w * (-dz / (2.0 * ls2[k]) + dm / dn2);
+                    g.d_z[(l, k)] += w * (dz / (2.0 * ls2[k]) + dm / dn2);
+                    d_xmu[(i, k)] -= w * 2.0 * dm / dn2;
+                    d_xvar[(i, k)] += w * (2.0 * dm * dm / (dn2 * dn2) - 1.0 / dn2);
+                    g.d_log_ls[k] += w
+                        * (2.0 * xvar[(i, k)] / dn2
+                            + dz * dz / (2.0 * ls2[k])
+                            + 2.0 * ls2[k] * dm * dm / (dn2 * dn2));
+                }
+            }
+        }
+    }
+
+    // ---- psi0 = sf2 * n: only log sf2 sees it ----------------------------
+    g.d_log_sf2 += adj.d_psi0 * sf2 * b as f64;
+
+    // ---- KL path: kl = klw * 0.5 sum_{i,k} (mu^2 + s - ln s - 1) ---------
+    if kl_weight > 0.0 {
+        for i in 0..b {
+            for k in 0..q {
+                let s = xvar[(i, k)];
+                d_xmu[(i, k)] += adj.d_kl * kl_weight * xmu[(i, k)];
+                let ds = if s > 0.0 { 0.5 * (1.0 - 1.0 / s) } else { 0.5 };
+                d_xvar[(i, k)] += adj.d_kl * kl_weight * ds;
+            }
+        }
+    }
+
+    (g, d_xmu, d_xvar)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -253,6 +352,83 @@ mod tests {
         pm.log_sf2 -= eps;
         let fd = (f_of(&pp) - f_of(&pm)) / (2.0 * eps);
         assert!((g.d_log_sf2 - fd).abs() < 1e-6 * (1.0 + fd.abs()));
+    }
+
+    /// The full native gradient (shard VJP + central Kmm pullback) must
+    /// match finite differences of the assembled bound — the same
+    /// composition the distributed trainer runs every iteration, so this
+    /// pins the whole native fallback path end to end.
+    #[test]
+    fn shard_grads_vjp_matches_finite_difference_of_bound() {
+        let (m, q, dout, b) = (4, 2, 2, 6);
+        let jitter = 1e-6;
+        let klw = 1.0;
+        let mut rng = Rng::new(77);
+        let p0 = params(m, q, 20);
+        let xmu0 = Matrix::from_fn(b, q, |_, _| rng.normal());
+        let xvar0 = Matrix::from_fn(b, q, |_, _| 0.2 + 0.5 * rng.uniform());
+        let y = Matrix::from_fn(b, dout, |_, _| rng.normal());
+
+        let f_of = |p: &GlobalParams, xmu: &Matrix, xvar: &Matrix| -> f64 {
+            let st = shard_stats(p, xmu, xvar, &y, &vec![1.0; b], klw);
+            let kmm = kmm(p, jitter);
+            let (bv, _) = crate::gp::assemble_bound(&st, &kmm, p.log_beta, dout).unwrap();
+            bv.f
+        };
+
+        // analytic gradient: shard VJP + central Kmm pullback
+        let st = shard_stats(&p0, &xmu0, &xvar0, &y, &vec![1.0; b], klw);
+        let kmm0 = kmm(&p0, jitter);
+        let (_, adj) = crate::gp::assemble_bound(&st, &kmm0, p0.log_beta, dout).unwrap();
+        let (mut g, d_xmu, d_xvar) = shard_grads_vjp(&p0, &xmu0, &xvar0, &y, klw, &adj);
+        g.accumulate(&kmm_vjp(&p0, &adj.d_kmm));
+
+        let eps = 1e-6;
+        let check = |analytic: f64, fd: f64, what: &str| {
+            assert!(
+                (analytic - fd).abs() < 2e-5 * (1.0 + fd.abs()),
+                "{what}: analytic {analytic} vs fd {fd}"
+            );
+        };
+        for &(j, k) in &[(0, 0), (1, 1), (3, 0)] {
+            let mut pp = p0.clone();
+            pp.z[(j, k)] += eps;
+            let mut pm = p0.clone();
+            pm.z[(j, k)] -= eps;
+            let fd = (f_of(&pp, &xmu0, &xvar0) - f_of(&pm, &xmu0, &xvar0)) / (2.0 * eps);
+            check(g.d_z[(j, k)], fd, &format!("dZ[{j},{k}]"));
+        }
+        for k in 0..q {
+            let mut pp = p0.clone();
+            pp.log_ls[k] += eps;
+            let mut pm = p0.clone();
+            pm.log_ls[k] -= eps;
+            let fd = (f_of(&pp, &xmu0, &xvar0) - f_of(&pm, &xmu0, &xvar0)) / (2.0 * eps);
+            check(g.d_log_ls[k], fd, &format!("dlog_ls[{k}]"));
+        }
+        {
+            let mut pp = p0.clone();
+            pp.log_sf2 += eps;
+            let mut pm = p0.clone();
+            pm.log_sf2 -= eps;
+            let fd = (f_of(&pp, &xmu0, &xvar0) - f_of(&pm, &xmu0, &xvar0)) / (2.0 * eps);
+            check(g.d_log_sf2, fd, "dlog_sf2");
+        }
+        for &(i, k) in &[(0, 0), (2, 1), (5, 0)] {
+            let mut xp = xmu0.clone();
+            xp[(i, k)] += eps;
+            let mut xm = xmu0.clone();
+            xm[(i, k)] -= eps;
+            let fd = (f_of(&p0, &xp, &xvar0) - f_of(&p0, &xm, &xvar0)) / (2.0 * eps);
+            check(d_xmu[(i, k)], fd, &format!("dXmu[{i},{k}]"));
+
+            let mut vp = xvar0.clone();
+            vp[(i, k)] += eps;
+            let mut vm = xvar0.clone();
+            vm[(i, k)] -= eps;
+            let fd = (f_of(&p0, &xmu0, &vp) - f_of(&p0, &xmu0, &vm)) / (2.0 * eps);
+            check(d_xvar[(i, k)], fd, &format!("dXvar[{i},{k}]"));
+        }
     }
 
     #[test]

@@ -8,7 +8,9 @@
 //! * **Layer 3** (this crate): the paper's contribution — a leader/worker
 //!   Map-Reduce coordinator with distributed scaled-conjugate-gradient
 //!   optimisation, constant-size global messages, load accounting and
-//!   node-failure tolerance ([`coordinator`], [`mapreduce`], [`optim`]).
+//!   node-failure tolerance ([`coordinator`], [`cluster`], [`mapreduce`],
+//!   [`optim`]). The cluster layer runs the same protocol over OS
+//!   threads or real worker processes on TCP (`gparml worker`).
 //! * **Layer 2**: per-shard statistic/gradient graphs authored in JAX,
 //!   AOT-lowered to HLO text at build time (`python/compile/`), executed
 //!   here via PJRT ([`runtime`]).
@@ -21,6 +23,7 @@
 //! system inventory and the experiment index.
 
 pub mod baselines;
+pub mod cluster;
 pub mod coordinator;
 pub mod data;
 pub mod experiments;

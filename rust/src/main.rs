@@ -4,11 +4,20 @@
 //! ```text
 //! gparml experiment <fig1..fig8|all> [--n N] [--iters I] [--workers W] ...
 //! gparml train [--data synthetic|oilflow|digits] [--model reg|lvm] ...
+//!              [--connect HOST:PORT,HOST:PORT]   # drive TCP workers
+//! gparml worker (--listen ADDR | --connect LEADER) [--artifacts DIR]
 //! gparml info                      # artifact manifest summary
 //! ```
+//!
+//! `worker` turns this process into a cluster node: it either listens
+//! for a leader (`--listen`) or dials one (`--connect`), then serves
+//! map rounds over the binary wire protocol until shutdown. A leader
+//! started with `train --connect a,b,c` drives those processes instead
+//! of in-process threads.
 
 use anyhow::{bail, Context, Result};
 
+use gparml::cluster::Backend;
 use gparml::coordinator::{partition, GlobalOpt, ModelKind, TrainConfig, Trainer};
 use gparml::data::{digits, oilflow, synthetic};
 use gparml::experiments::{self, common};
@@ -28,16 +37,32 @@ fn main() -> Result<()> {
             experiments::run(name, &args)
         }
         Some("train") => train(&args),
+        Some("worker") => worker(&args),
         Some("info") => info(&args),
         _ => {
             eprintln!(
-                "usage: gparml <experiment|train|info> [flags]\n\
+                "usage: gparml <experiment|train|worker|info> [flags]\n\
                  experiments: fig1 fig2 fig3 fig4 fig5 fig6 fig7 fig8 all\n\
-                 common flags: --n --iters --workers --seed --out DIR --artifacts DIR"
+                 common flags: --n --iters --workers --seed --out DIR --artifacts DIR\n\
+                 cluster: gparml worker --connect LEADER_ADDR (or --listen ADDR),\n\
+                          gparml train --connect W1,W2,... (synthetic dataset)"
             );
             bail!("no command given")
         }
     }
+}
+
+/// Run this process as a cluster worker node.
+fn worker(args: &Args) -> Result<()> {
+    let artifacts = common::artifacts_dir(args);
+    let served = if let Some(addr) = args.get("connect") {
+        gparml::cluster::node::run_worker_connect(addr, &artifacts)?
+    } else {
+        let addr = args.get_str("listen", "127.0.0.1:0");
+        gparml::cluster::node::run_worker_listen(addr, &artifacts)?
+    };
+    eprintln!("[gparml-worker] exiting after {served} requests");
+    Ok(())
 }
 
 fn info(args: &Args) -> Result<()> {
@@ -57,23 +82,55 @@ fn info(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Worker addresses from `--connect a,b,c` (leader side).
+fn connect_addrs(args: &Args) -> Option<Vec<String>> {
+    args.get("connect").map(|s| {
+        s.split(',')
+            .map(|a| a.trim().to_string())
+            .filter(|a| !a.is_empty())
+            .collect()
+    })
+}
+
 fn train(args: &Args) -> Result<()> {
     let dataset = args.get_str("data", "synthetic");
     let iters = args.get_usize("iters", 30)?;
-    let workers = args.get_usize("workers", 4)?;
     let seed = args.get_usize("seed", 0)? as u64;
+    let addrs = connect_addrs(args);
+    let workers = match &addrs {
+        Some(a) => a.len(),
+        None => args.get_usize("workers", 4)?,
+    };
     let model = match args.get_str("model", "lvm") {
         "reg" | "regression" => ModelKind::Regression,
         _ => ModelKind::Lvm,
     };
+    if let Some(a) = &addrs {
+        if a.is_empty() {
+            bail!("--connect needs at least one worker address (host:port[,host:port...])");
+        }
+        if dataset != "synthetic" {
+            bail!("--connect currently supports --data synthetic (use the library API for the rest)");
+        }
+    }
 
     match dataset {
         "synthetic" => {
             let n = args.get_usize("n", 2000)?;
             let data = synthetic::generate(n, 0.05, seed);
-            if model == ModelKind::Lvm {
-                let (mut t, _) = common::lvm_trainer(args, "small", &data.y, 16, 2, workers, seed)?;
-                run_loop(&mut t, iters)
+            let (params, shards, cfg) = if model == ModelKind::Lvm {
+                let init = common::lvm_init(&data.y, 16, 2, seed);
+                let shards = partition(&init.xmu, &init.xvar, &data.y, 1.0, workers);
+                let cfg = TrainConfig {
+                    artifact: "small".into(),
+                    artifacts_dir: common::artifacts_dir(args),
+                    workers,
+                    model,
+                    global_opt: GlobalOpt::Scg,
+                    seed,
+                    ..Default::default()
+                };
+                (init.params, shards, cfg)
             } else {
                 let mut rng = Rng::new(seed);
                 let xmu = Matrix::from_fn(n, 2, |i, j| {
@@ -100,8 +157,21 @@ fn train(args: &Args) -> Result<()> {
                     seed,
                     ..Default::default()
                 };
-                let mut t = Trainer::new(cfg, params, shards)?;
-                run_loop(&mut t, iters)
+                (params, shards, cfg)
+            };
+            match addrs {
+                Some(addrs) => {
+                    println!("cluster: {} TCP worker processes ({addrs:?})", addrs.len());
+                    let mut t = Trainer::connect_tcp(cfg, params, shards, &addrs)?;
+                    run_loop(&mut t, iters)?;
+                    let (tx, rx) = t.log.total_network_bytes();
+                    println!("network: {tx} B to workers, {rx} B back");
+                    Ok(())
+                }
+                None => {
+                    let mut t = Trainer::new(cfg, params, shards)?;
+                    run_loop(&mut t, iters)
+                }
             }
         }
         "oilflow" => {
@@ -120,7 +190,7 @@ fn train(args: &Args) -> Result<()> {
     }
 }
 
-fn run_loop(t: &mut Trainer, iters: usize) -> Result<()> {
+fn run_loop<B: Backend>(t: &mut Trainer<B>, iters: usize) -> Result<()> {
     println!("training: {} workers, {} iterations", t.workers(), iters);
     for i in 0..iters {
         let f = t.step()?;

@@ -1,15 +1,23 @@
-//! A small typed Map-Reduce runtime over OS threads — the substrate the
-//! paper's inference runs on (Dean & Ghemawat-style, scoped to one box,
-//! matching the original GParML multicore setting).
+//! A small typed Map-Reduce runtime over OS threads — the in-process
+//! substrate the paper's inference runs on (Dean & Ghemawat-style,
+//! scoped to one box, matching the original GParML multicore setting).
+//! The multi-process equivalent lives in `cluster::TcpBackend`; both
+//! are driven through the `cluster::Backend` trait.
 //!
-//! Each worker thread owns non-`Send` state `W` (for us: a PJRT client,
-//! compiled executables and the data shard), built *on* the thread by a
-//! factory. A map round broadcasts a closure to every worker and collects
+//! Each worker thread owns non-`Send` state `W` (for us: a shard
+//! executor and the data shard), built *on* the thread by a factory. A
+//! map round broadcasts a closure to every worker and collects
 //! `(worker_id, result, compute_seconds)`; per-worker timings feed the
 //! load-distribution telemetry (paper Fig. 5) and the simulated-cluster
 //! clock (DESIGN.md §5: this container has 1 core, so parallel wall-clock
 //! is *modeled* as `max_k t_k` + central time, exactly the paper's
 //! "time spent in the computations alone" accounting).
+//!
+//! Every map method returns **one slot per worker**: `None` marks a
+//! worker that was excluded from the round or whose thread has died.
+//! A dead worker can therefore never silently shrink the result set
+//! and mis-weight the reduce — the caller sees exactly which partial
+//! terms are missing (the paper's §5.2 failure accounting).
 
 use std::sync::mpsc::{channel, Sender};
 use std::sync::Arc;
@@ -89,44 +97,38 @@ impl<W: 'static> Pool<W> {
         self.senders.is_empty()
     }
 
-    /// One map round: run `f` on every worker, collect all results
-    /// (ordered by worker id). This is a barrier — the reduce step can
-    /// only start when the slowest map finishes, which is what the
-    /// paper's Fig. 5 measures.
-    pub fn map<R, F>(&self, f: F) -> Vec<MapResult<R>>
+    /// Which worker threads are still accepting jobs (probed with a
+    /// no-op job — a worker that exited has dropped its receiver).
+    pub fn alive(&self) -> Vec<bool> {
+        self.senders
+            .iter()
+            .map(|s| {
+                let noop: Job<W> = Box::new(|_| {});
+                s.send(noop).is_ok()
+            })
+            .collect()
+    }
+
+    /// One map round: run `f` on every worker; slot `k` of the result
+    /// is `None` iff worker `k`'s thread has died. This is a barrier —
+    /// the reduce step can only start when the slowest map finishes,
+    /// which is what the paper's Fig. 5 measures.
+    pub fn map<R, F>(&self, f: F) -> Vec<Option<MapResult<R>>>
     where
         R: Send + 'static,
         F: Fn(usize, &mut W) -> R + Send + Sync + 'static,
     {
-        let f = Arc::new(f);
-        let (tx, rx) = channel::<MapResult<R>>();
-        for (k, sender) in self.senders.iter().enumerate() {
-            let f = Arc::clone(&f);
-            let tx = tx.clone();
-            let job: Job<W> = Box::new(move |state: &mut W| {
-                let c0 = crate::util::timer::thread_cpu_secs();
-                let value = f(k, state);
-                let secs = crate::util::timer::thread_cpu_secs() - c0;
-                let _ = tx.send(MapResult {
-                    worker: k,
-                    value,
-                    secs,
-                });
-            });
-            // a worker that exited drops its receiver; treat as crashed node
-            let _ = sender.send(job);
-        }
-        drop(tx);
-        let mut out: Vec<MapResult<R>> = rx.iter().collect();
-        out.sort_by_key(|r| r.worker);
-        out
+        let include = vec![true; self.senders.len()];
+        self.map_subset(&include, f)
     }
 
     /// Map round over a subset of workers (`include[k]`): failed nodes
     /// are simply not scheduled, which is the paper's §5.2 recovery
     /// strategy — drop the partial term and accept a noisy gradient for
-    /// one iteration instead of stalling on a reload.
-    pub fn map_subset<R, F>(&self, include: &[bool], f: F) -> Vec<MapResult<R>>
+    /// one iteration instead of stalling on a reload. Excluded and dead
+    /// workers both yield `None` in their slot (callers distinguish via
+    /// their own `include` mask).
+    pub fn map_subset<R, F>(&self, include: &[bool], f: F) -> Vec<Option<MapResult<R>>>
     where
         R: Send + 'static,
         F: Fn(usize, &mut W) -> R + Send + Sync + 'static,
@@ -134,12 +136,10 @@ impl<W: 'static> Pool<W> {
         assert_eq!(include.len(), self.senders.len());
         let f = Arc::new(f);
         let (tx, rx) = channel::<MapResult<R>>();
-        let mut expected = 0;
         for (k, sender) in self.senders.iter().enumerate() {
             if !include[k] {
                 continue;
             }
-            expected += 1;
             let f = Arc::clone(&f);
             let tx = tx.clone();
             let job: Job<W> = Box::new(move |state: &mut W| {
@@ -152,15 +152,22 @@ impl<W: 'static> Pool<W> {
                     secs,
                 });
             });
+            // a worker that exited drops its receiver; its job (and tx
+            // clone) is dropped with it, so the collect loop below still
+            // terminates and the slot stays None
             let _ = sender.send(job);
         }
         drop(tx);
-        let mut out: Vec<MapResult<R>> = rx.iter().take(expected).collect();
-        out.sort_by_key(|r| r.worker);
+        let mut out: Vec<Option<MapResult<R>>> = (0..self.senders.len()).map(|_| None).collect();
+        for r in rx {
+            let k = r.worker;
+            out[k] = Some(r);
+        }
         out
     }
 
-    /// Map on a single worker (used for targeted updates).
+    /// Map on a single worker (used for targeted updates). `None` if
+    /// the worker's thread has died.
     pub fn map_one<R, F>(&self, k: usize, f: F) -> Option<MapResult<R>>
     where
         R: Send + 'static,
@@ -191,12 +198,13 @@ impl<W> Drop for Pool<W> {
     }
 }
 
-/// Reduce helper: fold map results in worker order (deterministic — the
-/// accumulation order does not depend on thread timing, keeping runs
-/// bit-reproducible for a fixed seed).
-pub fn reduce<R, A>(results: &[MapResult<R>], init: A, mut f: impl FnMut(A, &R) -> A) -> A {
+/// Reduce helper: fold the present map results in worker order
+/// (deterministic — the accumulation order does not depend on thread
+/// timing, keeping runs bit-reproducible for a fixed seed). Missing
+/// slots are skipped; the caller accounts for them explicitly.
+pub fn reduce<R, A>(results: &[Option<MapResult<R>>], init: A, mut f: impl FnMut(A, &R) -> A) -> A {
     let mut acc = init;
-    for r in results {
+    for r in results.iter().flatten() {
         acc = f(acc, &r.value);
     }
     acc
@@ -214,9 +222,9 @@ mod tests {
             k + 1
         });
         assert_eq!(results.len(), 4);
-        let vals: Vec<usize> = results.iter().map(|r| r.value).collect();
+        let vals: Vec<usize> = results.iter().map(|r| r.as_ref().unwrap().value).collect();
         assert_eq!(vals, vec![1, 2, 3, 4]);
-        assert!(results.iter().all(|r| r.secs >= 0.0));
+        assert!(results.iter().all(|r| r.as_ref().unwrap().secs >= 0.0));
     }
 
     #[test]
@@ -228,7 +236,7 @@ mod tests {
             });
         }
         let counts = pool.map(|_, state| *state);
-        assert!(counts.iter().all(|r| r.value == 5));
+        assert!(counts.iter().all(|r| r.as_ref().unwrap().value == 5));
     }
 
     #[test]
@@ -237,9 +245,52 @@ mod tests {
         pool.map_one(1, |_, state| state.push(42)).unwrap();
         let lens = pool.map(|_, state| state.len());
         assert_eq!(
-            lens.iter().map(|r| r.value).collect::<Vec<_>>(),
+            lens.iter()
+                .map(|r| r.as_ref().unwrap().value)
+                .collect::<Vec<_>>(),
             vec![0, 1, 0]
         );
+    }
+
+    #[test]
+    fn excluded_workers_yield_none_slots() {
+        let pool = Pool::new(4, |_| Ok(())).unwrap();
+        let out = pool.map_subset(&[true, false, true, false], |k, _| k);
+        assert_eq!(out.len(), 4);
+        assert_eq!(out[0].as_ref().unwrap().value, 0);
+        assert!(out[1].is_none());
+        assert_eq!(out[2].as_ref().unwrap().value, 2);
+        assert!(out[3].is_none());
+    }
+
+    #[test]
+    fn dead_worker_yields_none_not_fewer_results() {
+        let pool = Pool::new(3, |_| Ok(())).unwrap();
+        // kill worker 1 by panicking inside its job (unwinds the thread)
+        let _ = pool.map(|k, _| {
+            if k == 1 {
+                panic!("injected worker death");
+            }
+        });
+        // the dying thread drops its receiver during unwinding; give the
+        // liveness probe a moment to observe it
+        let mut alive = pool.alive();
+        for _ in 0..200 {
+            if alive == vec![true, false, true] {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(5));
+            alive = pool.alive();
+        }
+        assert_eq!(alive, vec![true, false, true]);
+        // the next full round still reports a slot per worker
+        let out = pool.map(|k, _| k * 2);
+        assert_eq!(out.len(), 3);
+        assert_eq!(out[0].as_ref().unwrap().value, 0);
+        assert!(out[1].is_none(), "dead worker must be explicit, not absent");
+        assert_eq!(out[2].as_ref().unwrap().value, 4);
+        // and map_one on the dead worker reports failure
+        assert!(pool.map_one(1, |_, _| ()).is_none());
     }
 
     #[test]
@@ -255,13 +306,13 @@ mod tests {
     }
 
     #[test]
-    fn reduce_is_worker_ordered() {
+    fn reduce_is_worker_ordered_and_skips_missing() {
         let pool = Pool::new(4, Ok).unwrap();
-        let results = pool.map(|k, _| k);
+        let results = pool.map_subset(&[true, true, false, true], |k, _| k);
         let order = reduce(&results, Vec::new(), |mut acc, v| {
             acc.push(*v);
             acc
         });
-        assert_eq!(order, vec![0, 1, 2, 3]);
+        assert_eq!(order, vec![0, 1, 3]);
     }
 }

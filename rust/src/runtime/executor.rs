@@ -10,34 +10,7 @@ use crate::gp::Stats;
 use crate::linalg::Matrix;
 
 use super::manifest::{ArtifactConfig, Manifest};
-
-/// One worker's slice of the dataset (variational means/variances of
-/// q(X) plus targets). In the regression model `xvar` is all zeros and
-/// `kl_weight` is 0.
-#[derive(Debug, Clone)]
-pub struct ShardData {
-    pub xmu: Matrix,
-    pub xvar: Matrix,
-    pub y: Matrix,
-    pub kl_weight: f64,
-}
-
-impl ShardData {
-    pub fn len(&self) -> usize {
-        self.xmu.rows()
-    }
-
-    pub fn is_empty(&self) -> bool {
-        self.len() == 0
-    }
-}
-
-/// Gradients w.r.t. a shard's local parameters (raw variance space).
-#[derive(Debug, Clone)]
-pub struct LocalGrads {
-    pub d_xmu: Matrix,
-    pub d_xvar: Matrix,
-}
+use super::shard::{LocalGrads, ShardData};
 
 /// A compiled set of artifact executables bound to one PJRT CPU client.
 ///

@@ -1,21 +1,69 @@
-//! PJRT runtime: load the AOT HLO-text artifacts produced by
-//! `python/compile/aot.py` and execute them from the coordinator's hot
-//! path. Python never runs here — the artifacts are self-contained.
+//! Shard execution runtime.
 //!
-//! One [`ShardExecutor`] is created per worker thread (the `xla` crate's
-//! `PjRtClient` is `Rc`-based and not `Send`, which conveniently mirrors
-//! one-PJRT-client-per-node), compiled once at startup, and reused for
-//! every iteration.
+//! Two interchangeable executors implement the same [`ShardExecutor`]
+//! API (shape checks, outputs, numerics contract):
+//!
+//! * **native** (default): the hand-written `gp::kernel` mirrors of the
+//!   psi statistics and their adjoint chain rules — no external
+//!   runtime, works everywhere, and lets cluster workers initialise
+//!   from shapes alone ([`ShardExecutor::from_config`]).
+//! * **pjrt** (`--features pjrt`): loads the AOT HLO-text artifacts
+//!   produced by `python/compile/aot.py` and executes them via PJRT.
+//!   One executor is created per worker thread (the `xla` crate's
+//!   `PjRtClient` is `Rc`-based and not `Send`, which conveniently
+//!   mirrors one-PJRT-client-per-node). Offline builds link the API
+//!   stub in `rust/vendor/xla-stub`; swap in the real `xla` crate to
+//!   execute artifacts.
 
-mod executor;
 mod manifest;
+mod shard;
 
-pub use executor::{LocalGrads, ShardData, ShardExecutor};
+#[cfg(feature = "pjrt")]
+mod executor;
+#[cfg(not(feature = "pjrt"))]
+mod native;
+
 pub use manifest::{ArtifactConfig, Manifest};
+pub use shard::{LocalGrads, ShardData};
 
-/// Locate the artifacts directory: $GPARML_ARTIFACTS or ./artifacts.
+#[cfg(feature = "pjrt")]
+pub use executor::ShardExecutor;
+#[cfg(not(feature = "pjrt"))]
+pub use native::ShardExecutor;
+
+/// Locate the artifacts directory: $GPARML_ARTIFACTS, ./artifacts, or
+/// the checked-in rust/artifacts (shape manifest only) as a fallback so
+/// `cargo run` works from the workspace root without `make artifacts`.
 pub fn default_artifacts_dir() -> std::path::PathBuf {
-    std::env::var_os("GPARML_ARTIFACTS")
-        .map(std::path::PathBuf::from)
-        .unwrap_or_else(|| std::path::PathBuf::from("artifacts"))
+    if let Some(dir) = std::env::var_os("GPARML_ARTIFACTS") {
+        return std::path::PathBuf::from(dir);
+    }
+    let local = std::path::PathBuf::from("artifacts");
+    if local.join("manifest.json").exists() {
+        return local;
+    }
+    let checked_in = std::path::PathBuf::from("rust/artifacts");
+    if checked_in.join("manifest.json").exists() {
+        return checked_in;
+    }
+    local
+}
+
+/// Build an executor for one artifact configuration. Native builds need
+/// only the shapes; PJRT builds load and compile the HLO entries from
+/// `artifacts_dir`.
+pub fn build_executor(
+    cfg: &ArtifactConfig,
+    artifacts_dir: &std::path::Path,
+) -> anyhow::Result<ShardExecutor> {
+    #[cfg(feature = "pjrt")]
+    {
+        let manifest = Manifest::load(artifacts_dir)?;
+        ShardExecutor::new(&manifest, &cfg.name)
+    }
+    #[cfg(not(feature = "pjrt"))]
+    {
+        let _ = artifacts_dir;
+        Ok(ShardExecutor::from_config(cfg.clone()))
+    }
 }

@@ -1,0 +1,119 @@
+//! Native executor: the default (no-PJRT) implementation of
+//! [`ShardExecutor`], running the O(n m^2 q) shard statistics and
+//! chain-rule gradients through the hand-written `gp::kernel` mirrors
+//! instead of the AOT HLO artifacts.
+//!
+//! Identical API and numerics contract as the PJRT executor
+//! (`executor.rs`, compiled under `--features pjrt`): same shape
+//! checks, same outputs, validated against finite differences of the
+//! assembled bound in `gp::kernel::tests`. Because it needs no
+//! artifact files, cluster worker daemons can be initialised purely
+//! from the shapes carried in the wire `Init` frame
+//! ([`ShardExecutor::from_config`]).
+
+use anyhow::Result;
+
+use crate::gp::params::{GlobalGrads, GlobalParams};
+use crate::gp::{kernel, Stats};
+use crate::linalg::Matrix;
+
+use super::manifest::{ArtifactConfig, Manifest};
+use super::shard::{LocalGrads, ShardData};
+
+/// Native stand-in for the compiled artifact set: holds only the shape
+/// configuration; all compute is done by `gp::kernel`.
+pub struct ShardExecutor {
+    cfg: ArtifactConfig,
+}
+
+impl ShardExecutor {
+    /// Manifest-based constructor (API-compatible with the PJRT
+    /// executor; the HLO entry files are not touched).
+    pub fn new(manifest: &Manifest, config: &str) -> Result<ShardExecutor> {
+        Ok(ShardExecutor {
+            cfg: manifest.config(config)?.clone(),
+        })
+    }
+
+    /// Build directly from a shape configuration — no artifacts
+    /// directory needed (used by TCP cluster workers, whose shapes
+    /// arrive in the `Init` frame).
+    pub fn from_config(cfg: ArtifactConfig) -> ShardExecutor {
+        ShardExecutor { cfg }
+    }
+
+    pub fn config(&self) -> &ArtifactConfig {
+        &self.cfg
+    }
+
+    fn check_params(&self, p: &GlobalParams) -> Result<()> {
+        anyhow::ensure!(
+            p.m() == self.cfg.m && p.q() == self.cfg.q,
+            "params (m={}, q={}) do not match artifact config {} (m={}, q={})",
+            p.m(),
+            p.q(),
+            self.cfg.name,
+            self.cfg.m,
+            self.cfg.q
+        );
+        Ok(())
+    }
+
+    /// Map step 1: the shard's partial statistics.
+    pub fn shard_stats(&self, p: &GlobalParams, shard: &ShardData) -> Result<Stats> {
+        self.check_params(p)?;
+        let mask = vec![1.0; shard.len()];
+        Ok(kernel::shard_stats(
+            p,
+            &shard.xmu,
+            &shard.xvar,
+            &shard.y,
+            &mask,
+            shard.kl_weight,
+        ))
+    }
+
+    /// Map step 2: chain-rule the adjoints into partial global gradients
+    /// and this shard's local gradients.
+    pub fn shard_grads(
+        &self,
+        p: &GlobalParams,
+        shard: &ShardData,
+        adj: &crate::gp::Adjoints,
+    ) -> Result<(GlobalGrads, LocalGrads)> {
+        self.check_params(p)?;
+        let (g, d_xmu, d_xvar) =
+            kernel::shard_grads_vjp(p, &shard.xmu, &shard.xvar, &shard.y, shard.kl_weight, adj);
+        Ok((g, LocalGrads { d_xmu, d_xvar }))
+    }
+
+    /// Central direct term: Kmm (no jitter) and the pullback of dF/dKmm.
+    pub fn kmm_grads(&self, p: &GlobalParams, adj_kmm: &Matrix) -> Result<(Matrix, GlobalGrads)> {
+        self.check_params(p)?;
+        let kmm = kernel::seard(&p.z, &p.z, p);
+        let g = kernel::kmm_vjp(p, adj_kmm);
+        Ok((kmm, g))
+    }
+
+    /// Posterior prediction at (possibly uncertain) test inputs.
+    /// Returns (mean [t x d], var [t]) without observation noise.
+    pub fn predict(
+        &self,
+        p: &GlobalParams,
+        xt_mu: &Matrix,
+        xt_var: &Matrix,
+        w1: &Matrix,
+        wv: &Matrix,
+    ) -> Result<(Matrix, Vec<f64>)> {
+        self.check_params(p)?;
+        let mean = kernel::psi1(p, xt_mu, xt_var).matmul(w1);
+        let sf2 = p.sf2();
+        let var = (0..xt_mu.rows())
+            .map(|i| {
+                let p2 = kernel::psi2_point(p, xt_mu.row(i), xt_var.row(i));
+                sf2 - wv.dot(&p2)
+            })
+            .collect();
+        Ok((mean, var))
+    }
+}

@@ -1,0 +1,32 @@
+//! Shard-local data types shared by both executor backends (PJRT and
+//! native) and serialised over the cluster wire protocol.
+
+use crate::linalg::Matrix;
+
+/// One worker's slice of the dataset (variational means/variances of
+/// q(X) plus targets). In the regression model `xvar` is all zeros and
+/// `kl_weight` is 0.
+#[derive(Debug, Clone)]
+pub struct ShardData {
+    pub xmu: Matrix,
+    pub xvar: Matrix,
+    pub y: Matrix,
+    pub kl_weight: f64,
+}
+
+impl ShardData {
+    pub fn len(&self) -> usize {
+        self.xmu.rows()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Gradients w.r.t. a shard's local parameters (raw variance space).
+#[derive(Debug, Clone)]
+pub struct LocalGrads {
+    pub d_xmu: Matrix,
+    pub d_xvar: Matrix,
+}

@@ -20,6 +20,11 @@ pub struct RoundTiming {
     pub worker_secs: Vec<f64>,
     /// Measured wall-clock of the whole round including dispatch/collect.
     pub wall_secs: f64,
+    /// Leader -> workers bytes for this round (0 for the in-process
+    /// backend; the TCP backend reports actual wire bytes).
+    pub bytes_tx: u64,
+    /// Workers -> leader bytes for this round.
+    pub bytes_rx: u64,
 }
 
 impl RoundTiming {
@@ -68,6 +73,15 @@ impl IterationLog {
     /// Measured wall time including threading overheads.
     pub fn measured_wall_secs(&self) -> f64 {
         self.rounds.iter().map(|r| r.wall_secs).sum::<f64>() + self.central_secs
+    }
+
+    /// Network traffic of this iteration: (leader->workers,
+    /// workers->leader) bytes. The paper's requirement 3 — constant-size
+    /// global messages — makes this independent of the data size.
+    pub fn network_bytes(&self) -> (u64, u64) {
+        let tx = self.rounds.iter().map(|r| r.bytes_tx).sum();
+        let rx = self.rounds.iter().map(|r| r.bytes_rx).sum();
+        (tx, rx)
     }
 
     /// Per-iteration load-balance summary over all rounds'
@@ -121,6 +135,18 @@ impl RunLog {
         stats::mean(&v)
     }
 
+    /// Total network traffic over the run: (tx, rx) bytes.
+    pub fn total_network_bytes(&self) -> (u64, u64) {
+        let mut tx = 0;
+        let mut rx = 0;
+        for it in &self.iterations {
+            let (t, r) = it.network_bytes();
+            tx += t;
+            rx += r;
+        }
+        (tx, rx)
+    }
+
     /// Mean relative gap between max and mean worker load (paper §5.1
     /// reports 3.7%).
     pub fn mean_load_gap(&self) -> f64 {
@@ -144,7 +170,31 @@ mod tests {
         RoundTiming {
             worker_secs: ws.to_vec(),
             wall_secs: wall,
+            ..Default::default()
         }
+    }
+
+    #[test]
+    fn network_bytes_aggregate() {
+        let mut r1 = round(&[1.0], 1.0);
+        r1.bytes_tx = 100;
+        r1.bytes_rx = 40;
+        let mut r2 = round(&[1.0], 1.0);
+        r2.bytes_tx = 60;
+        r2.bytes_rx = 10;
+        let it = IterationLog {
+            iter: 0,
+            f: 0.0,
+            rounds: vec![r1, r2],
+            central_secs: 0.0,
+            failed_workers: vec![],
+        };
+        assert_eq!(it.network_bytes(), (160, 50));
+        let log = RunLog {
+            iterations: vec![it.clone(), it],
+            startup_secs: 0.0,
+        };
+        assert_eq!(log.total_network_bytes(), (320, 100));
     }
 
     #[test]

@@ -16,16 +16,47 @@ pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
 /// peers. Thread CPU time measures the *work* a node actually did —
 /// exactly what the paper's "time spent in the computations alone"
 /// series needs for the modeled-cluster clock (DESIGN.md §5).
+///
+/// Binds `clock_gettime` directly — the `libc` crate is not in the
+/// offline set (DESIGN.md §5), and every supported unix links libc
+/// anyway. The direct binding is only compiled on 64-bit unix, where
+/// `struct timespec` is reliably `{ i64 tv_sec; i64 tv_nsec }`; on
+/// 32-bit targets the layout varies (musl >= 1.2 and glibc time64
+/// use a 16-byte struct), so guessing would corrupt the stack — those
+/// targets get the wall-clock fallback below instead.
+#[cfg(all(unix, target_pointer_width = "64"))]
 pub fn thread_cpu_secs() -> f64 {
-    let mut ts = libc::timespec {
+    #[repr(C)]
+    struct Timespec {
+        tv_sec: i64,
+        tv_nsec: i64,
+    }
+    extern "C" {
+        fn clock_gettime(clk_id: i32, tp: *mut Timespec) -> i32;
+    }
+    #[cfg(target_os = "macos")]
+    const CLOCK_THREAD_CPUTIME_ID: i32 = 16;
+    #[cfg(not(target_os = "macos"))]
+    const CLOCK_THREAD_CPUTIME_ID: i32 = 3;
+    let mut ts = Timespec {
         tv_sec: 0,
         tv_nsec: 0,
     };
-    let rc = unsafe { libc::clock_gettime(libc::CLOCK_THREAD_CPUTIME_ID, &mut ts) };
+    let rc = unsafe { clock_gettime(CLOCK_THREAD_CPUTIME_ID, &mut ts) };
     if rc != 0 {
         return 0.0;
     }
     ts.tv_sec as f64 + ts.tv_nsec as f64 * 1e-9
+}
+
+/// Fallback for non-unix and 32-bit unix targets: process-wide
+/// monotonic wall clock (no per-thread CPU clock without a platform
+/// API whose struct layout we can rely on).
+#[cfg(not(all(unix, target_pointer_width = "64")))]
+pub fn thread_cpu_secs() -> f64 {
+    use std::sync::OnceLock;
+    static ORIGIN: OnceLock<Instant> = OnceLock::new();
+    ORIGIN.get_or_init(Instant::now).elapsed().as_secs_f64()
 }
 
 /// Measure thread-CPU seconds spent in `f`.

@@ -1,0 +1,261 @@
+//! Multi-process cluster tests: a leader drives REAL spawned
+//! `gparml worker` processes over localhost TCP and must (a) reproduce
+//! the in-process Pool backend's training trace bit-for-bit on the same
+//! seed, and (b) degrade onto the §5.2 drop-the-partial-term path —
+//! without stalling — when a worker process is killed mid-run.
+
+use std::net::TcpListener;
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use gparml::cluster::TcpBackend;
+use gparml::coordinator::{partition, GlobalOpt, ModelKind, TrainConfig, Trainer};
+use gparml::gp::GlobalParams;
+use gparml::linalg::Matrix;
+use gparml::runtime::ShardData;
+use gparml::util::rng::Rng;
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// Keep spawned workers from outliving a failed test.
+struct Workers(Vec<Child>);
+
+impl Drop for Workers {
+    fn drop(&mut self) {
+        for c in &mut self.0 {
+            let _ = c.kill();
+            let _ = c.wait();
+        }
+    }
+}
+
+fn spawn_workers(n: usize, leader_addr: &str) -> Workers {
+    let bin = env!("CARGO_BIN_EXE_gparml");
+    let art = artifacts_dir();
+    Workers(
+        (0..n)
+            .map(|_| {
+                Command::new(bin)
+                    .args([
+                        "worker",
+                        "--connect",
+                        leader_addr,
+                        "--artifacts",
+                        art.to_str().unwrap(),
+                    ])
+                    .stdout(Stdio::null())
+                    .stderr(Stdio::null())
+                    .spawn()
+                    .expect("spawning gparml worker process")
+            })
+            .collect(),
+    )
+}
+
+fn regression_data(n: usize, seed: u64) -> (Matrix, Matrix, Matrix) {
+    let mut rng = Rng::new(seed);
+    let xmu = Matrix::from_fn(n, 2, |_, _| rng.range(-2.0, 2.0));
+    let xvar = Matrix::zeros(n, 2);
+    let y = Matrix::from_fn(n, 3, |i, j| {
+        let x = xmu[(i, 0)];
+        let f = match j {
+            0 => x.sin(),
+            1 => (1.3 * x).cos(),
+            _ => 0.5 * x,
+        };
+        f + 0.05 * rng.normal()
+    });
+    (xmu, xvar, y)
+}
+
+fn init_params(seed: u64) -> GlobalParams {
+    let mut rng = Rng::new(seed);
+    GlobalParams {
+        z: Matrix::from_fn(8, 2, |_, _| rng.range(-2.0, 2.0)),
+        log_ls: vec![0.0, 0.0],
+        log_sf2: 0.0,
+        log_beta: 1.0,
+    }
+}
+
+fn config(workers: usize, model: ModelKind) -> TrainConfig {
+    TrainConfig {
+        artifact: "test".into(),
+        artifacts_dir: artifacts_dir(),
+        workers,
+        model,
+        global_opt: GlobalOpt::Scg,
+        seed: 1,
+        ..Default::default()
+    }
+}
+
+/// Spawn `n` worker processes that dial our listener, and hand them
+/// their shards during the handshake.
+fn tcp_trainer(
+    cfg: TrainConfig,
+    params: GlobalParams,
+    shards: Vec<ShardData>,
+) -> (Trainer<TcpBackend>, Workers) {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind leader listener");
+    let addr = listener.local_addr().unwrap().to_string();
+    let workers = spawn_workers(cfg.workers, &addr);
+    let mut trainer =
+        Trainer::accept_tcp(cfg, params, shards, &listener).expect("cluster bring-up");
+    trainer.backend_mut().set_timeout(Duration::from_secs(30));
+    trainer
+        .backend_mut()
+        .set_heartbeat_timeout(Duration::from_secs(5));
+    (trainer, workers)
+}
+
+#[test]
+fn tcp_cluster_matches_pool_backend_bitwise() {
+    let (xmu, xvar, y) = regression_data(60, 3);
+    let workers = 2;
+    let iters = 6;
+    let shards = partition(&xmu, &xvar, &y, 0.0, workers);
+
+    // reference: in-process thread backend
+    let mut pool_t = Trainer::new(
+        config(workers, ModelKind::Regression),
+        init_params(5),
+        shards.clone(),
+    )
+    .unwrap();
+    let pool_trace: Vec<f64> = (0..iters).map(|_| pool_t.step().unwrap()).collect();
+
+    // real processes over TCP, same seed, same shards
+    let (mut tcp_t, procs) = tcp_trainer(
+        config(workers, ModelKind::Regression),
+        init_params(5),
+        shards,
+    );
+    let tcp_trace: Vec<f64> = (0..iters).map(|_| tcp_t.step().unwrap()).collect();
+
+    // the wire carries every f64 bit-for-bit and both backends reduce in
+    // worker order, so the traces must be IDENTICAL, not just close
+    for (i, (a, b)) in pool_trace.iter().zip(&tcp_trace).enumerate() {
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "iteration {i}: pool F={a} vs tcp F={b}"
+        );
+    }
+    for (a, b) in pool_t.params.flatten().iter().zip(tcp_t.params.flatten()) {
+        assert_eq!(a.to_bits(), b.to_bits(), "final params diverged");
+    }
+
+    // the TCP rounds actually moved bytes, and telemetry recorded them
+    let (tx, rx) = tcp_t.log.total_network_bytes();
+    assert!(tx > 0 && rx > 0, "no network traffic recorded: {tx}/{rx}");
+    let (pool_tx, pool_rx) = pool_t.log.total_network_bytes();
+    assert_eq!((pool_tx, pool_rx), (0, 0), "in-process backend sent bytes?");
+
+    drop(tcp_t); // sends Shutdown frames
+    drop(procs);
+}
+
+#[test]
+fn tcp_cluster_lvm_local_updates_match_pool_backend() {
+    // the LVM path exercises worker-side state mutation (local Adam
+    // steps) across the wire; the traces must still agree bit-for-bit
+    let n = 40;
+    let mut rng = Rng::new(8);
+    let y = Matrix::from_fn(n, 3, |i, j| {
+        let t = i as f64 / n as f64 * 4.0 - 2.0;
+        match j {
+            0 => t.sin(),
+            1 => t.cos(),
+            _ => 0.5 * t,
+        }
+    });
+    let xmu = Matrix::from_fn(n, 2, |_, _| 0.5 * rng.normal());
+    let xvar = Matrix::from_fn(n, 2, |_, _| 0.5);
+    let shards = partition(&xmu, &xvar, &y, 1.0, 2);
+    let iters = 4;
+
+    let mut pool_t = Trainer::new(config(2, ModelKind::Lvm), init_params(9), shards.clone())
+        .unwrap();
+    let pool_trace: Vec<f64> = (0..iters).map(|_| pool_t.step().unwrap()).collect();
+
+    let (mut tcp_t, procs) = tcp_trainer(config(2, ModelKind::Lvm), init_params(9), shards);
+    let tcp_trace: Vec<f64> = (0..iters).map(|_| tcp_t.step().unwrap()).collect();
+
+    for (i, (a, b)) in pool_trace.iter().zip(&tcp_trace).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "LVM iteration {i}: {a} vs {b}");
+    }
+    // the gathered local parameters went through local updates on the
+    // worker processes and must match the thread backend's exactly
+    let pool_locals = pool_t.gather_locals().unwrap();
+    let tcp_locals = tcp_t.gather_locals().unwrap();
+    assert_eq!(pool_locals.len(), tcp_locals.len());
+    for ((pm, pv), (tm, tv)) in pool_locals.iter().zip(&tcp_locals) {
+        assert_eq!(pm.max_abs_diff(tm), 0.0, "local means diverged");
+        assert_eq!(pv.max_abs_diff(tv), 0.0, "local variances diverged");
+    }
+    drop(tcp_t);
+    drop(procs);
+}
+
+#[test]
+fn killing_a_worker_mid_run_degrades_without_stalling() {
+    let (xmu, xvar, y) = regression_data(72, 10);
+    let workers = 3;
+    let shards = partition(&xmu, &xvar, &y, 0.0, workers);
+    // probe liveness every step so the kill is caught by the heartbeat
+    // membership path (mid-round deaths are covered by the map rounds)
+    let mut cfg = config(workers, ModelKind::Regression);
+    cfg.heartbeat_secs = 0.0;
+    let (mut t, mut procs) = tcp_trainer(cfg, init_params(11), shards);
+
+    // healthy start
+    for _ in 0..2 {
+        t.step().unwrap();
+    }
+    assert!(t.dead_workers().is_empty());
+
+    // kill one worker process outright (SIGKILL — no goodbye frame)
+    procs.0[1].kill().expect("kill worker process");
+    procs.0[1].wait().expect("reap worker process");
+
+    // the run must keep going on the survivors without stalling: the
+    // dead node's partial term is dropped (§5.2), not waited for
+    let t0 = Instant::now();
+    let mut f_end = f64::NAN;
+    for _ in 0..3 {
+        f_end = t.step().unwrap();
+    }
+    assert!(
+        t0.elapsed() < Duration::from_secs(60),
+        "cluster stalled after worker death"
+    );
+    assert!(f_end.is_finite(), "bound diverged after worker death");
+
+    // exactly one worker was declared dead, and the failure was logged
+    assert_eq!(t.dead_workers().len(), 1, "dead set: {:?}", t.dead_workers());
+    let failed_total: Vec<usize> = t
+        .log
+        .iterations
+        .iter()
+        .skip(2)
+        .flat_map(|i| i.failed_workers.iter().copied())
+        .collect();
+    assert!(
+        !failed_total.is_empty(),
+        "worker death never reached the failure log"
+    );
+
+    // the survivors still serve evaluation and prediction
+    assert!(t.evaluate().unwrap().is_finite());
+    let xt = Matrix::from_fn(5, 2, |_, _| 0.3);
+    let (mean, var) = t.predict(&xt, &Matrix::zeros(5, 2)).unwrap();
+    assert_eq!(mean.rows(), 5);
+    assert_eq!(var.len(), 5);
+
+    drop(t);
+    drop(procs);
+}

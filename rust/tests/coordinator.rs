@@ -124,7 +124,7 @@ fn lvm_training_improves_bound_and_moves_locals() {
     let f_end = t.train(25).unwrap();
     assert!(f_end > f0, "LVM bound did not improve: {f0} -> {f_end}");
     // locals actually moved
-    let locals = t.gather_locals();
+    let locals = t.gather_locals().unwrap();
     let mut lo = 0;
     let mut moved = false;
     for (mu, _) in &locals {

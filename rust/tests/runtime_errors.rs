@@ -34,6 +34,8 @@ fn unknown_config_lists_available_ones() {
     assert!(msg.contains("nonexistent") && msg.contains("test"), "{msg}");
 }
 
+/// PJRT-only: the native executor never opens the HLO files.
+#[cfg(feature = "pjrt")]
 #[test]
 fn corrupt_hlo_fails_at_compile_with_path() {
     let dir = tmpdir("corrupt");
