@@ -62,6 +62,22 @@ fn main() {
         bench(&format!("{cfg_name}: shard_grads"), 2, 10, || {
             exec.shard_grads(&params, &shard, &adj).unwrap()
         });
+        // the workspace pipeline: round 1 fills the executor scratch,
+        // round 2 consumes it — one psi pass per evaluation
+        let mut version = 0u64;
+        bench(&format!("{cfg_name}: eval cached (stats+grads)"), 2, 10, || {
+            version += 1;
+            let tok = exec.begin_eval(version);
+            let st = exec.shard_stats_cached(&tok, &params, &shard).unwrap();
+            let g = exec.shard_grads_cached(&tok, &params, &shard, &adj).unwrap();
+            (st, g)
+        });
+        bench(&format!("{cfg_name}: eval nocache (stats+grads)"), 2, 10, || {
+            (
+                exec.shard_stats(&params, &shard).unwrap(),
+                exec.shard_grads(&params, &shard, &adj).unwrap(),
+            )
+        });
         bench(&format!("{cfg_name}: kmm_grads"), 2, 10, || {
             exec.kmm_grads(&params, &adj.d_kmm).unwrap()
         });

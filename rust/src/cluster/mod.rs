@@ -39,6 +39,10 @@ pub struct WorkerReply {
     pub bytes_tx: u64,
     /// Worker -> leader bytes for this reply (0 in-process).
     pub bytes_rx: u64,
+    /// Full psi recomputations this request triggered on the worker
+    /// (0 on a cache-hit gradient round; with the psi cache on, each
+    /// evaluation costs exactly one per worker — see DESIGN.md §7).
+    pub psi_fills: u32,
 }
 
 /// A Map-Reduce backend: broadcasts one request to a set of workers

@@ -24,8 +24,9 @@ use crate::util::timer::thread_cpu_secs;
 
 use super::wire::{self, Frame, Init, Request, Response};
 
-/// Per-node state: compiled executor, the data shard, and local
-/// optimiser state for the LVM's q(X) parameters.
+/// Per-node state: compiled executor (stateful: it owns the per-shard
+/// psi scratch), the data shard, and local optimiser state for the
+/// LVM's q(X) parameters.
 pub struct WorkerNode {
     exec: ShardExecutor,
     shard: ShardData,
@@ -34,6 +35,10 @@ pub struct WorkerNode {
     local_lr: f64,
     min_xvar: f64,
     lvm: bool,
+    /// reuse psi intermediates across the two rounds of one evaluation
+    /// (keyed by the requests' parameter version); false = recompute
+    /// fresh every round
+    psi_cache: bool,
 }
 
 impl WorkerNode {
@@ -52,6 +57,7 @@ impl WorkerNode {
             local_lr: init.local_lr,
             min_xvar: init.min_xvar,
             lvm: init.lvm,
+            psi_cache: init.psi_cache,
         })
     }
 
@@ -88,25 +94,49 @@ impl WorkerNode {
     /// Execute one request. Errors are folded into [`Response::Err`] so
     /// the node never dies on a bad request — the leader decides.
     pub fn handle(&mut self, req: &Request) -> Response {
-        match self.dispatch(req) {
+        self.handle_counted(req).0
+    }
+
+    /// Execute one request, also reporting how many full psi
+    /// recomputations it triggered (0 on a cache-hit gradient round) —
+    /// the per-round telemetry both backends ship back to the leader.
+    pub fn handle_counted(&mut self, req: &Request) -> (Response, u32) {
+        let before = self.exec.psi_fills();
+        let resp = match self.dispatch(req) {
             Ok(resp) => resp,
             Err(e) => Response::Err(format!("{e:#}")),
-        }
+        };
+        let fills = (self.exec.psi_fills() - before) as u32;
+        (resp, fills)
     }
 
     fn dispatch(&mut self, req: &Request) -> Result<Response> {
         Ok(match req {
-            Request::Stats { params } => {
-                Response::Stats(self.exec.shard_stats(params, &self.shard)?)
+            Request::Stats { params, version } => {
+                let st = if self.psi_cache {
+                    let tok = self.exec.begin_eval(*version);
+                    self.exec.shard_stats_cached(&tok, params, &self.shard)?
+                } else {
+                    self.exec.shard_stats(params, &self.shard)?
+                };
+                Response::Stats(st)
             }
             Request::Grads {
                 params,
                 adj,
                 update_locals,
+                version,
             } => {
-                let (g, local) = self.exec.shard_grads(params, &self.shard, adj)?;
+                let (g, local) = if self.psi_cache {
+                    let tok = self.exec.begin_eval(*version);
+                    self.exec.shard_grads_cached(&tok, params, &self.shard, adj)?
+                } else {
+                    self.exec.shard_grads(params, &self.shard, adj)?
+                };
                 if *update_locals {
                     self.local_update(&local.d_xmu, &local.d_xvar);
+                    // the local parameters moved under the scratch
+                    self.exec.invalidate_cache();
                 }
                 Response::Grads(g)
             }
@@ -119,6 +149,7 @@ impl WorkerNode {
                         y: Matrix::zeros(0, s.y.cols()),
                         kl_weight: s.kl_weight,
                     };
+                    self.exec.invalidate_cache();
                 }
                 Response::Shard(s)
             }
@@ -127,10 +158,12 @@ impl WorkerNode {
                 self.shard.xvar = self.shard.xvar.vstack(&part.xvar);
                 self.shard.y = self.shard.y.vstack(&part.y);
                 // optimiser state is shape-bound: rebuild (documented
-                // trade-off of the reassign strategy)
+                // trade-off of the reassign strategy); the psi scratch
+                // is stale for the grown shard too
                 let dof = self.shard.xmu.rows() * self.shard.xmu.cols();
                 self.adam_mu = Adam::new(dof, self.local_lr);
                 self.adam_ls = Adam::new(dof, self.local_lr);
+                self.exec.invalidate_cache();
                 Response::Ok
             }
             Request::GatherLocals => Response::Locals {
@@ -184,6 +217,7 @@ pub fn serve_connection(mut stream: TcpStream, artifacts_dir: &Path) -> Result<u
                 &mut stream,
                 &Frame::Response {
                     secs: 0.0,
+                    psi_fills: 0,
                     resp: Box::new(Response::Err(format!("{e:#}"))),
                 },
             );
@@ -194,6 +228,7 @@ pub fn serve_connection(mut stream: TcpStream, artifacts_dir: &Path) -> Result<u
         &mut stream,
         &Frame::Response {
             secs: 0.0,
+            psi_fills: 0,
             resp: Box::new(Response::Ok),
         },
     )?;
@@ -215,12 +250,13 @@ pub fn serve_connection(mut stream: TcpStream, artifacts_dir: &Path) -> Result<u
             }
             Some((Frame::Request(req), _)) => {
                 let c0 = thread_cpu_secs();
-                let resp = node.handle(&req);
+                let (resp, psi_fills) = node.handle_counted(&req);
                 let secs = thread_cpu_secs() - c0;
                 wire::write_frame(
                     &mut stream,
                     &Frame::Response {
                         secs,
+                        psi_fills,
                         resp: Box::new(resp),
                     },
                 )?;

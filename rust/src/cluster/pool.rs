@@ -34,13 +34,15 @@ impl PoolBackend {
         Ok(PoolBackend { pool })
     }
 
-    fn reply(r: crate::mapreduce::MapResult<super::wire::Response>) -> WorkerReply {
+    fn reply(r: crate::mapreduce::MapResult<(super::wire::Response, u32)>) -> WorkerReply {
+        let (value, psi_fills) = r.value;
         WorkerReply {
             worker: r.worker,
-            value: r.value,
+            value,
             secs: r.secs,
             bytes_tx: 0,
             bytes_rx: 0,
+            psi_fills,
         }
     }
 }
@@ -53,7 +55,9 @@ impl Backend for PoolBackend {
     fn map_subset(&mut self, include: &[bool], req: &Request) -> Vec<Option<WorkerReply>> {
         let req = Arc::new(req.clone());
         self.pool
-            .map_subset(include, move |_, node: &mut WorkerNode| node.handle(&req))
+            .map_subset(include, move |_, node: &mut WorkerNode| {
+                node.handle_counted(&req)
+            })
             .into_iter()
             .map(|slot| slot.map(Self::reply))
             .collect()
@@ -62,7 +66,7 @@ impl Backend for PoolBackend {
     fn map_one(&mut self, k: usize, req: &Request) -> Option<WorkerReply> {
         let req = req.clone();
         self.pool
-            .map_one(k, move |_, node: &mut WorkerNode| node.handle(&req))
+            .map_one(k, move |_, node: &mut WorkerNode| node.handle_counted(&req))
             .map(Self::reply)
     }
 

@@ -224,12 +224,20 @@ impl TcpBackend {
     fn round_one(&mut self, k: usize, req: &Request) -> Option<WorkerReply> {
         let tx = self.send(k, &Frame::Request(Box::new(req.clone())))?;
         match self.recv(k)? {
-            (Frame::Response { secs, resp }, rx) => Some(WorkerReply {
+            (
+                Frame::Response {
+                    secs,
+                    psi_fills,
+                    resp,
+                },
+                rx,
+            ) => Some(WorkerReply {
                 worker: k,
                 value: *resp,
                 secs,
                 bytes_tx: tx,
                 bytes_rx: rx,
+                psi_fills,
             }),
             (f, _) => {
                 let err = io::Error::new(io::ErrorKind::Other, format!("unexpected frame {f:?}"));
@@ -269,12 +277,20 @@ impl Backend for TcpBackend {
                 continue;
             };
             let reply = match self.recv(k) {
-                Some((Frame::Response { secs, resp }, rx)) => Some(WorkerReply {
+                Some((
+                    Frame::Response {
+                        secs,
+                        psi_fills,
+                        resp,
+                    },
+                    rx,
+                )) => Some(WorkerReply {
                     worker: k,
                     value: *resp,
                     secs,
                     bytes_tx: tx,
                     bytes_rx: rx,
+                    psi_fills,
                 }),
                 Some((f, _)) => {
                     let err = io::Error::new(io::ErrorKind::Other, format!("unexpected frame {f:?}"));

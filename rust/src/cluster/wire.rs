@@ -20,11 +20,13 @@
 //! `tests/cluster.rs`).
 //!
 //! Control frames: `Hello`/`HelloAck` (handshake + id assignment),
-//! `Init` (shapes, model flags and the worker's data shard), `Ping`/
-//! `Pong` (heartbeat), `Shutdown`. Data frames: `Request` (a map-round
-//! broadcast: global parameters or adjoints — constant-size messages,
-//! the paper's requirement 2/3) and `Response` (partial statistics /
-//! gradients plus the worker's in-map compute seconds).
+//! `Init` (shapes, model flags, psi-cache mode and the worker's data
+//! shard), `Ping`/`Pong` (heartbeat), `Shutdown`. Data frames:
+//! `Request` (a map-round broadcast: global parameters or adjoints,
+//! tagged with the evaluation's parameter version — constant-size
+//! messages, the paper's requirement 2/3) and `Response` (partial
+//! statistics / gradients plus the worker's in-map compute seconds and
+//! psi-recompute count).
 //!
 //! A truncated stream, a foreign magic, an unknown kind/tag, a
 //! mismatched version or trailing payload bytes all fail decoding with
@@ -43,7 +45,13 @@ use crate::runtime::{ArtifactConfig, ShardData};
 /// Frame magic: "GPMR".
 pub const MAGIC: [u8; 4] = *b"GPMR";
 /// Current wire version. Bump on any layout change.
-pub const VERSION: u16 = 1;
+///
+/// History: v1 — initial protocol. v2 — the two map-round requests
+/// (`Stats`, `Grads`) carry a u64 **parameter version** tag (keys the
+/// workers' psi-scratch reuse across the two rounds of one
+/// evaluation), `Response` frames carry a u32 psi-recompute count
+/// (telemetry), and `Init` carries the `psi_cache` enable flag.
+pub const VERSION: u16 = 2;
 /// Upper bound on a single frame payload (defends the decoder against
 /// garbage length prefixes).
 pub const MAX_PAYLOAD: usize = 1 << 30;
@@ -51,16 +59,24 @@ pub const MAX_PAYLOAD: usize = 1 << 30;
 const HEADER_LEN: usize = 11;
 
 /// A map-round broadcast from the leader.
+///
+/// The two per-iteration rounds carry a monotonically increasing
+/// **parameter version**: both rounds of one bound/gradient evaluation
+/// share a version, and every new evaluation (including each SCG
+/// line-search trial point) gets a fresh one. Workers key their psi
+/// scratch on it, so round 2 can reuse round 1's intermediates but can
+/// never alias a cache filled at different parameters.
 #[derive(Debug, Clone)]
 pub enum Request {
     /// Round 1: compute partial statistics at these global parameters.
-    Stats { params: GlobalParams },
+    Stats { params: GlobalParams, version: u64 },
     /// Round 2: chain-rule the adjoints into partial global gradients;
     /// optionally apply the local q(X) ascent step first (paper step 4).
     Grads {
         params: GlobalParams,
         adj: Adjoints,
         update_locals: bool,
+        version: u64,
     },
     /// Return (and optionally drop) the worker's shard — the leader's
     /// replica read during decommission/re-sharding.
@@ -101,6 +117,10 @@ pub struct Init {
     pub lvm: bool,
     pub local_lr: f64,
     pub min_xvar: f64,
+    /// Reuse psi intermediates across the two map rounds of one
+    /// evaluation (false forces a fresh recompute every round — the
+    /// trace-equality reference mode).
+    pub psi_cache: bool,
     pub shard: ShardData,
 }
 
@@ -113,8 +133,15 @@ pub enum Frame {
     HelloAck,
     Init(Box<Init>),
     Request(Box<Request>),
-    /// Worker -> leader: result plus in-map thread-CPU seconds.
-    Response { secs: f64, resp: Box<Response> },
+    /// Worker -> leader: result plus in-map thread-CPU seconds and the
+    /// number of full psi recomputations the request triggered (0 on a
+    /// cache-hit gradient round — the telemetry signal that scratch
+    /// reuse actually happened on the worker).
+    Response {
+        secs: f64,
+        psi_fills: u32,
+        resp: Box<Response>,
+    },
     Ping,
     Pong,
     Shutdown,
@@ -148,6 +175,10 @@ impl Enc {
     }
 
     pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, v: u64) {
         self.buf.extend_from_slice(&v.to_le_bytes());
     }
 
@@ -274,6 +305,10 @@ impl<'a> Dec<'a> {
         Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
 
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
     pub fn f64(&mut self) -> Result<f64> {
         Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
@@ -395,19 +430,22 @@ impl<'a> Dec<'a> {
 impl Request {
     fn encode(&self, e: &mut Enc) {
         match self {
-            Request::Stats { params } => {
+            Request::Stats { params, version } => {
                 e.u8(1);
                 e.params(params);
+                e.u64(*version);
             }
             Request::Grads {
                 params,
                 adj,
                 update_locals,
+                version,
             } => {
                 e.u8(2);
                 e.params(params);
                 e.adjoints(adj);
                 e.bool(*update_locals);
+                e.u64(*version);
             }
             Request::FetchShard { clear } => {
                 e.u8(3);
@@ -439,11 +477,13 @@ impl Request {
         Ok(match d.u8()? {
             1 => Request::Stats {
                 params: d.params()?,
+                version: d.u64()?,
             },
             2 => Request::Grads {
                 params: d.params()?,
                 adj: d.adjoints()?,
                 update_locals: d.bool()?,
+                version: d.u64()?,
             },
             3 => Request::FetchShard { clear: d.bool()? },
             4 => Request::AppendShard { part: d.shard()? },
@@ -536,11 +576,17 @@ impl Frame {
                 e.bool(init.lvm);
                 e.f64(init.local_lr);
                 e.f64(init.min_xvar);
+                e.bool(init.psi_cache);
                 e.shard(&init.shard);
             }
             Frame::Request(r) => r.encode(e),
-            Frame::Response { secs, resp } => {
+            Frame::Response {
+                secs,
+                psi_fills,
+                resp,
+            } => {
                 e.f64(*secs);
+                e.u32(*psi_fills);
                 resp.encode(e);
             }
         }
@@ -557,11 +603,13 @@ impl Frame {
                 lvm: d.bool()?,
                 local_lr: d.f64()?,
                 min_xvar: d.f64()?,
+                psi_cache: d.bool()?,
                 shard: d.shard()?,
             })),
             4 => Frame::Request(Box::new(Request::decode(d)?)),
             5 => Frame::Response {
                 secs: d.f64()?,
+                psi_fills: d.u32()?,
                 resp: Box::new(Response::decode(d)?),
             },
             6 => Frame::Ping,
@@ -687,14 +735,19 @@ mod tests {
             let m = testing::dim(rng, 1, 12);
             let q = testing::dim(rng, 1, 8);
             let p = rand_params(rng, m, q);
-            let f = Frame::Request(Box::new(Request::Stats { params: p.clone() }));
+            let v = rng.below(1 << 30) as u64;
+            let f = Frame::Request(Box::new(Request::Stats {
+                params: p.clone(),
+                version: v,
+            }));
             match roundtrip(&f) {
                 Frame::Request(r) => match *r {
-                    Request::Stats { params } => {
+                    Request::Stats { params, version } => {
                         assert_mat_eq(&params.z, &p.z);
                         assert_eq!(params.log_ls, p.log_ls);
                         assert_eq!(params.log_sf2.to_bits(), p.log_sf2.to_bits());
                         assert_eq!(params.log_beta.to_bits(), p.log_beta.to_bits());
+                        assert_eq!(version, v, "parameter version tag");
                         Ok(())
                     }
                     _ => Err("wrong request variant".into()),
@@ -724,13 +777,20 @@ mod tests {
                 d_log_sf2: rng.normal(),
                 d_log_beta: rng.normal(),
             };
+            let fills = rng.below(100) as u32;
             let fs = Frame::Response {
                 secs: rng.uniform(),
+                psi_fills: fills,
                 resp: Box::new(Response::Stats(st.clone())),
             };
             match roundtrip(&fs) {
-                Frame::Response { resp, .. } => match *resp {
+                Frame::Response {
+                    psi_fills,
+                    resp,
+                    ..
+                } => match *resp {
                     Response::Stats(s2) => {
+                        assert_eq!(psi_fills, fills, "psi fill count");
                         assert_eq!(s2.a.to_bits(), st.a.to_bits());
                         assert_eq!(s2.psi0.to_bits(), st.psi0.to_bits());
                         assert_mat_eq(&s2.c, &st.c);
@@ -744,6 +804,7 @@ mod tests {
             }
             let fg = Frame::Response {
                 secs: 0.0,
+                psi_fills: 0,
                 resp: Box::new(Response::Grads(g.clone())),
             };
             match roundtrip(&fg) {
@@ -782,18 +843,25 @@ mod tests {
                 y: rand_mat(rng, b, d),
                 kl_weight: rng.uniform(),
             };
+            let v = rng.below(1 << 20) as u64;
             let f = Frame::Request(Box::new(Request::Grads {
                 params: p,
                 adj: adj.clone(),
                 update_locals: rng.flip(0.5),
+                version: v,
             }));
             match roundtrip(&f) {
                 Frame::Request(r) => match *r {
-                    Request::Grads { adj: a2, .. } => {
+                    Request::Grads {
+                        adj: a2,
+                        version,
+                        ..
+                    } => {
                         assert_mat_eq(&a2.d_c, &adj.d_c);
                         assert_mat_eq(&a2.d_d, &adj.d_d);
                         assert_mat_eq(&a2.d_kmm, &adj.d_kmm);
                         assert_eq!(a2.d_log_beta.to_bits(), adj.d_log_beta.to_bits());
+                        assert_eq!(version, v, "parameter version tag");
                     }
                     _ => return Err("wrong request variant".into()),
                 },
@@ -836,6 +904,7 @@ mod tests {
             lvm: true,
             local_lr: 0.05,
             min_xvar: 1e-6,
+            psi_cache: false,
             shard: ShardData {
                 xmu: rand_mat(&mut rng, 4, 2),
                 xvar: rand_mat(&mut rng, 4, 2),
@@ -848,6 +917,7 @@ mod tests {
                 assert_eq!(i2.artifact.name, art.name);
                 assert_eq!(i2.artifact.entries, art.entries);
                 assert!(i2.lvm);
+                assert!(!i2.psi_cache, "psi_cache flag must round-trip");
                 assert_eq!(i2.shard.len(), 4);
             }
             f => panic!("wrong frame {f:?}"),

@@ -61,6 +61,11 @@ pub struct TrainConfig {
     /// otherwise idle, so it is rate-limited off the per-iteration
     /// critical path (0 = probe every step).
     pub heartbeat_secs: f64,
+    /// Let workers reuse psi intermediates across the two map rounds of
+    /// one evaluation (keyed by the per-evaluation parameter version).
+    /// `false` forces a fresh recompute every round — bit-identical
+    /// traces either way (tested), only slower.
+    pub psi_cache: bool,
     pub seed: u64,
 }
 
@@ -77,6 +82,7 @@ impl Default for TrainConfig {
             failure_rate: 0.0,
             min_xvar: 1e-6,
             heartbeat_secs: 5.0,
+            psi_cache: true,
             seed: 0,
         }
     }
@@ -96,6 +102,7 @@ pub fn make_inits(
             lvm: cfg.model == ModelKind::Lvm,
             local_lr: cfg.local_lr,
             min_xvar: cfg.min_xvar,
+            psi_cache: cfg.psi_cache,
             shard,
         })
         .collect()
@@ -133,6 +140,10 @@ pub struct Trainer<B: Backend = PoolBackend> {
     newly_failed: Vec<usize>,
     /// when the backend was last liveness-probed (rate limiting)
     last_heartbeat: Option<Instant>,
+    /// monotone parameter-version counter: bumped once per evaluation,
+    /// tagged onto both map rounds so workers can reuse round-1 psi
+    /// intermediates in round 2 without ever aliasing a stale cache
+    eval_version: u64,
 }
 
 impl Trainer<PoolBackend> {
@@ -266,6 +277,7 @@ impl<B: Backend> Trainer<B> {
             objective_dirty: false,
             newly_failed: Vec::new(),
             last_heartbeat: None,
+            eval_version: 0,
         }
     }
 
@@ -366,16 +378,19 @@ impl<B: Backend> Trainer<B> {
     fn record_round(&mut self, replies: &[Option<WorkerReply>], wall: f64) {
         let mut worker_secs = vec![0.0; self.cfg.workers];
         let (mut tx, mut rx) = (0u64, 0u64);
+        let mut psi = 0u64;
         for r in replies.iter().flatten() {
             worker_secs[r.worker] = r.secs;
             tx += r.bytes_tx;
             rx += r.bytes_rx;
+            psi += u64::from(r.psi_fills);
         }
         self.rounds.push(RoundTiming {
             worker_secs,
             wall_secs: wall,
             bytes_tx: tx,
             bytes_rx: rx,
+            psi_recomputes: psi,
         });
     }
 
@@ -386,6 +401,11 @@ impl<B: Backend> Trainer<B> {
     fn eval_globals(&mut self, theta: &[f64]) -> Result<(f64, Vec<f64>)> {
         let params = self.params.unflatten(theta);
         let include = self.alive.clone();
+        // a fresh parameter version per evaluation: the two rounds below
+        // share it (workers may reuse round-1 psi intermediates), every
+        // other evaluation — including each SCG trial point — gets its own
+        self.eval_version += 1;
+        let version = self.eval_version;
 
         // ---- round 1: partial statistics --------------------------------
         let t0 = Instant::now();
@@ -393,6 +413,7 @@ impl<B: Backend> Trainer<B> {
             &include,
             &Request::Stats {
                 params: params.clone(),
+                version,
             },
         );
         let wall = t0.elapsed().as_secs_f64();
@@ -425,6 +446,7 @@ impl<B: Backend> Trainer<B> {
                 params: params.clone(),
                 adj: adj.clone(),
                 update_locals: do_locals,
+                version,
             },
         );
         let wall1 = t1.elapsed().as_secs_f64();
@@ -618,10 +640,14 @@ impl<B: Backend> Trainer<B> {
     /// weights / prediction).
     pub fn current_stats(&mut self) -> Result<Stats> {
         let include: Vec<bool> = (0..self.cfg.workers).map(|k| !self.dead[k]).collect();
+        // a standalone statistics round is its own evaluation: give it a
+        // fresh version so no later gradient round can alias its scratch
+        self.eval_version += 1;
         let replies = self.backend.map_subset(
             &include,
             &Request::Stats {
                 params: self.params.clone(),
+                version: self.eval_version,
             },
         );
         self.absorb_backend_failures(&include, &replies);

@@ -1,10 +1,26 @@
 //! Native SE-ARD kernel and psi-statistics — the Rust mirror of
-//! `python/compile/kernels/ref.py`.
+//! `python/compile/kernels/ref.py` and, since the native executor
+//! became the default, **the distributed hot path itself**: cluster
+//! workers run these loops on every map round (the AOT Pallas/HLO
+//! artifacts are only used under `--features pjrt`).
 //!
-//! Used by the native baselines (sequential / SVI / exact GP), the Fig-8
-//! experiment, and as a cross-check against the HLO artifact path in the
-//! integration tests. The distributed hot path does NOT go through this
-//! code — workers run the AOT Pallas kernel.
+//! The hot path is organised around [`ShardScratch`], a reusable
+//! per-shard workspace: the statistics round ([`shard_stats_into`])
+//! computes Psi1, the per-point Psi2 blocks and their exponent
+//! components **once**, into caller-owned buffers, and the gradient
+//! round ([`shard_grads_vjp_cached`]) consumes them instead of
+//! recomputing — one psi pass per evaluation instead of two, with no
+//! per-point allocation anywhere. The scratch also precomputes the
+//! point-independent (j,l,k) exponent/chain tables, so the inner loops
+//! only touch per-point terms. Every transformation is a bit-identical
+//! re-grouping of the original expressions (same operations, same
+//! order — property-tested in `tests/properties.rs`).
+//!
+//! The scratch-free [`shard_stats`] / [`shard_grads_vjp`] keep the
+//! pre-refactor loop shapes **verbatim**: they are the forced-fresh
+//! reference mode (`TrainConfig::psi_cache = false`), the "before"
+//! series in `gparml bench psi`, and the entry the native baselines
+//! (sequential / SVI / exact GP) and the Fig-8 experiment use.
 
 use crate::linalg::Matrix;
 
@@ -33,53 +49,442 @@ pub fn kmm(p: &GlobalParams, jitter: f64) -> Matrix {
     seard(&p.z, &p.z, p).add_diag(jitter)
 }
 
-/// Psi1[i, j] = <k(x_i, z_j)>_{N(mu_i, diag(s_i))}, [B x m].
-pub fn psi1(p: &GlobalParams, xmu: &Matrix, xvar: &Matrix) -> Matrix {
-    let (bq, q) = (xmu.rows(), p.q());
-    let m = p.m();
-    let ls2: Vec<f64> = p.log_ls.iter().map(|l| (2.0 * l).exp()).collect();
-    let sf2 = p.sf2();
-    let mut out = Matrix::zeros(bq, m);
-    for i in 0..bq {
+/// Fill `out` with Psi1 [b x m]. `dn` is a length-q workspace for the
+/// per-point denominators `ls2_k + s_ik` (hoisted out of the inducing
+/// loop; same expression as the historical per-(j,k) computation, so
+/// the values are bit-identical).
+fn psi1_fill(
+    p: &GlobalParams,
+    xmu: &Matrix,
+    xvar: &Matrix,
+    ls2: &[f64],
+    sf2: f64,
+    dn: &mut [f64],
+    out: &mut Matrix,
+) {
+    let (b, q, m) = (xmu.rows(), p.q(), p.m());
+    out.reset(b, m, 0.0);
+    for i in 0..b {
         let mut log_scale = 0.0;
         for k in 0..q {
             log_scale -= 0.5 * (xvar[(i, k)] / ls2[k]).ln_1p();
+            dn[k] = ls2[k] + xvar[(i, k)];
         }
         for j in 0..m {
             let mut quad = 0.0;
             for k in 0..q {
                 let d = xmu[(i, k)] - p.z[(j, k)];
-                quad += d * d / (ls2[k] + xvar[(i, k)]);
+                quad += d * d / dn[k];
             }
             out[(i, j)] = sf2 * (log_scale - 0.5 * quad).exp();
         }
     }
+}
+
+/// Psi1[i, j] = <k(x_i, z_j)>_{N(mu_i, diag(s_i))}, [B x m].
+pub fn psi1(p: &GlobalParams, xmu: &Matrix, xvar: &Matrix) -> Matrix {
+    let q = p.q();
+    let ls2: Vec<f64> = p.log_ls.iter().map(|l| (2.0 * l).exp()).collect();
+    let mut dn = vec![0.0; q];
+    let mut out = Matrix::zeros(xmu.rows(), p.m());
+    psi1_fill(p, xmu, xvar, &ls2, p.sf2(), &mut dn, &mut out);
     out
+}
+
+/// Per-point Psi2 log-scale: -(1/2) sum_k ln(1 + 2 s_ik / ls2_k).
+fn psi2_point_log_scale(ls2: &[f64], xvar_i: &[f64]) -> f64 {
+    let mut log_scale = 0.0;
+    for (k, &l2) in ls2.iter().enumerate() {
+        log_scale -= 0.5 * (2.0 * xvar_i[k] / l2).ln_1p();
+    }
+    log_scale
+}
+
+/// Fill `out` (length m*m, row-major) with one point's Psi2 block,
+/// given the point's precomputed log-scale and denominators
+/// `dn2[k] = ls2_k + 2 s_ik`. Expression order matches the historical
+/// single-shot `psi2_point` exactly — bit-identical values.
+fn psi2_point_fill(
+    z: &Matrix,
+    ls2: &[f64],
+    sf2: f64,
+    xmu_i: &[f64],
+    log_scale: f64,
+    dn2: &[f64],
+    out: &mut [f64],
+) {
+    let (m, q) = (z.rows(), z.cols());
+    debug_assert_eq!(out.len(), m * m);
+    let mut idx = 0;
+    for j in 0..m {
+        for l in 0..m {
+            let mut e = log_scale;
+            for k in 0..q {
+                let dz = z[(j, k)] - z[(l, k)];
+                let zbar = 0.5 * (z[(j, k)] + z[(l, k)]);
+                let dm = xmu_i[k] - zbar;
+                e -= dz * dz / (4.0 * ls2[k]) + dm * dm / dn2[k];
+            }
+            out[idx] = sf2 * sf2 * e.exp();
+            idx += 1;
+        }
+    }
 }
 
 /// Psi2_i[j, l] for a single point i, [m x m].
 pub fn psi2_point(p: &GlobalParams, xmu_i: &[f64], xvar_i: &[f64]) -> Matrix {
     let (m, q) = (p.m(), p.q());
     let ls2: Vec<f64> = p.log_ls.iter().map(|l| (2.0 * l).exp()).collect();
-    let sf2 = p.sf2();
-    let mut log_scale = 0.0;
-    for k in 0..q {
-        log_scale -= 0.5 * (2.0 * xvar_i[k] / ls2[k]).ln_1p();
-    }
-    Matrix::from_fn(m, m, |j, l| {
-        let mut e = log_scale;
-        for k in 0..q {
-            let dz = p.z[(j, k)] - p.z[(l, k)];
-            let zbar = 0.5 * (p.z[(j, k)] + p.z[(l, k)]);
-            let dm = xmu_i[k] - zbar;
-            e -= dz * dz / (4.0 * ls2[k]) + dm * dm / (ls2[k] + 2.0 * xvar_i[k]);
-        }
-        sf2 * sf2 * e.exp()
-    })
+    let log_scale = psi2_point_log_scale(&ls2, xvar_i);
+    let dn2: Vec<f64> = (0..q).map(|k| ls2[k] + 2.0 * xvar_i[k]).collect();
+    let mut out = Matrix::zeros(m, m);
+    psi2_point_fill(&p.z, &ls2, p.sf2(), xmu_i, log_scale, &dn2, out.data_mut());
+    out
 }
 
-/// Full shard statistics (native path). `kl_weight` = 0 selects the
+/// Fill `out` with one point's Psi2 block from the scratch's
+/// precomputed point-independent tables (`zq[(j,l,k)] = dz^2/(4 ls2)`,
+/// `zbar[(j,l,k)] = (z_j + z_l)/2`). Each table entry is computed by
+/// the exact expression [`psi2_point`] evaluates inline, so the block
+/// is bit-identical to the untabled fill.
+#[allow(clippy::too_many_arguments)]
+fn psi2_row_fill_tabled(
+    m: usize,
+    q: usize,
+    zq: &[f64],
+    zbar: &[f64],
+    sf2: f64,
+    xmu_i: &[f64],
+    log_scale: f64,
+    dn2: &[f64],
+    out: &mut [f64],
+) {
+    debug_assert_eq!(out.len(), m * m);
+    let mut t = 0;
+    for o in out.iter_mut() {
+        let mut e = log_scale;
+        for k in 0..q {
+            let dm = xmu_i[k] - zbar[t + k];
+            e -= zq[t + k] + dm * dm / dn2[k];
+        }
+        *o = sf2 * sf2 * e.exp();
+        t += q;
+    }
+}
+
+/// Default cap on the cached per-point Psi2 slab, in `b * m * m` f64
+/// entries (8 MiB-entries = 64 MiB). Above it the slab is gated off and
+/// the gradient round recomputes Psi2 per point into a reusable
+/// one-point workspace (still allocation-free, still reusing Psi1 and
+/// the per-point log-scales).
+pub const DEFAULT_SLAB_LIMIT: usize = 1 << 23;
+
+/// Reusable per-shard workspace for one bound/gradient evaluation.
+///
+/// Filled by [`shard_stats_into`] (map round 1), consumed by
+/// [`shard_grads_vjp_cached`] (map round 2). Owns every intermediate
+/// the two rounds share — squared lengthscales, Psi1, the per-point
+/// Psi2 blocks (or just their exponent components when the slab is
+/// gated off by `slab_limit`) — plus the small per-point denominator
+/// buffers, so a steady-state evaluation performs **zero** heap
+/// allocation in the psi loops. Lifetime/versioning is owned by the
+/// executor layer (`runtime::ShardExecutor::begin_eval`): the scratch
+/// itself only knows whether it is `filled` for given shapes.
+pub struct ShardScratch {
+    /// squared lengthscales exp(2 log_ls), length q
+    ls2: Vec<f64>,
+    /// kernel variance exp(log_sf2)
+    sf2: f64,
+    /// cached Psi1 [b x m]
+    psi1: Matrix,
+    /// per-point Psi2 log-scale, length b
+    psi2_log_scale: Vec<f64>,
+    /// per-point Psi2 slab [b * m * m], kept only within `slab_limit`
+    psi2: Vec<f64>,
+    /// whether `psi2` holds every point's block
+    psi2_cached: bool,
+    /// one-point Psi2 workspace (m * m) for the slab-less path
+    psi2_row: Vec<f64>,
+    /// Psi1-adjoint workspace `Y (dF/dC)^T` [b x m] (gradient round)
+    a1: Matrix,
+    /// per-point Psi1 denominators ls2_k + s_ik, length q
+    dn: Vec<f64>,
+    /// per-point Psi2 denominators ls2_k + 2 s_ik, length q
+    dn2: Vec<f64>,
+    /// point-independent Psi2 tables, flat (j,l,k) of length m*m*q:
+    /// exponent term dz^2/(4 ls2), midpoint (z_j+z_l)/2, and the chain
+    /// terms dz/(2 ls2) and dz^2/(2 ls2) — computed once per fill by
+    /// the exact inline expressions they replace
+    zq: Vec<f64>,
+    zbar: Vec<f64>,
+    zd: Vec<f64>,
+    zdd: Vec<f64>,
+    /// 2 ls2_k, length q
+    tl2: Vec<f64>,
+    /// per-point chain hoists 1/dn2, 2 s_ik/dn2, dn2^2, length q each
+    inv_dn2: Vec<f64>,
+    xv2: Vec<f64>,
+    dn2sq: Vec<f64>,
+    /// shapes the scratch is currently sized for
+    b: usize,
+    m: usize,
+    q: usize,
+    /// slab gate: maximum `b * m * m` entries cached
+    slab_limit: usize,
+    /// psi intermediates are valid for every point of the shard
+    filled: bool,
+    /// full psi passes computed through this scratch (telemetry)
+    fills: u64,
+}
+
+impl Default for ShardScratch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ShardScratch {
+    pub fn new() -> ShardScratch {
+        ShardScratch::with_slab_limit(DEFAULT_SLAB_LIMIT)
+    }
+
+    /// `slab_limit = 0` disables the Psi2 slab entirely (the gradient
+    /// round then recomputes Psi2 per point — the forced-fresh mode).
+    pub fn with_slab_limit(slab_limit: usize) -> ShardScratch {
+        ShardScratch {
+            ls2: Vec::new(),
+            sf2: 0.0,
+            psi1: Matrix::zeros(0, 0),
+            psi2_log_scale: Vec::new(),
+            psi2: Vec::new(),
+            psi2_cached: false,
+            psi2_row: Vec::new(),
+            a1: Matrix::zeros(0, 0),
+            dn: Vec::new(),
+            dn2: Vec::new(),
+            zq: Vec::new(),
+            zbar: Vec::new(),
+            zd: Vec::new(),
+            zdd: Vec::new(),
+            tl2: Vec::new(),
+            inv_dn2: Vec::new(),
+            xv2: Vec::new(),
+            dn2sq: Vec::new(),
+            b: 0,
+            m: 0,
+            q: 0,
+            slab_limit,
+            filled: false,
+            fills: 0,
+        }
+    }
+
+    /// Drop the cached psi intermediates (parameters or shard changed).
+    /// Buffers keep their allocations for the next fill.
+    pub fn invalidate(&mut self) {
+        self.filled = false;
+    }
+
+    /// Is the scratch filled for a (b, m, q) shard?
+    pub fn is_filled_for(&self, b: usize, m: usize, q: usize) -> bool {
+        self.filled && self.b == b && self.m == m && self.q == q
+    }
+
+    /// Cumulative count of full psi passes computed through this
+    /// scratch — the per-evaluation "psi recompute" telemetry signal.
+    pub fn psi_fills(&self) -> u64 {
+        self.fills
+    }
+
+    /// Whether the last fill kept the full per-point Psi2 slab.
+    pub fn psi2_slab_cached(&self) -> bool {
+        self.filled && self.psi2_cached
+    }
+
+    /// (Re)size every buffer for a (b, m, q) shard and precompute the
+    /// parameter-dependent scalars. Reuses allocations across calls.
+    fn prepare(&mut self, p: &GlobalParams, b: usize) {
+        let (m, q) = (p.m(), p.q());
+        self.b = b;
+        self.m = m;
+        self.q = q;
+        self.ls2.clear();
+        self.ls2.extend(p.log_ls.iter().map(|l| (2.0 * l).exp()));
+        self.sf2 = p.sf2();
+        self.psi2_log_scale.clear();
+        self.psi2_log_scale.resize(b, 0.0);
+        self.psi2_cached = b * m * m <= self.slab_limit;
+        if self.psi2_cached {
+            self.psi2.clear();
+            self.psi2.resize(b * m * m, 0.0);
+        } else {
+            self.psi2.clear();
+            self.psi2.shrink_to_fit();
+        }
+        self.psi2_row.clear();
+        self.psi2_row.resize(m * m, 0.0);
+        self.dn.clear();
+        self.dn.resize(q, 0.0);
+        self.dn2.clear();
+        self.dn2.resize(q, 0.0);
+        // point-independent Psi2 tables (O(m^2 q) once per fill, saving
+        // the same expressions per point in the O(b m^2 q) loops)
+        let mmq = m * m * q;
+        self.zq.clear();
+        self.zq.resize(mmq, 0.0);
+        self.zbar.clear();
+        self.zbar.resize(mmq, 0.0);
+        self.zd.clear();
+        self.zd.resize(mmq, 0.0);
+        self.zdd.clear();
+        self.zdd.resize(mmq, 0.0);
+        let mut t = 0;
+        for j in 0..m {
+            for l in 0..m {
+                for k in 0..q {
+                    let dz = p.z[(j, k)] - p.z[(l, k)];
+                    self.zq[t + k] = dz * dz / (4.0 * self.ls2[k]);
+                    self.zbar[t + k] = 0.5 * (p.z[(j, k)] + p.z[(l, k)]);
+                    self.zd[t + k] = dz / (2.0 * self.ls2[k]);
+                    self.zdd[t + k] = dz * dz / (2.0 * self.ls2[k]);
+                }
+                t += q;
+            }
+        }
+        self.tl2.clear();
+        self.tl2.extend(self.ls2.iter().map(|l2| 2.0 * l2));
+        self.inv_dn2.clear();
+        self.inv_dn2.resize(q, 0.0);
+        self.xv2.clear();
+        self.xv2.resize(q, 0.0);
+        self.dn2sq.clear();
+        self.dn2sq.resize(q, 0.0);
+        self.filled = false;
+    }
+
+    /// Full psi pass with no statistics accumulation — the gradient
+    /// round's fallback when round 1 did not run at this parameter
+    /// version (or ran masked). Values are bit-identical to what
+    /// [`shard_stats_into`] fills.
+    fn fill(&mut self, p: &GlobalParams, xmu: &Matrix, xvar: &Matrix) {
+        let b = xmu.rows();
+        self.prepare(p, b);
+        psi1_fill(p, xmu, xvar, &self.ls2, self.sf2, &mut self.dn, &mut self.psi1);
+        let mm = self.m * self.m;
+        for i in 0..b {
+            self.psi2_log_scale[i] = psi2_point_log_scale(&self.ls2, xvar.row(i));
+            if self.psi2_cached {
+                for k in 0..self.q {
+                    self.dn2[k] = self.ls2[k] + 2.0 * xvar[(i, k)];
+                }
+                let row = &mut self.psi2[i * mm..(i + 1) * mm];
+                psi2_row_fill_tabled(
+                    self.m,
+                    self.q,
+                    &self.zq,
+                    &self.zbar,
+                    self.sf2,
+                    xmu.row(i),
+                    self.psi2_log_scale[i],
+                    &self.dn2,
+                    row,
+                );
+            }
+        }
+        self.filled = true;
+    }
+}
+
+/// Full shard statistics, computed **into** `scratch` so the gradient
+/// round can reuse the psi intermediates. `kl_weight` = 0 selects the
 /// regression model, 1 the LVM; matches `ref.shard_stats_ref`.
+///
+/// The gradient round may only reuse the scratch when every point was
+/// live: a masked-out row leaves its Psi2 block stale, so a masked pass
+/// does not mark the scratch filled (the gradient round then refills).
+pub fn shard_stats_into(
+    p: &GlobalParams,
+    xmu: &Matrix,
+    xvar: &Matrix,
+    y: &Matrix,
+    mask: &[f64],
+    kl_weight: f64,
+    scratch: &mut ShardScratch,
+) -> Stats {
+    let b = xmu.rows();
+    assert_eq!(mask.len(), b);
+    let (m, q) = (p.m(), p.q());
+    scratch.prepare(p, b);
+    let mut st = Stats::zeros(m, y.cols());
+    psi1_fill(p, xmu, xvar, &scratch.ls2, scratch.sf2, &mut scratch.dn, &mut scratch.psi1);
+    let mm = m * m;
+    let mut complete = true;
+    for i in 0..b {
+        let w = mask[i];
+        if w == 0.0 {
+            complete = false;
+            continue;
+        }
+        st.n += w;
+        let yi = y.row(i);
+        st.a += w * yi.iter().map(|v| v * v).sum::<f64>();
+        // C += w * psi1_i^T y_i
+        for j in 0..m {
+            let pj = w * scratch.psi1[(i, j)];
+            for (cjd, &yv) in st.c.row_mut(j).iter_mut().zip(yi) {
+                *cjd += pj * yv;
+            }
+        }
+        // D += w * Psi2_i, accumulated straight out of the scratch (the
+        // slab row when it fits, the reusable one-point workspace
+        // otherwise) — no per-point Matrix allocation.
+        scratch.psi2_log_scale[i] = psi2_point_log_scale(&scratch.ls2, xvar.row(i));
+        for k in 0..q {
+            scratch.dn2[k] = scratch.ls2[k] + 2.0 * xvar[(i, k)];
+        }
+        {
+            let row: &mut [f64] = if scratch.psi2_cached {
+                &mut scratch.psi2[i * mm..(i + 1) * mm]
+            } else {
+                &mut scratch.psi2_row
+            };
+            psi2_row_fill_tabled(
+                m,
+                q,
+                &scratch.zq,
+                &scratch.zbar,
+                scratch.sf2,
+                xmu.row(i),
+                scratch.psi2_log_scale[i],
+                &scratch.dn2,
+                row,
+            );
+            for (dv, &v) in st.d.data_mut().iter_mut().zip(row.iter()) {
+                *dv += w * v;
+            }
+        }
+        if kl_weight > 0.0 {
+            let mut kli = 0.0;
+            for k in 0..q {
+                let (mu, s) = (xmu[(i, k)], xvar[(i, k)]);
+                let log_s = if s > 0.0 { s.ln() } else { 0.0 };
+                kli += mu * mu + s - log_s - 1.0;
+            }
+            st.kl += kl_weight * w * 0.5 * kli;
+        }
+    }
+    st.psi0 = scratch.sf2 * st.n;
+    scratch.filled = complete;
+    scratch.fills += 1;
+    st
+}
+
+/// Full shard statistics, pre-refactor loop shape kept **verbatim**
+/// (one fresh Psi1 block plus a per-point `psi2_point` allocation):
+/// the forced-fresh reference the scratch pipeline is proven
+/// bit-identical against, and the "before" series of `bench psi`.
+/// `kl_weight` = 0 selects the regression model, 1 the LVM; matches
+/// `ref.shard_stats_ref`.
 pub fn shard_stats(
     p: &GlobalParams,
     xmu: &Matrix,
@@ -163,11 +568,145 @@ pub fn kmm_vjp(p: &GlobalParams, adj: &Matrix) -> super::params::GlobalGrads {
 /// (Z, log lengthscales, log sf2) and this shard's local parameters
 /// (Xmu, Xvar in raw variance space).
 ///
+/// Consumes the psi intermediates `scratch` holds from the statistics
+/// round of the same evaluation; if the scratch is not filled for this
+/// shard (different shapes, masked round 1, or an invalidated cache)
+/// it refills first — the result is bit-identical either way.
+///
 /// Returns `(global grads, dF/dXmu [b x q], dF/dXvar [b x q])`;
 /// `d_log_beta` is left 0 (it is central, paper §3.2 step 3).
 /// Derivatives are w.r.t. the same explicit formulas as [`psi1`] /
 /// [`psi2_point`]; validated against finite differences of the
 /// assembled bound in the tests below.
+pub fn shard_grads_vjp_cached(
+    p: &GlobalParams,
+    xmu: &Matrix,
+    xvar: &Matrix,
+    y: &Matrix,
+    kl_weight: f64,
+    adj: &super::bound::Adjoints,
+    scratch: &mut ShardScratch,
+) -> (super::params::GlobalGrads, Matrix, Matrix) {
+    let (b, q, m) = (xmu.rows(), p.q(), p.m());
+    let fresh = !scratch.is_filled_for(b, m, q);
+    if fresh {
+        scratch.fill(p, xmu, xvar);
+    }
+    if fresh || !scratch.psi2_cached {
+        // this call performs a psi pass of its own (full refill, or the
+        // slab-less per-point Psi2 recompute)
+        scratch.fills += 1;
+    }
+    let mut g = super::params::GlobalGrads::zeros(m, q);
+    let mut d_xmu = Matrix::zeros(b, q);
+    let mut d_xvar = Matrix::zeros(b, q);
+
+    // ---- Psi1 path: dF/dPsi1[i,j] = sum_d dF/dC[j,d] * Y[i,d] --------------
+    // a1 = Y (dF/dC)^T, into the scratch workspace
+    y.matmul_t_into(&adj.d_c, &mut scratch.a1);
+    for i in 0..b {
+        for k in 0..q {
+            scratch.dn[k] = scratch.ls2[k] + xvar[(i, k)];
+        }
+        for j in 0..m {
+            let w = scratch.a1[(i, j)] * scratch.psi1[(i, j)];
+            if w == 0.0 {
+                continue;
+            }
+            g.d_log_sf2 += w;
+            for k in 0..q {
+                let dn = scratch.dn[k];
+                let diff = xmu[(i, k)] - p.z[(j, k)];
+                // `w * diff / dn` feeds both dZ and dXmu — one division
+                let t = w * diff / dn;
+                g.d_z[(j, k)] += t;
+                d_xmu[(i, k)] -= t;
+                d_xvar[(i, k)] += w * 0.5 * (diff * diff / (dn * dn) - 1.0 / dn);
+                g.d_log_ls[k] += w * (xvar[(i, k)] / dn + scratch.ls2[k] * diff * diff / (dn * dn));
+            }
+        }
+    }
+
+    // ---- Psi2 path: dF/dPsi2_i[j,l] = dF/dD[j,l] --------------------------
+    // The (j,l,k) terms come from the scratch tables; per-point terms are
+    // hoisted out of the m^2 loop. Every substitution reproduces the
+    // historical expression exactly (same grouping, same rounding).
+    let mm = m * m;
+    for i in 0..b {
+        for k in 0..q {
+            scratch.dn2[k] = scratch.ls2[k] + 2.0 * xvar[(i, k)];
+            scratch.inv_dn2[k] = 1.0 / scratch.dn2[k];
+            scratch.xv2[k] = 2.0 * xvar[(i, k)] / scratch.dn2[k];
+            scratch.dn2sq[k] = scratch.dn2[k] * scratch.dn2[k];
+        }
+        let p2: &[f64] = if scratch.psi2_cached {
+            &scratch.psi2[i * mm..(i + 1) * mm]
+        } else {
+            psi2_row_fill_tabled(
+                m,
+                q,
+                &scratch.zq,
+                &scratch.zbar,
+                scratch.sf2,
+                xmu.row(i),
+                scratch.psi2_log_scale[i],
+                &scratch.dn2,
+                &mut scratch.psi2_row,
+            );
+            &scratch.psi2_row
+        };
+        let mut ti = 0;
+        for j in 0..m {
+            for l in 0..m {
+                let w = adj.d_d[(j, l)] * p2[j * m + l];
+                if w == 0.0 {
+                    ti += q;
+                    continue;
+                }
+                g.d_log_sf2 += 2.0 * w;
+                for k in 0..q {
+                    let dn2 = scratch.dn2[k];
+                    let dm = xmu[(i, k)] - scratch.zbar[ti + k];
+                    let zd = scratch.zd[ti + k];
+                    let md = dm / dn2;
+                    g.d_z[(j, k)] += w * (-zd + md);
+                    g.d_z[(l, k)] += w * (zd + md);
+                    d_xmu[(i, k)] -= w * 2.0 * dm / dn2;
+                    d_xvar[(i, k)] += w * (2.0 * dm * dm / scratch.dn2sq[k] - scratch.inv_dn2[k]);
+                    g.d_log_ls[k] += w
+                        * (scratch.xv2[k]
+                            + scratch.zdd[ti + k]
+                            + scratch.tl2[k] * dm * dm / scratch.dn2sq[k]);
+                }
+                ti += q;
+            }
+        }
+    }
+
+    // ---- psi0 = sf2 * n: only log sf2 sees it ----------------------------
+    g.d_log_sf2 += adj.d_psi0 * scratch.sf2 * b as f64;
+
+    // ---- KL path: kl = klw * 0.5 sum_{i,k} (mu^2 + s - ln s - 1) ---------
+    if kl_weight > 0.0 {
+        for i in 0..b {
+            for k in 0..q {
+                let s = xvar[(i, k)];
+                d_xmu[(i, k)] += adj.d_kl * kl_weight * xmu[(i, k)];
+                let ds = if s > 0.0 { 0.5 * (1.0 - 1.0 / s) } else { 0.5 };
+                d_xvar[(i, k)] += adj.d_kl * kl_weight * ds;
+            }
+        }
+    }
+
+    (g, d_xmu, d_xvar)
+}
+
+/// Adjoint chain rule through the psi statistics, pre-refactor loop
+/// shape kept **verbatim** (full psi recompute, per-point `psi2_point`
+/// allocation, per-(j,l) denominator recompute): the forced-fresh
+/// reference mode. [`shard_grads_vjp_cached`] must reproduce it
+/// bit-for-bit (unit- and property-tested); the cluster trace tests
+/// pin the equality end to end.
 pub fn shard_grads_vjp(
     p: &GlobalParams,
     xmu: &Matrix,
@@ -257,6 +796,7 @@ pub fn shard_grads_vjp(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::gp::bound::Adjoints;
     use crate::util::rng::Rng;
 
     fn params(m: usize, q: usize, seed: u64) -> GlobalParams {
@@ -458,5 +998,112 @@ mod tests {
         assert!((acc.kl - whole.kl).abs() < 1e-12);
         assert!(acc.c.max_abs_diff(&whole.c) < 1e-12);
         assert!(acc.d.max_abs_diff(&whole.d) < 1e-12);
+    }
+
+    fn random_adjoints(rng: &mut Rng, m: usize, dout: usize) -> Adjoints {
+        Adjoints {
+            d_psi0: rng.normal(),
+            d_c: Matrix::from_fn(m, dout, |_, _| rng.normal()),
+            d_d: Matrix::from_fn(m, m, |_, _| rng.normal()),
+            d_kl: rng.normal(),
+            d_kmm: Matrix::zeros(m, m),
+            d_log_beta: 0.0,
+        }
+    }
+
+    fn assert_mat_bits_eq(a: &Matrix, b: &Matrix, what: &str) {
+        assert_eq!((a.rows(), a.cols()), (b.rows(), b.cols()), "{what}: shape");
+        for (x, y) in a.data().iter().zip(b.data()) {
+            assert_eq!(x.to_bits(), y.to_bits(), "{what}: {x} vs {y}");
+        }
+    }
+
+    /// Cached round 2 (slab on AND slab gated off) must equal the
+    /// scratch-free path bit-for-bit — the invariant the distributed
+    /// trace-equality tests rest on.
+    #[test]
+    fn cached_stats_and_grads_match_fresh_bitwise() {
+        let (m, q, dout, b) = (5, 3, 2, 9);
+        let mut rng = Rng::new(41);
+        let p = params(m, q, 40);
+        let xmu = Matrix::from_fn(b, q, |_, _| rng.normal());
+        let xvar = Matrix::from_fn(b, q, |_, _| 0.1 + rng.uniform());
+        let y = Matrix::from_fn(b, dout, |_, _| rng.normal());
+        let mask = vec![1.0; b];
+        let adj = random_adjoints(&mut rng, m, dout);
+
+        let st_ref = shard_stats(&p, &xmu, &xvar, &y, &mask, 1.0);
+        let (g_ref, dmu_ref, dvar_ref) = shard_grads_vjp(&p, &xmu, &xvar, &y, 1.0, &adj);
+
+        for limit in [usize::MAX, 0] {
+            let mut scratch = ShardScratch::with_slab_limit(limit);
+            // two evaluations in a row: the second reuses the buffers
+            for _ in 0..2 {
+                let st = shard_stats_into(&p, &xmu, &xvar, &y, &mask, 1.0, &mut scratch);
+                assert_eq!(st.a.to_bits(), st_ref.a.to_bits());
+                assert_eq!(st.psi0.to_bits(), st_ref.psi0.to_bits());
+                assert_eq!(st.kl.to_bits(), st_ref.kl.to_bits());
+                assert_eq!(st.n.to_bits(), st_ref.n.to_bits());
+                assert_mat_bits_eq(&st.c, &st_ref.c, "C");
+                assert_mat_bits_eq(&st.d, &st_ref.d, "D");
+                let (g, dmu, dvar) =
+                    shard_grads_vjp_cached(&p, &xmu, &xvar, &y, 1.0, &adj, &mut scratch);
+                assert_mat_bits_eq(&g.d_z, &g_ref.d_z, "dZ");
+                assert_eq!(g.d_log_sf2.to_bits(), g_ref.d_log_sf2.to_bits());
+                for (a, b) in g.d_log_ls.iter().zip(&g_ref.d_log_ls) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "dlog_ls");
+                }
+                assert_mat_bits_eq(&dmu, &dmu_ref, "dXmu");
+                assert_mat_bits_eq(&dvar, &dvar_ref, "dXvar");
+            }
+        }
+    }
+
+    /// With the slab, one evaluation = exactly one psi pass; without it
+    /// (or after a masked statistics round) the gradient round pays its
+    /// own pass.
+    #[test]
+    fn scratch_counts_psi_passes() {
+        let (m, q, dout, b) = (4, 2, 2, 6);
+        let mut rng = Rng::new(51);
+        let p = params(m, q, 50);
+        let xmu = Matrix::from_fn(b, q, |_, _| rng.normal());
+        let xvar = Matrix::from_fn(b, q, |_, _| 0.1 + rng.uniform());
+        let y = Matrix::from_fn(b, dout, |_, _| rng.normal());
+        let mask = vec![1.0; b];
+        let adj = random_adjoints(&mut rng, m, dout);
+
+        let mut scratch = ShardScratch::new();
+        shard_stats_into(&p, &xmu, &xvar, &y, &mask, 1.0, &mut scratch);
+        assert_eq!(scratch.psi_fills(), 1);
+        assert!(scratch.psi2_slab_cached());
+        shard_grads_vjp_cached(&p, &xmu, &xvar, &y, 1.0, &adj, &mut scratch);
+        assert_eq!(scratch.psi_fills(), 1, "cached round 2 must not refill");
+        // a second gradient round at the same fill is still a hit
+        shard_grads_vjp_cached(&p, &xmu, &xvar, &y, 1.0, &adj, &mut scratch);
+        assert_eq!(scratch.psi_fills(), 1);
+        // invalidation forces a refill
+        scratch.invalidate();
+        shard_grads_vjp_cached(&p, &xmu, &xvar, &y, 1.0, &adj, &mut scratch);
+        assert_eq!(scratch.psi_fills(), 2);
+
+        // slab gated off: both rounds pay a pass
+        let mut nocache = ShardScratch::with_slab_limit(0);
+        shard_stats_into(&p, &xmu, &xvar, &y, &mask, 1.0, &mut nocache);
+        shard_grads_vjp_cached(&p, &xmu, &xvar, &y, 1.0, &adj, &mut nocache);
+        assert_eq!(nocache.psi_fills(), 2);
+
+        // a masked statistics round must NOT be reused (stale slab rows)
+        let mut masked = ShardScratch::new();
+        let mut holes = mask.clone();
+        holes[2] = 0.0;
+        shard_stats_into(&p, &xmu, &xvar, &y, &holes, 1.0, &mut masked);
+        assert!(!masked.is_filled_for(b, m, q));
+        let (g, dmu, dvar) = shard_grads_vjp_cached(&p, &xmu, &xvar, &y, 1.0, &adj, &mut masked);
+        assert_eq!(masked.psi_fills(), 2, "masked round 1 must trigger a refill");
+        let (g_ref, dmu_ref, dvar_ref) = shard_grads_vjp(&p, &xmu, &xvar, &y, 1.0, &adj);
+        assert_mat_bits_eq(&g.d_z, &g_ref.d_z, "dZ after masked fill");
+        assert_mat_bits_eq(&dmu, &dmu_ref, "dXmu after masked fill");
+        assert_mat_bits_eq(&dvar, &dvar_ref, "dXvar after masked fill");
     }
 }

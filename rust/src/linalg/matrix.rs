@@ -67,14 +67,46 @@ impl Matrix {
         &mut self.data[i * self.cols..(i + 1) * self.cols]
     }
 
+    /// Reshape in place to `rows x cols` with every entry set to
+    /// `fill`, reusing the existing allocation when it is big enough.
+    /// The workspace primitive the `_into` APIs below build on: a hot
+    /// loop can own one `Matrix` and reset it every round instead of
+    /// allocating a fresh one.
+    pub fn reset(&mut self, rows: usize, cols: usize, fill: f64) {
+        self.rows = rows;
+        self.cols = cols;
+        self.data.clear();
+        self.data.resize(rows * cols, fill);
+    }
+
     pub fn transpose(&self) -> Matrix {
-        Matrix::from_fn(self.cols, self.rows, |i, j| self[(j, i)])
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        self.transpose_into(&mut out);
+        out
+    }
+
+    /// out = self^T into a caller-owned buffer (reshaped as needed).
+    pub fn transpose_into(&self, out: &mut Matrix) {
+        out.reset(self.cols, self.rows, 0.0);
+        for i in 0..self.rows {
+            for (j, &v) in self.row(i).iter().enumerate() {
+                out[(j, i)] = v;
+            }
+        }
     }
 
     /// C = self * other  (ikj loop order, inner loop vectorisable).
     pub fn matmul(&self, other: &Matrix) -> Matrix {
-        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
         let mut out = Matrix::zeros(self.rows, other.cols);
+        self.matmul_into(other, &mut out);
+        out
+    }
+
+    /// out = self * other into a caller-owned buffer. Identical loop
+    /// order (and therefore bit-identical results) to [`Self::matmul`].
+    pub fn matmul_into(&self, other: &Matrix, out: &mut Matrix) {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        out.reset(self.rows, other.cols, 0.0);
         for i in 0..self.rows {
             let a_row = self.row(i);
             let out_row = out.row_mut(i);
@@ -88,13 +120,19 @@ impl Matrix {
                 }
             }
         }
-        out
     }
 
     /// C = self^T * other.
     pub fn t_matmul(&self, other: &Matrix) -> Matrix {
-        assert_eq!(self.rows, other.rows, "t_matmul shape mismatch");
         let mut out = Matrix::zeros(self.cols, other.cols);
+        self.t_matmul_into(other, &mut out);
+        out
+    }
+
+    /// out = self^T * other into a caller-owned buffer.
+    pub fn t_matmul_into(&self, other: &Matrix, out: &mut Matrix) {
+        assert_eq!(self.rows, other.rows, "t_matmul shape mismatch");
+        out.reset(self.cols, other.cols, 0.0);
         for k in 0..self.rows {
             let a_row = self.row(k);
             let b_row = other.row(k);
@@ -108,13 +146,20 @@ impl Matrix {
                 }
             }
         }
-        out
     }
 
     /// C = self * other^T.
     pub fn matmul_t(&self, other: &Matrix) -> Matrix {
-        assert_eq!(self.cols, other.cols, "matmul_t shape mismatch");
         let mut out = Matrix::zeros(self.rows, other.rows);
+        self.matmul_t_into(other, &mut out);
+        out
+    }
+
+    /// out = self * other^T into a caller-owned buffer (row-dot-row; the
+    /// shape the gradient round uses for the Psi1 adjoint `Y (dF/dC)^T`).
+    pub fn matmul_t_into(&self, other: &Matrix, out: &mut Matrix) {
+        assert_eq!(self.cols, other.cols, "matmul_t shape mismatch");
+        out.reset(self.rows, other.rows, 0.0);
         for i in 0..self.rows {
             let a_row = self.row(i);
             for j in 0..other.rows {
@@ -126,7 +171,6 @@ impl Matrix {
                 out[(i, j)] = s;
             }
         }
-        out
     }
 
     /// y = self * x for a vector x.
@@ -321,6 +365,33 @@ mod tests {
         let c = a.vstack(&b);
         assert_eq!((c.rows(), c.cols()), (3, 2));
         assert_eq!(c.row(2), &[5., 6.]);
+    }
+
+    #[test]
+    fn into_variants_match_allocating_variants_bitwise() {
+        let a = Matrix::from_fn(4, 3, |i, j| ((i * 7 + j * 3) as f64).sin());
+        let b = Matrix::from_fn(3, 5, |i, j| ((i + j * 2) as f64).cos());
+        let c = Matrix::from_fn(4, 5, |i, j| (i as f64) - 0.7 * (j as f64));
+        // start each workspace deliberately mis-shaped and dirty
+        let mut ws = Matrix::from_fn(2, 2, |_, _| f64::NAN);
+        a.matmul_into(&b, &mut ws);
+        assert_eq!(ws, a.matmul(&b));
+        a.t_matmul_into(&c, &mut ws);
+        assert_eq!(ws, a.t_matmul(&c));
+        c.matmul_t_into(&a, &mut ws);
+        assert_eq!(ws, c.matmul_t(&a));
+        a.transpose_into(&mut ws);
+        assert_eq!(ws, a.transpose());
+    }
+
+    #[test]
+    fn reset_reshapes_and_fills() {
+        let mut m = Matrix::from_fn(5, 5, |_, _| 3.0);
+        m.reset(2, 3, 1.5);
+        assert_eq!((m.rows(), m.cols()), (2, 3));
+        assert!(m.data().iter().all(|&v| v == 1.5));
+        m.reset(4, 4, 0.0);
+        assert_eq!(m, Matrix::zeros(4, 4));
     }
 
     #[test]

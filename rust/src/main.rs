@@ -6,6 +6,7 @@
 //! gparml train [--data synthetic|oilflow|digits] [--model reg|lvm] ...
 //!              [--connect HOST:PORT,HOST:PORT]   # drive TCP workers
 //! gparml worker (--listen ADDR | --connect LEADER) [--artifacts DIR]
+//! gparml bench psi [--config perf] [--reps R]    # writes BENCH_psi.json
 //! gparml info                      # artifact manifest summary
 //! ```
 //!
@@ -38,17 +39,28 @@ fn main() -> Result<()> {
         }
         Some("train") => train(&args),
         Some("worker") => worker(&args),
+        Some("bench") => bench(&args),
         Some("info") => info(&args),
         _ => {
             eprintln!(
-                "usage: gparml <experiment|train|worker|info> [flags]\n\
+                "usage: gparml <experiment|train|worker|bench|info> [flags]\n\
                  experiments: fig1 fig2 fig3 fig4 fig5 fig6 fig7 fig8 all\n\
                  common flags: --n --iters --workers --seed --out DIR --artifacts DIR\n\
                  cluster: gparml worker --connect LEADER_ADDR (or --listen ADDR),\n\
-                          gparml train --connect W1,W2,... (synthetic dataset)"
+                          gparml train --connect W1,W2,... (synthetic dataset)\n\
+                 bench:   gparml bench psi [--config perf] [--points B] [--reps R]\n\
+                          [--out BENCH_psi.json]"
             );
             bail!("no command given")
         }
+    }
+}
+
+/// Machine-readable hot-path benchmarks (`gparml bench psi`).
+fn bench(args: &Args) -> Result<()> {
+    match args.positional.get(1).map(|s| s.as_str()) {
+        Some("psi") => gparml::runtime::psibench::run(args),
+        other => bail!("usage: gparml bench psi [flags] (got {other:?})"),
     }
 }
 

@@ -11,6 +11,7 @@ use crate::linalg::Matrix;
 
 use super::manifest::{ArtifactConfig, Manifest};
 use super::shard::{LocalGrads, ShardData};
+use super::EvalToken;
 
 /// A compiled set of artifact executables bound to one PJRT CPU client.
 ///
@@ -21,6 +22,10 @@ pub struct ShardExecutor {
     cfg: ArtifactConfig,
     stats_exe: PjRtLoadedExecutable,
     grads_exe: PjRtLoadedExecutable,
+    /// full psi passes executed (telemetry parity with the native
+    /// executor; the AOT artifacts are separate fixed graphs, so every
+    /// round is a pass — see `shard_grads_cached`)
+    fills: std::cell::Cell<u64>,
     /// kmm/predict are off the per-iteration hot path and only used by
     /// the leader / prediction flows — compiled lazily so worker startup
     /// pays for exactly the two entries it runs every round
@@ -77,11 +82,60 @@ impl ShardExecutor {
             cfg,
             stats_exe,
             grads_exe,
+            fills: std::cell::Cell::new(0),
             kmm_exe: std::cell::OnceCell::new(),
             predict_exe: std::cell::OnceCell::new(),
             kmm_path,
             predict_path,
         })
+    }
+
+    // ---- evaluation lifecycle (API parity with the native executor) ------
+    //
+    // The AOT artifact set compiles `shard_stats` and `shard_grads` as two
+    // independent fixed graphs, so psi intermediates cannot yet be carried
+    // from round 1 to round 2 on this path (ROADMAP: buffer donation).
+    // The cached entry points therefore run the fresh graphs; the token
+    // keeps the worker-node protocol identical across executors.
+
+    /// Start an evaluation at parameter version `version` (no state to
+    /// invalidate on this executor).
+    pub fn begin_eval(&self, version: u64) -> EvalToken {
+        EvalToken::new(version)
+    }
+
+    /// Drop cached psi intermediates (none on the artifact path).
+    pub fn invalidate_cache(&self) {}
+
+    /// Cumulative count of full psi passes this executor executed.
+    pub fn psi_fills(&self) -> u64 {
+        self.fills.get()
+    }
+
+    /// Gradient rounds served from a cache: always 0 on this path.
+    pub fn cache_hits(&self) -> u64 {
+        0
+    }
+
+    /// Map step 1 under an evaluation token (fresh graph execution).
+    pub fn shard_stats_cached(
+        &self,
+        _tok: &EvalToken,
+        p: &GlobalParams,
+        shard: &ShardData,
+    ) -> Result<Stats> {
+        self.shard_stats(p, shard)
+    }
+
+    /// Map step 2 under an evaluation token (fresh graph execution).
+    pub fn shard_grads_cached(
+        &self,
+        _tok: &EvalToken,
+        p: &GlobalParams,
+        shard: &ShardData,
+        adj: &crate::gp::Adjoints,
+    ) -> Result<(GlobalGrads, LocalGrads)> {
+        self.shard_grads(p, shard, adj)
     }
 
     fn kmm_exe(&self) -> Result<&PjRtLoadedExecutable> {
@@ -174,6 +228,7 @@ impl ShardExecutor {
     /// Map step 1: the shard's partial statistics (chunked over cap).
     pub fn shard_stats(&self, p: &GlobalParams, shard: &ShardData) -> Result<Stats> {
         self.check_params(p)?;
+        self.fills.set(self.fills.get() + 1);
         let cfg = &self.cfg;
         let mut total = Stats::zeros(cfg.m, cfg.d);
         let b = shard.len();
@@ -204,6 +259,7 @@ impl ShardExecutor {
         adj: &crate::gp::Adjoints,
     ) -> Result<(GlobalGrads, LocalGrads)> {
         self.check_params(p)?;
+        self.fills.set(self.fills.get() + 1);
         let cfg = &self.cfg;
         let b = shard.len();
         let mut g = GlobalGrads::zeros(cfg.m, cfg.q);

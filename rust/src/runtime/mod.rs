@@ -16,6 +16,7 @@
 //!   execute artifacts.
 
 mod manifest;
+pub mod psibench;
 mod shard;
 
 #[cfg(feature = "pjrt")]
@@ -25,6 +26,26 @@ mod native;
 
 pub use manifest::{ArtifactConfig, Manifest};
 pub use shard::{LocalGrads, ShardData};
+
+/// Handle for one bound/gradient evaluation of the two-round protocol,
+/// carrying the **parameter version** both map rounds of the evaluation
+/// run at. Obtained from [`ShardExecutor::begin_eval`]; passing it to
+/// `shard_stats_cached` / `shard_grads_cached` keys the executor's psi
+/// scratch so a gradient round can only consume intermediates computed
+/// at the *same* version — SCG line-search trial points (each a fresh
+/// version) can never alias a stale cache.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EvalToken(u64);
+
+impl EvalToken {
+    pub fn new(version: u64) -> EvalToken {
+        EvalToken(version)
+    }
+
+    pub fn version(&self) -> u64 {
+        self.0
+    }
+}
 
 #[cfg(feature = "pjrt")]
 pub use executor::ShardExecutor;

@@ -10,6 +10,17 @@
 //! artifact files, cluster worker daemons can be initialised purely
 //! from the shapes carried in the wire `Init` frame
 //! ([`ShardExecutor::from_config`]).
+//!
+//! The executor is **stateful per shard**: it owns a
+//! [`kernel::ShardScratch`] keyed by a parameter version
+//! ([`super::EvalToken`], handed out by [`ShardExecutor::begin_eval`]).
+//! Within one evaluation the statistics round fills the scratch and the
+//! gradient round consumes it — one psi pass instead of two. A token
+//! with a different version, a mutated shard
+//! ([`ShardExecutor::invalidate_cache`]) or mismatched shapes all force
+//! a bit-identical fresh recompute, never a stale reuse.
+
+use std::cell::{Cell, RefCell};
 
 use anyhow::Result;
 
@@ -19,27 +30,41 @@ use crate::linalg::Matrix;
 
 use super::manifest::{ArtifactConfig, Manifest};
 use super::shard::{LocalGrads, ShardData};
+use super::EvalToken;
 
-/// Native stand-in for the compiled artifact set: holds only the shape
-/// configuration; all compute is done by `gp::kernel`.
+/// Native stand-in for the compiled artifact set: holds the shape
+/// configuration plus the per-shard psi scratch; all compute is done by
+/// `gp::kernel`.
 pub struct ShardExecutor {
     cfg: ArtifactConfig,
+    /// psi workspace reused across rounds and evaluations
+    scratch: RefCell<kernel::ShardScratch>,
+    /// parameter version the scratch was last filled at
+    version: Cell<Option<u64>>,
+    /// full psi passes computed (telemetry; see `WorkerNode`)
+    fills: Cell<u64>,
+    /// gradient rounds served entirely from the scratch
+    hits: Cell<u64>,
 }
 
 impl ShardExecutor {
     /// Manifest-based constructor (API-compatible with the PJRT
     /// executor; the HLO entry files are not touched).
     pub fn new(manifest: &Manifest, config: &str) -> Result<ShardExecutor> {
-        Ok(ShardExecutor {
-            cfg: manifest.config(config)?.clone(),
-        })
+        Ok(Self::from_config(manifest.config(config)?.clone()))
     }
 
     /// Build directly from a shape configuration — no artifacts
     /// directory needed (used by TCP cluster workers, whose shapes
     /// arrive in the `Init` frame).
     pub fn from_config(cfg: ArtifactConfig) -> ShardExecutor {
-        ShardExecutor { cfg }
+        ShardExecutor {
+            cfg,
+            scratch: RefCell::new(kernel::ShardScratch::new()),
+            version: Cell::new(None),
+            fills: Cell::new(0),
+            hits: Cell::new(0),
+        }
     }
 
     pub fn config(&self) -> &ArtifactConfig {
@@ -59,10 +84,107 @@ impl ShardExecutor {
         Ok(())
     }
 
-    /// Map step 1: the shard's partial statistics.
+    // ---- evaluation lifecycle --------------------------------------------
+
+    /// Start (or continue) an evaluation at parameter version
+    /// `version`. If the cached scratch belongs to a different version
+    /// it is invalidated here, so a stale cache can never leak into the
+    /// rounds run under the returned token.
+    pub fn begin_eval(&self, version: u64) -> EvalToken {
+        if self.version.get() != Some(version) {
+            self.scratch.borrow_mut().invalidate();
+            self.version.set(None);
+        }
+        EvalToken::new(version)
+    }
+
+    /// Drop any cached psi intermediates (the shard or its local
+    /// parameters changed under the executor).
+    pub fn invalidate_cache(&self) {
+        self.scratch.borrow_mut().invalidate();
+        self.version.set(None);
+    }
+
+    /// Cumulative count of full psi passes this executor computed.
+    pub fn psi_fills(&self) -> u64 {
+        self.fills.get()
+    }
+
+    /// Cumulative count of gradient rounds served from the cache.
+    pub fn cache_hits(&self) -> u64 {
+        self.hits.get()
+    }
+
+    // ---- map rounds -------------------------------------------------------
+
+    /// Map step 1, cached: compute the shard's partial statistics into
+    /// the executor scratch so the gradient round of the same token can
+    /// reuse the psi intermediates.
+    pub fn shard_stats_cached(
+        &self,
+        tok: &EvalToken,
+        p: &GlobalParams,
+        shard: &ShardData,
+    ) -> Result<Stats> {
+        self.check_params(p)?;
+        let mask = vec![1.0; shard.len()];
+        let mut scratch = self.scratch.borrow_mut();
+        let before = scratch.psi_fills();
+        let st = kernel::shard_stats_into(
+            p,
+            &shard.xmu,
+            &shard.xvar,
+            &shard.y,
+            &mask,
+            shard.kl_weight,
+            &mut scratch,
+        );
+        self.fills.set(self.fills.get() + (scratch.psi_fills() - before));
+        self.version.set(Some(tok.version()));
+        Ok(st)
+    }
+
+    /// Map step 2, cached: chain-rule the adjoints, consuming the psi
+    /// intermediates of the statistics round run under the same token.
+    /// A version/shape mismatch refills fresh (bit-identical result).
+    pub fn shard_grads_cached(
+        &self,
+        tok: &EvalToken,
+        p: &GlobalParams,
+        shard: &ShardData,
+        adj: &crate::gp::Adjoints,
+    ) -> Result<(GlobalGrads, LocalGrads)> {
+        self.check_params(p)?;
+        let mut scratch = self.scratch.borrow_mut();
+        if self.version.get() != Some(tok.version()) {
+            scratch.invalidate();
+        }
+        let before = scratch.psi_fills();
+        let (g, d_xmu, d_xvar) = kernel::shard_grads_vjp_cached(
+            p,
+            &shard.xmu,
+            &shard.xvar,
+            &shard.y,
+            shard.kl_weight,
+            adj,
+            &mut scratch,
+        );
+        let delta = scratch.psi_fills() - before;
+        self.fills.set(self.fills.get() + delta);
+        if delta == 0 {
+            self.hits.set(self.hits.get() + 1);
+        }
+        // the scratch now reflects this token's parameters either way
+        self.version.set(Some(tok.version()));
+        Ok((g, LocalGrads { d_xmu, d_xvar }))
+    }
+
+    /// Map step 1, stateless: the shard's partial statistics with no
+    /// caching (the forced-fresh path; also the baselines' entry).
     pub fn shard_stats(&self, p: &GlobalParams, shard: &ShardData) -> Result<Stats> {
         self.check_params(p)?;
         let mask = vec![1.0; shard.len()];
+        self.fills.set(self.fills.get() + 1);
         Ok(kernel::shard_stats(
             p,
             &shard.xmu,
@@ -73,8 +195,8 @@ impl ShardExecutor {
         ))
     }
 
-    /// Map step 2: chain-rule the adjoints into partial global gradients
-    /// and this shard's local gradients.
+    /// Map step 2, stateless: chain-rule the adjoints with a fresh psi
+    /// recompute (no cache read or write).
     pub fn shard_grads(
         &self,
         p: &GlobalParams,
@@ -82,6 +204,7 @@ impl ShardExecutor {
         adj: &crate::gp::Adjoints,
     ) -> Result<(GlobalGrads, LocalGrads)> {
         self.check_params(p)?;
+        self.fills.set(self.fills.get() + 1);
         let (g, d_xmu, d_xvar) =
             kernel::shard_grads_vjp(p, &shard.xmu, &shard.xvar, &shard.y, shard.kl_weight, adj);
         Ok((g, LocalGrads { d_xmu, d_xvar }))

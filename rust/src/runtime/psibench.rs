@@ -1,0 +1,130 @@
+//! `gparml bench psi` — machine-readable hot-path benchmark of the two
+//! map rounds (shard statistics + chain-rule gradients), cached vs
+//! forced-fresh.
+//!
+//! Writes `BENCH_psi.json` (ns/point per round and per full evaluation,
+//! plus the cached-vs-nocache speedup) so the perf trajectory of the
+//! worker hot path is tracked as a checked artifact from PR 2 on. CI
+//! runs a small-rep smoke of this command to keep the harness alive.
+
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+
+use crate::gp::{self, kernel, GlobalParams};
+use crate::linalg::Matrix;
+use crate::util::bench::bench;
+use crate::util::cli::Args;
+use crate::util::rng::Rng;
+
+use super::{build_executor, default_artifacts_dir, Manifest, ShardData};
+
+fn artifacts_dir(args: &Args) -> PathBuf {
+    args.get("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(default_artifacts_dir)
+}
+
+/// Run the psi hot-path benchmark and write the JSON report.
+///
+/// Flags: `--config` (artifact shape, default `perf`), `--points`
+/// (shard size, default the config's capacity B), `--reps`,
+/// `--out` (default `BENCH_psi.json`), `--artifacts DIR`.
+pub fn run(args: &Args) -> Result<()> {
+    let cfg_name = args.get_str("config", "perf");
+    let reps = args.get_usize("reps", 10)?.max(1);
+    let out_path = args.get_str("out", "BENCH_psi.json");
+
+    let dir = artifacts_dir(args);
+    let manifest = Manifest::load(&dir)?;
+    let art = manifest.config(cfg_name)?.clone();
+    let b = args.get_usize("points", art.cap)?.max(1);
+
+    let exec = build_executor(&art, &dir)?;
+    let mut rng = Rng::new(42);
+    let params = GlobalParams {
+        z: Matrix::from_fn(art.m, art.q, |_, _| rng.range(-2.0, 2.0)),
+        log_ls: vec![0.0; art.q],
+        log_sf2: 0.0,
+        log_beta: 1.0,
+    };
+    let shard = ShardData {
+        xmu: Matrix::from_fn(b, art.q, |_, _| rng.normal()),
+        xvar: Matrix::from_fn(b, art.q, |_, _| 0.1 + rng.uniform()),
+        y: Matrix::from_fn(b, art.d, |_, _| rng.normal()),
+        kl_weight: 1.0,
+    };
+    let kmm = kernel::kmm(&params, 1e-6);
+    let stats = exec.shard_stats(&params, &shard)?;
+    let (_, adj) = gp::assemble_bound(&stats, &kmm, params.log_beta, art.d)?;
+
+    println!(
+        "bench psi: config {cfg_name} (b={b}, m={}, q={}, d={}), {reps} reps",
+        art.m, art.q, art.d
+    );
+
+    // one full evaluation, cached pipeline: round 1 fills the executor
+    // scratch, round 2 consumes it (a fresh parameter version per rep,
+    // exactly the trainer's per-evaluation behaviour)
+    let mut version = 0u64;
+    let eval_cached = bench("eval cached (stats fill + grads reuse)", 1, reps, || {
+        version += 1;
+        let tok = exec.begin_eval(version);
+        let st = exec.shard_stats_cached(&tok, &params, &shard).unwrap();
+        let g = exec.shard_grads_cached(&tok, &params, &shard, &adj).unwrap();
+        (st, g)
+    });
+    // forced no-cache evaluation: both rounds recompute psi from scratch
+    let eval_nocache = bench("eval nocache (stats + fresh grads)", 1, reps, || {
+        let st = exec.shard_stats(&params, &shard).unwrap();
+        let g = exec.shard_grads(&params, &shard, &adj).unwrap();
+        (st, g)
+    });
+
+    // per-round series: the statistics round (identical work in both
+    // modes modulo the slab writes), a gradient round reusing a warm
+    // cache, and a forced-fresh gradient round
+    let stats_round = bench("round 1: shard_stats", 1, reps, || {
+        let tok = exec.begin_eval(version);
+        exec.shard_stats_cached(&tok, &params, &shard).unwrap()
+    });
+    let grads_cached = bench("round 2: shard_grads (cache hit)", 1, reps, || {
+        let tok = exec.begin_eval(version);
+        exec.shard_grads_cached(&tok, &params, &shard, &adj).unwrap()
+    });
+    let grads_nocache = bench("round 2: shard_grads (forced fresh)", 1, reps, || {
+        exec.shard_grads(&params, &shard, &adj).unwrap()
+    });
+
+    let per_point = |median_s: f64| median_s * 1e9 / b as f64;
+    let speedup = eval_nocache.median_s / eval_cached.median_s.max(1e-12);
+    println!(
+        "combined stats+grads per evaluation: cached {:.0} ns/point, \
+         nocache {:.0} ns/point => {speedup:.2}x",
+        per_point(eval_cached.median_s),
+        per_point(eval_nocache.median_s),
+    );
+
+    let json = format!(
+        "{{\n  \"config\": \"{}\",\n  \"points\": {},\n  \"m\": {},\n  \"q\": {},\n  \
+         \"d\": {},\n  \"reps\": {},\n  \"stats_ns_per_point\": {:.1},\n  \
+         \"grads_cached_ns_per_point\": {:.1},\n  \"grads_nocache_ns_per_point\": {:.1},\n  \
+         \"eval_cached_ns_per_point\": {:.1},\n  \"eval_nocache_ns_per_point\": {:.1},\n  \
+         \"speedup_eval\": {:.3}\n}}\n",
+        cfg_name,
+        b,
+        art.m,
+        art.q,
+        art.d,
+        reps,
+        per_point(stats_round.median_s),
+        per_point(grads_cached.median_s),
+        per_point(grads_nocache.median_s),
+        per_point(eval_cached.median_s),
+        per_point(eval_nocache.median_s),
+        speedup,
+    );
+    std::fs::write(out_path, json).with_context(|| format!("writing {out_path}"))?;
+    println!("wrote {out_path}");
+    Ok(())
+}

@@ -25,6 +25,11 @@ pub struct RoundTiming {
     pub bytes_tx: u64,
     /// Workers -> leader bytes for this round.
     pub bytes_rx: u64,
+    /// Full psi recomputations across all workers in this round. With
+    /// the psi cache on, a statistics round costs one per worker and a
+    /// gradient round 0 — i.e. exactly one psi pass per worker per
+    /// evaluation, the observable proof the two-round reuse happened.
+    pub psi_recomputes: u64,
 }
 
 impl RoundTiming {
@@ -82,6 +87,13 @@ impl IterationLog {
         let tx = self.rounds.iter().map(|r| r.bytes_tx).sum();
         let rx = self.rounds.iter().map(|r| r.bytes_rx).sum();
         (tx, rx)
+    }
+
+    /// Total psi recomputations across this iteration's rounds (the
+    /// cache-effectiveness counter: with reuse on, equals workers x
+    /// evaluations rather than workers x rounds).
+    pub fn psi_recomputes(&self) -> u64 {
+        self.rounds.iter().map(|r| r.psi_recomputes).sum()
     }
 
     /// Per-iteration load-balance summary over all rounds'
@@ -147,6 +159,11 @@ impl RunLog {
         (tx, rx)
     }
 
+    /// Total psi recomputations over the run.
+    pub fn total_psi_recomputes(&self) -> u64 {
+        self.iterations.iter().map(|i| i.psi_recomputes()).sum()
+    }
+
     /// Mean relative gap between max and mean worker load (paper §5.1
     /// reports 3.7%).
     pub fn mean_load_gap(&self) -> f64 {
@@ -179,6 +196,7 @@ mod tests {
         let mut r1 = round(&[1.0], 1.0);
         r1.bytes_tx = 100;
         r1.bytes_rx = 40;
+        r1.psi_recomputes = 2;
         let mut r2 = round(&[1.0], 1.0);
         r2.bytes_tx = 60;
         r2.bytes_rx = 10;
@@ -190,11 +208,13 @@ mod tests {
             failed_workers: vec![],
         };
         assert_eq!(it.network_bytes(), (160, 50));
+        assert_eq!(it.psi_recomputes(), 2);
         let log = RunLog {
             iterations: vec![it.clone(), it],
             startup_secs: 0.0,
         };
         assert_eq!(log.total_network_bytes(), (320, 100));
+        assert_eq!(log.total_psi_recomputes(), 4);
     }
 
     #[test]

@@ -119,7 +119,7 @@ fn tcp_cluster_matches_pool_backend_bitwise() {
     let iters = 6;
     let shards = partition(&xmu, &xvar, &y, 0.0, workers);
 
-    // reference: in-process thread backend
+    // reference: in-process thread backend (psi cache on, the default)
     let mut pool_t = Trainer::new(
         config(workers, ModelKind::Regression),
         init_params(5),
@@ -127,6 +127,23 @@ fn tcp_cluster_matches_pool_backend_bitwise() {
     )
     .unwrap();
     let pool_trace: Vec<f64> = (0..iters).map(|_| pool_t.step().unwrap()).collect();
+
+    // forced-fresh reference: psi cache off, everything recomputed per
+    // round — the cached round 2 must equal this recompute bit-for-bit
+    let mut fresh_cfg = config(workers, ModelKind::Regression);
+    fresh_cfg.psi_cache = false;
+    let mut fresh_t = Trainer::new(fresh_cfg, init_params(5), shards.clone()).unwrap();
+    let fresh_trace: Vec<f64> = (0..iters).map(|_| fresh_t.step().unwrap()).collect();
+    for (i, (a, b)) in pool_trace.iter().zip(&fresh_trace).enumerate() {
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "iteration {i}: cached F={a} vs forced-fresh F={b}"
+        );
+    }
+    for (a, b) in pool_t.params.flatten().iter().zip(fresh_t.params.flatten()) {
+        assert_eq!(a.to_bits(), b.to_bits(), "cached vs fresh params diverged");
+    }
 
     // real processes over TCP, same seed, same shards
     let (mut tcp_t, procs) = tcp_trainer(
@@ -155,6 +172,33 @@ fn tcp_cluster_matches_pool_backend_bitwise() {
     let (pool_tx, pool_rx) = pool_t.log.total_network_bytes();
     assert_eq!((pool_tx, pool_rx), (0, 0), "in-process backend sent bytes?");
 
+    // cache reuse is observable end-to-end, over the wire included: a
+    // statistics round costs one psi pass per worker, a cached gradient
+    // round zero; without the cache every round pays a pass
+    for log in [&pool_t.log, &tcp_t.log] {
+        for it in &log.iterations {
+            assert_eq!(it.rounds.len() % 2, 0, "rounds come in stats/grads pairs");
+            for (r, round) in it.rounds.iter().enumerate() {
+                let expect = if r % 2 == 0 { workers as u64 } else { 0 };
+                assert_eq!(
+                    round.psi_recomputes, expect,
+                    "iter {} round {r}: psi recomputes",
+                    it.iter
+                );
+            }
+        }
+    }
+    for it in &fresh_t.log.iterations {
+        for (r, round) in it.rounds.iter().enumerate() {
+            assert_eq!(
+                round.psi_recomputes,
+                workers as u64,
+                "iter {} round {r}: forced-fresh must recompute every round",
+                it.iter
+            );
+        }
+    }
+
     drop(tcp_t); // sends Shutdown frames
     drop(procs);
 }
@@ -182,6 +226,17 @@ fn tcp_cluster_lvm_local_updates_match_pool_backend() {
         .unwrap();
     let pool_trace: Vec<f64> = (0..iters).map(|_| pool_t.step().unwrap()).collect();
 
+    // the LVM path also mutates the local parameters mid-evaluation
+    // (cache invalidation on the workers); a forced-fresh run must still
+    // agree bit-for-bit
+    let mut fresh_cfg = config(2, ModelKind::Lvm);
+    fresh_cfg.psi_cache = false;
+    let mut fresh_t = Trainer::new(fresh_cfg, init_params(9), shards.clone()).unwrap();
+    for (i, f) in pool_trace.iter().enumerate() {
+        let g = fresh_t.step().unwrap();
+        assert_eq!(f.to_bits(), g.to_bits(), "LVM iteration {i}: cached vs fresh");
+    }
+
     let (mut tcp_t, procs) = tcp_trainer(config(2, ModelKind::Lvm), init_params(9), shards);
     let tcp_trace: Vec<f64> = (0..iters).map(|_| tcp_t.step().unwrap()).collect();
 
@@ -196,6 +251,11 @@ fn tcp_cluster_lvm_local_updates_match_pool_backend() {
     for ((pm, pv), (tm, tv)) in pool_locals.iter().zip(&tcp_locals) {
         assert_eq!(pm.max_abs_diff(tm), 0.0, "local means diverged");
         assert_eq!(pv.max_abs_diff(tv), 0.0, "local variances diverged");
+    }
+    let fresh_locals = fresh_t.gather_locals().unwrap();
+    for ((pm, pv), (fm, fv)) in pool_locals.iter().zip(&fresh_locals) {
+        assert_eq!(pm.max_abs_diff(fm), 0.0, "cached vs fresh local means");
+        assert_eq!(pv.max_abs_diff(fv), 0.0, "cached vs fresh local variances");
     }
     drop(tcp_t);
     drop(procs);

@@ -2,10 +2,13 @@
 //! checks via `gparml::testing`; proptest is unavailable offline —
 //! DESIGN.md §5). Every property prints the failing seed on violation.
 
+use std::collections::BTreeMap;
+
 use gparml::coordinator::partition;
 use gparml::gp::{self, kernel, GlobalParams, Stats};
 use gparml::linalg::{Cholesky, Matrix};
 use gparml::optim::Scg;
+use gparml::runtime::{build_executor, ArtifactConfig, ShardData};
 use gparml::testing::{check, close, dim, mat_close, random_matrix, random_spd};
 use gparml::util::json::Json;
 use gparml::util::rng::Rng;
@@ -193,6 +196,158 @@ fn prop_adjoints_match_finite_differences() {
         sm.d[(i, j)] -= eps;
         let fm = gp::assemble_bound(&sm, &kmm, p.log_beta, d).unwrap().0.f;
         close(adj.d_d[(i, j)], (fp - fm) / (2.0 * eps), 2e-4, "dD fd")
+    });
+}
+
+// ---------------------------------------------------------------------------
+// psi-scratch execution pipeline
+// ---------------------------------------------------------------------------
+
+fn random_adjoints(rng: &mut Rng, m: usize, d: usize) -> gp::Adjoints {
+    gp::Adjoints {
+        d_psi0: rng.normal(),
+        d_c: random_matrix(rng, m, d, 1.0),
+        d_d: random_matrix(rng, m, m, 1.0),
+        d_kl: rng.normal(),
+        d_kmm: Matrix::zeros(m, m),
+        d_log_beta: 0.0,
+    }
+}
+
+fn bits_f64(a: f64, b: f64, what: &str) -> Result<(), String> {
+    if a.to_bits() == b.to_bits() {
+        Ok(())
+    } else {
+        Err(format!("{what}: {a} vs {b} (bitwise)"))
+    }
+}
+
+fn bits_mat(a: &Matrix, b: &Matrix, what: &str) -> Result<(), String> {
+    if (a.rows(), a.cols()) != (b.rows(), b.cols()) {
+        return Err(format!("{what}: shape mismatch"));
+    }
+    for (x, y) in a.data().iter().zip(b.data()) {
+        bits_f64(*x, *y, what)?;
+    }
+    Ok(())
+}
+
+/// Native executor built from shapes alone (the cluster-worker path).
+fn shape_executor(m: usize, q: usize, d: usize) -> gparml::runtime::ShardExecutor {
+    let cfg = ArtifactConfig {
+        name: "prop".into(),
+        m,
+        q,
+        d,
+        cap: 64,
+        block_n: 8,
+        entries: BTreeMap::new(),
+    };
+    build_executor(&cfg, std::path::Path::new("artifacts")).expect("native executor from shapes")
+}
+
+#[test]
+fn prop_scratch_pipeline_bitwise_equals_fresh() {
+    check("scratch stats+grads == fresh bitwise", 12, |rng| {
+        let (m, q, d) = (dim(rng, 2, 6), dim(rng, 1, 3), dim(rng, 1, 3));
+        let n = dim(rng, 2, 18);
+        let p = random_params(rng, m, q);
+        let xmu = random_matrix(rng, n, q, 1.0);
+        let xvar = Matrix::from_fn(n, q, |_, _| 0.05 + rng.uniform());
+        let y = random_matrix(rng, n, d, 1.0);
+        let adj = random_adjoints(rng, m, d);
+        let mask = vec![1.0; n];
+        let st_ref = kernel::shard_stats(&p, &xmu, &xvar, &y, &mask, 1.0);
+        let (g_ref, dmu_ref, dvar_ref) = kernel::shard_grads_vjp(&p, &xmu, &xvar, &y, 1.0, &adj);
+        // both the full Psi2 slab and the gated-off (recompute) mode
+        for limit in [usize::MAX, 0] {
+            let mut scratch = kernel::ShardScratch::with_slab_limit(limit);
+            let st = kernel::shard_stats_into(&p, &xmu, &xvar, &y, &mask, 1.0, &mut scratch);
+            bits_f64(st.a, st_ref.a, "a")?;
+            bits_f64(st.psi0, st_ref.psi0, "psi0")?;
+            bits_f64(st.kl, st_ref.kl, "kl")?;
+            bits_f64(st.n, st_ref.n, "n")?;
+            bits_mat(&st.c, &st_ref.c, "C")?;
+            bits_mat(&st.d, &st_ref.d, "D")?;
+            let (g, dmu, dvar) =
+                kernel::shard_grads_vjp_cached(&p, &xmu, &xvar, &y, 1.0, &adj, &mut scratch);
+            bits_mat(&g.d_z, &g_ref.d_z, "dZ")?;
+            bits_f64(g.d_log_sf2, g_ref.d_log_sf2, "dlog_sf2")?;
+            for (a, b) in g.d_log_ls.iter().zip(&g_ref.d_log_ls) {
+                bits_f64(*a, *b, "dlog_ls")?;
+            }
+            bits_mat(&dmu, &dmu_ref, "dXmu")?;
+            bits_mat(&dvar, &dvar_ref, "dXvar")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_stale_param_version_never_reused() {
+    check("executor never reuses a stale psi cache", 10, |rng| {
+        let (m, q, d) = (dim(rng, 2, 6), dim(rng, 1, 3), dim(rng, 1, 2));
+        let n = dim(rng, 2, 12);
+        let p1 = random_params(rng, m, q);
+        let shard = ShardData {
+            xmu: random_matrix(rng, n, q, 1.0),
+            xvar: Matrix::from_fn(n, q, |_, _| 0.05 + rng.uniform()),
+            y: random_matrix(rng, n, d, 1.0),
+            kl_weight: 1.0,
+        };
+        let adj = random_adjoints(rng, m, d);
+        let exec = shape_executor(m, q, d);
+
+        // round 1 at version 1 / params p1 fills the cache
+        let tok1 = exec.begin_eval(1);
+        exec.shard_stats_cached(&tok1, &p1, &shard)
+            .map_err(|e| e.to_string())?;
+
+        // mutate ONE hyperparameter and move to version 2: the gradient
+        // round must never consume the version-1 cache
+        let mut p2 = p1.clone();
+        match rng.below(3) {
+            0 => p2.log_ls[rng.below(q)] += 0.25,
+            1 => p2.log_sf2 += 0.25,
+            _ => {
+                let (i, j) = (rng.below(m), rng.below(q));
+                p2.z[(i, j)] += 0.25;
+            }
+        }
+        let tok2 = exec.begin_eval(2);
+        let (g, local) = exec
+            .shard_grads_cached(&tok2, &p2, &shard, &adj)
+            .map_err(|e| e.to_string())?;
+        if exec.cache_hits() != 0 {
+            return Err("stale psi cache consumed across versions".into());
+        }
+
+        // bit-for-bit identical to a completely fresh executor at p2
+        let fresh = shape_executor(m, q, d);
+        let (gf, localf) = fresh
+            .shard_grads(&p2, &shard, &adj)
+            .map_err(|e| e.to_string())?;
+        bits_mat(&g.d_z, &gf.d_z, "dZ")?;
+        bits_f64(g.d_log_sf2, gf.d_log_sf2, "dlog_sf2")?;
+        for (a, b) in g.d_log_ls.iter().zip(&gf.d_log_ls) {
+            bits_f64(*a, *b, "dlog_ls")?;
+        }
+        bits_mat(&local.d_xmu, &localf.d_xmu, "dXmu")?;
+        bits_mat(&local.d_xvar, &localf.d_xvar, "dXvar")?;
+
+        // while a same-version gradient round IS served from the cache,
+        // with the same bits
+        let tok3 = exec.begin_eval(3);
+        exec.shard_stats_cached(&tok3, &p2, &shard)
+            .map_err(|e| e.to_string())?;
+        let (g2, _) = exec
+            .shard_grads_cached(&tok3, &p2, &shard, &adj)
+            .map_err(|e| e.to_string())?;
+        if exec.cache_hits() != 1 {
+            return Err(format!("expected one cache hit, got {}", exec.cache_hits()));
+        }
+        bits_mat(&g2.d_z, &gf.d_z, "dZ (cache hit)")?;
+        Ok(())
     });
 }
 
