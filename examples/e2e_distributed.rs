@@ -42,7 +42,7 @@ fn main() -> Result<()> {
     // binary into a cluster node (used by `--cluster tcp` below)
     if let Some(addr) = args.get("worker-connect") {
         let artifacts = gparml::runtime::default_artifacts_dir();
-        gparml::cluster::node::run_worker_connect(addr, &artifacts)?;
+        gparml::cluster::node::run_worker_connect(addr, &artifacts, None)?;
         return Ok(());
     }
 

@@ -15,11 +15,12 @@
 use std::net::{TcpListener, TcpStream};
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
+use crate::gp::MathMode;
 use crate::linalg::Matrix;
 use crate::optim::Adam;
-use crate::runtime::{build_executor, ShardData, ShardExecutor};
+use crate::runtime::{build_executor_mode, ShardData, ShardExecutor};
 use crate::util::timer::thread_cpu_secs;
 
 use super::wire::{self, Frame, Init, Request, Response};
@@ -44,9 +45,18 @@ pub struct WorkerNode {
 impl WorkerNode {
     /// Build the node from an `Init` message. Native builds need only
     /// the shapes; PJRT builds compile the artifacts from
-    /// `artifacts_dir`.
+    /// `artifacts_dir`. The executor is built under the cluster-wide
+    /// `Init.math_mode`; fast mode without the psi cache is rejected
+    /// (the forced-fresh path exists to pin the strict reference trace,
+    /// so it has no fast variant — DESIGN.md §8).
     pub fn build(init: &Init, artifacts_dir: &Path) -> Result<WorkerNode> {
-        let exec = build_executor(&init.artifact, artifacts_dir)?;
+        ensure!(
+            init.psi_cache || init.math_mode == MathMode::Strict,
+            "math mode {} requires the psi cache (psi_cache=false selects the strict \
+             forced-fresh reference)",
+            init.math_mode
+        );
+        let exec = build_executor_mode(&init.artifact, artifacts_dir, init.math_mode)?;
         let shard = init.shard.clone();
         let dof = shard.xmu.rows() * shard.xmu.cols();
         Ok(WorkerNode {
@@ -190,7 +200,17 @@ impl WorkerNode {
 
 /// Serve one leader over an established connection until `Shutdown` or
 /// disconnect. Returns the number of requests served.
-pub fn serve_connection(mut stream: TcpStream, artifacts_dir: &Path) -> Result<u64> {
+///
+/// `pinned_mode` pins this worker to one [`MathMode`]
+/// (`gparml worker --math-mode ...`): an `Init` frame carrying the
+/// other mode is answered with an error and the daemon exits, so a
+/// mixed-mode cluster fails loudly at bring-up on the leader
+/// (`None` accepts whatever mode the leader negotiates).
+pub fn serve_connection(
+    mut stream: TcpStream,
+    artifacts_dir: &Path,
+    pinned_mode: Option<MathMode>,
+) -> Result<u64> {
     stream.set_nodelay(true).ok();
 
     // handshake: leader assigns our worker id
@@ -201,9 +221,10 @@ pub fn serve_connection(mut stream: TcpStream, artifacts_dir: &Path) -> Result<u
     };
     wire::write_frame(&mut stream, &Frame::HelloAck)?;
 
-    // initialisation: shapes, model flags and our shard
+    // initialisation: shapes, model flags, math mode and our shard
     let built = match wire::read_frame(&mut stream)? {
-        Some((Frame::Init(init), _)) => WorkerNode::build(&init, artifacts_dir)
+        Some((Frame::Init(init), _)) => check_pinned_mode(pinned_mode, init.math_mode)
+            .and_then(|()| WorkerNode::build(&init, artifacts_dir))
             .with_context(|| format!("worker {worker_id}: building node state")),
         Some((f, _)) => bail!("expected Init, got {f:?}"),
         None => bail!("leader disconnected before Init"),
@@ -267,21 +288,42 @@ pub fn serve_connection(mut stream: TcpStream, artifacts_dir: &Path) -> Result<u
     }
 }
 
+/// Mixed-mode bring-up guard: a worker pinned to one math mode refuses
+/// an `Init` negotiated for the other.
+fn check_pinned_mode(pinned: Option<MathMode>, negotiated: MathMode) -> Result<()> {
+    if let Some(pin) = pinned {
+        ensure!(
+            pin == negotiated,
+            "worker is pinned to math mode {pin} but the leader negotiated {negotiated}; \
+             mixed-mode clusters are rejected at bring-up"
+        );
+    }
+    Ok(())
+}
+
 /// Dial a listening leader and serve it (the `worker --connect` mode
 /// used by spawned cluster processes).
-pub fn run_worker_connect(addr: &str, artifacts_dir: &Path) -> Result<u64> {
+pub fn run_worker_connect(
+    addr: &str,
+    artifacts_dir: &Path,
+    pinned_mode: Option<MathMode>,
+) -> Result<u64> {
     let stream =
         TcpStream::connect(addr).with_context(|| format!("connecting to leader at {addr}"))?;
-    serve_connection(stream, artifacts_dir)
+    serve_connection(stream, artifacts_dir, pinned_mode)
 }
 
 /// Bind `addr`, print the bound address, and serve the first leader
 /// that dials in (the `worker --listen` mode).
-pub fn run_worker_listen(addr: &str, artifacts_dir: &Path) -> Result<u64> {
+pub fn run_worker_listen(
+    addr: &str,
+    artifacts_dir: &Path,
+    pinned_mode: Option<MathMode>,
+) -> Result<u64> {
     let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
     let local = listener.local_addr()?;
     println!("gparml worker listening on {local}");
     let (stream, peer) = listener.accept().context("accepting leader")?;
     eprintln!("[gparml-worker] leader connected from {peer}");
-    serve_connection(stream, artifacts_dir)
+    serve_connection(stream, artifacts_dir, pinned_mode)
 }

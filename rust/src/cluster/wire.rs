@@ -20,8 +20,9 @@
 //! `tests/cluster.rs`).
 //!
 //! Control frames: `Hello`/`HelloAck` (handshake + id assignment),
-//! `Init` (shapes, model flags, psi-cache mode and the worker's data
-//! shard), `Ping`/`Pong` (heartbeat), `Shutdown`. Data frames:
+//! `Init` (shapes, model flags, psi-cache mode, the cluster's math
+//! mode and the worker's data shard), `Ping`/`Pong` (heartbeat),
+//! `Shutdown`. Data frames:
 //! `Request` (a map-round broadcast: global parameters or adjoints,
 //! tagged with the evaluation's parameter version — constant-size
 //! messages, the paper's requirement 2/3) and `Response` (partial
@@ -38,7 +39,7 @@ use std::io::{Read, Write};
 use anyhow::{bail, ensure, Context, Result};
 
 use crate::gp::params::{GlobalGrads, GlobalParams};
-use crate::gp::{Adjoints, Stats};
+use crate::gp::{Adjoints, MathMode, Stats};
 use crate::linalg::Matrix;
 use crate::runtime::{ArtifactConfig, ShardData};
 
@@ -51,7 +52,11 @@ pub const MAGIC: [u8; 4] = *b"GPMR";
 /// workers' psi-scratch reuse across the two rounds of one
 /// evaluation), `Response` frames carry a u32 psi-recompute count
 /// (telemetry), and `Init` carries the `psi_cache` enable flag.
-pub const VERSION: u16 = 2;
+/// v3 — `Init` carries the cluster-wide `math_mode` execution policy
+/// (u8: 0 strict, 1 fast); a worker pinned to the other mode rejects
+/// the `Init`, so mixed-mode clusters fail at bring-up instead of
+/// reducing numerically incomparable partial terms.
+pub const VERSION: u16 = 3;
 /// Upper bound on a single frame payload (defends the decoder against
 /// garbage length prefixes).
 pub const MAX_PAYLOAD: usize = 1 << 30;
@@ -121,6 +126,10 @@ pub struct Init {
     /// evaluation (false forces a fresh recompute every round — the
     /// trace-equality reference mode).
     pub psi_cache: bool,
+    /// Execution policy every node of this cluster must run: partial
+    /// statistics computed under different modes are not numerically
+    /// comparable, so the mode is negotiated once at bring-up (v3).
+    pub math_mode: MathMode,
     pub shard: ShardData,
 }
 
@@ -577,6 +586,7 @@ impl Frame {
                 e.f64(init.local_lr);
                 e.f64(init.min_xvar);
                 e.bool(init.psi_cache);
+                e.u8(init.math_mode.code());
                 e.shard(&init.shard);
             }
             Frame::Request(r) => r.encode(e),
@@ -604,6 +614,13 @@ impl Frame {
                 local_lr: d.f64()?,
                 min_xvar: d.f64()?,
                 psi_cache: d.bool()?,
+                math_mode: {
+                    let code = d.u8()?;
+                    match MathMode::from_code(code) {
+                        Some(m) => m,
+                        None => bail!("unknown math mode code {code} in Init frame"),
+                    }
+                },
                 shard: d.shard()?,
             })),
             4 => Frame::Request(Box::new(Request::decode(d)?)),
@@ -905,6 +922,7 @@ mod tests {
             local_lr: 0.05,
             min_xvar: 1e-6,
             psi_cache: false,
+            math_mode: MathMode::Strict,
             shard: ShardData {
                 xmu: rand_mat(&mut rng, 4, 2),
                 xvar: rand_mat(&mut rng, 4, 2),
@@ -918,6 +936,7 @@ mod tests {
                 assert_eq!(i2.artifact.entries, art.entries);
                 assert!(i2.lvm);
                 assert!(!i2.psi_cache, "psi_cache flag must round-trip");
+                assert_eq!(i2.math_mode, MathMode::Strict);
                 assert_eq!(i2.shard.len(), 4);
             }
             f => panic!("wrong frame {f:?}"),
@@ -932,6 +951,71 @@ mod tests {
             let back = roundtrip(&f);
             assert_eq!(back.kind(), f.kind());
         }
+    }
+
+    /// Wire v3: random `Init` frames round-trip the `math_mode` field
+    /// exactly, unknown mode codes fail decoding, and a v3 `Init` is
+    /// rejected by a peer speaking any other wire version.
+    #[test]
+    fn prop_init_math_mode_roundtrip_and_version_rejection() {
+        testing::check("wire v3 Init.math_mode", 30, |rng| {
+            let q = testing::dim(rng, 1, 4);
+            let b = testing::dim(rng, 0, 12);
+            let mode = if rng.flip(0.5) {
+                MathMode::Fast
+            } else {
+                MathMode::Strict
+            };
+            let init = Init {
+                artifact: ArtifactConfig {
+                    name: "prop".into(),
+                    m: testing::dim(rng, 1, 8),
+                    q,
+                    d: testing::dim(rng, 1, 5),
+                    cap: 32,
+                    block_n: 8,
+                    entries: std::collections::BTreeMap::new(),
+                },
+                lvm: rng.flip(0.5),
+                local_lr: rng.uniform(),
+                min_xvar: 1e-6,
+                psi_cache: rng.flip(0.5),
+                math_mode: mode,
+                shard: ShardData {
+                    xmu: rand_mat(rng, b, q),
+                    xvar: rand_mat(rng, b, q),
+                    y: rand_mat(rng, b, 2),
+                    kl_weight: rng.uniform(),
+                },
+            };
+            let psi_cache = init.psi_cache;
+            let bytes = encode_frame(&Frame::Init(Box::new(init))).unwrap();
+            match decode_frame(&bytes) {
+                Ok((Frame::Init(i2), _)) => {
+                    if i2.math_mode != mode {
+                        return Err(format!("math_mode {} != {}", i2.math_mode, mode));
+                    }
+                    if i2.psi_cache != psi_cache {
+                        return Err("psi_cache flag corrupted".into());
+                    }
+                }
+                other => return Err(format!("bad decode: {other:?}")),
+            }
+            // any other wire version must be rejected before payload
+            // decoding (a v2 peer cannot parse the math_mode byte)
+            let mut old = bytes.clone();
+            let bad_version = (VERSION - 1).to_le_bytes();
+            old[4] = bad_version[0];
+            old[5] = bad_version[1];
+            let msg = format!("{:#}", decode_frame(&old).unwrap_err());
+            if !msg.contains("version") {
+                return Err(format!("unhelpful version error: {msg}"));
+            }
+            Ok(())
+        });
+        // unknown math-mode codes are a decode error, not a default
+        assert!(MathMode::from_code(2).is_none());
+        assert!(MathMode::from_code(255).is_none());
     }
 
     #[test]

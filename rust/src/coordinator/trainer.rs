@@ -10,7 +10,7 @@ use anyhow::{anyhow, bail, ensure, Result};
 use crate::cluster::wire::{self, Request, Response};
 use crate::cluster::{Backend, PoolBackend, WorkerReply};
 use crate::gp::params::{GlobalGrads, GlobalParams};
-use crate::gp::{self, kernel, Stats};
+use crate::gp::{self, kernel, MathMode, Stats};
 use crate::linalg::Matrix;
 use crate::optim::{Adam, Scg};
 use crate::runtime::{ArtifactConfig, Manifest, ShardData};
@@ -66,6 +66,12 @@ pub struct TrainConfig {
     /// `false` forces a fresh recompute every round — bit-identical
     /// traces either way (tested), only slower.
     pub psi_cache: bool,
+    /// Numerical execution policy for the whole cluster: `Strict`
+    /// (default) keeps traces bit-for-bit with the reference, `Fast`
+    /// runs the reciprocal/batched-exp kernels (within 1e-9 relative of
+    /// Strict, DESIGN.md §8). Carried to every worker in the wire v3
+    /// `Init`; requires `psi_cache` (validated at bring-up).
+    pub math_mode: MathMode,
     pub seed: u64,
 }
 
@@ -83,6 +89,7 @@ impl Default for TrainConfig {
             min_xvar: 1e-6,
             heartbeat_secs: 5.0,
             psi_cache: true,
+            math_mode: MathMode::Strict,
             seed: 0,
         }
     }
@@ -103,6 +110,7 @@ pub fn make_inits(
             local_lr: cfg.local_lr,
             min_xvar: cfg.min_xvar,
             psi_cache: cfg.psi_cache,
+            math_mode: cfg.math_mode,
             shard,
         })
         .collect()
@@ -221,8 +229,16 @@ fn build_with<B: Backend>(
 
 /// Load the artifact configuration named by `cfg` and validate the
 /// global parameter shapes against it — the single validation site
-/// shared by every trainer constructor.
+/// shared by every trainer constructor. Also rejects the one invalid
+/// config combination: fast math without the psi cache (the
+/// forced-fresh path is the strict reference and has no fast variant).
 fn load_checked_artifact(cfg: &TrainConfig, params: &GlobalParams) -> Result<ArtifactConfig> {
+    ensure!(
+        cfg.psi_cache || cfg.math_mode == MathMode::Strict,
+        "math mode {} requires psi_cache (psi_cache=false selects the strict \
+         forced-fresh reference)",
+        cfg.math_mode
+    );
     let manifest = Manifest::load(&cfg.artifacts_dir)?;
     let art = manifest.config(&cfg.artifact)?;
     ensure!(
@@ -391,6 +407,7 @@ impl<B: Backend> Trainer<B> {
             bytes_tx: tx,
             bytes_rx: rx,
             psi_recomputes: psi,
+            math_mode: self.cfg.math_mode,
         });
     }
 

@@ -2,11 +2,11 @@
 
 use std::path::PathBuf;
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use crate::coordinator::{partition, GlobalOpt, ModelKind, TrainConfig, Trainer};
 use crate::data::{kmeans, pca};
-use crate::gp::GlobalParams;
+use crate::gp::{GlobalParams, MathMode};
 use crate::linalg::Matrix;
 use crate::runtime::Manifest;
 use crate::util::cli::Args;
@@ -25,6 +25,22 @@ pub fn artifacts_dir(args: &Args) -> PathBuf {
 
 pub fn manifest(args: &Args) -> Result<Manifest> {
     Manifest::load(&artifacts_dir(args))
+}
+
+/// `--math-mode strict|fast`, when given (the single parse site for
+/// the flag: the worker daemon distinguishes "absent" from "pinned").
+pub fn math_mode_opt(args: &Args) -> Result<Option<MathMode>> {
+    match args.get("math-mode") {
+        None => Ok(None),
+        Some(s) => MathMode::parse(s)
+            .map(Some)
+            .ok_or_else(|| anyhow!("--math-mode expects strict|fast, got {s:?}")),
+    }
+}
+
+/// `--math-mode strict|fast` (default strict — the bit-for-bit policy).
+pub fn math_mode(args: &Args) -> Result<MathMode> {
+    Ok(math_mode_opt(args)?.unwrap_or_default())
 }
 
 /// Standard GPLVM initialisation (paper §4.1): PCA-whitened latents,
@@ -71,6 +87,7 @@ pub fn lvm_trainer(
         workers,
         model: ModelKind::Lvm,
         global_opt: GlobalOpt::Scg,
+        math_mode: math_mode(args)?,
         seed,
         ..Default::default()
     };

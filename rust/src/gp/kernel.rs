@@ -21,11 +21,83 @@
 //! reference mode (`TrainConfig::psi_cache = false`), the "before"
 //! series in `gparml bench psi`, and the entry the native baselines
 //! (sequential / SVI / exact GP) and the Fig-8 experiment use.
+//!
+//! Every entry point above implements the **Strict** half of the
+//! [`MathMode`] execution policy. The **Fast** half
+//! ([`shard_stats_into_fast`] / [`shard_grads_vjp_cached_fast`]) is
+//! exempt from the bit-for-bit contract: it hoists the per-point
+//! denominators into precomputed reciprocals (multiply instead of
+//! divide in the O(b m^2 q) loops), batches the per-(j,l,k) exponents
+//! row-wise and runs one `linalg::fastmath` exp pass per block. Fast
+//! results stay within 1e-9 relative of Strict on the bound and every
+//! gradient (property- and finite-difference-tested; contract in
+//! DESIGN.md §8). Shards whose Psi2 slab exceeds the
+//! [`DEFAULT_SLAB_LIMIT`] gate are **streamed in tiles** in both modes:
+//! round 2 refills the slab block-by-block instead of point-by-point.
 
-use crate::linalg::Matrix;
+use crate::linalg::{fastmath, Matrix};
 
 use super::params::GlobalParams;
 use super::stats::Stats;
+
+/// Numerical execution policy for the psi hot path, threaded from the
+/// CLI through `TrainConfig`, the wire `Init` frame (v3) and the
+/// executors down to the kernel loops.
+///
+/// * `Strict` (default): bit-for-bit reproducible against the seed
+///   trace — every optimisation keeps the historical operation order
+///   and rounding. The cluster trace-equality tests pin this mode.
+/// * `Fast`: licensed to re-associate — reciprocal multiplies, batched
+///   exponent blocks, `fastmath::exp`. Bound and gradients stay within
+///   1e-9 relative of Strict (tested); traces are deterministic but
+///   not bit-comparable across modes. Requires the psi cache.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum MathMode {
+    #[default]
+    Strict,
+    Fast,
+}
+
+impl MathMode {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            MathMode::Strict => "strict",
+            MathMode::Fast => "fast",
+        }
+    }
+
+    /// Parse a CLI spelling (`strict` / `fast`).
+    pub fn parse(s: &str) -> Option<MathMode> {
+        match s {
+            "strict" => Some(MathMode::Strict),
+            "fast" => Some(MathMode::Fast),
+            _ => None,
+        }
+    }
+
+    /// Wire encoding (`Init.math_mode`, protocol v3).
+    pub fn code(self) -> u8 {
+        match self {
+            MathMode::Strict => 0,
+            MathMode::Fast => 1,
+        }
+    }
+
+    /// Decode the wire byte; unknown codes are a protocol error.
+    pub fn from_code(c: u8) -> Option<MathMode> {
+        match c {
+            0 => Some(MathMode::Strict),
+            1 => Some(MathMode::Fast),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for MathMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
 
 /// k(X1, X2) for the SE-ARD kernel, [n1 x n2].
 pub fn seard(x1: &Matrix, x2: &Matrix, p: &GlobalParams) -> Matrix {
@@ -147,7 +219,6 @@ pub fn psi2_point(p: &GlobalParams, xmu_i: &[f64], xvar_i: &[f64]) -> Matrix {
 /// `zbar[(j,l,k)] = (z_j + z_l)/2`). Each table entry is computed by
 /// the exact expression [`psi2_point`] evaluates inline, so the block
 /// is bit-identical to the untabled fill.
-#[allow(clippy::too_many_arguments)]
 fn psi2_row_fill_tabled(
     m: usize,
     q: usize,
@@ -172,11 +243,74 @@ fn psi2_row_fill_tabled(
     }
 }
 
+/// Fast-path Psi1 fill: same math as [`psi1_fill`], but the per-point
+/// denominators are hoisted into reciprocals (one division per (i,k)
+/// instead of per (i,j,k)), each point's exponents are written
+/// row-wise, and one batched [`fastmath`] exp pass finishes the row.
+/// `MathMode::Fast` only — rounding differs from the strict fill.
+fn psi1_fill_fast(
+    p: &GlobalParams,
+    xmu: &Matrix,
+    xvar: &Matrix,
+    ls2: &[f64],
+    sf2: f64,
+    inv_dn: &mut [f64],
+    out: &mut Matrix,
+) {
+    let (b, q, m) = (xmu.rows(), p.q(), p.m());
+    out.reset(b, m, 0.0);
+    for i in 0..b {
+        let mut log_scale = 0.0;
+        for k in 0..q {
+            log_scale -= 0.5 * (xvar[(i, k)] / ls2[k]).ln_1p();
+            inv_dn[k] = 1.0 / (ls2[k] + xvar[(i, k)]);
+        }
+        let row = out.row_mut(i);
+        for (j, o) in row.iter_mut().enumerate() {
+            let mut quad = 0.0;
+            for k in 0..q {
+                let d = xmu[(i, k)] - p.z[(j, k)];
+                quad += d * d * inv_dn[k];
+            }
+            *o = log_scale - 0.5 * quad;
+        }
+        fastmath::exp_scale_in_place(row, sf2);
+    }
+}
+
+/// Fast-path variant of [`psi2_row_fill_tabled`]: reciprocal
+/// denominators (`inv_dn2[k] = 1 / (ls2_k + 2 s_ik)`), exponents
+/// accumulated into `out` first, then one batched exp pass over the
+/// whole m*m block. `MathMode::Fast` only.
+fn psi2_row_fill_fast(
+    q: usize,
+    zq: &[f64],
+    zbar: &[f64],
+    sf2: f64,
+    xmu_i: &[f64],
+    log_scale: f64,
+    inv_dn2: &[f64],
+    out: &mut [f64],
+) {
+    let mut t = 0;
+    for o in out.iter_mut() {
+        let mut e = log_scale;
+        for k in 0..q {
+            let dm = xmu_i[k] - zbar[t + k];
+            e -= zq[t + k] + dm * dm * inv_dn2[k];
+        }
+        *o = e;
+        t += q;
+    }
+    fastmath::exp_scale_in_place(out, sf2 * sf2);
+}
+
 /// Default cap on the cached per-point Psi2 slab, in `b * m * m` f64
-/// entries (8 MiB-entries = 64 MiB). Above it the slab is gated off and
-/// the gradient round recomputes Psi2 per point into a reusable
-/// one-point workspace (still allocation-free, still reusing Psi1 and
-/// the per-point log-scales).
+/// entries (8 MiB-entries = 64 MiB). Above it the slab holds one
+/// **tile** of points at a time and the gradient round streams the
+/// shard tile-by-tile (refilling the slab block-wise instead of
+/// falling back to a per-point workspace) — still allocation-free,
+/// still reusing Psi1 and the per-point log-scales.
 pub const DEFAULT_SLAB_LIMIT: usize = 1 << 23;
 
 /// Reusable per-shard workspace for one bound/gradient evaluation.
@@ -199,11 +333,16 @@ pub struct ShardScratch {
     psi1: Matrix,
     /// per-point Psi2 log-scale, length b
     psi2_log_scale: Vec<f64>,
-    /// per-point Psi2 slab [b * m * m], kept only within `slab_limit`
+    /// per-point Psi2 slab: every point's block [b * m * m] when the
+    /// shard fits within `slab_limit`, otherwise one streamed tile of
+    /// `tile_rows` blocks refilled block-by-block by round 2
     psi2: Vec<f64>,
     /// whether `psi2` holds every point's block
     psi2_cached: bool,
-    /// one-point Psi2 workspace (m * m) for the slab-less path
+    /// blocks `psi2` holds at once when streaming (== b when cached)
+    tile_rows: usize,
+    /// one-point Psi2 workspace (m * m) for the statistics round's
+    /// accumulate-without-caching path
     psi2_row: Vec<f64>,
     /// Psi1-adjoint workspace `Y (dF/dC)^T` [b x m] (gradient round)
     a1: Matrix,
@@ -225,6 +364,10 @@ pub struct ShardScratch {
     inv_dn2: Vec<f64>,
     xv2: Vec<f64>,
     dn2sq: Vec<f64>,
+    /// Fast-mode reciprocal hoists 1/dn, 1/dn^2, 1/dn2^2, length q each
+    inv_dn: Vec<f64>,
+    inv_dnsq: Vec<f64>,
+    inv_dn2sq: Vec<f64>,
     /// shapes the scratch is currently sized for
     b: usize,
     m: usize,
@@ -248,8 +391,10 @@ impl ShardScratch {
         ShardScratch::with_slab_limit(DEFAULT_SLAB_LIMIT)
     }
 
-    /// `slab_limit = 0` disables the Psi2 slab entirely (the gradient
-    /// round then recomputes Psi2 per point — the forced-fresh mode).
+    /// `slab_limit` caps the cached Psi2 slab in `b * m * m` entries.
+    /// A shard over the cap is **streamed**: round 2 refills the slab
+    /// one `tile_rows`-block tile at a time (`slab_limit = 0` degrades
+    /// to single-point tiles — the minimal-memory mode).
     pub fn with_slab_limit(slab_limit: usize) -> ShardScratch {
         ShardScratch {
             ls2: Vec::new(),
@@ -258,6 +403,7 @@ impl ShardScratch {
             psi2_log_scale: Vec::new(),
             psi2: Vec::new(),
             psi2_cached: false,
+            tile_rows: 0,
             psi2_row: Vec::new(),
             a1: Matrix::zeros(0, 0),
             dn: Vec::new(),
@@ -270,6 +416,9 @@ impl ShardScratch {
             inv_dn2: Vec::new(),
             xv2: Vec::new(),
             dn2sq: Vec::new(),
+            inv_dn: Vec::new(),
+            inv_dnsq: Vec::new(),
+            inv_dn2sq: Vec::new(),
             b: 0,
             m: 0,
             q: 0,
@@ -313,16 +462,19 @@ impl ShardScratch {
         self.sf2 = p.sf2();
         self.psi2_log_scale.clear();
         self.psi2_log_scale.resize(b, 0.0);
-        self.psi2_cached = b * m * m <= self.slab_limit;
-        if self.psi2_cached {
-            self.psi2.clear();
-            self.psi2.resize(b * m * m, 0.0);
+        let mm = m * m;
+        self.psi2_cached = b * mm <= self.slab_limit;
+        self.tile_rows = if self.psi2_cached {
+            b
         } else {
-            self.psi2.clear();
-            self.psi2.shrink_to_fit();
-        }
+            // streaming: as many whole blocks as the limit allows, at
+            // least one (b >= 1 here, else the shard would be cached)
+            (self.slab_limit / mm).max(1).min(b)
+        };
+        self.psi2.clear();
+        self.psi2.resize(self.tile_rows * mm, 0.0);
         self.psi2_row.clear();
-        self.psi2_row.resize(m * m, 0.0);
+        self.psi2_row.resize(mm, 0.0);
         self.dn.clear();
         self.dn.resize(q, 0.0);
         self.dn2.clear();
@@ -359,6 +511,12 @@ impl ShardScratch {
         self.xv2.resize(q, 0.0);
         self.dn2sq.clear();
         self.dn2sq.resize(q, 0.0);
+        self.inv_dn.clear();
+        self.inv_dn.resize(q, 0.0);
+        self.inv_dnsq.clear();
+        self.inv_dnsq.resize(q, 0.0);
+        self.inv_dn2sq.clear();
+        self.inv_dn2sq.resize(q, 0.0);
         self.filled = false;
     }
 
@@ -387,6 +545,37 @@ impl ShardScratch {
                     xmu.row(i),
                     self.psi2_log_scale[i],
                     &self.dn2,
+                    row,
+                );
+            }
+        }
+        self.filled = true;
+    }
+
+    /// Fast-mode counterpart of [`ShardScratch::fill`]: same structure,
+    /// fast fill kernels. Values match what [`shard_stats_into_fast`]
+    /// fills (both funnel through the same fast helpers).
+    fn fill_fast(&mut self, p: &GlobalParams, xmu: &Matrix, xvar: &Matrix) {
+        let b = xmu.rows();
+        self.prepare(p, b);
+        psi1_fill_fast(p, xmu, xvar, &self.ls2, self.sf2, &mut self.inv_dn, &mut self.psi1);
+        let mm = self.m * self.m;
+        for i in 0..b {
+            self.psi2_log_scale[i] = psi2_point_log_scale(&self.ls2, xvar.row(i));
+            if self.psi2_cached {
+                for k in 0..self.q {
+                    self.inv_dn2[k] = 1.0 / (self.ls2[k] + 2.0 * xvar[(i, k)]);
+                }
+                let log_scale = self.psi2_log_scale[i];
+                let row = &mut self.psi2[i * mm..(i + 1) * mm];
+                psi2_row_fill_fast(
+                    self.q,
+                    &self.zq,
+                    &self.zbar,
+                    self.sf2,
+                    xmu.row(i),
+                    log_scale,
+                    &self.inv_dn2,
                     row,
                 );
             }
@@ -457,6 +646,97 @@ pub fn shard_stats_into(
                 xmu.row(i),
                 scratch.psi2_log_scale[i],
                 &scratch.dn2,
+                row,
+            );
+            for (dv, &v) in st.d.data_mut().iter_mut().zip(row.iter()) {
+                *dv += w * v;
+            }
+        }
+        if kl_weight > 0.0 {
+            let mut kli = 0.0;
+            for k in 0..q {
+                let (mu, s) = (xmu[(i, k)], xvar[(i, k)]);
+                let log_s = if s > 0.0 { s.ln() } else { 0.0 };
+                kli += mu * mu + s - log_s - 1.0;
+            }
+            st.kl += kl_weight * w * 0.5 * kli;
+        }
+    }
+    st.psi0 = scratch.sf2 * st.n;
+    scratch.filled = complete;
+    scratch.fills += 1;
+    st
+}
+
+/// `MathMode::Fast` variant of [`shard_stats_into`]: identical
+/// structure and caching/masking semantics, but the psi blocks are
+/// produced by the fast fill kernels — reciprocal denominators, batched
+/// row-wise exponents, one [`fastmath`] exp pass per block. Statistics
+/// agree with the Strict path to 1e-9 relative (property-tested), not
+/// bit-for-bit. A scratch filled here must be consumed by
+/// [`shard_grads_vjp_cached_fast`] (the executor fixes the mode, so
+/// modes can never mix within one scratch).
+pub fn shard_stats_into_fast(
+    p: &GlobalParams,
+    xmu: &Matrix,
+    xvar: &Matrix,
+    y: &Matrix,
+    mask: &[f64],
+    kl_weight: f64,
+    scratch: &mut ShardScratch,
+) -> Stats {
+    let b = xmu.rows();
+    assert_eq!(mask.len(), b);
+    let (m, q) = (p.m(), p.q());
+    scratch.prepare(p, b);
+    let mut st = Stats::zeros(m, y.cols());
+    psi1_fill_fast(
+        p,
+        xmu,
+        xvar,
+        &scratch.ls2,
+        scratch.sf2,
+        &mut scratch.inv_dn,
+        &mut scratch.psi1,
+    );
+    let mm = m * m;
+    let mut complete = true;
+    for i in 0..b {
+        let w = mask[i];
+        if w == 0.0 {
+            complete = false;
+            continue;
+        }
+        st.n += w;
+        let yi = y.row(i);
+        st.a += w * yi.iter().map(|v| v * v).sum::<f64>();
+        // C += w * psi1_i^T y_i
+        for j in 0..m {
+            let pj = w * scratch.psi1[(i, j)];
+            for (cjd, &yv) in st.c.row_mut(j).iter_mut().zip(yi) {
+                *cjd += pj * yv;
+            }
+        }
+        // D += w * Psi2_i, straight out of the slab row (or the
+        // one-point workspace when the shard streams)
+        scratch.psi2_log_scale[i] = psi2_point_log_scale(&scratch.ls2, xvar.row(i));
+        for k in 0..q {
+            scratch.inv_dn2[k] = 1.0 / (scratch.ls2[k] + 2.0 * xvar[(i, k)]);
+        }
+        {
+            let row: &mut [f64] = if scratch.psi2_cached {
+                &mut scratch.psi2[i * mm..(i + 1) * mm]
+            } else {
+                &mut scratch.psi2_row
+            };
+            psi2_row_fill_fast(
+                q,
+                &scratch.zq,
+                &scratch.zbar,
+                scratch.sf2,
+                xmu.row(i),
+                scratch.psi2_log_scale[i],
+                &scratch.inv_dn2,
                 row,
             );
             for (dv, &v) in st.d.data_mut().iter_mut().zip(row.iter()) {
@@ -630,57 +910,216 @@ pub fn shard_grads_vjp_cached(
     // ---- Psi2 path: dF/dPsi2_i[j,l] = dF/dD[j,l] --------------------------
     // The (j,l,k) terms come from the scratch tables; per-point terms are
     // hoisted out of the m^2 loop. Every substitution reproduces the
-    // historical expression exactly (same grouping, same rounding).
+    // historical expression exactly (same grouping, same rounding). A
+    // shard too large for the slab is STREAMED: refill a tile of
+    // `tile_rows` points' blocks, consume them, move to the next tile —
+    // per-point fill expressions and accumulation order are unchanged,
+    // so the result is bit-identical to the fully-cached path.
     let mm = m * m;
-    for i in 0..b {
-        for k in 0..q {
-            scratch.dn2[k] = scratch.ls2[k] + 2.0 * xvar[(i, k)];
-            scratch.inv_dn2[k] = 1.0 / scratch.dn2[k];
-            scratch.xv2[k] = 2.0 * xvar[(i, k)] / scratch.dn2[k];
-            scratch.dn2sq[k] = scratch.dn2[k] * scratch.dn2[k];
-        }
-        let p2: &[f64] = if scratch.psi2_cached {
-            &scratch.psi2[i * mm..(i + 1) * mm]
+    let mut lo = 0;
+    while lo < b {
+        let hi = if scratch.psi2_cached {
+            b
         } else {
-            psi2_row_fill_tabled(
-                m,
-                q,
-                &scratch.zq,
-                &scratch.zbar,
-                scratch.sf2,
-                xmu.row(i),
-                scratch.psi2_log_scale[i],
-                &scratch.dn2,
-                &mut scratch.psi2_row,
-            );
-            &scratch.psi2_row
+            (lo + scratch.tile_rows).min(b)
         };
-        let mut ti = 0;
-        for j in 0..m {
-            for l in 0..m {
-                let w = adj.d_d[(j, l)] * p2[j * m + l];
-                if w == 0.0 {
-                    ti += q;
-                    continue;
-                }
-                g.d_log_sf2 += 2.0 * w;
+        if !scratch.psi2_cached {
+            for i in lo..hi {
                 for k in 0..q {
-                    let dn2 = scratch.dn2[k];
-                    let dm = xmu[(i, k)] - scratch.zbar[ti + k];
-                    let zd = scratch.zd[ti + k];
-                    let md = dm / dn2;
-                    g.d_z[(j, k)] += w * (-zd + md);
-                    g.d_z[(l, k)] += w * (zd + md);
-                    d_xmu[(i, k)] -= w * 2.0 * dm / dn2;
-                    d_xvar[(i, k)] += w * (2.0 * dm * dm / scratch.dn2sq[k] - scratch.inv_dn2[k]);
-                    g.d_log_ls[k] += w
-                        * (scratch.xv2[k]
-                            + scratch.zdd[ti + k]
-                            + scratch.tl2[k] * dm * dm / scratch.dn2sq[k]);
+                    scratch.dn2[k] = scratch.ls2[k] + 2.0 * xvar[(i, k)];
                 }
-                ti += q;
+                let row = &mut scratch.psi2[(i - lo) * mm..(i - lo + 1) * mm];
+                psi2_row_fill_tabled(
+                    m,
+                    q,
+                    &scratch.zq,
+                    &scratch.zbar,
+                    scratch.sf2,
+                    xmu.row(i),
+                    scratch.psi2_log_scale[i],
+                    &scratch.dn2,
+                    row,
+                );
             }
         }
+        for i in lo..hi {
+            for k in 0..q {
+                scratch.dn2[k] = scratch.ls2[k] + 2.0 * xvar[(i, k)];
+                scratch.inv_dn2[k] = 1.0 / scratch.dn2[k];
+                scratch.xv2[k] = 2.0 * xvar[(i, k)] / scratch.dn2[k];
+                scratch.dn2sq[k] = scratch.dn2[k] * scratch.dn2[k];
+            }
+            let base = if scratch.psi2_cached { i } else { i - lo };
+            let p2 = &scratch.psi2[base * mm..(base + 1) * mm];
+            let mut ti = 0;
+            for j in 0..m {
+                for l in 0..m {
+                    let w = adj.d_d[(j, l)] * p2[j * m + l];
+                    if w == 0.0 {
+                        ti += q;
+                        continue;
+                    }
+                    g.d_log_sf2 += 2.0 * w;
+                    for k in 0..q {
+                        let dn2 = scratch.dn2[k];
+                        let dm = xmu[(i, k)] - scratch.zbar[ti + k];
+                        let zd = scratch.zd[ti + k];
+                        let md = dm / dn2;
+                        g.d_z[(j, k)] += w * (-zd + md);
+                        g.d_z[(l, k)] += w * (zd + md);
+                        d_xmu[(i, k)] -= w * 2.0 * dm / dn2;
+                        d_xvar[(i, k)] +=
+                            w * (2.0 * dm * dm / scratch.dn2sq[k] - scratch.inv_dn2[k]);
+                        g.d_log_ls[k] += w
+                            * (scratch.xv2[k]
+                                + scratch.zdd[ti + k]
+                                + scratch.tl2[k] * dm * dm / scratch.dn2sq[k]);
+                    }
+                    ti += q;
+                }
+            }
+        }
+        lo = hi;
+    }
+
+    // ---- psi0 = sf2 * n: only log sf2 sees it ----------------------------
+    g.d_log_sf2 += adj.d_psi0 * scratch.sf2 * b as f64;
+
+    // ---- KL path: kl = klw * 0.5 sum_{i,k} (mu^2 + s - ln s - 1) ---------
+    if kl_weight > 0.0 {
+        for i in 0..b {
+            for k in 0..q {
+                let s = xvar[(i, k)];
+                d_xmu[(i, k)] += adj.d_kl * kl_weight * xmu[(i, k)];
+                let ds = if s > 0.0 { 0.5 * (1.0 - 1.0 / s) } else { 0.5 };
+                d_xvar[(i, k)] += adj.d_kl * kl_weight * ds;
+            }
+        }
+    }
+
+    (g, d_xmu, d_xvar)
+}
+
+/// `MathMode::Fast` variant of [`shard_grads_vjp_cached`]: the same
+/// chain rules with every per-point division hoisted into a precomputed
+/// reciprocal (the strict loop divides by the denominators up to m^2
+/// times per point; this multiplies), shared squared terms factored
+/// once, and the streamed-tile Psi2 refills produced by the fast fill
+/// kernels. Gradients agree with the Strict path to 1e-9 relative and
+/// with finite differences of the bound (both tested).
+pub fn shard_grads_vjp_cached_fast(
+    p: &GlobalParams,
+    xmu: &Matrix,
+    xvar: &Matrix,
+    y: &Matrix,
+    kl_weight: f64,
+    adj: &super::bound::Adjoints,
+    scratch: &mut ShardScratch,
+) -> (super::params::GlobalGrads, Matrix, Matrix) {
+    let (b, q, m) = (xmu.rows(), p.q(), p.m());
+    let fresh = !scratch.is_filled_for(b, m, q);
+    if fresh {
+        scratch.fill_fast(p, xmu, xvar);
+    }
+    if fresh || !scratch.psi2_cached {
+        // this call performs a psi pass of its own (full refill, or the
+        // tile-streamed Psi2 recompute)
+        scratch.fills += 1;
+    }
+    let mut g = super::params::GlobalGrads::zeros(m, q);
+    let mut d_xmu = Matrix::zeros(b, q);
+    let mut d_xvar = Matrix::zeros(b, q);
+
+    // ---- Psi1 path: dF/dPsi1[i,j] = sum_d dF/dC[j,d] * Y[i,d] --------------
+    y.matmul_t_into(&adj.d_c, &mut scratch.a1);
+    for i in 0..b {
+        for k in 0..q {
+            let inv = 1.0 / (scratch.ls2[k] + xvar[(i, k)]);
+            scratch.inv_dn[k] = inv;
+            scratch.inv_dnsq[k] = inv * inv;
+        }
+        for j in 0..m {
+            let w = scratch.a1[(i, j)] * scratch.psi1[(i, j)];
+            if w == 0.0 {
+                continue;
+            }
+            g.d_log_sf2 += w;
+            for k in 0..q {
+                let inv = scratch.inv_dn[k];
+                let diff = xmu[(i, k)] - p.z[(j, k)];
+                let t = w * diff * inv;
+                g.d_z[(j, k)] += t;
+                d_xmu[(i, k)] -= t;
+                let d2 = diff * diff * scratch.inv_dnsq[k];
+                d_xvar[(i, k)] += w * 0.5 * (d2 - inv);
+                g.d_log_ls[k] += w * (xvar[(i, k)] * inv + scratch.ls2[k] * d2);
+            }
+        }
+    }
+
+    // ---- Psi2 path: dF/dPsi2_i[j,l] = dF/dD[j,l] --------------------------
+    let mm = m * m;
+    let mut lo = 0;
+    while lo < b {
+        let hi = if scratch.psi2_cached {
+            b
+        } else {
+            (lo + scratch.tile_rows).min(b)
+        };
+        if !scratch.psi2_cached {
+            for i in lo..hi {
+                for k in 0..q {
+                    scratch.inv_dn2[k] = 1.0 / (scratch.ls2[k] + 2.0 * xvar[(i, k)]);
+                }
+                let row = &mut scratch.psi2[(i - lo) * mm..(i - lo + 1) * mm];
+                psi2_row_fill_fast(
+                    q,
+                    &scratch.zq,
+                    &scratch.zbar,
+                    scratch.sf2,
+                    xmu.row(i),
+                    scratch.psi2_log_scale[i],
+                    &scratch.inv_dn2,
+                    row,
+                );
+            }
+        }
+        for i in lo..hi {
+            for k in 0..q {
+                let inv = 1.0 / (scratch.ls2[k] + 2.0 * xvar[(i, k)]);
+                scratch.inv_dn2[k] = inv;
+                scratch.inv_dn2sq[k] = inv * inv;
+                scratch.xv2[k] = 2.0 * xvar[(i, k)] * inv;
+            }
+            let base = if scratch.psi2_cached { i } else { i - lo };
+            let p2 = &scratch.psi2[base * mm..(base + 1) * mm];
+            let mut ti = 0;
+            for j in 0..m {
+                for l in 0..m {
+                    let w = adj.d_d[(j, l)] * p2[j * m + l];
+                    if w == 0.0 {
+                        ti += q;
+                        continue;
+                    }
+                    g.d_log_sf2 += 2.0 * w;
+                    for k in 0..q {
+                        let inv = scratch.inv_dn2[k];
+                        let dm = xmu[(i, k)] - scratch.zbar[ti + k];
+                        let zd = scratch.zd[ti + k];
+                        let md = dm * inv;
+                        g.d_z[(j, k)] += w * (-zd + md);
+                        g.d_z[(l, k)] += w * (zd + md);
+                        d_xmu[(i, k)] -= 2.0 * w * md;
+                        let r2 = dm * dm * scratch.inv_dn2sq[k];
+                        d_xvar[(i, k)] += w * (2.0 * r2 - inv);
+                        g.d_log_ls[k] +=
+                            w * (scratch.xv2[k] + scratch.zdd[ti + k] + scratch.tl2[k] * r2);
+                    }
+                    ti += q;
+                }
+            }
+        }
+        lo = hi;
     }
 
     // ---- psi0 = sf2 * n: only log sf2 sees it ----------------------------
@@ -1056,6 +1495,156 @@ mod tests {
                 assert_mat_bits_eq(&dmu, &dmu_ref, "dXmu");
                 assert_mat_bits_eq(&dvar, &dvar_ref, "dXvar");
             }
+        }
+    }
+
+    /// Streaming tiles (slab smaller than the shard) must reproduce the
+    /// fully-cached strict results bit-for-bit: the tiling layer only
+    /// re-blocks the per-point work, it never changes an expression.
+    #[test]
+    fn strict_tiled_streaming_matches_full_slab_bitwise() {
+        let (m, q, dout, b) = (5, 3, 2, 9);
+        let mm = m * m;
+        let mut rng = Rng::new(61);
+        let p = params(m, q, 60);
+        let xmu = Matrix::from_fn(b, q, |_, _| rng.normal());
+        let xvar = Matrix::from_fn(b, q, |_, _| 0.1 + rng.uniform());
+        let y = Matrix::from_fn(b, dout, |_, _| rng.normal());
+        let mask = vec![1.0; b];
+        let adj = random_adjoints(&mut rng, m, dout);
+
+        let st_ref = shard_stats(&p, &xmu, &xvar, &y, &mask, 1.0);
+        let (g_ref, dmu_ref, dvar_ref) = shard_grads_vjp(&p, &xmu, &xvar, &y, 1.0, &adj);
+
+        // tiles of 4, 2 and 1 points, plus the degenerate 0-limit
+        for limit in [4 * mm, 2 * mm + 3, mm, 0] {
+            let mut scratch = ShardScratch::with_slab_limit(limit);
+            let st = shard_stats_into(&p, &xmu, &xvar, &y, &mask, 1.0, &mut scratch);
+            assert!(!scratch.psi2_slab_cached(), "limit {limit} must stream");
+            assert_eq!(st.a.to_bits(), st_ref.a.to_bits());
+            assert_mat_bits_eq(&st.c, &st_ref.c, "C (tiled)");
+            assert_mat_bits_eq(&st.d, &st_ref.d, "D (tiled)");
+            let (g, dmu, dvar) =
+                shard_grads_vjp_cached(&p, &xmu, &xvar, &y, 1.0, &adj, &mut scratch);
+            assert_mat_bits_eq(&g.d_z, &g_ref.d_z, "dZ (tiled)");
+            assert_eq!(g.d_log_sf2.to_bits(), g_ref.d_log_sf2.to_bits());
+            for (a, b) in g.d_log_ls.iter().zip(&g_ref.d_log_ls) {
+                assert_eq!(a.to_bits(), b.to_bits(), "dlog_ls (tiled)");
+            }
+            assert_mat_bits_eq(&dmu, &dmu_ref, "dXmu (tiled)");
+            assert_mat_bits_eq(&dvar, &dvar_ref, "dXvar (tiled)");
+        }
+    }
+
+    /// Fast mode is deterministic: tiled streaming must reproduce the
+    /// fully-cached fast results bit-for-bit (within the mode).
+    #[test]
+    fn fast_tiled_streaming_matches_fast_full_slab_bitwise() {
+        let (m, q, dout, b) = (4, 2, 3, 11);
+        let mm = m * m;
+        let mut rng = Rng::new(71);
+        let p = params(m, q, 70);
+        let xmu = Matrix::from_fn(b, q, |_, _| rng.normal());
+        let xvar = Matrix::from_fn(b, q, |_, _| 0.1 + rng.uniform());
+        let y = Matrix::from_fn(b, dout, |_, _| rng.normal());
+        let mask = vec![1.0; b];
+        let adj = random_adjoints(&mut rng, m, dout);
+
+        let mut full = ShardScratch::new();
+        let st_ref = shard_stats_into_fast(&p, &xmu, &xvar, &y, &mask, 1.0, &mut full);
+        let (g_ref, dmu_ref, dvar_ref) =
+            shard_grads_vjp_cached_fast(&p, &xmu, &xvar, &y, 1.0, &adj, &mut full);
+
+        for limit in [3 * mm, mm, 0] {
+            let mut scratch = ShardScratch::with_slab_limit(limit);
+            let st = shard_stats_into_fast(&p, &xmu, &xvar, &y, &mask, 1.0, &mut scratch);
+            assert_eq!(st.a.to_bits(), st_ref.a.to_bits());
+            assert_mat_bits_eq(&st.c, &st_ref.c, "fast C (tiled)");
+            assert_mat_bits_eq(&st.d, &st_ref.d, "fast D (tiled)");
+            let (g, dmu, dvar) =
+                shard_grads_vjp_cached_fast(&p, &xmu, &xvar, &y, 1.0, &adj, &mut scratch);
+            assert_mat_bits_eq(&g.d_z, &g_ref.d_z, "fast dZ (tiled)");
+            assert_mat_bits_eq(&dmu, &dmu_ref, "fast dXmu (tiled)");
+            assert_mat_bits_eq(&dvar, &dvar_ref, "fast dXvar (tiled)");
+        }
+    }
+
+    /// The fast-mode analytic gradient must match finite differences of
+    /// the fast-mode bound — the same end-to-end composition the
+    /// distributed trainer runs under `--math-mode fast`.
+    #[test]
+    fn fast_grads_match_finite_difference_of_fast_bound() {
+        let (m, q, dout, b) = (4, 2, 2, 6);
+        let jitter = 1e-6;
+        let klw = 1.0;
+        let mut rng = Rng::new(87);
+        let p0 = params(m, q, 21);
+        let xmu0 = Matrix::from_fn(b, q, |_, _| rng.normal());
+        let xvar0 = Matrix::from_fn(b, q, |_, _| 0.2 + 0.5 * rng.uniform());
+        let y = Matrix::from_fn(b, dout, |_, _| rng.normal());
+        let mask = vec![1.0; b];
+
+        let f_of = |p: &GlobalParams, xmu: &Matrix, xvar: &Matrix| -> f64 {
+            let mut scratch = ShardScratch::new();
+            let st = shard_stats_into_fast(p, xmu, xvar, &y, &mask, klw, &mut scratch);
+            let kmm = kmm(p, jitter);
+            let (bv, _) = crate::gp::assemble_bound(&st, &kmm, p.log_beta, dout).unwrap();
+            bv.f
+        };
+
+        let mut scratch = ShardScratch::new();
+        let st = shard_stats_into_fast(&p0, &xmu0, &xvar0, &y, &mask, klw, &mut scratch);
+        let kmm0 = kmm(&p0, jitter);
+        let (_, adj) = crate::gp::assemble_bound(&st, &kmm0, p0.log_beta, dout).unwrap();
+        let (mut g, d_xmu, d_xvar) =
+            shard_grads_vjp_cached_fast(&p0, &xmu0, &xvar0, &y, klw, &adj, &mut scratch);
+        g.accumulate(&kmm_vjp(&p0, &adj.d_kmm));
+
+        let eps = 1e-6;
+        let check = |analytic: f64, fd: f64, what: &str| {
+            assert!(
+                (analytic - fd).abs() < 2e-5 * (1.0 + fd.abs()),
+                "{what}: analytic {analytic} vs fd {fd}"
+            );
+        };
+        for &(j, k) in &[(0, 0), (1, 1), (3, 0)] {
+            let mut pp = p0.clone();
+            pp.z[(j, k)] += eps;
+            let mut pm = p0.clone();
+            pm.z[(j, k)] -= eps;
+            let fd = (f_of(&pp, &xmu0, &xvar0) - f_of(&pm, &xmu0, &xvar0)) / (2.0 * eps);
+            check(g.d_z[(j, k)], fd, &format!("fast dZ[{j},{k}]"));
+        }
+        for k in 0..q {
+            let mut pp = p0.clone();
+            pp.log_ls[k] += eps;
+            let mut pm = p0.clone();
+            pm.log_ls[k] -= eps;
+            let fd = (f_of(&pp, &xmu0, &xvar0) - f_of(&pm, &xmu0, &xvar0)) / (2.0 * eps);
+            check(g.d_log_ls[k], fd, &format!("fast dlog_ls[{k}]"));
+        }
+        {
+            let mut pp = p0.clone();
+            pp.log_sf2 += eps;
+            let mut pm = p0.clone();
+            pm.log_sf2 -= eps;
+            let fd = (f_of(&pp, &xmu0, &xvar0) - f_of(&pm, &xmu0, &xvar0)) / (2.0 * eps);
+            check(g.d_log_sf2, fd, "fast dlog_sf2");
+        }
+        for &(i, k) in &[(0, 0), (2, 1), (5, 0)] {
+            let mut xp = xmu0.clone();
+            xp[(i, k)] += eps;
+            let mut xm = xmu0.clone();
+            xm[(i, k)] -= eps;
+            let fd = (f_of(&p0, &xp, &xvar0) - f_of(&p0, &xm, &xvar0)) / (2.0 * eps);
+            check(d_xmu[(i, k)], fd, &format!("fast dXmu[{i},{k}]"));
+
+            let mut vp = xvar0.clone();
+            vp[(i, k)] += eps;
+            let mut vm = xvar0.clone();
+            vm[(i, k)] -= eps;
+            let fd = (f_of(&p0, &xmu0, &vp) - f_of(&p0, &xmu0, &vm)) / (2.0 * eps);
+            check(d_xvar[(i, k)], fd, &format!("fast dXvar[{i},{k}]"));
         }
     }
 

@@ -15,5 +15,6 @@ pub mod params;
 pub mod stats;
 
 pub use bound::{assemble_bound, Adjoints, BoundValue, PosteriorWeights};
+pub use kernel::MathMode;
 pub use params::GlobalParams;
 pub use stats::Stats;

@@ -1,0 +1,112 @@
+//! Fast scalar math for the `MathMode::Fast` kernel paths.
+//!
+//! The psi-statistics hot loops are `exp`-bound: every Psi1 entry and
+//! every Psi2 entry ends in one exponential, O(n m^2) of them per
+//! evaluation. [`exp`] is a branch-light Cody–Waite / polynomial
+//! exponential that trades the libm special-case handling for
+//! throughput; [`exp_scale_in_place`] applies it over a whole slice of
+//! precomputed exponents (the Fast kernels batch the exponent
+//! computation row-wise, then run one exp pass over the block).
+//!
+//! Accuracy contract: relative error below [`MAX_REL_ERR`] against
+//! `f64::exp` on finite inputs in `[-708, 709]` (unit-tested). Inputs
+//! below -708 flush to `0.0` — the true value there is at the
+//! subnormal boundary (< 1e-307) and the psi accumulations the Fast
+//! mode feeds are insensitive to it at the 1e-9 relative tolerance the
+//! mode guarantees (DESIGN.md §8). **Never** called from a Strict-mode
+//! path: Strict pins `f64::exp`'s exact rounding bit-for-bit.
+
+/// Documented (and tested) relative-error bound of [`exp`] vs libm.
+pub const MAX_REL_ERR: f64 = 1e-13;
+
+// Cody–Waite split of ln 2 (fdlibm constants): n * LN2_HI is exact for
+// |n| <= 1024, so the reduced argument keeps ~full precision.
+const LOG2_E: f64 = std::f64::consts::LOG2_E;
+const LN2_HI: f64 = 6.931_471_803_691_238_164_90e-1;
+const LN2_LO: f64 = 1.908_214_929_270_587_700_02e-10;
+
+/// Fast `e^x` (see module docs for the accuracy/domain contract).
+#[inline]
+pub fn exp(x: f64) -> f64 {
+    if x < -708.0 {
+        return 0.0;
+    }
+    if x > 709.0 {
+        return f64::INFINITY;
+    }
+    // range reduction: x = n ln2 + r with |r| <= ln2 / 2
+    let n = (x * LOG2_E).round();
+    let r = (x - n * LN2_HI) - n * LN2_LO;
+    // degree-13 Taylor of e^r on |r| <= 0.3466: truncation error
+    // ~4e-18, well inside MAX_REL_ERR after Horner rounding
+    let mut p = 1.0 / 6_227_020_800.0; // 1/13!
+    p = p * r + 1.0 / 479_001_600.0; // 1/12!
+    p = p * r + 1.0 / 39_916_800.0;
+    p = p * r + 1.0 / 3_628_800.0;
+    p = p * r + 1.0 / 362_880.0;
+    p = p * r + 1.0 / 40_320.0;
+    p = p * r + 1.0 / 5_040.0;
+    p = p * r + 1.0 / 720.0;
+    p = p * r + 1.0 / 120.0;
+    p = p * r + 1.0 / 24.0;
+    p = p * r + 1.0 / 6.0;
+    p = p * r + 0.5;
+    p = p * r + 1.0;
+    p = p * r + 1.0;
+    // scale by 2^n through the exponent bits: the clamps above keep
+    // 1023 + n inside the normal-exponent range [2, 2046]
+    p * f64::from_bits(((1023 + n as i64) as u64) << 52)
+}
+
+/// `out[i] = scale * exp(out[i])` over a slice — the Fast kernels'
+/// batched exponent pass (Strict exps inline, entry by entry, to keep
+/// the historical operation order).
+#[inline]
+pub fn exp_scale_in_place(out: &mut [f64], scale: f64) {
+    for x in out.iter_mut() {
+        *x = scale * exp(*x);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rel_err(x: f64) -> f64 {
+        let reference = x.exp();
+        if reference == 0.0 {
+            return exp(x).abs();
+        }
+        ((exp(x) - reference) / reference).abs()
+    }
+
+    #[test]
+    fn matches_libm_within_bound() {
+        // the psi exponents are non-positive; sweep that range densely
+        // plus a positive band for the general contract
+        let mut rng = Rng::new(77);
+        for _ in 0..20_000 {
+            let x = -740.0 + 760.0 * rng.uniform();
+            if x < -708.0 {
+                assert_eq!(exp(x), 0.0, "x={x} must flush to zero");
+            } else {
+                assert!(rel_err(x) < MAX_REL_ERR, "x={x}: rel err {}", rel_err(x));
+            }
+        }
+        for x in [0.0, -0.0, 1.0, -1.0, 0.5 * std::f64::consts::LN_2, -708.0, 709.0] {
+            assert!(rel_err(x) < MAX_REL_ERR, "x={x}: rel err {}", rel_err(x));
+        }
+        assert_eq!(exp(f64::NEG_INFINITY), 0.0);
+        assert_eq!(exp(f64::INFINITY), f64::INFINITY);
+    }
+
+    #[test]
+    fn slice_pass_applies_scale() {
+        let mut v = vec![-1.0, 0.0, -30.0];
+        exp_scale_in_place(&mut v, 2.0);
+        for (out, x) in v.iter().zip([-1.0f64, 0.0, -30.0]) {
+            assert!(((out - 2.0 * x.exp()) / (2.0 * x.exp())).abs() < MAX_REL_ERR);
+        }
+    }
+}

@@ -7,6 +7,7 @@
 //! Pallas/HLO artifacts executed by the workers.
 
 mod chol;
+pub mod fastmath;
 mod matrix;
 
 pub use chol::Cholesky;

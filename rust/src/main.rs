@@ -4,9 +4,12 @@
 //! ```text
 //! gparml experiment <fig1..fig8|all> [--n N] [--iters I] [--workers W] ...
 //! gparml train [--data synthetic|oilflow|digits] [--model reg|lvm] ...
+//!              [--math-mode strict|fast]          # execution policy
 //!              [--connect HOST:PORT,HOST:PORT]   # drive TCP workers
 //! gparml worker (--listen ADDR | --connect LEADER) [--artifacts DIR]
+//!               [--math-mode strict|fast]         # pin; reject the other
 //! gparml bench psi [--config perf] [--reps R]    # writes BENCH_psi.json
+//! gparml bench check [--baseline F] [--current F] # CI regression gate
 //! gparml info                      # artifact manifest summary
 //! ```
 //!
@@ -48,30 +51,36 @@ fn main() -> Result<()> {
                  common flags: --n --iters --workers --seed --out DIR --artifacts DIR\n\
                  cluster: gparml worker --connect LEADER_ADDR (or --listen ADDR),\n\
                           gparml train --connect W1,W2,... (synthetic dataset)\n\
+                 math:    --math-mode strict|fast on train/bench/worker (DESIGN.md §8)\n\
                  bench:   gparml bench psi [--config perf] [--points B] [--reps R]\n\
-                          [--out BENCH_psi.json]"
+                          [--out BENCH_psi.json],\n\
+                          gparml bench check [--baseline F] [--current F] [--max-regress X]"
             );
             bail!("no command given")
         }
     }
 }
 
-/// Machine-readable hot-path benchmarks (`gparml bench psi`).
+/// Machine-readable hot-path benchmarks (`gparml bench psi`) and the
+/// CI regression gate over their JSON (`gparml bench check`).
 fn bench(args: &Args) -> Result<()> {
     match args.positional.get(1).map(|s| s.as_str()) {
         Some("psi") => gparml::runtime::psibench::run(args),
-        other => bail!("usage: gparml bench psi [flags] (got {other:?})"),
+        Some("check") => gparml::runtime::psibench::check(args),
+        other => bail!("usage: gparml bench <psi|check> [flags] (got {other:?})"),
     }
 }
 
-/// Run this process as a cluster worker node.
+/// Run this process as a cluster worker node. `--math-mode` pins the
+/// node: an `Init` negotiating the other mode is rejected at bring-up.
 fn worker(args: &Args) -> Result<()> {
     let artifacts = common::artifacts_dir(args);
+    let pinned = common::math_mode_opt(args)?;
     let served = if let Some(addr) = args.get("connect") {
-        gparml::cluster::node::run_worker_connect(addr, &artifacts)?
+        gparml::cluster::node::run_worker_connect(addr, &artifacts, pinned)?
     } else {
         let addr = args.get_str("listen", "127.0.0.1:0");
-        gparml::cluster::node::run_worker_listen(addr, &artifacts)?
+        gparml::cluster::node::run_worker_listen(addr, &artifacts, pinned)?
     };
     eprintln!("[gparml-worker] exiting after {served} requests");
     Ok(())
@@ -108,6 +117,7 @@ fn train(args: &Args) -> Result<()> {
     let dataset = args.get_str("data", "synthetic");
     let iters = args.get_usize("iters", 30)?;
     let seed = args.get_usize("seed", 0)? as u64;
+    let math_mode = common::math_mode(args)?;
     let addrs = connect_addrs(args);
     let workers = match &addrs {
         Some(a) => a.len(),
@@ -139,6 +149,7 @@ fn train(args: &Args) -> Result<()> {
                     workers,
                     model,
                     global_opt: GlobalOpt::Scg,
+                    math_mode,
                     seed,
                     ..Default::default()
                 };
@@ -166,6 +177,7 @@ fn train(args: &Args) -> Result<()> {
                     workers,
                     model,
                     global_opt: GlobalOpt::Scg,
+                    math_mode,
                     seed,
                     ..Default::default()
                 };

@@ -6,7 +6,7 @@ use anyhow::{anyhow, Context, Result};
 use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
 
 use crate::gp::params::{GlobalGrads, GlobalParams};
-use crate::gp::Stats;
+use crate::gp::{MathMode, Stats};
 use crate::linalg::Matrix;
 
 use super::manifest::{ArtifactConfig, Manifest};
@@ -69,6 +69,26 @@ fn lit_scalar(l: &Literal) -> Result<f64> {
 }
 
 impl ShardExecutor {
+    /// Mode-aware constructor (API parity with the native executor's
+    /// `from_config_mode`). The AOT artifact graphs implement only the
+    /// **Strict** numerical contract, so `MathMode::Fast` is rejected
+    /// here instead of silently running strict graphs under a fast
+    /// label (ROADMAP: fast-path artifact variants).
+    pub fn with_mode(manifest: &Manifest, config: &str, mode: MathMode) -> Result<ShardExecutor> {
+        anyhow::ensure!(
+            mode == MathMode::Strict,
+            "math mode {mode} is not available on the PJRT executor: the AOT artifact \
+             graphs implement the Strict contract only"
+        );
+        Self::new(manifest, config)
+    }
+
+    /// The execution policy this executor runs under (always Strict on
+    /// the artifact path; see [`ShardExecutor::with_mode`]).
+    pub fn math_mode(&self) -> MathMode {
+        MathMode::Strict
+    }
+
     /// Build a client and compile all entries of `config`.
     pub fn new(manifest: &Manifest, config: &str) -> Result<ShardExecutor> {
         let cfg = manifest.config(config)?.clone();

@@ -70,21 +70,33 @@ pub fn default_artifacts_dir() -> std::path::PathBuf {
     local
 }
 
-/// Build an executor for one artifact configuration. Native builds need
-/// only the shapes; PJRT builds load and compile the HLO entries from
-/// `artifacts_dir`.
+/// Build a Strict-mode executor for one artifact configuration. Native
+/// builds need only the shapes; PJRT builds load and compile the HLO
+/// entries from `artifacts_dir`.
 pub fn build_executor(
     cfg: &ArtifactConfig,
     artifacts_dir: &std::path::Path,
 ) -> anyhow::Result<ShardExecutor> {
+    build_executor_mode(cfg, artifacts_dir, crate::gp::MathMode::Strict)
+}
+
+/// Build an executor under an explicit [`crate::gp::MathMode`] — the
+/// cluster workers' entry (the mode arrives in the wire `Init` frame).
+/// The PJRT path only implements Strict and rejects Fast with a
+/// descriptive error.
+pub fn build_executor_mode(
+    cfg: &ArtifactConfig,
+    artifacts_dir: &std::path::Path,
+    mode: crate::gp::MathMode,
+) -> anyhow::Result<ShardExecutor> {
     #[cfg(feature = "pjrt")]
     {
         let manifest = Manifest::load(artifacts_dir)?;
-        ShardExecutor::new(&manifest, &cfg.name)
+        ShardExecutor::with_mode(&manifest, &cfg.name, mode)
     }
     #[cfg(not(feature = "pjrt"))]
     {
         let _ = artifacts_dir;
-        Ok(ShardExecutor::from_config(cfg.clone()))
+        Ok(ShardExecutor::from_config_mode(cfg.clone(), mode))
     }
 }

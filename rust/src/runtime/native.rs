@@ -25,7 +25,7 @@ use std::cell::{Cell, RefCell};
 use anyhow::Result;
 
 use crate::gp::params::{GlobalGrads, GlobalParams};
-use crate::gp::{kernel, Stats};
+use crate::gp::{kernel, MathMode, Stats};
 use crate::linalg::Matrix;
 
 use super::manifest::{ArtifactConfig, Manifest};
@@ -45,30 +45,47 @@ pub struct ShardExecutor {
     fills: Cell<u64>,
     /// gradient rounds served entirely from the scratch
     hits: Cell<u64>,
+    /// execution policy the cached map rounds run under: `Strict`
+    /// selects the bit-for-bit kernels, `Fast` the reciprocal/batched
+    /// variants (DESIGN.md §8). Fixed at construction, so a scratch
+    /// filled in one mode can never be consumed by the other.
+    mode: MathMode,
 }
 
 impl ShardExecutor {
     /// Manifest-based constructor (API-compatible with the PJRT
-    /// executor; the HLO entry files are not touched).
+    /// executor; the HLO entry files are not touched). Strict mode.
     pub fn new(manifest: &Manifest, config: &str) -> Result<ShardExecutor> {
         Ok(Self::from_config(manifest.config(config)?.clone()))
     }
 
     /// Build directly from a shape configuration — no artifacts
     /// directory needed (used by TCP cluster workers, whose shapes
-    /// arrive in the `Init` frame).
+    /// arrive in the `Init` frame). Strict mode.
     pub fn from_config(cfg: ArtifactConfig) -> ShardExecutor {
+        Self::from_config_mode(cfg, MathMode::Strict)
+    }
+
+    /// Build from shapes with an explicit [`MathMode`] (the cluster
+    /// workers pass the mode negotiated in the wire `Init` frame).
+    pub fn from_config_mode(cfg: ArtifactConfig, mode: MathMode) -> ShardExecutor {
         ShardExecutor {
             cfg,
             scratch: RefCell::new(kernel::ShardScratch::new()),
             version: Cell::new(None),
             fills: Cell::new(0),
             hits: Cell::new(0),
+            mode,
         }
     }
 
     pub fn config(&self) -> &ArtifactConfig {
         &self.cfg
+    }
+
+    /// The execution policy this executor's cached rounds run under.
+    pub fn math_mode(&self) -> MathMode {
+        self.mode
     }
 
     fn check_params(&self, p: &GlobalParams) -> Result<()> {
@@ -130,15 +147,26 @@ impl ShardExecutor {
         let mask = vec![1.0; shard.len()];
         let mut scratch = self.scratch.borrow_mut();
         let before = scratch.psi_fills();
-        let st = kernel::shard_stats_into(
-            p,
-            &shard.xmu,
-            &shard.xvar,
-            &shard.y,
-            &mask,
-            shard.kl_weight,
-            &mut scratch,
-        );
+        let st = match self.mode {
+            MathMode::Strict => kernel::shard_stats_into(
+                p,
+                &shard.xmu,
+                &shard.xvar,
+                &shard.y,
+                &mask,
+                shard.kl_weight,
+                &mut scratch,
+            ),
+            MathMode::Fast => kernel::shard_stats_into_fast(
+                p,
+                &shard.xmu,
+                &shard.xvar,
+                &shard.y,
+                &mask,
+                shard.kl_weight,
+                &mut scratch,
+            ),
+        };
         self.fills.set(self.fills.get() + (scratch.psi_fills() - before));
         self.version.set(Some(tok.version()));
         Ok(st)
@@ -160,15 +188,26 @@ impl ShardExecutor {
             scratch.invalidate();
         }
         let before = scratch.psi_fills();
-        let (g, d_xmu, d_xvar) = kernel::shard_grads_vjp_cached(
-            p,
-            &shard.xmu,
-            &shard.xvar,
-            &shard.y,
-            shard.kl_weight,
-            adj,
-            &mut scratch,
-        );
+        let (g, d_xmu, d_xvar) = match self.mode {
+            MathMode::Strict => kernel::shard_grads_vjp_cached(
+                p,
+                &shard.xmu,
+                &shard.xvar,
+                &shard.y,
+                shard.kl_weight,
+                adj,
+                &mut scratch,
+            ),
+            MathMode::Fast => kernel::shard_grads_vjp_cached_fast(
+                p,
+                &shard.xmu,
+                &shard.xvar,
+                &shard.y,
+                shard.kl_weight,
+                adj,
+                &mut scratch,
+            ),
+        };
         let delta = scratch.psi_fills() - before;
         self.fills.set(self.fills.get() + delta);
         if delta == 0 {
@@ -181,6 +220,10 @@ impl ShardExecutor {
 
     /// Map step 1, stateless: the shard's partial statistics with no
     /// caching (the forced-fresh path; also the baselines' entry).
+    /// Always runs the **Strict** reference kernels regardless of the
+    /// executor's mode — the forced-fresh path exists to pin the
+    /// pre-refactor trace, and fast mode requires the psi cache
+    /// (enforced at `TrainConfig` / `Init` validation).
     pub fn shard_stats(&self, p: &GlobalParams, shard: &ShardData) -> Result<Stats> {
         self.check_params(p)?;
         let mask = vec![1.0; shard.len()];

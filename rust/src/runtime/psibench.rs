@@ -1,23 +1,28 @@
 //! `gparml bench psi` — machine-readable hot-path benchmark of the two
 //! map rounds (shard statistics + chain-rule gradients), cached vs
-//! forced-fresh.
+//! forced-fresh and Strict vs Fast math mode — plus `gparml bench
+//! check`, the CI regression gate over the emitted JSON.
 //!
-//! Writes `BENCH_psi.json` (ns/point per round and per full evaluation,
-//! plus the cached-vs-nocache speedup) so the perf trajectory of the
-//! worker hot path is tracked as a checked artifact from PR 2 on. CI
-//! runs a small-rep smoke of this command to keep the harness alive.
+//! `bench psi` writes `BENCH_psi.json` (ns/point per round and per
+//! full evaluation, the cached-vs-nocache speedup and the
+//! Fast-vs-Strict speedup). `bench check` diffs a fresh report against
+//! the committed `BENCH_baseline.json` and fails on a >25% ns/point
+//! regression on any series, or on Fast being slower than Strict —
+//! turning the perf trajectory into an enforced gate instead of a
+//! number nobody reads (DESIGN.md §8).
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
-use crate::gp::{self, kernel, GlobalParams};
+use crate::gp::{self, kernel, GlobalParams, MathMode};
 use crate::linalg::Matrix;
 use crate::util::bench::bench;
 use crate::util::cli::Args;
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 
-use super::{build_executor, default_artifacts_dir, Manifest, ShardData};
+use super::{build_executor, build_executor_mode, default_artifacts_dir, Manifest, ShardData};
 
 fn artifacts_dir(args: &Args) -> PathBuf {
     args.get("artifacts")
@@ -29,11 +34,20 @@ fn artifacts_dir(args: &Args) -> PathBuf {
 ///
 /// Flags: `--config` (artifact shape, default `perf`), `--points`
 /// (shard size, default the config's capacity B), `--reps`,
-/// `--out` (default `BENCH_psi.json`), `--artifacts DIR`.
+/// `--out` (default `BENCH_psi.json`), `--artifacts DIR`,
+/// `--math-mode strict` to skip the Fast series (default: measure
+/// both, which the CI gate requires).
 pub fn run(args: &Args) -> Result<()> {
     let cfg_name = args.get_str("config", "perf");
     let reps = args.get_usize("reps", 10)?.max(1);
     let out_path = args.get_str("out", "BENCH_psi.json");
+    // "strict" skips the fast series; "fast"/"both" measure both (the
+    // strict series is the denominator of the fast speedup either way)
+    let mode_sel = args.get_str("math-mode", "both");
+    anyhow::ensure!(
+        matches!(mode_sel, "strict" | "fast" | "both"),
+        "--math-mode expects strict|fast|both for bench psi, got {mode_sel:?}"
+    );
 
     let dir = artifacts_dir(args);
     let manifest = Manifest::load(&dir)?;
@@ -96,6 +110,39 @@ pub fn run(args: &Args) -> Result<()> {
         exec.shard_grads(&params, &shard, &adj).unwrap()
     });
 
+    // Fast-mode series, same shard and adjoints: the gate asserts this
+    // beats the strict cached pipeline (unavailable on the PJRT path)
+    let fast = if mode_sel == "strict" {
+        None
+    } else {
+        match build_executor_mode(&art, &dir, MathMode::Fast) {
+            Ok(fexec) => {
+                let eval_fast = bench("eval fast (stats fill + grads reuse)", 1, reps, || {
+                    version += 1;
+                    let tok = fexec.begin_eval(version);
+                    let st = fexec.shard_stats_cached(&tok, &params, &shard).unwrap();
+                    let g = fexec
+                        .shard_grads_cached(&tok, &params, &shard, &adj)
+                        .unwrap();
+                    (st, g)
+                });
+                let fast_stats = bench("round 1: shard_stats (fast)", 1, reps, || {
+                    let tok = fexec.begin_eval(version);
+                    fexec.shard_stats_cached(&tok, &params, &shard).unwrap()
+                });
+                let fast_grads = bench("round 2: shard_grads (fast, cache hit)", 1, reps, || {
+                    let tok = fexec.begin_eval(version);
+                    fexec.shard_grads_cached(&tok, &params, &shard, &adj).unwrap()
+                });
+                Some((eval_fast, fast_stats, fast_grads))
+            }
+            Err(e) => {
+                println!("fast math mode unavailable on this executor: {e:#}");
+                None
+            }
+        }
+    };
+
     let per_point = |median_s: f64| median_s * 1e9 / b as f64;
     let speedup = eval_nocache.median_s / eval_cached.median_s.max(1e-12);
     println!(
@@ -105,12 +152,12 @@ pub fn run(args: &Args) -> Result<()> {
         per_point(eval_nocache.median_s),
     );
 
-    let json = format!(
+    let mut json = format!(
         "{{\n  \"config\": \"{}\",\n  \"points\": {},\n  \"m\": {},\n  \"q\": {},\n  \
          \"d\": {},\n  \"reps\": {},\n  \"stats_ns_per_point\": {:.1},\n  \
          \"grads_cached_ns_per_point\": {:.1},\n  \"grads_nocache_ns_per_point\": {:.1},\n  \
          \"eval_cached_ns_per_point\": {:.1},\n  \"eval_nocache_ns_per_point\": {:.1},\n  \
-         \"speedup_eval\": {:.3}\n}}\n",
+         \"speedup_eval\": {:.3}",
         cfg_name,
         b,
         art.m,
@@ -124,7 +171,177 @@ pub fn run(args: &Args) -> Result<()> {
         per_point(eval_nocache.median_s),
         speedup,
     );
+    if let Some((eval_fast, fast_stats, fast_grads)) = &fast {
+        let speedup_fast = eval_cached.median_s / eval_fast.median_s.max(1e-12);
+        println!(
+            "fast mode per evaluation: {:.0} ns/point => {speedup_fast:.2}x over strict",
+            per_point(eval_fast.median_s),
+        );
+        json.push_str(&format!(
+            ",\n  \"fast_stats_ns_per_point\": {:.1},\n  \
+             \"fast_grads_cached_ns_per_point\": {:.1},\n  \
+             \"fast_eval_ns_per_point\": {:.1},\n  \"speedup_fast\": {:.3}",
+            per_point(fast_stats.median_s),
+            per_point(fast_grads.median_s),
+            per_point(eval_fast.median_s),
+            speedup_fast,
+        ));
+    }
+    json.push_str("\n}\n");
     std::fs::write(out_path, json).with_context(|| format!("writing {out_path}"))?;
     println!("wrote {out_path}");
     Ok(())
+}
+
+/// `gparml bench check`: diff a fresh `BENCH_psi.json` against the
+/// committed baseline; non-zero exit on regression (the CI gate).
+///
+/// Flags: `--baseline` (default `BENCH_baseline.json`), `--current`
+/// (default `BENCH_psi.json`), `--max-regress` (fractional ns/point
+/// regression budget, default 0.25).
+pub fn check(args: &Args) -> Result<()> {
+    let baseline_path = args.get_str("baseline", "BENCH_baseline.json");
+    let current_path = args.get_str("current", "BENCH_psi.json");
+    let max_regress = args.get_f64("max-regress", 0.25)?;
+    let baseline = Json::from_file(Path::new(baseline_path))?;
+    let current = Json::from_file(Path::new(current_path))?;
+    let failures = gate(&baseline, &current, max_regress)?;
+    if failures.is_empty() {
+        println!(
+            "bench check: OK ({current_path} within {:.0}% of {baseline_path}, fast <= strict)",
+            max_regress * 100.0
+        );
+        return Ok(());
+    }
+    for f in &failures {
+        eprintln!("bench check FAILED: {f}");
+    }
+    bail!(
+        "{} bench regression(s) against {baseline_path} (budget {:.0}%)",
+        failures.len(),
+        max_regress * 100.0
+    )
+}
+
+/// The pure gate: every `*_ns_per_point` series in the baseline must be
+/// present in the current report and within `(1 + max_regress)` of the
+/// baseline value, and the current Fast evaluation must not be slower
+/// than the current Strict one. Returns the list of violations.
+fn gate(baseline: &Json, current: &Json, max_regress: f64) -> Result<Vec<String>> {
+    let mut fails = Vec::new();
+    for (key, bv) in baseline.as_obj()? {
+        if !key.ends_with("_ns_per_point") {
+            continue;
+        }
+        let base = bv.as_f64()?;
+        let Some(cv) = current.opt(key) else {
+            fails.push(format!("series {key} is missing from the current report"));
+            continue;
+        };
+        let cur = cv.as_f64()?;
+        if base > 0.0 && cur > base * (1.0 + max_regress) {
+            fails.push(format!(
+                "{key}: {cur:.1} ns/point vs baseline {base:.1} \
+                 (>{:.0}% regression)",
+                max_regress * 100.0
+            ));
+        }
+    }
+    match (
+        current.opt("fast_eval_ns_per_point"),
+        current.opt("eval_cached_ns_per_point"),
+    ) {
+        (Some(f), Some(s)) => {
+            let (f, s) = (f.as_f64()?, s.as_f64()?);
+            if f > s {
+                fails.push(format!(
+                    "fast eval ({f:.1} ns/point) is slower than strict ({s:.1} ns/point)"
+                ));
+            }
+        }
+        _ => fails.push("current report is missing the fast-vs-strict series".to_string()),
+    }
+    Ok(fails)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn j(s: &str) -> Json {
+        Json::parse(s).unwrap()
+    }
+
+    #[test]
+    fn gate_passes_within_budget() {
+        let base = j(r#"{"stats_ns_per_point": 100.0, "fast_eval_ns_per_point": 60.0}"#);
+        let cur = j(
+            r#"{"stats_ns_per_point": 120.0, "fast_eval_ns_per_point": 70.0,
+                "eval_cached_ns_per_point": 110.0}"#,
+        );
+        assert!(gate(&base, &cur, 0.25).unwrap().is_empty());
+    }
+
+    #[test]
+    fn gate_flags_regression_and_missing_series() {
+        let base = j(r#"{"stats_ns_per_point": 100.0, "grads_cached_ns_per_point": 50.0}"#);
+        let cur = j(
+            r#"{"stats_ns_per_point": 126.0, "fast_eval_ns_per_point": 10.0,
+                "eval_cached_ns_per_point": 20.0}"#,
+        );
+        let fails = gate(&base, &cur, 0.25).unwrap();
+        assert_eq!(fails.len(), 2, "{fails:?}");
+        assert!(fails.iter().any(|f| f.contains("stats_ns_per_point")));
+        assert!(fails.iter().any(|f| f.contains("grads_cached_ns_per_point")));
+    }
+
+    #[test]
+    fn gate_flags_fast_slower_than_strict() {
+        let base = j(r#"{"stats_ns_per_point": 100.0}"#);
+        let cur = j(
+            r#"{"stats_ns_per_point": 90.0, "fast_eval_ns_per_point": 120.0,
+                "eval_cached_ns_per_point": 100.0}"#,
+        );
+        let fails = gate(&base, &cur, 0.25).unwrap();
+        assert_eq!(fails.len(), 1, "{fails:?}");
+        assert!(fails[0].contains("slower than strict"));
+    }
+
+    #[test]
+    fn gate_requires_fast_series() {
+        let base = j(r#"{"stats_ns_per_point": 100.0}"#);
+        let cur = j(r#"{"stats_ns_per_point": 90.0}"#);
+        let fails = gate(&base, &cur, 0.25).unwrap();
+        assert_eq!(fails.len(), 1, "{fails:?}");
+        assert!(fails[0].contains("missing the fast-vs-strict"));
+    }
+
+    /// The committed CI baseline must stay parseable and carry every
+    /// series the gate compares (guards against the baseline rotting
+    /// while the bench JSON schema moves).
+    #[test]
+    fn committed_baseline_is_gate_compatible() {
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .parent()
+            .unwrap()
+            .join("BENCH_baseline.json");
+        let base = Json::from_file(&path).expect("committed BENCH_baseline.json");
+        let obj = base.as_obj().unwrap();
+        for key in [
+            "stats_ns_per_point",
+            "grads_cached_ns_per_point",
+            "grads_nocache_ns_per_point",
+            "eval_cached_ns_per_point",
+            "eval_nocache_ns_per_point",
+            "fast_stats_ns_per_point",
+            "fast_grads_cached_ns_per_point",
+            "fast_eval_ns_per_point",
+        ] {
+            assert!(obj.contains_key(key), "baseline missing {key}");
+            assert!(obj[key].as_f64().unwrap() > 0.0, "baseline {key} not positive");
+        }
+        // a report identical to the baseline must pass its own gate
+        let fails = gate(&base, &base, 0.25).unwrap();
+        assert!(fails.is_empty(), "{fails:?}");
+    }
 }

@@ -11,6 +11,7 @@
 //! sequential time is `sum_k t_k`. Central (global-step) time is
 //! measured directly and added to both.
 
+use crate::gp::MathMode;
 use crate::util::stats;
 
 /// Timing of one map round across all workers.
@@ -30,6 +31,10 @@ pub struct RoundTiming {
     /// gradient round 0 — i.e. exactly one psi pass per worker per
     /// evaluation, the observable proof the two-round reuse happened.
     pub psi_recomputes: u64,
+    /// Math mode the cluster ran this round under (DESIGN.md §8): a
+    /// recorded timing is only comparable to another at the same mode,
+    /// so the mode travels with every round it produced.
+    pub math_mode: MathMode,
 }
 
 impl RoundTiming {

@@ -11,7 +11,7 @@ use std::time::{Duration, Instant};
 
 use gparml::cluster::TcpBackend;
 use gparml::coordinator::{partition, GlobalOpt, ModelKind, TrainConfig, Trainer};
-use gparml::gp::GlobalParams;
+use gparml::gp::{GlobalParams, MathMode};
 use gparml::linalg::Matrix;
 use gparml::runtime::ShardData;
 use gparml::util::rng::Rng;
@@ -32,7 +32,7 @@ impl Drop for Workers {
     }
 }
 
-fn spawn_workers(n: usize, leader_addr: &str) -> Workers {
+fn spawn_workers_with(n: usize, leader_addr: &str, extra: &[&str]) -> Workers {
     let bin = env!("CARGO_BIN_EXE_gparml");
     let art = artifacts_dir();
     Workers(
@@ -46,6 +46,7 @@ fn spawn_workers(n: usize, leader_addr: &str) -> Workers {
                         "--artifacts",
                         art.to_str().unwrap(),
                     ])
+                    .args(extra)
                     .stdout(Stdio::null())
                     .stderr(Stdio::null())
                     .spawn()
@@ -53,6 +54,10 @@ fn spawn_workers(n: usize, leader_addr: &str) -> Workers {
             })
             .collect(),
     )
+}
+
+fn spawn_workers(n: usize, leader_addr: &str) -> Workers {
+    spawn_workers_with(n, leader_addr, &[])
 }
 
 fn regression_data(n: usize, seed: u64) -> (Matrix, Matrix, Matrix) {
@@ -258,6 +263,107 @@ fn tcp_cluster_lvm_local_updates_match_pool_backend() {
         assert_eq!(pv.max_abs_diff(fv), 0.0, "cached vs fresh local variances");
     }
     drop(tcp_t);
+    drop(procs);
+}
+
+/// Fast math mode end to end: the mode travels in the v3 `Init`,
+/// both backends run the same fast kernels deterministically, so a
+/// same-mode Pool and TCP cluster still produce bit-identical traces
+/// (Fast relaxes cross-MODE equality, never cross-BACKEND equality).
+#[test]
+fn tcp_cluster_fast_mode_matches_pool_backend_bitwise() {
+    let (xmu, xvar, y) = regression_data(60, 3);
+    let workers = 2;
+    let iters = 5;
+    let shards = partition(&xmu, &xvar, &y, 0.0, workers);
+    let mut cfg = config(workers, ModelKind::Regression);
+    cfg.math_mode = MathMode::Fast;
+
+    let mut pool_t = Trainer::new(cfg.clone(), init_params(5), shards.clone()).unwrap();
+    let pool_trace: Vec<f64> = (0..iters).map(|_| pool_t.step().unwrap()).collect();
+
+    let (mut tcp_t, procs) = tcp_trainer(cfg, init_params(5), shards.clone());
+    let tcp_trace: Vec<f64> = (0..iters).map(|_| tcp_t.step().unwrap()).collect();
+
+    for (i, (a, b)) in pool_trace.iter().zip(&tcp_trace).enumerate() {
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "fast iteration {i}: pool F={a} vs tcp F={b}"
+        );
+    }
+    for (a, b) in pool_t.params.flatten().iter().zip(tcp_t.params.flatten()) {
+        assert_eq!(a.to_bits(), b.to_bits(), "fast final params diverged");
+    }
+
+    // telemetry records the mode on every round, and the psi cache
+    // telemetry holds under Fast too (stats = 1 pass/worker, grads 0)
+    for log in [&pool_t.log, &tcp_t.log] {
+        for it in &log.iterations {
+            for (r, round) in it.rounds.iter().enumerate() {
+                assert_eq!(round.math_mode, MathMode::Fast, "round mode not recorded");
+                let expect = if r % 2 == 0 { workers as u64 } else { 0 };
+                assert_eq!(
+                    round.psi_recomputes, expect,
+                    "fast iter {} round {r}: psi recomputes",
+                    it.iter
+                );
+            }
+        }
+    }
+
+    // the distributed bound at fixed parameters must agree across the
+    // modes within the Fast contract's tolerance (trajectories are NOT
+    // compared: a single SCG line-search branch can amplify ulp-level
+    // drift arbitrarily, which is exactly why Fast is a negotiated
+    // cluster-wide policy rather than a per-node choice)
+    let mut fast_cfg = config(workers, ModelKind::Regression);
+    fast_cfg.math_mode = MathMode::Fast;
+    let mut fast_eval_t = Trainer::new(fast_cfg, init_params(5), shards.clone()).unwrap();
+    let mut strict_eval_t = Trainer::new(
+        config(workers, ModelKind::Regression),
+        init_params(5),
+        shards,
+    )
+    .unwrap();
+    let f_fast = fast_eval_t.evaluate().unwrap();
+    let f_strict = strict_eval_t.evaluate().unwrap();
+    // 1e-8 rather than the kernel-level 1e-9: the central assembly's
+    // solves sit between the shard statistics and F, adding a
+    // conditioning factor on top of the kernels' own drift
+    assert!(
+        ((f_fast - f_strict) / (1.0 + f_strict.abs())).abs() < 1e-8,
+        "fast bound {f_fast} drifted from strict {f_strict}"
+    );
+
+    drop(tcp_t);
+    drop(procs);
+}
+
+/// Mixed-mode bring-up must fail loudly: a worker pinned to Fast
+/// (`gparml worker --math-mode fast`) answers a Strict leader's `Init`
+/// with an error, and the leader's bring-up reports it.
+#[test]
+fn strict_leader_refuses_fast_pinned_worker() {
+    let (xmu, xvar, y) = regression_data(20, 4);
+    let shards = partition(&xmu, &xvar, &y, 0.0, 1);
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind leader listener");
+    let addr = listener.local_addr().unwrap().to_string();
+    let procs = spawn_workers_with(1, &addr, &["--math-mode", "fast"]);
+
+    let err = Trainer::accept_tcp(
+        config(1, ModelKind::Regression),
+        init_params(5),
+        shards,
+        &listener,
+    )
+    .err()
+    .expect("strict leader must refuse a fast-pinned worker");
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("math mode") || msg.contains("pinned"),
+        "bring-up error does not explain the mode mismatch: {msg}"
+    );
     drop(procs);
 }
 

@@ -53,6 +53,44 @@ fn config(workers: usize) -> TrainConfig {
     }
 }
 
+/// Fast math without the psi cache is the one invalid configuration
+/// (the forced-fresh path IS the strict reference); bring-up must
+/// reject it before any backend exists.
+#[test]
+fn fast_math_without_psi_cache_is_rejected_at_bringup() {
+    let (xmu, xvar, y) = regression_data(24, 7);
+    let shards = partition(&xmu, &xvar, &y, 0.0, 2);
+    let mut cfg = config(2);
+    cfg.math_mode = gparml::gp::MathMode::Fast;
+    cfg.psi_cache = false;
+    let err = Trainer::new(cfg, init_params(2), shards).err().expect("must be rejected");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("psi_cache"), "unhelpful error: {msg}");
+}
+
+/// A Fast-mode in-process cluster trains end to end and improves the
+/// bound just like Strict — the policy changes rounding, not the
+/// algorithm.
+#[test]
+fn fast_mode_training_improves_bound() {
+    let (xmu, xvar, y) = regression_data(96, 0);
+    let shards = partition(&xmu, &xvar, &y, 0.0, 3);
+    let mut cfg = config(3);
+    cfg.math_mode = gparml::gp::MathMode::Fast;
+    let mut t = Trainer::new(cfg, init_params(2), shards).unwrap();
+    let f0 = t.evaluate().unwrap();
+    let f_end = t.train(10).unwrap();
+    assert!(
+        f_end > f0 + 1.0,
+        "fast-mode SCG failed to improve the bound: {f0} -> {f_end}"
+    );
+    for it in &t.log.iterations {
+        for r in &it.rounds {
+            assert_eq!(r.math_mode, gparml::gp::MathMode::Fast);
+        }
+    }
+}
+
 #[test]
 fn distributed_training_improves_bound() {
     let (xmu, xvar, y) = regression_data(96, 0);

@@ -125,6 +125,72 @@ fn prop_psi2_symmetric_psd() {
     });
 }
 
+// ---------------------------------------------------------------------------
+// math modes: Fast vs Strict numerical contract (DESIGN.md §8)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_fast_stats_match_strict_within_1e9() {
+    check("fast shard stats within 1e-9 of strict", 20, |rng| {
+        let (m, q, d) = (dim(rng, 2, 7), dim(rng, 1, 4), dim(rng, 1, 4));
+        let n = dim(rng, 2, 22);
+        let p = random_params(rng, m, q);
+        let xmu = random_matrix(rng, n, q, 1.0);
+        let xvar = Matrix::from_fn(n, q, |_, _| 0.05 + rng.uniform());
+        let y = random_matrix(rng, n, d, 1.0);
+        let mask = vec![1.0; n];
+        let strict = kernel::shard_stats(&p, &xmu, &xvar, &y, &mask, 1.0);
+        let mut scratch = kernel::ShardScratch::new();
+        let fast = kernel::shard_stats_into_fast(&p, &xmu, &xvar, &y, &mask, 1.0, &mut scratch);
+        close(fast.a, strict.a, 1e-12, "a")?;
+        close(fast.psi0, strict.psi0, 1e-12, "psi0")?;
+        close(fast.kl, strict.kl, 1e-12, "kl")?;
+        mat_close(&fast.c, &strict.c, 1e-9, "C fast vs strict")?;
+        mat_close(&fast.d, &strict.d, 1e-9, "D fast vs strict")
+    });
+}
+
+#[test]
+fn prop_fast_bound_and_grads_match_strict_within_1e9() {
+    check("fast bound/gradients within 1e-9 of strict", 15, |rng| {
+        let (m, q, d) = (dim(rng, 2, 6), dim(rng, 1, 3), dim(rng, 1, 3));
+        let n = dim(rng, 3, 18);
+        // the trainer's default jitter: keeps Kmm's conditioning from
+        // amplifying the kernels' ulp-level drift through the solves
+        let jitter = 1e-6;
+        let p = random_params(rng, m, q);
+        let xmu = random_matrix(rng, n, q, 1.0);
+        let xvar = Matrix::from_fn(n, q, |_, _| 0.05 + rng.uniform());
+        let y = random_matrix(rng, n, d, 1.0);
+        let mask = vec![1.0; n];
+        let kmm = kernel::kmm(&p, jitter);
+
+        // strict pipeline: reference stats -> bound -> adjoints -> VJP
+        let st_s = kernel::shard_stats(&p, &xmu, &xvar, &y, &mask, 1.0);
+        let (bv_s, adj_s) = gp::assemble_bound(&st_s, &kmm, p.log_beta, d).unwrap();
+        let (g_s, dmu_s, dvar_s) = kernel::shard_grads_vjp(&p, &xmu, &xvar, &y, 1.0, &adj_s);
+
+        // fast pipeline under the SAME adjoint message: isolates the
+        // kernel-arithmetic contract (the central reduce is identical
+        // code in both modes, so the adjoints a Fast cluster sees can
+        // only differ through the stats, checked separately above)
+        let mut scratch = kernel::ShardScratch::new();
+        let st_f = kernel::shard_stats_into_fast(&p, &xmu, &xvar, &y, &mask, 1.0, &mut scratch);
+        let (bv_f, _) = gp::assemble_bound(&st_f, &kmm, p.log_beta, d).unwrap();
+        let (g_f, dmu_f, dvar_f) =
+            kernel::shard_grads_vjp_cached_fast(&p, &xmu, &xvar, &y, 1.0, &adj_s, &mut scratch);
+
+        close(bv_f.f, bv_s.f, 1e-9, "bound F fast vs strict")?;
+        mat_close(&g_f.d_z, &g_s.d_z, 1e-9, "dZ fast vs strict")?;
+        close(g_f.d_log_sf2, g_s.d_log_sf2, 1e-9, "dlog_sf2 fast vs strict")?;
+        for (k, (a, b)) in g_f.d_log_ls.iter().zip(&g_s.d_log_ls).enumerate() {
+            close(*a, *b, 1e-9, &format!("dlog_ls[{k}] fast vs strict"))?;
+        }
+        mat_close(&dmu_f, &dmu_s, 1e-9, "dXmu fast vs strict")?;
+        mat_close(&dvar_f, &dvar_s, 1e-9, "dXvar fast vs strict")
+    });
+}
+
 #[test]
 fn prop_bound_invariant_to_inducing_permutation() {
     check("F invariant under permutation of Z rows", 20, |rng| {
