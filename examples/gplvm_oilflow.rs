@@ -65,13 +65,12 @@ fn main() -> Result<()> {
     }
 
     // embedding quality: class separation in the learned latent space
+    // (rows scattered back to dataset order via the gathered indices)
     let locals = trainer.gather_locals()?;
     let mut emb = Matrix::zeros(n, q);
-    let mut row = 0;
-    for (mu, _) in &locals {
-        for i in 0..mu.rows() {
-            emb.row_mut(row).copy_from_slice(mu.row(i));
-            row += 1;
+    for (ids, mu, _) in &locals {
+        for (i, &orig) in ids.iter().enumerate() {
+            emb.row_mut(orig).copy_from_slice(mu.row(i));
         }
     }
     let sep = gparml::experiments::common::class_separation(&emb, &data.labels);

@@ -66,14 +66,13 @@ fn main() -> Result<()> {
         }
     }
 
-    // gather training latents for reconstruction inits
+    // gather training latents for reconstruction inits (scattered back
+    // to dataset order via the gathered row indices)
     let locals = trainer.gather_locals()?;
     let mut latents = Matrix::zeros(n, q);
-    let mut row = 0;
-    for (mu, _) in &locals {
-        for i in 0..mu.rows() {
-            latents.row_mut(row).copy_from_slice(mu.row(i));
-            row += 1;
+    for (ids, mu, _) in &locals {
+        for (i, &orig) in ids.iter().enumerate() {
+            latents.row_mut(orig).copy_from_slice(mu.row(i));
         }
     }
     let weights = trainer.posterior()?;

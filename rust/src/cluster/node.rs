@@ -190,6 +190,18 @@ impl WorkerNode {
                 let (mean, var) = self.exec.predict(params, xt_mu, xt_var, w1, wv)?;
                 Response::Predict { mean, var }
             }
+            Request::ModelInfo => {
+                let cfg = self.exec.config();
+                Response::ModelInfo {
+                    m: cfg.m as u32,
+                    q: cfg.q as u32,
+                    d: cfg.d as u32,
+                }
+            }
+            Request::ServePredict { .. } => bail!(
+                "ServePredict is answered by the `gparml serve` predict server, which \
+                 holds a TrainedModel; cluster workers hold no posterior weights"
+            ),
         })
     }
 }

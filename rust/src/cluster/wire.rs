@@ -56,7 +56,14 @@ pub const MAGIC: [u8; 4] = *b"GPMR";
 /// (u8: 0 strict, 1 fast); a worker pinned to the other mode rejects
 /// the `Init`, so mixed-mode clusters fail at bring-up instead of
 /// reducing numerically incomparable partial terms.
-pub const VERSION: u16 = 3;
+/// v4 — the serve-path messages of the train/serve split (DESIGN.md
+/// §9): `Request::ModelInfo` / `Response::ModelInfo` (a client asks a
+/// predict server — or a cluster worker — for its model shapes) and
+/// `Request::ServePredict` (points-only prediction against the
+/// server-held `TrainedModel`; answered with the existing
+/// `Response::Predict`). Cluster workers hold no posterior weights and
+/// answer `ServePredict` with an error.
+pub const VERSION: u16 = 4;
 /// Upper bound on a single frame payload (defends the decoder against
 /// garbage length prefixes).
 pub const MAX_PAYLOAD: usize = 1 << 30;
@@ -99,6 +106,14 @@ pub enum Request {
         w1: Matrix,
         wv: Matrix,
     },
+    /// Serve-path prediction (v4): the peer holds the trained model, the
+    /// client ships only test points. Answered with
+    /// [`Response::Predict`] by `gparml serve`; cluster workers reply
+    /// with an error (they hold no posterior weights).
+    ServePredict { xt_mu: Matrix, xt_var: Matrix },
+    /// Ask the peer for its model/executor shapes (v4) — lets a predict
+    /// client generate well-shaped test points without the model file.
+    ModelInfo,
 }
 
 /// A worker's reply to a [`Request`].
@@ -109,6 +124,9 @@ pub enum Response {
     Shard(ShardData),
     Locals { xmu: Matrix, xvar: Matrix },
     Predict { mean: Matrix, var: Vec<f64> },
+    /// Reply to [`Request::ModelInfo`] (v4): inducing points, latent
+    /// dimensionality and output dimensionality of the served model.
+    ModelInfo { m: u32, q: u32, d: u32 },
     Ok,
     /// The worker failed to execute the request (shape mismatch, ...).
     Err(String),
@@ -479,6 +497,12 @@ impl Request {
                 e.mat(w1);
                 e.mat(wv);
             }
+            Request::ServePredict { xt_mu, xt_var } => {
+                e.u8(7);
+                e.mat(xt_mu);
+                e.mat(xt_var);
+            }
+            Request::ModelInfo => e.u8(8),
         }
     }
 
@@ -504,6 +528,11 @@ impl Request {
                 w1: d.mat()?,
                 wv: d.mat()?,
             },
+            7 => Request::ServePredict {
+                xt_mu: d.mat()?,
+                xt_var: d.mat()?,
+            },
+            8 => Request::ModelInfo,
             t => bail!("unknown request tag {t}"),
         })
     }
@@ -539,6 +568,12 @@ impl Response {
                 e.u8(7);
                 e.str(msg);
             }
+            Response::ModelInfo { m, q, d } => {
+                e.u8(8);
+                e.u32(*m);
+                e.u32(*q);
+                e.u32(*d);
+            }
         }
     }
 
@@ -557,6 +592,11 @@ impl Response {
             },
             6 => Response::Ok,
             7 => Response::Err(d.str()?),
+            8 => Response::ModelInfo {
+                m: d.u32()?,
+                q: d.u32()?,
+                d: d.u32()?,
+            },
             t => bail!("unknown response tag {t}"),
         })
     }
@@ -1049,6 +1089,69 @@ mod tests {
         bytes[0] = b'X';
         let msg = format!("{:#}", decode_frame(&bytes).unwrap_err());
         assert!(msg.contains("magic"), "{msg}");
+    }
+
+    /// Wire v4: the serve-path frames (points-only prediction against a
+    /// server-held model, and the shape handshake) round-trip bitwise.
+    #[test]
+    fn prop_serve_frames_roundtrip_bitwise() {
+        testing::check("wire v4 serve frames", 20, |rng| {
+            let t = testing::dim(rng, 0, 16);
+            let q = testing::dim(rng, 1, 6);
+            let xt_mu = rand_mat(rng, t, q);
+            let xt_var = rand_mat(rng, t, q);
+            let f = Frame::Request(Box::new(Request::ServePredict {
+                xt_mu: xt_mu.clone(),
+                xt_var: xt_var.clone(),
+            }));
+            match roundtrip(&f) {
+                Frame::Request(r) => match *r {
+                    Request::ServePredict {
+                        xt_mu: m2,
+                        xt_var: v2,
+                    } => {
+                        assert_mat_eq(&m2, &xt_mu);
+                        assert_mat_eq(&v2, &xt_var);
+                    }
+                    _ => return Err("wrong request variant".into()),
+                },
+                _ => return Err("wrong frame kind".into()),
+            }
+            match roundtrip(&Frame::Request(Box::new(Request::ModelInfo))) {
+                Frame::Request(r) => {
+                    if !matches!(*r, Request::ModelInfo) {
+                        return Err("ModelInfo request corrupted".into());
+                    }
+                }
+                _ => return Err("wrong frame kind".into()),
+            }
+            let (m, qq, d) = (
+                rng.below(1000) as u32,
+                rng.below(100) as u32,
+                rng.below(1000) as u32,
+            );
+            let f = Frame::Response {
+                secs: 0.0,
+                psi_fills: 0,
+                resp: Box::new(Response::ModelInfo { m, q: qq, d }),
+            };
+            match roundtrip(&f) {
+                Frame::Response { resp, .. } => match *resp {
+                    Response::ModelInfo {
+                        m: m2,
+                        q: q2,
+                        d: d2,
+                    } => {
+                        if (m2, q2, d2) != (m, qq, d) {
+                            return Err("ModelInfo shapes corrupted".into());
+                        }
+                        Ok(())
+                    }
+                    _ => Err("wrong response variant".into()),
+                },
+                _ => Err("wrong frame kind".into()),
+            }
+        });
     }
 
     #[test]

@@ -152,6 +152,22 @@ pub struct Trainer<B: Backend = PoolBackend> {
     /// tagged onto both map rounds so workers can reuse round-1 psi
     /// intermediates in round 2 without ever aliasing a stale cache
     eval_version: u64,
+    /// posterior weights at the current parameters. Event-invalidated:
+    /// everything that moves the objective under the leader — a step
+    /// (params), local q(X) updates, re-sharding, node death — clears
+    /// it, so repeated `predict`/`posterior`/`export_model` calls at
+    /// fixed parameters cost ZERO extra cluster rounds.
+    posterior_cache: Option<gp::PosteriorWeights>,
+    /// posterior requests served from the cache (observability/tests)
+    posterior_hits: u64,
+    /// original dataset row indices each worker's shard currently
+    /// holds, in shard order. `Some` for every sharded bring-up
+    /// (contiguous partition); kept exact across `decommission`
+    /// re-sharding (moved rows land at the survivors' tails). `None`
+    /// only for `with_backend` bring-ups, reconstructed lazily from a
+    /// gather round (valid while the order is still the contiguous
+    /// dataset order).
+    row_ids: Option<Vec<Vec<usize>>>,
 }
 
 impl Trainer<PoolBackend> {
@@ -218,11 +234,19 @@ fn build_with<B: Backend>(
     );
     let art = load_checked_artifact(&cfg, &params)?;
     let dout = art.d;
+    // shard k holds the contiguous dataset rows [offset_k, offset_k +
+    // len_k) — record them so gathers stay addressable after re-sharding
+    let mut row_ids = Vec::with_capacity(shards.len());
+    let mut offset = 0usize;
+    for shard in &shards {
+        row_ids.push((offset..offset + shard.len()).collect());
+        offset += shard.len();
+    }
     let inits = make_inits(&cfg, &art, shards);
     let t0 = Instant::now();
     let backend = make_backend(inits)?;
     let startup_secs = t0.elapsed().as_secs_f64();
-    let mut t = Trainer::from_parts(cfg, params, backend, dout);
+    let mut t = Trainer::from_parts(cfg, params, backend, dout, Some(row_ids));
     t.log.startup_secs = startup_secs;
     Ok(t)
 }
@@ -265,11 +289,17 @@ impl<B: Backend> Trainer<B> {
             cfg.workers
         );
         let art = load_checked_artifact(&cfg, &params)?;
-        Ok(Self::from_parts(cfg, params, backend, art.d))
+        Ok(Self::from_parts(cfg, params, backend, art.d, None))
     }
 
     /// Assemble the leader state (shapes already validated).
-    fn from_parts(cfg: TrainConfig, params: GlobalParams, backend: B, dout: usize) -> Trainer<B> {
+    fn from_parts(
+        cfg: TrainConfig,
+        params: GlobalParams,
+        backend: B,
+        dout: usize,
+        row_ids: Option<Vec<Vec<usize>>>,
+    ) -> Trainer<B> {
         let alive = vec![true; cfg.workers];
         let dead = vec![false; cfg.workers];
         let lost = vec![false; cfg.workers];
@@ -294,6 +324,9 @@ impl<B: Backend> Trainer<B> {
             newly_failed: Vec::new(),
             last_heartbeat: None,
             eval_version: 0,
+            posterior_cache: None,
+            posterior_hits: 0,
+            row_ids,
         }
     }
 
@@ -333,6 +366,10 @@ impl<B: Backend> Trainer<B> {
             .filter(|i| *i != k && !self.dead[*i])
             .collect();
         ensure!(!survivors.is_empty(), "cannot decommission the last worker");
+        // the moved rows keep their original indices: learn the current
+        // layout first if this trainer was built over a pre-initialised
+        // backend and has never gathered
+        self.ensure_row_ids()?;
 
         // fetch the doomed shard (replica read); the dead node keeps nothing
         let reply = self
@@ -364,8 +401,17 @@ impl<B: Backend> Trainer<B> {
                 other => bail!("survivor {s}: unexpected reply {other:?}"),
             }
         }
+        // mirror the re-shard in the row-index map: `partition` splits
+        // rows into the same contiguous chunks `split_even` produces,
+        // and `AppendShard` stacks each part at its survivor's tail
+        let ids = self.row_ids.as_mut().expect("ensured above");
+        let orphan_ids = std::mem::take(&mut ids[k]);
+        for (s, part_ids) in survivors.iter().zip(split_even(&orphan_ids, survivors.len())) {
+            ids[*s].extend(part_ids);
+        }
         self.dead[k] = true;
         self.objective_dirty = true;
+        self.posterior_cache = None;
         Ok(())
     }
 
@@ -384,6 +430,8 @@ impl<B: Backend> Trainer<B> {
                 self.lost[k] = true; // the shard died with the process
                 self.alive[k] = false;
                 self.objective_dirty = true;
+                // a dropped partial term changes the accumulated stats
+                self.posterior_cache = None;
                 if !self.newly_failed.contains(&k) {
                     self.newly_failed.push(k);
                 }
@@ -495,6 +543,10 @@ impl<B: Backend> Trainer<B> {
         let iter = self.log.iterations.len();
         self.rounds.clear();
         self.central_secs = 0.0;
+        // invalidate up front, not only at the end: an error mid-step
+        // can leave parameters/worker locals already moved, and a
+        // caller that catches it must never be served stale weights
+        self.posterior_cache = None;
         // NOTE: newly_failed is NOT cleared here — deaths absorbed
         // between steps (evaluate/current_stats/predict) carry into
         // this iteration's failure log instead of vanishing.
@@ -516,6 +568,7 @@ impl<B: Backend> Trainer<B> {
                     self.dead[k] = true;
                     self.lost[k] = true; // no chance to fetch the shard back
                     self.objective_dirty = true;
+                    self.posterior_cache = None;
                     self.newly_failed.push(k);
                 }
             }
@@ -622,6 +675,10 @@ impl<B: Backend> Trainer<B> {
         }
         failed.sort_unstable();
 
+        // the accepted step moved the global parameters (and, for the
+        // LVM, the workers' locals): any cached posterior is stale
+        self.posterior_cache = None;
+
         let f = accepted_f;
         self.log.iterations.push(IterationLog {
             iter,
@@ -680,10 +737,96 @@ impl<B: Backend> Trainer<B> {
     }
 
     /// Posterior weights at the current parameters.
+    ///
+    /// The first call after a parameter change runs one cluster
+    /// statistics round; the result is cached so every further
+    /// `posterior`/`predict`/`export_model` at the same parameters is
+    /// served centrally with zero map rounds and bit-identical
+    /// weights. Steps, local q(X) updates, re-sharding and node deaths
+    /// all invalidate the cache (event-driven, not version-compared).
     pub fn posterior(&mut self) -> Result<gp::PosteriorWeights> {
+        if let Some(w) = &self.posterior_cache {
+            self.posterior_hits += 1;
+            return Ok(w.clone());
+        }
         let stats = self.current_stats()?;
         let kmm = kernel::kmm(&self.params, self.cfg.jitter);
-        gp::bound::posterior_weights(&stats, &kmm, self.params.log_beta)
+        let w = gp::bound::posterior_weights(&stats, &kmm, self.params.log_beta)?;
+        self.posterior_cache = Some(w.clone());
+        Ok(w)
+    }
+
+    /// Posterior requests served from the cache since construction.
+    pub fn posterior_cache_hits(&self) -> u64 {
+        self.posterior_hits
+    }
+
+    /// Export the product of training as a self-contained, serializable
+    /// [`crate::model::TrainedModel`]: the global parameters, the
+    /// posterior weights over the m inducing points (computed from the
+    /// final statistics round — cached by `eval_version`, so exporting
+    /// after a `predict` costs no extra cluster round) and provenance.
+    /// Works over any backend; the artifact it returns needs none.
+    pub fn export_model(&mut self) -> Result<crate::model::TrainedModel> {
+        let weights = self.posterior()?;
+        let model = crate::model::TrainedModel {
+            params: self.params.clone(),
+            weights,
+            dout: self.dout,
+            jitter: self.cfg.jitter,
+            math_mode: self.cfg.math_mode,
+            meta: crate::model::ModelMeta {
+                artifact: self.cfg.artifact.clone(),
+                iterations: self.log.iterations.len() as u64,
+                final_bound: self.log.final_bound(),
+                seed: self.cfg.seed,
+            },
+        };
+        model.validate()?;
+        Ok(model)
+    }
+
+    /// Snapshot the global parameters mid-training (the optimiser
+    /// re-anchors on resume; worker-local q(X) state lives with the
+    /// shards and is not part of the global checkpoint).
+    pub fn save_checkpoint(&self, path: &std::path::Path) -> Result<()> {
+        let ckpt = crate::model::Checkpoint {
+            params: self.params.clone(),
+            iterations: self.log.iterations.len() as u64,
+            last_bound: self.log.final_bound(),
+            artifact: self.cfg.artifact.clone(),
+            math_mode: self.cfg.math_mode,
+            seed: self.cfg.seed,
+        };
+        ckpt.save(path)
+    }
+
+    /// Resume from a checkpoint: validate it against this trainer's
+    /// artifact and shapes, install its global parameters and reset the
+    /// optimiser state so SCG re-anchors at the restored point. Returns
+    /// the checkpoint's completed-iteration count.
+    pub fn restore_checkpoint(&mut self, path: &std::path::Path) -> Result<u64> {
+        let ckpt = crate::model::Checkpoint::load(path)?;
+        ensure!(
+            ckpt.artifact == self.cfg.artifact,
+            "checkpoint was trained under artifact {:?} but this trainer runs {:?}",
+            ckpt.artifact,
+            self.cfg.artifact
+        );
+        ensure!(
+            ckpt.params.m() == self.params.m() && ckpt.params.q() == self.params.q(),
+            "checkpoint shapes (m={}, q={}) do not match this trainer (m={}, q={})",
+            ckpt.params.m(),
+            ckpt.params.q(),
+            self.params.m(),
+            self.params.q()
+        );
+        self.params = ckpt.params.clone();
+        self.scg = None;
+        self.adam = None;
+        self.objective_dirty = true;
+        self.posterior_cache = None;
+        Ok(ckpt.iterations)
     }
 
     /// Fetch the live workers' current local parameters (gather; used by
@@ -691,14 +834,16 @@ impl<B: Backend> Trainer<B> {
     /// order. Any unavailable shard is an error — silently omitting one
     /// would leave rows missing from the assembled embedding. Workers
     /// whose process died with their shard (`lost`) therefore fail the
-    /// gather. Decommissioned workers keep the gather COMPLETE (their
-    /// rows moved to the survivors), but note the moved rows sit at the
-    /// survivors' shard tails: after a decommission the concatenated
-    /// row order is a permutation of the original dataset order, so
-    /// callers pairing rows 1:1 with dataset labels must re-gather
-    /// positions themselves (none of the in-tree experiments gather
-    /// after a decommission).
-    pub fn gather_locals(&mut self) -> Result<Vec<(Matrix, Matrix)>> {
+    /// gather.
+    ///
+    /// Each entry is `(row_ids, xmu, xvar)`: `row_ids[i]` is the
+    /// **original dataset row index** of shard row `i`. After a
+    /// [`Self::decommission`] the moved rows sit at the survivors'
+    /// tails, so the concatenated shard order is a permutation of the
+    /// dataset order — the indices let callers scatter rows back to
+    /// their original positions (see `experiments::common::gathered_xmu`)
+    /// instead of silently mispairing rows with labels.
+    pub fn gather_locals(&mut self) -> Result<Vec<(Vec<usize>, Matrix, Matrix)>> {
         if let Some(k) = (0..self.cfg.workers).find(|k| self.lost[*k]) {
             bail!(
                 "worker {k}'s shard was lost with its process (§5.2 drop path); \
@@ -707,7 +852,7 @@ impl<B: Backend> Trainer<B> {
         }
         let include: Vec<bool> = (0..self.cfg.workers).map(|k| !self.dead[k]).collect();
         let replies = self.backend.map_subset(&include, &Request::GatherLocals);
-        let mut out = Vec::new();
+        let mut locals = Vec::new();
         for (k, slot) in replies.into_iter().enumerate() {
             let Some(r) = slot else {
                 if include[k] {
@@ -716,12 +861,49 @@ impl<B: Backend> Trainer<B> {
                 continue;
             };
             match r.value {
-                Response::Locals { xmu, xvar } => out.push((xmu, xvar)),
+                Response::Locals { xmu, xvar } => locals.push((k, xmu, xvar)),
                 Response::Err(e) => bail!("worker {k} (gather): {e}"),
                 other => bail!("worker {k}: unexpected gather reply {other:?}"),
             }
         }
+        // `with_backend` bring-up: the layout is still the contiguous
+        // dataset order (no decommission can have run without row ids),
+        // so reconstruct the index map from the gathered shard sizes
+        if self.row_ids.is_none() {
+            let mut ids = vec![Vec::new(); self.cfg.workers];
+            let mut offset = 0usize;
+            for (k, xmu, _) in &locals {
+                ids[*k] = (offset..offset + xmu.rows()).collect();
+                offset += xmu.rows();
+            }
+            self.row_ids = Some(ids);
+        }
+        let row_ids = self.row_ids.as_ref().expect("populated above");
+        let mut out = Vec::with_capacity(locals.len());
+        for (k, xmu, xvar) in locals {
+            ensure!(
+                row_ids[k].len() == xmu.rows(),
+                "worker {k} gathered {} rows but the leader's row-index map holds {} \
+                 (shard mutated outside the trainer?)",
+                xmu.rows(),
+                row_ids[k].len()
+            );
+            out.push((row_ids[k].clone(), xmu, xvar));
+        }
         Ok(out)
+    }
+
+    /// Populate the row-index map for a `with_backend` bring-up by
+    /// gathering the current shard sizes (no-op when already known —
+    /// i.e. for every sharded constructor). Documented cost: the
+    /// gather ships each shard's full (xmu, xvar) back just to learn
+    /// its row count; acceptable because only the pre-initialised
+    /// `with_backend` escape hatch can reach it, and at most once.
+    fn ensure_row_ids(&mut self) -> Result<()> {
+        if self.row_ids.is_some() {
+            return Ok(());
+        }
+        self.gather_locals().map(|_| ())
     }
 
     /// Predict through the first live worker's executor (any node serves).
@@ -749,6 +931,23 @@ impl<B: Backend> Trainer<B> {
             other => bail!("worker {k}: unexpected predict reply {other:?}"),
         }
     }
+}
+
+/// Split a slice into `k` contiguous chunks with exactly the sizes
+/// [`partition`] produces (`base + 1` for the first `n % k` chunks) —
+/// the row-index mirror of the decommission re-shard.
+fn split_even(ids: &[usize], k: usize) -> Vec<Vec<usize>> {
+    let n = ids.len();
+    let base = n / k;
+    let extra = n % k;
+    let mut out = Vec::with_capacity(k);
+    let mut lo = 0;
+    for i in 0..k {
+        let hi = lo + base + usize::from(i < extra);
+        out.push(ids[lo..hi].to_vec());
+        lo = hi;
+    }
+    out
 }
 
 /// Partition a dataset into `k` contiguous shards of near-equal size
@@ -799,5 +998,27 @@ mod tests {
         assert!(sizes.iter().max().unwrap() - sizes.iter().min().unwrap() <= 1);
         // first row of shard 1 follows last row of shard 0
         assert_eq!(shards[1].y[(0, 0)], shards[0].len() as f64);
+    }
+
+    /// `split_even` must produce exactly the chunk sizes `partition`
+    /// produces — the invariant the decommission row-index mirror
+    /// rests on.
+    #[test]
+    fn split_even_mirrors_partition_chunking() {
+        for n in [0usize, 1, 5, 23, 24, 97] {
+            for k in [1usize, 2, 3, 5, 7] {
+                let ids: Vec<usize> = (100..100 + n).collect();
+                let chunks = split_even(&ids, k);
+                let xmu = Matrix::zeros(n, 2);
+                let shards = partition(&xmu, &xmu, &Matrix::zeros(n, 1), 0.0, k);
+                assert_eq!(chunks.len(), shards.len());
+                for (c, s) in chunks.iter().zip(&shards) {
+                    assert_eq!(c.len(), s.len(), "n={n} k={k}");
+                }
+                // order-preserving, covering, disjoint
+                let flat: Vec<usize> = chunks.into_iter().flatten().collect();
+                assert_eq!(flat, ids);
+            }
+        }
     }
 }

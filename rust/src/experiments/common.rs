@@ -103,16 +103,18 @@ pub fn ard_relevance(params: &GlobalParams) -> Vec<f64> {
     inv.iter().map(|v| v / max).collect()
 }
 
-/// Gather the full latent means from a trainer (ordered by worker).
+/// Gather the full latent means from a trainer, scattered back to
+/// **original dataset row order** via the per-row indices the gather
+/// returns — correct even after a decommission re-shard moved rows to
+/// the survivors' shard tails.
 pub fn gathered_xmu(t: &mut Trainer, q: usize) -> Result<Matrix> {
     let locals = t.gather_locals()?;
-    let n: usize = locals.iter().map(|(mu, _)| mu.rows()).sum();
+    let n: usize = locals.iter().map(|(_, mu, _)| mu.rows()).sum();
     let mut out = Matrix::zeros(n, q);
-    let mut row = 0;
-    for (mu, _) in &locals {
-        for i in 0..mu.rows() {
-            out.row_mut(row).copy_from_slice(mu.row(i));
-            row += 1;
+    for (ids, mu, _) in &locals {
+        for (i, &orig) in ids.iter().enumerate() {
+            anyhow::ensure!(orig < n, "gathered row index {orig} out of range (n={n})");
+            out.row_mut(orig).copy_from_slice(mu.row(i));
         }
     }
     Ok(out)

@@ -214,6 +214,44 @@ pub fn psi2_point(p: &GlobalParams, xmu_i: &[f64], xvar_i: &[f64]) -> Matrix {
     out
 }
 
+/// Fill `out` with Psi1 [b x m] into caller-owned workspaces — the
+/// allocation-free entry the standalone `model::Predictor` serves
+/// batches through. `ls2` must be the squared lengthscales
+/// `exp(2 log_ls)` and `sf2` the signal variance `exp(log_sf2)`; `dn`
+/// is a length-q denominator workspace. Runs the exact strict fill of
+/// [`psi1`], so the values are **bit-identical** to it (tested).
+pub fn psi1_into(
+    p: &GlobalParams,
+    xmu: &Matrix,
+    xvar: &Matrix,
+    ls2: &[f64],
+    sf2: f64,
+    dn: &mut [f64],
+    out: &mut Matrix,
+) {
+    psi1_fill(p, xmu, xvar, ls2, sf2, dn, out);
+}
+
+/// Fill `out` (length m*m, row-major) with one point's Psi2 block into
+/// caller-owned workspaces — the allocation-free sibling of
+/// [`psi2_point`], bit-identical to it (tested). `dn2` is a length-q
+/// denominator workspace; `ls2`/`sf2` as in [`psi1_into`].
+pub fn psi2_point_into(
+    z: &Matrix,
+    ls2: &[f64],
+    sf2: f64,
+    xmu_i: &[f64],
+    xvar_i: &[f64],
+    dn2: &mut [f64],
+    out: &mut [f64],
+) {
+    let log_scale = psi2_point_log_scale(ls2, xvar_i);
+    for (k, d) in dn2.iter_mut().enumerate() {
+        *d = ls2[k] + 2.0 * xvar_i[k];
+    }
+    psi2_point_fill(z, ls2, sf2, xmu_i, log_scale, dn2, out);
+}
+
 /// Fill `out` with one point's Psi2 block from the scratch's
 /// precomputed point-independent tables (`zq[(j,l,k)] = dz^2/(4 ls2)`,
 /// `zbar[(j,l,k)] = (z_j + z_l)/2`). Each table entry is computed by
@@ -1264,6 +1302,43 @@ mod tests {
         assert!(k.max_abs_diff(&k.transpose()) < 1e-15);
         for v in k.data() {
             assert!(*v > 0.0 && *v <= p.sf2() + 1e-14);
+        }
+    }
+
+    /// The `_into` psi fills (the standalone Predictor's hot path) must
+    /// be bit-identical to the allocating `psi1` / `psi2_point`.
+    #[test]
+    fn psi_into_variants_match_allocating_variants_bitwise() {
+        let p = params(5, 3, 17);
+        let mut rng = Rng::new(18);
+        let b = 7;
+        let xmu = Matrix::from_fn(b, 3, |_, _| rng.normal());
+        let xvar = Matrix::from_fn(b, 3, |_, _| 0.05 + rng.uniform());
+        let ls2: Vec<f64> = p.log_ls.iter().map(|l| (2.0 * l).exp()).collect();
+        let sf2 = p.sf2();
+
+        // deliberately dirty, mis-shaped workspaces
+        let mut dn = vec![f64::NAN; 3];
+        let mut out = Matrix::from_fn(2, 2, |_, _| f64::NAN);
+        psi1_into(&p, &xmu, &xvar, &ls2, sf2, &mut dn, &mut out);
+        let reference = psi1(&p, &xmu, &xvar);
+        assert_eq!((out.rows(), out.cols()), (b, 5));
+        for (a, r) in out.data().iter().zip(reference.data()) {
+            assert_eq!(a.to_bits(), r.to_bits(), "psi1_into diverged from psi1");
+        }
+
+        let mut dn2 = vec![f64::NAN; 3];
+        let mut block = vec![f64::NAN; 25];
+        for i in 0..b {
+            psi2_point_into(&p.z, &ls2, sf2, xmu.row(i), xvar.row(i), &mut dn2, &mut block);
+            let reference = psi2_point(&p, xmu.row(i), xvar.row(i));
+            for (a, r) in block.iter().zip(reference.data()) {
+                assert_eq!(
+                    a.to_bits(),
+                    r.to_bits(),
+                    "psi2_point_into diverged from psi2_point at point {i}"
+                );
+            }
         }
     }
 

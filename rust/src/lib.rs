@@ -19,8 +19,12 @@
 //!
 //! The native [`gp`] module owns the constant-size global step (the
 //! collapsed bound of eq. 3.3 and its hand-derived adjoints) plus a full
-//! native fallback used by the [`baselines`]. See `DESIGN.md` for the
-//! system inventory and the experiment index.
+//! native fallback used by the [`baselines`]. The [`model`] module is
+//! the train/serve split: a serializable [`model::TrainedModel`]
+//! artifact exported by the trainer, a cluster-free `Send + Sync`
+//! [`model::Predictor`], and the `gparml export/predict/serve` CLI
+//! story built on them (DESIGN.md §9). See `DESIGN.md` for the system
+//! inventory and the experiment index.
 
 pub mod baselines;
 pub mod cluster;
@@ -30,6 +34,7 @@ pub mod experiments;
 pub mod gp;
 pub mod linalg;
 pub mod mapreduce;
+pub mod model;
 pub mod optim;
 pub mod runtime;
 pub mod telemetry;

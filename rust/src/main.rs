@@ -6,10 +6,18 @@
 //! gparml train [--data synthetic|oilflow|digits] [--model reg|lvm] ...
 //!              [--math-mode strict|fast]          # execution policy
 //!              [--connect HOST:PORT,HOST:PORT]   # drive TCP workers
+//!              [--export MODEL] [--checkpoint F] [--resume F]
+//! gparml export [train flags] --out model.gpm   # train, then save the
+//!                                               # TrainedModel artifact
+//! gparml predict (--model model.gpm | --connect ADDR) [--n N] [--seed S]
+//!                [--out preds.csv]              # cluster-free serving
+//! gparml serve --model model.gpm --listen ADDR [--clients N]
 //! gparml worker (--listen ADDR | --connect LEADER) [--artifacts DIR]
 //!               [--math-mode strict|fast]         # pin; reject the other
 //! gparml bench psi [--config perf] [--reps R]    # writes BENCH_psi.json
+//! gparml bench predict [--points B] [--threads T] # BENCH_predict.json
 //! gparml bench check [--baseline F] [--current F] # CI regression gate
+//! gparml bench rebaseline [--headroom X]          # regenerate baseline
 //! gparml info                      # artifact manifest summary
 //! ```
 //!
@@ -18,6 +26,12 @@
 //! map rounds over the binary wire protocol until shutdown. A leader
 //! started with `train --connect a,b,c` drives those processes instead
 //! of in-process threads.
+//!
+//! The train/serve split (DESIGN.md §9): `export` persists the tiny
+//! product of training as a `TrainedModel` artifact; `predict` serves
+//! batches from it with **zero** training workers, either locally
+//! (`--model`) or against a running `serve` process (`--connect`).
+//! Predictions are bit-identical across all three paths.
 
 use anyhow::{bail, Context, Result};
 
@@ -26,6 +40,7 @@ use gparml::coordinator::{partition, GlobalOpt, ModelKind, TrainConfig, Trainer}
 use gparml::data::{digits, oilflow, synthetic};
 use gparml::experiments::{self, common};
 use gparml::linalg::Matrix;
+use gparml::model::{serve, Predictor, TrainedModel};
 use gparml::runtime::Manifest;
 use gparml::util::cli::Args;
 use gparml::util::rng::Rng;
@@ -41,34 +56,165 @@ fn main() -> Result<()> {
             experiments::run(name, &args)
         }
         Some("train") => train(&args),
+        Some("export") => export_cmd(&args),
+        Some("predict") => predict_cmd(&args),
+        Some("serve") => serve_cmd(&args),
         Some("worker") => worker(&args),
         Some("bench") => bench(&args),
         Some("info") => info(&args),
         _ => {
             eprintln!(
-                "usage: gparml <experiment|train|worker|bench|info> [flags]\n\
+                "usage: gparml <experiment|train|export|predict|serve|worker|bench|info> [flags]\n\
                  experiments: fig1 fig2 fig3 fig4 fig5 fig6 fig7 fig8 all\n\
                  common flags: --n --iters --workers --seed --out DIR --artifacts DIR\n\
                  cluster: gparml worker --connect LEADER_ADDR (or --listen ADDR),\n\
                           gparml train --connect W1,W2,... (synthetic dataset)\n\
+                 serving: gparml export [train flags] --out model.gpm,\n\
+                          gparml predict (--model F | --connect ADDR) [--out preds.csv],\n\
+                          gparml serve --model F --listen ADDR [--clients N]\n\
                  math:    --math-mode strict|fast on train/bench/worker (DESIGN.md §8)\n\
-                 bench:   gparml bench psi [--config perf] [--points B] [--reps R]\n\
-                          [--out BENCH_psi.json],\n\
-                          gparml bench check [--baseline F] [--current F] [--max-regress X]"
+                 bench:   gparml bench psi [--config perf] [--points B] [--reps R],\n\
+                          gparml bench predict [--points B] [--threads T],\n\
+                          gparml bench check [--baseline F] [--current F] [--max-regress X],\n\
+                          gparml bench rebaseline [--headroom X] [--out F]"
             );
             bail!("no command given")
         }
     }
 }
 
-/// Machine-readable hot-path benchmarks (`gparml bench psi`) and the
-/// CI regression gate over their JSON (`gparml bench check`).
+/// Machine-readable hot-path benchmarks (`gparml bench psi|predict`),
+/// the CI regression gate over their JSON (`gparml bench check`) and
+/// in-place baseline regeneration (`gparml bench rebaseline`).
 fn bench(args: &Args) -> Result<()> {
     match args.positional.get(1).map(|s| s.as_str()) {
         Some("psi") => gparml::runtime::psibench::run(args),
+        Some("predict") => gparml::model::bench::run(args),
         Some("check") => gparml::runtime::psibench::check(args),
-        other => bail!("usage: gparml bench <psi|check> [flags] (got {other:?})"),
+        Some("rebaseline") => gparml::runtime::psibench::rebaseline(args),
+        other => bail!("usage: gparml bench <psi|predict|check|rebaseline> [flags] (got {other:?})"),
     }
+}
+
+/// `gparml export`: run the `train` flow, then persist the trained
+/// model (`--out`, default `model.gpm`).
+fn export_cmd(args: &Args) -> Result<()> {
+    let mut args = args.clone();
+    let out = args.get_str("out", "model.gpm").to_string();
+    args.flags.insert("export".into(), out);
+    args.flags.remove("out"); // `--out` is the artifact path here, not a results dir
+    train(&args)
+}
+
+/// Deterministic test points for the predict CLI: both a local and a
+/// remote client at the same `--n`/`--seed` generate identical batches,
+/// so their outputs can be diffed byte-for-byte.
+fn predict_points(n: usize, q: usize, seed: u64) -> (Matrix, Matrix) {
+    let mut rng = Rng::new(seed ^ 0x9E3779B97F4A7C15);
+    let xt_mu = Matrix::from_fn(n, q, |_, _| rng.range(-2.0, 2.0));
+    (xt_mu, Matrix::zeros(n, q))
+}
+
+/// Write predictions as CSV with round-trip-exact float formatting
+/// (`{:.17e}`), so two bit-identical prediction paths produce
+/// byte-identical files.
+fn write_predictions(
+    path: &str,
+    xt_mu: &Matrix,
+    mean: &Matrix,
+    var: &[f64],
+) -> Result<()> {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    let (q, d) = (xt_mu.cols(), mean.cols());
+    for j in 0..q {
+        let _ = write!(out, "x{j},");
+    }
+    for j in 0..d {
+        let _ = write!(out, "mean{j},");
+    }
+    out.push_str("var\n");
+    for i in 0..xt_mu.rows() {
+        for j in 0..q {
+            let _ = write!(out, "{:.17e},", xt_mu[(i, j)]);
+        }
+        for j in 0..d {
+            let _ = write!(out, "{:.17e},", mean[(i, j)]);
+        }
+        let _ = writeln!(out, "{:.17e}", var[i]);
+    }
+    std::fs::write(path, out).with_context(|| format!("writing predictions to {path}"))?;
+    println!("wrote {path}");
+    Ok(())
+}
+
+/// `gparml predict`: serve a batch from a model artifact — locally
+/// (`--model PATH`, zero processes) or against a running predict
+/// server (`--connect ADDR`, zero local model state).
+fn predict_cmd(args: &Args) -> Result<()> {
+    let n = args.get_usize("n", 64)?;
+    let seed = args.get_usize("seed", 0)? as u64;
+
+    let (xt_mu, mean, var, origin) = if let Some(addr) = args.get("connect") {
+        let mut stream = serve::connect(addr)?;
+        let (m, q, d) = serve::remote_model_info(&mut stream)?;
+        println!("predict server at {addr}: m={m}, q={q}, d={d}");
+        let (xt_mu, xt_var) = predict_points(n, q, seed);
+        let (mean, var) = serve::remote_predict(&mut stream, &xt_mu, &xt_var)?;
+        serve::hangup(&mut stream);
+        (xt_mu, mean, var, format!("server {addr}"))
+    } else {
+        let path = args
+            .get("model")
+            .context("predict needs --model PATH or --connect ADDR")?;
+        let model = TrainedModel::load(std::path::Path::new(path))?;
+        let pred = Predictor::new(&model)?;
+        println!(
+            "model {path}: m={}, q={}, d={} (artifact {:?}, {} iterations, final bound {:.3})",
+            pred.m(),
+            pred.q(),
+            pred.dout(),
+            model.meta.artifact,
+            model.meta.iterations,
+            model.meta.final_bound
+        );
+        let (xt_mu, xt_var) = predict_points(n, pred.q(), seed);
+        let (mean, var) = pred.predict(&xt_mu, &xt_var)?;
+        (xt_mu, mean, var, format!("model {path}"))
+    };
+
+    let mean_abs =
+        mean.data().iter().map(|v| v.abs()).sum::<f64>() / mean.data().len().max(1) as f64;
+    let var_mean = var.iter().sum::<f64>() / var.len().max(1) as f64;
+    println!(
+        "predicted {n} points from {origin}: mean|mean| = {mean_abs:.6}, mean var = {var_mean:.6}"
+    );
+    if let Some(path) = args.get("out") {
+        write_predictions(path, &xt_mu, &mean, &var)?;
+    }
+    Ok(())
+}
+
+/// `gparml serve`: the multi-client TCP predict server — one loaded
+/// model, one `Predictor`, a thread per client, zero training workers.
+fn serve_cmd(args: &Args) -> Result<()> {
+    let path = args.get("model").context("serve needs --model PATH")?;
+    let model = TrainedModel::load(std::path::Path::new(path))?;
+    let pred = Predictor::new(&model)?;
+    let listen = args.get_str("listen", "127.0.0.1:0");
+    let max_clients = args.get_usize("clients", 0)? as u64;
+    let listener =
+        std::net::TcpListener::bind(listen).with_context(|| format!("binding {listen}"))?;
+    println!(
+        "gparml serve: {path} (m={}, q={}, d={}) listening on {}",
+        pred.m(),
+        pred.q(),
+        pred.dout(),
+        listener.local_addr()?
+    );
+    let served = serve::serve(&listener, &pred, max_clients)?;
+    eprintln!("[gparml-serve] exiting after {served} client(s)");
+    Ok(())
 }
 
 /// Run this process as a cluster worker node. `--math-mode` pins the
@@ -187,14 +333,14 @@ fn train(args: &Args) -> Result<()> {
                 Some(addrs) => {
                     println!("cluster: {} TCP worker processes ({addrs:?})", addrs.len());
                     let mut t = Trainer::connect_tcp(cfg, params, shards, &addrs)?;
-                    run_loop(&mut t, iters)?;
+                    run_loop(&mut t, iters, args)?;
                     let (tx, rx) = t.log.total_network_bytes();
                     println!("network: {tx} B to workers, {rx} B back");
                     Ok(())
                 }
                 None => {
                     let mut t = Trainer::new(cfg, params, shards)?;
-                    run_loop(&mut t, iters)
+                    run_loop(&mut t, iters, args)
                 }
             }
         }
@@ -202,22 +348,34 @@ fn train(args: &Args) -> Result<()> {
             let n = args.get_usize("n", 600)?;
             let data = oilflow::generate(n, seed);
             let (mut t, _) = common::lvm_trainer(args, "oil", &data.y, 32, 6, workers, seed)?;
-            run_loop(&mut t, iters)
+            run_loop(&mut t, iters, args)
         }
         "digits" => {
             let n = args.get_usize("n", 300)?;
             let data = digits::generate(n, 0.02, seed);
             let (mut t, _) = common::lvm_trainer(args, "digits", &data.y, 48, 8, workers, seed)?;
-            run_loop(&mut t, iters)
+            run_loop(&mut t, iters, args)
         }
         other => bail!("unknown dataset {other:?} (synthetic|oilflow|digits)"),
     }
 }
 
-fn run_loop<B: Backend>(t: &mut Trainer<B>, iters: usize) -> Result<()> {
+/// The outer training loop plus the train/serve-split plumbing:
+/// `--resume CKPT` restores global parameters before iterating,
+/// `--checkpoint CKPT` snapshots them after every iteration, and
+/// `--export MODEL` persists the `TrainedModel` artifact at the end.
+fn run_loop<B: Backend>(t: &mut Trainer<B>, iters: usize, args: &Args) -> Result<()> {
+    if let Some(path) = args.get("resume") {
+        let done = t.restore_checkpoint(std::path::Path::new(path))?;
+        println!("resumed from {path} ({done} iterations completed there)");
+    }
     println!("training: {} workers, {} iterations", t.workers(), iters);
+    let checkpoint = args.get("checkpoint");
     for i in 0..iters {
         let f = t.step()?;
+        if let Some(path) = checkpoint {
+            t.save_checkpoint(std::path::Path::new(path))?;
+        }
         if i % 5 == 0 || i == iters - 1 {
             let it = t.log.iterations.last().unwrap();
             println!(
@@ -234,5 +392,16 @@ fn run_loop<B: Backend>(t: &mut Trainer<B>, iters: usize) -> Result<()> {
         t.log.mean_iteration_modeled_secs(),
         t.log.mean_load_gap() * 100.0
     );
+    if let Some(path) = args.get("export") {
+        let model = t.export_model()?;
+        model.save(std::path::Path::new(path))?;
+        println!(
+            "exported TrainedModel to {path} (m={}, q={}, d={}, final bound {:.3})",
+            model.m(),
+            model.q(),
+            model.dout,
+            model.meta.final_bound
+        );
+    }
     Ok(())
 }

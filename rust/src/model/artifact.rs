@@ -1,0 +1,511 @@
+//! The serializable model artifact: binary format, strict validation.
+//!
+//! ## File layout
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic  "GPMA"
+//! 4       2     format version (u16 LE) — mismatch is rejected on load
+//! 6       1     kind (1 = TrainedModel, 2 = Checkpoint)
+//! 7       4     payload length (u32 LE)
+//! 11      len   payload (kind-specific, wire `Enc`/`Dec` encoding)
+//! 11+len  8     FNV-1a 64-bit checksum of the payload (u64 LE)
+//! ```
+//!
+//! The payload reuses the cluster wire protocol's encoding primitives
+//! ([`Enc`]/[`Dec`]): little-endian integers, f64 via
+//! `to_le_bytes` — every parameter round-trips **bit-for-bit**, so a
+//! saved model predicts bit-identically to the trainer that exported
+//! it (tested in `tests/model.rs`). Loading validates, in order: file
+//! length, magic, format version, kind, payload length, checksum,
+//! exact payload consumption, then shapes and finiteness — a corrupt
+//! or mismatched file fails with a descriptive error instead of ever
+//! mispredicting.
+
+use std::path::Path;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::cluster::wire::{Dec, Enc};
+use crate::gp::{GlobalParams, MathMode, PosteriorWeights};
+
+/// Artifact file magic: "GPMA" (GParML Model Artifact).
+pub const MAGIC: [u8; 4] = *b"GPMA";
+/// Current artifact format version. Bump on any layout change.
+pub const FORMAT_VERSION: u16 = 1;
+
+const KIND_MODEL: u8 = 1;
+const KIND_CHECKPOINT: u8 = 2;
+const HEADER_LEN: usize = 11;
+const CHECKSUM_LEN: usize = 8;
+
+/// Training provenance carried inside a [`TrainedModel`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelMeta {
+    /// Artifact (shape) configuration the cluster trained under.
+    pub artifact: String,
+    /// Outer iterations the exporting trainer had completed.
+    pub iterations: u64,
+    /// Bound F at the last completed iteration (NaN if none ran).
+    pub final_bound: f64,
+    /// Training seed.
+    pub seed: u64,
+}
+
+/// The self-contained product of training: everything the serving path
+/// needs, nothing the cluster needs. O(m·(m + q + d)) scalars —
+/// constant in the dataset size, exactly the paper's point that the
+/// posterior lives on the m inducing points.
+#[derive(Debug, Clone)]
+pub struct TrainedModel {
+    /// Global parameters G = (Z, log lengthscales, log sf2, log beta).
+    pub params: GlobalParams,
+    /// Posterior weights (w1, wv, q(u) moments) at those parameters.
+    pub weights: PosteriorWeights,
+    /// Output dimensionality d.
+    pub dout: usize,
+    /// Kmm jitter the trainer used (provenance; prediction consumes the
+    /// already-factored weights and never refactors Kmm).
+    pub jitter: f64,
+    /// Execution policy training ran under. Serving always runs the
+    /// strict kernels; the mode records how the weights were produced.
+    pub math_mode: MathMode,
+    pub meta: ModelMeta,
+}
+
+impl TrainedModel {
+    pub fn m(&self) -> usize {
+        self.params.m()
+    }
+
+    pub fn q(&self) -> usize {
+        self.params.q()
+    }
+
+    /// Strict structural validation: shapes consistent, every number
+    /// finite (the provenance `final_bound` may be NaN — a model can be
+    /// exported before any iteration ran).
+    pub fn validate(&self) -> Result<()> {
+        let (m, q, d) = (self.m(), self.q(), self.dout);
+        ensure!(m > 0 && q > 0 && d > 0, "degenerate model shapes (m={m}, q={q}, d={d})");
+        ensure!(
+            self.params.log_ls.len() == q,
+            "log lengthscales have length {} but Z has q={q} columns",
+            self.params.log_ls.len()
+        );
+        let shape = |name: &str, mat: &crate::linalg::Matrix, rows: usize, cols: usize| {
+            ensure!(
+                mat.rows() == rows && mat.cols() == cols,
+                "{name} is {}x{} but the model shapes (m={m}, q={q}, d={d}) require {rows}x{cols}",
+                mat.rows(),
+                mat.cols()
+            );
+            Ok(())
+        };
+        shape("w1", &self.weights.w1, m, d)?;
+        shape("wv", &self.weights.wv, m, m)?;
+        shape("qu_mean", &self.weights.qu_mean, m, d)?;
+        shape("qu_cov", &self.weights.qu_cov, m, m)?;
+        ensure!(
+            self.jitter.is_finite() && self.jitter >= 0.0,
+            "non-finite or negative jitter {}",
+            self.jitter
+        );
+        let finite = |name: &str, vals: &[f64]| {
+            ensure!(
+                vals.iter().all(|v| v.is_finite()),
+                "{name} contains a non-finite value — refusing to predict from it"
+            );
+            Ok(())
+        };
+        finite("Z", self.params.z.data())?;
+        finite("log lengthscales", &self.params.log_ls)?;
+        finite("log sf2 / log beta", &[self.params.log_sf2, self.params.log_beta])?;
+        finite("w1", self.weights.w1.data())?;
+        finite("wv", self.weights.wv.data())?;
+        finite("qu_mean", self.weights.qu_mean.data())?;
+        finite("qu_cov", self.weights.qu_cov.data())?;
+        Ok(())
+    }
+
+    /// Serialise to bytes (header + payload + checksum).
+    pub fn to_bytes(&self) -> Result<Vec<u8>> {
+        self.validate()?;
+        let mut e = Enc::new();
+        e.params(&self.params);
+        e.mat(&self.weights.w1);
+        e.mat(&self.weights.wv);
+        e.mat(&self.weights.qu_mean);
+        e.mat(&self.weights.qu_cov);
+        e.u32(self.dout as u32);
+        e.f64(self.jitter);
+        e.u8(self.math_mode.code());
+        e.str(&self.meta.artifact);
+        e.u64(self.meta.iterations);
+        e.f64(self.meta.final_bound);
+        e.u64(self.meta.seed);
+        Ok(frame(KIND_MODEL, e.into_bytes()))
+    }
+
+    /// Deserialise from bytes with full validation.
+    pub fn from_bytes(bytes: &[u8]) -> Result<TrainedModel> {
+        let payload = unframe(bytes, KIND_MODEL)?;
+        let mut d = Dec::new(payload);
+        let params = d.params()?;
+        let w1 = d.mat()?;
+        let wv = d.mat()?;
+        let qu_mean = d.mat()?;
+        let qu_cov = d.mat()?;
+        let dout = d.u32()? as usize;
+        let jitter = d.f64()?;
+        let mode_code = d.u8()?;
+        let math_mode = MathMode::from_code(mode_code)
+            .with_context(|| format!("unknown math mode code {mode_code} in model file"))?;
+        let meta = ModelMeta {
+            artifact: d.str()?,
+            iterations: d.u64()?,
+            final_bound: d.f64()?,
+            seed: d.u64()?,
+        };
+        d.finish()?;
+        let model = TrainedModel {
+            params,
+            weights: PosteriorWeights {
+                w1,
+                wv,
+                qu_mean,
+                qu_cov,
+            },
+            dout,
+            jitter,
+            math_mode,
+            meta,
+        };
+        model.validate()?;
+        Ok(model)
+    }
+
+    /// Write the artifact to `path` (atomically — see [`write_atomic`]).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let bytes = self.to_bytes()?;
+        write_atomic(path, &bytes)
+            .with_context(|| format!("writing model artifact {}", path.display()))
+    }
+
+    /// Load and validate an artifact from `path`.
+    pub fn load(path: &Path) -> Result<TrainedModel> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading model artifact {}", path.display()))?;
+        Self::from_bytes(&bytes)
+            .with_context(|| format!("loading model artifact {}", path.display()))
+    }
+}
+
+/// A mid-training snapshot of the global parameters — enough to resume
+/// the outer SCG loop on a fresh cluster (the optimiser re-anchors;
+/// worker-local q(X) state lives with the data shards, not here).
+#[derive(Debug, Clone)]
+pub struct Checkpoint {
+    pub params: GlobalParams,
+    /// Outer iterations completed when the snapshot was taken.
+    pub iterations: u64,
+    /// Bound F at the last completed iteration (NaN if none ran).
+    pub last_bound: f64,
+    /// Artifact (shape) configuration of the saving trainer.
+    pub artifact: String,
+    pub math_mode: MathMode,
+    pub seed: u64,
+}
+
+impl Checkpoint {
+    pub fn to_bytes(&self) -> Result<Vec<u8>> {
+        ensure!(
+            self.params.z.data().iter().all(|v| v.is_finite())
+                && self.params.log_ls.iter().all(|v| v.is_finite())
+                && self.params.log_sf2.is_finite()
+                && self.params.log_beta.is_finite(),
+            "checkpoint parameters contain a non-finite value"
+        );
+        let mut e = Enc::new();
+        e.params(&self.params);
+        e.u64(self.iterations);
+        e.f64(self.last_bound);
+        e.str(&self.artifact);
+        e.u8(self.math_mode.code());
+        e.u64(self.seed);
+        Ok(frame(KIND_CHECKPOINT, e.into_bytes()))
+    }
+
+    pub fn from_bytes(bytes: &[u8]) -> Result<Checkpoint> {
+        let payload = unframe(bytes, KIND_CHECKPOINT)?;
+        let mut d = Dec::new(payload);
+        let params = d.params()?;
+        let iterations = d.u64()?;
+        let last_bound = d.f64()?;
+        let artifact = d.str()?;
+        let mode_code = d.u8()?;
+        let math_mode = MathMode::from_code(mode_code)
+            .with_context(|| format!("unknown math mode code {mode_code} in checkpoint"))?;
+        let seed = d.u64()?;
+        d.finish()?;
+        ensure!(
+            params.m() > 0 && params.q() > 0 && params.log_ls.len() == params.q(),
+            "checkpoint parameter shapes are inconsistent"
+        );
+        Ok(Checkpoint {
+            params,
+            iterations,
+            last_bound,
+            artifact,
+            math_mode,
+            seed,
+        })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        write_atomic(path, &self.to_bytes()?)
+            .with_context(|| format!("writing checkpoint {}", path.display()))
+    }
+
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading checkpoint {}", path.display()))?;
+        Self::from_bytes(&bytes).with_context(|| format!("loading checkpoint {}", path.display()))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// framing
+// ---------------------------------------------------------------------------
+
+/// Write `bytes` to `path` via a same-directory temp file + rename, so
+/// a crash mid-write can never truncate an existing artifact in place
+/// — `train --checkpoint` rewrites the same file every iteration, and
+/// the previous good snapshot must survive a kill at any instant.
+fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
+    let mut tmp = path.as_os_str().to_os_string();
+    tmp.push(format!(".tmp.{}", std::process::id()));
+    let tmp = std::path::PathBuf::from(tmp);
+    std::fs::write(&tmp, bytes).with_context(|| format!("writing {}", tmp.display()))?;
+    std::fs::rename(&tmp, path).with_context(|| {
+        let _ = std::fs::remove_file(&tmp);
+        format!("renaming {} into place", tmp.display())
+    })
+}
+
+/// FNV-1a 64-bit — catches byte-level corruption long before a wrong
+/// number could reach a prediction.
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in bytes {
+        h ^= u64::from(*b);
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+fn frame(kind: u8, payload: Vec<u8>) -> Vec<u8> {
+    let mut out = Vec::with_capacity(HEADER_LEN + payload.len() + CHECKSUM_LEN);
+    out.extend_from_slice(&MAGIC);
+    out.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+    out.push(kind);
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    let sum = fnv1a64(&payload);
+    out.extend_from_slice(&payload);
+    out.extend_from_slice(&sum.to_le_bytes());
+    out
+}
+
+fn unframe(bytes: &[u8], expect_kind: u8) -> Result<&[u8]> {
+    ensure!(
+        bytes.len() >= HEADER_LEN + CHECKSUM_LEN,
+        "truncated artifact: {} bytes is smaller than the fixed framing",
+        bytes.len()
+    );
+    ensure!(
+        bytes[..4] == MAGIC,
+        "bad artifact magic {:02x?} (expected GPMA — is this a gparml model file?)",
+        &bytes[..4]
+    );
+    let version = u16::from_le_bytes([bytes[4], bytes[5]]);
+    ensure!(
+        version == FORMAT_VERSION,
+        "artifact format version mismatch: file is v{version}, this build reads v{FORMAT_VERSION}"
+    );
+    let kind = bytes[6];
+    let kind_name = |k: u8| match k {
+        KIND_MODEL => "TrainedModel",
+        KIND_CHECKPOINT => "Checkpoint",
+        _ => "unknown",
+    };
+    ensure!(
+        kind == expect_kind,
+        "artifact kind mismatch: file holds a {} (kind {kind}), expected a {} (kind {expect_kind})",
+        kind_name(kind),
+        kind_name(expect_kind)
+    );
+    let len = u32::from_le_bytes([bytes[7], bytes[8], bytes[9], bytes[10]]) as usize;
+    ensure!(
+        bytes.len() == HEADER_LEN + len + CHECKSUM_LEN,
+        "truncated or oversized artifact: header claims a {len}-byte payload but the file \
+         holds {} payload bytes",
+        bytes.len().saturating_sub(HEADER_LEN + CHECKSUM_LEN)
+    );
+    let payload = &bytes[HEADER_LEN..HEADER_LEN + len];
+    let stored = u64::from_le_bytes(bytes[HEADER_LEN + len..].try_into().unwrap());
+    let actual = fnv1a64(payload);
+    ensure!(
+        stored == actual,
+        "artifact checksum mismatch (stored {stored:#018x}, computed {actual:#018x}) — \
+         the file is corrupt"
+    );
+    Ok(payload)
+}
+
+/// A structurally valid model with pseudo-random contents (unit-test
+/// fixture shared by the `model` submodules).
+#[cfg(test)]
+pub(crate) fn sample_model(seed: u64, m: usize, q: usize, d: usize) -> TrainedModel {
+    use crate::linalg::Matrix;
+    use crate::util::rng::Rng;
+    let mut rng = Rng::new(seed);
+    let params = GlobalParams {
+        z: Matrix::from_fn(m, q, |_, _| rng.normal()),
+        log_ls: (0..q).map(|_| 0.2 * rng.normal()).collect(),
+        log_sf2: 0.1,
+        log_beta: 1.3,
+    };
+    let sym = |rng: &mut Rng| Matrix::from_fn(m, m, |_, _| rng.normal()).symmetrize();
+    TrainedModel {
+        weights: PosteriorWeights {
+            w1: Matrix::from_fn(m, d, |_, _| rng.normal()),
+            wv: sym(&mut rng),
+            qu_mean: Matrix::from_fn(m, d, |_, _| rng.normal()),
+            qu_cov: sym(&mut rng),
+        },
+        params,
+        dout: d,
+        jitter: 1e-6,
+        math_mode: MathMode::Strict,
+        meta: ModelMeta {
+            artifact: "test".into(),
+            iterations: 17,
+            final_bound: -123.456,
+            seed,
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Matrix;
+
+    #[test]
+    fn model_roundtrip_is_bitwise() {
+        let m0 = sample_model(3, 6, 2, 3);
+        let bytes = m0.to_bytes().unwrap();
+        let m1 = TrainedModel::from_bytes(&bytes).unwrap();
+        for (a, b) in m0.params.flatten().iter().zip(m1.params.flatten()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for (x, y) in [
+            (&m0.weights.w1, &m1.weights.w1),
+            (&m0.weights.wv, &m1.weights.wv),
+            (&m0.weights.qu_mean, &m1.weights.qu_mean),
+            (&m0.weights.qu_cov, &m1.weights.qu_cov),
+        ] {
+            assert_eq!(x.max_abs_diff(y), 0.0);
+            for (a, b) in x.data().iter().zip(y.data()) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+        assert_eq!(m1.dout, 3);
+        assert_eq!(m1.jitter, 1e-6);
+        assert_eq!(m1.math_mode, MathMode::Strict);
+        assert_eq!(m1.meta, m0.meta);
+    }
+
+    #[test]
+    fn checkpoint_roundtrip_is_bitwise() {
+        let model = sample_model(4, 5, 3, 2);
+        let c0 = Checkpoint {
+            params: model.params.clone(),
+            iterations: 9,
+            last_bound: -42.0,
+            artifact: "small".into(),
+            math_mode: MathMode::Fast,
+            seed: 7,
+        };
+        let c1 = Checkpoint::from_bytes(&c0.to_bytes().unwrap()).unwrap();
+        for (a, b) in c0.params.flatten().iter().zip(c1.params.flatten()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(c1.iterations, 9);
+        assert_eq!(c1.artifact, "small");
+        assert_eq!(c1.math_mode, MathMode::Fast);
+        assert_eq!(c1.seed, 7);
+    }
+
+    #[test]
+    fn every_truncation_is_rejected() {
+        let bytes = sample_model(5, 4, 2, 2).to_bytes().unwrap();
+        for cut in 0..bytes.len() {
+            let err = TrainedModel::from_bytes(&bytes[..cut]).unwrap_err();
+            let msg = format!("{err:#}");
+            assert!(
+                msg.contains("truncated") || msg.contains("magic"),
+                "cut at {cut}: unhelpful error {msg}"
+            );
+        }
+    }
+
+    #[test]
+    fn every_single_byte_corruption_is_rejected() {
+        let bytes = sample_model(6, 4, 2, 2).to_bytes().unwrap();
+        // flipping any single bit anywhere in the file must fail the
+        // load — never silently change a prediction
+        for i in 0..bytes.len() {
+            let mut bad = bytes.clone();
+            bad[i] ^= 0x40;
+            assert!(
+                TrainedModel::from_bytes(&bad).is_err(),
+                "corruption at byte {i} was not detected"
+            );
+        }
+    }
+
+    #[test]
+    fn wrong_version_kind_and_magic_are_rejected() {
+        let bytes = sample_model(7, 3, 2, 2).to_bytes().unwrap();
+
+        let mut v = bytes.clone();
+        v[4] = 0xFF;
+        let msg = format!("{:#}", TrainedModel::from_bytes(&v).unwrap_err());
+        assert!(msg.contains("version"), "{msg}");
+
+        let msg = format!("{:#}", Checkpoint::from_bytes(&bytes).unwrap_err());
+        assert!(msg.contains("kind"), "{msg}");
+
+        let mut g = bytes;
+        g[0] = b'X';
+        let msg = format!("{:#}", TrainedModel::from_bytes(&g).unwrap_err());
+        assert!(msg.contains("magic"), "{msg}");
+    }
+
+    #[test]
+    fn nonfinite_weights_are_rejected() {
+        let mut m = sample_model(8, 3, 2, 2);
+        m.weights.w1[(1, 0)] = f64::NAN;
+        let msg = format!("{:#}", m.to_bytes().unwrap_err());
+        assert!(msg.contains("non-finite"), "{msg}");
+    }
+
+    #[test]
+    fn shape_mismatch_is_rejected() {
+        let mut m = sample_model(9, 4, 2, 3);
+        m.weights.w1 = Matrix::zeros(4, 2); // d says 3
+        let msg = format!("{:#}", m.validate().unwrap_err());
+        assert!(msg.contains("w1"), "{msg}");
+    }
+}

@@ -1,0 +1,143 @@
+//! `gparml bench predict` — machine-readable throughput benchmark of
+//! the standalone [`Predictor`] serving path, single-threaded and
+//! concurrent (`BENCH_predict.json`, same style as `BENCH_psi.json`).
+//!
+//! The concurrent series shares ONE `Predictor` across `--threads`
+//! OS threads (each with its own [`PredictScratch`]), which is the
+//! exact shape of the `gparml serve` hot path; per-thread times are
+//! thread-CPU seconds, so the numbers are stable on the single-core
+//! container (the modeled-cluster clock of DESIGN.md §5).
+
+use anyhow::{Context, Result};
+
+use super::artifact::{ModelMeta, TrainedModel};
+use super::predictor::{PredictScratch, Predictor};
+use crate::gp::{GlobalParams, MathMode, PosteriorWeights};
+use crate::linalg::Matrix;
+use crate::util::bench::bench;
+use crate::util::cli::Args;
+use crate::util::rng::Rng;
+use crate::util::stats;
+
+/// Run the predictor benchmark.
+///
+/// Flags: `--config` (artifact shape, default `perf`), `--points`
+/// (batch size, default 512), `--reps`, `--threads` (default 4),
+/// `--model PATH` (bench a real exported model instead of the
+/// synthetic one), `--out` (default `BENCH_predict.json`),
+/// `--artifacts DIR`.
+pub fn run(args: &Args) -> Result<()> {
+    let reps = args.get_usize("reps", 10)?.max(1);
+    let threads = args.get_usize("threads", 4)?.max(1);
+    let b = args.get_usize("points", 512)?.max(1);
+    let out_path = args.get_str("out", "BENCH_predict.json");
+
+    let (model, cfg_name) = match args.get("model") {
+        Some(path) => (
+            TrainedModel::load(std::path::Path::new(path))?,
+            path.to_string(),
+        ),
+        None => {
+            let cfg_name = args.get_str("config", "perf");
+            let dir = args
+                .get("artifacts")
+                .map(std::path::PathBuf::from)
+                .unwrap_or_else(crate::runtime::default_artifacts_dir);
+            let manifest = crate::runtime::Manifest::load(&dir)?;
+            let art = manifest.config(cfg_name)?;
+            (synthetic_model(art.m, art.q, art.d, 42), cfg_name.to_string())
+        }
+    };
+    let pred = Predictor::new(&model)?;
+    let (m, q, d) = (pred.m(), pred.q(), pred.dout());
+
+    let mut rng = Rng::new(7);
+    let xt_mu = Matrix::from_fn(b, q, |_, _| rng.normal());
+    let xt_var = Matrix::from_fn(b, q, |_, _| 0.1 * rng.uniform());
+
+    println!("bench predict: {cfg_name} (b={b}, m={m}, q={q}, d={d}), {reps} reps, {threads} threads");
+
+    // single-thread batched serving: one scratch, reused per batch
+    let mut scratch = PredictScratch::new();
+    let mut mean = Matrix::zeros(0, 0);
+    let mut var = Vec::new();
+    let single = bench("predict batched (1 thread)", 1, reps, || {
+        pred.predict_into(&xt_mu, &xt_var, &mut scratch, &mut mean, &mut var)
+            .unwrap();
+    });
+
+    // concurrent serving: the same Predictor shared by all threads —
+    // the barrier model reports the slowest thread's median, i.e. what
+    // a serve deployment would observe per batch under full load
+    let per_thread: Vec<f64> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..threads)
+            .map(|t| {
+                let pred = &pred;
+                let xt_mu = &xt_mu;
+                let xt_var = &xt_var;
+                s.spawn(move || {
+                    let mut scratch = PredictScratch::new();
+                    let mut mean = Matrix::zeros(0, 0);
+                    let mut var = Vec::new();
+                    let r = bench(&format!("predict batched (thread {t})"), 1, reps, || {
+                        pred.predict_into(xt_mu, xt_var, &mut scratch, &mut mean, &mut var)
+                            .unwrap();
+                    });
+                    r.median_s
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let concurrent_median = stats::max(&per_thread);
+
+    let per_point = |median_s: f64| median_s * 1e9 / b as f64;
+    println!(
+        "standalone predictor: {:.0} ns/point batched, {:.0} ns/point under {threads}-way sharing",
+        per_point(single.median_s),
+        per_point(concurrent_median),
+    );
+
+    let json = format!(
+        "{{\n  \"config\": \"{cfg_name}\",\n  \"points\": {b},\n  \"m\": {m},\n  \"q\": {q},\n  \
+         \"d\": {d},\n  \"reps\": {reps},\n  \"threads\": {threads},\n  \
+         \"predict_ns_per_point\": {:.1},\n  \"predict_concurrent_ns_per_point\": {:.1}\n}}\n",
+        per_point(single.median_s),
+        per_point(concurrent_median),
+    );
+    std::fs::write(out_path, json).with_context(|| format!("writing {out_path}"))?;
+    println!("wrote {out_path}");
+    Ok(())
+}
+
+/// A structurally valid model at the given shapes with pseudo-random
+/// weights — prediction cost does not depend on the values, only the
+/// shapes, so the bench does not need a trained artifact on disk.
+fn synthetic_model(m: usize, q: usize, d: usize, seed: u64) -> TrainedModel {
+    let mut rng = Rng::new(seed);
+    let params = GlobalParams {
+        z: Matrix::from_fn(m, q, |_, _| rng.range(-2.0, 2.0)),
+        log_ls: vec![0.0; q],
+        log_sf2: 0.0,
+        log_beta: 1.0,
+    };
+    let sym = |rng: &mut Rng| Matrix::from_fn(m, m, |_, _| 0.1 * rng.normal()).symmetrize();
+    TrainedModel {
+        weights: PosteriorWeights {
+            w1: Matrix::from_fn(m, d, |_, _| rng.normal()),
+            wv: sym(&mut rng),
+            qu_mean: Matrix::from_fn(m, d, |_, _| rng.normal()),
+            qu_cov: sym(&mut rng),
+        },
+        params,
+        dout: d,
+        jitter: 1e-6,
+        math_mode: MathMode::Strict,
+        meta: ModelMeta {
+            artifact: "synthetic-bench".into(),
+            iterations: 0,
+            final_bound: f64::NAN,
+            seed,
+        },
+    }
+}

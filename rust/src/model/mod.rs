@@ -1,0 +1,33 @@
+//! The train/serve split: a serializable model artifact and a
+//! cluster-free predictor (DESIGN.md §9).
+//!
+//! Training is the expensive, distributed part of the paper's
+//! algorithm; its *product* is tiny — the global parameters G and the
+//! posterior weights over the m inducing points. This module makes
+//! that product a first-class artifact:
+//!
+//! * [`TrainedModel`] — a versioned, checksummed, length-prefixed
+//!   binary file (the same encoding primitives as the cluster wire
+//!   protocol) holding `GlobalParams` + `PosteriorWeights` + shapes,
+//!   jitter, the training `MathMode` and provenance (artifact name,
+//!   iterations, final bound, seed). Produced by
+//!   `Trainer::export_model` / `gparml export`; corrupt, truncated or
+//!   mismatched files fail loudly on load, never mispredict.
+//! * [`Checkpoint`] — the same codec for mid-training global-parameter
+//!   snapshots (`Trainer::save_checkpoint` / `restore_checkpoint`).
+//! * [`Predictor`] — a read-only, `Send + Sync` serving handle built
+//!   from a `TrainedModel`: batched predictions with **no cluster**
+//!   and no allocation in the per-batch hot loop
+//!   ([`Predictor::predict_into`] + [`PredictScratch`]).
+//! * [`serve`] — a multi-client TCP predict server over the cluster
+//!   wire framing (`gparml serve` / `gparml predict --connect`).
+//! * [`bench`] — `gparml bench predict`, the standalone-predictor
+//!   throughput benchmark (`BENCH_predict.json`).
+
+pub mod artifact;
+pub mod bench;
+pub mod predictor;
+pub mod serve;
+
+pub use artifact::{Checkpoint, ModelMeta, TrainedModel};
+pub use predictor::{PredictScratch, Predictor};

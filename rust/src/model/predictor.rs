@@ -1,0 +1,251 @@
+//! The cluster-free serving path: a read-only, `Send + Sync`
+//! [`Predictor`] built once from a [`TrainedModel`].
+//!
+//! Prediction is O(t · m · (m + q + d)) for a batch of t points —
+//! constant in the training-set size, no map rounds, no workers. The
+//! hot loop is allocation-free: [`Predictor::predict_into`] runs the
+//! strict `gp::kernel` psi fills into a caller-owned
+//! [`PredictScratch`] and assembles the mean through the `linalg`
+//! `_into` workspace APIs, so a serving thread owns one scratch and
+//! reuses it for every batch. The computed values are **bit-identical**
+//! to `Trainer::predict` at the same parameters and weights (the same
+//! strict expressions in the same order — tested in `tests/model.rs`).
+//!
+//! ## Thread-safety contract
+//!
+//! `Predictor` is immutable after construction and shares nothing
+//! mutable, so one instance can serve any number of threads
+//! concurrently (`&Predictor` is enough — no locking, no `Arc`
+//! required inside a scope). All per-batch mutable state lives in the
+//! `PredictScratch` each thread owns. Enforced at compile time by the
+//! `Send + Sync` assertion below and exercised by the concurrent
+//! serving tests.
+
+use anyhow::{ensure, Result};
+
+use super::artifact::TrainedModel;
+use crate::gp::{kernel, GlobalParams};
+use crate::linalg::Matrix;
+
+/// Per-thread workspace for [`Predictor::predict_into`]: every buffer
+/// the per-batch hot loop touches, reused across batches (zero heap
+/// allocation once grown to the model's shapes).
+pub struct PredictScratch {
+    /// squared lengthscales exp(2 log_ls), length q
+    ls2: Vec<f64>,
+    /// per-point Psi1 denominators, length q
+    dn: Vec<f64>,
+    /// per-point Psi2 denominators, length q
+    dn2: Vec<f64>,
+    /// Psi1 block [t x m]
+    psi1: Matrix,
+    /// one-point Psi2 block, length m*m
+    psi2: Vec<f64>,
+}
+
+impl PredictScratch {
+    pub fn new() -> PredictScratch {
+        PredictScratch {
+            ls2: Vec::new(),
+            dn: Vec::new(),
+            dn2: Vec::new(),
+            psi1: Matrix::zeros(0, 0),
+            psi2: Vec::new(),
+        }
+    }
+}
+
+impl Default for PredictScratch {
+    fn default() -> PredictScratch {
+        PredictScratch::new()
+    }
+}
+
+/// Read-only serving handle: global parameters plus the posterior
+/// factors, precomputed once at construction.
+pub struct Predictor {
+    params: GlobalParams,
+    /// mean weights beta Sigma^-1 C, m x d
+    w1: Matrix,
+    /// variance weights Kmm^-1 - Sigma^-1, m x m
+    wv: Matrix,
+    /// signal variance exp(log_sf2), precomputed
+    sf2: f64,
+    dout: usize,
+}
+
+// The whole point of the serving split: one Predictor, many threads.
+// (Compile-time proof; the runtime half is the concurrent serve test.)
+const _: () = {
+    const fn assert_send_sync<T: Send + Sync>() {}
+    assert_send_sync::<Predictor>();
+};
+
+impl Predictor {
+    /// Build from a validated model, precomputing the posterior factors
+    /// the per-batch loop consumes.
+    pub fn new(model: &TrainedModel) -> Result<Predictor> {
+        model.validate()?;
+        Ok(Predictor {
+            params: model.params.clone(),
+            w1: model.weights.w1.clone(),
+            wv: model.weights.wv.clone(),
+            sf2: model.params.sf2(),
+            dout: model.dout,
+        })
+    }
+
+    pub fn m(&self) -> usize {
+        self.params.m()
+    }
+
+    pub fn q(&self) -> usize {
+        self.params.q()
+    }
+
+    pub fn dout(&self) -> usize {
+        self.dout
+    }
+
+    pub fn params(&self) -> &GlobalParams {
+        &self.params
+    }
+
+    /// Batched posterior prediction at (possibly uncertain) test
+    /// inputs: mean [t x d] and per-point variance [t], without
+    /// observation noise — the allocating convenience wrapper around
+    /// [`Self::predict_into`].
+    pub fn predict(&self, xt_mu: &Matrix, xt_var: &Matrix) -> Result<(Matrix, Vec<f64>)> {
+        let mut scratch = PredictScratch::new();
+        let mut mean = Matrix::zeros(0, 0);
+        let mut var = Vec::new();
+        self.predict_into(xt_mu, xt_var, &mut scratch, &mut mean, &mut var)?;
+        Ok((mean, var))
+    }
+
+    /// Batched prediction into caller-owned outputs. After the first
+    /// batch at a given size every buffer (scratch, `mean`, `var`) is
+    /// reused — the per-batch hot loop performs no heap allocation.
+    pub fn predict_into(
+        &self,
+        xt_mu: &Matrix,
+        xt_var: &Matrix,
+        scratch: &mut PredictScratch,
+        mean: &mut Matrix,
+        var: &mut Vec<f64>,
+    ) -> Result<()> {
+        let (m, q) = (self.m(), self.q());
+        ensure!(
+            xt_mu.cols() == q && xt_var.cols() == q && xt_mu.rows() == xt_var.rows(),
+            "test points are {}x{} / {}x{} but the model expects q={q} input dimensions",
+            xt_mu.rows(),
+            xt_mu.cols(),
+            xt_var.rows(),
+            xt_var.cols()
+        );
+        let t = xt_mu.rows();
+
+        scratch.ls2.resize(q, 0.0);
+        for (l2, l) in scratch.ls2.iter_mut().zip(&self.params.log_ls) {
+            *l2 = (2.0 * l).exp();
+        }
+        scratch.dn.resize(q, 0.0);
+        scratch.dn2.resize(q, 0.0);
+        scratch.psi2.resize(m * m, 0.0);
+
+        // mean = Psi1 W1 — the same strict fill + matmul expressions the
+        // cluster predict path runs, so the bits agree
+        kernel::psi1_into(
+            &self.params,
+            xt_mu,
+            xt_var,
+            &scratch.ls2,
+            self.sf2,
+            &mut scratch.dn,
+            &mut scratch.psi1,
+        );
+        scratch.psi1.matmul_into(&self.w1, mean);
+
+        // var_i = sf2 - <Wv, Psi2_i>
+        var.clear();
+        var.reserve(t);
+        for i in 0..t {
+            kernel::psi2_point_into(
+                &self.params.z,
+                &scratch.ls2,
+                self.sf2,
+                xt_mu.row(i),
+                xt_var.row(i),
+                &mut scratch.dn2,
+                &mut scratch.psi2,
+            );
+            let s: f64 = self
+                .wv
+                .data()
+                .iter()
+                .zip(&scratch.psi2)
+                .map(|(a, b)| a * b)
+                .sum();
+            var.push(self.sf2 - s);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gp::bound::predict_native;
+    use crate::model::artifact::sample_model;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn predictor_matches_predict_native_bitwise() {
+        let model = sample_model(11, 6, 2, 3);
+        let pred = Predictor::new(&model).unwrap();
+        let mut rng = Rng::new(12);
+        let xt_mu = Matrix::from_fn(9, 2, |_, _| rng.normal());
+        let xt_var = Matrix::from_fn(9, 2, |_, _| 0.1 * rng.uniform());
+        let (mean, var) = pred.predict(&xt_mu, &xt_var).unwrap();
+        let (mean_n, var_n) = predict_native(&model.params, &model.weights, &xt_mu, &xt_var);
+        assert_eq!((mean.rows(), mean.cols()), (9, 3));
+        for (a, b) in mean.data().iter().zip(mean_n.data()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "predictor mean diverged");
+        }
+        for (a, b) in var.iter().zip(&var_n) {
+            assert_eq!(a.to_bits(), b.to_bits(), "predictor variance diverged");
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_is_bitwise_stable_across_batch_shapes() {
+        let model = sample_model(13, 5, 3, 2);
+        let pred = Predictor::new(&model).unwrap();
+        let mut rng = Rng::new(14);
+        let big_mu = Matrix::from_fn(12, 3, |_, _| rng.normal());
+        let big_var = Matrix::from_fn(12, 3, |_, _| 0.2 * rng.uniform());
+        let small_mu = Matrix::from_fn(4, 3, |_, _| rng.normal());
+        let small_var = Matrix::from_fn(4, 3, |_, _| 0.2 * rng.uniform());
+
+        // one scratch reused across differently-sized batches must give
+        // the same bits as fresh allocating calls
+        let mut scratch = PredictScratch::new();
+        let mut mean = Matrix::zeros(0, 0);
+        let mut var = Vec::new();
+        for (mu, xv) in [(&big_mu, &big_var), (&small_mu, &small_var), (&big_mu, &big_var)] {
+            pred.predict_into(mu, xv, &mut scratch, &mut mean, &mut var).unwrap();
+            let (mean_f, var_f) = pred.predict(mu, xv).unwrap();
+            assert_eq!(mean.max_abs_diff(&mean_f), 0.0);
+            assert_eq!(var, var_f);
+        }
+    }
+
+    #[test]
+    fn shape_mismatch_is_a_clear_error() {
+        let model = sample_model(15, 4, 2, 2);
+        let pred = Predictor::new(&model).unwrap();
+        let bad = Matrix::zeros(3, 5);
+        let msg = format!("{:#}", pred.predict(&bad, &bad).unwrap_err());
+        assert!(msg.contains("q=2"), "{msg}");
+    }
+}

@@ -1,0 +1,151 @@
+//! The TCP predict server (`gparml serve`) and its client helpers
+//! (`gparml predict --connect`): the end of the train → export → serve
+//! story, speaking the cluster wire framing (DESIGN.md §9).
+//!
+//! The server loads one [`TrainedModel`], builds one [`Predictor`] and
+//! serves any number of concurrent clients — one OS thread per
+//! connection, all sharing the same `&Predictor` (it is `Sync`; each
+//! thread owns its [`PredictScratch`], so batches are allocation-free
+//! after warm-up). Requests/replies are ordinary wire v4 frames:
+//! `ModelInfo` (shape handshake), `ServePredict` → `Predict`,
+//! `Ping`/`Pong`, `Shutdown`/EOF to hang up. Zero training workers are
+//! involved anywhere on this path.
+
+use std::net::{TcpListener, TcpStream};
+
+use anyhow::{bail, Context, Result};
+
+use super::predictor::{PredictScratch, Predictor};
+use crate::cluster::wire::{self, Frame, Request, Response};
+use crate::linalg::Matrix;
+use crate::util::timer::thread_cpu_secs;
+
+/// Serve clients accepted on `listener` until `max_clients`
+/// connections have been handled (0 = forever). Each connection gets
+/// its own thread; all threads share `predictor`. Returns the number
+/// of connections served.
+pub fn serve(listener: &TcpListener, predictor: &Predictor, max_clients: u64) -> Result<u64> {
+    std::thread::scope(|s| {
+        let mut served = 0u64;
+        while max_clients == 0 || served < max_clients {
+            let (stream, peer) = listener.accept().context("accepting predict client")?;
+            served += 1;
+            let client = served;
+            s.spawn(move || match serve_client(stream, predictor) {
+                Ok(requests) => {
+                    eprintln!("[gparml-serve] client {client} ({peer}): {requests} request(s)")
+                }
+                Err(e) => eprintln!("[gparml-serve] client {client} ({peer}) failed: {e:#}"),
+            });
+        }
+        Ok(served)
+    })
+}
+
+/// Serve one client connection until `Shutdown` or EOF. Returns the
+/// number of predict/info requests answered.
+fn serve_client(mut stream: TcpStream, predictor: &Predictor) -> Result<u64> {
+    stream.set_nodelay(true).ok();
+    let mut scratch = PredictScratch::new();
+    let mut mean = Matrix::zeros(0, 0);
+    let mut var = Vec::new();
+    let mut served = 0u64;
+    loop {
+        let req = match wire::read_frame(&mut stream)? {
+            None | Some((Frame::Shutdown, _)) => return Ok(served),
+            Some((Frame::Ping, _)) => {
+                wire::write_frame(&mut stream, &Frame::Pong)?;
+                continue;
+            }
+            Some((Frame::Request(req), _)) => req,
+            Some((f, _)) => bail!("unexpected frame {f:?} from predict client"),
+        };
+        let c0 = thread_cpu_secs();
+        let resp = match &*req {
+            Request::ModelInfo => Response::ModelInfo {
+                m: predictor.m() as u32,
+                q: predictor.q() as u32,
+                d: predictor.dout() as u32,
+            },
+            Request::ServePredict { xt_mu, xt_var } => {
+                match predictor.predict_into(xt_mu, xt_var, &mut scratch, &mut mean, &mut var) {
+                    Ok(()) => Response::Predict {
+                        mean: mean.clone(),
+                        var: var.clone(),
+                    },
+                    Err(e) => Response::Err(format!("{e:#}")),
+                }
+            }
+            other => Response::Err(format!(
+                "predict server only answers ServePredict/ModelInfo, got {other:?}"
+            )),
+        };
+        let secs = thread_cpu_secs() - c0;
+        wire::write_frame(
+            &mut stream,
+            &Frame::Response {
+                secs,
+                psi_fills: 0,
+                resp: Box::new(resp),
+            },
+        )?;
+        served += 1;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// client side
+// ---------------------------------------------------------------------------
+
+/// Dial a predict server.
+pub fn connect(addr: &str) -> Result<TcpStream> {
+    let stream = TcpStream::connect(addr)
+        .with_context(|| format!("connecting to predict server at {addr}"))?;
+    stream.set_nodelay(true).ok();
+    Ok(stream)
+}
+
+fn request(stream: &mut TcpStream, req: Request) -> Result<Response> {
+    wire::write_frame(stream, &Frame::Request(Box::new(req)))?;
+    match wire::read_frame(stream)? {
+        Some((Frame::Response { resp, .. }, _)) => Ok(*resp),
+        Some((f, _)) => bail!("expected a Response frame, got {f:?}"),
+        None => bail!("predict server closed the connection mid-request"),
+    }
+}
+
+/// Ask the server for its model shapes (m, q, d).
+pub fn remote_model_info(stream: &mut TcpStream) -> Result<(usize, usize, usize)> {
+    match request(stream, Request::ModelInfo)? {
+        Response::ModelInfo { m, q, d } => Ok((m as usize, q as usize, d as usize)),
+        Response::Err(e) => bail!("predict server: {e}"),
+        other => bail!("unexpected ModelInfo reply {other:?}"),
+    }
+}
+
+/// Predict a batch remotely. Every f64 crosses the wire bit-for-bit,
+/// so the reply equals a local [`Predictor::predict`] exactly.
+pub fn remote_predict(
+    stream: &mut TcpStream,
+    xt_mu: &Matrix,
+    xt_var: &Matrix,
+) -> Result<(Matrix, Vec<f64>)> {
+    let resp = request(
+        stream,
+        Request::ServePredict {
+            xt_mu: xt_mu.clone(),
+            xt_var: xt_var.clone(),
+        },
+    )?;
+    match resp {
+        Response::Predict { mean, var } => Ok((mean, var)),
+        Response::Err(e) => bail!("predict server: {e}"),
+        other => bail!("unexpected predict reply {other:?}"),
+    }
+}
+
+/// Politely hang up (the server counts the connection as finished on
+/// EOF too; this just makes the intent explicit).
+pub fn hangup(stream: &mut TcpStream) {
+    let _ = wire::write_frame(stream, &Frame::Shutdown);
+}

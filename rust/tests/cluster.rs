@@ -253,12 +253,13 @@ fn tcp_cluster_lvm_local_updates_match_pool_backend() {
     let pool_locals = pool_t.gather_locals().unwrap();
     let tcp_locals = tcp_t.gather_locals().unwrap();
     assert_eq!(pool_locals.len(), tcp_locals.len());
-    for ((pm, pv), (tm, tv)) in pool_locals.iter().zip(&tcp_locals) {
+    for ((pi, pm, pv), (ti, tm, tv)) in pool_locals.iter().zip(&tcp_locals) {
+        assert_eq!(pi, ti, "gathered row indices diverged");
         assert_eq!(pm.max_abs_diff(tm), 0.0, "local means diverged");
         assert_eq!(pv.max_abs_diff(tv), 0.0, "local variances diverged");
     }
     let fresh_locals = fresh_t.gather_locals().unwrap();
-    for ((pm, pv), (fm, fv)) in pool_locals.iter().zip(&fresh_locals) {
+    for ((_, pm, pv), (_, fm, fv)) in pool_locals.iter().zip(&fresh_locals) {
         assert_eq!(pm.max_abs_diff(fm), 0.0, "cached vs fresh local means");
         assert_eq!(pv.max_abs_diff(fv), 0.0, "cached vs fresh local variances");
     }

@@ -161,17 +161,15 @@ fn lvm_training_improves_bound_and_moves_locals() {
     let f0 = t.evaluate().unwrap();
     let f_end = t.train(25).unwrap();
     assert!(f_end > f0, "LVM bound did not improve: {f0} -> {f_end}");
-    // locals actually moved
+    // locals actually moved (compared at their original dataset rows)
     let locals = t.gather_locals().unwrap();
-    let mut lo = 0;
     let mut moved = false;
-    for (mu, _) in &locals {
-        for i in 0..mu.rows() {
-            if (mu[(i, 0)] - xmu[(lo + i, 0)]).abs() > 1e-4 {
+    for (ids, mu, _) in &locals {
+        for (i, &orig) in ids.iter().enumerate() {
+            if (mu[(i, 0)] - xmu[(orig, 0)]).abs() > 1e-4 {
                 moved = true;
             }
         }
-        lo += mu.rows();
     }
     assert!(moved, "worker-local q(X) parameters never updated");
 }
