@@ -196,11 +196,19 @@ impl WorkerNode {
                     m: cfg.m as u32,
                     q: cfg.q as u32,
                     d: cfg.d as u32,
+                    // version 0 = "not a serve model": workers hold
+                    // executor shapes, not a reloadable artifact
+                    version: 0,
                 }
             }
-            Request::ServePredict { .. } => bail!(
-                "ServePredict is answered by the `gparml serve` predict server, which \
-                 holds a TrainedModel; cluster workers hold no posterior weights"
+            Request::ServePredict { .. } | Request::ServeProject { .. } => bail!(
+                "ServePredict/ServeProject are answered by the `gparml serve` predict \
+                 server, which holds a TrainedModel; cluster workers hold no posterior \
+                 weights"
+            ),
+            Request::Reload => bail!(
+                "Reload is a `gparml serve` control frame; cluster workers hold no \
+                 model artifact to reload"
             ),
         })
     }

@@ -63,7 +63,16 @@ pub const MAGIC: [u8; 4] = *b"GPMR";
 /// server-held `TrainedModel`; answered with the existing
 /// `Response::Predict`). Cluster workers hold no posterior weights and
 /// answer `ServePredict` with an error.
-pub const VERSION: u16 = 4;
+/// v5 — the serving-subsystem messages (DESIGN.md §9):
+/// `Response::ModelInfo` carries a u64 **model version** (bumped on
+/// every hot reload, so clients can detect a swap), and three new
+/// frames — `Request::ServeProject` (LVM latent projection: ship
+/// observed outputs, get latent coordinates back, answered with
+/// `Response::Project`), and `Request::Reload` (ask a predict server
+/// to atomically reload its model artifact from disk). Cluster
+/// workers answer `ModelInfo` with version 0 and reject the serve-only
+/// frames with an error.
+pub const VERSION: u16 = 5;
 /// Upper bound on a single frame payload (defends the decoder against
 /// garbage length prefixes).
 pub const MAX_PAYLOAD: usize = 1 << 30;
@@ -114,6 +123,17 @@ pub enum Request {
     /// Ask the peer for its model/executor shapes (v4) — lets a predict
     /// client generate well-shaped test points without the model file.
     ModelInfo,
+    /// Serve-path latent projection (v5): ship observed outputs `y`
+    /// [t x d], get back latent coordinates answered from the served
+    /// model's inducing posterior ([`Response::Project`]). Serve-only;
+    /// cluster workers reply with an error.
+    ServeProject { y: Matrix },
+    /// Ask a predict server to atomically reload its model artifact
+    /// from the path it was started with (v5) — the SIGHUP-equivalent
+    /// control frame. Answered with the reloaded [`Response::ModelInfo`]
+    /// (new version) or [`Response::Err`]. In-flight requests finish on
+    /// the old model. Serve-only.
+    Reload,
 }
 
 /// A worker's reply to a [`Request`].
@@ -126,7 +146,13 @@ pub enum Response {
     Predict { mean: Matrix, var: Vec<f64> },
     /// Reply to [`Request::ModelInfo`] (v4): inducing points, latent
     /// dimensionality and output dimensionality of the served model.
-    ModelInfo { m: u32, q: u32, d: u32 },
+    /// `version` (v5) identifies the loaded model instance — a predict
+    /// server bumps it on every hot reload; cluster workers report 0.
+    ModelInfo { m: u32, q: u32, d: u32, version: u64 },
+    /// Reply to [`Request::ServeProject`] (v5): latent coordinates
+    /// [t x q] plus a per-point confidence in (0, 1] (the winning
+    /// inducing point's responsibility).
+    Project { xmu: Matrix, conf: Vec<f64> },
     Ok,
     /// The worker failed to execute the request (shape mismatch, ...).
     Err(String),
@@ -503,6 +529,11 @@ impl Request {
                 e.mat(xt_var);
             }
             Request::ModelInfo => e.u8(8),
+            Request::ServeProject { y } => {
+                e.u8(9);
+                e.mat(y);
+            }
+            Request::Reload => e.u8(10),
         }
     }
 
@@ -533,6 +564,8 @@ impl Request {
                 xt_var: d.mat()?,
             },
             8 => Request::ModelInfo,
+            9 => Request::ServeProject { y: d.mat()? },
+            10 => Request::Reload,
             t => bail!("unknown request tag {t}"),
         })
     }
@@ -568,11 +601,17 @@ impl Response {
                 e.u8(7);
                 e.str(msg);
             }
-            Response::ModelInfo { m, q, d } => {
+            Response::ModelInfo { m, q, d, version } => {
                 e.u8(8);
                 e.u32(*m);
                 e.u32(*q);
                 e.u32(*d);
+                e.u64(*version);
+            }
+            Response::Project { xmu, conf } => {
+                e.u8(9);
+                e.mat(xmu);
+                e.vec_f64(conf);
             }
         }
     }
@@ -596,6 +635,11 @@ impl Response {
                 m: d.u32()?,
                 q: d.u32()?,
                 d: d.u32()?,
+                version: d.u64()?,
+            },
+            9 => Response::Project {
+                xmu: d.mat()?,
+                conf: d.vec_f64()?,
             },
             t => bail!("unknown response tag {t}"),
         })
@@ -677,11 +721,8 @@ impl Frame {
     }
 }
 
-/// Serialise a frame to bytes (header + payload).
-pub fn encode_frame(f: &Frame) -> Result<Vec<u8>> {
-    let mut e = Enc::new();
-    f.encode_payload(&mut e);
-    let payload = e.into_bytes();
+/// Prefix `payload` with the frame header for `kind`.
+fn assemble_frame(kind: u8, payload: Vec<u8>) -> Result<Vec<u8>> {
     ensure!(
         payload.len() <= MAX_PAYLOAD,
         "frame payload of {} bytes exceeds MAX_PAYLOAD",
@@ -690,10 +731,70 @@ pub fn encode_frame(f: &Frame) -> Result<Vec<u8>> {
     let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
     out.extend_from_slice(&MAGIC);
     out.extend_from_slice(&VERSION.to_le_bytes());
-    out.push(f.kind());
+    out.push(kind);
     out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
     out.extend_from_slice(&payload);
     Ok(out)
+}
+
+/// Serialise a frame to bytes (header + payload).
+pub fn encode_frame(f: &Frame) -> Result<Vec<u8>> {
+    let mut e = Enc::new();
+    f.encode_payload(&mut e);
+    assemble_frame(f.kind(), e.into_bytes())
+}
+
+/// Encode a `Frame::Response { Response::Predict }` directly from
+/// **borrowed** buffers: the row window `[r0, r1)` of `mean` and the
+/// matching slice of `var`. Byte-identical to encoding an owned
+/// `Response::Predict` holding copies of that window (tested) — the
+/// serve hot path answers each client of a coalesced micro-batch
+/// without cloning the batch output into a per-request `Response`.
+pub fn encode_predict_response(
+    secs: f64,
+    mean: &Matrix,
+    r0: usize,
+    r1: usize,
+    var: &[f64],
+) -> Result<Vec<u8>> {
+    assert!(r0 <= r1 && r1 <= mean.rows(), "predict reply row window out of range");
+    assert_eq!(var.len(), r1 - r0, "predict reply var/mean row mismatch");
+    let mut e = Enc::new();
+    e.f64(secs);
+    e.u32(0); // psi_fills: serve-path replies do not report recomputes
+    e.u8(5); // Response::Predict tag
+    e.u32((r1 - r0) as u32);
+    e.u32(mean.cols() as u32);
+    for x in &mean.data()[r0 * mean.cols()..r1 * mean.cols()] {
+        e.f64(*x);
+    }
+    e.vec_f64(var);
+    assemble_frame(5, e.into_bytes()) // Frame::Response kind
+}
+
+/// Encode a `Frame::Response { Response::Project }` from borrowed
+/// buffers — the [`encode_predict_response`] sibling for the LVM
+/// latent-projection path.
+pub fn encode_project_response(
+    secs: f64,
+    xmu: &Matrix,
+    r0: usize,
+    r1: usize,
+    conf: &[f64],
+) -> Result<Vec<u8>> {
+    assert!(r0 <= r1 && r1 <= xmu.rows(), "project reply row window out of range");
+    assert_eq!(conf.len(), r1 - r0, "project reply conf/xmu row mismatch");
+    let mut e = Enc::new();
+    e.f64(secs);
+    e.u32(0);
+    e.u8(9); // Response::Project tag
+    e.u32((r1 - r0) as u32);
+    e.u32(xmu.cols() as u32);
+    for x in &xmu.data()[r0 * xmu.cols()..r1 * xmu.cols()] {
+        e.f64(*x);
+    }
+    e.vec_f64(conf);
+    assemble_frame(5, e.into_bytes())
 }
 
 /// Write one frame; returns the bytes put on the wire.
@@ -1130,10 +1231,11 @@ mod tests {
                 rng.below(100) as u32,
                 rng.below(1000) as u32,
             );
+            let version = rng.below(1 << 30) as u64;
             let f = Frame::Response {
                 secs: 0.0,
                 psi_fills: 0,
-                resp: Box::new(Response::ModelInfo { m, q: qq, d }),
+                resp: Box::new(Response::ModelInfo { m, q: qq, d, version }),
             };
             match roundtrip(&f) {
                 Frame::Response { resp, .. } => match *resp {
@@ -1141,9 +1243,10 @@ mod tests {
                         m: m2,
                         q: q2,
                         d: d2,
+                        version: v2,
                     } => {
-                        if (m2, q2, d2) != (m, qq, d) {
-                            return Err("ModelInfo shapes corrupted".into());
+                        if (m2, q2, d2, v2) != (m, qq, d, version) {
+                            return Err("ModelInfo shapes/version corrupted".into());
                         }
                         Ok(())
                     }
@@ -1151,6 +1254,103 @@ mod tests {
                 },
                 _ => Err("wrong frame kind".into()),
             }
+        });
+    }
+
+    /// Wire v5: the serving-subsystem frames — latent projection,
+    /// hot-reload control — round-trip bitwise.
+    #[test]
+    fn prop_v5_project_and_reload_frames_roundtrip() {
+        testing::check("wire v5 project/reload frames", 20, |rng| {
+            let t = testing::dim(rng, 0, 12);
+            let d = testing::dim(rng, 1, 6);
+            let q = testing::dim(rng, 1, 4);
+            let y = rand_mat(rng, t, d);
+            match roundtrip(&Frame::Request(Box::new(Request::ServeProject { y: y.clone() }))) {
+                Frame::Request(r) => match *r {
+                    Request::ServeProject { y: y2 } => assert_mat_eq(&y2, &y),
+                    _ => return Err("wrong request variant".into()),
+                },
+                _ => return Err("wrong frame kind".into()),
+            }
+            match roundtrip(&Frame::Request(Box::new(Request::Reload))) {
+                Frame::Request(r) => {
+                    if !matches!(*r, Request::Reload) {
+                        return Err("Reload request corrupted".into());
+                    }
+                }
+                _ => return Err("wrong frame kind".into()),
+            }
+            let xmu = rand_mat(rng, t, q);
+            let conf: Vec<f64> = (0..t).map(|_| rng.uniform()).collect();
+            let f = Frame::Response {
+                secs: rng.uniform(),
+                psi_fills: 0,
+                resp: Box::new(Response::Project {
+                    xmu: xmu.clone(),
+                    conf: conf.clone(),
+                }),
+            };
+            match roundtrip(&f) {
+                Frame::Response { resp, .. } => match *resp {
+                    Response::Project { xmu: x2, conf: c2 } => {
+                        assert_mat_eq(&x2, &xmu);
+                        if c2.iter().zip(&conf).any(|(a, b)| a.to_bits() != b.to_bits()) {
+                            return Err("Project conf corrupted".into());
+                        }
+                        Ok(())
+                    }
+                    _ => Err("wrong response variant".into()),
+                },
+                _ => Err("wrong frame kind".into()),
+            }
+        });
+    }
+
+    /// The borrowed-buffer reply encoders produce byte-for-byte the
+    /// same frames as the owned `Response` path — the contract that
+    /// lets the serve hot loop skip the per-request clone.
+    #[test]
+    fn prop_borrowed_reply_encoders_match_owned_encoding() {
+        testing::check("wire borrowed reply encoders", 20, |rng| {
+            let t = testing::dim(rng, 1, 10);
+            let cols = testing::dim(rng, 1, 5);
+            let big = rand_mat(rng, t + 4, cols);
+            let var: Vec<f64> = (0..t + 4).map(|_| rng.normal()).collect();
+            let r0 = testing::dim(rng, 0, 2);
+            let r1 = r0 + t;
+            let secs = rng.uniform();
+
+            // owned: clone the window into a fresh Response
+            let window = Matrix::from_fn(r1 - r0, cols, |i, j| big[(r0 + i, j)]);
+            let owned = encode_frame(&Frame::Response {
+                secs,
+                psi_fills: 0,
+                resp: Box::new(Response::Predict {
+                    mean: window.clone(),
+                    var: var[r0..r1].to_vec(),
+                }),
+            })
+            .unwrap();
+            let borrowed = encode_predict_response(secs, &big, r0, r1, &var[r0..r1]).unwrap();
+            if owned != borrowed {
+                return Err("predict reply bytes diverged".into());
+            }
+
+            let owned = encode_frame(&Frame::Response {
+                secs,
+                psi_fills: 0,
+                resp: Box::new(Response::Project {
+                    xmu: window,
+                    conf: var[r0..r1].to_vec(),
+                }),
+            })
+            .unwrap();
+            let borrowed = encode_project_response(secs, &big, r0, r1, &var[r0..r1]).unwrap();
+            if owned != borrowed {
+                return Err("project reply bytes diverged".into());
+            }
+            Ok(())
         });
     }
 

@@ -168,6 +168,14 @@ pub struct Trainer<B: Backend = PoolBackend> {
     /// gather round (valid while the order is still the contiguous
     /// dataset order).
     row_ids: Option<Vec<Vec<usize>>>,
+    /// iterations completed before this trainer's `RunLog` started
+    /// (restored from a checkpoint); exports and fresh checkpoints
+    /// report cumulative counts so a `--resume --iters 0 --export`
+    /// re-export keeps the original provenance.
+    resumed_iterations: u64,
+    /// bound F at the restored checkpoint (NaN when starting fresh) —
+    /// the export provenance fallback while no new iteration has run.
+    resumed_bound: f64,
 }
 
 impl Trainer<PoolBackend> {
@@ -327,6 +335,24 @@ impl<B: Backend> Trainer<B> {
             posterior_cache: None,
             posterior_hits: 0,
             row_ids,
+            resumed_iterations: 0,
+            resumed_bound: f64::NAN,
+        }
+    }
+
+    /// Iterations completed in total, including any restored from a
+    /// checkpoint before this trainer's own `RunLog` started.
+    fn completed_iterations(&self) -> u64 {
+        self.resumed_iterations + self.log.iterations.len() as u64
+    }
+
+    /// Bound F at the last completed iteration — this run's if any ran,
+    /// otherwise the restored checkpoint's (NaN when neither exists).
+    fn completed_bound(&self) -> f64 {
+        if self.log.iterations.is_empty() {
+            self.resumed_bound
+        } else {
+            self.log.final_bound()
         }
     }
 
@@ -777,8 +803,8 @@ impl<B: Backend> Trainer<B> {
             math_mode: self.cfg.math_mode,
             meta: crate::model::ModelMeta {
                 artifact: self.cfg.artifact.clone(),
-                iterations: self.log.iterations.len() as u64,
-                final_bound: self.log.final_bound(),
+                iterations: self.completed_iterations(),
+                final_bound: self.completed_bound(),
                 seed: self.cfg.seed,
             },
         };
@@ -792,8 +818,8 @@ impl<B: Backend> Trainer<B> {
     pub fn save_checkpoint(&self, path: &std::path::Path) -> Result<()> {
         let ckpt = crate::model::Checkpoint {
             params: self.params.clone(),
-            iterations: self.log.iterations.len() as u64,
-            last_bound: self.log.final_bound(),
+            iterations: self.completed_iterations(),
+            last_bound: self.completed_bound(),
             artifact: self.cfg.artifact.clone(),
             math_mode: self.cfg.math_mode,
             seed: self.cfg.seed,
@@ -826,6 +852,8 @@ impl<B: Backend> Trainer<B> {
         self.adam = None;
         self.objective_dirty = true;
         self.posterior_cache = None;
+        self.resumed_iterations = ckpt.iterations;
+        self.resumed_bound = ckpt.last_bound;
         Ok(ckpt.iterations)
     }
 

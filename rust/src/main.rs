@@ -10,8 +10,13 @@
 //! gparml export [train flags] --out model.gpm   # train, then save the
 //!                                               # TrainedModel artifact
 //! gparml predict (--model model.gpm | --connect ADDR) [--n N] [--seed S]
+//!                [--points file.csv]            # real test points (q or 2q cols)
+//!                [--project]                    # LVM latent projection (--points
+//!                                               # rows are observed outputs)
 //!                [--out preds.csv]              # cluster-free serving
 //! gparml serve --model model.gpm --listen ADDR [--clients N]
+//!              [--threads W] [--batch-rows R]   # worker pool + micro-batch cap
+//! gparml reload --connect ADDR                  # hot-swap the served model
 //! gparml worker (--listen ADDR | --connect LEADER) [--artifacts DIR]
 //!               [--math-mode strict|fast]         # pin; reject the other
 //! gparml bench psi [--config perf] [--reps R]    # writes BENCH_psi.json
@@ -59,22 +64,26 @@ fn main() -> Result<()> {
         Some("export") => export_cmd(&args),
         Some("predict") => predict_cmd(&args),
         Some("serve") => serve_cmd(&args),
+        Some("reload") => reload_cmd(&args),
         Some("worker") => worker(&args),
         Some("bench") => bench(&args),
         Some("info") => info(&args),
         _ => {
             eprintln!(
-                "usage: gparml <experiment|train|export|predict|serve|worker|bench|info> [flags]\n\
+                "usage: gparml <experiment|train|export|predict|serve|reload|worker|bench|info> [flags]\n\
                  experiments: fig1 fig2 fig3 fig4 fig5 fig6 fig7 fig8 all\n\
                  common flags: --n --iters --workers --seed --out DIR --artifacts DIR\n\
                  cluster: gparml worker --connect LEADER_ADDR (or --listen ADDR),\n\
                           gparml train --connect W1,W2,... (synthetic dataset)\n\
                  serving: gparml export [train flags] --out model.gpm,\n\
-                          gparml predict (--model F | --connect ADDR) [--out preds.csv],\n\
+                          gparml predict (--model F | --connect ADDR) [--points file.csv]\n\
+                          [--project] [--out preds.csv],\n\
                           gparml serve --model F --listen ADDR [--clients N]\n\
+                          [--threads W] [--batch-rows R],\n\
+                          gparml reload --connect ADDR (hot-swap the served model)\n\
                  math:    --math-mode strict|fast on train/bench/worker (DESIGN.md §8)\n\
                  bench:   gparml bench psi [--config perf] [--points B] [--reps R],\n\
-                          gparml bench predict [--points B] [--threads T],\n\
+                          gparml bench predict [--points B] [--threads T] [--clients C],\n\
                           gparml bench check [--baseline F] [--current F] [--max-regress X],\n\
                           gparml bench rebaseline [--headroom X] [--out F]"
             );
@@ -115,6 +124,40 @@ fn predict_points(n: usize, q: usize, seed: u64) -> (Matrix, Matrix) {
     (xt_mu, Matrix::zeros(n, q))
 }
 
+/// Real test points from `--points file.csv`: either q columns (input
+/// means, zero input variance) or 2q columns (means then variances).
+fn load_predict_points(path: &str, q: usize) -> Result<(Matrix, Matrix)> {
+    let m = gparml::util::csv::read_matrix(std::path::Path::new(path))?;
+    if m.cols() == q {
+        let rows = m.rows();
+        Ok((m, Matrix::zeros(rows, q)))
+    } else if m.cols() == 2 * q {
+        let xt_mu = Matrix::from_fn(m.rows(), q, |i, j| m[(i, j)]);
+        let xt_var = Matrix::from_fn(m.rows(), q, |i, j| m[(i, q + j)]);
+        Ok((xt_mu, xt_var))
+    } else {
+        bail!(
+            "--points {path} has {} columns; the model expects q={q} (means) \
+             or 2q={} (means,variances)",
+            m.cols(),
+            2 * q
+        )
+    }
+}
+
+/// Observed outputs for `--project`: d columns, one observation per row.
+fn load_project_points(path: &str, d: usize) -> Result<Matrix> {
+    let y = gparml::util::csv::read_matrix(std::path::Path::new(path))?;
+    if y.cols() != d {
+        bail!(
+            "--points {path} has {} columns; projecting into latent space \
+             needs d={d} observed output dimensions per row",
+            y.cols()
+        );
+    }
+    Ok(y)
+}
+
 /// Write predictions as CSV with round-trip-exact float formatting
 /// (`{:.17e}`), so two bit-identical prediction paths produce
 /// byte-identical files.
@@ -150,19 +193,38 @@ fn write_predictions(
 
 /// `gparml predict`: serve a batch from a model artifact — locally
 /// (`--model PATH`, zero processes) or against a running predict
-/// server (`--connect ADDR`, zero local model state).
+/// server (`--connect ADDR`, zero local model state). `--points` reads
+/// real test points from CSV; `--project` maps observed outputs into
+/// the LVM latent space instead of predicting outputs.
 fn predict_cmd(args: &Args) -> Result<()> {
     let n = args.get_usize("n", 64)?;
     let seed = args.get_usize("seed", 0)? as u64;
+    let project = args.has("project");
+    let points = args.get("points");
 
-    let (xt_mu, mean, var, origin) = if let Some(addr) = args.get("connect") {
+    if let Some(addr) = args.get("connect") {
         let mut stream = serve::connect(addr)?;
-        let (m, q, d) = serve::remote_model_info(&mut stream)?;
-        println!("predict server at {addr}: m={m}, q={q}, d={d}");
-        let (xt_mu, xt_var) = predict_points(n, q, seed);
-        let (mean, var) = serve::remote_predict(&mut stream, &xt_mu, &xt_var)?;
-        serve::hangup(&mut stream);
-        (xt_mu, mean, var, format!("server {addr}"))
+        let info = serve::remote_model_info(&mut stream)?;
+        println!(
+            "predict server at {addr}: m={}, q={}, d={}, model version {}",
+            info.m, info.q, info.d, info.version
+        );
+        if project {
+            let path =
+                points.context("--project needs --points file.csv (observed outputs, d columns)")?;
+            let y = load_project_points(path, info.d)?;
+            let (xmu, conf) = serve::remote_project(&mut stream, &y)?;
+            serve::hangup(&mut stream);
+            report_projection(args, &y, &xmu, &conf, &format!("server {addr}"))
+        } else {
+            let (xt_mu, xt_var) = match points {
+                Some(p) => load_predict_points(p, info.q)?,
+                None => predict_points(n, info.q, seed),
+            };
+            let (mean, var) = serve::remote_predict(&mut stream, &xt_mu, &xt_var)?;
+            serve::hangup(&mut stream);
+            report_prediction(args, &xt_mu, &mean, &var, &format!("server {addr}"))
+        }
     } else {
         let path = args
             .get("model")
@@ -178,42 +240,133 @@ fn predict_cmd(args: &Args) -> Result<()> {
             model.meta.iterations,
             model.meta.final_bound
         );
-        let (xt_mu, xt_var) = predict_points(n, pred.q(), seed);
-        let (mean, var) = pred.predict(&xt_mu, &xt_var)?;
-        (xt_mu, mean, var, format!("model {path}"))
-    };
+        if project {
+            let csv =
+                points.context("--project needs --points file.csv (observed outputs, d columns)")?;
+            let y = load_project_points(csv, pred.dout())?;
+            let (xmu, conf) = pred.project(&y)?;
+            report_projection(args, &y, &xmu, &conf, &format!("model {path}"))
+        } else {
+            let (xt_mu, xt_var) = match points {
+                Some(p) => load_predict_points(p, pred.q())?,
+                None => predict_points(n, pred.q(), seed),
+            };
+            let (mean, var) = pred.predict(&xt_mu, &xt_var)?;
+            report_prediction(args, &xt_mu, &mean, &var, &format!("model {path}"))
+        }
+    }
+}
 
+/// Print the prediction summary and write `--out` CSV if asked.
+fn report_prediction(
+    args: &Args,
+    xt_mu: &Matrix,
+    mean: &Matrix,
+    var: &[f64],
+    origin: &str,
+) -> Result<()> {
     let mean_abs =
         mean.data().iter().map(|v| v.abs()).sum::<f64>() / mean.data().len().max(1) as f64;
     let var_mean = var.iter().sum::<f64>() / var.len().max(1) as f64;
     println!(
-        "predicted {n} points from {origin}: mean|mean| = {mean_abs:.6}, mean var = {var_mean:.6}"
+        "predicted {} points from {origin}: mean|mean| = {mean_abs:.6}, mean var = {var_mean:.6}",
+        xt_mu.rows()
     );
     if let Some(path) = args.get("out") {
-        write_predictions(path, &xt_mu, &mean, &var)?;
+        write_predictions(path, xt_mu, mean, var)?;
     }
     Ok(())
 }
 
-/// `gparml serve`: the multi-client TCP predict server — one loaded
-/// model, one `Predictor`, a thread per client, zero training workers.
+/// Print the projection summary and write `--out` CSV if asked.
+fn report_projection(
+    args: &Args,
+    y: &Matrix,
+    xmu: &Matrix,
+    conf: &[f64],
+    origin: &str,
+) -> Result<()> {
+    let conf_mean = conf.iter().sum::<f64>() / conf.len().max(1) as f64;
+    println!(
+        "projected {} observations into the q={} latent space from {origin}: \
+         mean confidence = {conf_mean:.6}",
+        y.rows(),
+        xmu.cols()
+    );
+    if let Some(path) = args.get("out") {
+        write_projections(path, xmu, conf)?;
+    }
+    Ok(())
+}
+
+/// Write latent projections as CSV (same round-trip-exact formatting
+/// as [`write_predictions`]).
+fn write_projections(path: &str, xmu: &Matrix, conf: &[f64]) -> Result<()> {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    for j in 0..xmu.cols() {
+        let _ = write!(out, "x{j},");
+    }
+    out.push_str("conf\n");
+    for i in 0..xmu.rows() {
+        for j in 0..xmu.cols() {
+            let _ = write!(out, "{:.17e},", xmu[(i, j)]);
+        }
+        let _ = writeln!(out, "{:.17e}", conf[i]);
+    }
+    std::fs::write(path, out).with_context(|| format!("writing projections to {path}"))?;
+    println!("wrote {path}");
+    Ok(())
+}
+
+/// `gparml serve`: the TCP serving subsystem — one hot-swappable
+/// model, a reader thread per client, a worker pool micro-batching
+/// compute across clients, zero training workers.
 fn serve_cmd(args: &Args) -> Result<()> {
     let path = args.get("model").context("serve needs --model PATH")?;
     let model = TrainedModel::load(std::path::Path::new(path))?;
     let pred = Predictor::new(&model)?;
     let listen = args.get_str("listen", "127.0.0.1:0");
-    let max_clients = args.get_usize("clients", 0)? as u64;
+    let opts = gparml::model::ServeOptions {
+        max_clients: args.get_usize("clients", 0)? as u64,
+        workers: args.get_usize("threads", 2)?.max(1),
+        max_batch_rows: args.get_usize("batch-rows", 4096)?,
+    };
     let listener =
         std::net::TcpListener::bind(listen).with_context(|| format!("binding {listen}"))?;
     println!(
-        "gparml serve: {path} (m={}, q={}, d={}) listening on {}",
+        "gparml serve: {path} (m={}, q={}, d={}) listening on {} \
+         ({} worker thread(s), micro-batch cap {} rows)",
         pred.m(),
         pred.q(),
         pred.dout(),
-        listener.local_addr()?
+        listener.local_addr()?,
+        opts.workers,
+        opts.max_batch_rows
     );
-    let served = serve::serve(&listener, &pred, max_clients)?;
-    eprintln!("[gparml-serve] exiting after {served} client(s)");
+    let state = gparml::model::ServeState::with_path(pred, std::path::PathBuf::from(path));
+    let stats = serve::serve(&listener, &state, &opts)?;
+    eprintln!(
+        "[gparml-serve] exiting after {} client(s): {} request(s), {} kernel batch(es), \
+         {} coalesced job(s)",
+        stats.clients, stats.requests, stats.batches, stats.coalesced_jobs
+    );
+    Ok(())
+}
+
+/// `gparml reload`: tell a running predict server to atomically
+/// re-read its model artifact — the SIGHUP-equivalent control client.
+fn reload_cmd(args: &Args) -> Result<()> {
+    let addr = args
+        .get("connect")
+        .context("reload needs --connect ADDR (a running `gparml serve`)")?;
+    let mut stream = serve::connect(addr)?;
+    let info = serve::remote_reload(&mut stream)?;
+    serve::hangup(&mut stream);
+    println!(
+        "reloaded: server at {addr} now serves model version {} (m={}, q={}, d={})",
+        info.version, info.m, info.q, info.d
+    );
     Ok(())
 }
 
@@ -386,12 +539,22 @@ fn run_loop<B: Backend>(t: &mut Trainer<B>, iters: usize, args: &Args) -> Result
             );
         }
     }
-    println!(
-        "done. startup {:.2}s, mean iteration (modeled parallel) {:.4}s, load gap {:.2}%",
-        t.log.startup_secs,
-        t.log.mean_iteration_modeled_secs(),
-        t.log.mean_load_gap() * 100.0
-    );
+    // guard the summary: a 0-iteration run (a legitimate `--resume` +
+    // `--export` re-export invocation) has no per-iteration series to
+    // average — printing NaN% here would be noise, not signal
+    if t.log.iterations.is_empty() {
+        println!(
+            "done. startup {:.2}s, no iterations run (re-export / resume-only invocation)",
+            t.log.startup_secs
+        );
+    } else {
+        println!(
+            "done. startup {:.2}s, mean iteration (modeled parallel) {:.4}s, load gap {:.2}%",
+            t.log.startup_secs,
+            t.log.mean_iteration_modeled_secs(),
+            t.log.mean_load_gap() * 100.0
+        );
+    }
     if let Some(path) = args.get("export") {
         let model = t.export_model()?;
         model.save(std::path::Path::new(path))?;

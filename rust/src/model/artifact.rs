@@ -28,6 +28,7 @@ use anyhow::{ensure, Context, Result};
 
 use crate::cluster::wire::{Dec, Enc};
 use crate::gp::{GlobalParams, MathMode, PosteriorWeights};
+use crate::linalg::Matrix;
 
 /// Artifact file magic: "GPMA" (GParML Model Artifact).
 pub const MAGIC: [u8; 4] = *b"GPMA";
@@ -80,6 +81,23 @@ impl TrainedModel {
 
     pub fn q(&self) -> usize {
         self.params.q()
+    }
+
+    /// Inducing inputs Z [m x q] — the latent-space anchors the
+    /// posterior lives on.
+    pub fn inducing_inputs(&self) -> &Matrix {
+        &self.params.z
+    }
+
+    /// The inducing posterior q(u) moments: (mean [m x d], cov [m x m]).
+    /// Everything the LVM latent-projection serving path consumes.
+    pub fn latent_posterior(&self) -> (&Matrix, &Matrix) {
+        (&self.weights.qu_mean, &self.weights.qu_cov)
+    }
+
+    /// Trained observation-noise precision beta = exp(log_beta).
+    pub fn noise_precision(&self) -> f64 {
+        self.params.log_beta.exp()
     }
 
     /// Strict structural validation: shapes consistent, every number

@@ -1,17 +1,28 @@
 //! `gparml bench predict` — machine-readable throughput benchmark of
-//! the standalone [`Predictor`] serving path, single-threaded and
-//! concurrent (`BENCH_predict.json`, same style as `BENCH_psi.json`).
+//! the standalone [`Predictor`] serving path, single-threaded,
+//! concurrent, and end-to-end through the serving subsystem
+//! (`BENCH_predict.json`, same style as `BENCH_psi.json`).
 //!
 //! The concurrent series shares ONE `Predictor` across `--threads`
 //! OS threads (each with its own [`PredictScratch`]), which is the
-//! exact shape of the `gparml serve` hot path; per-thread times are
+//! exact shape of the serve worker pool; per-thread times are
 //! thread-CPU seconds, so the numbers are stable on the single-core
 //! container (the modeled-cluster clock of DESIGN.md §5).
+//!
+//! The multi-client serve series runs a real loopback server and
+//! `--clients` concurrent TCP clients twice — micro-batching enabled
+//! vs disabled — and reports per-request wall time (a request spans
+//! threads, so the thread-CPU clock cannot see it; wall numbers are
+//! noisier and deliberately NOT part of the `bench check` gate).
+
+use std::net::TcpListener;
+use std::time::Instant;
 
 use anyhow::{Context, Result};
 
 use super::artifact::{ModelMeta, TrainedModel};
 use super::predictor::{PredictScratch, Predictor};
+use super::serve::{self, ServeOptions, ServeState, ServeStats};
 use crate::gp::{GlobalParams, MathMode, PosteriorWeights};
 use crate::linalg::Matrix;
 use crate::util::bench::bench;
@@ -23,12 +34,13 @@ use crate::util::stats;
 ///
 /// Flags: `--config` (artifact shape, default `perf`), `--points`
 /// (batch size, default 512), `--reps`, `--threads` (default 4),
-/// `--model PATH` (bench a real exported model instead of the
-/// synthetic one), `--out` (default `BENCH_predict.json`),
-/// `--artifacts DIR`.
+/// `--clients` (serve series, default 4), `--model PATH` (bench a
+/// real exported model instead of the synthetic one), `--out`
+/// (default `BENCH_predict.json`), `--artifacts DIR`.
 pub fn run(args: &Args) -> Result<()> {
     let reps = args.get_usize("reps", 10)?.max(1);
     let threads = args.get_usize("threads", 4)?.max(1);
+    let clients = args.get_usize("clients", 4)?.max(1);
     let b = args.get_usize("points", 512)?.max(1);
     let out_path = args.get_str("out", "BENCH_predict.json");
 
@@ -98,16 +110,110 @@ pub fn run(args: &Args) -> Result<()> {
         per_point(concurrent_median),
     );
 
+    // end-to-end through the serving subsystem: the same request load
+    // from `clients` concurrent TCP clients, micro-batching on vs off
+    let (batched_s, batched_stats) = serve_round(&model, &xt_mu, &xt_var, clients, reps, 4096)
+        .context("bench serve round (batched)")?;
+    let (unbatched_s, _) = serve_round(&model, &xt_mu, &xt_var, clients, reps, 0)
+        .context("bench serve round (unbatched)")?;
+    println!(
+        "serve ({clients} clients x {b} points): {:.0} ns/point micro-batched \
+         ({} kernel batches, {} coalesced jobs), {:.0} ns/point unbatched",
+        per_point(batched_s),
+        batched_stats.batches,
+        batched_stats.coalesced_jobs,
+        per_point(unbatched_s),
+    );
+
     let json = format!(
         "{{\n  \"config\": \"{cfg_name}\",\n  \"points\": {b},\n  \"m\": {m},\n  \"q\": {q},\n  \
          \"d\": {d},\n  \"reps\": {reps},\n  \"threads\": {threads},\n  \
-         \"predict_ns_per_point\": {:.1},\n  \"predict_concurrent_ns_per_point\": {:.1}\n}}\n",
+         \"predict_ns_per_point\": {:.1},\n  \"predict_concurrent_ns_per_point\": {:.1},\n  \
+         \"serve_clients\": {clients},\n  \"serve_batched_ns_per_point\": {:.1},\n  \
+         \"serve_batched_kernel_batches\": {},\n  \"serve_batched_coalesced_jobs\": {},\n  \
+         \"serve_unbatched_ns_per_point\": {:.1}\n}}\n",
         per_point(single.median_s),
         per_point(concurrent_median),
+        per_point(batched_s),
+        batched_stats.batches,
+        batched_stats.coalesced_jobs,
+        per_point(unbatched_s),
     );
     std::fs::write(out_path, json).with_context(|| format!("writing {out_path}"))?;
     println!("wrote {out_path}");
     Ok(())
+}
+
+/// One serve measurement: a loopback server (2 worker threads,
+/// `batch_rows` micro-batch cap), `clients` concurrent TCP clients
+/// each timing `reps` requests after one warm-up. Returns the slowest
+/// client's median per-request wall seconds plus the server's stats.
+fn serve_round(
+    model: &TrainedModel,
+    xt_mu: &Matrix,
+    xt_var: &Matrix,
+    clients: usize,
+    reps: usize,
+    batch_rows: usize,
+) -> Result<(f64, ServeStats)> {
+    let state = ServeState::new(Predictor::new(model)?);
+    let opts = ServeOptions {
+        max_clients: clients as u64,
+        workers: 2,
+        max_batch_rows: batch_rows,
+    };
+    let listener = TcpListener::bind("127.0.0.1:0").context("binding bench serve listener")?;
+    let addr = listener.local_addr()?.to_string();
+
+    std::thread::scope(|s| {
+        let server = s.spawn(|| serve::serve(&listener, &state, &opts));
+        let handles: Vec<_> = (0..clients)
+            .map(|_| {
+                let addr = &addr;
+                s.spawn(move || -> Result<Vec<f64>> {
+                    let mut stream = serve::connect(addr)?;
+                    serve::remote_predict(&mut stream, xt_mu, xt_var)?; // warm-up
+                    let mut times = Vec::with_capacity(reps);
+                    for _ in 0..reps {
+                        let t0 = Instant::now();
+                        serve::remote_predict(&mut stream, xt_mu, xt_var)?;
+                        times.push(t0.elapsed().as_secs_f64());
+                    }
+                    serve::hangup(&mut stream);
+                    Ok(times)
+                })
+            })
+            .collect();
+        // join ALL clients before touching the server: an early `?`
+        // here would leave the scope joining a server that still waits
+        // for its Nth counted client — a hang instead of an error
+        let mut medians = Vec::with_capacity(clients);
+        let mut client_err = None;
+        for h in handles {
+            match h.join().expect("bench serve client panicked") {
+                Ok(times) => medians.push(stats::median(&times)),
+                Err(e) => client_err = Some(e),
+            }
+        }
+        if client_err.is_some() {
+            // failed clients may never have counted toward max_clients;
+            // fire-and-forget Pings make up the count so the server can
+            // exit (writing without reading cannot block)
+            for _ in medians.len()..clients {
+                if let Ok(mut s) = serve::connect(&addr) {
+                    let _ = crate::cluster::wire::write_frame(
+                        &mut s,
+                        &crate::cluster::wire::Frame::Ping,
+                    );
+                }
+            }
+        }
+        let server_stats = server.join().expect("bench serve server panicked")?;
+        match client_err {
+            Some(e) => Err(e).context("bench serve client failed"),
+            None => Ok((stats::max(&medians), server_stats)),
+        }
+    })
 }
 
 /// A structurally valid model at the given shapes with pseudo-random

@@ -19,10 +19,15 @@
 //!   from a `TrainedModel`: batched predictions with **no cluster**
 //!   and no allocation in the per-batch hot loop
 //!   ([`Predictor::predict_into`] + [`PredictScratch`]).
-//! * [`serve`] — a multi-client TCP predict server over the cluster
-//!   wire framing (`gparml serve` / `gparml predict --connect`).
+//! * [`serve`] — the multi-client TCP serving subsystem over the
+//!   cluster wire framing (`gparml serve` / `gparml predict --connect`
+//!   / `gparml reload`): reader threads feed a shared queue, a worker
+//!   pool drains it with cross-client micro-batching (bit-identical to
+//!   per-request evaluation), plus LVM latent-projection serving and
+//!   atomic model hot-reload.
 //! * [`bench`] — `gparml bench predict`, the standalone-predictor
-//!   throughput benchmark (`BENCH_predict.json`).
+//!   throughput benchmark (`BENCH_predict.json`), including the
+//!   multi-client batched-vs-unbatched serving series.
 
 pub mod artifact;
 pub mod bench;
@@ -31,3 +36,4 @@ pub mod serve;
 
 pub use artifact::{Checkpoint, ModelMeta, TrainedModel};
 pub use predictor::{PredictScratch, Predictor};
+pub use serve::{ServeOptions, ServeState, ServeStats, ServedModelInfo};

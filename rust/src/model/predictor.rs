@@ -41,6 +41,8 @@ pub struct PredictScratch {
     psi1: Matrix,
     /// one-point Psi2 block, length m*m
     psi2: Vec<f64>,
+    /// per-point inducing responsibilities (projection path), length m
+    resp: Vec<f64>,
 }
 
 impl PredictScratch {
@@ -51,6 +53,7 @@ impl PredictScratch {
             dn2: Vec::new(),
             psi1: Matrix::zeros(0, 0),
             psi2: Vec::new(),
+            resp: Vec::new(),
         }
     }
 }
@@ -69,6 +72,11 @@ pub struct Predictor {
     w1: Matrix,
     /// variance weights Kmm^-1 - Sigma^-1, m x m
     wv: Matrix,
+    /// inducing posterior mean q(u), m x d — the data-space codebook
+    /// the latent-projection path matches observations against
+    qu_mean: Matrix,
+    /// observation-noise precision exp(log_beta), precomputed
+    beta: f64,
     /// signal variance exp(log_sf2), precomputed
     sf2: f64,
     dout: usize,
@@ -90,6 +98,8 @@ impl Predictor {
             params: model.params.clone(),
             w1: model.weights.w1.clone(),
             wv: model.weights.wv.clone(),
+            qu_mean: model.weights.qu_mean.clone(),
+            beta: model.noise_precision(),
             sf2: model.params.sf2(),
             dout: model.dout,
         })
@@ -190,6 +200,96 @@ impl Predictor {
         }
         Ok(())
     }
+
+    /// Latent projection: map observed outputs `y` [t x d] into the
+    /// model's latent space, answered entirely from the inducing
+    /// posterior — the allocating convenience wrapper around
+    /// [`Self::project_into`].
+    pub fn project(&self, y: &Matrix) -> Result<(Matrix, Vec<f64>)> {
+        let mut scratch = PredictScratch::new();
+        let mut xmu = Matrix::zeros(0, 0);
+        let mut conf = Vec::new();
+        self.project_into(y, &mut scratch, &mut xmu, &mut conf)?;
+        Ok((xmu, conf))
+    }
+
+    /// Amortised LVM latent projection into caller-owned outputs.
+    ///
+    /// The inducing posterior is a compressed codebook of the trained
+    /// mapping: q(u) places mass `qu_mean[j]` (in data space) at the
+    /// latent anchor `Z[j]`. A new observation `y_i` is projected by
+    /// responsibility-weighted kernel regression over that codebook,
+    /// with the trained noise precision beta as the bandwidth:
+    ///
+    /// ```text
+    /// r_ij ∝ exp(-beta/2 ||y_i - qu_mean_j||^2)   (normalised over j)
+    /// xmu_i = sum_j r_ij Z_j
+    /// conf_i = max_j r_ij                          (in (0, 1])
+    /// ```
+    ///
+    /// This is the standard cheap initialiser for latent inference on a
+    /// trained GPLVM (nearest-posterior-mean regression) — it costs
+    /// O(t·m·(d+q)), needs nothing beyond the artifact, and is fully
+    /// deterministic per row, so micro-batched serving is bit-identical
+    /// to per-request evaluation. It is *not* a variational
+    /// optimisation over x*; `conf` flags points the codebook explains
+    /// poorly (low max responsibility).
+    pub fn project_into(
+        &self,
+        y: &Matrix,
+        scratch: &mut PredictScratch,
+        xmu: &mut Matrix,
+        conf: &mut Vec<f64>,
+    ) -> Result<()> {
+        let (m, q, d) = (self.m(), self.q(), self.dout);
+        ensure!(
+            y.cols() == d,
+            "observations are {}x{} but the model outputs d={d} dimensions",
+            y.rows(),
+            y.cols()
+        );
+        let t = y.rows();
+        scratch.resp.resize(m, 0.0);
+        xmu.reset(t, q, 0.0);
+        conf.clear();
+        conf.reserve(t);
+        for i in 0..t {
+            let yi = y.row(i);
+            // log-responsibilities, max-shifted for stability
+            let mut emax = f64::NEG_INFINITY;
+            for j in 0..m {
+                let uj = self.qu_mean.row(j);
+                let mut sq = 0.0;
+                for (a, b) in yi.iter().zip(uj) {
+                    let diff = a - b;
+                    sq += diff * diff;
+                }
+                let e = -0.5 * self.beta * sq;
+                scratch.resp[j] = e;
+                if e > emax {
+                    emax = e;
+                }
+            }
+            let mut sum = 0.0;
+            let mut top = 0.0;
+            for r in scratch.resp.iter_mut() {
+                *r = (*r - emax).exp();
+                sum += *r;
+                if *r > top {
+                    top = *r;
+                }
+            }
+            let row = xmu.row_mut(i);
+            for (j, r) in scratch.resp.iter().enumerate() {
+                let w = r / sum;
+                for (o, z) in row.iter_mut().zip(self.params.z.row(j)) {
+                    *o += w * z;
+                }
+            }
+            conf.push(top / sum);
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -247,5 +347,48 @@ mod tests {
         let bad = Matrix::zeros(3, 5);
         let msg = format!("{:#}", pred.predict(&bad, &bad).unwrap_err());
         assert!(msg.contains("q=2"), "{msg}");
+        let msg = format!("{:#}", pred.project(&bad).unwrap_err());
+        assert!(msg.contains("d=2"), "{msg}");
+    }
+
+    /// Projection is per-row independent: splitting a batch any way
+    /// gives the same bits as projecting it whole — the property that
+    /// makes cross-client micro-batching bit-identical.
+    #[test]
+    fn project_rows_are_batch_independent_and_confident() {
+        let model = sample_model(21, 7, 3, 4);
+        let pred = Predictor::new(&model).unwrap();
+        let mut rng = Rng::new(22);
+        let y = Matrix::from_fn(10, 4, |_, _| rng.normal());
+
+        let (xmu_all, conf_all) = pred.project(&y).unwrap();
+        assert_eq!((xmu_all.rows(), xmu_all.cols()), (10, 3));
+        assert!(conf_all.iter().all(|c| *c > 0.0 && *c <= 1.0), "{conf_all:?}");
+
+        // one reused scratch over per-row singleton batches
+        let mut scratch = PredictScratch::new();
+        let mut xmu = Matrix::zeros(0, 0);
+        let mut conf = Vec::new();
+        for i in 0..10 {
+            let yi = Matrix::from_fn(1, 4, |_, j| y[(i, j)]);
+            pred.project_into(&yi, &mut scratch, &mut xmu, &mut conf).unwrap();
+            for j in 0..3 {
+                assert_eq!(
+                    xmu[(0, j)].to_bits(),
+                    xmu_all[(i, j)].to_bits(),
+                    "projection row {i} diverged when batched"
+                );
+            }
+            assert_eq!(conf[0].to_bits(), conf_all[i].to_bits());
+        }
+
+        // an observation sitting exactly on a codebook entry is matched
+        // with dominant confidence and projects near its latent anchor
+        let hit = Matrix::from_fn(1, 4, |_, j| model.weights.qu_mean[(2, j)]);
+        let (xmu_hit, conf_hit) = pred.project(&hit).unwrap();
+        assert!(conf_hit[0] > 0.5, "weak match: {}", conf_hit[0]);
+        let anchor = model.params.z.row(2);
+        let off: f64 = (0..3).map(|j| (xmu_hit[(0, j)] - anchor[j]).abs()).sum();
+        assert!(off < 1.5, "projection far from its anchor: {off}");
     }
 }

@@ -1,101 +1,736 @@
-//! The TCP predict server (`gparml serve`) and its client helpers
-//! (`gparml predict --connect`): the end of the train → export → serve
-//! story, speaking the cluster wire framing (DESIGN.md §9).
+//! The serving subsystem (`gparml serve` / `gparml predict --connect`
+//! / `gparml reload`): the end of the train → export → serve story,
+//! speaking the cluster wire framing (DESIGN.md §9).
 //!
-//! The server loads one [`TrainedModel`], builds one [`Predictor`] and
-//! serves any number of concurrent clients — one OS thread per
-//! connection, all sharing the same `&Predictor` (it is `Sync`; each
-//! thread owns its [`PredictScratch`], so batches are allocation-free
-//! after warm-up). Requests/replies are ordinary wire v4 frames:
-//! `ModelInfo` (shape handshake), `ServePredict` → `Predict`,
-//! `Ping`/`Pong`, `Shutdown`/EOF to hang up. Zero training workers are
-//! involved anywhere on this path.
+//! ## Architecture
+//!
+//! ```text
+//! accept loop ──► connection threads ──► shared job queue ──► worker pool
+//!   (retries        (read frames,          (Mutex+Condvar)      (N threads,
+//!    transient       answer control                              micro-batch
+//!    errors)         frames inline,                              + reply)
+//!                    enqueue + await
+//!                    compute frames)
+//! ```
+//!
+//! * **Connection threads** are cheap: they block on the socket, decode
+//!   frames, answer `Ping`/`ModelInfo`/`Reload` inline, and for the two
+//!   compute requests (`ServePredict`, `ServeProject`) enqueue a job and
+//!   wait for its encoded reply bytes. One connection has at most one
+//!   request in flight, so per-client reply order is trivially FIFO.
+//! * **Worker threads** (a small fixed pool, [`ServeOptions::workers`])
+//!   drain the queue with **adaptive cross-client micro-batching**:
+//!   whatever compatible jobs are queued at wake-up (same request kind,
+//!   same column count, up to [`ServeOptions::max_batch_rows`] total
+//!   rows) are coalesced into ONE `predict_into`/`project_into` call and
+//!   the outputs are split back per client. Both kernels are strictly
+//!   per-row computations (tested), so a micro-batched reply is
+//!   **bit-identical** to per-request evaluation — batching changes
+//!   throughput, never bytes. Under light load a worker wakes to a
+//!   single queued job and serves it unbatched; under heavy multi-client
+//!   load batches grow automatically (that is the "adaptive" part — no
+//!   timers, no artificial latency).
+//! * **Replies** are encoded straight from the worker's batch output via
+//!   the borrowed-buffer encoders ([`wire::encode_predict_response`]),
+//!   so the hot path never clones `mean`/`var` into a per-request
+//!   `Response`. Worker scratch and concat buffers are reused across
+//!   batches: the steady-state hot loop is allocation-free apart from
+//!   the reply byte buffers that go on the wire.
+//! * **Hot reload**: the live model is an `Arc<ModelSlot>` behind a
+//!   `RwLock` ([`ServeState`]). `Request::Reload` re-reads the artifact
+//!   from the path the server was started with, validates it, and swaps
+//!   the Arc; each worker batch snapshots the Arc once, so in-flight
+//!   requests finish on the model they started with. Every swap bumps a
+//!   **model version** reported in `ModelInfo`, so clients can detect
+//!   it.
+//!
+//! ## Robustness contract
+//!
+//! Transient `accept()` failures (`ECONNABORTED`, EMFILE under load)
+//! are logged and retried, never fatal. A misbehaving client — garbage
+//! bytes, instant disconnect, death mid-request — costs exactly its own
+//! connection thread; everyone else keeps being served. The
+//! `--clients N` exit condition counts only connections that completed
+//! at least one valid request-bearing frame (`Ping` or any `Request`),
+//! so port scans and failed handshakes cannot consume a slot.
 
+use std::collections::VecDeque;
+use std::io::Write as _;
 use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex, RwLock};
+use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
+use super::artifact::TrainedModel;
 use super::predictor::{PredictScratch, Predictor};
 use crate::cluster::wire::{self, Frame, Request, Response};
 use crate::linalg::Matrix;
 use crate::util::timer::thread_cpu_secs;
 
-/// Serve clients accepted on `listener` until `max_clients`
-/// connections have been handled (0 = forever). Each connection gets
-/// its own thread; all threads share `predictor`. Returns the number
-/// of connections served.
-pub fn serve(listener: &TcpListener, predictor: &Predictor, max_clients: u64) -> Result<u64> {
-    std::thread::scope(|s| {
-        let mut served = 0u64;
-        while max_clients == 0 || served < max_clients {
-            let (stream, peer) = listener.accept().context("accepting predict client")?;
-            served += 1;
-            let client = served;
-            s.spawn(move || match serve_client(stream, predictor) {
-                Ok(requests) => {
-                    eprintln!("[gparml-serve] client {client} ({peer}): {requests} request(s)")
-                }
-                Err(e) => eprintln!("[gparml-serve] client {client} ({peer}) failed: {e:#}"),
-            });
+/// How the server behaves; independent of the model it serves.
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    /// Stop accepting after this many counted clients (0 = forever).
+    /// Only connections that completed ≥ 1 valid request-bearing frame
+    /// count; in-flight clients are drained before returning.
+    pub max_clients: u64,
+    /// Worker-pool threads draining the shared queue (min 1).
+    pub workers: usize,
+    /// Micro-batching cap: total rows coalesced into one kernel call.
+    /// 0 disables coalescing (every job runs alone — the reference
+    /// behaviour micro-batched replies are tested against).
+    pub max_batch_rows: usize,
+}
+
+impl Default for ServeOptions {
+    fn default() -> ServeOptions {
+        ServeOptions {
+            max_clients: 0,
+            workers: 2,
+            max_batch_rows: 4096,
         }
-        Ok(served)
+    }
+}
+
+/// One loaded model instance: the immutable predictor plus the version
+/// `ModelInfo` reports for it.
+pub struct ModelSlot {
+    pub predictor: Predictor,
+    pub version: u64,
+}
+
+/// The hot-swappable model state shared by every serving thread.
+///
+/// Readers take a cheap `Arc` snapshot ([`ServeState::current`]);
+/// [`ServeState::reload`] / [`ServeState::install`] atomically replace
+/// the slot and bump the version. Snapshots taken before a swap keep
+/// the old model alive until their requests finish — the reload
+/// contract.
+pub struct ServeState {
+    slot: RwLock<Arc<ModelSlot>>,
+    /// Artifact path `Reload` re-reads; `None` rejects reloads.
+    path: Option<PathBuf>,
+}
+
+impl ServeState {
+    /// Serve `predictor` with no reload source (`Reload` is rejected).
+    pub fn new(predictor: Predictor) -> ServeState {
+        ServeState {
+            slot: RwLock::new(Arc::new(ModelSlot {
+                predictor,
+                version: 1,
+            })),
+            path: None,
+        }
+    }
+
+    /// Serve `predictor`, re-reading `path` on every `Reload` frame.
+    pub fn with_path(predictor: Predictor, path: PathBuf) -> ServeState {
+        ServeState {
+            path: Some(path),
+            ..ServeState::new(predictor)
+        }
+    }
+
+    /// Snapshot the live model (cheap: one Arc clone under a read lock).
+    pub fn current(&self) -> Arc<ModelSlot> {
+        self.slot.read().expect("model slot lock poisoned").clone()
+    }
+
+    /// Atomically swap in a new predictor; returns the new version.
+    pub fn install(&self, predictor: Predictor) -> u64 {
+        let mut slot = self.slot.write().expect("model slot lock poisoned");
+        let version = slot.version + 1;
+        *slot = Arc::new(ModelSlot { predictor, version });
+        version
+    }
+
+    /// Re-read the artifact from the configured path, validate it and
+    /// swap it in; in-flight requests finish on the old model. Returns
+    /// the new version. A failed load leaves the old model serving.
+    pub fn reload(&self) -> Result<u64> {
+        let path = self
+            .path
+            .as_ref()
+            .context("this server was not started from a model file — nothing to reload")?;
+        let model = TrainedModel::load(path)?;
+        let predictor = Predictor::new(&model)?;
+        Ok(self.install(predictor))
+    }
+}
+
+/// What `serve` did, for callers and tests.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ServeStats {
+    /// Connections that completed ≥ 1 valid request-bearing frame.
+    pub clients: u64,
+    /// Requests answered (compute + control, across all clients).
+    pub requests: u64,
+    /// Kernel calls the worker pool made for compute requests.
+    pub batches: u64,
+    /// Compute jobs that shared a kernel call with ≥ 1 other job.
+    pub coalesced_jobs: u64,
+}
+
+// ---------------------------------------------------------------------------
+// job queue
+// ---------------------------------------------------------------------------
+
+/// A compute request detached from its connection.
+enum Work {
+    Predict { xt_mu: Matrix, xt_var: Matrix },
+    Project { y: Matrix },
+}
+
+impl Work {
+    /// Coalescing key half 1: jobs of different kinds never share a call.
+    fn kind(&self) -> u8 {
+        match self {
+            Work::Predict { .. } => 0,
+            Work::Project { .. } => 1,
+        }
+    }
+
+    /// Coalescing key half 2: only equal column counts concatenate.
+    fn cols(&self) -> usize {
+        match self {
+            Work::Predict { xt_mu, .. } => xt_mu.cols(),
+            Work::Project { y } => y.cols(),
+        }
+    }
+
+    fn rows(&self) -> usize {
+        match self {
+            Work::Predict { xt_mu, .. } => xt_mu.rows(),
+            Work::Project { y } => y.rows(),
+        }
+    }
+}
+
+/// One queued request: the work plus the channel its encoded reply
+/// frame goes back through.
+struct Job {
+    work: Work,
+    reply: mpsc::Sender<Vec<u8>>,
+}
+
+/// The shared FIFO the connection threads feed and the worker pool
+/// drains. `pop_batch` hands a worker the longest coalescible run
+/// queued at wake-up — the adaptive micro-batch.
+struct Queue {
+    inner: Mutex<(VecDeque<Job>, bool)>,
+    cv: Condvar,
+}
+
+impl Queue {
+    fn new() -> Queue {
+        Queue {
+            inner: Mutex::new((VecDeque::new(), false)),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Returns false if the queue is already closed (server shutting
+    /// down) — the job is dropped and the caller must not wait for a
+    /// reply.
+    #[must_use]
+    fn push(&self, job: Job) -> bool {
+        let mut g = self.inner.lock().expect("serve queue poisoned");
+        if g.1 {
+            return false;
+        }
+        g.0.push_back(job);
+        drop(g);
+        self.cv.notify_one();
+        true
+    }
+
+    /// Block until at least one job is queued (or the queue is closed
+    /// and drained), then take the front job plus every immediately
+    /// following job that can share its kernel call (same kind, same
+    /// column count, ≤ `max_rows` total rows, ≤ `max_jobs` jobs;
+    /// `max_rows == 0` disables coalescing entirely). Jobs that cannot
+    /// coalesce stay queued — and another worker is woken for them, so
+    /// an incompatible backlog spreads across the pool instead of
+    /// serialising behind one worker. Empty result = shut down.
+    fn pop_batch(&self, max_jobs: usize, max_rows: usize) -> Vec<Job> {
+        let mut g = self.inner.lock().expect("serve queue poisoned");
+        loop {
+            if let Some(first) = g.0.pop_front() {
+                let (kind, cols) = (first.work.kind(), first.work.cols());
+                let mut rows = first.work.rows();
+                let mut out = vec![first];
+                if max_rows > 0 {
+                    while out.len() < max_jobs.max(1) {
+                        let fits = g.0.front().is_some_and(|next| {
+                            next.work.kind() == kind
+                                && next.work.cols() == cols
+                                && rows + next.work.rows() <= max_rows
+                        });
+                        if !fits {
+                            break;
+                        }
+                        let next = g.0.pop_front().expect("front just checked");
+                        rows += next.work.rows();
+                        out.push(next);
+                    }
+                }
+                if !g.0.is_empty() {
+                    // leftovers (incompatible or over-cap): hand them to
+                    // another worker (a notify sent while none waited
+                    // is lost, so re-notify here)
+                    self.cv.notify_one();
+                }
+                return out;
+            }
+            if g.1 {
+                return Vec::new();
+            }
+            g = self.cv.wait(g).expect("serve queue poisoned");
+        }
+    }
+
+    fn close(&self) {
+        self.inner.lock().expect("serve queue poisoned").1 = true;
+        self.cv.notify_all();
+    }
+}
+
+/// Jobs a worker drains per wake-up, independent of the row cap.
+const MAX_BATCH_JOBS: usize = 64;
+
+/// How long the shutdown drain waits for lingering connections before
+/// force-closing their sockets (an idle-but-connected client must not
+/// wedge a `--clients N` exit forever).
+const DRAIN_GRACE_MS: u64 = 10_000;
+
+#[derive(Default)]
+struct Counters {
+    clients: AtomicU64,
+    requests: AtomicU64,
+    batches: AtomicU64,
+    coalesced_jobs: AtomicU64,
+    /// Connection threads currently running (shutdown barrier).
+    active_conns: AtomicU64,
+}
+
+// ---------------------------------------------------------------------------
+// server
+// ---------------------------------------------------------------------------
+
+/// Run the serving subsystem on `listener` until
+/// [`ServeOptions::max_clients`] counted clients have been served
+/// (0 = forever). Blocks; returns the run's [`ServeStats`].
+pub fn serve(
+    listener: &TcpListener,
+    state: &ServeState,
+    opts: &ServeOptions,
+) -> Result<ServeStats> {
+    // Nonblocking accept lets the loop observe the client-count exit
+    // condition (reached inside connection threads) without a wake-up
+    // connection; restored on exit.
+    listener
+        .set_nonblocking(true)
+        .context("setting the serve listener nonblocking")?;
+    let queue = Queue::new();
+    let counters = Counters::default();
+    // socket handles of live connections, so the shutdown drain can
+    // force-close stragglers (handlers deregister on exit)
+    let registry: Mutex<std::collections::HashMap<u64, TcpStream>> =
+        Mutex::new(std::collections::HashMap::new());
+    let mut next_conn = 0u64;
+
+    std::thread::scope(|s| {
+        for _ in 0..opts.workers.max(1) {
+            s.spawn(|| worker_loop(&queue, state, opts, &counters));
+        }
+        loop {
+            let served = counters.clients.load(Ordering::Acquire);
+            if opts.max_clients != 0 && served >= opts.max_clients {
+                break;
+            }
+            match listener.accept() {
+                Ok((stream, peer)) => {
+                    counters.active_conns.fetch_add(1, Ordering::AcqRel);
+                    let conn_id = next_conn;
+                    next_conn += 1;
+                    if let Ok(clone) = stream.try_clone() {
+                        registry.lock().expect("conn registry poisoned").insert(conn_id, clone);
+                    }
+                    let (queue, state, counters, registry) = (&queue, state, &counters, &registry);
+                    s.spawn(move || {
+                        let client = serve_client(stream, state, queue, counters);
+                        match client {
+                            Ok(requests) => eprintln!(
+                                "[gparml-serve] client {peer}: {requests} request(s)"
+                            ),
+                            Err(e) => {
+                                eprintln!("[gparml-serve] client {peer} failed: {e:#}")
+                            }
+                        }
+                        registry.lock().expect("conn registry poisoned").remove(&conn_id);
+                        counters.active_conns.fetch_sub(1, Ordering::AcqRel);
+                    });
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                // transient under load (ECONNABORTED, EMFILE, ...):
+                // log, back off briefly, keep serving — never fatal
+                Err(e) => {
+                    eprintln!("[gparml-serve] accept failed (retrying): {e}");
+                    std::thread::sleep(Duration::from_millis(50));
+                }
+            }
+        }
+        // drain in-flight connections, then release the worker pool; a
+        // connection that neither finishes nor hangs up within the
+        // grace window is force-closed so `--clients N` always exits
+        let mut waited_ms = 0u64;
+        while counters.active_conns.load(Ordering::Acquire) > 0 {
+            std::thread::sleep(Duration::from_millis(5));
+            waited_ms += 5;
+            if waited_ms == DRAIN_GRACE_MS {
+                let conns = registry.lock().expect("conn registry poisoned");
+                if !conns.is_empty() {
+                    eprintln!(
+                        "[gparml-serve] force-closing {} lingering connection(s) after the \
+                         {DRAIN_GRACE_MS}ms drain grace",
+                        conns.len()
+                    );
+                    for conn in conns.values() {
+                        let _ = conn.shutdown(std::net::Shutdown::Both);
+                    }
+                }
+            }
+        }
+        queue.close();
+    });
+    listener.set_nonblocking(false).ok();
+
+    Ok(ServeStats {
+        clients: counters.clients.load(Ordering::Acquire),
+        requests: counters.requests.load(Ordering::Acquire),
+        batches: counters.batches.load(Ordering::Acquire),
+        coalesced_jobs: counters.coalesced_jobs.load(Ordering::Acquire),
     })
 }
 
-/// Serve one client connection until `Shutdown` or EOF. Returns the
-/// number of predict/info requests answered.
-fn serve_client(mut stream: TcpStream, predictor: &Predictor) -> Result<u64> {
+/// Serve one client connection until `Shutdown`, EOF or an error.
+/// Returns the number of requests answered.
+fn serve_client(
+    mut stream: TcpStream,
+    state: &ServeState,
+    queue: &Queue,
+    counters: &Counters,
+) -> Result<u64> {
+    // the listener is nonblocking (accept-loop polling); the accepted
+    // socket must not inherit that (it does on some BSDs)
+    stream.set_nonblocking(false).ok();
     stream.set_nodelay(true).ok();
-    let mut scratch = PredictScratch::new();
-    let mut mean = Matrix::zeros(0, 0);
-    let mut var = Vec::new();
+    let (reply_tx, reply_rx) = mpsc::channel::<Vec<u8>>();
     let mut served = 0u64;
+    let mut counted = false;
     loop {
         let req = match wire::read_frame(&mut stream)? {
             None | Some((Frame::Shutdown, _)) => return Ok(served),
             Some((Frame::Ping, _)) => {
+                count_client(&mut counted, counters);
                 wire::write_frame(&mut stream, &Frame::Pong)?;
+                served += 1;
+                counters.requests.fetch_add(1, Ordering::AcqRel);
                 continue;
             }
-            Some((Frame::Request(req), _)) => req,
+            Some((Frame::Request(req), _)) => {
+                count_client(&mut counted, counters);
+                req
+            }
             Some((f, _)) => bail!("unexpected frame {f:?} from predict client"),
         };
-        let c0 = thread_cpu_secs();
-        let resp = match &*req {
-            Request::ModelInfo => Response::ModelInfo {
-                m: predictor.m() as u32,
-                q: predictor.q() as u32,
-                d: predictor.dout() as u32,
-            },
-            Request::ServePredict { xt_mu, xt_var } => {
-                match predictor.predict_into(xt_mu, xt_var, &mut scratch, &mut mean, &mut var) {
-                    Ok(()) => Response::Predict {
-                        mean: mean.clone(),
-                        var: var.clone(),
-                    },
-                    Err(e) => Response::Err(format!("{e:#}")),
-                }
+        match *req {
+            Request::ModelInfo => {
+                let slot = state.current();
+                respond(&mut stream, model_info(&slot))?;
             }
-            other => Response::Err(format!(
-                "predict server only answers ServePredict/ModelInfo, got {other:?}"
-            )),
-        };
-        let secs = thread_cpu_secs() - c0;
-        wire::write_frame(
-            &mut stream,
-            &Frame::Response {
+            Request::Reload => match state.reload() {
+                Ok(_) => {
+                    let slot = state.current();
+                    eprintln!("[gparml-serve] reloaded model (version {})", slot.version);
+                    respond(&mut stream, model_info(&slot))?;
+                }
+                Err(e) => {
+                    eprintln!("[gparml-serve] reload failed, keeping old model: {e:#}");
+                    respond(&mut stream, Response::Err(format!("reload failed: {e:#}")))?;
+                }
+            },
+            // malformed shapes are rejected HERE, before the queue:
+            // the batch concatenation relies on xt_mu/xt_var agreeing,
+            // and a bad request must cost its sender an error reply,
+            // never a worker thread
+            Request::ServePredict { xt_mu, xt_var }
+                if xt_mu.rows() != xt_var.rows() || xt_mu.cols() != xt_var.cols() =>
+            {
+                respond(
+                    &mut stream,
+                    Response::Err(format!(
+                        "ServePredict shapes disagree: xt_mu is {}x{} but xt_var is {}x{}",
+                        xt_mu.rows(),
+                        xt_mu.cols(),
+                        xt_var.rows(),
+                        xt_var.cols()
+                    )),
+                )?;
+            }
+            Request::ServePredict { xt_mu, xt_var } => {
+                compute_request(
+                    &mut stream,
+                    queue,
+                    (&reply_tx, &reply_rx),
+                    Work::Predict { xt_mu, xt_var },
+                )?;
+            }
+            Request::ServeProject { y } => {
+                compute_request(&mut stream, queue, (&reply_tx, &reply_rx), Work::Project { y })?;
+            }
+            ref other => {
+                respond(
+                    &mut stream,
+                    Response::Err(format!(
+                        "predict server only answers ServePredict/ServeProject/ModelInfo/Reload, \
+                         got {other:?}"
+                    )),
+                )?;
+            }
+        }
+        served += 1;
+        counters.requests.fetch_add(1, Ordering::AcqRel);
+    }
+}
+
+/// Enqueue one compute request and block until its encoded reply
+/// frame comes back from the worker pool, then put it on the wire —
+/// the single path both `ServePredict` and `ServeProject` take.
+fn compute_request(
+    stream: &mut TcpStream,
+    queue: &Queue,
+    (reply_tx, reply_rx): (&mpsc::Sender<Vec<u8>>, &mpsc::Receiver<Vec<u8>>),
+    work: Work,
+) -> Result<()> {
+    let queued = queue.push(Job {
+        work,
+        reply: reply_tx.clone(),
+    });
+    if !queued {
+        bail!("server is shutting down");
+    }
+    let bytes = reply_rx
+        .recv()
+        .context("serve worker pool hung up mid-request")?;
+    stream.write_all(&bytes).context("writing compute reply")?;
+    Ok(())
+}
+
+/// Count this connection toward `--clients` on its first valid
+/// request-bearing frame (never at accept time).
+fn count_client(counted: &mut bool, counters: &Counters) {
+    if !*counted {
+        *counted = true;
+        counters.clients.fetch_add(1, Ordering::AcqRel);
+    }
+}
+
+fn model_info(slot: &ModelSlot) -> Response {
+    Response::ModelInfo {
+        m: slot.predictor.m() as u32,
+        q: slot.predictor.q() as u32,
+        d: slot.predictor.dout() as u32,
+        version: slot.version,
+    }
+}
+
+/// Write a control-path response frame (owned encoding — cold path).
+fn respond(stream: &mut TcpStream, resp: Response) -> Result<()> {
+    wire::write_frame(
+        stream,
+        &Frame::Response {
+            secs: 0.0,
+            psi_fills: 0,
+            resp: Box::new(resp),
+        },
+    )?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// worker pool
+// ---------------------------------------------------------------------------
+
+/// Per-worker reusable buffers: kernel scratch, concatenated batch
+/// inputs, batch outputs. Steady-state compute allocates nothing.
+struct WorkerBufs {
+    scratch: PredictScratch,
+    cat_a: Matrix,
+    cat_b: Matrix,
+    out_mat: Matrix,
+    out_vec: Vec<f64>,
+}
+
+fn worker_loop(queue: &Queue, state: &ServeState, opts: &ServeOptions, counters: &Counters) {
+    let mut bufs = WorkerBufs {
+        scratch: PredictScratch::new(),
+        cat_a: Matrix::zeros(0, 0),
+        cat_b: Matrix::zeros(0, 0),
+        out_mat: Matrix::zeros(0, 0),
+        out_vec: Vec::new(),
+    };
+    loop {
+        let jobs = queue.pop_batch(MAX_BATCH_JOBS, opts.max_batch_rows);
+        if jobs.is_empty() {
+            return; // queue closed and drained
+        }
+        // every batch snapshots the model once: requests already
+        // dequeued keep this model even if a reload lands mid-compute
+        let slot = state.current();
+        run_group(&jobs, &slot.predictor, &mut bufs);
+        counters.batches.fetch_add(1, Ordering::AcqRel);
+        if jobs.len() > 1 {
+            counters
+                .coalesced_jobs
+                .fetch_add(jobs.len() as u64, Ordering::AcqRel);
+        }
+    }
+}
+
+/// Evaluate one coalesced group (all same kind + column count) with a
+/// single kernel call and split the outputs back per job. Row windows
+/// of the batch output are encoded borrowed — no per-request clone.
+fn run_group(group: &[Job], predictor: &Predictor, bufs: &mut WorkerBufs) {
+    let c0 = thread_cpu_secs();
+    let cols = group[0].work.cols();
+    let result = match &group[0].work {
+        Work::Predict { xt_mu, xt_var } => {
+            let (mu, var): (&Matrix, &Matrix) = if group.len() == 1 {
+                (xt_mu, xt_var)
+            } else {
+                let rows: usize = group.iter().map(|jb| jb.work.rows()).sum();
+                bufs.cat_a.reset(rows, cols, 0.0);
+                bufs.cat_b.reset(rows, cols, 0.0);
+                let mut at = 0;
+                for jb in group {
+                    if let Work::Predict { xt_mu, xt_var } = &jb.work {
+                        let n = xt_mu.data().len();
+                        bufs.cat_a.data_mut()[at..at + n].copy_from_slice(xt_mu.data());
+                        bufs.cat_b.data_mut()[at..at + n].copy_from_slice(xt_var.data());
+                        at += n;
+                    }
+                }
+                (&bufs.cat_a, &bufs.cat_b)
+            };
+            predictor.predict_into(
+                mu,
+                var,
+                &mut bufs.scratch,
+                &mut bufs.out_mat,
+                &mut bufs.out_vec,
+            )
+        }
+        Work::Project { y } => {
+            let y: &Matrix = if group.len() == 1 {
+                y
+            } else {
+                let rows: usize = group.iter().map(|jb| jb.work.rows()).sum();
+                bufs.cat_a.reset(rows, cols, 0.0);
+                let mut at = 0;
+                for jb in group {
+                    if let Work::Project { y } = &jb.work {
+                        let n = y.data().len();
+                        bufs.cat_a.data_mut()[at..at + n].copy_from_slice(y.data());
+                        at += n;
+                    }
+                }
+                &bufs.cat_a
+            };
+            predictor.project_into(y, &mut bufs.scratch, &mut bufs.out_mat, &mut bufs.out_vec)
+        }
+    };
+    let secs = thread_cpu_secs() - c0;
+
+    match result {
+        Ok(()) => {
+            let mut r0 = 0;
+            for jb in group {
+                let t = jb.work.rows();
+                let encoded = match jb.work {
+                    Work::Predict { .. } => wire::encode_predict_response(
+                        secs,
+                        &bufs.out_mat,
+                        r0,
+                        r0 + t,
+                        &bufs.out_vec[r0..r0 + t],
+                    ),
+                    Work::Project { .. } => wire::encode_project_response(
+                        secs,
+                        &bufs.out_mat,
+                        r0,
+                        r0 + t,
+                        &bufs.out_vec[r0..r0 + t],
+                    ),
+                };
+                send_reply(jb, encoded, secs);
+                r0 += t;
+            }
+        }
+        // the whole group shares one shape, so one failure is every
+        // job's failure (shape mismatch against the model, typically)
+        Err(e) => {
+            for jb in group {
+                let frame = Frame::Response {
+                    secs,
+                    psi_fills: 0,
+                    resp: Box::new(Response::Err(format!("{e:#}"))),
+                };
+                send_reply(jb, wire::encode_frame(&frame), secs);
+            }
+        }
+    }
+}
+
+/// Ship encoded reply bytes back to the job's connection thread; a
+/// vanished client (dropped receiver) is not an error here.
+fn send_reply(job: &Job, encoded: Result<Vec<u8>>, secs: f64) {
+    match encoded {
+        Ok(bytes) => {
+            let _ = job.reply.send(bytes);
+        }
+        Err(e) => {
+            let frame = Frame::Response {
                 secs,
                 psi_fills: 0,
-                resp: Box::new(resp),
-            },
-        )?;
-        served += 1;
+                resp: Box::new(Response::Err(format!("encoding reply failed: {e:#}"))),
+            };
+            if let Ok(bytes) = wire::encode_frame(&frame) {
+                let _ = job.reply.send(bytes);
+            }
+        }
     }
 }
 
 // ---------------------------------------------------------------------------
 // client side
 // ---------------------------------------------------------------------------
+
+/// Shapes + version a predict server reported for its live model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ServedModelInfo {
+    pub m: usize,
+    pub q: usize,
+    pub d: usize,
+    /// Bumped on every hot reload; compare across calls to detect a swap.
+    pub version: u64,
+}
 
 /// Dial a predict server.
 pub fn connect(addr: &str) -> Result<TcpStream> {
@@ -114,17 +749,33 @@ fn request(stream: &mut TcpStream, req: Request) -> Result<Response> {
     }
 }
 
-/// Ask the server for its model shapes (m, q, d).
-pub fn remote_model_info(stream: &mut TcpStream) -> Result<(usize, usize, usize)> {
-    match request(stream, Request::ModelInfo)? {
-        Response::ModelInfo { m, q, d } => Ok((m as usize, q as usize, d as usize)),
+fn expect_model_info(resp: Response) -> Result<ServedModelInfo> {
+    match resp {
+        Response::ModelInfo { m, q, d, version } => Ok(ServedModelInfo {
+            m: m as usize,
+            q: q as usize,
+            d: d as usize,
+            version,
+        }),
         Response::Err(e) => bail!("predict server: {e}"),
         other => bail!("unexpected ModelInfo reply {other:?}"),
     }
 }
 
+/// Ask the server for its model shapes and version.
+pub fn remote_model_info(stream: &mut TcpStream) -> Result<ServedModelInfo> {
+    expect_model_info(request(stream, Request::ModelInfo)?)
+}
+
+/// Ask the server to hot-reload its model artifact from disk; returns
+/// the reloaded model's info (version bumped).
+pub fn remote_reload(stream: &mut TcpStream) -> Result<ServedModelInfo> {
+    expect_model_info(request(stream, Request::Reload)?)
+}
+
 /// Predict a batch remotely. Every f64 crosses the wire bit-for-bit,
-/// so the reply equals a local [`Predictor::predict`] exactly.
+/// so the reply equals a local [`Predictor::predict`] exactly —
+/// whether or not the server micro-batched it with other clients.
 pub fn remote_predict(
     stream: &mut TcpStream,
     xt_mu: &Matrix,
@@ -144,8 +795,19 @@ pub fn remote_predict(
     }
 }
 
-/// Politely hang up (the server counts the connection as finished on
-/// EOF too; this just makes the intent explicit).
+/// Project observations into the served model's latent space remotely;
+/// bit-identical to a local [`Predictor::project`].
+pub fn remote_project(stream: &mut TcpStream, y: &Matrix) -> Result<(Matrix, Vec<f64>)> {
+    let resp = request(stream, Request::ServeProject { y: y.clone() })?;
+    match resp {
+        Response::Project { xmu, conf } => Ok((xmu, conf)),
+        Response::Err(e) => bail!("predict server: {e}"),
+        other => bail!("unexpected project reply {other:?}"),
+    }
+}
+
+/// Politely hang up (the server treats EOF the same; this just makes
+/// the intent explicit).
 pub fn hangup(stream: &mut TcpStream) {
     let _ = wire::write_frame(stream, &Frame::Shutdown);
 }

@@ -1,11 +1,68 @@
-//! CSV result writers. Every experiment emits its series to `results/`
-//! so figures can be regenerated/plotted externally (EXPERIMENTS.md).
+//! CSV result writers, plus the numeric-matrix reader the serving CLI
+//! uses for `gparml predict --points file.csv`. Every experiment emits
+//! its series to `results/` so figures can be regenerated/plotted
+//! externally (EXPERIMENTS.md).
 
 use std::fs;
 use std::io::Write;
 use std::path::Path;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::linalg::Matrix;
+
+/// Read a numeric CSV into a [`Matrix`]. An optional single header row
+/// is skipped — but only if NONE of its cells parse as a float, so a
+/// data row with one typo is a loud error, never a silently dropped
+/// row. Every data row must have the same number of columns; blank
+/// lines are ignored. Floats are parsed with Rust's round-trip-exact
+/// `f64` parser, so a file written with `{:.17e}` formatting reloads
+/// bit-for-bit.
+pub fn read_matrix(path: &Path) -> Result<Matrix> {
+    let text = fs::read_to_string(path)
+        .with_context(|| format!("reading CSV {}", path.display()))?;
+    let mut rows: Vec<Vec<f64>> = Vec::new();
+    let mut cols = 0usize;
+    let mut seen_content = false;
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let first_content = !seen_content;
+        seen_content = true;
+        let cells: Vec<&str> = line.split(',').map(str::trim).collect();
+        let parsed: Result<Vec<f64>, _> = cells.iter().map(|c| c.parse::<f64>()).collect();
+        let row = match parsed {
+            Ok(row) => row,
+            // a fully non-numeric leading row is a header; a partially
+            // numeric one is a corrupt data row and must not be skipped
+            Err(_) if first_content && cells.iter().all(|c| c.parse::<f64>().is_err()) => {
+                continue
+            }
+            Err(_) => bail!(
+                "{}:{}: non-numeric cell in {:?}",
+                path.display(),
+                lineno + 1,
+                line
+            ),
+        };
+        if rows.is_empty() {
+            cols = row.len();
+        }
+        ensure!(
+            row.len() == cols,
+            "{}:{}: row has {} columns, expected {cols}",
+            path.display(),
+            lineno + 1,
+            row.len()
+        );
+        rows.push(row);
+    }
+    ensure!(cols > 0, "{}: no data rows", path.display());
+    let n = rows.len();
+    Ok(Matrix::from_vec(n, cols, rows.into_iter().flatten().collect()))
+}
 
 /// A CSV table accumulated in memory and flushed to disk.
 pub struct CsvWriter {
@@ -73,5 +130,52 @@ mod tests {
     fn panics_on_column_mismatch() {
         let mut w = CsvWriter::new(&["a"]);
         w.row(&[1.0, 2.0]);
+    }
+
+    fn tmp_csv(name: &str, content: &str) -> std::path::PathBuf {
+        let p = std::env::temp_dir().join(format!("gparml_csv_{}_{name}", std::process::id()));
+        fs::write(&p, content).unwrap();
+        p
+    }
+
+    #[test]
+    fn read_matrix_roundtrips_with_and_without_header() {
+        let p = tmp_csv("hdr.csv", "x0,x1\n1.5,-2.25e-3\n0,3\n\n4,5\n");
+        let m = read_matrix(&p).unwrap();
+        fs::remove_file(&p).ok();
+        assert_eq!((m.rows(), m.cols()), (3, 2));
+        assert_eq!(m[(0, 1)], -2.25e-3);
+        assert_eq!(m[(2, 0)], 4.0);
+
+        let p = tmp_csv("nohdr.csv", "1,2,3\n4,5,6\n");
+        let m = read_matrix(&p).unwrap();
+        fs::remove_file(&p).ok();
+        assert_eq!((m.rows(), m.cols()), (2, 3));
+        assert_eq!(m[(1, 2)], 6.0);
+    }
+
+    #[test]
+    fn read_matrix_rejects_ragged_and_garbage_rows() {
+        let p = tmp_csv("ragged.csv", "1,2\n3\n");
+        let msg = format!("{:#}", read_matrix(&p).unwrap_err());
+        fs::remove_file(&p).ok();
+        assert!(msg.contains("columns"), "{msg}");
+
+        let p = tmp_csv("garbage.csv", "1,2\nfoo,bar\n");
+        let msg = format!("{:#}", read_matrix(&p).unwrap_err());
+        fs::remove_file(&p).ok();
+        assert!(msg.contains("non-numeric"), "{msg}");
+
+        // a typo in the FIRST row of a headerless file must be a loud
+        // error, not a silently skipped "header"
+        let p = tmp_csv("typo.csv", "1.0,2.O\n3,4\n");
+        let msg = format!("{:#}", read_matrix(&p).unwrap_err());
+        fs::remove_file(&p).ok();
+        assert!(msg.contains("non-numeric"), "{msg}");
+
+        let p = tmp_csv("empty.csv", "only,a,header\n");
+        let msg = format!("{:#}", read_matrix(&p).unwrap_err());
+        fs::remove_file(&p).ok();
+        assert!(msg.contains("no data"), "{msg}");
     }
 }

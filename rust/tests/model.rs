@@ -281,12 +281,17 @@ fn serve_round_trip_with_two_concurrent_clients_is_bitwise() {
     drop(t);
     let pred = Predictor::new(&model).unwrap();
     let (mean_local, var_local) = pred.predict(&xt_mu, &xt_var).unwrap();
+    let state = serve::ServeState::new(pred);
+    let opts = serve::ServeOptions {
+        max_clients: 2,
+        ..Default::default()
+    };
 
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap().to_string();
 
     std::thread::scope(|s| {
-        let server = s.spawn(|| serve::serve(&listener, &pred, 2).unwrap());
+        let server = s.spawn(|| serve::serve(&listener, &state, &opts).unwrap());
         let clients: Vec<_> = (0..2)
             .map(|_| {
                 let addr = addr.clone();
@@ -294,8 +299,9 @@ fn serve_round_trip_with_two_concurrent_clients_is_bitwise() {
                 let xt_var = &xt_var;
                 s.spawn(move || {
                     let mut stream = serve::connect(&addr).unwrap();
-                    let (m, q, d) = serve::remote_model_info(&mut stream).unwrap();
-                    assert_eq!((m, q, d), (8, 2, 3));
+                    let info = serve::remote_model_info(&mut stream).unwrap();
+                    assert_eq!((info.m, info.q, info.d), (8, 2, 3));
+                    assert_eq!(info.version, 1, "fresh server must report version 1");
                     let out = serve::remote_predict(&mut stream, xt_mu, xt_var).unwrap();
                     serve::hangup(&mut stream);
                     out
@@ -307,7 +313,9 @@ fn serve_round_trip_with_two_concurrent_clients_is_bitwise() {
             assert_bits_eq(mean_local.data(), mean_r.data(), "remote mean");
             assert_bits_eq(&var_local, &var_r, "remote var");
         }
-        assert_eq!(server.join().unwrap(), 2);
+        let stats = server.join().unwrap();
+        assert_eq!(stats.clients, 2);
+        assert_eq!(stats.requests, 4, "2 ModelInfo + 2 ServePredict");
     });
 }
 

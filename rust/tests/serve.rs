@@ -1,0 +1,505 @@
+//! End-to-end tests of the serving subsystem (DESIGN.md §9): micro-
+//! batched replies bit-identical to local prediction under concurrent
+//! clients, misbehaving clients neither killing the server nor
+//! consuming `--clients` slots, atomic model hot-reload with version
+//! detection, LVM latent-projection serving, and the `--iters 0`
+//! resume/re-export CLI path printing a NaN-free summary.
+
+use std::io::Write as _;
+use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::process::Command;
+
+use gparml::cluster::wire::{self, Frame, Request};
+use gparml::coordinator::{partition, GlobalOpt, ModelKind, TrainConfig, Trainer};
+use gparml::gp::GlobalParams;
+use gparml::linalg::Matrix;
+use gparml::model::{serve, Predictor, ServeOptions, ServeState, TrainedModel};
+use gparml::util::rng::Rng;
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn tmp_path(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("gparml_serve_{}_{name}", std::process::id()))
+}
+
+fn regression_data(n: usize, seed: u64) -> (Matrix, Matrix, Matrix) {
+    let mut rng = Rng::new(seed);
+    let xmu = Matrix::from_fn(n, 2, |_, _| rng.range(-2.0, 2.0));
+    let xvar = Matrix::zeros(n, 2);
+    let y = Matrix::from_fn(n, 3, |i, j| {
+        let x = xmu[(i, 0)];
+        let f = match j {
+            0 => x.sin(),
+            1 => (1.3 * x).cos(),
+            _ => 0.5 * x,
+        };
+        f + 0.05 * rng.normal()
+    });
+    (xmu, xvar, y)
+}
+
+/// Train a tiny regression cluster and export its model.
+fn trained_model(seed: u64, iters: usize) -> TrainedModel {
+    let (xmu, xvar, y) = regression_data(60, seed);
+    let shards = partition(&xmu, &xvar, &y, 0.0, 2);
+    let mut rng = Rng::new(seed + 1);
+    let params = GlobalParams {
+        z: Matrix::from_fn(8, 2, |_, _| rng.range(-2.0, 2.0)),
+        log_ls: vec![0.0, 0.0],
+        log_sf2: 0.0,
+        log_beta: 1.0,
+    };
+    let cfg = TrainConfig {
+        artifact: "test".into(),
+        artifacts_dir: artifacts_dir(),
+        workers: 2,
+        model: ModelKind::Regression,
+        global_opt: GlobalOpt::Scg,
+        seed: 1,
+        ..Default::default()
+    };
+    let mut t = Trainer::new(cfg, params, shards).unwrap();
+    t.train(iters).unwrap();
+    t.export_model().unwrap()
+}
+
+fn assert_bits_eq(a: &[f64], b: &[f64], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: diverged at {i}: {x} vs {y}");
+    }
+}
+
+/// The tentpole acceptance: ≥4 concurrent clients hammer one server
+/// whose single worker coalesces queued requests across clients;
+/// every reply is bit-identical to a local `Predictor::predict` of
+/// the same (per-client, differently-sized) batch — micro-batching
+/// changes throughput, never bytes. A "heavy" client sends a large
+/// first batch and only then releases the small clients, so while the
+/// single worker chews on it (or before its first queue pop) the small
+/// clients' requests pile up and MUST coalesce — the split-reply path
+/// is exercised deterministically, not by scheduler luck.
+#[test]
+fn micro_batched_replies_are_bitwise_under_six_concurrent_clients() {
+    let model = trained_model(101, 3);
+    let pred = Predictor::new(&model).unwrap();
+
+    const SMALL_CLIENTS: usize = 5; // + 1 heavy = 6 concurrent
+    const REPS: usize = 12;
+    let mut rng = Rng::new(199);
+    let heavy_mu = Matrix::from_fn(4000, 2, |_, _| rng.range(-2.0, 2.0));
+    let heavy_var = Matrix::from_fn(4000, 2, |_, _| 0.05 * rng.uniform());
+    let heavy_local = pred.predict(&heavy_mu, &heavy_var).unwrap();
+    // per-client batches of different sizes: the reply-splitting path
+    // has to get every row window right
+    let batches: Vec<(Matrix, Matrix)> = (0..SMALL_CLIENTS)
+        .map(|c| {
+            let mut rng = Rng::new(200 + c as u64);
+            let t = 40 + 37 * c;
+            let xt_mu = Matrix::from_fn(t, 2, |_, _| rng.range(-2.0, 2.0));
+            let xt_var = Matrix::from_fn(t, 2, |_, _| 0.05 * rng.uniform());
+            (xt_mu, xt_var)
+        })
+        .collect();
+    let locals: Vec<(Matrix, Vec<f64>)> = batches
+        .iter()
+        .map(|(mu, var)| pred.predict(mu, var).unwrap())
+        .collect();
+
+    let state = ServeState::new(pred);
+    let opts = ServeOptions {
+        max_clients: (SMALL_CLIENTS + 1) as u64,
+        workers: 1, // one worker + 6 synchronous clients => queues build
+        max_batch_rows: 8192,
+    };
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+
+    let stats = std::thread::scope(|s| {
+        let server = s.spawn(|| serve::serve(&listener, &state, &opts).unwrap());
+        let (sent_tx, sent_rx) = std::sync::mpsc::channel::<()>();
+
+        let heavy = s.spawn(|| {
+            let mut stream = serve::connect(&addr).unwrap();
+            // put the big request on the wire, THEN release the small
+            // clients: their requests land while the worker is busy
+            wire::write_frame(
+                &mut stream,
+                &Frame::Request(Box::new(Request::ServePredict {
+                    xt_mu: heavy_mu.clone(),
+                    xt_var: heavy_var.clone(),
+                })),
+            )
+            .unwrap();
+            sent_tx.send(()).unwrap();
+            let (mean_r, var_r) = match wire::read_frame(&mut stream).unwrap() {
+                Some((Frame::Response { resp, .. }, _)) => match *resp {
+                    wire::Response::Predict { mean, var } => (mean, var),
+                    other => panic!("unexpected heavy reply {other:?}"),
+                },
+                other => panic!("unexpected heavy frame {other:?}"),
+            };
+            assert_bits_eq(heavy_local.0.data(), mean_r.data(), "heavy mean");
+            assert_bits_eq(&heavy_local.1, &var_r, "heavy var");
+            serve::hangup(&mut stream);
+        });
+
+        sent_rx.recv().unwrap();
+        let clients: Vec<_> = (0..SMALL_CLIENTS)
+            .map(|c| {
+                let addr = &addr;
+                let (xt_mu, xt_var) = &batches[c];
+                let (mean_l, var_l) = &locals[c];
+                s.spawn(move || {
+                    let mut stream = serve::connect(addr).unwrap();
+                    for rep in 0..REPS {
+                        let (mean_r, var_r) =
+                            serve::remote_predict(&mut stream, xt_mu, xt_var).unwrap();
+                        assert_bits_eq(
+                            mean_l.data(),
+                            mean_r.data(),
+                            &format!("client {c} rep {rep} mean"),
+                        );
+                        assert_bits_eq(var_l, &var_r, &format!("client {c} rep {rep} var"));
+                    }
+                    serve::hangup(&mut stream);
+                })
+            })
+            .collect();
+        for c in clients {
+            c.join().unwrap();
+        }
+        heavy.join().unwrap();
+        server.join().unwrap()
+    });
+
+    assert_eq!(stats.clients, (SMALL_CLIENTS + 1) as u64);
+    assert_eq!(stats.requests, (SMALL_CLIENTS * REPS + 1) as u64);
+    // the small clients' requests queued behind the heavy one: strictly
+    // fewer kernel calls than requests, and some jobs shared a call
+    assert!(
+        stats.batches < stats.requests,
+        "no micro-batching happened: {} kernel calls for {} requests",
+        stats.batches,
+        stats.requests
+    );
+    assert!(stats.coalesced_jobs > 0, "no jobs were ever coalesced");
+}
+
+/// Churn: clients that hang up instantly, speak garbage, or die
+/// mid-frame must neither kill the server nor count toward
+/// `--clients`; a client that dies after a valid frame counts but
+/// still cannot stall anyone else.
+#[test]
+fn misbehaving_clients_neither_kill_the_server_nor_consume_slots() {
+    let model = trained_model(111, 2);
+    let pred = Predictor::new(&model).unwrap();
+    let mut rng = Rng::new(7);
+    let xt_mu = Matrix::from_fn(9, 2, |_, _| rng.range(-2.0, 2.0));
+    let xt_var = Matrix::zeros(9, 2);
+    let (mean_l, var_l) = pred.predict(&xt_mu, &xt_var).unwrap();
+
+    let state = ServeState::new(pred);
+    let opts = ServeOptions {
+        max_clients: 2, // the valid-frame client below + the good client
+        workers: 1,
+        max_batch_rows: 4096,
+    };
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+
+    let stats = std::thread::scope(|s| {
+        let server = s.spawn(|| serve::serve(&listener, &state, &opts).unwrap());
+
+        // (a) connect + instant hangup: no frame, no slot
+        drop(TcpStream::connect(&addr).unwrap());
+        // (b) garbage bytes (wrong magic): decode error, no slot
+        let mut garbage = TcpStream::connect(&addr).unwrap();
+        garbage.write_all(b"GET / HTTP/1.1\r\n\r\n").unwrap();
+        drop(garbage);
+        // (c) death mid-frame: half a valid request, then gone — a
+        // truncated frame, no slot
+        let frame = wire::encode_frame(&Frame::Request(Box::new(Request::ServePredict {
+            xt_mu: xt_mu.clone(),
+            xt_var: xt_var.clone(),
+        })))
+        .unwrap();
+        let mut half = TcpStream::connect(&addr).unwrap();
+        half.write_all(&frame[..frame.len() / 2]).unwrap();
+        drop(half);
+        // (d) death mid-request AFTER a complete valid frame: counts
+        // as a client (it completed one), reply hits a dead socket
+        let mut dier = TcpStream::connect(&addr).unwrap();
+        dier.write_all(&frame).unwrap();
+        drop(dier);
+
+        // the good client is served correctly through all of the above
+        let mut stream = serve::connect(&addr).unwrap();
+        let info = serve::remote_model_info(&mut stream).unwrap();
+        assert_eq!((info.m, info.q, info.d), (8, 2, 3));
+        // (e) a decodable but malformed request — xt_mu/xt_var shapes
+        // disagree — draws an error reply, not a dead worker (it must
+        // never reach the batch concatenation)
+        wire::write_frame(
+            &mut stream,
+            &Frame::Request(Box::new(Request::ServePredict {
+                xt_mu: xt_mu.clone(),
+                xt_var: Matrix::zeros(3, 2),
+            })),
+        )
+        .unwrap();
+        match wire::read_frame(&mut stream).unwrap() {
+            Some((Frame::Response { resp, .. }, _)) => match *resp {
+                wire::Response::Err(e) => assert!(e.contains("disagree"), "{e}"),
+                other => panic!("mismatched shapes answered with {other:?}"),
+            },
+            other => panic!("unexpected frame {other:?}"),
+        }
+        let (mean_r, var_r) = serve::remote_predict(&mut stream, &xt_mu, &xt_var).unwrap();
+        assert_bits_eq(mean_l.data(), mean_r.data(), "post-churn mean");
+        assert_bits_eq(&var_l, &var_r, "post-churn var");
+        serve::hangup(&mut stream);
+
+        server.join().unwrap()
+    });
+
+    // exactly the frame-completing connections counted: the
+    // mid-request casualty (d) and the good client — never (a)-(c)
+    assert_eq!(
+        stats.clients, 2,
+        "instant-hangup/garbage/truncated clients must not consume slots"
+    );
+}
+
+/// Hot reload: the artifact file is replaced on disk, a `Reload`
+/// frame swaps it in atomically, the model version bumps, and
+/// predictions switch to the new model bit-exactly. A failed reload
+/// (corrupt file) keeps the old model serving.
+#[test]
+fn hot_reload_swaps_model_bumps_version_and_survives_corrupt_files() {
+    let model_a = trained_model(121, 2);
+    let model_b = trained_model(131, 4);
+    let mut rng = Rng::new(17);
+    let xt_mu = Matrix::from_fn(7, 2, |_, _| rng.range(-2.0, 2.0));
+    let xt_var = Matrix::zeros(7, 2);
+    let (mean_a, var_a) = Predictor::new(&model_a).unwrap().predict(&xt_mu, &xt_var).unwrap();
+    let (mean_b, var_b) = Predictor::new(&model_b).unwrap().predict(&xt_mu, &xt_var).unwrap();
+    assert!(
+        mean_a.max_abs_diff(&mean_b) > 0.0,
+        "the two models agree — the reload test lost its teeth"
+    );
+
+    let path = tmp_path("reload.gpm");
+    model_a.save(&path).unwrap();
+    let state = ServeState::with_path(Predictor::new(&model_a).unwrap(), path.clone());
+    let opts = ServeOptions {
+        max_clients: 1,
+        ..Default::default()
+    };
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+
+    let stats = std::thread::scope(|s| {
+        let server = s.spawn(|| serve::serve(&listener, &state, &opts).unwrap());
+        let mut stream = serve::connect(&addr).unwrap();
+
+        let info = serve::remote_model_info(&mut stream).unwrap();
+        assert_eq!(info.version, 1);
+        let (mean_r, var_r) = serve::remote_predict(&mut stream, &xt_mu, &xt_var).unwrap();
+        assert_bits_eq(mean_a.data(), mean_r.data(), "pre-reload mean");
+        assert_bits_eq(&var_a, &var_r, "pre-reload var");
+
+        // swap the artifact on disk, then ask the server to reload
+        model_b.save(&path).unwrap();
+        let info = serve::remote_reload(&mut stream).unwrap();
+        assert_eq!(info.version, 2, "reload must bump the model version");
+        let (mean_r, var_r) = serve::remote_predict(&mut stream, &xt_mu, &xt_var).unwrap();
+        assert_bits_eq(mean_b.data(), mean_r.data(), "post-reload mean");
+        assert_bits_eq(&var_b, &var_r, "post-reload var");
+
+        // a corrupt artifact must fail the reload and keep serving B
+        std::fs::write(&path, b"not a model").unwrap();
+        let err = format!("{:#}", serve::remote_reload(&mut stream).unwrap_err());
+        assert!(err.contains("reload failed"), "{err}");
+        let info = serve::remote_model_info(&mut stream).unwrap();
+        assert_eq!(info.version, 2, "failed reload must not swap or bump");
+        let (mean_r, _) = serve::remote_predict(&mut stream, &xt_mu, &xt_var).unwrap();
+        assert_bits_eq(mean_b.data(), mean_r.data(), "post-failed-reload mean");
+
+        serve::hangup(&mut stream);
+        server.join().unwrap()
+    });
+    std::fs::remove_file(&path).ok();
+    assert_eq!(stats.clients, 1);
+}
+
+/// LVM latent-projection serving: concurrent `ServeProject` and
+/// `ServePredict` clients share the queue (kind-grouped batching) and
+/// every projection is bit-identical to the local `Predictor::project`.
+#[test]
+fn serve_project_is_bitwise_alongside_predict_clients() {
+    let model = trained_model(141, 3);
+    let pred = Predictor::new(&model).unwrap();
+    let mut rng = Rng::new(27);
+    let y = Matrix::from_fn(13, 3, |_, _| rng.normal());
+    let xt_mu = Matrix::from_fn(6, 2, |_, _| rng.range(-2.0, 2.0));
+    let xt_var = Matrix::zeros(6, 2);
+    let (xmu_l, conf_l) = pred.project(&y).unwrap();
+    let (mean_l, var_l) = pred.predict(&xt_mu, &xt_var).unwrap();
+    assert_eq!((xmu_l.rows(), xmu_l.cols()), (13, 2));
+
+    let state = ServeState::new(pred);
+    let opts = ServeOptions {
+        max_clients: 4,
+        workers: 1,
+        max_batch_rows: 4096,
+    };
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+
+    let stats = std::thread::scope(|s| {
+        let server = s.spawn(|| serve::serve(&listener, &state, &opts).unwrap());
+        let mut handles = Vec::new();
+        for _ in 0..2 {
+            let (addr, y, xmu_l, conf_l) = (&addr, &y, &xmu_l, &conf_l);
+            handles.push(s.spawn(move || {
+                let mut stream = serve::connect(addr).unwrap();
+                for _ in 0..8 {
+                    let (xmu_r, conf_r) = serve::remote_project(&mut stream, y).unwrap();
+                    assert_bits_eq(xmu_l.data(), xmu_r.data(), "remote projection");
+                    assert_bits_eq(conf_l, &conf_r, "remote projection conf");
+                }
+                serve::hangup(&mut stream);
+            }));
+        }
+        for _ in 0..2 {
+            let (addr, xt_mu, xt_var, mean_l, var_l) = (&addr, &xt_mu, &xt_var, &mean_l, &var_l);
+            handles.push(s.spawn(move || {
+                let mut stream = serve::connect(addr).unwrap();
+                for _ in 0..8 {
+                    let (mean_r, var_r) =
+                        serve::remote_predict(&mut stream, xt_mu, xt_var).unwrap();
+                    assert_bits_eq(mean_l.data(), mean_r.data(), "interleaved predict mean");
+                    assert_bits_eq(var_l, &var_r, "interleaved predict var");
+                }
+                serve::hangup(&mut stream);
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        server.join().unwrap()
+    });
+    assert_eq!(stats.clients, 4);
+    assert_eq!(stats.requests, 32);
+}
+
+/// Satellite: the `--iters 0` `--resume` + `--export` re-export CLI
+/// path works end-to-end, prints a NaN-free summary, and re-exports a
+/// model that predicts byte-identically to the original export.
+#[test]
+fn iters_zero_resume_reexport_is_nan_free_and_byte_identical() {
+    let bin = env!("CARGO_BIN_EXE_gparml");
+    let art = artifacts_dir();
+    let ck = tmp_path("reexport.gpc");
+    let m1 = tmp_path("reexport_m1.gpm");
+    let m2 = tmp_path("reexport_m2.gpm");
+    let p1 = tmp_path("reexport_p1.csv");
+    let p2 = tmp_path("reexport_p2.csv");
+
+    let run = |extra: &[&str]| {
+        let out = Command::new(bin)
+            .args([
+                "train",
+                "--data",
+                "synthetic",
+                "--model",
+                "reg",
+                "--n",
+                "240",
+                "--workers",
+                "2",
+                "--seed",
+                "5",
+                "--artifacts",
+                art.to_str().unwrap(),
+            ])
+            .args(extra)
+            .output()
+            .expect("spawning gparml train");
+        assert!(
+            out.status.success(),
+            "train failed:\n{}\n{}",
+            String::from_utf8_lossy(&out.stdout),
+            String::from_utf8_lossy(&out.stderr)
+        );
+        String::from_utf8_lossy(&out.stdout).to_string()
+    };
+
+    run(&[
+        "--iters",
+        "2",
+        "--checkpoint",
+        ck.to_str().unwrap(),
+        "--export",
+        m1.to_str().unwrap(),
+    ]);
+    // the satellite case: resume, run zero iterations, re-export
+    let stdout = run(&[
+        "--iters",
+        "0",
+        "--resume",
+        ck.to_str().unwrap(),
+        "--export",
+        m2.to_str().unwrap(),
+    ]);
+    assert!(
+        !stdout.contains("NaN"),
+        "0-iteration summary printed NaN:\n{stdout}"
+    );
+    assert!(
+        stdout.contains("no iterations run"),
+        "missing the guarded summary line:\n{stdout}"
+    );
+
+    // both exports predict byte-identically through the CLI
+    let predict = |model: &PathBuf, out_csv: &PathBuf| {
+        let out = Command::new(bin)
+            .args([
+                "predict",
+                "--model",
+                model.to_str().unwrap(),
+                "--n",
+                "32",
+                "--seed",
+                "9",
+                "--out",
+                out_csv.to_str().unwrap(),
+            ])
+            .output()
+            .expect("spawning gparml predict");
+        assert!(
+            out.status.success(),
+            "predict failed:\n{}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+    };
+    predict(&m1, &p1);
+    predict(&m2, &p2);
+    let b1 = std::fs::read(&p1).unwrap();
+    let b2 = std::fs::read(&p2).unwrap();
+    assert_eq!(b1, b2, "re-exported model predicts differently");
+
+    // stronger: with resume provenance carried through (iterations,
+    // final bound), the re-exported artifact is byte-identical
+    let a1 = std::fs::read(&m1).unwrap();
+    let a2 = std::fs::read(&m2).unwrap();
+    assert_eq!(a1, a2, "re-exported artifact bytes differ from the original export");
+
+    for f in [&ck, &m1, &m2, &p1, &p2] {
+        std::fs::remove_file(f).ok();
+    }
+}
