@@ -42,8 +42,13 @@ fn main() -> Result<()> {
     // binary into a cluster node (used by `--cluster tcp` below)
     if let Some(addr) = args.get("worker-connect") {
         let artifacts = gparml::runtime::default_artifacts_dir();
-        gparml::cluster::node::run_worker_connect(addr, &artifacts, None)?;
+        gparml::cluster::node::run_worker_connect(addr, &artifacts, None, None)?;
         return Ok(());
+    }
+
+    // `--trace-out FILE`: record structured training spans (DESIGN.md §10)
+    if let Some(path) = args.get("trace-out") {
+        gparml::obs::trace::init(std::path::Path::new(path))?;
     }
 
     let n = args.get_usize("n", 20_000)?;
@@ -134,11 +139,14 @@ fn main() -> Result<()> {
         for mut p in procs {
             let _ = p.wait();
         }
+        gparml::obs::trace::flush();
         return result;
     }
 
     let t = Trainer::new(cfg, params, shards)?;
-    run(t, n, iters, lvm, seed)
+    let result = run(t, n, iters, lvm, seed);
+    gparml::obs::trace::flush();
+    result
 }
 
 fn run<B: Backend>(mut t: Trainer<B>, n: usize, iters: usize, lvm: bool, seed: u64) -> Result<()> {

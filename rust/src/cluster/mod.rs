@@ -74,6 +74,14 @@ pub trait Backend {
     /// Probe liveness (cheap); returns the current alive mask.
     fn heartbeat(&mut self) -> Vec<bool>;
 
+    /// Seconds since each worker was last heard from, `None` where the
+    /// backend has no such notion (in-process workers) or the slot is
+    /// dead. Feeds the trainer's per-worker heartbeat-age gauges
+    /// (DESIGN.md §10).
+    fn heartbeat_ages(&self) -> Vec<Option<f64>> {
+        vec![None; self.workers()]
+    }
+
     /// Politely stop the cluster (no-op for threads; sends `Shutdown`
     /// frames over TCP).
     fn shutdown(&mut self);

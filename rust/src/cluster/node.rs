@@ -19,6 +19,7 @@ use anyhow::{bail, ensure, Context, Result};
 
 use crate::gp::MathMode;
 use crate::linalg::Matrix;
+use crate::obs;
 use crate::optim::Adam;
 use crate::runtime::{build_executor_mode, ShardData, ShardExecutor};
 use crate::util::timer::thread_cpu_secs;
@@ -210,6 +211,10 @@ impl WorkerNode {
                 "Reload is a `gparml serve` control frame; cluster workers hold no \
                  model artifact to reload"
             ),
+            Request::ServeStats => bail!(
+                "ServeStats is answered inline by the worker daemon / predict server, \
+                 not by the node state machine"
+            ),
         })
     }
 }
@@ -226,10 +231,18 @@ impl WorkerNode {
 /// other mode is answered with an error and the daemon exits, so a
 /// mixed-mode cluster fails loudly at bring-up on the leader
 /// (`None` accepts whatever mode the leader negotiates).
+///
+/// `heartbeat_ms` (`gparml worker --heartbeat-ms`) is the worker-side
+/// leader-liveness expectation: when set, an idle stretch of that many
+/// milliseconds without any frame from the leader (heartbeats are
+/// leader-initiated `Ping`s) bumps the `heartbeat_overdue` counter in
+/// the worker's metrics registry and emits a trace event, instead of
+/// blocking silently. `None` (the default) keeps the blocking read.
 pub fn serve_connection(
     mut stream: TcpStream,
     artifacts_dir: &Path,
     pinned_mode: Option<MathMode>,
+    heartbeat_ms: Option<u64>,
 ) -> Result<u64> {
     stream.set_nodelay(true).ok();
 
@@ -257,6 +270,7 @@ pub fn serve_connection(
             let _ = wire::write_frame(
                 &mut stream,
                 &Frame::Response {
+                    trace_id: 0,
                     secs: 0.0,
                     psi_fills: 0,
                     resp: Box::new(Response::Err(format!("{e:#}"))),
@@ -268,6 +282,7 @@ pub fn serve_connection(
     wire::write_frame(
         &mut stream,
         &Frame::Response {
+            trace_id: 0,
             secs: 0.0,
             psi_fills: 0,
             resp: Box::new(Response::Ok),
@@ -278,24 +293,74 @@ pub fn serve_connection(
         node.shard.len()
     );
 
+    // per-process live metrics, answered inline over `ServeStats`
+    let reg = obs::Registry::new();
+    let requests_ctr = reg.counter("requests");
+    let pings_ctr = reg.counter("pings");
+    let psi_fills_ctr = reg.counter("psi_fills");
+    let cache_hits_ctr = reg.counter("psi_cache_hits");
+    let overdue_ctr = reg.counter("heartbeat_overdue");
+    let request_hist = reg.histogram("request_cpu_ns");
+    if let Some(ms) = heartbeat_ms {
+        stream
+            .set_read_timeout(Some(std::time::Duration::from_millis(ms.max(1))))
+            .context("setting worker heartbeat window")?;
+    }
+
     let mut served = 0u64;
     loop {
-        match wire::read_frame(&mut stream)? {
+        match read_frame_idle(&mut stream, &overdue_ctr, worker_id)? {
             None => return Ok(served), // leader gone: exit quietly
             Some((Frame::Ping, _)) => {
+                pings_ctr.inc();
                 wire::write_frame(&mut stream, &Frame::Pong)?;
             }
             Some((Frame::Shutdown, _)) => {
                 eprintln!("[gparml-worker {worker_id}] shutdown after {served} requests");
                 return Ok(served);
             }
-            Some((Frame::Request(req), _)) => {
+            Some((Frame::Request { trace_id, req }, _)) => {
+                requests_ctr.inc();
+                if matches!(*req, Request::ServeStats) {
+                    // answered inline, like ModelInfo on the serve path
+                    wire::write_frame(
+                        &mut stream,
+                        &Frame::Response {
+                            trace_id,
+                            secs: 0.0,
+                            psi_fills: 0,
+                            resp: Box::new(Response::StatsJson(
+                                reg.snapshot_json().to_string(),
+                            )),
+                        },
+                    )?;
+                    served += 1;
+                    continue;
+                }
                 let c0 = thread_cpu_secs();
-                let (resp, psi_fills) = node.handle_counted(&req);
+                let (resp, psi_fills) = {
+                    let mut span = obs::trace::span("worker_request", trace_id);
+                    let out = node.handle_counted(&req);
+                    span.set_count(out.1 as u64);
+                    out
+                };
                 let secs = thread_cpu_secs() - c0;
+                request_hist.record((secs * 1e9) as u64);
+                // the psi fill / cache-hit signal, tagged with the
+                // evaluation's trace id (map rounds only)
+                if matches!(*req, Request::Stats { .. } | Request::Grads { .. }) {
+                    if psi_fills > 0 {
+                        psi_fills_ctr.add(psi_fills as u64);
+                        obs::trace::event("psi_fill", trace_id, psi_fills as u64);
+                    } else {
+                        cache_hits_ctr.inc();
+                        obs::trace::event("psi_cache_hit", trace_id, 0);
+                    }
+                }
                 wire::write_frame(
                     &mut stream,
                     &Frame::Response {
+                        trace_id,
                         secs,
                         psi_fills,
                         resp: Box::new(resp),
@@ -304,6 +369,39 @@ pub fn serve_connection(
                 served += 1;
             }
             Some((f, _)) => bail!("unexpected frame {f:?}"),
+        }
+    }
+}
+
+/// Read one frame, tolerating read-timeout "idle ticks": when the
+/// worker runs with `--heartbeat-ms` the stream has a read timeout,
+/// and an idle window without any leader frame records an overdue
+/// heartbeat instead of erroring. EOF at a frame boundary is a clean
+/// `None`, exactly like [`wire::read_frame`].
+fn read_frame_idle(
+    stream: &mut TcpStream,
+    overdue: &obs::Counter,
+    worker_id: u32,
+) -> Result<Option<(Frame, u64)>> {
+    use std::io::Read as _;
+    let mut first = [0u8; 1];
+    loop {
+        match stream.read(&mut first) {
+            Ok(0) => return Ok(None),
+            Ok(_) => {
+                let mut chained = (&first[..]).chain(&mut *stream);
+                return wire::read_frame(&mut chained);
+            }
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                overdue.inc();
+                obs::trace::event("worker_heartbeat_overdue", 0, worker_id as u64);
+            }
+            Err(e) => return Err(e).context("reading frame header"),
         }
     }
 }
@@ -327,10 +425,11 @@ pub fn run_worker_connect(
     addr: &str,
     artifacts_dir: &Path,
     pinned_mode: Option<MathMode>,
+    heartbeat_ms: Option<u64>,
 ) -> Result<u64> {
     let stream =
         TcpStream::connect(addr).with_context(|| format!("connecting to leader at {addr}"))?;
-    serve_connection(stream, artifacts_dir, pinned_mode)
+    serve_connection(stream, artifacts_dir, pinned_mode, heartbeat_ms)
 }
 
 /// Bind `addr`, print the bound address, and serve the first leader
@@ -339,11 +438,12 @@ pub fn run_worker_listen(
     addr: &str,
     artifacts_dir: &Path,
     pinned_mode: Option<MathMode>,
+    heartbeat_ms: Option<u64>,
 ) -> Result<u64> {
     let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
     let local = listener.local_addr()?;
     println!("gparml worker listening on {local}");
     let (stream, peer) = listener.accept().context("accepting leader")?;
     eprintln!("[gparml-worker] leader connected from {peer}");
-    serve_connection(stream, artifacts_dir, pinned_mode)
+    serve_connection(stream, artifacts_dir, pinned_mode, heartbeat_ms)
 }

@@ -10,15 +10,19 @@
 
 use std::io;
 use std::net::{TcpListener, TcpStream};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
 use super::wire::{self, Frame, Init, Request};
 use super::{Backend, WorkerReply};
+use crate::obs;
 
 struct Conn {
     stream: TcpStream,
+    /// Last time any frame was successfully received from this worker
+    /// (feeds the per-worker heartbeat-age gauges, DESIGN.md §10).
+    last_seen: Instant,
 }
 
 /// Multi-process Map-Reduce backend over localhost (or any) TCP.
@@ -111,7 +115,10 @@ impl TcpBackend {
         stream
             .set_write_timeout(Some(self.timeout))
             .context("setting write timeout")?;
-        let mut conn = Conn { stream };
+        let mut conn = Conn {
+            stream,
+            last_seen: Instant::now(),
+        };
         let tx1 = wire::write_frame(
             &mut conn.stream,
             &Frame::Hello {
@@ -160,6 +167,20 @@ impl TcpBackend {
         self.conns.iter().map(|c| c.is_some()).collect()
     }
 
+    /// Seconds since the last frame was received from each worker
+    /// (`None` for dead slots). Feeds the trainer's per-worker
+    /// heartbeat-age gauges.
+    pub fn last_seen_ages(&self) -> Vec<Option<f64>> {
+        let now = Instant::now();
+        self.conns
+            .iter()
+            .map(|c| {
+                c.as_ref()
+                    .map(|conn| now.duration_since(conn.last_seen).as_secs_f64())
+            })
+            .collect()
+    }
+
     fn kill(&mut self, k: usize, why: &io::Error) {
         if self.conns[k].take().is_some() {
             eprintln!("[gparml-leader] worker {k} marked dead: {why}");
@@ -204,6 +225,7 @@ impl TcpBackend {
         let conn = self.conns[k].as_mut()?;
         match wire::read_frame(&mut conn.stream) {
             Ok(Some((frame, n))) => {
+                conn.last_seen = Instant::now();
                 self.total_rx += n;
                 Some((frame, n))
             }
@@ -221,14 +243,21 @@ impl TcpBackend {
     }
 
     /// Send a request and collect the typed response from one worker.
+    /// The frame is stamped with the ambient trace id so worker-side
+    /// spans line up with the leader's evaluation spans.
     fn round_one(&mut self, k: usize, req: &Request) -> Option<WorkerReply> {
-        let tx = self.send(k, &Frame::Request(Box::new(req.clone())))?;
+        let frame = Frame::Request {
+            trace_id: obs::trace::current(),
+            req: Box::new(req.clone()),
+        };
+        let tx = self.send(k, &frame)?;
         match self.recv(k)? {
             (
                 Frame::Response {
                     secs,
                     psi_fills,
                     resp,
+                    ..
                 },
                 rx,
             ) => Some(WorkerReply {
@@ -258,7 +287,10 @@ impl Backend for TcpBackend {
         // phase 1: broadcast to all included live workers so the map
         // round actually runs in parallel across the processes; the
         // frame is serialised ONCE and the bytes shared across sends
-        let frame = Frame::Request(Box::new(req.clone()));
+        let frame = Frame::Request {
+            trace_id: obs::trace::current(),
+            req: Box::new(req.clone()),
+        };
         let bytes = match wire::encode_frame(&frame) {
             Ok(b) => b,
             Err(_) => return vec![None; self.conns.len()],
@@ -282,6 +314,7 @@ impl Backend for TcpBackend {
                         secs,
                         psi_fills,
                         resp,
+                        ..
                     },
                     rx,
                 )) => Some(WorkerReply {
@@ -306,6 +339,10 @@ impl Backend for TcpBackend {
 
     fn map_one(&mut self, k: usize, req: &Request) -> Option<WorkerReply> {
         self.round_one(k, req)
+    }
+
+    fn heartbeat_ages(&self) -> Vec<Option<f64>> {
+        self.last_seen_ages()
     }
 
     fn heartbeat(&mut self) -> Vec<bool> {

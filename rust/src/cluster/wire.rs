@@ -72,7 +72,16 @@ pub const MAGIC: [u8; 4] = *b"GPMR";
 /// to atomically reload its model artifact from disk). Cluster
 /// workers answer `ModelInfo` with version 0 and reject the serve-only
 /// frames with an error.
-pub const VERSION: u16 = 5;
+/// v6 — wire-propagated trace context (DESIGN.md §10): every
+/// `Request` frame carries a u64 **trace/request id** (the leader
+/// stamps map rounds with the evaluation version, serve clients stamp
+/// each request with a fresh id) and every `Response` frame echoes it,
+/// so one id follows a request across processes and into each peer's
+/// span log. New control frames: `Request::ServeStats` (answered
+/// inline, like `ModelInfo`) and `Response::StatsJson` (a JSON
+/// snapshot of the peer's live metrics registry — the `gparml stats
+/// --connect` payload).
+pub const VERSION: u16 = 6;
 /// Upper bound on a single frame payload (defends the decoder against
 /// garbage length prefixes).
 pub const MAX_PAYLOAD: usize = 1 << 30;
@@ -134,6 +143,10 @@ pub enum Request {
     /// (new version) or [`Response::Err`]. In-flight requests finish on
     /// the old model. Serve-only.
     Reload,
+    /// Ask the peer for a snapshot of its live metrics registry (v6),
+    /// answered inline with [`Response::StatsJson`] — counters, gauges
+    /// and latency-histogram percentiles (DESIGN.md §10).
+    ServeStats,
 }
 
 /// A worker's reply to a [`Request`].
@@ -156,6 +169,11 @@ pub enum Response {
     Ok,
     /// The worker failed to execute the request (shape mismatch, ...).
     Err(String),
+    /// Reply to [`Request::ServeStats`] (v6): the peer's metrics
+    /// registry rendered as a JSON document (`obs::Registry::
+    /// snapshot_json` — deterministic key order, so equal registries
+    /// produce equal payloads).
+    StatsJson(String),
 }
 
 /// Everything a worker needs to build its node state: executor shapes,
@@ -185,12 +203,18 @@ pub enum Frame {
     /// Worker -> leader: handshake acknowledged.
     HelloAck,
     Init(Box<Init>),
-    Request(Box<Request>),
-    /// Worker -> leader: result plus in-map thread-CPU seconds and the
-    /// number of full psi recomputations the request triggered (0 on a
-    /// cache-hit gradient round — the telemetry signal that scratch
-    /// reuse actually happened on the worker).
+    /// Leader/client -> worker/server: a request stamped with the u64
+    /// trace/request id the peer must echo (v6). The leader stamps map
+    /// rounds with the evaluation version; serve clients stamp each
+    /// request with a fresh id (`obs::next_trace_id`).
+    Request { trace_id: u64, req: Box<Request> },
+    /// Worker -> leader: result plus the echoed trace id (v6), in-map
+    /// thread-CPU seconds and the number of full psi recomputations
+    /// the request triggered (0 on a cache-hit gradient round — the
+    /// telemetry signal that scratch reuse actually happened on the
+    /// worker).
     Response {
+        trace_id: u64,
         secs: f64,
         psi_fills: u32,
         resp: Box<Response>,
@@ -534,6 +558,7 @@ impl Request {
                 e.mat(y);
             }
             Request::Reload => e.u8(10),
+            Request::ServeStats => e.u8(11),
         }
     }
 
@@ -566,6 +591,7 @@ impl Request {
             8 => Request::ModelInfo,
             9 => Request::ServeProject { y: d.mat()? },
             10 => Request::Reload,
+            11 => Request::ServeStats,
             t => bail!("unknown request tag {t}"),
         })
     }
@@ -613,6 +639,10 @@ impl Response {
                 e.mat(xmu);
                 e.vec_f64(conf);
             }
+            Response::StatsJson(json) => {
+                e.u8(10);
+                e.str(json);
+            }
         }
     }
 
@@ -641,6 +671,7 @@ impl Response {
                 xmu: d.mat()?,
                 conf: d.vec_f64()?,
             },
+            10 => Response::StatsJson(d.str()?),
             t => bail!("unknown response tag {t}"),
         })
     }
@@ -652,7 +683,7 @@ impl Frame {
             Frame::Hello { .. } => 1,
             Frame::HelloAck => 2,
             Frame::Init(_) => 3,
-            Frame::Request(_) => 4,
+            Frame::Request { .. } => 4,
             Frame::Response { .. } => 5,
             Frame::Ping => 6,
             Frame::Pong => 7,
@@ -673,12 +704,17 @@ impl Frame {
                 e.u8(init.math_mode.code());
                 e.shard(&init.shard);
             }
-            Frame::Request(r) => r.encode(e),
+            Frame::Request { trace_id, req } => {
+                e.u64(*trace_id);
+                req.encode(e);
+            }
             Frame::Response {
+                trace_id,
                 secs,
                 psi_fills,
                 resp,
             } => {
+                e.u64(*trace_id);
                 e.f64(*secs);
                 e.u32(*psi_fills);
                 resp.encode(e);
@@ -707,8 +743,12 @@ impl Frame {
                 },
                 shard: d.shard()?,
             })),
-            4 => Frame::Request(Box::new(Request::decode(d)?)),
+            4 => Frame::Request {
+                trace_id: d.u64()?,
+                req: Box::new(Request::decode(d)?),
+            },
             5 => Frame::Response {
+                trace_id: d.u64()?,
                 secs: d.f64()?,
                 psi_fills: d.u32()?,
                 resp: Box::new(Response::decode(d)?),
@@ -751,6 +791,7 @@ pub fn encode_frame(f: &Frame) -> Result<Vec<u8>> {
 /// serve hot path answers each client of a coalesced micro-batch
 /// without cloning the batch output into a per-request `Response`.
 pub fn encode_predict_response(
+    trace_id: u64,
     secs: f64,
     mean: &Matrix,
     r0: usize,
@@ -760,6 +801,7 @@ pub fn encode_predict_response(
     assert!(r0 <= r1 && r1 <= mean.rows(), "predict reply row window out of range");
     assert_eq!(var.len(), r1 - r0, "predict reply var/mean row mismatch");
     let mut e = Enc::new();
+    e.u64(trace_id);
     e.f64(secs);
     e.u32(0); // psi_fills: serve-path replies do not report recomputes
     e.u8(5); // Response::Predict tag
@@ -776,6 +818,7 @@ pub fn encode_predict_response(
 /// buffers — the [`encode_predict_response`] sibling for the LVM
 /// latent-projection path.
 pub fn encode_project_response(
+    trace_id: u64,
     secs: f64,
     xmu: &Matrix,
     r0: usize,
@@ -785,6 +828,7 @@ pub fn encode_project_response(
     assert!(r0 <= r1 && r1 <= xmu.rows(), "project reply row window out of range");
     assert_eq!(conf.len(), r1 - r0, "project reply conf/xmu row mismatch");
     let mut e = Enc::new();
+    e.u64(trace_id);
     e.f64(secs);
     e.u32(0);
     e.u8(9); // Response::Project tag
@@ -894,12 +938,15 @@ mod tests {
             let q = testing::dim(rng, 1, 8);
             let p = rand_params(rng, m, q);
             let v = rng.below(1 << 30) as u64;
-            let f = Frame::Request(Box::new(Request::Stats {
-                params: p.clone(),
-                version: v,
-            }));
+            let f = Frame::Request {
+                trace_id: 0,
+                req: Box::new(Request::Stats {
+                    params: p.clone(),
+                    version: v,
+                }),
+            };
             match roundtrip(&f) {
-                Frame::Request(r) => match *r {
+                Frame::Request { req: r, .. } => match *r {
                     Request::Stats { params, version } => {
                         assert_mat_eq(&params.z, &p.z);
                         assert_eq!(params.log_ls, p.log_ls);
@@ -937,6 +984,7 @@ mod tests {
             };
             let fills = rng.below(100) as u32;
             let fs = Frame::Response {
+                trace_id: 0,
                 secs: rng.uniform(),
                 psi_fills: fills,
                 resp: Box::new(Response::Stats(st.clone())),
@@ -961,6 +1009,7 @@ mod tests {
                 _ => return Err("wrong frame kind".into()),
             }
             let fg = Frame::Response {
+                trace_id: 0,
                 secs: 0.0,
                 psi_fills: 0,
                 resp: Box::new(Response::Grads(g.clone())),
@@ -1002,14 +1051,17 @@ mod tests {
                 kl_weight: rng.uniform(),
             };
             let v = rng.below(1 << 20) as u64;
-            let f = Frame::Request(Box::new(Request::Grads {
-                params: p,
-                adj: adj.clone(),
-                update_locals: rng.flip(0.5),
-                version: v,
-            }));
+            let f = Frame::Request {
+                trace_id: 0,
+                req: Box::new(Request::Grads {
+                    params: p,
+                    adj: adj.clone(),
+                    update_locals: rng.flip(0.5),
+                    version: v,
+                }),
+            };
             match roundtrip(&f) {
-                Frame::Request(r) => match *r {
+                Frame::Request { req: r, .. } => match *r {
                     Request::Grads {
                         adj: a2,
                         version,
@@ -1025,11 +1077,14 @@ mod tests {
                 },
                 _ => return Err("wrong frame kind".into()),
             }
-            let f2 = Frame::Request(Box::new(Request::AppendShard {
-                part: shard.clone(),
-            }));
+            let f2 = Frame::Request {
+                trace_id: 0,
+                req: Box::new(Request::AppendShard {
+                    part: shard.clone(),
+                }),
+            };
             match roundtrip(&f2) {
-                Frame::Request(r) => match *r {
+                Frame::Request { req: r, .. } => match *r {
                     Request::AppendShard { part } => {
                         assert_mat_eq(&part.xmu, &shard.xmu);
                         assert_mat_eq(&part.xvar, &shard.xvar);
@@ -1161,9 +1216,10 @@ mod tests {
 
     #[test]
     fn truncated_frames_are_rejected_at_every_cut() {
-        let bytes = encode_frame(&Frame::Request(Box::new(Request::FetchShard {
-            clear: true,
-        })))
+        let bytes = encode_frame(&Frame::Request {
+            trace_id: 0xDEAD_BEEF,
+            req: Box::new(Request::FetchShard { clear: true }),
+        })
         .unwrap();
         assert!(bytes.len() > HEADER_LEN);
         for cut in 1..bytes.len() {
@@ -1201,12 +1257,15 @@ mod tests {
             let q = testing::dim(rng, 1, 6);
             let xt_mu = rand_mat(rng, t, q);
             let xt_var = rand_mat(rng, t, q);
-            let f = Frame::Request(Box::new(Request::ServePredict {
-                xt_mu: xt_mu.clone(),
-                xt_var: xt_var.clone(),
-            }));
+            let f = Frame::Request {
+                trace_id: 0,
+                req: Box::new(Request::ServePredict {
+                    xt_mu: xt_mu.clone(),
+                    xt_var: xt_var.clone(),
+                }),
+            };
             match roundtrip(&f) {
-                Frame::Request(r) => match *r {
+                Frame::Request { req: r, .. } => match *r {
                     Request::ServePredict {
                         xt_mu: m2,
                         xt_var: v2,
@@ -1218,8 +1277,11 @@ mod tests {
                 },
                 _ => return Err("wrong frame kind".into()),
             }
-            match roundtrip(&Frame::Request(Box::new(Request::ModelInfo))) {
-                Frame::Request(r) => {
+            match roundtrip(&Frame::Request {
+                trace_id: 0,
+                req: Box::new(Request::ModelInfo),
+            }) {
+                Frame::Request { req: r, .. } => {
                     if !matches!(*r, Request::ModelInfo) {
                         return Err("ModelInfo request corrupted".into());
                     }
@@ -1233,6 +1295,7 @@ mod tests {
             );
             let version = rng.below(1 << 30) as u64;
             let f = Frame::Response {
+                trace_id: 0,
                 secs: 0.0,
                 psi_fills: 0,
                 resp: Box::new(Response::ModelInfo { m, q: qq, d, version }),
@@ -1266,15 +1329,21 @@ mod tests {
             let d = testing::dim(rng, 1, 6);
             let q = testing::dim(rng, 1, 4);
             let y = rand_mat(rng, t, d);
-            match roundtrip(&Frame::Request(Box::new(Request::ServeProject { y: y.clone() }))) {
-                Frame::Request(r) => match *r {
+            match roundtrip(&Frame::Request {
+                trace_id: 0,
+                req: Box::new(Request::ServeProject { y: y.clone() }),
+            }) {
+                Frame::Request { req: r, .. } => match *r {
                     Request::ServeProject { y: y2 } => assert_mat_eq(&y2, &y),
                     _ => return Err("wrong request variant".into()),
                 },
                 _ => return Err("wrong frame kind".into()),
             }
-            match roundtrip(&Frame::Request(Box::new(Request::Reload))) {
-                Frame::Request(r) => {
+            match roundtrip(&Frame::Request {
+                trace_id: 0,
+                req: Box::new(Request::Reload),
+            }) {
+                Frame::Request { req: r, .. } => {
                     if !matches!(*r, Request::Reload) {
                         return Err("Reload request corrupted".into());
                     }
@@ -1284,6 +1353,7 @@ mod tests {
             let xmu = rand_mat(rng, t, q);
             let conf: Vec<f64> = (0..t).map(|_| rng.uniform()).collect();
             let f = Frame::Response {
+                trace_id: 0,
                 secs: rng.uniform(),
                 psi_fills: 0,
                 resp: Box::new(Response::Project {
@@ -1320,10 +1390,12 @@ mod tests {
             let r0 = testing::dim(rng, 0, 2);
             let r1 = r0 + t;
             let secs = rng.uniform();
+            let trace_id = rng.below(1 << 30) as u64;
 
             // owned: clone the window into a fresh Response
             let window = Matrix::from_fn(r1 - r0, cols, |i, j| big[(r0 + i, j)]);
             let owned = encode_frame(&Frame::Response {
+                trace_id,
                 secs,
                 psi_fills: 0,
                 resp: Box::new(Response::Predict {
@@ -1332,12 +1404,14 @@ mod tests {
                 }),
             })
             .unwrap();
-            let borrowed = encode_predict_response(secs, &big, r0, r1, &var[r0..r1]).unwrap();
+            let borrowed =
+                encode_predict_response(trace_id, secs, &big, r0, r1, &var[r0..r1]).unwrap();
             if owned != borrowed {
                 return Err("predict reply bytes diverged".into());
             }
 
             let owned = encode_frame(&Frame::Response {
+                trace_id,
                 secs,
                 psi_fills: 0,
                 resp: Box::new(Response::Project {
@@ -1346,11 +1420,73 @@ mod tests {
                 }),
             })
             .unwrap();
-            let borrowed = encode_project_response(secs, &big, r0, r1, &var[r0..r1]).unwrap();
+            let borrowed =
+                encode_project_response(trace_id, secs, &big, r0, r1, &var[r0..r1]).unwrap();
             if owned != borrowed {
                 return Err("project reply bytes diverged".into());
             }
             Ok(())
+        });
+    }
+
+    /// Wire v6: the trace/request id round-trips bitwise on every
+    /// `Request` and `Response` frame, and the new stats frames
+    /// (`ServeStats` / `StatsJson`) round-trip their payloads exactly.
+    #[test]
+    fn prop_v6_trace_ids_and_stats_frames_roundtrip() {
+        testing::check("wire v6 trace ids / stats frames", 30, |rng| {
+            // adversarial ids: full 64-bit range, not just small ints
+            let id = ((rng.below(1 << 31) as u64) << 33)
+                | ((rng.below(1 << 31) as u64) << 2)
+                | (rng.below(4) as u64);
+            let f = Frame::Request {
+                trace_id: id,
+                req: Box::new(Request::ServeStats),
+            };
+            match roundtrip(&f) {
+                Frame::Request { trace_id, req } => {
+                    if trace_id != id {
+                        return Err(format!("request trace id {trace_id:#x} != {id:#x}"));
+                    }
+                    if !matches!(*req, Request::ServeStats) {
+                        return Err("ServeStats request corrupted".into());
+                    }
+                }
+                _ => return Err("wrong frame kind".into()),
+            }
+            let json = format!("{{\"counters\":{{\"requests\":{}}}}}", rng.below(1 << 20));
+            let f = Frame::Response {
+                trace_id: id,
+                secs: rng.uniform(),
+                psi_fills: 0,
+                resp: Box::new(Response::StatsJson(json.clone())),
+            };
+            match roundtrip(&f) {
+                Frame::Response { trace_id, resp, .. } => {
+                    if trace_id != id {
+                        return Err(format!("response trace id {trace_id:#x} != {id:#x}"));
+                    }
+                    match *resp {
+                        Response::StatsJson(j2) => {
+                            if j2 != json {
+                                return Err("StatsJson payload corrupted".into());
+                            }
+                        }
+                        _ => return Err("wrong response variant".into()),
+                    }
+                }
+                _ => return Err("wrong frame kind".into()),
+            }
+            // ids survive on data frames too (the leader stamps map
+            // rounds with the evaluation version)
+            let f = Frame::Request {
+                trace_id: id,
+                req: Box::new(Request::GatherLocals),
+            };
+            match roundtrip(&f) {
+                Frame::Request { trace_id, .. } if trace_id == id => Ok(()),
+                other => Err(format!("data-frame trace id lost: {other:?}")),
+            }
         });
     }
 

@@ -12,6 +12,7 @@ use crate::cluster::{Backend, PoolBackend, WorkerReply};
 use crate::gp::params::{GlobalGrads, GlobalParams};
 use crate::gp::{self, kernel, MathMode, Stats};
 use crate::linalg::Matrix;
+use crate::obs;
 use crate::optim::{Adam, Scg};
 use crate::runtime::{ArtifactConfig, Manifest, ShardData};
 use crate::telemetry::{IterationLog, RoundTiming, RunLog};
@@ -176,6 +177,9 @@ pub struct Trainer<B: Backend = PoolBackend> {
     /// bound F at the restored checkpoint (NaN when starting fresh) —
     /// the export provenance fallback while no new iteration has run.
     resumed_bound: f64,
+    /// Live trainer metrics (DESIGN.md §10): round latency histograms,
+    /// dropped-worker counts, per-worker heartbeat ages.
+    metrics: obs::Registry,
 }
 
 impl Trainer<PoolBackend> {
@@ -337,7 +341,14 @@ impl<B: Backend> Trainer<B> {
             row_ids,
             resumed_iterations: 0,
             resumed_bound: f64::NAN,
+            metrics: obs::Registry::new(),
         }
+    }
+
+    /// The trainer's live metrics registry (round latency histograms,
+    /// `train.dropped_workers`, per-worker heartbeat-age gauges).
+    pub fn metrics(&self) -> &obs::Registry {
+        &self.metrics
     }
 
     /// Iterations completed in total, including any restored from a
@@ -461,6 +472,8 @@ impl<B: Backend> Trainer<B> {
                 if !self.newly_failed.contains(&k) {
                     self.newly_failed.push(k);
                 }
+                self.metrics.counter("train.dropped_workers").inc();
+                obs::trace::event("worker_dropped", self.eval_version, k as u64);
             }
         }
     }
@@ -497,8 +510,14 @@ impl<B: Backend> Trainer<B> {
         // other evaluation — including each SCG trial point — gets its own
         self.eval_version += 1;
         let version = self.eval_version;
+        // the evaluation version IS the trace id for this evaluation:
+        // set it as the ambient id so the TCP backend stamps it onto
+        // every leader->worker frame, and the workers' spans line up
+        // with the two round spans below
+        obs::trace::set_current(version);
 
         // ---- round 1: partial statistics --------------------------------
+        let round1_span = obs::trace::span("stats_round", version);
         let t0 = Instant::now();
         let replies = self.backend.map_subset(
             &include,
@@ -508,6 +527,10 @@ impl<B: Backend> Trainer<B> {
             },
         );
         let wall = t0.elapsed().as_secs_f64();
+        drop(round1_span);
+        self.metrics
+            .histogram("train.stats_round_ns")
+            .record((wall * 1e9) as u64);
         self.absorb_backend_failures(&include, &replies);
         self.record_round(&replies, wall);
         let m = params.m();
@@ -530,6 +553,7 @@ impl<B: Backend> Trainer<B> {
         let do_locals = self.update_locals_next;
         self.update_locals_next = false;
         let include2 = self.alive.clone();
+        let round2_span = obs::trace::span("grads_round", version);
         let t1 = Instant::now();
         let greplies = self.backend.map_subset(
             &include2,
@@ -541,6 +565,10 @@ impl<B: Backend> Trainer<B> {
             },
         );
         let wall1 = t1.elapsed().as_secs_f64();
+        drop(round2_span);
+        self.metrics
+            .histogram("train.grads_round_ns")
+            .record((wall1 * 1e9) as u64);
         self.absorb_backend_failures(&include2, &greplies);
         self.record_round(&greplies, wall1);
 
@@ -567,6 +595,11 @@ impl<B: Backend> Trainer<B> {
     /// the iteration's accepted point.
     pub fn step(&mut self) -> Result<f64> {
         let iter = self.log.iterations.len();
+        // tagged with the FIRST evaluation version this step will use,
+        // so the step span and its inner round spans share a prefix of
+        // ids; `n` records how many evaluations the optimiser ran
+        let mut step_span = obs::trace::span("global_step", self.eval_version + 1);
+        let evals_before = self.eval_version;
         self.rounds.clear();
         self.central_secs = 0.0;
         // invalidate up front, not only at the end: an error mid-step
@@ -596,6 +629,18 @@ impl<B: Backend> Trainer<B> {
                     self.objective_dirty = true;
                     self.posterior_cache = None;
                     self.newly_failed.push(k);
+                    self.metrics.counter("train.dropped_workers").inc();
+                    obs::trace::event("worker_dropped", self.eval_version, k as u64);
+                }
+            }
+            // record each worker's last-heard-from age, not just the
+            // boolean liveness the probe returned (satellite: a slow
+            // worker shows up as a growing age long before it dies)
+            for (k, age) in self.backend.heartbeat_ages().into_iter().enumerate() {
+                if let Some(age) = age {
+                    self.metrics
+                        .gauge(&format!("train.worker.{k}.heartbeat_age_ms"))
+                        .set((age * 1e3) as u64);
                 }
             }
         }
@@ -713,6 +758,7 @@ impl<B: Backend> Trainer<B> {
             central_secs: self.central_secs,
             failed_workers: failed,
         });
+        step_span.set_count(self.eval_version - evals_before);
         Ok(f)
     }
 

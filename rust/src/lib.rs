@@ -35,6 +35,7 @@ pub mod gp;
 pub mod linalg;
 pub mod mapreduce;
 pub mod model;
+pub mod obs;
 pub mod optim;
 pub mod runtime;
 pub mod telemetry;

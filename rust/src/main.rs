@@ -16,9 +16,13 @@
 //!                [--out preds.csv]              # cluster-free serving
 //! gparml serve --model model.gpm --listen ADDR [--clients N]
 //!              [--threads W] [--batch-rows R]   # worker pool + micro-batch cap
+//!              [--trace-out FILE]               # span JSONL (DESIGN.md §10)
 //! gparml reload --connect ADDR                  # hot-swap the served model
+//! gparml stats --connect ADDR [--json] [--watch] [--interval-ms N] [--count K]
+//!                                               # live metrics snapshot
 //! gparml worker (--listen ADDR | --connect LEADER) [--artifacts DIR]
 //!               [--math-mode strict|fast]         # pin; reject the other
+//!               [--heartbeat-ms N]                # leader-liveness window
 //! gparml bench psi [--config perf] [--reps R]    # writes BENCH_psi.json
 //! gparml bench predict [--points B] [--threads T] # BENCH_predict.json
 //! gparml bench check [--baseline F] [--current F] # CI regression gate
@@ -48,32 +52,46 @@ use gparml::linalg::Matrix;
 use gparml::model::{serve, Predictor, TrainedModel};
 use gparml::runtime::Manifest;
 use gparml::util::cli::Args;
+use gparml::util::json::Json;
 use gparml::util::rng::Rng;
 
 fn main() -> Result<()> {
     let args = Args::from_env();
+    // `--trace-out FILE` on any command: record structured spans/events
+    // to JSONL (DESIGN.md §10); flushed before exit either way
+    if let Some(path) = args.get("trace-out") {
+        gparml::obs::trace::init(std::path::Path::new(path))?;
+    }
+    let result = run_command(&args);
+    gparml::obs::trace::flush();
+    result
+}
+
+fn run_command(args: &Args) -> Result<()> {
     match args.positional.first().map(|s| s.as_str()) {
         Some("experiment") => {
             let name = args
                 .positional
                 .get(1)
                 .context("usage: gparml experiment <fig1..fig8|all>")?;
-            experiments::run(name, &args)
+            experiments::run(name, args)
         }
-        Some("train") => train(&args),
-        Some("export") => export_cmd(&args),
-        Some("predict") => predict_cmd(&args),
-        Some("serve") => serve_cmd(&args),
-        Some("reload") => reload_cmd(&args),
-        Some("worker") => worker(&args),
-        Some("bench") => bench(&args),
-        Some("info") => info(&args),
+        Some("train") => train(args),
+        Some("export") => export_cmd(args),
+        Some("predict") => predict_cmd(args),
+        Some("serve") => serve_cmd(args),
+        Some("reload") => reload_cmd(args),
+        Some("stats") => stats_cmd(args),
+        Some("worker") => worker(args),
+        Some("bench") => bench(args),
+        Some("info") => info(args),
         _ => {
             eprintln!(
-                "usage: gparml <experiment|train|export|predict|serve|reload|worker|bench|info> [flags]\n\
+                "usage: gparml <experiment|train|export|predict|serve|reload|stats|worker|bench|info> [flags]\n\
                  experiments: fig1 fig2 fig3 fig4 fig5 fig6 fig7 fig8 all\n\
                  common flags: --n --iters --workers --seed --out DIR --artifacts DIR\n\
-                 cluster: gparml worker --connect LEADER_ADDR (or --listen ADDR),\n\
+                 cluster: gparml worker --connect LEADER_ADDR (or --listen ADDR)\n\
+                          [--heartbeat-ms N],\n\
                           gparml train --connect W1,W2,... (synthetic dataset)\n\
                  serving: gparml export [train flags] --out model.gpm,\n\
                           gparml predict (--model F | --connect ADDR) [--points file.csv]\n\
@@ -81,6 +99,9 @@ fn main() -> Result<()> {
                           gparml serve --model F --listen ADDR [--clients N]\n\
                           [--threads W] [--batch-rows R],\n\
                           gparml reload --connect ADDR (hot-swap the served model)\n\
+                 obs:     gparml stats --connect ADDR [--json] [--watch]\n\
+                          [--interval-ms N] [--count K],\n\
+                          --trace-out FILE on any command (span JSONL, DESIGN.md §10)\n\
                  math:    --math-mode strict|fast on train/bench/worker (DESIGN.md §8)\n\
                  bench:   gparml bench psi [--config perf] [--points B] [--reps R],\n\
                           gparml bench predict [--points B] [--threads T] [--clients C],\n\
@@ -221,8 +242,9 @@ fn predict_cmd(args: &Args) -> Result<()> {
                 Some(p) => load_predict_points(p, info.q)?,
                 None => predict_points(n, info.q, seed),
             };
-            let (mean, var) = serve::remote_predict(&mut stream, &xt_mu, &xt_var)?;
+            let (mean, var, trace_id) = serve::remote_predict_traced(&mut stream, &xt_mu, &xt_var)?;
             serve::hangup(&mut stream);
+            println!("request id {trace_id:#018x} (grep it in the server's --trace-out JSONL)");
             report_prediction(args, &xt_mu, &mean, &var, &format!("server {addr}"))
         }
     } else {
@@ -370,16 +392,108 @@ fn reload_cmd(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `gparml stats`: scrape a running predict server's live metrics
+/// registry (the `ServeStats` control frame, answered inline by the
+/// reader thread without queueing behind compute) and render it.
+/// `--watch` re-polls every `--interval-ms` (default 1000) until
+/// `--count` snapshots have been printed (0 = forever).
+fn stats_cmd(args: &Args) -> Result<()> {
+    let addr = args
+        .get("connect")
+        .context("stats needs --connect ADDR (a running `gparml serve`)")?;
+    let raw = args.has("json");
+    let watch = args.has("watch");
+    let interval =
+        std::time::Duration::from_millis(args.get_usize("interval-ms", 1000)?.max(1) as u64);
+    let count = args.get_usize("count", 0)?;
+    let mut printed = 0usize;
+    loop {
+        let mut stream = serve::connect(addr)?;
+        let snapshot = serve::remote_stats(&mut stream)?;
+        serve::hangup(&mut stream);
+        if raw {
+            println!("{snapshot}");
+        } else {
+            render_stats(addr, &snapshot)?;
+        }
+        printed += 1;
+        if !watch || (count > 0 && printed >= count) {
+            return Ok(());
+        }
+        std::thread::sleep(interval);
+    }
+}
+
+/// Human rendering of a metrics snapshot: headline serve gauges, the
+/// coalescing ratio, then every counter/gauge/histogram by name.
+fn render_stats(addr: &str, snapshot: &str) -> Result<()> {
+    let json = Json::parse(snapshot).context("parsing stats snapshot")?;
+    let section = |key: &str| -> Vec<(String, Json)> {
+        json.opt(key)
+            .and_then(|s| s.as_obj().ok().cloned())
+            .map(|m| m.into_iter().collect())
+            .unwrap_or_default()
+    };
+    let counters = section("counters");
+    let gauges = section("gauges");
+    let histograms = section("histograms");
+    let counter = |name: &str| -> f64 {
+        counters
+            .iter()
+            .find(|(k, _)| k == name)
+            .and_then(|(_, v)| v.as_f64().ok())
+            .unwrap_or(0.0)
+    };
+    let batches = counter("serve.batches");
+    let coalesced = counter("serve.coalesced_jobs");
+    let ratio = if batches > 0.0 { coalesced / batches } else { 0.0 };
+    println!("stats from {addr}: coalescing ratio {ratio:.2} jobs/batch");
+    for (name, v) in &gauges {
+        if let Ok(x) = v.as_f64() {
+            println!("  gauge    {name:<32} {x:.0}");
+        }
+    }
+    for (name, v) in &counters {
+        if let Ok(x) = v.as_f64() {
+            println!("  counter  {name:<32} {x:.0}");
+        }
+    }
+    for (name, h) in &histograms {
+        let field = |f: &str| -> String {
+            match h.opt(f).and_then(|v| v.as_f64().ok()) {
+                Some(x) => format!("{x:.0}"),
+                None => "-".to_string(),
+            }
+        };
+        println!(
+            "  hist     {name:<32} n={} p50={} p90={} p99={}",
+            field("count"),
+            field("p50"),
+            field("p90"),
+            field("p99")
+        );
+    }
+    Ok(())
+}
+
 /// Run this process as a cluster worker node. `--math-mode` pins the
 /// node: an `Init` negotiating the other mode is rejected at bring-up.
 fn worker(args: &Args) -> Result<()> {
     let artifacts = common::artifacts_dir(args);
     let pinned = common::math_mode_opt(args)?;
+    // `--heartbeat-ms N`: expected leader ping cadence. Sets the read
+    // timeout used to count overdue heartbeats (obs metric
+    // `heartbeat_overdue`); absent = block forever, as before.
+    let heartbeat_ms = if args.get("heartbeat-ms").is_some() {
+        Some(args.get_usize("heartbeat-ms", 5000)? as u64)
+    } else {
+        None
+    };
     let served = if let Some(addr) = args.get("connect") {
-        gparml::cluster::node::run_worker_connect(addr, &artifacts, pinned)?
+        gparml::cluster::node::run_worker_connect(addr, &artifacts, pinned, heartbeat_ms)?
     } else {
         let addr = args.get_str("listen", "127.0.0.1:0");
-        gparml::cluster::node::run_worker_listen(addr, &artifacts, pinned)?
+        gparml::cluster::node::run_worker_listen(addr, &artifacts, pinned, heartbeat_ms)?
     };
     eprintln!("[gparml-worker] exiting after {served} requests");
     Ok(())

@@ -14,6 +14,10 @@
 //! vs disabled — and reports per-request wall time (a request spans
 //! threads, so the thread-CPU clock cannot see it; wall numbers are
 //! noisier and deliberately NOT part of the `bench check` gate).
+//! Every request latency is also recorded into an [`obs::Histogram`]
+//! shared across the client threads, and the JSON reports the
+//! histogram-derived p50/p99 ns/request for both serve series — the
+//! same log-scale buckets `gparml stats` exposes from a live server.
 
 use std::net::TcpListener;
 use std::time::Instant;
@@ -25,6 +29,7 @@ use super::predictor::{PredictScratch, Predictor};
 use super::serve::{self, ServeOptions, ServeState, ServeStats};
 use crate::gp::{GlobalParams, MathMode, PosteriorWeights};
 use crate::linalg::Matrix;
+use crate::obs;
 use crate::util::bench::bench;
 use crate::util::cli::Args;
 use crate::util::rng::Rng;
@@ -112,17 +117,24 @@ pub fn run(args: &Args) -> Result<()> {
 
     // end-to-end through the serving subsystem: the same request load
     // from `clients` concurrent TCP clients, micro-batching on vs off
-    let (batched_s, batched_stats) = serve_round(&model, &xt_mu, &xt_var, clients, reps, 4096)
-        .context("bench serve round (batched)")?;
-    let (unbatched_s, _) = serve_round(&model, &xt_mu, &xt_var, clients, reps, 0)
+    let (batched_s, batched_stats, batched_hist) =
+        serve_round(&model, &xt_mu, &xt_var, clients, reps, 4096)
+            .context("bench serve round (batched)")?;
+    let (unbatched_s, _, unbatched_hist) = serve_round(&model, &xt_mu, &xt_var, clients, reps, 0)
         .context("bench serve round (unbatched)")?;
+    let pct = |h: &obs::Histogram, q: f64| h.percentile(q).unwrap_or(0);
     println!(
         "serve ({clients} clients x {b} points): {:.0} ns/point micro-batched \
-         ({} kernel batches, {} coalesced jobs), {:.0} ns/point unbatched",
+         ({} kernel batches, {} coalesced jobs, p50 {} / p99 {} ns/request), \
+         {:.0} ns/point unbatched (p50 {} / p99 {} ns/request)",
         per_point(batched_s),
         batched_stats.batches,
         batched_stats.coalesced_jobs,
+        pct(&batched_hist, 0.50),
+        pct(&batched_hist, 0.99),
         per_point(unbatched_s),
+        pct(&unbatched_hist, 0.50),
+        pct(&unbatched_hist, 0.99),
     );
 
     let json = format!(
@@ -131,13 +143,21 @@ pub fn run(args: &Args) -> Result<()> {
          \"predict_ns_per_point\": {:.1},\n  \"predict_concurrent_ns_per_point\": {:.1},\n  \
          \"serve_clients\": {clients},\n  \"serve_batched_ns_per_point\": {:.1},\n  \
          \"serve_batched_kernel_batches\": {},\n  \"serve_batched_coalesced_jobs\": {},\n  \
-         \"serve_unbatched_ns_per_point\": {:.1}\n}}\n",
+         \"serve_batched_p50_ns_per_request\": {},\n  \
+         \"serve_batched_p99_ns_per_request\": {},\n  \
+         \"serve_unbatched_ns_per_point\": {:.1},\n  \
+         \"serve_unbatched_p50_ns_per_request\": {},\n  \
+         \"serve_unbatched_p99_ns_per_request\": {}\n}}\n",
         per_point(single.median_s),
         per_point(concurrent_median),
         per_point(batched_s),
         batched_stats.batches,
         batched_stats.coalesced_jobs,
+        pct(&batched_hist, 0.50),
+        pct(&batched_hist, 0.99),
         per_point(unbatched_s),
+        pct(&unbatched_hist, 0.50),
+        pct(&unbatched_hist, 0.99),
     );
     std::fs::write(out_path, json).with_context(|| format!("writing {out_path}"))?;
     println!("wrote {out_path}");
@@ -147,7 +167,9 @@ pub fn run(args: &Args) -> Result<()> {
 /// One serve measurement: a loopback server (2 worker threads,
 /// `batch_rows` micro-batch cap), `clients` concurrent TCP clients
 /// each timing `reps` requests after one warm-up. Returns the slowest
-/// client's median per-request wall seconds plus the server's stats.
+/// client's median per-request wall seconds, the server's stats, and
+/// the pooled per-request latency histogram (every timed request from
+/// every client, for p50/p99 tail extraction).
 fn serve_round(
     model: &TrainedModel,
     xt_mu: &Matrix,
@@ -155,7 +177,7 @@ fn serve_round(
     clients: usize,
     reps: usize,
     batch_rows: usize,
-) -> Result<(f64, ServeStats)> {
+) -> Result<(f64, ServeStats, obs::Histogram)> {
     let state = ServeState::new(Predictor::new(model)?);
     let opts = ServeOptions {
         max_clients: clients as u64,
@@ -164,12 +186,14 @@ fn serve_round(
     };
     let listener = TcpListener::bind("127.0.0.1:0").context("binding bench serve listener")?;
     let addr = listener.local_addr()?.to_string();
+    let hist = obs::Histogram::new();
 
     std::thread::scope(|s| {
         let server = s.spawn(|| serve::serve(&listener, &state, &opts));
         let handles: Vec<_> = (0..clients)
             .map(|_| {
                 let addr = &addr;
+                let hist = &hist;
                 s.spawn(move || -> Result<Vec<f64>> {
                     let mut stream = serve::connect(addr)?;
                     serve::remote_predict(&mut stream, xt_mu, xt_var)?; // warm-up
@@ -177,7 +201,9 @@ fn serve_round(
                     for _ in 0..reps {
                         let t0 = Instant::now();
                         serve::remote_predict(&mut stream, xt_mu, xt_var)?;
-                        times.push(t0.elapsed().as_secs_f64());
+                        let dt = t0.elapsed();
+                        hist.record(dt.as_nanos() as u64);
+                        times.push(dt.as_secs_f64());
                     }
                     serve::hangup(&mut stream);
                     Ok(times)
@@ -214,6 +240,7 @@ fn serve_round(
             None => Ok((stats::max(&medians), server_stats)),
         }
     })
+    .map(|(m, server_stats)| (m, server_stats, hist))
 }
 
 /// A structurally valid model at the given shapes with pseudo-random

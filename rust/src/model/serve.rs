@@ -60,7 +60,7 @@ use std::net::{TcpListener, TcpStream};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex, RwLock};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
@@ -68,6 +68,7 @@ use super::artifact::TrainedModel;
 use super::predictor::{PredictScratch, Predictor};
 use crate::cluster::wire::{self, Frame, Request, Response};
 use crate::linalg::Matrix;
+use crate::obs;
 use crate::util::timer::thread_cpu_secs;
 
 /// How the server behaves; independent of the model it serves.
@@ -211,10 +212,13 @@ impl Work {
 }
 
 /// One queued request: the work plus the channel its encoded reply
-/// frame goes back through.
+/// frame goes back through, tagged with the client's wire trace id
+/// (echoed on the reply and stamped on every span it touches).
 struct Job {
     work: Work,
     reply: mpsc::Sender<Vec<u8>>,
+    trace_id: u64,
+    enqueued: Instant,
 }
 
 /// The shared FIFO the connection threads feed and the worker pool
@@ -223,13 +227,16 @@ struct Job {
 struct Queue {
     inner: Mutex<(VecDeque<Job>, bool)>,
     cv: Condvar,
+    /// Live queue depth (`serve.queue_depth` in the stats snapshot).
+    depth: Arc<obs::Gauge>,
 }
 
 impl Queue {
-    fn new() -> Queue {
+    fn new(depth: Arc<obs::Gauge>) -> Queue {
         Queue {
             inner: Mutex::new((VecDeque::new(), false)),
             cv: Condvar::new(),
+            depth,
         }
     }
 
@@ -243,6 +250,7 @@ impl Queue {
             return false;
         }
         g.0.push_back(job);
+        self.depth.set(g.0.len() as u64);
         drop(g);
         self.cv.notify_one();
         true
@@ -278,6 +286,7 @@ impl Queue {
                         out.push(next);
                     }
                 }
+                self.depth.set(g.0.len() as u64);
                 if !g.0.is_empty() {
                     // leftovers (incompatible or over-cap): hand them to
                     // another worker (a notify sent while none waited
@@ -317,6 +326,56 @@ struct Counters {
     active_conns: AtomicU64,
 }
 
+/// Cached handles into the serve [`obs::Registry`], so the hot path
+/// never touches the registry's name map. The registry itself answers
+/// `ServeStats` frames (DESIGN.md §10).
+struct ServeMetrics {
+    registry: obs::Registry,
+    queue_depth: Arc<obs::Gauge>,
+    in_flight_batches: Arc<obs::Gauge>,
+    model_version: Arc<obs::Gauge>,
+    clients: Arc<obs::Counter>,
+    req_predict: Arc<obs::Counter>,
+    req_project: Arc<obs::Counter>,
+    req_model_info: Arc<obs::Counter>,
+    req_reload: Arc<obs::Counter>,
+    req_ping: Arc<obs::Counter>,
+    req_stats: Arc<obs::Counter>,
+    req_rejected: Arc<obs::Counter>,
+    reloads: Arc<obs::Counter>,
+    batches: Arc<obs::Counter>,
+    coalesced_jobs: Arc<obs::Counter>,
+    /// Enqueue -> reply-ready latency per compute job.
+    request_ns: Arc<obs::Histogram>,
+    /// Thread-CPU time per kernel call (one batch = one call).
+    kernel_ns: Arc<obs::Histogram>,
+}
+
+impl ServeMetrics {
+    fn new() -> ServeMetrics {
+        let registry = obs::Registry::new();
+        ServeMetrics {
+            queue_depth: registry.gauge("serve.queue_depth"),
+            in_flight_batches: registry.gauge("serve.in_flight_batches"),
+            model_version: registry.gauge("serve.model_version"),
+            clients: registry.counter("serve.clients"),
+            req_predict: registry.counter("serve.requests.predict"),
+            req_project: registry.counter("serve.requests.project"),
+            req_model_info: registry.counter("serve.requests.model_info"),
+            req_reload: registry.counter("serve.requests.reload"),
+            req_ping: registry.counter("serve.requests.ping"),
+            req_stats: registry.counter("serve.requests.stats"),
+            req_rejected: registry.counter("serve.requests.rejected"),
+            reloads: registry.counter("serve.reloads"),
+            batches: registry.counter("serve.batches"),
+            coalesced_jobs: registry.counter("serve.coalesced_jobs"),
+            request_ns: registry.histogram("serve.request_ns"),
+            kernel_ns: registry.histogram("serve.kernel_ns"),
+            registry,
+        }
+    }
+}
+
 // ---------------------------------------------------------------------------
 // server
 // ---------------------------------------------------------------------------
@@ -335,7 +394,9 @@ pub fn serve(
     listener
         .set_nonblocking(true)
         .context("setting the serve listener nonblocking")?;
-    let queue = Queue::new();
+    let metrics = ServeMetrics::new();
+    metrics.model_version.set(state.current().version);
+    let queue = Queue::new(metrics.queue_depth.clone());
     let counters = Counters::default();
     // socket handles of live connections, so the shutdown drain can
     // force-close stragglers (handlers deregister on exit)
@@ -345,7 +406,7 @@ pub fn serve(
 
     std::thread::scope(|s| {
         for _ in 0..opts.workers.max(1) {
-            s.spawn(|| worker_loop(&queue, state, opts, &counters));
+            s.spawn(|| worker_loop(&queue, state, opts, &counters, &metrics));
         }
         loop {
             let served = counters.clients.load(Ordering::Acquire);
@@ -360,9 +421,10 @@ pub fn serve(
                     if let Ok(clone) = stream.try_clone() {
                         registry.lock().expect("conn registry poisoned").insert(conn_id, clone);
                     }
-                    let (queue, state, counters, registry) = (&queue, state, &counters, &registry);
+                    let (queue, state, counters, registry, metrics) =
+                        (&queue, state, &counters, &registry, &metrics);
                     s.spawn(move || {
-                        let client = serve_client(stream, state, queue, counters);
+                        let client = serve_client(stream, state, queue, counters, metrics);
                         match client {
                             Ok(requests) => eprintln!(
                                 "[gparml-serve] client {peer}: {requests} request(s)"
@@ -426,6 +488,7 @@ fn serve_client(
     state: &ServeState,
     queue: &Queue,
     counters: &Counters,
+    metrics: &ServeMetrics,
 ) -> Result<u64> {
     // the listener is nonblocking (accept-loop polling); the accepted
     // socket must not inherit that (it does on some BSDs)
@@ -435,35 +498,54 @@ fn serve_client(
     let mut served = 0u64;
     let mut counted = false;
     loop {
-        let req = match wire::read_frame(&mut stream)? {
+        let (trace_id, req) = match wire::read_frame(&mut stream)? {
             None | Some((Frame::Shutdown, _)) => return Ok(served),
             Some((Frame::Ping, _)) => {
-                count_client(&mut counted, counters);
+                count_client(&mut counted, counters, metrics);
+                metrics.req_ping.inc();
                 wire::write_frame(&mut stream, &Frame::Pong)?;
                 served += 1;
                 counters.requests.fetch_add(1, Ordering::AcqRel);
                 continue;
             }
-            Some((Frame::Request(req), _)) => {
-                count_client(&mut counted, counters);
-                req
+            Some((Frame::Request { trace_id, req }, _)) => {
+                count_client(&mut counted, counters, metrics);
+                (trace_id, req)
             }
             Some((f, _)) => bail!("unexpected frame {f:?} from predict client"),
         };
         match *req {
             Request::ModelInfo => {
+                metrics.req_model_info.inc();
                 let slot = state.current();
-                respond(&mut stream, model_info(&slot))?;
+                respond(&mut stream, trace_id, model_info(&slot))?;
+            }
+            // the live metrics snapshot is answered inline, like
+            // ModelInfo: it must stay readable even when the worker
+            // pool is saturated (that is when you want it most)
+            Request::ServeStats => {
+                metrics.req_stats.inc();
+                let json = metrics.registry.snapshot_json().to_string();
+                respond(&mut stream, trace_id, Response::StatsJson(json))?;
             }
             Request::Reload => match state.reload() {
                 Ok(_) => {
                     let slot = state.current();
                     eprintln!("[gparml-serve] reloaded model (version {})", slot.version);
-                    respond(&mut stream, model_info(&slot))?;
+                    metrics.req_reload.inc();
+                    metrics.reloads.inc();
+                    metrics.model_version.set(slot.version);
+                    obs::trace::event("serve_reload", trace_id, slot.version);
+                    respond(&mut stream, trace_id, model_info(&slot))?;
                 }
                 Err(e) => {
                     eprintln!("[gparml-serve] reload failed, keeping old model: {e:#}");
-                    respond(&mut stream, Response::Err(format!("reload failed: {e:#}")))?;
+                    metrics.req_reload.inc();
+                    respond(
+                        &mut stream,
+                        trace_id,
+                        Response::Err(format!("reload failed: {e:#}")),
+                    )?;
                 }
             },
             // malformed shapes are rejected HERE, before the queue:
@@ -473,8 +555,10 @@ fn serve_client(
             Request::ServePredict { xt_mu, xt_var }
                 if xt_mu.rows() != xt_var.rows() || xt_mu.cols() != xt_var.cols() =>
             {
+                metrics.req_rejected.inc();
                 respond(
                     &mut stream,
+                    trace_id,
                     Response::Err(format!(
                         "ServePredict shapes disagree: xt_mu is {}x{} but xt_var is {}x{}",
                         xt_mu.rows(),
@@ -485,22 +569,35 @@ fn serve_client(
                 )?;
             }
             Request::ServePredict { xt_mu, xt_var } => {
+                metrics.req_predict.inc();
                 compute_request(
                     &mut stream,
                     queue,
+                    metrics,
                     (&reply_tx, &reply_rx),
+                    trace_id,
                     Work::Predict { xt_mu, xt_var },
                 )?;
             }
             Request::ServeProject { y } => {
-                compute_request(&mut stream, queue, (&reply_tx, &reply_rx), Work::Project { y })?;
+                metrics.req_project.inc();
+                compute_request(
+                    &mut stream,
+                    queue,
+                    metrics,
+                    (&reply_tx, &reply_rx),
+                    trace_id,
+                    Work::Project { y },
+                )?;
             }
             ref other => {
+                metrics.req_rejected.inc();
                 respond(
                     &mut stream,
+                    trace_id,
                     Response::Err(format!(
-                        "predict server only answers ServePredict/ServeProject/ModelInfo/Reload, \
-                         got {other:?}"
+                        "predict server only answers ServePredict/ServeProject/ModelInfo/\
+                         Reload/ServeStats, got {other:?}"
                     )),
                 )?;
             }
@@ -516,12 +613,18 @@ fn serve_client(
 fn compute_request(
     stream: &mut TcpStream,
     queue: &Queue,
+    metrics: &ServeMetrics,
     (reply_tx, reply_rx): (&mpsc::Sender<Vec<u8>>, &mpsc::Receiver<Vec<u8>>),
+    trace_id: u64,
     work: Work,
 ) -> Result<()> {
+    let enqueued = Instant::now();
+    obs::trace::event("serve_enqueue", trace_id, work.rows() as u64);
     let queued = queue.push(Job {
         work,
         reply: reply_tx.clone(),
+        trace_id,
+        enqueued,
     });
     if !queued {
         bail!("server is shutting down");
@@ -529,16 +632,20 @@ fn compute_request(
     let bytes = reply_rx
         .recv()
         .context("serve worker pool hung up mid-request")?;
+    let waited_ns = enqueued.elapsed().as_nanos() as u64;
+    metrics.request_ns.record(waited_ns);
     stream.write_all(&bytes).context("writing compute reply")?;
+    obs::trace::event("serve_reply", trace_id, waited_ns);
     Ok(())
 }
 
 /// Count this connection toward `--clients` on its first valid
 /// request-bearing frame (never at accept time).
-fn count_client(counted: &mut bool, counters: &Counters) {
+fn count_client(counted: &mut bool, counters: &Counters, metrics: &ServeMetrics) {
     if !*counted {
         *counted = true;
         counters.clients.fetch_add(1, Ordering::AcqRel);
+        metrics.clients.inc();
     }
 }
 
@@ -551,11 +658,13 @@ fn model_info(slot: &ModelSlot) -> Response {
     }
 }
 
-/// Write a control-path response frame (owned encoding — cold path).
-fn respond(stream: &mut TcpStream, resp: Response) -> Result<()> {
+/// Write a control-path response frame (owned encoding — cold path),
+/// echoing the request's trace id.
+fn respond(stream: &mut TcpStream, trace_id: u64, resp: Response) -> Result<()> {
     wire::write_frame(
         stream,
         &Frame::Response {
+            trace_id,
             secs: 0.0,
             psi_fills: 0,
             resp: Box::new(resp),
@@ -578,7 +687,13 @@ struct WorkerBufs {
     out_vec: Vec<f64>,
 }
 
-fn worker_loop(queue: &Queue, state: &ServeState, opts: &ServeOptions, counters: &Counters) {
+fn worker_loop(
+    queue: &Queue,
+    state: &ServeState,
+    opts: &ServeOptions,
+    counters: &Counters,
+    metrics: &ServeMetrics,
+) {
     let mut bufs = WorkerBufs {
         scratch: PredictScratch::new(),
         cat_a: Matrix::zeros(0, 0),
@@ -591,15 +706,34 @@ fn worker_loop(queue: &Queue, state: &ServeState, opts: &ServeOptions, counters:
         if jobs.is_empty() {
             return; // queue closed and drained
         }
+        // batch-coalescing attribution: the batch span carries the
+        // lead job's trace id; every rider records which batch (by
+        // lead id) it shared a kernel call with
+        let mut batch_span = obs::trace::span("serve_batch", jobs[0].trace_id);
+        batch_span.set_count(jobs.len() as u64);
+        if obs::trace::enabled() {
+            for jb in &jobs {
+                let waited = jb.enqueued.elapsed().as_nanos() as u64;
+                obs::trace::event("serve_dequeue", jb.trace_id, waited);
+            }
+            for jb in &jobs[1..] {
+                obs::trace::event("serve_coalesce", jb.trace_id, jobs[0].trace_id);
+            }
+        }
+        metrics.in_flight_batches.add(1);
         // every batch snapshots the model once: requests already
         // dequeued keep this model even if a reload lands mid-compute
         let slot = state.current();
-        run_group(&jobs, &slot.predictor, &mut bufs);
+        run_group(&jobs, &slot.predictor, &mut bufs, metrics);
+        metrics.in_flight_batches.sub(1);
+        drop(batch_span);
         counters.batches.fetch_add(1, Ordering::AcqRel);
+        metrics.batches.inc();
         if jobs.len() > 1 {
             counters
                 .coalesced_jobs
                 .fetch_add(jobs.len() as u64, Ordering::AcqRel);
+            metrics.coalesced_jobs.add(jobs.len() as u64);
         }
     }
 }
@@ -607,7 +741,9 @@ fn worker_loop(queue: &Queue, state: &ServeState, opts: &ServeOptions, counters:
 /// Evaluate one coalesced group (all same kind + column count) with a
 /// single kernel call and split the outputs back per job. Row windows
 /// of the batch output are encoded borrowed — no per-request clone.
-fn run_group(group: &[Job], predictor: &Predictor, bufs: &mut WorkerBufs) {
+fn run_group(group: &[Job], predictor: &Predictor, bufs: &mut WorkerBufs, metrics: &ServeMetrics) {
+    let mut kernel_span = obs::trace::span("serve_kernel", group[0].trace_id);
+    kernel_span.set_count(group.iter().map(|jb| jb.work.rows() as u64).sum());
     let c0 = thread_cpu_secs();
     let cols = group[0].work.cols();
     let result = match &group[0].work {
@@ -657,6 +793,8 @@ fn run_group(group: &[Job], predictor: &Predictor, bufs: &mut WorkerBufs) {
         }
     };
     let secs = thread_cpu_secs() - c0;
+    drop(kernel_span);
+    metrics.kernel_ns.record((secs * 1e9) as u64);
 
     match result {
         Ok(()) => {
@@ -665,6 +803,7 @@ fn run_group(group: &[Job], predictor: &Predictor, bufs: &mut WorkerBufs) {
                 let t = jb.work.rows();
                 let encoded = match jb.work {
                     Work::Predict { .. } => wire::encode_predict_response(
+                        jb.trace_id,
                         secs,
                         &bufs.out_mat,
                         r0,
@@ -672,6 +811,7 @@ fn run_group(group: &[Job], predictor: &Predictor, bufs: &mut WorkerBufs) {
                         &bufs.out_vec[r0..r0 + t],
                     ),
                     Work::Project { .. } => wire::encode_project_response(
+                        jb.trace_id,
                         secs,
                         &bufs.out_mat,
                         r0,
@@ -688,6 +828,7 @@ fn run_group(group: &[Job], predictor: &Predictor, bufs: &mut WorkerBufs) {
         Err(e) => {
             for jb in group {
                 let frame = Frame::Response {
+                    trace_id: jb.trace_id,
                     secs,
                     psi_fills: 0,
                     resp: Box::new(Response::Err(format!("{e:#}"))),
@@ -707,6 +848,7 @@ fn send_reply(job: &Job, encoded: Result<Vec<u8>>, secs: f64) {
         }
         Err(e) => {
             let frame = Frame::Response {
+                trace_id: job.trace_id,
                 secs,
                 psi_fills: 0,
                 resp: Box::new(Response::Err(format!("encoding reply failed: {e:#}"))),
@@ -740,13 +882,43 @@ pub fn connect(addr: &str) -> Result<TcpStream> {
     Ok(stream)
 }
 
-fn request(stream: &mut TcpStream, req: Request) -> Result<Response> {
-    wire::write_frame(stream, &Frame::Request(Box::new(req)))?;
+/// Send one request stamped with a fresh trace/request id and collect
+/// the response, verifying the server echoed the same id (a mismatch
+/// means a desynced stream — fail loudly, not with wrong data).
+/// Returns the response together with the id, so callers can print it
+/// for cross-process trace correlation (`gparml predict --connect`).
+fn request_traced(stream: &mut TcpStream, req: Request) -> Result<(Response, u64)> {
+    let trace_id = obs::next_trace_id();
+    wire::write_frame(
+        stream,
+        &Frame::Request {
+            trace_id,
+            req: Box::new(req),
+        },
+    )?;
     match wire::read_frame(stream)? {
-        Some((Frame::Response { resp, .. }, _)) => Ok(*resp),
+        Some((
+            Frame::Response {
+                trace_id: echoed,
+                resp,
+                ..
+            },
+            _,
+        )) => {
+            anyhow::ensure!(
+                echoed == trace_id,
+                "predict server echoed request id {echoed:#018x}, expected {trace_id:#018x} \
+                 (desynced stream?)"
+            );
+            Ok((*resp, trace_id))
+        }
         Some((f, _)) => bail!("expected a Response frame, got {f:?}"),
         None => bail!("predict server closed the connection mid-request"),
     }
+}
+
+fn request(stream: &mut TcpStream, req: Request) -> Result<Response> {
+    request_traced(stream, req).map(|(resp, _)| resp)
 }
 
 fn expect_model_info(resp: Response) -> Result<ServedModelInfo> {
@@ -773,6 +945,16 @@ pub fn remote_reload(stream: &mut TcpStream) -> Result<ServedModelInfo> {
     expect_model_info(request(stream, Request::Reload)?)
 }
 
+/// Fetch the server's live metrics snapshot as a JSON document (the
+/// `gparml stats --connect` payload; schema in DESIGN.md §10).
+pub fn remote_stats(stream: &mut TcpStream) -> Result<String> {
+    match request(stream, Request::ServeStats)? {
+        Response::StatsJson(json) => Ok(json),
+        Response::Err(e) => bail!("predict server: {e}"),
+        other => bail!("unexpected ServeStats reply {other:?}"),
+    }
+}
+
 /// Predict a batch remotely. Every f64 crosses the wire bit-for-bit,
 /// so the reply equals a local [`Predictor::predict`] exactly —
 /// whether or not the server micro-batched it with other clients.
@@ -781,7 +963,18 @@ pub fn remote_predict(
     xt_mu: &Matrix,
     xt_var: &Matrix,
 ) -> Result<(Matrix, Vec<f64>)> {
-    let resp = request(
+    remote_predict_traced(stream, xt_mu, xt_var).map(|(mean, var, _)| (mean, var))
+}
+
+/// [`remote_predict`] that also returns the request id the call was
+/// stamped with, so a caller can quote it against the server's
+/// `--trace-out` spans and `gparml stats` counters.
+pub fn remote_predict_traced(
+    stream: &mut TcpStream,
+    xt_mu: &Matrix,
+    xt_var: &Matrix,
+) -> Result<(Matrix, Vec<f64>, u64)> {
+    let (resp, trace_id) = request_traced(
         stream,
         Request::ServePredict {
             xt_mu: xt_mu.clone(),
@@ -789,7 +982,7 @@ pub fn remote_predict(
         },
     )?;
     match resp {
-        Response::Predict { mean, var } => Ok((mean, var)),
+        Response::Predict { mean, var } => Ok((mean, var, trace_id)),
         Response::Err(e) => bail!("predict server: {e}"),
         other => bail!("unexpected predict reply {other:?}"),
     }

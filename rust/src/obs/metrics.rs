@@ -1,0 +1,366 @@
+//! Live metrics: counters, gauges and fixed-bucket log-scale latency
+//! histograms with exact percentile extraction at bucket boundaries.
+//!
+//! Everything here is lock-free on the record path (relaxed atomics);
+//! the only lock is the registry's name map, taken when a metric
+//! handle is first created (callers cache the `Arc` handles) and when
+//! a snapshot is rendered. Histograms use a fixed geometric bucket
+//! ladder shared by every instance: bounds grow by ×19/16 (≈ +18.75%,
+//! integer math, so small values get exact single-value buckets) from
+//! 0 up past 2^62 ns (~146 years) — ~260 buckets, 2 KiB per
+//! histogram. `percentile(q)` reports the upper bound of the bucket
+//! holding the q-quantile observation: exact whenever the recorded
+//! values sit on bucket boundaries, and never more than one bucket
+//! width (≤ 18.75%) high otherwise. Values beyond the top bound
+//! saturate into the last bucket.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::util::json::Json;
+
+/// Monotonically increasing event count.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Instantaneous level (queue depth, model version, heartbeat age...).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Saturating decrement (a late `sub` can never wrap the gauge).
+    pub fn sub(&self, n: u64) {
+        let mut cur = self.0.load(Ordering::Relaxed);
+        loop {
+            let next = cur.saturating_sub(n);
+            match self
+                .0
+                .compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed)
+            {
+                Ok(_) => return,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// The shared geometric bucket ladder: 0, 1, 2, ... then ×19/16 per
+/// step (always advancing by at least 1), ending with the first bound
+/// past 2^62. Built once per process.
+pub fn bucket_bounds() -> &'static [u64] {
+    static BOUNDS: OnceLock<Vec<u64>> = OnceLock::new();
+    BOUNDS.get_or_init(|| {
+        let mut b = vec![0u64];
+        let mut last = 0u64;
+        while last < (1u64 << 62) {
+            let grown = ((last as u128 * 19) / 16) as u64;
+            last = grown.max(last + 1);
+            b.push(last);
+        }
+        b
+    })
+}
+
+/// Fixed-bucket log-scale histogram (latency in ns by convention).
+#[derive(Debug)]
+pub struct Histogram {
+    counts: Box<[AtomicU64]>,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            counts: (0..bucket_bounds().len())
+                .map(|_| AtomicU64::new(0))
+                .collect(),
+        }
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram::default()
+    }
+
+    /// Record one observation (saturates into the top bucket).
+    pub fn record(&self, v: u64) {
+        let bounds = bucket_bounds();
+        // first bucket whose upper bound holds v
+        let idx = bounds.partition_point(|&b| b < v).min(bounds.len() - 1);
+        self.counts[idx].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Total observations recorded.
+    pub fn count(&self) -> u64 {
+        self.counts.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Upper bound of the bucket containing the q-quantile observation
+    /// (q in (0, 1]); `None` when nothing has been recorded. Exact for
+    /// values recorded on bucket boundaries.
+    pub fn percentile(&self, q: f64) -> Option<u64> {
+        let total = self.count();
+        if total == 0 {
+            return None;
+        }
+        let target = ((q * total as f64).ceil() as u64).clamp(1, total);
+        let mut cum = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            cum += c.load(Ordering::Relaxed);
+            if cum >= target {
+                return Some(bucket_bounds()[i]);
+            }
+        }
+        Some(*bucket_bounds().last().unwrap())
+    }
+}
+
+/// A named set of live metrics, shared across threads by `Arc`
+/// handles; `snapshot_json` renders a deterministic (BTreeMap-ordered)
+/// JSON document — the payload of the wire `ServeStats` reply and the
+/// `gparml stats` CLI.
+#[derive(Debug, Default)]
+pub struct Registry {
+    inner: Mutex<Inner>,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    counters: BTreeMap<String, Arc<Counter>>,
+    gauges: BTreeMap<String, Arc<Gauge>>,
+    histograms: BTreeMap<String, Arc<Histogram>>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        let mut g = self.inner.lock().unwrap();
+        g.counters.entry(name.to_string()).or_default().clone()
+    }
+
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        let mut g = self.inner.lock().unwrap();
+        g.gauges.entry(name.to_string()).or_default().clone()
+    }
+
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        let mut g = self.inner.lock().unwrap();
+        g.histograms.entry(name.to_string()).or_default().clone()
+    }
+
+    /// Deterministic snapshot:
+    /// `{"counters":{..},"gauges":{..},"histograms":{name:{count,p50,p90,p99}}}`.
+    /// Percentiles are `null` for empty histograms.
+    pub fn snapshot_json(&self) -> Json {
+        let g = self.inner.lock().unwrap();
+        let num = |v: u64| Json::Num(v as f64);
+        let opt_num = |v: Option<u64>| v.map(|x| Json::Num(x as f64)).unwrap_or(Json::Null);
+        let counters: BTreeMap<String, Json> = g
+            .counters
+            .iter()
+            .map(|(k, c)| (k.clone(), num(c.get())))
+            .collect();
+        let gauges: BTreeMap<String, Json> = g
+            .gauges
+            .iter()
+            .map(|(k, c)| (k.clone(), num(c.get())))
+            .collect();
+        let histograms: BTreeMap<String, Json> = g
+            .histograms
+            .iter()
+            .map(|(k, h)| {
+                let hj: BTreeMap<String, Json> = [
+                    ("count".to_string(), num(h.count())),
+                    ("p50".to_string(), opt_num(h.percentile(0.50))),
+                    ("p90".to_string(), opt_num(h.percentile(0.90))),
+                    ("p99".to_string(), opt_num(h.percentile(0.99))),
+                ]
+                .into_iter()
+                .collect();
+                (k.clone(), Json::Obj(hj))
+            })
+            .collect();
+        Json::Obj(
+            [
+                ("counters".to_string(), Json::Obj(counters)),
+                ("gauges".to_string(), Json::Obj(gauges)),
+                ("histograms".to_string(), Json::Obj(histograms)),
+            ]
+            .into_iter()
+            .collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_ladder_is_strictly_increasing_from_zero() {
+        let b = bucket_bounds();
+        assert_eq!(b[0], 0);
+        assert_eq!(b[1], 1);
+        for w in b.windows(2) {
+            assert!(w[1] > w[0], "bounds not increasing: {} -> {}", w[0], w[1]);
+        }
+        assert!(*b.last().unwrap() >= (1u64 << 62));
+        // the ladder is log-scale: a few hundred buckets cover 2^62
+        assert!(b.len() < 400, "ladder too long: {}", b.len());
+    }
+
+    #[test]
+    fn empty_histogram_has_no_percentiles() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        for q in [0.01, 0.5, 0.9, 0.99, 1.0] {
+            assert_eq!(h.percentile(q), None);
+        }
+    }
+
+    #[test]
+    fn percentiles_are_exact_at_bucket_boundaries() {
+        // a single boundary value recorded repeatedly is reported
+        // exactly at every percentile
+        for &b in &[0u64, 1, 5, 6, 7, 1_000_000] {
+            let bound = *bucket_bounds()
+                .iter()
+                .find(|&&x| x >= b)
+                .expect("bound exists");
+            let h = Histogram::new();
+            for _ in 0..100 {
+                h.record(bound);
+            }
+            for q in [0.5, 0.9, 0.99, 1.0] {
+                assert_eq!(h.percentile(q), Some(bound), "q={q} bound={bound}");
+            }
+        }
+        // small values (the +1 ramp of the ladder) are ALWAYS exact
+        let h = Histogram::new();
+        for v in 0..=6u64 {
+            h.record(v);
+        }
+        assert_eq!(h.percentile(1.0 / 7.0), Some(0));
+        assert_eq!(h.percentile(0.5), Some(3));
+        assert_eq!(h.percentile(1.0), Some(6));
+    }
+
+    #[test]
+    fn tail_percentiles_split_a_bimodal_distribution() {
+        let h = Histogram::new();
+        let fast = 1u64; // exact bucket
+        let slow = *bucket_bounds().iter().find(|&&x| x >= 1_000_000).unwrap();
+        for _ in 0..90 {
+            h.record(fast);
+        }
+        for _ in 0..10 {
+            h.record(slow);
+        }
+        assert_eq!(h.count(), 100);
+        assert_eq!(h.percentile(0.5), Some(fast));
+        assert_eq!(h.percentile(0.90), Some(fast));
+        assert_eq!(h.percentile(0.99), Some(slow));
+    }
+
+    #[test]
+    fn top_bucket_saturates() {
+        let h = Histogram::new();
+        h.record(u64::MAX);
+        h.record(u64::MAX - 1);
+        let top = *bucket_bounds().last().unwrap();
+        assert_eq!(h.percentile(0.5), Some(top));
+        assert_eq!(h.percentile(1.0), Some(top));
+        assert_eq!(h.count(), 2);
+    }
+
+    #[test]
+    fn percentiles_are_monotone_in_q() {
+        let h = Histogram::new();
+        let mut v = 3u64;
+        for _ in 0..1000 {
+            v = v.wrapping_mul(6364136223846793005).wrapping_add(1);
+            h.record(v >> 40); // spread over ~2^24
+        }
+        let mut last = 0;
+        for q in [0.1, 0.25, 0.5, 0.75, 0.9, 0.99, 1.0] {
+            let p = h.percentile(q).unwrap();
+            assert!(p >= last, "percentile dropped at q={q}: {p} < {last}");
+            last = p;
+        }
+    }
+
+    #[test]
+    fn registry_snapshot_is_deterministic_json() {
+        let r = Registry::new();
+        r.counter("requests").add(7);
+        r.counter("requests").inc(); // same handle by name
+        r.gauge("queue_depth").set(3);
+        r.gauge("queue_depth").sub(5); // saturates at 0
+        r.histogram("request_ns").record(6);
+        let j = r.snapshot_json();
+        let text = j.to_string();
+        let parsed = Json::parse(&text).unwrap();
+        assert_eq!(parsed, j);
+        assert_eq!(
+            parsed
+                .get("counters")
+                .unwrap()
+                .get("requests")
+                .unwrap()
+                .as_usize()
+                .unwrap(),
+            8
+        );
+        assert_eq!(
+            parsed
+                .get("gauges")
+                .unwrap()
+                .get("queue_depth")
+                .unwrap()
+                .as_usize()
+                .unwrap(),
+            0
+        );
+        let hist = parsed.get("histograms").unwrap().get("request_ns").unwrap();
+        assert_eq!(hist.get("count").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(hist.get("p50").unwrap().as_usize().unwrap(), 6);
+        // empty histograms render null percentiles
+        let r2 = Registry::new();
+        r2.histogram("empty_ns");
+        let j2 = r2.snapshot_json();
+        assert_eq!(
+            j2.get("histograms").unwrap().get("empty_ns").unwrap().get("p50").unwrap(),
+            &Json::Null
+        );
+    }
+}

@@ -1,0 +1,56 @@
+//! Unified observability layer (DESIGN.md §10): structured
+//! tracing with wire-propagated span context ([`trace`]) and a live
+//! metrics registry with tail-latency histograms ([`metrics`]).
+//!
+//! Three layers:
+//! 1. [`trace`] — lock-cheap span/event recorder with a JSONL sink
+//!    (`--trace-out FILE`), monotonic timestamps, per-thread format
+//!    buffers. Near-free (one relaxed atomic load) when disabled.
+//! 2. Wire-propagated context — every leader→worker frame and serve
+//!    request carries a u64 trace/request id (wire v6); workers echo
+//!    it and tag their own spans with it, so one id follows a request
+//!    across processes.
+//! 3. [`metrics`] — counters, gauges and log-scale latency histograms
+//!    with exact-at-boundary p50/p90/p99 extraction, aggregated in the
+//!    serve worker pool and trainer, exposed over the `ServeStats`
+//!    control frame and the `gparml stats --connect` CLI.
+
+pub mod metrics;
+pub mod trace;
+
+pub use metrics::{Counter, Gauge, Histogram, Registry};
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
+use std::time::{SystemTime, UNIX_EPOCH};
+
+/// A fresh (process-unique, time-seeded) trace/request id for a
+/// client-originated request. Ids only need to be distinct within the
+/// window one server observes, not cryptographically unique.
+pub fn next_trace_id() -> u64 {
+    static COUNTER: AtomicU64 = AtomicU64::new(0);
+    static BASE: OnceLock<u64> = OnceLock::new();
+    let base = *BASE.get_or_init(|| {
+        let nanos = SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .map(|d| d.as_nanos() as u64)
+            .unwrap_or(0);
+        // spread pid into the high bits so concurrent clients started
+        // the same nanosecond still diverge
+        (nanos ^ ((std::process::id() as u64) << 40)) | 1
+    });
+    base.wrapping_add(COUNTER.fetch_add(1, Ordering::Relaxed))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_ids_are_distinct_and_nonzero() {
+        let a = next_trace_id();
+        let b = next_trace_id();
+        assert_ne!(a, b);
+        assert_ne!(a, 0);
+    }
+}

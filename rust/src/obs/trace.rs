@@ -1,0 +1,189 @@
+//! Structured event/span recorder with a JSONL sink.
+//!
+//! Disabled (the default) the whole layer is one relaxed atomic load
+//! per call site — provably near-free on the strict hot path (gated by
+//! `bench psi`'s `traced_eval` series). Enabled (`--trace-out FILE`),
+//! each span/event formats one JSON line into a per-thread buffer
+//! (no allocation after warm-up, no lock held while formatting) and
+//! appends it to a shared `BufWriter` under a short mutex.
+//!
+//! Record schema (one JSON object per line):
+//! `{"ev":"span"|"event","name":...,"id":<u64 trace id>,"ts_ns":<since
+//! process trace epoch>,"tid":<small per-thread ordinal>}` plus
+//! `"dur_ns"` for spans and an optional `"n"` payload for events
+//! (batch sizes, psi-fill counts). Timestamps are monotonic
+//! (`Instant`-based), never wall-clock.
+//!
+//! The trace id is wire-propagated (DESIGN.md §10): training spans are
+//! tagged with the evaluation version, serve spans with the client's
+//! request id, so one id follows a request across processes.
+
+use std::cell::RefCell;
+use std::fmt::Write as _;
+use std::fs::File;
+use std::io::{BufWriter, Write as _};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static SINK: Mutex<Option<BufWriter<File>>> = Mutex::new(None);
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+/// Ambient trace id for code that sits below the call site that knows
+/// the id (the TCP backend stamping leader->worker frames). Set by the
+/// trainer at the start of each evaluation.
+static CURRENT: AtomicU64 = AtomicU64::new(0);
+
+/// Start recording to `path` (truncates). Idempotent re-init swaps the
+/// sink atomically; records from other threads land in one file or the
+/// other, never interleaved mid-line.
+pub fn init(path: &Path) -> Result<()> {
+    let f = File::create(path)
+        .with_context(|| format!("creating trace sink {}", path.display()))?;
+    EPOCH.get_or_init(Instant::now);
+    let mut g = SINK.lock().unwrap();
+    if let Some(mut old) = g.replace(BufWriter::new(f)) {
+        let _ = old.flush();
+    }
+    drop(g);
+    ENABLED.store(true, Ordering::SeqCst);
+    Ok(())
+}
+
+/// Stop recording and flush+close the sink.
+pub fn disable() {
+    ENABLED.store(false, Ordering::SeqCst);
+    if let Ok(mut g) = SINK.lock() {
+        if let Some(mut w) = g.take() {
+            let _ = w.flush();
+        }
+    }
+}
+
+/// Is the recorder on? One relaxed load — the only cost a disabled
+/// call site ever pays.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Flush buffered records to disk (call before process exit; the
+/// static sink is never dropped).
+pub fn flush() {
+    if let Ok(mut g) = SINK.lock() {
+        if let Some(w) = g.as_mut() {
+            let _ = w.flush();
+        }
+    }
+}
+
+/// Set the ambient trace id (see [`current`]).
+pub fn set_current(id: u64) {
+    CURRENT.store(id, Ordering::Relaxed);
+}
+
+/// The ambient trace id last set by [`set_current`].
+pub fn current() -> u64 {
+    CURRENT.load(Ordering::Relaxed)
+}
+
+fn now_ns() -> u64 {
+    EPOCH.get_or_init(Instant::now).elapsed().as_nanos() as u64
+}
+
+/// Small dense per-thread ordinal (stable within the process).
+fn thread_ordinal() -> u64 {
+    static NEXT: AtomicU64 = AtomicU64::new(1);
+    thread_local! {
+        static ID: u64 = NEXT.fetch_add(1, Ordering::Relaxed);
+    }
+    ID.with(|i| *i)
+}
+
+fn write_line(ev: &str, name: &str, id: u64, ts_ns: u64, dur_ns: Option<u64>, n: Option<u64>) {
+    thread_local! {
+        static BUF: RefCell<String> = RefCell::new(String::with_capacity(192));
+    }
+    BUF.with(|b| {
+        let Ok(mut s) = b.try_borrow_mut() else {
+            return; // re-entrant tracing: drop the inner record
+        };
+        s.clear();
+        let _ = write!(
+            s,
+            "{{\"ev\":\"{ev}\",\"name\":\"{name}\",\"id\":{id},\"ts_ns\":{ts_ns},\"tid\":{}",
+            thread_ordinal()
+        );
+        if let Some(d) = dur_ns {
+            let _ = write!(s, ",\"dur_ns\":{d}");
+        }
+        if let Some(n) = n {
+            let _ = write!(s, ",\"n\":{n}");
+        }
+        s.push_str("}\n");
+        if let Ok(mut g) = SINK.lock() {
+            if let Some(w) = g.as_mut() {
+                let _ = w.write_all(s.as_bytes());
+            }
+        }
+    });
+}
+
+/// Record a point event tagged with `trace_id`; `n` is a free payload
+/// (batch size, psi-fill count, ...).
+pub fn event(name: &str, trace_id: u64, n: u64) {
+    if !enabled() {
+        return;
+    }
+    write_line("event", name, trace_id, now_ns(), None, Some(n));
+}
+
+/// An open span: records `{name, id, ts_ns, dur_ns}` when dropped.
+/// When tracing is disabled at open time the guard is inert (a single
+/// atomic load each at open and drop).
+#[must_use]
+pub struct Span {
+    name: &'static str,
+    trace_id: u64,
+    start_ns: Option<u64>,
+    count: Option<u64>,
+}
+
+impl Span {
+    /// Number of items the span covered (written as `"n"` on drop).
+    pub fn set_count(&mut self, n: u64) {
+        self.count = Some(n);
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if let Some(t0) = self.start_ns {
+            if enabled() {
+                let t1 = now_ns();
+                write_line(
+                    "span",
+                    self.name,
+                    self.trace_id,
+                    t0,
+                    Some(t1.saturating_sub(t0)),
+                    self.count,
+                );
+            }
+        }
+    }
+}
+
+/// Open a span tagged with `trace_id`.
+pub fn span(name: &'static str, trace_id: u64) -> Span {
+    Span {
+        name,
+        trace_id,
+        start_ns: enabled().then(now_ns),
+        count: None,
+    }
+}

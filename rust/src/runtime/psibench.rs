@@ -10,6 +10,12 @@
 //! regression on any series, or on Fast being slower than Strict —
 //! turning the perf trajectory into an enforced gate instead of a
 //! number nobody reads (DESIGN.md §8).
+//!
+//! The `traced_eval` series re-runs the strict cached evaluation with
+//! the `obs::trace` JSONL sink live and a span per evaluation — the
+//! observability overhead guard (DESIGN.md §10): it must stay within
+//! the normal `--max-regress` budget of its baseline AND of the
+//! untraced `eval_cached` series from the same report.
 
 use std::path::{Path, PathBuf};
 
@@ -174,6 +180,28 @@ fn measure(args: &Args) -> Result<PsiReport> {
         let g = exec.shard_grads(&params, &shard, &adj).unwrap();
         (st, g)
     });
+    // the same cached evaluation with the trace sink LIVE and a span
+    // per rep — the obs overhead guard. Uses a private temp sink (this
+    // replaces any `--trace-out` sink; bench exits right after anyway)
+    // and disables tracing again so later series measure the one-load
+    // disabled path.
+    let trace_path = std::env::temp_dir().join(format!(
+        "gparml-bench-trace-{}.jsonl",
+        std::process::id()
+    ));
+    crate::obs::trace::init(&trace_path)
+        .with_context(|| format!("opening bench trace sink {}", trace_path.display()))?;
+    let eval_traced = bench("eval traced (strict, sink live)", 1, reps, || {
+        version += 1;
+        let mut sp = crate::obs::trace::span("bench_eval", version);
+        let tok = exec.begin_eval(version);
+        let st = exec.shard_stats_cached(&tok, &params, &shard).unwrap();
+        let g = exec.shard_grads_cached(&tok, &params, &shard, &adj).unwrap();
+        sp.set_count(b as u64);
+        (st, g)
+    });
+    crate::obs::trace::disable();
+    let _ = std::fs::remove_file(&trace_path);
 
     // per-round series: the statistics round (identical work in both
     // modes modulo the slab writes), a gradient round reusing a warm
@@ -238,6 +266,7 @@ fn measure(args: &Args) -> Result<PsiReport> {
         ("grads_nocache_ns_per_point", per_point(grads_nocache.median_s)),
         ("eval_cached_ns_per_point", per_point(eval_cached.median_s)),
         ("eval_nocache_ns_per_point", per_point(eval_nocache.median_s)),
+        ("traced_eval_ns_per_point", per_point(eval_traced.median_s)),
     ];
     let mut speedup_fast = None;
     if let Some((eval_fast, fast_stats, fast_grads)) = &fast {
@@ -290,17 +319,24 @@ pub fn check(args: &Args) -> Result<()> {
     for f in &failures {
         eprintln!("bench check FAILED: {f}");
     }
+    // name every offender in the final error too: CI logs often show
+    // only the last line, and "3 regressions" without WHICH series and
+    // against WHAT baseline value is undebuggable from a red check
     bail!(
-        "{} bench regression(s) against {baseline_path} (budget {:.0}%)",
+        "{} bench regression(s) against {baseline_path} (budget {:.0}%): {}",
         failures.len(),
-        max_regress * 100.0
+        max_regress * 100.0,
+        failures.join("; ")
     )
 }
 
 /// The pure gate: every `*_ns_per_point` series in the baseline must be
 /// present in the current report and within `(1 + max_regress)` of the
-/// baseline value, and the current Fast evaluation must not be slower
-/// than the current Strict one. Returns the list of violations.
+/// baseline value; the current Fast evaluation must not be slower than
+/// the current Strict one; and the current traced evaluation must stay
+/// within `(1 + max_regress)` of the current untraced one (the obs
+/// overhead guard, compared in-report so machine speed cancels out).
+/// Returns the list of violations.
 fn gate(baseline: &Json, current: &Json, max_regress: f64) -> Result<Vec<String>> {
     let mut fails = Vec::new();
     for (key, bv) in baseline.as_obj()? {
@@ -309,7 +345,9 @@ fn gate(baseline: &Json, current: &Json, max_regress: f64) -> Result<Vec<String>
         }
         let base = bv.as_f64()?;
         let Some(cv) = current.opt(key) else {
-            fails.push(format!("series {key} is missing from the current report"));
+            fails.push(format!(
+                "series {key} (baseline {base:.1} ns/point) is missing from the current report"
+            ));
             continue;
         };
         let cur = cv.as_f64()?;
@@ -334,6 +372,19 @@ fn gate(baseline: &Json, current: &Json, max_regress: f64) -> Result<Vec<String>
             }
         }
         _ => fails.push("current report is missing the fast-vs-strict series".to_string()),
+    }
+    if let (Some(t), Some(s)) = (
+        current.opt("traced_eval_ns_per_point"),
+        current.opt("eval_cached_ns_per_point"),
+    ) {
+        let (t, s) = (t.as_f64()?, s.as_f64()?);
+        if t > s * (1.0 + max_regress) {
+            fails.push(format!(
+                "traced eval ({t:.1} ns/point) exceeds untraced eval_cached \
+                 ({s:.1} ns/point) by more than {:.0}% — tracing overhead regression",
+                max_regress * 100.0
+            ));
+        }
     }
     Ok(fails)
 }
@@ -379,6 +430,31 @@ mod tests {
         let fails = gate(&base, &cur, 0.25).unwrap();
         assert_eq!(fails.len(), 1, "{fails:?}");
         assert!(fails[0].contains("slower than strict"));
+    }
+
+    #[test]
+    fn gate_flags_tracing_overhead_and_names_baseline_in_missing() {
+        // traced eval more than budget over the in-report untraced eval
+        let base = j(r#"{"stats_ns_per_point": 100.0, "traced_eval_ns_per_point": 100.0}"#);
+        let cur = j(
+            r#"{"stats_ns_per_point": 90.0, "fast_eval_ns_per_point": 50.0,
+                "eval_cached_ns_per_point": 80.0, "traced_eval_ns_per_point": 101.0}"#,
+        );
+        let fails = gate(&base, &cur, 0.25).unwrap();
+        assert_eq!(fails.len(), 1, "{fails:?}");
+        assert!(fails[0].contains("tracing overhead"), "{fails:?}");
+
+        // a missing series names its baseline value in the failure
+        let cur = j(
+            r#"{"stats_ns_per_point": 90.0, "fast_eval_ns_per_point": 50.0,
+                "eval_cached_ns_per_point": 80.0}"#,
+        );
+        let fails = gate(&base, &cur, 0.25).unwrap();
+        assert_eq!(fails.len(), 1, "{fails:?}");
+        assert!(
+            fails[0].contains("traced_eval_ns_per_point") && fails[0].contains("100.0"),
+            "missing-series failure must name the series and baseline value: {fails:?}"
+        );
     }
 
     #[test]
@@ -443,6 +519,7 @@ mod tests {
             "grads_nocache_ns_per_point",
             "eval_cached_ns_per_point",
             "eval_nocache_ns_per_point",
+            "traced_eval_ns_per_point",
             "fast_stats_ns_per_point",
             "fast_grads_cached_ns_per_point",
             "fast_eval_ns_per_point",

@@ -1,0 +1,280 @@
+//! End-to-end tests of the observability layer (DESIGN.md §10): the
+//! trace JSONL sink emits parseable records with the documented schema,
+//! a client-issued request id round-trips through the wire protocol
+//! into server-side spans, the `ServeStats` control frame reports
+//! request counts that match the requests actually issued, and strict
+//! training stays bit-identical with tracing enabled.
+
+use std::net::TcpListener;
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+use gparml::coordinator::{partition, GlobalOpt, ModelKind, TrainConfig, Trainer};
+use gparml::gp::GlobalParams;
+use gparml::linalg::Matrix;
+use gparml::model::{serve, Predictor, ServeOptions, ServeState, TrainedModel};
+use gparml::obs;
+use gparml::util::json::Json;
+use gparml::util::rng::Rng;
+
+/// The trace recorder is process-global; tests that enable it must not
+/// overlap (cargo runs tests in this binary on parallel threads).
+static TRACE_LOCK: Mutex<()> = Mutex::new(());
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn tmp_path(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("gparml_obs_{}_{name}", std::process::id()))
+}
+
+fn regression_data(n: usize, seed: u64) -> (Matrix, Matrix, Matrix) {
+    let mut rng = Rng::new(seed);
+    let xmu = Matrix::from_fn(n, 2, |_, _| rng.range(-2.0, 2.0));
+    let xvar = Matrix::zeros(n, 2);
+    let y = Matrix::from_fn(n, 3, |i, j| {
+        let x = xmu[(i, 0)];
+        let f = match j {
+            0 => x.sin(),
+            1 => (1.3 * x).cos(),
+            _ => 0.5 * x,
+        };
+        f + 0.05 * rng.normal()
+    });
+    (xmu, xvar, y)
+}
+
+/// Train a tiny strict regression cluster and export its model.
+fn train_and_export(seed: u64, iters: usize) -> TrainedModel {
+    let (xmu, xvar, y) = regression_data(60, seed);
+    let shards = partition(&xmu, &xvar, &y, 0.0, 2);
+    let mut rng = Rng::new(seed + 1);
+    let params = GlobalParams {
+        z: Matrix::from_fn(8, 2, |_, _| rng.range(-2.0, 2.0)),
+        log_ls: vec![0.0, 0.0],
+        log_sf2: 0.0,
+        log_beta: 1.0,
+    };
+    let cfg = TrainConfig {
+        artifact: "test".into(),
+        artifacts_dir: artifacts_dir(),
+        workers: 2,
+        model: ModelKind::Regression,
+        global_opt: GlobalOpt::Scg,
+        seed: 1,
+        ..Default::default()
+    };
+    let mut t = Trainer::new(cfg, params, shards).unwrap();
+    t.train(iters).unwrap();
+    t.export_model().unwrap()
+}
+
+fn assert_bits_eq(a: &[f64], b: &[f64], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: diverged at {i}: {x} vs {y}");
+    }
+}
+
+/// Parse every line of a trace file; each record must carry the
+/// documented schema keys. Returns the parsed records.
+fn read_trace(path: &std::path::Path) -> Vec<Json> {
+    let text = std::fs::read_to_string(path).expect("reading trace file");
+    text.lines()
+        .map(|line| {
+            let rec = Json::parse(line)
+                .unwrap_or_else(|e| panic!("trace line is not JSON: {e:#}\n{line}"));
+            let ev = rec.get("ev").unwrap().as_str().unwrap().to_string();
+            assert!(
+                ev == "span" || ev == "event",
+                "unknown record kind {ev:?}: {line}"
+            );
+            rec.get("name").unwrap().as_str().unwrap();
+            rec.get("id").unwrap().as_f64().unwrap();
+            rec.get("ts_ns").unwrap().as_f64().unwrap();
+            rec.get("tid").unwrap().as_f64().unwrap();
+            if ev == "span" {
+                rec.get("dur_ns").unwrap().as_f64().unwrap();
+            }
+            rec
+        })
+        .collect()
+}
+
+fn has_record(records: &[Json], name: &str, id: Option<u64>) -> bool {
+    records.iter().any(|r| {
+        let name_ok = r.opt("name").and_then(|n| n.as_str().ok()) == Some(name);
+        let id_ok = match id {
+            None => true,
+            Some(want) => r.opt("id").and_then(|v| v.as_f64().ok()) == Some(want as f64),
+        };
+        name_ok && id_ok
+    })
+}
+
+/// Strict training must be bit-identical with tracing enabled, and the
+/// trace it writes must be schema-valid JSONL containing the training
+/// span taxonomy tagged with evaluation versions.
+#[test]
+fn strict_training_is_bit_identical_under_tracing_and_trace_is_valid() {
+    let plain = train_and_export(11, 3);
+
+    let _g = TRACE_LOCK.lock().unwrap();
+    let path = tmp_path("train_trace.jsonl");
+    obs::trace::init(&path).unwrap();
+    let traced = train_and_export(11, 3);
+    obs::trace::disable();
+
+    assert_bits_eq(
+        plain.weights.qu_mean.data(),
+        traced.weights.qu_mean.data(),
+        "qu_mean",
+    );
+    assert_bits_eq(
+        plain.weights.qu_cov.data(),
+        traced.weights.qu_cov.data(),
+        "qu_cov",
+    );
+    assert_bits_eq(plain.weights.w1.data(), traced.weights.w1.data(), "w1");
+    assert_eq!(
+        plain.meta.final_bound.to_bits(),
+        traced.meta.final_bound.to_bits(),
+        "final bound diverged under tracing: {} vs {}",
+        plain.meta.final_bound,
+        traced.meta.final_bound
+    );
+
+    let records = read_trace(&path);
+    assert!(!records.is_empty(), "traced training wrote no records");
+    for name in ["stats_round", "grads_round", "global_step"] {
+        assert!(
+            has_record(&records, name, None),
+            "trace is missing the {name} span"
+        );
+    }
+    // rounds are tagged with the (1-based) evaluation version
+    assert!(
+        has_record(&records, "stats_round", Some(1)),
+        "first stats round should carry evaluation version 1"
+    );
+    let _ = std::fs::remove_file(&path);
+}
+
+/// A live server answers `ServeStats` inline with request counts that
+/// match the requests issued, queue/model gauges, and a populated
+/// request-latency histogram.
+#[test]
+fn serve_stats_snapshot_matches_issued_requests() {
+    let model = train_and_export(23, 2);
+    let state = ServeState::new(Predictor::new(&model).unwrap());
+    let opts = ServeOptions {
+        max_clients: 1,
+        workers: 1,
+        max_batch_rows: 4096,
+    };
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+
+    let mut rng = Rng::new(5);
+    let xt_mu = Matrix::from_fn(16, 2, |_, _| rng.range(-2.0, 2.0));
+    let xt_var = Matrix::from_fn(16, 2, |_, _| 0.05 * rng.uniform());
+
+    const PREDICTS: usize = 3;
+    let snapshot = std::thread::scope(|s| {
+        let server = s.spawn(|| serve::serve(&listener, &state, &opts).unwrap());
+        let mut stream = serve::connect(&addr).unwrap();
+        serve::remote_model_info(&mut stream).unwrap();
+        for _ in 0..PREDICTS {
+            serve::remote_predict(&mut stream, &xt_mu, &xt_var).unwrap();
+        }
+        let snapshot = serve::remote_stats(&mut stream).unwrap();
+        serve::hangup(&mut stream);
+        server.join().unwrap();
+        snapshot
+    });
+
+    let json = Json::parse(&snapshot).expect("stats snapshot is JSON");
+    let counters = json.get("counters").unwrap().as_obj().unwrap().clone();
+    let counter = |name: &str| -> f64 {
+        counters
+            .get(name)
+            .unwrap_or_else(|| panic!("snapshot missing counter {name}"))
+            .as_f64()
+            .unwrap()
+    };
+    assert_eq!(counter("serve.requests.predict"), PREDICTS as f64);
+    assert_eq!(counter("serve.requests.model_info"), 1.0);
+    // the scrape itself is counted before the snapshot is taken
+    assert_eq!(counter("serve.requests.stats"), 1.0);
+    assert!(counter("serve.batches") >= 1.0);
+
+    let gauges = json.get("gauges").unwrap().as_obj().unwrap().clone();
+    assert_eq!(gauges["serve.model_version"].as_f64().unwrap(), 1.0);
+    assert_eq!(gauges["serve.queue_depth"].as_f64().unwrap(), 0.0);
+
+    let hist = json
+        .get("histograms")
+        .unwrap()
+        .get("serve.request_ns")
+        .unwrap()
+        .clone();
+    assert_eq!(
+        hist.get("count").unwrap().as_f64().unwrap(),
+        PREDICTS as f64,
+        "every predict should land one request-latency sample"
+    );
+    assert!(
+        hist.get("p50").unwrap().as_f64().unwrap() > 0.0,
+        "non-empty histogram must report p50"
+    );
+}
+
+/// The acceptance criterion: a single request id issued by the client
+/// side of `gparml predict --connect` is traceable end-to-end — the id
+/// returned by `remote_predict_traced` shows up on the server's
+/// enqueue/reply events and batch span after crossing a real TCP
+/// round-trip through the v6 wire codec.
+#[test]
+fn client_request_id_round_trips_into_server_spans() {
+    let model = train_and_export(31, 2);
+    let state = ServeState::new(Predictor::new(&model).unwrap());
+    let opts = ServeOptions {
+        max_clients: 1,
+        workers: 1,
+        max_batch_rows: 4096,
+    };
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+
+    let mut rng = Rng::new(6);
+    let xt_mu = Matrix::from_fn(8, 2, |_, _| rng.range(-2.0, 2.0));
+    let xt_var = Matrix::from_fn(8, 2, |_, _| 0.05 * rng.uniform());
+
+    let _g = TRACE_LOCK.lock().unwrap();
+    let path = tmp_path("serve_trace.jsonl");
+    obs::trace::init(&path).unwrap();
+    let trace_id = std::thread::scope(|s| {
+        let server = s.spawn(|| serve::serve(&listener, &state, &opts).unwrap());
+        let mut stream = serve::connect(&addr).unwrap();
+        let (_, _, trace_id) = serve::remote_predict_traced(&mut stream, &xt_mu, &xt_var).unwrap();
+        serve::hangup(&mut stream);
+        server.join().unwrap();
+        trace_id
+    });
+    obs::trace::disable();
+
+    assert_ne!(trace_id, 0, "client must mint a non-zero request id");
+    let records = read_trace(&path);
+    for name in ["serve_enqueue", "serve_reply"] {
+        assert!(
+            has_record(&records, name, Some(trace_id)),
+            "server trace has no {name} event for request {trace_id:#x}"
+        );
+    }
+    assert!(
+        has_record(&records, "serve_batch", Some(trace_id)),
+        "the kernel batch span should be tagged with the lead request id"
+    );
+    let _ = std::fs::remove_file(&path);
+}

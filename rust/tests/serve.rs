@@ -128,10 +128,13 @@ fn micro_batched_replies_are_bitwise_under_six_concurrent_clients() {
             // clients: their requests land while the worker is busy
             wire::write_frame(
                 &mut stream,
-                &Frame::Request(Box::new(Request::ServePredict {
-                    xt_mu: heavy_mu.clone(),
-                    xt_var: heavy_var.clone(),
-                })),
+                &Frame::Request {
+                    trace_id: 0x8EA7_1D,
+                    req: Box::new(Request::ServePredict {
+                        xt_mu: heavy_mu.clone(),
+                        xt_var: heavy_var.clone(),
+                    }),
+                },
             )
             .unwrap();
             sent_tx.send(()).unwrap();
@@ -222,10 +225,13 @@ fn misbehaving_clients_neither_kill_the_server_nor_consume_slots() {
         drop(garbage);
         // (c) death mid-frame: half a valid request, then gone — a
         // truncated frame, no slot
-        let frame = wire::encode_frame(&Frame::Request(Box::new(Request::ServePredict {
-            xt_mu: xt_mu.clone(),
-            xt_var: xt_var.clone(),
-        })))
+        let frame = wire::encode_frame(&Frame::Request {
+            trace_id: 7,
+            req: Box::new(Request::ServePredict {
+                xt_mu: xt_mu.clone(),
+                xt_var: xt_var.clone(),
+            }),
+        })
         .unwrap();
         let mut half = TcpStream::connect(&addr).unwrap();
         half.write_all(&frame[..frame.len() / 2]).unwrap();
@@ -245,10 +251,13 @@ fn misbehaving_clients_neither_kill_the_server_nor_consume_slots() {
         // never reach the batch concatenation)
         wire::write_frame(
             &mut stream,
-            &Frame::Request(Box::new(Request::ServePredict {
-                xt_mu: xt_mu.clone(),
-                xt_var: Matrix::zeros(3, 2),
-            })),
+            &Frame::Request {
+                trace_id: 9,
+                req: Box::new(Request::ServePredict {
+                    xt_mu: xt_mu.clone(),
+                    xt_var: Matrix::zeros(3, 2),
+                }),
+            },
         )
         .unwrap();
         match wire::read_frame(&mut stream).unwrap() {
