@@ -19,6 +19,7 @@
 //! ```sh
 //! cargo run --release --example e2e_distributed -- \
 //!     [--n 20000] [--workers 8] [--iters 20] [--model lvm|reg] [--cluster tcp]
+//!     [--fill-threads N]
 //! ```
 
 use std::net::TcpListener;
@@ -42,7 +43,7 @@ fn main() -> Result<()> {
     // binary into a cluster node (used by `--cluster tcp` below)
     if let Some(addr) = args.get("worker-connect") {
         let artifacts = gparml::runtime::default_artifacts_dir();
-        gparml::cluster::node::run_worker_connect(addr, &artifacts, None, None)?;
+        gparml::cluster::node::run_worker_connect(addr, &artifacts, None, None, None)?;
         return Ok(());
     }
 
@@ -57,6 +58,9 @@ fn main() -> Result<()> {
     let seed = args.get_usize("seed", 0)? as u64;
     let lvm = args.get_str("model", "reg") == "lvm";
     let tcp = args.get_str("cluster", "threads") == "tcp";
+    // `--fill-threads N`: intra-worker psi-fill parallelism (DESIGN.md
+    // §11) — bit-identical at any value, negotiated in the Init frame
+    let fill_threads = args.get_usize("fill-threads", 1)?.max(1);
 
     println!("=== gparml end-to-end driver ===");
     println!("dataset : {n} points, 1D latent -> 3D observations (paper §4.2)");
@@ -116,6 +120,7 @@ fn main() -> Result<()> {
         workers,
         model: if lvm { ModelKind::Lvm } else { ModelKind::Regression },
         global_opt: GlobalOpt::Scg,
+        fill_threads,
         seed,
         ..Default::default()
     };

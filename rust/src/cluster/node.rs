@@ -21,7 +21,7 @@ use crate::gp::MathMode;
 use crate::linalg::Matrix;
 use crate::obs;
 use crate::optim::Adam;
-use crate::runtime::{build_executor_mode, ShardData, ShardExecutor};
+use crate::runtime::{build_executor_threads, ShardData, ShardExecutor};
 use crate::util::timer::thread_cpu_secs;
 
 use super::wire::{self, Frame, Init, Request, Response};
@@ -49,7 +49,10 @@ impl WorkerNode {
     /// `artifacts_dir`. The executor is built under the cluster-wide
     /// `Init.math_mode`; fast mode without the psi cache is rejected
     /// (the forced-fresh path exists to pin the strict reference trace,
-    /// so it has no fast variant — DESIGN.md §8).
+    /// so it has no fast variant — DESIGN.md §8). The cluster-wide
+    /// `Init.fill_threads` (v7) selects the intra-worker psi-fill
+    /// parallelism; 0 is rejected (the wire decoder already refuses it,
+    /// this guards in-process construction too).
     pub fn build(init: &Init, artifacts_dir: &Path) -> Result<WorkerNode> {
         ensure!(
             init.psi_cache || init.math_mode == MathMode::Strict,
@@ -57,7 +60,17 @@ impl WorkerNode {
              forced-fresh reference)",
             init.math_mode
         );
-        let exec = build_executor_mode(&init.artifact, artifacts_dir, init.math_mode)?;
+        ensure!(
+            init.fill_threads >= 1,
+            "fill_threads must be >= 1 (got {})",
+            init.fill_threads
+        );
+        let exec = build_executor_threads(
+            &init.artifact,
+            artifacts_dir,
+            init.math_mode,
+            init.fill_threads as usize,
+        )?;
         let shard = init.shard.clone();
         let dof = shard.xmu.rows() * shard.xmu.cols();
         Ok(WorkerNode {
@@ -232,6 +245,13 @@ impl WorkerNode {
 /// mixed-mode cluster fails loudly at bring-up on the leader
 /// (`None` accepts whatever mode the leader negotiates).
 ///
+/// `pinned_fill_threads` is the same bring-up guard for the v7
+/// intra-worker psi-fill parallelism (`gparml worker --fill-threads N`):
+/// an `Init` negotiating a different thread count is rejected. Unlike
+/// `math_mode` a mismatch would still be bit-identical (DESIGN.md §11)
+/// — the pin exists so a capacity plan ("this box runs 4 fill threads")
+/// cannot be silently overridden by a leader config.
+///
 /// `heartbeat_ms` (`gparml worker --heartbeat-ms`) is the worker-side
 /// leader-liveness expectation: when set, an idle stretch of that many
 /// milliseconds without any frame from the leader (heartbeats are
@@ -242,6 +262,7 @@ pub fn serve_connection(
     mut stream: TcpStream,
     artifacts_dir: &Path,
     pinned_mode: Option<MathMode>,
+    pinned_fill_threads: Option<u32>,
     heartbeat_ms: Option<u64>,
 ) -> Result<u64> {
     stream.set_nodelay(true).ok();
@@ -257,6 +278,7 @@ pub fn serve_connection(
     // initialisation: shapes, model flags, math mode and our shard
     let built = match wire::read_frame(&mut stream)? {
         Some((Frame::Init(init), _)) => check_pinned_mode(pinned_mode, init.math_mode)
+            .and_then(|()| check_pinned_fill_threads(pinned_fill_threads, init.fill_threads))
             .and_then(|()| WorkerNode::build(&init, artifacts_dir))
             .with_context(|| format!("worker {worker_id}: building node state")),
         Some((f, _)) => bail!("expected Init, got {f:?}"),
@@ -419,17 +441,31 @@ fn check_pinned_mode(pinned: Option<MathMode>, negotiated: MathMode) -> Result<(
     Ok(())
 }
 
+/// Bring-up guard for the v7 fill-thread negotiation: a worker pinned
+/// to a thread count refuses an `Init` carrying a different one.
+fn check_pinned_fill_threads(pinned: Option<u32>, negotiated: u32) -> Result<()> {
+    if let Some(pin) = pinned {
+        ensure!(
+            pin == negotiated,
+            "worker is pinned to {pin} fill threads but the leader negotiated {negotiated}; \
+             mismatched fill-thread clusters are rejected at bring-up"
+        );
+    }
+    Ok(())
+}
+
 /// Dial a listening leader and serve it (the `worker --connect` mode
 /// used by spawned cluster processes).
 pub fn run_worker_connect(
     addr: &str,
     artifacts_dir: &Path,
     pinned_mode: Option<MathMode>,
+    pinned_fill_threads: Option<u32>,
     heartbeat_ms: Option<u64>,
 ) -> Result<u64> {
     let stream =
         TcpStream::connect(addr).with_context(|| format!("connecting to leader at {addr}"))?;
-    serve_connection(stream, artifacts_dir, pinned_mode, heartbeat_ms)
+    serve_connection(stream, artifacts_dir, pinned_mode, pinned_fill_threads, heartbeat_ms)
 }
 
 /// Bind `addr`, print the bound address, and serve the first leader
@@ -438,6 +474,7 @@ pub fn run_worker_listen(
     addr: &str,
     artifacts_dir: &Path,
     pinned_mode: Option<MathMode>,
+    pinned_fill_threads: Option<u32>,
     heartbeat_ms: Option<u64>,
 ) -> Result<u64> {
     let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
@@ -445,5 +482,5 @@ pub fn run_worker_listen(
     println!("gparml worker listening on {local}");
     let (stream, peer) = listener.accept().context("accepting leader")?;
     eprintln!("[gparml-worker] leader connected from {peer}");
-    serve_connection(stream, artifacts_dir, pinned_mode, heartbeat_ms)
+    serve_connection(stream, artifacts_dir, pinned_mode, pinned_fill_threads, heartbeat_ms)
 }

@@ -81,7 +81,14 @@ pub const MAGIC: [u8; 4] = *b"GPMR";
 /// inline, like `ModelInfo`) and `Response::StatsJson` (a JSON
 /// snapshot of the peer's live metrics registry — the `gparml stats
 /// --connect` payload).
-pub const VERSION: u16 = 6;
+/// v7 — `Init` carries `fill_threads` (u32, >= 1): the intra-worker
+/// psi-fill parallelism every node of the cluster runs (DESIGN.md
+/// §11). Purely physical — fills split over fixed row ranges computed
+/// from shard size and thread count only, so any value is bit-identical
+/// — but negotiated at bring-up like `math_mode` so a heterogeneous
+/// cluster's per-round timing stays interpretable; workers pinned via
+/// `--fill-threads` reject a mismatching `Init`.
+pub const VERSION: u16 = 7;
 /// Upper bound on a single frame payload (defends the decoder against
 /// garbage length prefixes).
 pub const MAX_PAYLOAD: usize = 1 << 30;
@@ -192,6 +199,10 @@ pub struct Init {
     /// statistics computed under different modes are not numerically
     /// comparable, so the mode is negotiated once at bring-up (v3).
     pub math_mode: MathMode,
+    /// Intra-worker psi-fill parallelism (v7, >= 1). Deterministic by
+    /// construction (fixed row-range splits; DESIGN.md §11), negotiated
+    /// at bring-up like `math_mode`.
+    pub fill_threads: u32,
     pub shard: ShardData,
 }
 
@@ -702,6 +713,7 @@ impl Frame {
                 e.f64(init.min_xvar);
                 e.bool(init.psi_cache);
                 e.u8(init.math_mode.code());
+                e.u32(init.fill_threads);
                 e.shard(&init.shard);
             }
             Frame::Request { trace_id, req } => {
@@ -740,6 +752,13 @@ impl Frame {
                         Some(m) => m,
                         None => bail!("unknown math mode code {code} in Init frame"),
                     }
+                },
+                fill_threads: {
+                    let t = d.u32()?;
+                    if t == 0 {
+                        bail!("fill_threads 0 in Init frame (must be >= 1)");
+                    }
+                    t
                 },
                 shard: d.shard()?,
             })),
@@ -1119,6 +1138,7 @@ mod tests {
             min_xvar: 1e-6,
             psi_cache: false,
             math_mode: MathMode::Strict,
+            fill_threads: 3,
             shard: ShardData {
                 xmu: rand_mat(&mut rng, 4, 2),
                 xvar: rand_mat(&mut rng, 4, 2),
@@ -1133,6 +1153,7 @@ mod tests {
                 assert!(i2.lvm);
                 assert!(!i2.psi_cache, "psi_cache flag must round-trip");
                 assert_eq!(i2.math_mode, MathMode::Strict);
+                assert_eq!(i2.fill_threads, 3, "fill_threads must round-trip");
                 assert_eq!(i2.shard.len(), 4);
             }
             f => panic!("wrong frame {f:?}"),
@@ -1149,12 +1170,13 @@ mod tests {
         }
     }
 
-    /// Wire v3: random `Init` frames round-trip the `math_mode` field
-    /// exactly, unknown mode codes fail decoding, and a v3 `Init` is
-    /// rejected by a peer speaking any other wire version.
+    /// Wire v3/v7: random `Init` frames round-trip the `math_mode` and
+    /// `fill_threads` fields exactly, unknown mode codes and a
+    /// zero thread count fail decoding, and the `Init` is rejected by a
+    /// peer speaking any other wire version.
     #[test]
     fn prop_init_math_mode_roundtrip_and_version_rejection() {
-        testing::check("wire v3 Init.math_mode", 30, |rng| {
+        testing::check("wire v7 Init.math_mode/fill_threads", 30, |rng| {
             let q = testing::dim(rng, 1, 4);
             let b = testing::dim(rng, 0, 12);
             let mode = if rng.flip(0.5) {
@@ -1162,6 +1184,7 @@ mod tests {
             } else {
                 MathMode::Strict
             };
+            let threads = testing::dim(rng, 1, 8) as u32;
             let init = Init {
                 artifact: ArtifactConfig {
                     name: "prop".into(),
@@ -1177,6 +1200,7 @@ mod tests {
                 min_xvar: 1e-6,
                 psi_cache: rng.flip(0.5),
                 math_mode: mode,
+                fill_threads: threads,
                 shard: ShardData {
                     xmu: rand_mat(rng, b, q),
                     xvar: rand_mat(rng, b, q),
@@ -1193,6 +1217,9 @@ mod tests {
                     }
                     if i2.psi_cache != psi_cache {
                         return Err("psi_cache flag corrupted".into());
+                    }
+                    if i2.fill_threads != threads {
+                        return Err(format!("fill_threads {} != {threads}", i2.fill_threads));
                     }
                 }
                 other => return Err(format!("bad decode: {other:?}")),
@@ -1212,6 +1239,33 @@ mod tests {
         // unknown math-mode codes are a decode error, not a default
         assert!(MathMode::from_code(2).is_none());
         assert!(MathMode::from_code(255).is_none());
+        // fill_threads 0 is a decode error, not a silent clamp (v7)
+        let zero = Init {
+            artifact: ArtifactConfig {
+                name: "zero".into(),
+                m: 2,
+                q: 1,
+                d: 1,
+                cap: 32,
+                block_n: 8,
+                entries: std::collections::BTreeMap::new(),
+            },
+            lvm: false,
+            local_lr: 0.05,
+            min_xvar: 1e-6,
+            psi_cache: true,
+            math_mode: MathMode::Strict,
+            fill_threads: 0,
+            shard: ShardData {
+                xmu: Matrix::zeros(0, 1),
+                xvar: Matrix::zeros(0, 1),
+                y: Matrix::zeros(0, 1),
+                kl_weight: 1.0,
+            },
+        };
+        let bytes = encode_frame(&Frame::Init(Box::new(zero))).unwrap();
+        let msg = format!("{:#}", decode_frame(&bytes).unwrap_err());
+        assert!(msg.contains("fill_threads"), "unhelpful error: {msg}");
     }
 
     #[test]

@@ -73,6 +73,13 @@ pub struct TrainConfig {
     /// Strict, DESIGN.md §8). Carried to every worker in the wire v3
     /// `Init`; requires `psi_cache` (validated at bring-up).
     pub math_mode: MathMode,
+    /// Intra-worker psi-fill parallelism (>= 1): each worker splits its
+    /// psi1/psi2 fills over this many threads using fixed row ranges
+    /// computed from shard size and thread count only, so every value
+    /// is bit-identical (DESIGN.md §11). Carried to every worker in the
+    /// wire v7 `Init`; workers pinned via `--fill-threads` reject a
+    /// mismatch at bring-up.
+    pub fill_threads: usize,
     pub seed: u64,
 }
 
@@ -91,6 +98,7 @@ impl Default for TrainConfig {
             heartbeat_secs: 5.0,
             psi_cache: true,
             math_mode: MathMode::Strict,
+            fill_threads: 1,
             seed: 0,
         }
     }
@@ -112,6 +120,7 @@ pub fn make_inits(
             min_xvar: cfg.min_xvar,
             psi_cache: cfg.psi_cache,
             math_mode: cfg.math_mode,
+            fill_threads: cfg.fill_threads.max(1) as u32,
             shard,
         })
         .collect()
@@ -274,6 +283,11 @@ fn load_checked_artifact(cfg: &TrainConfig, params: &GlobalParams) -> Result<Art
         "math mode {} requires psi_cache (psi_cache=false selects the strict \
          forced-fresh reference)",
         cfg.math_mode
+    );
+    ensure!(
+        cfg.fill_threads >= 1,
+        "fill_threads must be >= 1 (got {})",
+        cfg.fill_threads
     );
     let manifest = Manifest::load(&cfg.artifacts_dir)?;
     let art = manifest.config(&cfg.artifact)?;
@@ -495,6 +509,7 @@ impl<B: Backend> Trainer<B> {
             bytes_rx: rx,
             psi_recomputes: psi,
             math_mode: self.cfg.math_mode,
+            fill_threads: self.cfg.fill_threads.max(1),
         });
     }
 

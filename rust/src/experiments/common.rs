@@ -43,6 +43,25 @@ pub fn math_mode(args: &Args) -> Result<MathMode> {
     Ok(math_mode_opt(args)?.unwrap_or_default())
 }
 
+/// `--fill-threads N`, when given (the single parse site: the worker
+/// daemon distinguishes "absent" from "pinned", like `--math-mode`).
+/// Rejects 0 — the wire `Init` carries only counts >= 1 (DESIGN.md §11).
+pub fn fill_threads_opt(args: &Args) -> Result<Option<u32>> {
+    match args.get("fill-threads") {
+        None => Ok(None),
+        Some(_) => {
+            let n = args.get_usize("fill-threads", 1)?;
+            anyhow::ensure!(n >= 1, "--fill-threads must be >= 1 (got {n})");
+            Ok(Some(n as u32))
+        }
+    }
+}
+
+/// `--fill-threads N` (default 1 — the sequential psi fill).
+pub fn fill_threads(args: &Args) -> Result<usize> {
+    Ok(fill_threads_opt(args)?.unwrap_or(1) as usize)
+}
+
 /// Standard GPLVM initialisation (paper §4.1): PCA-whitened latents,
 /// k-means(+noise) inducing points, unit hypers.
 pub struct LvmInit {
@@ -88,6 +107,7 @@ pub fn lvm_trainer(
         model: ModelKind::Lvm,
         global_opt: GlobalOpt::Scg,
         math_mode: math_mode(args)?,
+        fill_threads: fill_threads(args)?,
         seed,
         ..Default::default()
     };

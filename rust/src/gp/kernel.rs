@@ -34,6 +34,18 @@
 //! DESIGN.md §8). Shards whose Psi2 slab exceeds the
 //! [`DEFAULT_SLAB_LIMIT`] gate are **streamed in tiles** in both modes:
 //! round 2 refills the slab block-by-block instead of point-by-point.
+//!
+//! Since the fused-pass PR the fills are additionally **SIMD-blocked
+//! and (optionally) multi-threaded** (DESIGN.md §11): the exponent
+//! accumulations process `LANES` independent output elements per
+//! step — each lane keeps its own sequential k-accumulator, so the
+//! blocked loops are bit-identical to the scalar ones while the
+//! compiler autovectorises across lanes — and every fill splits its
+//! rows into [`fill_ranges`] disjoint windows run on
+//! `ShardScratch::fill_threads` scoped threads. Only disjoint *writes*
+//! are parallel; all floating-point *accumulations* (statistics,
+//! gradients) stay sequential in historical order, which is what keeps
+//! strict mode bit-for-bit for any thread count.
 
 use crate::linalg::{fastmath, Matrix};
 
@@ -121,10 +133,82 @@ pub fn kmm(p: &GlobalParams, jitter: f64) -> Matrix {
     seard(&p.z, &p.z, p).add_diag(jitter)
 }
 
-/// Fill `out` with Psi1 [b x m]. `dn` is a length-q workspace for the
-/// per-point denominators `ls2_k + s_ik` (hoisted out of the inducing
-/// loop; same expression as the historical per-(j,k) computation, so
-/// the values are bit-identical).
+/// Fixed SIMD lane width for the psi exponent accumulations: the hot
+/// loops process `LANES` independent output elements per step, each
+/// lane keeping its **own** sequential k-accumulator. The per-element
+/// operation sequence is exactly the scalar loop's, so the blocked
+/// form is bit-identical to it — the blocking only exposes `LANES`
+/// independent dependency chains for the compiler to autovectorise
+/// (f64x4 on AVX2, 2x f64x2 on NEON/SSE2).
+const LANES: usize = 4;
+
+/// One point's strict Psi1 row, lane-blocked over the inducing index j.
+fn psi1_row_fill(
+    z: &Matrix,
+    q: usize,
+    sf2: f64,
+    xmu_i: &[f64],
+    log_scale: f64,
+    dn: &[f64],
+    out: &mut [f64],
+) {
+    let mut chunks = out.chunks_exact_mut(LANES);
+    let mut j0 = 0;
+    for chunk in &mut chunks {
+        let mut quad = [0.0f64; LANES];
+        for k in 0..q {
+            let mu = xmu_i[k];
+            let den = dn[k];
+            for (lane, acc) in quad.iter_mut().enumerate() {
+                let d = mu - z[(j0 + lane, k)];
+                *acc += d * d / den;
+            }
+        }
+        for (o, &qd) in chunk.iter_mut().zip(quad.iter()) {
+            *o = sf2 * (log_scale - 0.5 * qd).exp();
+        }
+        j0 += LANES;
+    }
+    for (r, o) in chunks.into_remainder().iter_mut().enumerate() {
+        let j = j0 + r;
+        let mut quad = 0.0;
+        for k in 0..q {
+            let d = xmu_i[k] - z[(j, k)];
+            quad += d * d / dn[k];
+        }
+        *o = sf2 * (log_scale - 0.5 * quad).exp();
+    }
+}
+
+/// Fill `rows` (rows `lo..hi`, stored from `rows[0]`) with strict Psi1.
+/// `dn` is a length-q workspace for the per-point denominators
+/// `ls2_k + s_ik` (hoisted out of the inducing loop; same expression as
+/// the historical per-(j,k) computation, so the values are
+/// bit-identical).
+fn psi1_rows_fill(
+    p: &GlobalParams,
+    xmu: &Matrix,
+    xvar: &Matrix,
+    ls2: &[f64],
+    sf2: f64,
+    lo: usize,
+    hi: usize,
+    dn: &mut [f64],
+    rows: &mut [f64],
+) {
+    let (q, m) = (p.q(), p.m());
+    for i in lo..hi {
+        let mut log_scale = 0.0;
+        for k in 0..q {
+            log_scale -= 0.5 * (xvar[(i, k)] / ls2[k]).ln_1p();
+            dn[k] = ls2[k] + xvar[(i, k)];
+        }
+        let row = &mut rows[(i - lo) * m..(i - lo + 1) * m];
+        psi1_row_fill(&p.z, q, sf2, xmu.row(i), log_scale, dn, row);
+    }
+}
+
+/// Fill `out` with Psi1 [b x m] (strict, single pass over all rows).
 fn psi1_fill(
     p: &GlobalParams,
     xmu: &Matrix,
@@ -134,23 +218,9 @@ fn psi1_fill(
     dn: &mut [f64],
     out: &mut Matrix,
 ) {
-    let (b, q, m) = (xmu.rows(), p.q(), p.m());
-    out.reset(b, m, 0.0);
-    for i in 0..b {
-        let mut log_scale = 0.0;
-        for k in 0..q {
-            log_scale -= 0.5 * (xvar[(i, k)] / ls2[k]).ln_1p();
-            dn[k] = ls2[k] + xvar[(i, k)];
-        }
-        for j in 0..m {
-            let mut quad = 0.0;
-            for k in 0..q {
-                let d = xmu[(i, k)] - p.z[(j, k)];
-                quad += d * d / dn[k];
-            }
-            out[(i, j)] = sf2 * (log_scale - 0.5 * quad).exp();
-        }
-    }
+    let b = xmu.rows();
+    out.reset(b, p.m(), 0.0);
+    psi1_rows_fill(p, xmu, xvar, ls2, sf2, 0, b, dn, out.data_mut());
 }
 
 /// Psi1[i, j] = <k(x_i, z_j)>_{N(mu_i, diag(s_i))}, [B x m].
@@ -232,6 +302,44 @@ pub fn psi1_into(
     psi1_fill(p, xmu, xvar, ls2, sf2, dn, out);
 }
 
+/// [`psi1_into`] with intra-call parallelism: the batch rows are split
+/// into [`fill_ranges`]`(b, threads)` disjoint windows, one scoped
+/// thread per window. Every row is filled by the exact strict per-row
+/// kernel, so the output is **bit-identical** to [`psi1_into`] for any
+/// `threads` (tested); `threads <= 1` takes the sequential path with no
+/// spawn at all.
+pub fn psi1_into_threaded(
+    p: &GlobalParams,
+    xmu: &Matrix,
+    xvar: &Matrix,
+    ls2: &[f64],
+    sf2: f64,
+    threads: usize,
+    dn: &mut [f64],
+    out: &mut Matrix,
+) {
+    let (b, m, q) = (xmu.rows(), p.m(), p.q());
+    let ranges = fill_ranges(b, threads);
+    if ranges.len() == 1 {
+        psi1_fill(p, xmu, xvar, ls2, sf2, dn, out);
+        return;
+    }
+    out.reset(b, m, 0.0);
+    let mut rest: &mut [f64] = out.data_mut();
+    std::thread::scope(|s| {
+        for &(lo, hi) in &ranges {
+            let (rows, r) = std::mem::take(&mut rest).split_at_mut((hi - lo) * m);
+            rest = r;
+            s.spawn(move || {
+                let mut span = crate::obs::trace::span("psi_fill", crate::obs::trace::current());
+                span.set_count((hi - lo) as u64);
+                let mut dn = vec![0.0; q];
+                psi1_rows_fill(p, xmu, xvar, ls2, sf2, lo, hi, &mut dn, rows);
+            });
+        }
+    });
+}
+
 /// Fill `out` (length m*m, row-major) with one point's Psi2 block into
 /// caller-owned workspaces — the allocation-free sibling of
 /// [`psi2_point`], bit-identical to it (tested). `dn2` is a length-q
@@ -269,8 +377,28 @@ fn psi2_row_fill_tabled(
     out: &mut [f64],
 ) {
     debug_assert_eq!(out.len(), m * m);
+    // lane-blocked over the flat (j,l) index: LANES independent
+    // exponent accumulators share the k loop; each lane's operation
+    // sequence matches the scalar element loop exactly (bit-identical)
     let mut t = 0;
-    for o in out.iter_mut() {
+    let mut chunks = out.chunks_exact_mut(LANES);
+    for chunk in &mut chunks {
+        let mut e = [log_scale; LANES];
+        for k in 0..q {
+            let mu = xmu_i[k];
+            let den = dn2[k];
+            for (lane, acc) in e.iter_mut().enumerate() {
+                let o = t + lane * q + k;
+                let dm = mu - zbar[o];
+                *acc -= zq[o] + dm * dm / den;
+            }
+        }
+        for (o, &ex) in chunk.iter_mut().zip(e.iter()) {
+            *o = sf2 * sf2 * ex.exp();
+        }
+        t += LANES * q;
+    }
+    for o in chunks.into_remainder().iter_mut() {
         let mut e = log_scale;
         for k in 0..q {
             let dm = xmu_i[k] - zbar[t + k];
@@ -281,11 +409,74 @@ fn psi2_row_fill_tabled(
     }
 }
 
-/// Fast-path Psi1 fill: same math as [`psi1_fill`], but the per-point
-/// denominators are hoisted into reciprocals (one division per (i,k)
-/// instead of per (i,j,k)), each point's exponents are written
-/// row-wise, and one batched [`fastmath`] exp pass finishes the row.
+/// One point's fast Psi1 row: lane-blocked exponents (reciprocal
+/// multiplies), finished by one batched [`fastmath`] exp pass.
 /// `MathMode::Fast` only — rounding differs from the strict fill.
+fn psi1_row_fill_fast(
+    z: &Matrix,
+    q: usize,
+    sf2: f64,
+    xmu_i: &[f64],
+    log_scale: f64,
+    inv_dn: &[f64],
+    out: &mut [f64],
+) {
+    let mut chunks = out.chunks_exact_mut(LANES);
+    let mut j0 = 0;
+    for chunk in &mut chunks {
+        let mut quad = [0.0f64; LANES];
+        for k in 0..q {
+            let mu = xmu_i[k];
+            let inv = inv_dn[k];
+            for (lane, acc) in quad.iter_mut().enumerate() {
+                let d = mu - z[(j0 + lane, k)];
+                *acc += d * d * inv;
+            }
+        }
+        for (o, &qd) in chunk.iter_mut().zip(quad.iter()) {
+            *o = log_scale - 0.5 * qd;
+        }
+        j0 += LANES;
+    }
+    for (r, o) in chunks.into_remainder().iter_mut().enumerate() {
+        let j = j0 + r;
+        let mut quad = 0.0;
+        for k in 0..q {
+            let d = xmu_i[k] - z[(j, k)];
+            quad += d * d * inv_dn[k];
+        }
+        *o = log_scale - 0.5 * quad;
+    }
+    fastmath::exp_scale_in_place(out, sf2);
+}
+
+/// Fill `rows` (rows `lo..hi`) with fast-mode Psi1: denominators
+/// hoisted into reciprocals (one division per (i,k) instead of per
+/// (i,j,k)), one batched exp pass per row.
+fn psi1_rows_fill_fast(
+    p: &GlobalParams,
+    xmu: &Matrix,
+    xvar: &Matrix,
+    ls2: &[f64],
+    sf2: f64,
+    lo: usize,
+    hi: usize,
+    inv_dn: &mut [f64],
+    rows: &mut [f64],
+) {
+    let (q, m) = (p.q(), p.m());
+    for i in lo..hi {
+        let mut log_scale = 0.0;
+        for k in 0..q {
+            log_scale -= 0.5 * (xvar[(i, k)] / ls2[k]).ln_1p();
+            inv_dn[k] = 1.0 / (ls2[k] + xvar[(i, k)]);
+        }
+        let row = &mut rows[(i - lo) * m..(i - lo + 1) * m];
+        psi1_row_fill_fast(&p.z, q, sf2, xmu.row(i), log_scale, inv_dn, row);
+    }
+}
+
+/// Fast-path Psi1 fill over all rows (see [`psi1_rows_fill_fast`]).
 fn psi1_fill_fast(
     p: &GlobalParams,
     xmu: &Matrix,
@@ -295,25 +486,9 @@ fn psi1_fill_fast(
     inv_dn: &mut [f64],
     out: &mut Matrix,
 ) {
-    let (b, q, m) = (xmu.rows(), p.q(), p.m());
-    out.reset(b, m, 0.0);
-    for i in 0..b {
-        let mut log_scale = 0.0;
-        for k in 0..q {
-            log_scale -= 0.5 * (xvar[(i, k)] / ls2[k]).ln_1p();
-            inv_dn[k] = 1.0 / (ls2[k] + xvar[(i, k)]);
-        }
-        let row = out.row_mut(i);
-        for (j, o) in row.iter_mut().enumerate() {
-            let mut quad = 0.0;
-            for k in 0..q {
-                let d = xmu[(i, k)] - p.z[(j, k)];
-                quad += d * d * inv_dn[k];
-            }
-            *o = log_scale - 0.5 * quad;
-        }
-        fastmath::exp_scale_in_place(row, sf2);
-    }
+    let b = xmu.rows();
+    out.reset(b, p.m(), 0.0);
+    psi1_rows_fill_fast(p, xmu, xvar, ls2, sf2, 0, b, inv_dn, out.data_mut());
 }
 
 /// Fast-path variant of [`psi2_row_fill_tabled`]: reciprocal
@@ -331,7 +506,22 @@ fn psi2_row_fill_fast(
     out: &mut [f64],
 ) {
     let mut t = 0;
-    for o in out.iter_mut() {
+    let mut chunks = out.chunks_exact_mut(LANES);
+    for chunk in &mut chunks {
+        let mut e = [log_scale; LANES];
+        for k in 0..q {
+            let mu = xmu_i[k];
+            let inv = inv_dn2[k];
+            for (lane, acc) in e.iter_mut().enumerate() {
+                let o = t + lane * q + k;
+                let dm = mu - zbar[o];
+                *acc -= zq[o] + dm * dm * inv;
+            }
+        }
+        chunk.copy_from_slice(&e);
+        t += LANES * q;
+    }
+    for o in chunks.into_remainder().iter_mut() {
         let mut e = log_scale;
         for k in 0..q {
             let dm = xmu_i[k] - zbar[t + k];
@@ -350,6 +540,95 @@ fn psi2_row_fill_fast(
 /// falling back to a per-point workspace) — still allocation-free,
 /// still reusing Psi1 and the per-point log-scales.
 pub const DEFAULT_SLAB_LIMIT: usize = 1 << 23;
+
+/// Split `n_rows` into at most `threads` contiguous, disjoint row
+/// ranges — the determinism contract of intra-worker parallel fill
+/// (DESIGN.md §11): the split is a **pure function of
+/// `(n_rows, threads)`** (the first `n_rows % threads` ranges get one
+/// extra row, mirroring the coordinator's `split_even` sharding), so
+/// which thread fills which rows never depends on scheduling, and the
+/// filled bytes are identical for any thread count because every
+/// per-row fill is row-independent.
+pub fn fill_ranges(n_rows: usize, threads: usize) -> Vec<(usize, usize)> {
+    let t = threads.max(1).min(n_rows.max(1));
+    let base = n_rows / t;
+    let extra = n_rows % t;
+    let mut out = Vec::with_capacity(t);
+    let mut lo = 0;
+    for k in 0..t {
+        let len = base + usize::from(k < extra);
+        out.push((lo, lo + len));
+        lo += len;
+    }
+    out
+}
+
+/// Row-range core of the "head" pass (phase 1 of a fill): strict or
+/// fast Psi1 rows plus every row's Psi2 log-scale. Each invocation
+/// touches only rows `lo..hi` (stored from `psi1_rows[0]` /
+/// `log_scales[0]`), so disjoint ranges can run on different threads
+/// with bitwise-deterministic results.
+fn head_fill_rows(
+    p: &GlobalParams,
+    xmu: &Matrix,
+    xvar: &Matrix,
+    ls2: &[f64],
+    sf2: f64,
+    mode: MathMode,
+    lo: usize,
+    hi: usize,
+    dn: &mut [f64],
+    psi1_rows: &mut [f64],
+    log_scales: &mut [f64],
+) {
+    match mode {
+        MathMode::Strict => psi1_rows_fill(p, xmu, xvar, ls2, sf2, lo, hi, dn, psi1_rows),
+        MathMode::Fast => psi1_rows_fill_fast(p, xmu, xvar, ls2, sf2, lo, hi, dn, psi1_rows),
+    }
+    for i in lo..hi {
+        log_scales[i - lo] = psi2_point_log_scale(ls2, xvar.row(i));
+    }
+}
+
+/// Row-range core of a Psi2 tile fill (phase 2): one m*m block per row
+/// of `slab_rows`, row `r` holding global point `row0 + r`.
+/// `log_scales[r]` is that point's precomputed log-scale. Disjoint
+/// `slab_rows` windows are thread-safe for the same reason as
+/// [`head_fill_rows`].
+fn psi2_fill_rows(
+    p: &GlobalParams,
+    xmu: &Matrix,
+    xvar: &Matrix,
+    ls2: &[f64],
+    sf2: f64,
+    mode: MathMode,
+    row0: usize,
+    zq: &[f64],
+    zbar: &[f64],
+    log_scales: &[f64],
+    dn2: &mut [f64],
+    slab_rows: &mut [f64],
+) {
+    let (m, q) = (p.m(), p.q());
+    let mm = m * m;
+    for (r, block) in slab_rows.chunks_exact_mut(mm).enumerate() {
+        let i = row0 + r;
+        match mode {
+            MathMode::Strict => {
+                for (k, d) in dn2.iter_mut().enumerate() {
+                    *d = ls2[k] + 2.0 * xvar[(i, k)];
+                }
+                psi2_row_fill_tabled(m, q, zq, zbar, sf2, xmu.row(i), log_scales[r], dn2, block);
+            }
+            MathMode::Fast => {
+                for (k, d) in dn2.iter_mut().enumerate() {
+                    *d = 1.0 / (ls2[k] + 2.0 * xvar[(i, k)]);
+                }
+                psi2_row_fill_fast(q, zq, zbar, sf2, xmu.row(i), log_scales[r], dn2, block);
+            }
+        }
+    }
+}
 
 /// Reusable per-shard workspace for one bound/gradient evaluation.
 ///
@@ -379,9 +658,11 @@ pub struct ShardScratch {
     psi2_cached: bool,
     /// blocks `psi2` holds at once when streaming (== b when cached)
     tile_rows: usize,
-    /// one-point Psi2 workspace (m * m) for the statistics round's
-    /// accumulate-without-caching path
-    psi2_row: Vec<f64>,
+    /// intra-worker fill parallelism: psi fills split their rows into
+    /// [`fill_ranges`]`(rows, fill_threads)` and run one scoped thread
+    /// per range (1 = the sequential path, no threads spawned).
+    /// Deterministic by construction — see DESIGN.md §11.
+    fill_threads: usize,
     /// Psi1-adjoint workspace `Y (dF/dC)^T` [b x m] (gradient round)
     a1: Matrix,
     /// per-point Psi1 denominators ls2_k + s_ik, length q
@@ -442,7 +723,7 @@ impl ShardScratch {
             psi2: Vec::new(),
             psi2_cached: false,
             tile_rows: 0,
-            psi2_row: Vec::new(),
+            fill_threads: 1,
             a1: Matrix::zeros(0, 0),
             dn: Vec::new(),
             dn2: Vec::new(),
@@ -488,6 +769,18 @@ impl ShardScratch {
         self.filled && self.psi2_cached
     }
 
+    /// Set the intra-worker fill parallelism (clamped to >= 1). The
+    /// cached psi intermediates stay valid: thread count never changes
+    /// the filled bytes (DESIGN.md §11), only how many cores fill them.
+    pub fn set_fill_threads(&mut self, threads: usize) {
+        self.fill_threads = threads.max(1);
+    }
+
+    /// Current intra-worker fill parallelism.
+    pub fn fill_threads(&self) -> usize {
+        self.fill_threads
+    }
+
     /// (Re)size every buffer for a (b, m, q) shard and precompute the
     /// parameter-dependent scalars. Reuses allocations across calls.
     fn prepare(&mut self, p: &GlobalParams, b: usize) {
@@ -511,8 +804,6 @@ impl ShardScratch {
         };
         self.psi2.clear();
         self.psi2.resize(self.tile_rows * mm, 0.0);
-        self.psi2_row.clear();
-        self.psi2_row.resize(mm, 0.0);
         self.dn.clear();
         self.dn.resize(q, 0.0);
         self.dn2.clear();
@@ -558,65 +849,143 @@ impl ShardScratch {
         self.filled = false;
     }
 
+    /// Phase 1 of a fill: Psi1 rows + every point's Psi2 log-scale,
+    /// split over [`fill_ranges`]`(b, fill_threads)` scoped threads.
+    /// Each thread writes a disjoint row window, so the bytes are
+    /// independent of scheduling and identical for every thread count.
+    /// The scratch must be [`ShardScratch::prepare`]d.
+    fn head_fill(&mut self, p: &GlobalParams, xmu: &Matrix, xvar: &Matrix, mode: MathMode) {
+        let (b, m, q) = (self.b, self.m, self.q);
+        self.psi1.reset(b, m, 0.0);
+        let ranges = fill_ranges(b, self.fill_threads);
+        if ranges.len() == 1 {
+            // sequential path: reuse the scratch-owned workspace, no spawn
+            head_fill_rows(
+                p,
+                xmu,
+                xvar,
+                &self.ls2,
+                self.sf2,
+                mode,
+                0,
+                b,
+                &mut self.dn,
+                self.psi1.data_mut(),
+                &mut self.psi2_log_scale,
+            );
+            return;
+        }
+        let (ls2, sf2) = (&self.ls2, self.sf2);
+        let mut psi1_rest: &mut [f64] = self.psi1.data_mut();
+        let mut ls_rest: &mut [f64] = &mut self.psi2_log_scale;
+        std::thread::scope(|s| {
+            for &(lo, hi) in &ranges {
+                let rows = hi - lo;
+                let (p1, rest) = std::mem::take(&mut psi1_rest).split_at_mut(rows * m);
+                psi1_rest = rest;
+                let (lsc, rest) = std::mem::take(&mut ls_rest).split_at_mut(rows);
+                ls_rest = rest;
+                s.spawn(move || {
+                    let mut span =
+                        crate::obs::trace::span("psi_fill", crate::obs::trace::current());
+                    span.set_count(rows as u64);
+                    let mut dn = vec![0.0; q];
+                    head_fill_rows(p, xmu, xvar, ls2, sf2, mode, lo, hi, &mut dn, p1, lsc);
+                });
+            }
+        });
+    }
+
+    /// Phase 2 of a fill: the Psi2 blocks of rows `lo..hi` into the
+    /// slab (block of row `i` at slab offset `(i - lo) * m * m`; a
+    /// cached slab is one tile with `lo = 0`), split over
+    /// [`fill_ranges`]`(hi - lo, fill_threads)` scoped threads with the
+    /// same disjoint-write determinism as [`ShardScratch::head_fill`].
+    /// Requires the head pass's per-point log-scales.
+    fn psi2_tile_fill(
+        &mut self,
+        p: &GlobalParams,
+        xmu: &Matrix,
+        xvar: &Matrix,
+        lo: usize,
+        hi: usize,
+        mode: MathMode,
+    ) {
+        let (m, q) = (self.m, self.q);
+        let mm = m * m;
+        let rows = hi - lo;
+        let ranges = fill_ranges(rows, self.fill_threads);
+        if ranges.len() == 1 {
+            psi2_fill_rows(
+                p,
+                xmu,
+                xvar,
+                &self.ls2,
+                self.sf2,
+                mode,
+                lo,
+                &self.zq,
+                &self.zbar,
+                &self.psi2_log_scale[lo..hi],
+                &mut self.dn2,
+                &mut self.psi2[..rows * mm],
+            );
+            return;
+        }
+        let (ls2, sf2) = (&self.ls2, self.sf2);
+        let (zq, zbar) = (&self.zq, &self.zbar);
+        let log_scales = &self.psi2_log_scale;
+        let mut slab_rest: &mut [f64] = &mut self.psi2[..rows * mm];
+        std::thread::scope(|s| {
+            for &(r0, r1) in &ranges {
+                let (slab, rest) = std::mem::take(&mut slab_rest).split_at_mut((r1 - r0) * mm);
+                slab_rest = rest;
+                let lsc = &log_scales[lo + r0..lo + r1];
+                s.spawn(move || {
+                    let mut span =
+                        crate::obs::trace::span("psi_fill", crate::obs::trace::current());
+                    span.set_count((r1 - r0) as u64);
+                    let mut dn2 = vec![0.0; q];
+                    psi2_fill_rows(
+                        p,
+                        xmu,
+                        xvar,
+                        ls2,
+                        sf2,
+                        mode,
+                        lo + r0,
+                        zq,
+                        zbar,
+                        lsc,
+                        &mut dn2,
+                        slab,
+                    );
+                });
+            }
+        });
+    }
+
     /// Full psi pass with no statistics accumulation — the gradient
     /// round's fallback when round 1 did not run at this parameter
     /// version (or ran masked). Values are bit-identical to what
     /// [`shard_stats_into`] fills.
     fn fill(&mut self, p: &GlobalParams, xmu: &Matrix, xvar: &Matrix) {
-        let b = xmu.rows();
-        self.prepare(p, b);
-        psi1_fill(p, xmu, xvar, &self.ls2, self.sf2, &mut self.dn, &mut self.psi1);
-        let mm = self.m * self.m;
-        for i in 0..b {
-            self.psi2_log_scale[i] = psi2_point_log_scale(&self.ls2, xvar.row(i));
-            if self.psi2_cached {
-                for k in 0..self.q {
-                    self.dn2[k] = self.ls2[k] + 2.0 * xvar[(i, k)];
-                }
-                let row = &mut self.psi2[i * mm..(i + 1) * mm];
-                psi2_row_fill_tabled(
-                    self.m,
-                    self.q,
-                    &self.zq,
-                    &self.zbar,
-                    self.sf2,
-                    xmu.row(i),
-                    self.psi2_log_scale[i],
-                    &self.dn2,
-                    row,
-                );
-            }
-        }
-        self.filled = true;
+        self.fill_mode(p, xmu, xvar, MathMode::Strict);
     }
 
     /// Fast-mode counterpart of [`ShardScratch::fill`]: same structure,
     /// fast fill kernels. Values match what [`shard_stats_into_fast`]
     /// fills (both funnel through the same fast helpers).
     fn fill_fast(&mut self, p: &GlobalParams, xmu: &Matrix, xvar: &Matrix) {
+        self.fill_mode(p, xmu, xvar, MathMode::Fast);
+    }
+
+    fn fill_mode(&mut self, p: &GlobalParams, xmu: &Matrix, xvar: &Matrix, mode: MathMode) {
         let b = xmu.rows();
         self.prepare(p, b);
-        psi1_fill_fast(p, xmu, xvar, &self.ls2, self.sf2, &mut self.inv_dn, &mut self.psi1);
-        let mm = self.m * self.m;
-        for i in 0..b {
-            self.psi2_log_scale[i] = psi2_point_log_scale(&self.ls2, xvar.row(i));
-            if self.psi2_cached {
-                for k in 0..self.q {
-                    self.inv_dn2[k] = 1.0 / (self.ls2[k] + 2.0 * xvar[(i, k)]);
-                }
-                let log_scale = self.psi2_log_scale[i];
-                let row = &mut self.psi2[i * mm..(i + 1) * mm];
-                psi2_row_fill_fast(
-                    self.q,
-                    &self.zq,
-                    &self.zbar,
-                    self.sf2,
-                    xmu.row(i),
-                    log_scale,
-                    &self.inv_dn2,
-                    row,
-                );
-            }
+        self.head_fill(p, xmu, xvar, mode);
+        if self.psi2_cached {
+            self.psi2_tile_fill(p, xmu, xvar, 0, b, mode);
         }
         self.filled = true;
     }
@@ -638,67 +1007,73 @@ pub fn shard_stats_into(
     kl_weight: f64,
     scratch: &mut ShardScratch,
 ) -> Stats {
+    shard_stats_mode(p, xmu, xvar, y, mask, kl_weight, scratch, MathMode::Strict)
+}
+
+/// Shared body of the two statistics entries: a **two-phase** pass.
+/// Phase 1 fills Psi1 + log-scales (all rows, [`fill_ranges`]-parallel);
+/// phase 2 walks the shard one Psi2 tile at a time — parallel tile
+/// fill, then a **sequential** accumulation of (n, a, C, D, KL) in
+/// ascending point order. Only disjoint writes are threaded; every
+/// floating-point accumulation keeps the historical i-order, so the
+/// statistics are bit-identical for any `fill_threads` (tested).
+/// Masked rows are filled (their blocks land in the tile like any
+/// other) but never accumulated, and leave the scratch unfilled for
+/// round 2, exactly like the pre-threading code.
+fn shard_stats_mode(
+    p: &GlobalParams,
+    xmu: &Matrix,
+    xvar: &Matrix,
+    y: &Matrix,
+    mask: &[f64],
+    kl_weight: f64,
+    scratch: &mut ShardScratch,
+    mode: MathMode,
+) -> Stats {
     let b = xmu.rows();
     assert_eq!(mask.len(), b);
     let (m, q) = (p.m(), p.q());
     scratch.prepare(p, b);
     let mut st = Stats::zeros(m, y.cols());
-    psi1_fill(p, xmu, xvar, &scratch.ls2, scratch.sf2, &mut scratch.dn, &mut scratch.psi1);
+    scratch.head_fill(p, xmu, xvar, mode);
     let mm = m * m;
     let mut complete = true;
-    for i in 0..b {
-        let w = mask[i];
-        if w == 0.0 {
-            complete = false;
-            continue;
-        }
-        st.n += w;
-        let yi = y.row(i);
-        st.a += w * yi.iter().map(|v| v * v).sum::<f64>();
-        // C += w * psi1_i^T y_i
-        for j in 0..m {
-            let pj = w * scratch.psi1[(i, j)];
-            for (cjd, &yv) in st.c.row_mut(j).iter_mut().zip(yi) {
-                *cjd += pj * yv;
+    let mut lo = 0;
+    while lo < b {
+        let hi = (lo + scratch.tile_rows).min(b);
+        scratch.psi2_tile_fill(p, xmu, xvar, lo, hi, mode);
+        for i in lo..hi {
+            let w = mask[i];
+            if w == 0.0 {
+                complete = false;
+                continue;
             }
-        }
-        // D += w * Psi2_i, accumulated straight out of the scratch (the
-        // slab row when it fits, the reusable one-point workspace
-        // otherwise) — no per-point Matrix allocation.
-        scratch.psi2_log_scale[i] = psi2_point_log_scale(&scratch.ls2, xvar.row(i));
-        for k in 0..q {
-            scratch.dn2[k] = scratch.ls2[k] + 2.0 * xvar[(i, k)];
-        }
-        {
-            let row: &mut [f64] = if scratch.psi2_cached {
-                &mut scratch.psi2[i * mm..(i + 1) * mm]
-            } else {
-                &mut scratch.psi2_row
-            };
-            psi2_row_fill_tabled(
-                m,
-                q,
-                &scratch.zq,
-                &scratch.zbar,
-                scratch.sf2,
-                xmu.row(i),
-                scratch.psi2_log_scale[i],
-                &scratch.dn2,
-                row,
-            );
+            st.n += w;
+            let yi = y.row(i);
+            st.a += w * yi.iter().map(|v| v * v).sum::<f64>();
+            // C += w * psi1_i^T y_i
+            for j in 0..m {
+                let pj = w * scratch.psi1[(i, j)];
+                for (cjd, &yv) in st.c.row_mut(j).iter_mut().zip(yi) {
+                    *cjd += pj * yv;
+                }
+            }
+            // D += w * Psi2_i, straight out of the tile's slab row
+            let row = &scratch.psi2[(i - lo) * mm..(i - lo + 1) * mm];
             for (dv, &v) in st.d.data_mut().iter_mut().zip(row.iter()) {
                 *dv += w * v;
             }
-        }
-        if kl_weight > 0.0 {
-            let mut kli = 0.0;
-            for k in 0..q {
-                let (mu, s) = (xmu[(i, k)], xvar[(i, k)]);
-                let log_s = if s > 0.0 { s.ln() } else { 0.0 };
-                kli += mu * mu + s - log_s - 1.0;
+            if kl_weight > 0.0 {
+                let mut kli = 0.0;
+                for k in 0..q {
+                    let (mu, s) = (xmu[(i, k)], xvar[(i, k)]);
+                    let log_s = if s > 0.0 { s.ln() } else { 0.0 };
+                    kli += mu * mu + s - log_s - 1.0;
+                }
+                st.kl += kl_weight * w * 0.5 * kli;
             }
-            st.kl += kl_weight * w * 0.5 * kli;
         }
+        lo = hi;
     }
     st.psi0 = scratch.sf2 * st.n;
     scratch.filled = complete;
@@ -723,78 +1098,7 @@ pub fn shard_stats_into_fast(
     kl_weight: f64,
     scratch: &mut ShardScratch,
 ) -> Stats {
-    let b = xmu.rows();
-    assert_eq!(mask.len(), b);
-    let (m, q) = (p.m(), p.q());
-    scratch.prepare(p, b);
-    let mut st = Stats::zeros(m, y.cols());
-    psi1_fill_fast(
-        p,
-        xmu,
-        xvar,
-        &scratch.ls2,
-        scratch.sf2,
-        &mut scratch.inv_dn,
-        &mut scratch.psi1,
-    );
-    let mm = m * m;
-    let mut complete = true;
-    for i in 0..b {
-        let w = mask[i];
-        if w == 0.0 {
-            complete = false;
-            continue;
-        }
-        st.n += w;
-        let yi = y.row(i);
-        st.a += w * yi.iter().map(|v| v * v).sum::<f64>();
-        // C += w * psi1_i^T y_i
-        for j in 0..m {
-            let pj = w * scratch.psi1[(i, j)];
-            for (cjd, &yv) in st.c.row_mut(j).iter_mut().zip(yi) {
-                *cjd += pj * yv;
-            }
-        }
-        // D += w * Psi2_i, straight out of the slab row (or the
-        // one-point workspace when the shard streams)
-        scratch.psi2_log_scale[i] = psi2_point_log_scale(&scratch.ls2, xvar.row(i));
-        for k in 0..q {
-            scratch.inv_dn2[k] = 1.0 / (scratch.ls2[k] + 2.0 * xvar[(i, k)]);
-        }
-        {
-            let row: &mut [f64] = if scratch.psi2_cached {
-                &mut scratch.psi2[i * mm..(i + 1) * mm]
-            } else {
-                &mut scratch.psi2_row
-            };
-            psi2_row_fill_fast(
-                q,
-                &scratch.zq,
-                &scratch.zbar,
-                scratch.sf2,
-                xmu.row(i),
-                scratch.psi2_log_scale[i],
-                &scratch.inv_dn2,
-                row,
-            );
-            for (dv, &v) in st.d.data_mut().iter_mut().zip(row.iter()) {
-                *dv += w * v;
-            }
-        }
-        if kl_weight > 0.0 {
-            let mut kli = 0.0;
-            for k in 0..q {
-                let (mu, s) = (xmu[(i, k)], xvar[(i, k)]);
-                let log_s = if s > 0.0 { s.ln() } else { 0.0 };
-                kli += mu * mu + s - log_s - 1.0;
-            }
-            st.kl += kl_weight * w * 0.5 * kli;
-        }
-    }
-    st.psi0 = scratch.sf2 * st.n;
-    scratch.filled = complete;
-    scratch.fills += 1;
-    st
+    shard_stats_mode(p, xmu, xvar, y, mask, kl_weight, scratch, MathMode::Fast)
 }
 
 /// Full shard statistics, pre-refactor loop shape kept **verbatim**
@@ -962,23 +1266,11 @@ pub fn shard_grads_vjp_cached(
             (lo + scratch.tile_rows).min(b)
         };
         if !scratch.psi2_cached {
-            for i in lo..hi {
-                for k in 0..q {
-                    scratch.dn2[k] = scratch.ls2[k] + 2.0 * xvar[(i, k)];
-                }
-                let row = &mut scratch.psi2[(i - lo) * mm..(i - lo + 1) * mm];
-                psi2_row_fill_tabled(
-                    m,
-                    q,
-                    &scratch.zq,
-                    &scratch.zbar,
-                    scratch.sf2,
-                    xmu.row(i),
-                    scratch.psi2_log_scale[i],
-                    &scratch.dn2,
-                    row,
-                );
-            }
+            // parallel tile refill (disjoint writes); the chain-rule
+            // consumption below stays sequential in i-order — GlobalGrads
+            // is one shared accumulator, so its summation order is part
+            // of the bit-identity contract
+            scratch.psi2_tile_fill(p, xmu, xvar, lo, hi, MathMode::Strict);
         }
         for i in lo..hi {
             for k in 0..q {
@@ -1105,22 +1397,9 @@ pub fn shard_grads_vjp_cached_fast(
             (lo + scratch.tile_rows).min(b)
         };
         if !scratch.psi2_cached {
-            for i in lo..hi {
-                for k in 0..q {
-                    scratch.inv_dn2[k] = 1.0 / (scratch.ls2[k] + 2.0 * xvar[(i, k)]);
-                }
-                let row = &mut scratch.psi2[(i - lo) * mm..(i - lo + 1) * mm];
-                psi2_row_fill_fast(
-                    q,
-                    &scratch.zq,
-                    &scratch.zbar,
-                    scratch.sf2,
-                    xmu.row(i),
-                    scratch.psi2_log_scale[i],
-                    &scratch.inv_dn2,
-                    row,
-                );
-            }
+            // parallel tile refill; consumption stays sequential (see
+            // the strict variant)
+            scratch.psi2_tile_fill(p, xmu, xvar, lo, hi, MathMode::Fast);
         }
         for i in lo..hi {
             for k in 0..q {
@@ -1769,5 +2048,131 @@ mod tests {
         assert_mat_bits_eq(&g.d_z, &g_ref.d_z, "dZ after masked fill");
         assert_mat_bits_eq(&dmu, &dmu_ref, "dXmu after masked fill");
         assert_mat_bits_eq(&dvar, &dvar_ref, "dXvar after masked fill");
+    }
+
+    /// The row-range split is a pure function of (rows, threads):
+    /// contiguous, disjoint, covering, never more ranges than rows, and
+    /// the first `rows % threads` ranges carry the extra row.
+    #[test]
+    fn fill_ranges_is_a_pure_even_split() {
+        for rows in 0..20 {
+            for threads in 1..8 {
+                let r = fill_ranges(rows, threads);
+                assert!(!r.is_empty());
+                assert!(r.len() <= threads.max(1));
+                assert_eq!(r[0].0, 0);
+                assert_eq!(r.last().unwrap().1, rows);
+                for w in r.windows(2) {
+                    assert_eq!(w[0].1, w[1].0, "ranges must be contiguous");
+                }
+                let lens: Vec<usize> = r.iter().map(|&(lo, hi)| hi - lo).collect();
+                let (mn, mx) = (lens.iter().min().unwrap(), lens.iter().max().unwrap());
+                assert!(mx - mn <= 1, "even split: {lens:?}");
+                if rows > 0 {
+                    assert!(*mn >= 1, "no empty ranges for rows={rows}: {lens:?}");
+                }
+            }
+        }
+        assert_eq!(fill_ranges(0, 4), vec![(0, 0)]);
+        assert_eq!(fill_ranges(9, 4), vec![(0, 3), (3, 5), (5, 7), (7, 9)]);
+    }
+
+    /// Threaded fills (strict) must be bit-identical to the scratch-free
+    /// reference at every thread count, across cached, tiled-streaming
+    /// and degenerate slab configurations — the determinism contract of
+    /// DESIGN.md §11: scheduling never changes bytes.
+    #[test]
+    fn threaded_fill_matches_reference_bitwise() {
+        let (m, q, dout, b) = (5, 3, 2, 9);
+        let mm = m * m;
+        let mut rng = Rng::new(91);
+        let p = params(m, q, 90);
+        let xmu = Matrix::from_fn(b, q, |_, _| rng.normal());
+        let xvar = Matrix::from_fn(b, q, |_, _| 0.1 + rng.uniform());
+        let y = Matrix::from_fn(b, dout, |_, _| rng.normal());
+        let mask = vec![1.0; b];
+        let adj = random_adjoints(&mut rng, m, dout);
+
+        let st_ref = shard_stats(&p, &xmu, &xvar, &y, &mask, 1.0);
+        let (g_ref, dmu_ref, dvar_ref) = shard_grads_vjp(&p, &xmu, &xvar, &y, 1.0, &adj);
+
+        // threads x tile_rows interaction: every combination must land
+        // on the same bytes (including threads > rows-per-tile)
+        for limit in [usize::MAX, 4 * mm, 2 * mm + 3, mm, 0] {
+            for threads in [1, 2, 4, 7] {
+                let mut scratch = ShardScratch::with_slab_limit(limit);
+                scratch.set_fill_threads(threads);
+                let st = shard_stats_into(&p, &xmu, &xvar, &y, &mask, 1.0, &mut scratch);
+                assert_eq!(st.a.to_bits(), st_ref.a.to_bits());
+                assert_eq!(st.n.to_bits(), st_ref.n.to_bits());
+                assert_eq!(st.kl.to_bits(), st_ref.kl.to_bits());
+                assert_mat_bits_eq(&st.c, &st_ref.c, "C (threaded)");
+                assert_mat_bits_eq(&st.d, &st_ref.d, "D (threaded)");
+                let (g, dmu, dvar) =
+                    shard_grads_vjp_cached(&p, &xmu, &xvar, &y, 1.0, &adj, &mut scratch);
+                assert_mat_bits_eq(&g.d_z, &g_ref.d_z, "dZ (threaded)");
+                assert_eq!(g.d_log_sf2.to_bits(), g_ref.d_log_sf2.to_bits());
+                for (a, b) in g.d_log_ls.iter().zip(&g_ref.d_log_ls) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "dlog_ls (threaded)");
+                }
+                assert_mat_bits_eq(&dmu, &dmu_ref, "dXmu (threaded)");
+                assert_mat_bits_eq(&dvar, &dvar_ref, "dXvar (threaded)");
+            }
+        }
+    }
+
+    /// Fast mode is equally deterministic under threading: any thread
+    /// count reproduces the single-thread fast bytes (within the mode).
+    #[test]
+    fn fast_threaded_fill_matches_single_thread_bitwise() {
+        let (m, q, dout, b) = (4, 2, 3, 11);
+        let mm = m * m;
+        let mut rng = Rng::new(95);
+        let p = params(m, q, 94);
+        let xmu = Matrix::from_fn(b, q, |_, _| rng.normal());
+        let xvar = Matrix::from_fn(b, q, |_, _| 0.1 + rng.uniform());
+        let y = Matrix::from_fn(b, dout, |_, _| rng.normal());
+        let mask = vec![1.0; b];
+        let adj = random_adjoints(&mut rng, m, dout);
+
+        for limit in [usize::MAX, 3 * mm, 0] {
+            let mut single = ShardScratch::with_slab_limit(limit);
+            let st_ref = shard_stats_into_fast(&p, &xmu, &xvar, &y, &mask, 1.0, &mut single);
+            let (g_ref, dmu_ref, dvar_ref) =
+                shard_grads_vjp_cached_fast(&p, &xmu, &xvar, &y, 1.0, &adj, &mut single);
+            for threads in [2, 4] {
+                let mut scratch = ShardScratch::with_slab_limit(limit);
+                scratch.set_fill_threads(threads);
+                let st = shard_stats_into_fast(&p, &xmu, &xvar, &y, &mask, 1.0, &mut scratch);
+                assert_eq!(st.a.to_bits(), st_ref.a.to_bits());
+                assert_mat_bits_eq(&st.c, &st_ref.c, "fast C (threaded)");
+                assert_mat_bits_eq(&st.d, &st_ref.d, "fast D (threaded)");
+                let (g, dmu, dvar) =
+                    shard_grads_vjp_cached_fast(&p, &xmu, &xvar, &y, 1.0, &adj, &mut scratch);
+                assert_mat_bits_eq(&g.d_z, &g_ref.d_z, "fast dZ (threaded)");
+                assert_mat_bits_eq(&dmu, &dmu_ref, "fast dXmu (threaded)");
+                assert_mat_bits_eq(&dvar, &dvar_ref, "fast dXvar (threaded)");
+            }
+        }
+    }
+
+    /// The threaded Psi1 batch entry the Predictor serves through must
+    /// be bit-identical to the sequential entry for any thread count.
+    #[test]
+    fn psi1_into_threaded_matches_sequential_bitwise() {
+        let (m, q, b) = (6, 3, 10);
+        let mut rng = Rng::new(99);
+        let p = params(m, q, 98);
+        let xmu = Matrix::from_fn(b, q, |_, _| rng.normal());
+        let xvar = Matrix::from_fn(b, q, |_, _| 0.1 + rng.uniform());
+        let ls2: Vec<f64> = p.log_ls.iter().map(|l| (2.0 * l).exp()).collect();
+        let mut dn = vec![0.0; q];
+        let mut seq = Matrix::zeros(b, m);
+        psi1_into(&p, &xmu, &xvar, &ls2, p.sf2(), &mut dn, &mut seq);
+        for threads in [1, 2, 3, 4, 16] {
+            let mut thr = Matrix::zeros(b, m);
+            psi1_into_threaded(&p, &xmu, &xvar, &ls2, p.sf2(), threads, &mut dn, &mut thr);
+            assert_mat_bits_eq(&thr, &seq, "psi1_into_threaded");
+        }
     }
 }

@@ -5,6 +5,7 @@
 //! gparml experiment <fig1..fig8|all> [--n N] [--iters I] [--workers W] ...
 //! gparml train [--data synthetic|oilflow|digits] [--model reg|lvm] ...
 //!              [--math-mode strict|fast]          # execution policy
+//!              [--fill-threads N]                # intra-worker psi fill
 //!              [--connect HOST:PORT,HOST:PORT]   # drive TCP workers
 //!              [--export MODEL] [--checkpoint F] [--resume F]
 //! gparml export [train flags] --out model.gpm   # train, then save the
@@ -16,12 +17,14 @@
 //!                [--out preds.csv]              # cluster-free serving
 //! gparml serve --model model.gpm --listen ADDR [--clients N]
 //!              [--threads W] [--batch-rows R]   # worker pool + micro-batch cap
+//!              [--fill-threads N]               # split batch rows over N threads
 //!              [--trace-out FILE]               # span JSONL (DESIGN.md §10)
 //! gparml reload --connect ADDR                  # hot-swap the served model
 //! gparml stats --connect ADDR [--json] [--watch] [--interval-ms N] [--count K]
 //!                                               # live metrics snapshot
 //! gparml worker (--listen ADDR | --connect LEADER) [--artifacts DIR]
 //!               [--math-mode strict|fast]         # pin; reject the other
+//!               [--fill-threads N]                # pin; reject a mismatch
 //!               [--heartbeat-ms N]                # leader-liveness window
 //! gparml bench psi [--config perf] [--reps R]    # writes BENCH_psi.json
 //! gparml bench predict [--points B] [--threads T] # BENCH_predict.json
@@ -102,7 +105,8 @@ fn run_command(args: &Args) -> Result<()> {
                  obs:     gparml stats --connect ADDR [--json] [--watch]\n\
                           [--interval-ms N] [--count K],\n\
                           --trace-out FILE on any command (span JSONL, DESIGN.md §10)\n\
-                 math:    --math-mode strict|fast on train/bench/worker (DESIGN.md §8)\n\
+                 math:    --math-mode strict|fast on train/bench/worker (DESIGN.md §8),\n\
+                          --fill-threads N on train/worker/predict/serve (DESIGN.md §11)\n\
                  bench:   gparml bench psi [--config perf] [--points B] [--reps R],\n\
                           gparml bench predict [--points B] [--threads T] [--clients C],\n\
                           gparml bench check [--baseline F] [--current F] [--max-regress X],\n\
@@ -252,7 +256,8 @@ fn predict_cmd(args: &Args) -> Result<()> {
             .get("model")
             .context("predict needs --model PATH or --connect ADDR")?;
         let model = TrainedModel::load(std::path::Path::new(path))?;
-        let pred = Predictor::new(&model)?;
+        let mut pred = Predictor::new(&model)?;
+        pred.set_fill_threads(common::fill_threads(args)?);
         println!(
             "model {path}: m={}, q={}, d={} (artifact {:?}, {} iterations, final bound {:.3})",
             pred.m(),
@@ -347,7 +352,10 @@ fn write_projections(path: &str, xmu: &Matrix, conf: &[f64]) -> Result<()> {
 fn serve_cmd(args: &Args) -> Result<()> {
     let path = args.get("model").context("serve needs --model PATH")?;
     let model = TrainedModel::load(std::path::Path::new(path))?;
-    let pred = Predictor::new(&model)?;
+    let mut pred = Predictor::new(&model)?;
+    // `--fill-threads N`: split each coalesced batch's rows over N
+    // threads (bit-identical at any value; survives hot reloads)
+    pred.set_fill_threads(common::fill_threads(args)?);
     let listen = args.get_str("listen", "127.0.0.1:0");
     let opts = gparml::model::ServeOptions {
         max_clients: args.get_usize("clients", 0)? as u64,
@@ -476,11 +484,13 @@ fn render_stats(addr: &str, snapshot: &str) -> Result<()> {
     Ok(())
 }
 
-/// Run this process as a cluster worker node. `--math-mode` pins the
-/// node: an `Init` negotiating the other mode is rejected at bring-up.
+/// Run this process as a cluster worker node. `--math-mode` and
+/// `--fill-threads` pin the node: an `Init` negotiating a different
+/// value is rejected at bring-up.
 fn worker(args: &Args) -> Result<()> {
     let artifacts = common::artifacts_dir(args);
     let pinned = common::math_mode_opt(args)?;
+    let pinned_fill = common::fill_threads_opt(args)?;
     // `--heartbeat-ms N`: expected leader ping cadence. Sets the read
     // timeout used to count overdue heartbeats (obs metric
     // `heartbeat_overdue`); absent = block forever, as before.
@@ -490,10 +500,22 @@ fn worker(args: &Args) -> Result<()> {
         None
     };
     let served = if let Some(addr) = args.get("connect") {
-        gparml::cluster::node::run_worker_connect(addr, &artifacts, pinned, heartbeat_ms)?
+        gparml::cluster::node::run_worker_connect(
+            addr,
+            &artifacts,
+            pinned,
+            pinned_fill,
+            heartbeat_ms,
+        )?
     } else {
         let addr = args.get_str("listen", "127.0.0.1:0");
-        gparml::cluster::node::run_worker_listen(addr, &artifacts, pinned, heartbeat_ms)?
+        gparml::cluster::node::run_worker_listen(
+            addr,
+            &artifacts,
+            pinned,
+            pinned_fill,
+            heartbeat_ms,
+        )?
     };
     eprintln!("[gparml-worker] exiting after {served} requests");
     Ok(())
@@ -531,6 +553,7 @@ fn train(args: &Args) -> Result<()> {
     let iters = args.get_usize("iters", 30)?;
     let seed = args.get_usize("seed", 0)? as u64;
     let math_mode = common::math_mode(args)?;
+    let fill_threads = common::fill_threads(args)?;
     let addrs = connect_addrs(args);
     let workers = match &addrs {
         Some(a) => a.len(),
@@ -563,6 +586,7 @@ fn train(args: &Args) -> Result<()> {
                     model,
                     global_opt: GlobalOpt::Scg,
                     math_mode,
+                    fill_threads,
                     seed,
                     ..Default::default()
                 };
@@ -591,6 +615,7 @@ fn train(args: &Args) -> Result<()> {
                     model,
                     global_opt: GlobalOpt::Scg,
                     math_mode,
+                    fill_threads,
                     seed,
                     ..Default::default()
                 };

@@ -80,6 +80,11 @@ pub struct Predictor {
     /// signal variance exp(log_sf2), precomputed
     sf2: f64,
     dout: usize,
+    /// intra-batch parallelism for [`Self::predict_into`]
+    /// (`--fill-threads`, DESIGN.md §11): batch rows split over fixed
+    /// ranges computed from `(rows, threads)` only, so every value is
+    /// bit-identical to the sequential loop. 1 = sequential.
+    fill_threads: usize,
 }
 
 // The whole point of the serving split: one Predictor, many threads.
@@ -102,7 +107,21 @@ impl Predictor {
             beta: model.noise_precision(),
             sf2: model.params.sf2(),
             dout: model.dout,
+            fill_threads: 1,
         })
+    }
+
+    /// Set the intra-batch parallelism for [`Self::predict_into`]
+    /// (clamped to >= 1). Deterministic: any value produces the same
+    /// bytes (tested), it only changes how many cores a large coalesced
+    /// batch uses.
+    pub fn set_fill_threads(&mut self, threads: usize) {
+        self.fill_threads = threads.max(1);
+    }
+
+    /// The configured intra-batch parallelism.
+    pub fn fill_threads(&self) -> usize {
+        self.fill_threads
     }
 
     pub fn m(&self) -> usize {
@@ -164,41 +183,87 @@ impl Predictor {
         scratch.psi2.resize(m * m, 0.0);
 
         // mean = Psi1 W1 — the same strict fill + matmul expressions the
-        // cluster predict path runs, so the bits agree
-        kernel::psi1_into(
+        // cluster predict path runs, so the bits agree; rows split over
+        // fill_threads fixed ranges (bit-identical at any thread count)
+        kernel::psi1_into_threaded(
             &self.params,
             xt_mu,
             xt_var,
             &scratch.ls2,
             self.sf2,
+            self.fill_threads,
             &mut scratch.dn,
             &mut scratch.psi1,
         );
         scratch.psi1.matmul_into(&self.w1, mean);
 
-        // var_i = sf2 - <Wv, Psi2_i>
+        // var_i = sf2 - <Wv, Psi2_i> — per-row independent, so the same
+        // row-range split applies; each thread writes a disjoint window
         var.clear();
-        var.reserve(t);
-        for i in 0..t {
-            kernel::psi2_point_into(
-                &self.params.z,
-                &scratch.ls2,
-                self.sf2,
-                xt_mu.row(i),
-                xt_var.row(i),
-                &mut scratch.dn2,
-                &mut scratch.psi2,
-            );
-            let s: f64 = self
-                .wv
-                .data()
-                .iter()
-                .zip(&scratch.psi2)
-                .map(|(a, b)| a * b)
-                .sum();
-            var.push(self.sf2 - s);
+        var.resize(t, 0.0);
+        let ranges = kernel::fill_ranges(t, self.fill_threads);
+        if ranges.len() == 1 {
+            for (i, v) in var.iter_mut().enumerate() {
+                *v = self.var_at(
+                    xt_mu,
+                    xt_var,
+                    &scratch.ls2,
+                    &mut scratch.dn2,
+                    &mut scratch.psi2,
+                    i,
+                );
+            }
+        } else {
+            let ls2: &[f64] = &scratch.ls2;
+            let mut rest: &mut [f64] = var.as_mut_slice();
+            std::thread::scope(|s| {
+                for &(lo, hi) in &ranges {
+                    let (chunk, r) = std::mem::take(&mut rest).split_at_mut(hi - lo);
+                    rest = r;
+                    s.spawn(move || {
+                        // per-thread workspaces: the shared scratch
+                        // buffers stay with the sequential path
+                        let mut dn2 = vec![0.0; q];
+                        let mut psi2 = vec![0.0; m * m];
+                        for (v, i) in chunk.iter_mut().zip(lo..hi) {
+                            *v = self.var_at(xt_mu, xt_var, ls2, &mut dn2, &mut psi2, i);
+                        }
+                    });
+                }
+            });
         }
         Ok(())
+    }
+
+    /// One point's predictive variance `sf2 - <Wv, Psi2_i>` — the exact
+    /// expression of the sequential loop, factored out so the threaded
+    /// row ranges evaluate the same bytes.
+    fn var_at(
+        &self,
+        xt_mu: &Matrix,
+        xt_var: &Matrix,
+        ls2: &[f64],
+        dn2: &mut [f64],
+        psi2: &mut [f64],
+        i: usize,
+    ) -> f64 {
+        kernel::psi2_point_into(
+            &self.params.z,
+            ls2,
+            self.sf2,
+            xt_mu.row(i),
+            xt_var.row(i),
+            dn2,
+            psi2,
+        );
+        let s: f64 = self
+            .wv
+            .data()
+            .iter()
+            .zip(psi2.iter())
+            .map(|(a, b)| a * b)
+            .sum();
+        self.sf2 - s
     }
 
     /// Latent projection: map observed outputs `y` [t x d] into the
@@ -337,6 +402,36 @@ mod tests {
             let (mean_f, var_f) = pred.predict(mu, xv).unwrap();
             assert_eq!(mean.max_abs_diff(&mean_f), 0.0);
             assert_eq!(var, var_f);
+        }
+    }
+
+    /// Threaded batch serving is bit-identical to the sequential path
+    /// at every thread count (including more threads than rows) — the
+    /// DESIGN.md §11 determinism contract on the serving side.
+    #[test]
+    fn threaded_predict_matches_sequential_bitwise() {
+        let model = sample_model(17, 6, 2, 3);
+        let seq = Predictor::new(&model).unwrap();
+        let mut rng = Rng::new(18);
+        let xt_mu = Matrix::from_fn(11, 2, |_, _| rng.normal());
+        let xt_var = Matrix::from_fn(11, 2, |_, _| 0.1 * rng.uniform());
+        let (mean_ref, var_ref) = seq.predict(&xt_mu, &xt_var).unwrap();
+        for threads in [2, 3, 4, 32] {
+            let mut pred = Predictor::new(&model).unwrap();
+            pred.set_fill_threads(threads);
+            assert_eq!(pred.fill_threads(), threads);
+            let (mean, var) = pred.predict(&xt_mu, &xt_var).unwrap();
+            for (a, b) in mean.data().iter().zip(mean_ref.data()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "threaded mean diverged");
+            }
+            for (a, b) in var.iter().zip(&var_ref) {
+                assert_eq!(a.to_bits(), b.to_bits(), "threaded variance diverged");
+            }
+            // the empty batch stays well-defined under threading
+            let empty = Matrix::zeros(0, 2);
+            let (mean0, var0) = pred.predict(&empty, &empty).unwrap();
+            assert_eq!(mean0.rows(), 0);
+            assert!(var0.is_empty());
         }
     }
 

@@ -152,13 +152,17 @@ impl ServeState {
     /// Re-read the artifact from the configured path, validate it and
     /// swap it in; in-flight requests finish on the old model. Returns
     /// the new version. A failed load leaves the old model serving.
+    /// The serving configuration of the live predictor — today its
+    /// `fill_threads` batch parallelism — carries over to the reloaded
+    /// one: a reload swaps the model, not the server's capacity plan.
     pub fn reload(&self) -> Result<u64> {
         let path = self
             .path
             .as_ref()
             .context("this server was not started from a model file — nothing to reload")?;
         let model = TrainedModel::load(path)?;
-        let predictor = Predictor::new(&model)?;
+        let mut predictor = Predictor::new(&model)?;
+        predictor.set_fill_threads(self.current().predictor.fill_threads());
         Ok(self.install(predictor))
     }
 }

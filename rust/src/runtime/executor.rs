@@ -75,10 +75,29 @@ impl ShardExecutor {
     /// here instead of silently running strict graphs under a fast
     /// label (ROADMAP: fast-path artifact variants).
     pub fn with_mode(manifest: &Manifest, config: &str, mode: MathMode) -> Result<ShardExecutor> {
+        Self::with_mode_threads(manifest, config, mode, 1)
+    }
+
+    /// Mode + fill-threads constructor (API parity with the native
+    /// executor's `from_config_threads`). The AOT graphs evaluate the
+    /// whole shard as one fixed computation, so intra-worker row
+    /// splitting does not apply; `fill_threads > 1` is rejected here
+    /// instead of silently running sequentially under a parallel label.
+    pub fn with_mode_threads(
+        manifest: &Manifest,
+        config: &str,
+        mode: MathMode,
+        fill_threads: usize,
+    ) -> Result<ShardExecutor> {
         anyhow::ensure!(
             mode == MathMode::Strict,
             "math mode {mode} is not available on the PJRT executor: the AOT artifact \
              graphs implement the Strict contract only"
+        );
+        anyhow::ensure!(
+            fill_threads <= 1,
+            "fill threads {fill_threads} is not available on the PJRT executor: the AOT \
+             artifact graphs evaluate the whole shard as one fixed computation"
         );
         Self::new(manifest, config)
     }

@@ -89,14 +89,30 @@ pub fn build_executor_mode(
     artifacts_dir: &std::path::Path,
     mode: crate::gp::MathMode,
 ) -> anyhow::Result<ShardExecutor> {
+    build_executor_threads(cfg, artifacts_dir, mode, 1)
+}
+
+/// Build an executor with an explicit mode AND intra-worker fill
+/// parallelism (`fill_threads`, from the wire `Init` frame or the
+/// `--fill-threads` CLI flag; DESIGN.md §11). `fill_threads == 1` is
+/// the sequential path on every executor; values above 1 enable the
+/// deterministic row-range-split psi fill on the native executor and
+/// are rejected on the PJRT path (whole-shard fixed graphs cannot be
+/// row-split).
+pub fn build_executor_threads(
+    cfg: &ArtifactConfig,
+    artifacts_dir: &std::path::Path,
+    mode: crate::gp::MathMode,
+    fill_threads: usize,
+) -> anyhow::Result<ShardExecutor> {
     #[cfg(feature = "pjrt")]
     {
         let manifest = Manifest::load(artifacts_dir)?;
-        ShardExecutor::with_mode(&manifest, &cfg.name, mode)
+        ShardExecutor::with_mode_threads(&manifest, &cfg.name, mode, fill_threads)
     }
     #[cfg(not(feature = "pjrt"))]
     {
         let _ = artifacts_dir;
-        Ok(ShardExecutor::from_config_mode(cfg.clone(), mode))
+        Ok(ShardExecutor::from_config_threads(cfg.clone(), mode, fill_threads))
     }
 }

@@ -68,10 +68,26 @@ impl ShardExecutor {
 
     /// Build from shapes with an explicit [`MathMode`] (the cluster
     /// workers pass the mode negotiated in the wire `Init` frame).
+    /// Sequential fill (`fill_threads == 1`).
     pub fn from_config_mode(cfg: ArtifactConfig, mode: MathMode) -> ShardExecutor {
+        Self::from_config_threads(cfg, mode, 1)
+    }
+
+    /// Build from shapes with an explicit mode and intra-worker fill
+    /// parallelism. `fill_threads` splits psi fills over fixed row
+    /// ranges (pure function of shard size and thread count; DESIGN.md
+    /// §11) so any value produces bit-identical results — it is a purely
+    /// physical knob, like `MathMode` is a numerical one.
+    pub fn from_config_threads(
+        cfg: ArtifactConfig,
+        mode: MathMode,
+        fill_threads: usize,
+    ) -> ShardExecutor {
+        let mut scratch = kernel::ShardScratch::new();
+        scratch.set_fill_threads(fill_threads);
         ShardExecutor {
             cfg,
-            scratch: RefCell::new(kernel::ShardScratch::new()),
+            scratch: RefCell::new(scratch),
             version: Cell::new(None),
             fills: Cell::new(0),
             hits: Cell::new(0),

@@ -16,6 +16,13 @@
 //! observability overhead guard (DESIGN.md §10): it must stay within
 //! the normal `--max-regress` budget of its baseline AND of the
 //! untraced `eval_cached` series from the same report.
+//!
+//! The `par{2,4}_stats` / `fast_par{2,4}_stats` series re-run the
+//! statistics round with the psi fill split over 2 and 4 intra-worker
+//! threads (DESIGN.md §11) — bit-identical numbers by construction; the
+//! gate asserts the threaded fill is never slower than the sequential
+//! one beyond the budget, and that every measured series carries a
+//! committed ceiling.
 
 use std::path::{Path, PathBuf};
 
@@ -28,7 +35,10 @@ use crate::util::cli::Args;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 
-use super::{build_executor, build_executor_mode, default_artifacts_dir, Manifest, ShardData};
+use super::{
+    build_executor, build_executor_mode, build_executor_threads, default_artifacts_dir, Manifest,
+    ShardData,
+};
 
 fn artifacts_dir(args: &Args) -> PathBuf {
     args.get("artifacts")
@@ -283,6 +293,54 @@ fn measure(args: &Args) -> Result<PsiReport> {
         series.push(("fast_eval_ns_per_point", per_point(eval_fast.median_s)));
         speedup_fast = Some(sf);
     }
+
+    // thread-sweep (DESIGN.md §11): the same statistics round with the
+    // psi fill split over 2 and 4 intra-worker threads, strict and (when
+    // measured above) fast. Bit-identical numbers by construction — the
+    // sweep measures only whether the parallel fill pays for itself; the
+    // gate asserts it is never a slowdown beyond the budget. Skipped as
+    // a block when the executor rejects fill_threads > 1 (the PJRT
+    // path, whose AOT graphs evaluate the whole shard as one fixed
+    // computation).
+    for threads in [2usize, 4] {
+        let pexec = match build_executor_threads(&art, &dir, MathMode::Strict, threads) {
+            Ok(e) => e,
+            Err(e) => {
+                println!("fill-thread sweep unavailable on this executor: {e:#}");
+                break;
+            }
+        };
+        let key: &'static str = if threads == 2 {
+            "par2_stats_ns_per_point"
+        } else {
+            "par4_stats_ns_per_point"
+        };
+        let label = format!("round 1: shard_stats ({threads} fill threads)");
+        let r = bench(&label, 1, reps, || {
+            let tok = pexec.begin_eval(version);
+            pexec.shard_stats_cached(&tok, &params, &shard).unwrap()
+        });
+        series.push((key, per_point(r.median_s)));
+        if fast.is_some() {
+            let fkey: &'static str = if threads == 2 {
+                "fast_par2_stats_ns_per_point"
+            } else {
+                "fast_par4_stats_ns_per_point"
+            };
+            match build_executor_threads(&art, &dir, MathMode::Fast, threads) {
+                Ok(fexec) => {
+                    let label = format!("round 1: shard_stats (fast, {threads} fill threads)");
+                    let r = bench(&label, 1, reps, || {
+                        let tok = fexec.begin_eval(version);
+                        fexec.shard_stats_cached(&tok, &params, &shard).unwrap()
+                    });
+                    series.push((fkey, per_point(r.median_s)));
+                }
+                Err(e) => println!("fast fill-thread sweep unavailable: {e:#}"),
+            }
+        }
+    }
+
     Ok(PsiReport {
         config: cfg_name.to_string(),
         points: b,
@@ -332,14 +390,20 @@ pub fn check(args: &Args) -> Result<()> {
 
 /// The pure gate: every `*_ns_per_point` series in the baseline must be
 /// present in the current report and within `(1 + max_regress)` of the
-/// baseline value; the current Fast evaluation must not be slower than
-/// the current Strict one; and the current traced evaluation must stay
-/// within `(1 + max_regress)` of the current untraced one (the obs
-/// overhead guard, compared in-report so machine speed cancels out).
-/// Returns the list of violations.
+/// baseline value; every `*_ns_per_point` series in the current report
+/// must carry a baseline ceiling (a measured-but-ungated series is a
+/// silent hole in the gate); the current Fast evaluation must not be
+/// slower than the current Strict one; the current traced evaluation
+/// must stay within `(1 + max_regress)` of the current untraced one
+/// (the obs overhead guard); and each current `par*_stats` series must
+/// stay within `(1 + max_regress)` of its single-threaded counterpart
+/// (the threaded-fill guard, DESIGN.md §11). The in-report comparisons
+/// are deliberate: machine speed cancels out. Returns the list of
+/// violations.
 fn gate(baseline: &Json, current: &Json, max_regress: f64) -> Result<Vec<String>> {
     let mut fails = Vec::new();
-    for (key, bv) in baseline.as_obj()? {
+    let base_obj = baseline.as_obj()?;
+    for (key, bv) in base_obj {
         if !key.ends_with("_ns_per_point") {
             continue;
         }
@@ -357,6 +421,42 @@ fn gate(baseline: &Json, current: &Json, max_regress: f64) -> Result<Vec<String>
                  (>{:.0}% regression)",
                 max_regress * 100.0
             ));
+        }
+    }
+    // the reverse direction: a series measured in the current report
+    // with no committed ceiling would be silently ungated forever (the
+    // loop above only walks baseline keys) — fail loudly so every new
+    // series lands together with its baseline entry
+    for (key, cv) in current.as_obj()? {
+        if !key.ends_with("_ns_per_point") {
+            continue;
+        }
+        let cur = cv.as_f64()?;
+        if !base_obj.contains_key(key) {
+            fails.push(format!(
+                "series {key} ({cur:.1} ns/point) is in the current report but has no \
+                 ceiling in the baseline — add one (e.g. via `gparml bench rebaseline`)"
+            ));
+        }
+    }
+    // the threaded-fill guard (DESIGN.md §11): a multi-threaded psi
+    // fill must not be slower than its sequential counterpart beyond
+    // the budget
+    for (par, single) in [
+        ("par2_stats_ns_per_point", "stats_ns_per_point"),
+        ("par4_stats_ns_per_point", "stats_ns_per_point"),
+        ("fast_par2_stats_ns_per_point", "fast_stats_ns_per_point"),
+        ("fast_par4_stats_ns_per_point", "fast_stats_ns_per_point"),
+    ] {
+        if let (Some(pv), Some(sv)) = (current.opt(par), current.opt(single)) {
+            let (pv, sv) = (pv.as_f64()?, sv.as_f64()?);
+            if pv > sv * (1.0 + max_regress) {
+                fails.push(format!(
+                    "{par} ({pv:.1} ns/point) exceeds the single-threaded {single} \
+                     ({sv:.1} ns/point) by more than {:.0}% — threaded fill regression",
+                    max_regress * 100.0
+                ));
+            }
         }
     }
     match (
@@ -399,7 +499,10 @@ mod tests {
 
     #[test]
     fn gate_passes_within_budget() {
-        let base = j(r#"{"stats_ns_per_point": 100.0, "fast_eval_ns_per_point": 60.0}"#);
+        let base = j(
+            r#"{"stats_ns_per_point": 100.0, "fast_eval_ns_per_point": 60.0,
+                "eval_cached_ns_per_point": 100.0}"#,
+        );
         let cur = j(
             r#"{"stats_ns_per_point": 120.0, "fast_eval_ns_per_point": 70.0,
                 "eval_cached_ns_per_point": 110.0}"#,
@@ -409,7 +512,10 @@ mod tests {
 
     #[test]
     fn gate_flags_regression_and_missing_series() {
-        let base = j(r#"{"stats_ns_per_point": 100.0, "grads_cached_ns_per_point": 50.0}"#);
+        let base = j(
+            r#"{"stats_ns_per_point": 100.0, "grads_cached_ns_per_point": 50.0,
+                "fast_eval_ns_per_point": 10.0, "eval_cached_ns_per_point": 20.0}"#,
+        );
         let cur = j(
             r#"{"stats_ns_per_point": 126.0, "fast_eval_ns_per_point": 10.0,
                 "eval_cached_ns_per_point": 20.0}"#,
@@ -420,9 +526,51 @@ mod tests {
         assert!(fails.iter().any(|f| f.contains("grads_cached_ns_per_point")));
     }
 
+    /// A series measured in the current report but absent from the
+    /// baseline must fail the gate (it used to be silently skipped —
+    /// gate() only iterated baseline keys).
+    #[test]
+    fn gate_flags_series_without_ceiling() {
+        let base = j(
+            r#"{"stats_ns_per_point": 100.0, "fast_eval_ns_per_point": 60.0,
+                "eval_cached_ns_per_point": 90.0}"#,
+        );
+        let cur = j(
+            r#"{"stats_ns_per_point": 90.0, "fast_eval_ns_per_point": 50.0,
+                "eval_cached_ns_per_point": 80.0, "par2_stats_ns_per_point": 100.0}"#,
+        );
+        let fails = gate(&base, &cur, 0.25).unwrap();
+        assert_eq!(fails.len(), 1, "{fails:?}");
+        assert!(
+            fails[0].contains("par2_stats_ns_per_point") && fails[0].contains("no"),
+            "ungated-series failure must name the series: {fails:?}"
+        );
+    }
+
+    /// The threaded-fill guard: a par series beyond budget of its
+    /// single-threaded counterpart fails even when it is within its own
+    /// baseline ceiling.
+    #[test]
+    fn gate_flags_threaded_fill_regression() {
+        let base = j(
+            r#"{"stats_ns_per_point": 100.0, "par2_stats_ns_per_point": 200.0,
+                "fast_eval_ns_per_point": 60.0, "eval_cached_ns_per_point": 90.0}"#,
+        );
+        let cur = j(
+            r#"{"stats_ns_per_point": 90.0, "par2_stats_ns_per_point": 150.0,
+                "fast_eval_ns_per_point": 50.0, "eval_cached_ns_per_point": 90.0}"#,
+        );
+        let fails = gate(&base, &cur, 0.25).unwrap();
+        assert_eq!(fails.len(), 1, "{fails:?}");
+        assert!(fails[0].contains("threaded fill regression"), "{fails:?}");
+    }
+
     #[test]
     fn gate_flags_fast_slower_than_strict() {
-        let base = j(r#"{"stats_ns_per_point": 100.0}"#);
+        let base = j(
+            r#"{"stats_ns_per_point": 100.0, "fast_eval_ns_per_point": 120.0,
+                "eval_cached_ns_per_point": 100.0}"#,
+        );
         let cur = j(
             r#"{"stats_ns_per_point": 90.0, "fast_eval_ns_per_point": 120.0,
                 "eval_cached_ns_per_point": 100.0}"#,
@@ -435,7 +583,10 @@ mod tests {
     #[test]
     fn gate_flags_tracing_overhead_and_names_baseline_in_missing() {
         // traced eval more than budget over the in-report untraced eval
-        let base = j(r#"{"stats_ns_per_point": 100.0, "traced_eval_ns_per_point": 100.0}"#);
+        let base = j(
+            r#"{"stats_ns_per_point": 100.0, "traced_eval_ns_per_point": 100.0,
+                "fast_eval_ns_per_point": 50.0, "eval_cached_ns_per_point": 80.0}"#,
+        );
         let cur = j(
             r#"{"stats_ns_per_point": 90.0, "fast_eval_ns_per_point": 50.0,
                 "eval_cached_ns_per_point": 80.0, "traced_eval_ns_per_point": 101.0}"#,
@@ -523,6 +674,10 @@ mod tests {
             "fast_stats_ns_per_point",
             "fast_grads_cached_ns_per_point",
             "fast_eval_ns_per_point",
+            "par2_stats_ns_per_point",
+            "par4_stats_ns_per_point",
+            "fast_par2_stats_ns_per_point",
+            "fast_par4_stats_ns_per_point",
         ] {
             assert!(obj.contains_key(key), "baseline missing {key}");
             assert!(obj[key].as_f64().unwrap() > 0.0, "baseline {key} not positive");

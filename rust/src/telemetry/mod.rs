@@ -35,6 +35,12 @@ pub struct RoundTiming {
     /// recorded timing is only comparable to another at the same mode,
     /// so the mode travels with every round it produced.
     pub math_mode: MathMode,
+    /// Intra-worker psi-fill threads the cluster ran this round under
+    /// (DESIGN.md §11). Like `math_mode` it changes only the cost of a
+    /// round, never its bytes — recorded so per-round timings stay
+    /// interpretable across thread-count sweeps. 0 in
+    /// `Default::default()` means "unrecorded" (pre-v7 logs).
+    pub fill_threads: usize,
 }
 
 impl RoundTiming {

@@ -105,9 +105,19 @@ fn tcp_trainer(
     params: GlobalParams,
     shards: Vec<ShardData>,
 ) -> (Trainer<TcpBackend>, Workers) {
+    tcp_trainer_with(cfg, params, shards, &[])
+}
+
+/// [`tcp_trainer`] with extra `gparml worker` CLI flags (pins etc.).
+fn tcp_trainer_with(
+    cfg: TrainConfig,
+    params: GlobalParams,
+    shards: Vec<ShardData>,
+    extra: &[&str],
+) -> (Trainer<TcpBackend>, Workers) {
     let listener = TcpListener::bind("127.0.0.1:0").expect("bind leader listener");
     let addr = listener.local_addr().unwrap().to_string();
-    let workers = spawn_workers(cfg.workers, &addr);
+    let workers = spawn_workers_with(cfg.workers, &addr, extra);
     let mut trainer =
         Trainer::accept_tcp(cfg, params, shards, &listener).expect("cluster bring-up");
     trainer.backend_mut().set_timeout(Duration::from_secs(30));
@@ -338,6 +348,106 @@ fn tcp_cluster_fast_mode_matches_pool_backend_bitwise() {
     );
 
     drop(tcp_t);
+    drop(procs);
+}
+
+/// DESIGN.md §11: the intra-worker fill-thread count is a purely
+/// PHYSICAL knob — every psi fill splits into fixed row ranges that are
+/// a pure function of shard size and thread count, and all floating-
+/// point accumulation stays sequential — so a strict-mode training
+/// trace must be bit-for-bit identical at `--fill-threads` 1/2/4, both
+/// in-process and over the wire (the count travels in the v7 `Init`
+/// frame; a worker pinned to the matching count must bring up cleanly).
+#[test]
+fn fill_thread_count_never_changes_strict_traces() {
+    let (xmu, xvar, y) = regression_data(60, 3);
+    let workers = 2;
+    let iters = 4;
+    let shards = partition(&xmu, &xvar, &y, 0.0, workers);
+
+    // reference: the sequential fill on the in-process Pool backend
+    let mut ref_t = Trainer::new(
+        config(workers, ModelKind::Regression),
+        init_params(5),
+        shards.clone(),
+    )
+    .unwrap();
+    let reference: Vec<f64> = (0..iters).map(|_| ref_t.step().unwrap()).collect();
+
+    for threads in [2usize, 4] {
+        let mut cfg = config(workers, ModelKind::Regression);
+        cfg.fill_threads = threads;
+        let mut pool_t = Trainer::new(cfg, init_params(5), shards.clone()).unwrap();
+        for (i, f) in reference.iter().enumerate() {
+            let g = pool_t.step().unwrap();
+            assert_eq!(
+                f.to_bits(),
+                g.to_bits(),
+                "pool fill-threads {threads}, iteration {i}: F={f} vs F={g}"
+            );
+        }
+        for (a, b) in ref_t.params.flatten().iter().zip(pool_t.params.flatten()) {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "pool fill-threads {threads}: final params diverged"
+            );
+        }
+    }
+
+    // the same sweep over REAL worker processes: the count is
+    // negotiated in the Init frame (workers unpinned at 1/2; pinned to
+    // the matching count at 4, which must be accepted at bring-up)
+    for threads in [1usize, 2, 4] {
+        let mut cfg = config(workers, ModelKind::Regression);
+        cfg.fill_threads = threads;
+        let (mut tcp_t, procs) = if threads == 4 {
+            tcp_trainer_with(cfg, init_params(5), shards.clone(), &["--fill-threads", "4"])
+        } else {
+            tcp_trainer(cfg, init_params(5), shards.clone())
+        };
+        for (i, f) in reference.iter().enumerate() {
+            let g = tcp_t.step().unwrap();
+            assert_eq!(
+                f.to_bits(),
+                g.to_bits(),
+                "tcp fill-threads {threads}, iteration {i}: F={f} vs F={g}"
+            );
+        }
+        for (a, b) in ref_t.params.flatten().iter().zip(tcp_t.params.flatten()) {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "tcp fill-threads {threads}: final params diverged"
+            );
+        }
+        drop(tcp_t);
+        drop(procs);
+    }
+}
+
+/// DESIGN.md §11: like `--math-mode`, a worker pinned to a fill-thread
+/// count answers a mismatching leader's `Init` with an error, and the
+/// leader's bring-up reports it (mixed-setting clusters fail loudly,
+/// they never run).
+#[test]
+fn leader_refuses_mismatched_fill_thread_pin() {
+    let (xmu, xvar, y) = regression_data(20, 4);
+    let shards = partition(&xmu, &xvar, &y, 0.0, 1);
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind leader listener");
+    let addr = listener.local_addr().unwrap().to_string();
+    let procs = spawn_workers_with(1, &addr, &["--fill-threads", "4"]);
+
+    let mut cfg = config(1, ModelKind::Regression);
+    cfg.fill_threads = 2;
+    let err = Trainer::accept_tcp(cfg, init_params(5), shards, &listener)
+        .err()
+        .expect("leader must refuse a worker pinned to a different fill-thread count");
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("fill threads") || msg.contains("pinned"),
+        "bring-up error does not explain the fill-thread mismatch: {msg}"
+    );
     drop(procs);
 }
 

@@ -192,6 +192,54 @@ fn prop_fast_bound_and_grads_match_strict_within_1e9() {
 }
 
 #[test]
+fn prop_fast_threaded_stats_and_grads_match_strict_within_1e9() {
+    check("fast threaded fill keeps the 1e-9 contract", 15, |rng| {
+        let (m, q, d) = (dim(rng, 2, 6), dim(rng, 1, 3), dim(rng, 1, 3));
+        let n = dim(rng, 2, 20);
+        let threads = dim(rng, 2, 6);
+        let p = random_params(rng, m, q);
+        let xmu = random_matrix(rng, n, q, 1.0);
+        let xvar = Matrix::from_fn(n, q, |_, _| 0.05 + rng.uniform());
+        let y = random_matrix(rng, n, d, 1.0);
+        let mask = vec![1.0; n];
+        let adj = random_adjoints(rng, m, d);
+
+        // fast pipeline with the psi fill split over a random thread
+        // count: the Fast-vs-Strict 1e-9 contract (DESIGN.md §8) must
+        // hold unchanged, because threading only re-schedules disjoint
+        // writes (DESIGN.md §11)
+        let strict = kernel::shard_stats(&p, &xmu, &xvar, &y, &mask, 1.0);
+        let mut scratch = kernel::ShardScratch::new();
+        scratch.set_fill_threads(threads);
+        let fast = kernel::shard_stats_into_fast(&p, &xmu, &xvar, &y, &mask, 1.0, &mut scratch);
+        close(fast.a, strict.a, 1e-12, "a")?;
+        close(fast.psi0, strict.psi0, 1e-12, "psi0")?;
+        close(fast.kl, strict.kl, 1e-12, "kl")?;
+        mat_close(&fast.c, &strict.c, 1e-9, "C fast-threaded vs strict")?;
+        mat_close(&fast.d, &strict.d, 1e-9, "D fast-threaded vs strict")?;
+
+        let (g_s, dmu_s, dvar_s) = kernel::shard_grads_vjp(&p, &xmu, &xvar, &y, 1.0, &adj);
+        let (g_f, dmu_f, dvar_f) =
+            kernel::shard_grads_vjp_cached_fast(&p, &xmu, &xvar, &y, 1.0, &adj, &mut scratch);
+        mat_close(&g_f.d_z, &g_s.d_z, 1e-9, "dZ fast-threaded vs strict")?;
+        close(g_f.d_log_sf2, g_s.d_log_sf2, 1e-9, "dlog_sf2 fast-threaded vs strict")?;
+        for (k, (a, b)) in g_f.d_log_ls.iter().zip(&g_s.d_log_ls).enumerate() {
+            close(*a, *b, 1e-9, &format!("dlog_ls[{k}] fast-threaded vs strict"))?;
+        }
+        mat_close(&dmu_f, &dmu_s, 1e-9, "dXmu fast-threaded vs strict")?;
+        mat_close(&dvar_f, &dvar_s, 1e-9, "dXvar fast-threaded vs strict")?;
+
+        // and against the SEQUENTIAL fast fill the agreement is exact:
+        // the thread count never changes bytes, in either math mode
+        let mut seq = kernel::ShardScratch::new();
+        let fast1 = kernel::shard_stats_into_fast(&p, &xmu, &xvar, &y, &mask, 1.0, &mut seq);
+        bits_f64(fast.a, fast1.a, "a threaded vs sequential fast")?;
+        bits_mat(&fast.c, &fast1.c, "C threaded vs sequential fast")?;
+        bits_mat(&fast.d, &fast1.d, "D threaded vs sequential fast")
+    });
+}
+
+#[test]
 fn prop_bound_invariant_to_inducing_permutation() {
     check("F invariant under permutation of Z rows", 20, |rng| {
         let (m, q, d) = (dim(rng, 3, 7), dim(rng, 1, 3), dim(rng, 1, 3));
