@@ -228,6 +228,13 @@ impl WorkerNode {
                 "ServeStats is answered inline by the worker daemon / predict server, \
                  not by the node state machine"
             ),
+            Request::Register { .. }
+            | Request::Deregister { .. }
+            | Request::ReplicaHeartbeat { .. }
+            | Request::FleetInfo => bail!(
+                "fleet control frames (Register/Deregister/ReplicaHeartbeat/FleetInfo) \
+                 are answered by the `gparml control` plane, not by cluster workers"
+            ),
         })
     }
 }

@@ -88,7 +88,17 @@ pub const MAGIC: [u8; 4] = *b"GPMR";
 /// — but negotiated at bring-up like `math_mode` so a heterogeneous
 /// cluster's per-round timing stays interpretable; workers pinned via
 /// `--fill-threads` reject a mismatching `Init`.
-pub const VERSION: u16 = 7;
+/// v8 — the fleet control plane (DESIGN.md §12): serve replicas
+/// register with a `gparml control` process over this same transport.
+/// New requests — `Register` / `Deregister` / `ReplicaHeartbeat`
+/// (replica -> control, all answered with [`Response::Ok`]) carrying
+/// the replica's advertised serve address and current model version,
+/// and `FleetInfo` (lb/operator -> control), answered with the new
+/// `Response::FleetInfo`: the live replica set after staleness
+/// eviction, each entry an address + model version + milliseconds
+/// since the last heartbeat. Serve replicas and cluster workers
+/// reject the control-plane frames with an error.
+pub const VERSION: u16 = 8;
 /// Upper bound on a single frame payload (defends the decoder against
 /// garbage length prefixes).
 pub const MAX_PAYLOAD: usize = 1 << 30;
@@ -154,6 +164,36 @@ pub enum Request {
     /// answered inline with [`Response::StatsJson`] — counters, gauges
     /// and latency-histogram percentiles (DESIGN.md §10).
     ServeStats,
+    /// Replica -> control (v8): join the fleet. `addr` is the serve
+    /// address the replica advertises to the front door;
+    /// `model_version` is its current hot-reload counter. Answered
+    /// with [`Response::Ok`]. Re-registering an address upserts it.
+    Register { addr: String, model_version: u64 },
+    /// Replica -> control (v8): leave the fleet cleanly (sent on
+    /// shutdown). Answered with [`Response::Ok`]; unknown addresses
+    /// are ignored (deregistration is idempotent).
+    Deregister { addr: String },
+    /// Replica -> control (v8): liveness + current model version.
+    /// A heartbeat for an unknown address is an implicit re-register,
+    /// so a replica that reconnects after a control restart rejoins
+    /// without special-casing. Answered with [`Response::Ok`].
+    ReplicaHeartbeat { addr: String, model_version: u64 },
+    /// lb/operator -> control (v8): ask for the live replica set
+    /// (stale entries evicted first). Answered with
+    /// [`Response::FleetInfo`].
+    FleetInfo,
+}
+
+/// One fleet member as reported by the control plane (v8).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ReplicaInfo {
+    /// The serve address the replica registered under.
+    pub addr: String,
+    /// The replica's model hot-reload counter at its last heartbeat —
+    /// the version-skew signal the lb watches.
+    pub model_version: u64,
+    /// Milliseconds since the control plane last heard from it.
+    pub age_ms: u64,
 }
 
 /// A worker's reply to a [`Request`].
@@ -181,6 +221,10 @@ pub enum Response {
     /// snapshot_json` — deterministic key order, so equal registries
     /// produce equal payloads).
     StatsJson(String),
+    /// Reply to [`Request::FleetInfo`] (v8): the control plane's live
+    /// replica set after staleness eviction, sorted by address
+    /// (deterministic for equal registries).
+    FleetInfo { replicas: Vec<ReplicaInfo> },
 }
 
 /// Everything a worker needs to build its node state: executor shapes,
@@ -570,6 +614,27 @@ impl Request {
             }
             Request::Reload => e.u8(10),
             Request::ServeStats => e.u8(11),
+            Request::Register {
+                addr,
+                model_version,
+            } => {
+                e.u8(12);
+                e.str(addr);
+                e.u64(*model_version);
+            }
+            Request::Deregister { addr } => {
+                e.u8(13);
+                e.str(addr);
+            }
+            Request::ReplicaHeartbeat {
+                addr,
+                model_version,
+            } => {
+                e.u8(14);
+                e.str(addr);
+                e.u64(*model_version);
+            }
+            Request::FleetInfo => e.u8(15),
         }
     }
 
@@ -603,6 +668,16 @@ impl Request {
             9 => Request::ServeProject { y: d.mat()? },
             10 => Request::Reload,
             11 => Request::ServeStats,
+            12 => Request::Register {
+                addr: d.str()?,
+                model_version: d.u64()?,
+            },
+            13 => Request::Deregister { addr: d.str()? },
+            14 => Request::ReplicaHeartbeat {
+                addr: d.str()?,
+                model_version: d.u64()?,
+            },
+            15 => Request::FleetInfo,
             t => bail!("unknown request tag {t}"),
         })
     }
@@ -654,6 +729,15 @@ impl Response {
                 e.u8(10);
                 e.str(json);
             }
+            Response::FleetInfo { replicas } => {
+                e.u8(11);
+                e.u32(replicas.len() as u32);
+                for r in replicas {
+                    e.str(&r.addr);
+                    e.u64(r.model_version);
+                    e.u64(r.age_ms);
+                }
+            }
         }
     }
 
@@ -683,6 +767,22 @@ impl Response {
                 conf: d.vec_f64()?,
             },
             10 => Response::StatsJson(d.str()?),
+            11 => {
+                let n = d.u32()? as usize;
+                ensure!(
+                    n <= MAX_PAYLOAD / 17,
+                    "fleet info claims {n} replicas, exceeds payload cap"
+                );
+                let mut replicas = Vec::with_capacity(n);
+                for _ in 0..n {
+                    replicas.push(ReplicaInfo {
+                        addr: d.str()?,
+                        model_version: d.u64()?,
+                        age_ms: d.u64()?,
+                    });
+                }
+                Response::FleetInfo { replicas }
+            }
             t => bail!("unknown response tag {t}"),
         })
     }
@@ -1552,5 +1652,130 @@ mod tests {
         bytes.push(0xAB);
         let msg = format!("{:#}", decode_frame(&bytes).unwrap_err());
         assert!(msg.contains("trailing"), "{msg}");
+    }
+
+    /// Wire v8: the fleet control-plane frames round-trip exactly, and
+    /// a truncated/mutilated fleet payload is a decode error.
+    #[test]
+    fn prop_v8_fleet_frames_roundtrip_and_reject() {
+        testing::check("wire v8 fleet frames", 30, |rng| {
+            let id = ((rng.below(1 << 30) as u64) << 32) | rng.below(1 << 30) as u64;
+            let addr = format!("10.0.0.{}:{}", rng.below(255), 1024 + rng.below(60000));
+            let mv = rng.below(1 << 20) as u64;
+            for req in [
+                Request::Register {
+                    addr: addr.clone(),
+                    model_version: mv,
+                },
+                Request::Deregister { addr: addr.clone() },
+                Request::ReplicaHeartbeat {
+                    addr: addr.clone(),
+                    model_version: mv,
+                },
+                Request::FleetInfo,
+            ] {
+                let f = Frame::Request {
+                    trace_id: id,
+                    req: Box::new(req.clone()),
+                };
+                match roundtrip(&f) {
+                    Frame::Request { trace_id, req: r } => {
+                        if trace_id != id {
+                            return Err(format!("trace id {trace_id:#x} != {id:#x}"));
+                        }
+                        let same = match (&req, &*r) {
+                            (
+                                Request::Register {
+                                    addr: a,
+                                    model_version: v,
+                                },
+                                Request::Register {
+                                    addr: b,
+                                    model_version: w,
+                                },
+                            ) => a == b && v == w,
+                            (Request::Deregister { addr: a }, Request::Deregister { addr: b }) => {
+                                a == b
+                            }
+                            (
+                                Request::ReplicaHeartbeat {
+                                    addr: a,
+                                    model_version: v,
+                                },
+                                Request::ReplicaHeartbeat {
+                                    addr: b,
+                                    model_version: w,
+                                },
+                            ) => a == b && v == w,
+                            (Request::FleetInfo, Request::FleetInfo) => true,
+                            _ => false,
+                        };
+                        if !same {
+                            return Err(format!("control request corrupted: {r:?}"));
+                        }
+                    }
+                    _ => return Err("wrong frame kind".into()),
+                }
+            }
+            // the registry snapshot reply: n replicas, any order/ages
+            let n = testing::dim(rng, 0, 6);
+            let replicas: Vec<ReplicaInfo> = (0..n)
+                .map(|i| ReplicaInfo {
+                    addr: format!("replica-{i}.local:{}", 7000 + i),
+                    model_version: rng.below(1 << 16) as u64,
+                    age_ms: rng.below(1 << 16) as u64,
+                })
+                .collect();
+            let f = Frame::Response {
+                trace_id: id,
+                secs: 0.0,
+                psi_fills: 0,
+                resp: Box::new(Response::FleetInfo {
+                    replicas: replicas.clone(),
+                }),
+            };
+            let bytes = encode_frame(&f).unwrap();
+            match decode_frame(&bytes) {
+                Ok((Frame::Response { trace_id, resp, .. }, _)) => {
+                    if trace_id != id {
+                        return Err("fleet-info trace id lost".into());
+                    }
+                    match *resp {
+                        Response::FleetInfo { replicas: r2 } => {
+                            if r2 != replicas {
+                                return Err(format!("fleet info corrupted: {r2:?}"));
+                            }
+                        }
+                        _ => return Err("wrong response variant".into()),
+                    }
+                }
+                other => return Err(format!("bad decode: {other:?}")),
+            }
+            // every truncation of the fleet payload is an error, never a
+            // silently shorter replica list
+            for cut in 1..bytes.len() {
+                if decode_frame(&bytes[..cut]).is_ok() {
+                    return Err(format!("truncation at {cut} accepted"));
+                }
+            }
+            // a pre-fleet peer (v7) is rejected before payload decode
+            let mut old = bytes.clone();
+            let bad = (VERSION - 1).to_le_bytes();
+            old[4] = bad[0];
+            old[5] = bad[1];
+            let msg = format!("{:#}", decode_frame(&old).unwrap_err());
+            if !msg.contains("version") {
+                return Err(format!("unhelpful version error: {msg}"));
+            }
+            Ok(())
+        });
+        // an absurd replica count is rejected by the cap, not allocated
+        let mut e = Enc::new();
+        e.u8(11);
+        e.u32(u32::MAX);
+        let bytes = e.into_bytes();
+        let mut d = Dec::new(&bytes);
+        let msg = format!("{:#}", Response::decode(&mut d).unwrap_err());
+        assert!(msg.contains("replicas"), "{msg}");
     }
 }

@@ -1,6 +1,10 @@
-//! Shared plumbing for the experiment harness.
+//! Shared plumbing for the experiment harness and the CLI: results /
+//! artifact directories, the single parse site for every repeated
+//! flag (`--math-mode`, `--fill-threads`, `--listen`, `--connect`,
+//! `--interval-ms`), and LVM initialisation.
 
 use std::path::PathBuf;
+use std::time::Duration;
 
 use anyhow::{anyhow, Result};
 
@@ -60,6 +64,51 @@ pub fn fill_threads_opt(args: &Args) -> Result<Option<u32>> {
 /// `--fill-threads N` (default 1 — the sequential psi fill).
 pub fn fill_threads(args: &Args) -> Result<usize> {
     Ok(fill_threads_opt(args)?.unwrap_or(1) as usize)
+}
+
+/// `--listen ADDR` with HOST:PORT validation — the single parse site
+/// for every server command (`serve`, `control`, `lb`, `worker
+/// --listen`), so a typo'd address fails with the flag named instead
+/// of a bare bind error.
+pub fn listen_addr<'a>(args: &'a Args, default: &'a str) -> Result<&'a str> {
+    let addr = args.get_str("listen", default);
+    validate_addr(addr, "--listen")?;
+    Ok(addr)
+}
+
+/// `--connect ADDR` (required, single address) with HOST:PORT
+/// validation; `what` is the usage line shown when the flag is
+/// missing. The single parse site for the client commands (`predict`,
+/// `reload`, `stats`, `lb`). The leader-side comma list
+/// (`train --connect a,b,c`) parses separately.
+pub fn connect_addr<'a>(args: &'a Args, what: &str) -> Result<&'a str> {
+    let addr = args.get("connect").ok_or_else(|| anyhow!("{what}"))?;
+    validate_addr(addr, "--connect")?;
+    Ok(addr)
+}
+
+/// Shape check only (host non-empty, port numeric) — resolution
+/// happens at bind/dial time. `[::1]:7743` splits at the LAST colon,
+/// so bracketed IPv6 hosts pass.
+fn validate_addr(addr: &str, flag: &str) -> Result<()> {
+    let (host, port) = addr
+        .rsplit_once(':')
+        .ok_or_else(|| anyhow!("{flag} expects HOST:PORT, got {addr:?}"))?;
+    anyhow::ensure!(!host.is_empty(), "{flag} expects HOST:PORT, got {addr:?}");
+    anyhow::ensure!(
+        port.parse::<u16>().is_ok(),
+        "{flag} expects a numeric port in HOST:PORT, got {addr:?}"
+    );
+    Ok(())
+}
+
+/// A millisecond-interval flag as a `Duration` (floor 1ms) — shared by
+/// `stats --watch --interval-ms`, the lb membership refresh and the
+/// serve fleet heartbeat.
+pub fn interval_ms(args: &Args, key: &str, default_ms: usize) -> Result<Duration> {
+    Ok(Duration::from_millis(
+        args.get_usize(key, default_ms)?.max(1) as u64
+    ))
 }
 
 /// Standard GPLVM initialisation (paper §4.1): PCA-whitened latents,

@@ -1,0 +1,158 @@
+//! The replica side of the fleet protocol: a typed control-plane
+//! client plus the registration loop `gparml serve --control` runs
+//! beside its accept loop (DESIGN.md §12).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::cluster::wire::{ReplicaInfo, Request, Response};
+use crate::model::serve::{ConnectOpts, ServeClient, ServeState};
+
+/// Typed verbs of the v8 control protocol over a [`ServeClient`] —
+/// the same one-connection/deadline/retry machinery the serve verbs
+/// use, pointed at a `gparml control` process.
+pub struct ControlClient {
+    client: ServeClient,
+}
+
+impl ControlClient {
+    /// Dial a control plane with the default policy.
+    pub fn connect(addr: &str) -> Result<ControlClient> {
+        ControlClient::with_opts(addr, ConnectOpts::default())
+    }
+
+    /// Dial a control plane with an explicit policy.
+    pub fn with_opts(addr: &str, opts: ConnectOpts) -> Result<ControlClient> {
+        Ok(ControlClient {
+            client: ServeClient::with_opts(addr, opts)?,
+        })
+    }
+
+    /// The control-plane address this client dials.
+    pub fn addr(&self) -> &str {
+        self.client.addr()
+    }
+
+    fn expect_ok(resp: Response) -> Result<()> {
+        match resp {
+            Response::Ok => Ok(()),
+            Response::Err(e) => bail!("control plane: {e}"),
+            other => bail!("unexpected control reply {other:?}"),
+        }
+    }
+
+    /// Join the fleet as `addr` (the serve address the replica
+    /// advertises), reporting its current model version. Idempotent:
+    /// re-registering upserts.
+    pub fn register(&mut self, addr: &str, model_version: u64) -> Result<()> {
+        let req = Request::Register {
+            addr: addr.to_string(),
+            model_version,
+        };
+        ControlClient::expect_ok(self.client.request(&req)?.0)
+    }
+
+    /// Liveness + current model version. A heartbeat for an address
+    /// the control plane forgot is an implicit re-register.
+    pub fn heartbeat(&mut self, addr: &str, model_version: u64) -> Result<()> {
+        let req = Request::ReplicaHeartbeat {
+            addr: addr.to_string(),
+            model_version,
+        };
+        ControlClient::expect_ok(self.client.request(&req)?.0)
+    }
+
+    /// Leave the fleet cleanly (idempotent).
+    pub fn deregister(&mut self, addr: &str) -> Result<()> {
+        let req = Request::Deregister {
+            addr: addr.to_string(),
+        };
+        ControlClient::expect_ok(self.client.request(&req)?.0)
+    }
+
+    /// The live replica set (the control plane evicts stale members
+    /// before answering).
+    pub fn fleet_info(&mut self) -> Result<Vec<ReplicaInfo>> {
+        match self.client.request(&Request::FleetInfo)?.0 {
+            Response::FleetInfo { replicas } => Ok(replicas),
+            Response::Err(e) => bail!("control plane: {e}"),
+            other => bail!("unexpected FleetInfo reply {other:?}"),
+        }
+    }
+}
+
+/// Run the replica registration protocol until `stop` is set:
+/// register, heartbeat every `interval` (reading the live model
+/// version from `state`, so a hot reload is advertised on the next
+/// beat), reconnect-and-re-register after control-plane outages, and
+/// deregister cleanly on the way out.
+///
+/// `gparml serve --control` runs this on a scoped thread beside the
+/// accept loop and sets `stop` when `serve()` returns.
+pub fn registration_loop(
+    control_addr: &str,
+    advertise: &str,
+    state: &ServeState,
+    interval: Duration,
+    stop: &AtomicBool,
+) {
+    let mut client: Option<ControlClient> = None;
+    let mut control_down = false;
+    let mut next_beat = Instant::now(); // first beat immediately
+    while !stop.load(Ordering::Acquire) {
+        let now = Instant::now();
+        if now >= next_beat {
+            next_beat = now + interval;
+            let version = state.current().version;
+            match beat(&mut client, control_addr, advertise, version) {
+                Ok(()) => {
+                    if control_down {
+                        eprintln!(
+                            "[gparml-serve] control plane at {control_addr} is back; re-registered"
+                        );
+                        control_down = false;
+                    }
+                }
+                Err(e) => {
+                    client = None;
+                    if !control_down {
+                        eprintln!(
+                            "[gparml-serve] control plane at {control_addr} unreachable \
+                             (serving continues; will keep retrying): {e:#}"
+                        );
+                        control_down = true;
+                    }
+                }
+            }
+        }
+        // short naps so `stop` stays responsive between beats
+        std::thread::sleep(Duration::from_millis(25));
+    }
+    if let Some(mut c) = client {
+        let _ = c.deregister(advertise);
+    }
+}
+
+/// One beat: (re)dial + register on a fresh connection, heartbeat on
+/// an established one. Failover to the sibling makes no sense here —
+/// there is one control plane — so internal retries are disabled and
+/// the loop's cadence is the retry policy.
+fn beat(
+    client: &mut Option<ControlClient>,
+    control_addr: &str,
+    advertise: &str,
+    version: u64,
+) -> Result<()> {
+    if client.is_none() {
+        let mut fresh = ControlClient::with_opts(control_addr, ConnectOpts::default().no_retry())?;
+        fresh.register(advertise, version)?;
+        *client = Some(fresh);
+        return Ok(());
+    }
+    client
+        .as_mut()
+        .expect("just checked for None")
+        .heartbeat(advertise, version)
+}

@@ -1,0 +1,424 @@
+//! The fleet control plane (`gparml control`): a registry process
+//! serve replicas register with over the v8 wire frames
+//! (DESIGN.md §12).
+//!
+//! The control plane is deliberately tiny and holds no model: its only
+//! job is membership. Replicas `Register` once per connection and then
+//! `ReplicaHeartbeat` on an interval; the lb polls `FleetInfo` and
+//! routes to whatever the reply names. Liveness is decided two ways,
+//! both conservative:
+//!
+//! * **connection drop** — a replica's registration is tied to the
+//!   connection it arrived on; when that connection dies (EOF, error,
+//!   `Shutdown`), every member registered through it is removed at
+//!   once (implicit deregister). A replica that reconnects re-registers
+//!   on its next heartbeat (a heartbeat for an unknown address is an
+//!   implicit `Register` — v8 contract).
+//! * **heartbeat staleness** — members not heard from within
+//!   [`ControlOptions::stale_ms`] are evicted by a background sweep
+//!   and (belt-and-braces) on every `FleetInfo` answer, so a wedged
+//!   replica whose TCP connection stays open still leaves the fleet.
+//!
+//! Membership changes feed `obs::metrics` (`fleet.replicas` gauge,
+//! register/deregister/heartbeat/eviction counters); `gparml stats
+//! --connect <control>` scrapes them over the same `ServeStats` frame
+//! every other server answers.
+
+use std::collections::BTreeMap;
+use std::net::{TcpListener, TcpStream};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::cluster::wire::{self, Frame, ReplicaInfo, Request, Response};
+use crate::obs;
+
+/// How the control plane behaves.
+#[derive(Debug, Clone)]
+pub struct ControlOptions {
+    /// Heartbeat-staleness window: a member not heard from for this
+    /// long is evicted.
+    pub stale_ms: u64,
+    /// Background eviction sweep cadence.
+    pub sweep_ms: u64,
+}
+
+impl Default for ControlOptions {
+    fn default() -> ControlOptions {
+        ControlOptions {
+            stale_ms: 5_000,
+            sweep_ms: 500,
+        }
+    }
+}
+
+struct Member {
+    model_version: u64,
+    last_seen: Instant,
+    /// The control connection this registration is tied to; when it
+    /// drops, the member goes with it.
+    conn_id: u64,
+}
+
+/// The fleet membership state machine, separated from the accept loop
+/// so it can be unit-tested with explicit clocks (`now` is always a
+/// parameter, never sampled inside).
+pub struct FleetRegistry {
+    registry: obs::Registry,
+    inner: Mutex<BTreeMap<String, Member>>,
+    replicas: Arc<obs::Gauge>,
+    registers: Arc<obs::Counter>,
+    deregisters: Arc<obs::Counter>,
+    heartbeats: Arc<obs::Counter>,
+    evictions: Arc<obs::Counter>,
+}
+
+impl Default for FleetRegistry {
+    fn default() -> FleetRegistry {
+        FleetRegistry::new()
+    }
+}
+
+impl FleetRegistry {
+    pub fn new() -> FleetRegistry {
+        let registry = obs::Registry::new();
+        FleetRegistry {
+            replicas: registry.gauge("fleet.replicas"),
+            registers: registry.counter("fleet.registers"),
+            deregisters: registry.counter("fleet.deregisters"),
+            heartbeats: registry.counter("fleet.heartbeats"),
+            evictions: registry.counter("fleet.evictions"),
+            inner: Mutex::new(BTreeMap::new()),
+            registry,
+        }
+    }
+
+    /// The metrics registry membership feeds — the accept loop hangs
+    /// its request counters off the same one, so a single `ServeStats`
+    /// snapshot shows both.
+    pub fn obs(&self) -> &obs::Registry {
+        &self.registry
+    }
+
+    /// Explicit join (or upsert) of `addr`, tied to control connection
+    /// `conn_id`.
+    pub fn register(&self, addr: &str, model_version: u64, conn_id: u64, now: Instant) {
+        let mut g = self.inner.lock().expect("fleet registry poisoned");
+        let prior = g.insert(
+            addr.to_string(),
+            Member {
+                model_version,
+                last_seen: now,
+                conn_id,
+            },
+        );
+        if prior.is_none() {
+            self.registers.inc();
+            eprintln!("[gparml-control] replica {addr} joined (model version {model_version})");
+        }
+        self.replicas.set(g.len() as u64);
+    }
+
+    /// Liveness + model-version refresh. A heartbeat for an unknown
+    /// address is an implicit re-register (v8 contract), so replicas
+    /// that reconnect after a control restart or connection drop
+    /// rejoin without special-casing.
+    pub fn heartbeat(&self, addr: &str, model_version: u64, conn_id: u64, now: Instant) {
+        let mut g = self.inner.lock().expect("fleet registry poisoned");
+        match g.get_mut(addr) {
+            Some(member) => {
+                member.model_version = model_version;
+                member.last_seen = now;
+                member.conn_id = conn_id;
+            }
+            None => {
+                g.insert(
+                    addr.to_string(),
+                    Member {
+                        model_version,
+                        last_seen: now,
+                        conn_id,
+                    },
+                );
+                self.registers.inc();
+                eprintln!(
+                    "[gparml-control] replica {addr} re-joined via heartbeat \
+                     (model version {model_version})"
+                );
+            }
+        }
+        self.heartbeats.inc();
+        self.replicas.set(g.len() as u64);
+    }
+
+    /// Clean leave; unknown addresses are ignored (idempotent).
+    pub fn deregister(&self, addr: &str) {
+        let mut g = self.inner.lock().expect("fleet registry poisoned");
+        if g.remove(addr).is_some() {
+            self.deregisters.inc();
+            eprintln!("[gparml-control] replica {addr} left");
+        }
+        self.replicas.set(g.len() as u64);
+    }
+
+    /// A control connection died: drop every member registered through
+    /// it (implicit deregister).
+    pub fn drop_conn(&self, conn_id: u64) {
+        let mut g = self.inner.lock().expect("fleet registry poisoned");
+        let doomed: Vec<String> = g
+            .iter()
+            .filter(|(_, m)| m.conn_id == conn_id)
+            .map(|(a, _)| a.clone())
+            .collect();
+        for addr in doomed {
+            g.remove(&addr);
+            self.deregisters.inc();
+            eprintln!("[gparml-control] replica {addr} dropped (control connection closed)");
+        }
+        self.replicas.set(g.len() as u64);
+    }
+
+    /// Evict members not heard from within `window`; returns the
+    /// evicted addresses (logged by callers).
+    pub fn evict_stale(&self, now: Instant, window: Duration) -> Vec<String> {
+        let mut g = self.inner.lock().expect("fleet registry poisoned");
+        let doomed: Vec<String> = g
+            .iter()
+            .filter(|(_, m)| now.saturating_duration_since(m.last_seen) > window)
+            .map(|(a, _)| a.clone())
+            .collect();
+        for addr in &doomed {
+            g.remove(addr);
+            self.evictions.inc();
+            eprintln!("[gparml-control] replica {addr} evicted (heartbeat stale)");
+        }
+        self.replicas.set(g.len() as u64);
+        doomed
+    }
+
+    /// The live member set, sorted by address (BTreeMap order — equal
+    /// registries produce equal snapshots).
+    pub fn snapshot(&self, now: Instant) -> Vec<ReplicaInfo> {
+        let g = self.inner.lock().expect("fleet registry poisoned");
+        g.iter()
+            .map(|(addr, m)| ReplicaInfo {
+                addr: addr.clone(),
+                model_version: m.model_version,
+                age_ms: now.saturating_duration_since(m.last_seen).as_millis() as u64,
+            })
+            .collect()
+    }
+}
+
+/// Run the control plane on `listener` forever (the process is ended
+/// by its operator; there is no client-count exit — a fleet outlives
+/// any one member).
+pub fn run_control(listener: &TcpListener, opts: &ControlOptions) -> Result<()> {
+    let reg = FleetRegistry::new();
+    // pre-create the request counters so a stats scrape of an idle
+    // control plane still shows them (at zero)
+    reg.obs().counter("fleet.requests.info");
+    reg.obs().counter("fleet.requests.stats");
+    reg.obs().counter("fleet.requests.rejected");
+    let conns = reg.obs().counter("fleet.connections");
+    let stale = Duration::from_millis(opts.stale_ms.max(1));
+    let mut next_conn = 0u64;
+
+    std::thread::scope(|s| -> Result<()> {
+        // background staleness sweep: a wedged replica whose TCP
+        // connection stays open must still leave the fleet
+        {
+            let reg = &reg;
+            s.spawn(move || loop {
+                std::thread::sleep(Duration::from_millis(opts.sweep_ms.max(10)));
+                reg.evict_stale(Instant::now(), stale);
+            });
+        }
+        loop {
+            match listener.accept() {
+                Ok((stream, peer)) => {
+                    conns.inc();
+                    let conn_id = next_conn;
+                    next_conn += 1;
+                    let reg = &reg;
+                    s.spawn(move || {
+                        let served = control_client(stream, conn_id, reg, stale);
+                        // implicit deregister: the registration dies
+                        // with the connection that carried it
+                        reg.drop_conn(conn_id);
+                        match served {
+                            Ok(n) => {
+                                eprintln!("[gparml-control] connection {peer}: {n} request(s)")
+                            }
+                            Err(e) => {
+                                eprintln!("[gparml-control] connection {peer} failed: {e:#}")
+                            }
+                        }
+                    });
+                }
+                // transient under load: log, back off, keep going
+                Err(e) => {
+                    eprintln!("[gparml-control] accept failed (retrying): {e}");
+                    std::thread::sleep(Duration::from_millis(50));
+                }
+            }
+        }
+    })
+}
+
+/// Serve one control connection until `Shutdown`, EOF or an error.
+fn control_client(
+    mut stream: TcpStream,
+    conn_id: u64,
+    reg: &FleetRegistry,
+    stale: Duration,
+) -> Result<u64> {
+    stream.set_nodelay(true).ok();
+    let mut served = 0u64;
+    loop {
+        let (trace_id, req) = match wire::read_frame(&mut stream)? {
+            None | Some((Frame::Shutdown, _)) => return Ok(served),
+            Some((Frame::Ping, _)) => {
+                wire::write_frame(&mut stream, &Frame::Pong)?;
+                served += 1;
+                continue;
+            }
+            Some((Frame::Request { trace_id, req }, _)) => (trace_id, req),
+            Some((f, _)) => bail!("unexpected frame {f:?} from control client"),
+        };
+        let resp = match *req {
+            Request::Register {
+                ref addr,
+                model_version,
+            } => {
+                reg.register(addr, model_version, conn_id, Instant::now());
+                Response::Ok
+            }
+            Request::ReplicaHeartbeat {
+                ref addr,
+                model_version,
+            } => {
+                reg.heartbeat(addr, model_version, conn_id, Instant::now());
+                Response::Ok
+            }
+            Request::Deregister { ref addr } => {
+                reg.deregister(addr);
+                Response::Ok
+            }
+            Request::FleetInfo => {
+                reg.obs().counter("fleet.requests.info").inc();
+                let now = Instant::now();
+                reg.evict_stale(now, stale);
+                Response::FleetInfo {
+                    replicas: reg.snapshot(now),
+                }
+            }
+            Request::ServeStats => {
+                reg.obs().counter("fleet.requests.stats").inc();
+                Response::StatsJson(reg.obs().snapshot_json().to_string())
+            }
+            ref other => {
+                reg.obs().counter("fleet.requests.rejected").inc();
+                Response::Err(format!(
+                    "control plane only answers Register/Deregister/ReplicaHeartbeat/\
+                     FleetInfo/ServeStats, got {other:?}"
+                ))
+            }
+        };
+        wire::write_frame(
+            &mut stream,
+            &Frame::Response {
+                trace_id,
+                secs: 0.0,
+                psi_fills: 0,
+                resp: Box::new(resp),
+            },
+        )?;
+        served += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const WINDOW: Duration = Duration::from_millis(1_000);
+
+    #[test]
+    fn register_heartbeat_snapshot_lifecycle() {
+        let reg = FleetRegistry::new();
+        let t0 = Instant::now();
+        reg.register("10.0.0.1:7000", 1, 0, t0);
+        reg.register("10.0.0.2:7000", 1, 1, t0);
+        let snap = reg.snapshot(t0);
+        assert_eq!(snap.len(), 2);
+        // sorted by address, ages relative to `now`
+        assert_eq!(snap[0].addr, "10.0.0.1:7000");
+        assert_eq!(snap[1].addr, "10.0.0.2:7000");
+        assert_eq!(snap[0].age_ms, 0);
+
+        // heartbeat refreshes liveness and carries the reload counter
+        let t1 = t0 + Duration::from_millis(300);
+        reg.heartbeat("10.0.0.1:7000", 5, 0, t1);
+        let snap = reg.snapshot(t1);
+        assert_eq!(snap[0].model_version, 5);
+        assert_eq!(snap[0].age_ms, 0);
+        assert_eq!(snap[1].age_ms, 300);
+
+        // clean leave is idempotent
+        reg.deregister("10.0.0.2:7000");
+        reg.deregister("10.0.0.2:7000");
+        assert_eq!(reg.snapshot(t1).len(), 1);
+    }
+
+    #[test]
+    fn stale_members_are_evicted_fresh_ones_kept() {
+        let reg = FleetRegistry::new();
+        let t0 = Instant::now();
+        reg.register("a:1", 1, 0, t0);
+        reg.register("b:1", 1, 1, t0);
+        let t1 = t0 + Duration::from_millis(800);
+        reg.heartbeat("b:1", 1, 1, t1);
+        // a:1 is now 1200ms stale, b:1 only 400ms
+        let t2 = t0 + Duration::from_millis(1_200);
+        let evicted = reg.evict_stale(t2, WINDOW);
+        assert_eq!(evicted, vec!["a:1".to_string()]);
+        let snap = reg.snapshot(t2);
+        assert_eq!(snap.len(), 1);
+        assert_eq!(snap[0].addr, "b:1");
+        // exactly at the window boundary is NOT stale (> window evicts)
+        let t3 = t1 + WINDOW;
+        assert!(reg.evict_stale(t3, WINDOW).is_empty());
+        assert_eq!(reg.snapshot(t3).len(), 1);
+    }
+
+    #[test]
+    fn heartbeat_for_unknown_addr_is_implicit_register() {
+        let reg = FleetRegistry::new();
+        let t0 = Instant::now();
+        reg.heartbeat("c:9", 3, 7, t0);
+        let snap = reg.snapshot(t0);
+        assert_eq!(snap.len(), 1);
+        assert_eq!(snap[0].addr, "c:9");
+        assert_eq!(snap[0].model_version, 3);
+    }
+
+    #[test]
+    fn conn_drop_removes_only_that_connections_members() {
+        let reg = FleetRegistry::new();
+        let t0 = Instant::now();
+        reg.register("a:1", 1, 0, t0);
+        reg.register("b:1", 1, 1, t0);
+        reg.drop_conn(0);
+        let snap = reg.snapshot(t0);
+        assert_eq!(snap.len(), 1);
+        assert_eq!(snap[0].addr, "b:1");
+        // a reconnecting replica re-registers under its new conn id
+        reg.heartbeat("a:1", 2, 5, t0);
+        assert_eq!(reg.snapshot(t0).len(), 2);
+        reg.drop_conn(1);
+        reg.drop_conn(5);
+        assert!(reg.snapshot(t0).is_empty());
+    }
+}

@@ -1,0 +1,864 @@
+//! The fleet front door (`gparml lb`): one address that speaks the
+//! same wire frames a single `gparml serve` replica would, backed by
+//! many of them (DESIGN.md §12).
+//!
+//! Routing policy: among backends that are healthy and not draining,
+//! pick the least-in-flight one, breaking ties round-robin. A
+//! transport failure (dial, write, read, desync) marks the backend
+//! unhealthy and retries the SAME request ONCE on a sibling, so a
+//! `SIGKILL`ed replica costs clients latency, not errors. Semantic
+//! errors (`Response::Err` from a replica that answered) are forwarded
+//! as-is — the replica spoke; re-asking a sibling would just repeat
+//! the answer.
+//!
+//! Membership comes from one of two upstreams: a control plane polled
+//! for `FleetInfo` on an interval, or a static backend list probed
+//! with `ModelInfo` (which doubles as the health check and the
+//! version-skew source). Version skew across healthy backends is
+//! surfaced as the `lb.version_skew` gauge and by `ModelInfo` answers
+//! (each reports the version of whichever replica answered it).
+//!
+//! `Reload` is NOT forwarded to one replica: the lb drives it as a
+//! rolling swap across the whole fleet (drain, reload, verify the
+//! version advanced, re-enable, next), one replica out of rotation at
+//! a time — see [`rolling_reload`].
+//!
+//! Determinism contract: the lb never touches payload floats; every
+//! f64 crosses it bit-for-bit, so a predict through the front door
+//! equals a direct predict against any same-version replica exactly.
+
+use std::collections::HashMap;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::cluster::wire::{self, Frame, Request, Response};
+use crate::fleet::client::ControlClient;
+use crate::model::serve::{ConnectOpts, ServeClient, ServedModelInfo};
+use crate::obs;
+
+/// How the front door behaves.
+#[derive(Debug, Clone)]
+pub struct LbOptions {
+    /// Exit after this many counted clients (0 = run forever). Same
+    /// counting rule as `serve`: a connection counts once it completes
+    /// ≥ 1 valid request-bearing frame.
+    pub max_clients: u64,
+    /// Membership refresh cadence: control-plane `FleetInfo` poll, or
+    /// static-backend `ModelInfo` probe.
+    pub refresh_ms: u64,
+    /// Rolling reload: per-replica bound on waiting for its in-flight
+    /// count to reach zero before asking it to reload.
+    pub drain_timeout_ms: u64,
+    /// Dial/read policy for backend and control connections. Retries
+    /// are forced off internally — failover to a sibling IS the lb's
+    /// retry policy, and it must not double up underneath.
+    pub connect: ConnectOpts,
+}
+
+impl Default for LbOptions {
+    fn default() -> LbOptions {
+        LbOptions {
+            max_clients: 0,
+            refresh_ms: 1_000,
+            drain_timeout_ms: 10_000,
+            connect: ConnectOpts::default(),
+        }
+    }
+}
+
+/// Where the lb learns its backend set.
+#[derive(Debug, Clone)]
+pub enum Upstream {
+    /// Poll a `gparml control` plane for the live replica set.
+    Control(String),
+    /// A fixed backend list — no control plane; health and model
+    /// versions come from probing each backend directly.
+    Static(Vec<String>),
+}
+
+/// What `run_lb` did, for callers and tests.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LbStats {
+    /// Connections that completed ≥ 1 valid request-bearing frame.
+    pub clients: u64,
+    /// Requests answered (compute + control, across all clients).
+    pub requests: u64,
+    /// Requests saved by the one-sibling retry after a backend failed.
+    pub failovers: u64,
+    /// Replicas successfully rolled by fleet-wide reloads.
+    pub reloads: u64,
+}
+
+/// Grace window for the shutdown drain, mirroring `serve`.
+const DRAIN_GRACE_MS: u64 = 10_000;
+
+#[derive(Default)]
+struct Counters {
+    clients: AtomicU64,
+    requests: AtomicU64,
+    failovers: AtomicU64,
+    reloads: AtomicU64,
+    /// Connection threads currently running (shutdown barrier).
+    active_conns: AtomicU64,
+}
+
+/// One backend replica as the lb sees it. Health and drain flags are
+/// routing inputs only; the entry (and its in-flight count) survives
+/// membership refreshes so counts never reset mid-request.
+struct Backend {
+    addr: String,
+    /// Cleared on transport failure, restored by the next successful
+    /// membership refresh/probe (the failover path protects clients
+    /// in between).
+    healthy: AtomicBool,
+    /// Set while a rolling reload holds this replica out of rotation.
+    draining: AtomicBool,
+    /// Requests currently forwarded to this backend.
+    in_flight: AtomicU64,
+    /// Last model version this backend reported (refresh or reply).
+    model_version: AtomicU64,
+}
+
+/// The routing pool: the live backend set plus the round-robin cursor
+/// used to break least-in-flight ties.
+struct Pool {
+    members: RwLock<Vec<Arc<Backend>>>,
+    rr: AtomicUsize,
+    backends_gauge: Arc<obs::Gauge>,
+    healthy_gauge: Arc<obs::Gauge>,
+    skew_gauge: Arc<obs::Gauge>,
+}
+
+impl Pool {
+    fn new(registry: &obs::Registry) -> Pool {
+        Pool {
+            members: RwLock::new(Vec::new()),
+            rr: AtomicUsize::new(0),
+            backends_gauge: registry.gauge("lb.backends"),
+            healthy_gauge: registry.gauge("lb.healthy"),
+            skew_gauge: registry.gauge("lb.version_skew"),
+        }
+    }
+
+    /// Reconcile the member set against `infos` (addr, model version):
+    /// existing entries are kept (their in-flight counts persist) and
+    /// re-marked healthy — the upstream just vouched for them; if one
+    /// is actually unreachable the next forward re-marks it unhealthy
+    /// and fails over, so clients stay whole either way. New addresses
+    /// join healthy; vanished ones are dropped.
+    fn set_members(&self, infos: &[(String, u64)]) {
+        let mut members = self.members.write().expect("lb pool poisoned");
+        let mut next = Vec::with_capacity(infos.len());
+        for (addr, version) in infos {
+            match members.iter().find(|b| &b.addr == addr) {
+                Some(existing) => {
+                    existing.model_version.store(*version, Ordering::Release);
+                    existing.healthy.store(true, Ordering::Release);
+                    next.push(existing.clone());
+                }
+                None => {
+                    eprintln!("[gparml-lb] backend {addr} joined (model version {version})");
+                    next.push(Arc::new(Backend {
+                        addr: addr.clone(),
+                        healthy: AtomicBool::new(true),
+                        draining: AtomicBool::new(false),
+                        in_flight: AtomicU64::new(0),
+                        model_version: AtomicU64::new(*version),
+                    }));
+                }
+            }
+        }
+        for old in members.iter() {
+            if !infos.iter().any(|(addr, _)| addr == &old.addr) {
+                eprintln!("[gparml-lb] backend {} left", old.addr);
+            }
+        }
+        *members = next;
+        drop(members);
+        self.update_gauges();
+    }
+
+    /// Pick a backend for one request: healthy, not draining, not the
+    /// `exclude` address (the one that just failed), least in-flight,
+    /// round-robin among ties.
+    fn pick(&self, exclude: Option<&str>) -> Option<Arc<Backend>> {
+        let members = self.members.read().expect("lb pool poisoned");
+        let eligible: Vec<&Arc<Backend>> = members
+            .iter()
+            .filter(|b| {
+                b.healthy.load(Ordering::Acquire)
+                    && !b.draining.load(Ordering::Acquire)
+                    && match exclude {
+                        Some(addr) => b.addr != addr,
+                        None => true,
+                    }
+            })
+            .collect();
+        let min = eligible
+            .iter()
+            .map(|b| b.in_flight.load(Ordering::Acquire))
+            .min()?;
+        let tied: Vec<&Arc<Backend>> = eligible
+            .into_iter()
+            .filter(|b| b.in_flight.load(Ordering::Acquire) == min)
+            .collect();
+        let at = self.rr.fetch_add(1, Ordering::AcqRel) % tied.len();
+        Some(tied[at].clone())
+    }
+
+    /// The current member set in upstream (address-sorted) order.
+    fn snapshot(&self) -> Vec<Arc<Backend>> {
+        self.members.read().expect("lb pool poisoned").clone()
+    }
+
+    fn update_gauges(&self) {
+        let members = self.members.read().expect("lb pool poisoned");
+        self.backends_gauge.set(members.len() as u64);
+        let healthy: Vec<&Arc<Backend>> = members
+            .iter()
+            .filter(|b| b.healthy.load(Ordering::Acquire))
+            .collect();
+        self.healthy_gauge.set(healthy.len() as u64);
+        let mut versions: Vec<u64> = healthy
+            .iter()
+            .map(|b| b.model_version.load(Ordering::Acquire))
+            .collect();
+        versions.sort_unstable();
+        versions.dedup();
+        self.skew_gauge.set(u64::from(versions.len() > 1));
+    }
+}
+
+/// Cached handles into the lb [`obs::Registry`] (it answers
+/// `ServeStats` frames with its own snapshot, like every other
+/// gparml server).
+struct LbMetrics {
+    registry: obs::Registry,
+    clients: Arc<obs::Counter>,
+    req_predict: Arc<obs::Counter>,
+    req_project: Arc<obs::Counter>,
+    req_model_info: Arc<obs::Counter>,
+    req_reload: Arc<obs::Counter>,
+    req_stats: Arc<obs::Counter>,
+    req_ping: Arc<obs::Counter>,
+    req_rejected: Arc<obs::Counter>,
+    /// Requests saved by the one-sibling retry.
+    failovers: Arc<obs::Counter>,
+    /// Backend transport failures observed while forwarding.
+    backend_errors: Arc<obs::Counter>,
+    /// Requests refused because no eligible backend remained.
+    no_backend: Arc<obs::Counter>,
+    /// Replicas rolled by fleet-wide reloads.
+    reloads: Arc<obs::Counter>,
+    /// Accept -> reply-written latency per forwarded request.
+    request_ns: Arc<obs::Histogram>,
+}
+
+impl LbMetrics {
+    fn new() -> LbMetrics {
+        let registry = obs::Registry::new();
+        LbMetrics {
+            clients: registry.counter("lb.clients"),
+            req_predict: registry.counter("lb.requests.predict"),
+            req_project: registry.counter("lb.requests.project"),
+            req_model_info: registry.counter("lb.requests.model_info"),
+            req_reload: registry.counter("lb.requests.reload"),
+            req_stats: registry.counter("lb.requests.stats"),
+            req_ping: registry.counter("lb.requests.ping"),
+            req_rejected: registry.counter("lb.requests.rejected"),
+            failovers: registry.counter("lb.failovers"),
+            backend_errors: registry.counter("lb.backend_errors"),
+            no_backend: registry.counter("lb.no_backend"),
+            reloads: registry.counter("lb.reloads"),
+            request_ns: registry.histogram("lb.request_ns"),
+            registry,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// server
+// ---------------------------------------------------------------------------
+
+/// Run the front door on `listener` until [`LbOptions::max_clients`]
+/// counted clients have been served (0 = forever). Blocks; returns the
+/// run's [`LbStats`]. The accept/drain scaffolding mirrors
+/// `model::serve::serve` so tests and the bench can drive it the same
+/// way.
+pub fn run_lb(listener: &TcpListener, upstream: &Upstream, opts: &LbOptions) -> Result<LbStats> {
+    listener
+        .set_nonblocking(true)
+        .context("setting the lb listener nonblocking")?;
+    let metrics = LbMetrics::new();
+    let pool = Pool::new(&metrics.registry);
+    // static members route immediately; the refresher only adjusts
+    // health and versions. Control members arrive on the first poll.
+    if let Upstream::Static(addrs) = upstream {
+        let infos: Vec<(String, u64)> = addrs.iter().map(|a| (a.clone(), 0)).collect();
+        pool.set_members(&infos);
+    }
+    let counters = Counters::default();
+    let stop_refresh = AtomicBool::new(false);
+    // socket handles of live connections, so the shutdown drain can
+    // force-close stragglers (handlers deregister on exit)
+    let registry: Mutex<HashMap<u64, TcpStream>> = Mutex::new(HashMap::new());
+    let mut next_conn = 0u64;
+
+    std::thread::scope(|s| {
+        {
+            let (pool, metrics, stop) = (&pool, &metrics, &stop_refresh);
+            s.spawn(move || refresher(upstream, pool, opts, stop, metrics));
+        }
+        loop {
+            let served = counters.clients.load(Ordering::Acquire);
+            if opts.max_clients != 0 && served >= opts.max_clients {
+                break;
+            }
+            match listener.accept() {
+                Ok((stream, peer)) => {
+                    counters.active_conns.fetch_add(1, Ordering::AcqRel);
+                    let conn_id = next_conn;
+                    next_conn += 1;
+                    if let Ok(clone) = stream.try_clone() {
+                        registry
+                            .lock()
+                            .expect("conn registry poisoned")
+                            .insert(conn_id, clone);
+                    }
+                    let (pool, counters, registry, metrics) =
+                        (&pool, &counters, &registry, &metrics);
+                    s.spawn(move || {
+                        let client = lb_client(stream, pool, opts, counters, metrics);
+                        match client {
+                            Ok(requests) => {
+                                eprintln!("[gparml-lb] client {peer}: {requests} request(s)")
+                            }
+                            Err(e) => eprintln!("[gparml-lb] client {peer} failed: {e:#}"),
+                        }
+                        registry
+                            .lock()
+                            .expect("conn registry poisoned")
+                            .remove(&conn_id);
+                        counters.active_conns.fetch_sub(1, Ordering::AcqRel);
+                    });
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                // transient under load: log, back off, keep serving
+                Err(e) => {
+                    eprintln!("[gparml-lb] accept failed (retrying): {e}");
+                    std::thread::sleep(Duration::from_millis(50));
+                }
+            }
+        }
+        // drain in-flight connections, force-closing stragglers after
+        // the grace window so `--clients N` always exits
+        let mut waited_ms = 0u64;
+        while counters.active_conns.load(Ordering::Acquire) > 0 {
+            std::thread::sleep(Duration::from_millis(5));
+            waited_ms += 5;
+            if waited_ms == DRAIN_GRACE_MS {
+                let conns = registry.lock().expect("conn registry poisoned");
+                if !conns.is_empty() {
+                    eprintln!(
+                        "[gparml-lb] force-closing {} lingering connection(s) after the \
+                         {DRAIN_GRACE_MS}ms drain grace",
+                        conns.len()
+                    );
+                    for conn in conns.values() {
+                        let _ = conn.shutdown(std::net::Shutdown::Both);
+                    }
+                }
+            }
+        }
+        stop_refresh.store(true, Ordering::Release);
+    });
+    listener.set_nonblocking(false).ok();
+
+    Ok(LbStats {
+        clients: counters.clients.load(Ordering::Acquire),
+        requests: counters.requests.load(Ordering::Acquire),
+        failovers: counters.failovers.load(Ordering::Acquire),
+        reloads: counters.reloads.load(Ordering::Acquire),
+    })
+}
+
+/// Keep the pool in sync with the upstream until `stop` is set. A poll
+/// failure leaves the pool unchanged — the lb keeps routing to the
+/// last known set rather than dropping to zero backends because the
+/// control plane blipped.
+fn refresher(
+    upstream: &Upstream,
+    pool: &Pool,
+    opts: &LbOptions,
+    stop: &AtomicBool,
+    metrics: &LbMetrics,
+) {
+    let mut control: Option<ControlClient> = None;
+    let mut probes: HashMap<String, ServeClient> = HashMap::new();
+    let mut control_down = false;
+    while !stop.load(Ordering::Acquire) {
+        match upstream {
+            Upstream::Control(addr) => {
+                let polled = poll_control(&mut control, addr, &opts.connect);
+                match polled {
+                    Ok(infos) => {
+                        pool.set_members(&infos);
+                        if control_down {
+                            eprintln!("[gparml-lb] control plane at {addr} is back");
+                            control_down = false;
+                        }
+                    }
+                    Err(e) => {
+                        control = None;
+                        if !control_down {
+                            eprintln!(
+                                "[gparml-lb] control plane at {addr} unreachable (routing to \
+                                 the last known set; will keep retrying): {e:#}"
+                            );
+                            control_down = true;
+                        }
+                    }
+                }
+            }
+            Upstream::Static(_) => {
+                for backend in pool.snapshot() {
+                    match probe(&mut probes, &backend.addr, &opts.connect) {
+                        Ok(info) => {
+                            backend.model_version.store(info.version, Ordering::Release);
+                            if !backend.healthy.swap(true, Ordering::AcqRel) {
+                                eprintln!("[gparml-lb] backend {} is back", backend.addr);
+                            }
+                        }
+                        Err(e) => {
+                            probes.remove(&backend.addr);
+                            if backend.healthy.swap(false, Ordering::AcqRel) {
+                                metrics.backend_errors.inc();
+                                eprintln!(
+                                    "[gparml-lb] backend {} failed its probe: {e:#}",
+                                    backend.addr
+                                );
+                            }
+                        }
+                    }
+                }
+                pool.update_gauges();
+            }
+        }
+        // sleep in short steps so stop stays responsive
+        let mut slept = 0u64;
+        while slept < opts.refresh_ms.max(25) && !stop.load(Ordering::Acquire) {
+            std::thread::sleep(Duration::from_millis(25));
+            slept += 25;
+        }
+    }
+}
+
+/// One `FleetInfo` poll, (re)dialing the control plane as needed.
+fn poll_control(
+    control: &mut Option<ControlClient>,
+    addr: &str,
+    connect: &ConnectOpts,
+) -> Result<Vec<(String, u64)>> {
+    if control.is_none() {
+        *control = Some(ControlClient::with_opts(addr, connect.clone().no_retry())?);
+    }
+    let replicas = control
+        .as_mut()
+        .expect("just checked for None")
+        .fleet_info()?;
+    Ok(replicas
+        .into_iter()
+        .map(|r| (r.addr, r.model_version))
+        .collect())
+}
+
+/// One `ModelInfo` probe of a static backend over a cached connection
+/// (the caller drops the cache entry on failure).
+fn probe(
+    probes: &mut HashMap<String, ServeClient>,
+    addr: &str,
+    connect: &ConnectOpts,
+) -> Result<ServedModelInfo> {
+    if !probes.contains_key(addr) {
+        let client = ServeClient::with_opts(addr, connect.clone().no_retry())?;
+        probes.insert(addr.to_string(), client);
+    }
+    probes.get_mut(addr).expect("just inserted").model_info()
+}
+
+// ---------------------------------------------------------------------------
+// per-connection forwarding
+// ---------------------------------------------------------------------------
+
+/// Serve one front-door client until `Shutdown`, EOF or an error.
+/// Returns the number of requests answered. Backend connections are
+/// cached per client connection (one hop each way, reused across
+/// requests) and dropped on the first transport failure.
+fn lb_client(
+    mut stream: TcpStream,
+    pool: &Pool,
+    opts: &LbOptions,
+    counters: &Counters,
+    metrics: &LbMetrics,
+) -> Result<u64> {
+    // the listener is nonblocking (accept-loop polling); the accepted
+    // socket must not inherit that
+    stream.set_nonblocking(false).ok();
+    stream.set_nodelay(true).ok();
+    let mut conns: HashMap<String, ServeClient> = HashMap::new();
+    let mut served = 0u64;
+    let mut counted = false;
+    loop {
+        let (trace_id, req) = match wire::read_frame(&mut stream)? {
+            None | Some((Frame::Shutdown, _)) => return Ok(served),
+            Some((Frame::Ping, _)) => {
+                count_client(&mut counted, counters, metrics);
+                metrics.req_ping.inc();
+                wire::write_frame(&mut stream, &Frame::Pong)?;
+                served += 1;
+                counters.requests.fetch_add(1, Ordering::AcqRel);
+                continue;
+            }
+            Some((Frame::Request { trace_id, req }, _)) => {
+                count_client(&mut counted, counters, metrics);
+                (trace_id, req)
+            }
+            Some((f, _)) => bail!("unexpected frame {f:?} from lb client"),
+        };
+        let t0 = Instant::now();
+        match &*req {
+            Request::ServePredict { .. } | Request::ServeProject { .. } | Request::ModelInfo => {
+                match &*req {
+                    Request::ServePredict { .. } => metrics.req_predict.inc(),
+                    Request::ServeProject { .. } => metrics.req_project.inc(),
+                    _ => metrics.req_model_info.inc(),
+                }
+                let resp = forward(&mut conns, pool, opts, trace_id, &req, counters, metrics);
+                respond(&mut stream, trace_id, resp)?;
+            }
+            Request::Reload => {
+                metrics.req_reload.inc();
+                let resp = match rolling_reload(pool, opts, counters, metrics) {
+                    Ok(resp) => resp,
+                    Err(e) => Response::Err(format!("{e:#}")),
+                };
+                respond(&mut stream, trace_id, resp)?;
+            }
+            // the lb answers stats from its OWN registry — scrape a
+            // replica directly for per-replica serve metrics
+            Request::ServeStats => {
+                metrics.req_stats.inc();
+                let json = metrics.registry.snapshot_json().to_string();
+                respond(&mut stream, trace_id, Response::StatsJson(json))?;
+            }
+            other => {
+                metrics.req_rejected.inc();
+                respond(
+                    &mut stream,
+                    trace_id,
+                    Response::Err(format!(
+                        "lb front door only answers ServePredict/ServeProject/ModelInfo/\
+                         Reload/ServeStats, got {other:?}"
+                    )),
+                )?;
+            }
+        }
+        metrics.request_ns.record(t0.elapsed().as_nanos() as u64);
+        served += 1;
+        counters.requests.fetch_add(1, Ordering::AcqRel);
+    }
+}
+
+/// Route one request to a healthy replica, preserving the client's
+/// trace id across the hop. A transport failure marks the backend
+/// unhealthy and retries ONCE on a sibling (never the same address);
+/// a second failure — or an empty pool — yields `Response::Err`.
+#[allow(clippy::too_many_arguments)]
+fn forward(
+    conns: &mut HashMap<String, ServeClient>,
+    pool: &Pool,
+    opts: &LbOptions,
+    trace_id: u64,
+    req: &Request,
+    counters: &Counters,
+    metrics: &LbMetrics,
+) -> Response {
+    let mut failed: Option<String> = None;
+    for attempt in 0..2 {
+        let Some(backend) = pool.pick(failed.as_deref()) else {
+            break;
+        };
+        backend.in_flight.fetch_add(1, Ordering::AcqRel);
+        let result = backend_request(conns, &backend.addr, &opts.connect, trace_id, req);
+        backend.in_flight.fetch_sub(1, Ordering::AcqRel);
+        match result {
+            Ok(resp) => {
+                if let Response::ModelInfo { version, .. } = &resp {
+                    backend.model_version.store(*version, Ordering::Release);
+                    pool.update_gauges();
+                }
+                if attempt == 1 {
+                    counters.failovers.fetch_add(1, Ordering::AcqRel);
+                    metrics.failovers.inc();
+                }
+                return resp;
+            }
+            Err(e) => {
+                eprintln!(
+                    "[gparml-lb] backend {} failed{}: {e:#}",
+                    backend.addr,
+                    if attempt == 0 { ", retrying on a sibling" } else { "" }
+                );
+                metrics.backend_errors.inc();
+                backend.healthy.store(false, Ordering::Release);
+                pool.update_gauges();
+                conns.remove(&backend.addr);
+                failed = Some(backend.addr.clone());
+            }
+        }
+    }
+    metrics.no_backend.inc();
+    Response::Err(match failed {
+        Some(addr) => format!("no healthy replica could answer (last failure on {addr})"),
+        None => "no healthy replicas in the fleet".to_string(),
+    })
+}
+
+/// One request over the cached per-client-connection backend link,
+/// dialing lazily. Exactly one attempt — failover policy lives in
+/// [`forward`].
+fn backend_request(
+    conns: &mut HashMap<String, ServeClient>,
+    addr: &str,
+    connect: &ConnectOpts,
+    trace_id: u64,
+    req: &Request,
+) -> Result<Response> {
+    if !conns.contains_key(addr) {
+        let client = ServeClient::with_opts(addr, connect.clone().no_retry())?;
+        conns.insert(addr.to_string(), client);
+    }
+    conns
+        .get_mut(addr)
+        .expect("just inserted")
+        .request_with_id(trace_id, req)
+}
+
+// ---------------------------------------------------------------------------
+// rolling reload
+// ---------------------------------------------------------------------------
+
+/// Drive a fleet-wide reload as a rolling swap, in address order: take
+/// one replica out of rotation (drain flag), wait for its in-flight
+/// count to reach zero, ask it to reload over a direct connection,
+/// verify the version advanced, put it back, move on. One replica is
+/// out at a time, so a fleet of ≥ 2 keeps serving throughout.
+///
+/// Stops at the first failure (already-rolled replicas keep the new
+/// model — reloads are idempotent on the artifact bytes, so re-issuing
+/// once the replica is fixed converges the rest). On success answers
+/// with the last replica's `ModelInfo`, and warns + sets the
+/// `lb.version_skew` gauge if the fleet's versions still disagree
+/// (replicas restarted at different times count reloads from
+/// different bases).
+fn rolling_reload(
+    pool: &Pool,
+    opts: &LbOptions,
+    counters: &Counters,
+    metrics: &LbMetrics,
+) -> Result<Response> {
+    let members = pool.snapshot();
+    if members.is_empty() {
+        bail!("no replicas in the fleet to reload");
+    }
+    let mut last: Option<ServedModelInfo> = None;
+    for backend in &members {
+        if !backend.healthy.load(Ordering::Acquire) {
+            bail!(
+                "replica {} is unhealthy; evict or recover it before a rolling reload",
+                backend.addr
+            );
+        }
+        backend.draining.store(true, Ordering::Release);
+        let drained = wait_drained(backend, opts.drain_timeout_ms);
+        let rolled = roll_one(backend, drained, opts);
+        backend.draining.store(false, Ordering::Release);
+        let info = rolled.with_context(|| {
+            format!(
+                "rolling reload stopped at replica {} (earlier replicas keep the new \
+                 model; re-issue the reload to converge)",
+                backend.addr
+            )
+        })?;
+        backend.model_version.store(info.version, Ordering::Release);
+        pool.update_gauges();
+        counters.reloads.fetch_add(1, Ordering::AcqRel);
+        metrics.reloads.inc();
+        eprintln!(
+            "[gparml-lb] rolled {} to model version {}",
+            backend.addr, info.version
+        );
+        last = Some(info);
+    }
+    let mut versions: Vec<u64> = members
+        .iter()
+        .map(|b| b.model_version.load(Ordering::Acquire))
+        .collect();
+    versions.sort_unstable();
+    versions.dedup();
+    if versions.len() > 1 {
+        eprintln!(
+            "[gparml-lb] WARNING: fleet model versions disagree after the rolling reload \
+             ({versions:?}) — replicas count reloads from their own start, so skew here \
+             means a replica joined mid-history; predictions still come from the same \
+             artifact bytes"
+        );
+    }
+    pool.update_gauges();
+    let info = last.expect("non-empty fleet rolled at least one replica");
+    Ok(Response::ModelInfo {
+        m: info.m as u32,
+        q: info.q as u32,
+        d: info.d as u32,
+        version: info.version,
+    })
+}
+
+/// Reload one drained replica over a fresh direct connection and
+/// verify its version advanced.
+fn roll_one(backend: &Backend, drained: bool, opts: &LbOptions) -> Result<ServedModelInfo> {
+    if !drained {
+        bail!(
+            "drain timed out after {}ms with {} request(s) still in flight",
+            opts.drain_timeout_ms,
+            backend.in_flight.load(Ordering::Acquire)
+        );
+    }
+    let mut direct = ServeClient::with_opts(&backend.addr, opts.connect.clone().no_retry())?;
+    let before = direct.model_info()?.version;
+    let info = direct.reload()?;
+    anyhow::ensure!(
+        info.version > before,
+        "replica reported model version {} after the reload (was {})",
+        info.version,
+        before
+    );
+    Ok(info)
+}
+
+/// Wait for a draining backend's in-flight count to reach zero,
+/// bounded by `timeout_ms`. Best-effort capacity management, not a
+/// correctness gate: a request that races the drain flag still
+/// finishes safely on the replica's old model (its reload swap is
+/// atomic and in-flight work completes first).
+fn wait_drained(backend: &Backend, timeout_ms: u64) -> bool {
+    let deadline = Instant::now() + Duration::from_millis(timeout_ms);
+    while backend.in_flight.load(Ordering::Acquire) > 0 {
+        if Instant::now() >= deadline {
+            return false;
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    true
+}
+
+/// Count this connection toward `--clients` on its first valid
+/// request-bearing frame (never at accept time) — same rule as
+/// `serve`, so tests drive both the same way.
+fn count_client(counted: &mut bool, counters: &Counters, metrics: &LbMetrics) {
+    if !*counted {
+        *counted = true;
+        counters.clients.fetch_add(1, Ordering::AcqRel);
+        metrics.clients.inc();
+    }
+}
+
+/// Write a response frame echoing the request's trace id.
+fn respond(stream: &mut TcpStream, trace_id: u64, resp: Response) -> Result<()> {
+    wire::write_frame(
+        stream,
+        &Frame::Response {
+            trace_id,
+            secs: 0.0,
+            psi_fills: 0,
+            resp: Box::new(resp),
+        },
+    )?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(addr: &str, version: u64) -> (String, u64) {
+        (addr.to_string(), version)
+    }
+
+    #[test]
+    fn pick_prefers_least_in_flight_and_skips_ineligible() {
+        let registry = obs::Registry::new();
+        let pool = Pool::new(&registry);
+        pool.set_members(&[entry("a:1", 1), entry("b:1", 1), entry("c:1", 1)]);
+        let members = pool.snapshot();
+        members[0].in_flight.store(3, Ordering::Release);
+        members[1].in_flight.store(1, Ordering::Release);
+        members[2].in_flight.store(2, Ordering::Release);
+        let picked = pool.pick(None).expect("pool non-empty");
+        assert_eq!(picked.addr, "b:1");
+
+        // the least-loaded backend is excluded after a failure
+        let picked = pool.pick(Some("b:1")).expect("siblings remain");
+        assert_eq!(picked.addr, "c:1");
+
+        // draining and unhealthy members never route
+        members[1].draining.store(true, Ordering::Release);
+        members[2].healthy.store(false, Ordering::Release);
+        let picked = pool.pick(None).expect("a:1 remains");
+        assert_eq!(picked.addr, "a:1");
+        assert!(pool.pick(Some("a:1")).is_none());
+    }
+
+    #[test]
+    fn pick_round_robins_among_ties() {
+        let registry = obs::Registry::new();
+        let pool = Pool::new(&registry);
+        pool.set_members(&[entry("a:1", 1), entry("b:1", 1)]);
+        let first = pool.pick(None).expect("pool non-empty").addr.clone();
+        let second = pool.pick(None).expect("pool non-empty").addr.clone();
+        assert_ne!(first, second, "equal in-flight counts must alternate");
+    }
+
+    #[test]
+    fn set_members_preserves_entries_and_tracks_skew() {
+        let registry = obs::Registry::new();
+        let pool = Pool::new(&registry);
+        pool.set_members(&[entry("a:1", 1), entry("b:1", 1)]);
+        let a = pool.snapshot()[0].clone();
+        a.in_flight.store(7, Ordering::Release);
+        a.healthy.store(false, Ordering::Release);
+
+        // refresh: a kept (in-flight survives, health restored by the
+        // upstream vouching for it), b dropped, c joins with a newer
+        // version -> skew gauge trips
+        pool.set_members(&[entry("a:1", 1), entry("c:1", 2)]);
+        let members = pool.snapshot();
+        assert_eq!(members.len(), 2);
+        assert_eq!(members[0].addr, "a:1");
+        assert_eq!(members[0].in_flight.load(Ordering::Acquire), 7);
+        assert!(members[0].healthy.load(Ordering::Acquire));
+        assert_eq!(members[1].addr, "c:1");
+        assert_eq!(registry.gauge("lb.version_skew").get(), 1);
+        assert_eq!(registry.gauge("lb.backends").get(), 2);
+
+        // converged versions clear the skew gauge
+        pool.set_members(&[entry("a:1", 2), entry("c:1", 2)]);
+        assert_eq!(registry.gauge("lb.version_skew").get(), 0);
+    }
+}

@@ -1,0 +1,36 @@
+//! The replicated serve fleet (DESIGN.md §12): many `gparml serve`
+//! replicas behaving as ONE service.
+//!
+//! Three pieces, all speaking the existing framed transport
+//! (`cluster/wire.rs`, v8):
+//!
+//! * [`control`] — the control plane (`gparml control`): a registry
+//!   process serve replicas register with (`Register` /
+//!   `ReplicaHeartbeat` / `Deregister` frames), with
+//!   heartbeat-staleness eviction and live `obs::metrics` gauges. It
+//!   holds no model and forwards nothing; it only answers "who is in
+//!   the fleet right now" (`FleetInfo`).
+//! * [`lb`] — the front door (`gparml lb`): accepts the same client
+//!   frames a single replica would (`ServePredict` / `ServeProject` /
+//!   `ModelInfo` / `Reload` / `ServeStats`) and routes compute across
+//!   healthy replicas (round-robin + least-in-flight), retrying a
+//!   failed replica once on a sibling, surfacing version skew via the
+//!   `ModelInfo` model version, and driving fleet-wide `Reload` as a
+//!   rolling swap.
+//! * [`client`] — the replica side: [`client::ControlClient`] (typed
+//!   verbs over a [`crate::model::serve::ServeClient`]) and the
+//!   registration loop `gparml serve --control` runs next to its
+//!   accept loop.
+//!
+//! The serving contract is unchanged: every f64 crosses each hop
+//! bit-for-bit, so a predict answered through the lb equals a direct
+//! predict against any replica of the same model exactly (tested in
+//! `tests/fleet.rs`).
+
+pub mod client;
+pub mod control;
+pub mod lb;
+
+pub use client::ControlClient;
+pub use control::{run_control, ControlOptions, FleetRegistry};
+pub use lb::{run_lb, LbOptions, LbStats, Upstream};

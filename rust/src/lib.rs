@@ -31,6 +31,7 @@ pub mod cluster;
 pub mod coordinator;
 pub mod data;
 pub mod experiments;
+pub mod fleet;
 pub mod gp;
 pub mod linalg;
 pub mod mapreduce;

@@ -19,7 +19,15 @@
 //!              [--threads W] [--batch-rows R]   # worker pool + micro-batch cap
 //!              [--fill-threads N]               # split batch rows over N threads
 //!              [--trace-out FILE]               # span JSONL (DESIGN.md §10)
+//!              [--control ADDR]                 # join a fleet (DESIGN.md §12)
+//!              [--advertise ADDR] [--heartbeat-ms N]
+//! gparml control --listen ADDR [--stale-ms N] [--sweep-ms N]
+//!                                               # fleet membership registry
+//! gparml lb --listen ADDR (--connect CONTROL | --backends A,B,...)
+//!           [--clients N] [--interval-ms N] [--drain-timeout-ms N]
+//!                                               # fleet front door
 //! gparml reload --connect ADDR                  # hot-swap the served model
+//!                                               # (via an lb: rolling fleet swap)
 //! gparml stats --connect ADDR [--json] [--watch] [--interval-ms N] [--count K]
 //!                                               # live metrics snapshot
 //! gparml worker (--listen ADDR | --connect LEADER) [--artifacts DIR]
@@ -83,6 +91,8 @@ fn run_command(args: &Args) -> Result<()> {
         Some("export") => export_cmd(args),
         Some("predict") => predict_cmd(args),
         Some("serve") => serve_cmd(args),
+        Some("control") => control_cmd(args),
+        Some("lb") => lb_cmd(args),
         Some("reload") => reload_cmd(args),
         Some("stats") => stats_cmd(args),
         Some("worker") => worker(args),
@@ -90,7 +100,7 @@ fn run_command(args: &Args) -> Result<()> {
         Some("info") => info(args),
         _ => {
             eprintln!(
-                "usage: gparml <experiment|train|export|predict|serve|reload|stats|worker|bench|info> [flags]\n\
+                "usage: gparml <experiment|train|export|predict|serve|control|lb|reload|stats|worker|bench|info> [flags]\n\
                  experiments: fig1 fig2 fig3 fig4 fig5 fig6 fig7 fig8 all\n\
                  common flags: --n --iters --workers --seed --out DIR --artifacts DIR\n\
                  cluster: gparml worker --connect LEADER_ADDR (or --listen ADDR)\n\
@@ -100,8 +110,13 @@ fn run_command(args: &Args) -> Result<()> {
                           gparml predict (--model F | --connect ADDR) [--points file.csv]\n\
                           [--project] [--out preds.csv],\n\
                           gparml serve --model F --listen ADDR [--clients N]\n\
-                          [--threads W] [--batch-rows R],\n\
+                          [--threads W] [--batch-rows R]\n\
+                          [--control ADDR --advertise ADDR --heartbeat-ms N],\n\
                           gparml reload --connect ADDR (hot-swap the served model)\n\
+                 fleet:   gparml control --listen ADDR [--stale-ms N],\n\
+                          gparml lb --listen ADDR (--connect CONTROL | --backends A,B)\n\
+                          [--interval-ms N] [--drain-timeout-ms N],\n\
+                          reload/stats/predict --connect work against an lb too\n\
                  obs:     gparml stats --connect ADDR [--json] [--watch]\n\
                           [--interval-ms N] [--count K],\n\
                           --trace-out FILE on any command (span JSONL, DESIGN.md §10)\n\
@@ -228,8 +243,8 @@ fn predict_cmd(args: &Args) -> Result<()> {
     let points = args.get("points");
 
     if let Some(addr) = args.get("connect") {
-        let mut stream = serve::connect(addr)?;
-        let info = serve::remote_model_info(&mut stream)?;
+        let mut client = serve::ServeClient::with_opts(addr, serve::ConnectOpts::from_args(args)?)?;
+        let info = client.model_info()?;
         println!(
             "predict server at {addr}: m={}, q={}, d={}, model version {}",
             info.m, info.q, info.d, info.version
@@ -238,16 +253,16 @@ fn predict_cmd(args: &Args) -> Result<()> {
             let path =
                 points.context("--project needs --points file.csv (observed outputs, d columns)")?;
             let y = load_project_points(path, info.d)?;
-            let (xmu, conf) = serve::remote_project(&mut stream, &y)?;
-            serve::hangup(&mut stream);
+            let (xmu, conf) = client.project(&y)?;
+            client.hangup();
             report_projection(args, &y, &xmu, &conf, &format!("server {addr}"))
         } else {
             let (xt_mu, xt_var) = match points {
                 Some(p) => load_predict_points(p, info.q)?,
                 None => predict_points(n, info.q, seed),
             };
-            let (mean, var, trace_id) = serve::remote_predict_traced(&mut stream, &xt_mu, &xt_var)?;
-            serve::hangup(&mut stream);
+            let (mean, var, trace_id) = client.predict_traced(&xt_mu, &xt_var)?;
+            client.hangup();
             println!("request id {trace_id:#018x} (grep it in the server's --trace-out JSONL)");
             report_prediction(args, &xt_mu, &mean, &var, &format!("server {addr}"))
         }
@@ -348,7 +363,10 @@ fn write_projections(path: &str, xmu: &Matrix, conf: &[f64]) -> Result<()> {
 
 /// `gparml serve`: the TCP serving subsystem — one hot-swappable
 /// model, a reader thread per client, a worker pool micro-batching
-/// compute across clients, zero training workers.
+/// compute across clients, zero training workers. `--control ADDR`
+/// additionally joins a fleet (DESIGN.md §12): a scoped thread
+/// registers with the control plane and heartbeats the live model
+/// version until the accept loop exits.
 fn serve_cmd(args: &Args) -> Result<()> {
     let path = args.get("model").context("serve needs --model PATH")?;
     let model = TrainedModel::load(std::path::Path::new(path))?;
@@ -356,26 +374,54 @@ fn serve_cmd(args: &Args) -> Result<()> {
     // `--fill-threads N`: split each coalesced batch's rows over N
     // threads (bit-identical at any value; survives hot reloads)
     pred.set_fill_threads(common::fill_threads(args)?);
-    let listen = args.get_str("listen", "127.0.0.1:0");
-    let opts = gparml::model::ServeOptions {
-        max_clients: args.get_usize("clients", 0)? as u64,
-        workers: args.get_usize("threads", 2)?.max(1),
-        max_batch_rows: args.get_usize("batch-rows", 4096)?,
-    };
+    let listen = common::listen_addr(args, "127.0.0.1:0")?;
+    let opts = gparml::model::ServeOptions::from_args(args)?;
     let listener =
         std::net::TcpListener::bind(listen).with_context(|| format!("binding {listen}"))?;
+    let local = listener.local_addr()?;
     println!(
-        "gparml serve: {path} (m={}, q={}, d={}) listening on {} \
+        "gparml serve: {path} (m={}, q={}, d={}) listening on {local} \
          ({} worker thread(s), micro-batch cap {} rows)",
         pred.m(),
         pred.q(),
         pred.dout(),
-        listener.local_addr()?,
         opts.workers,
         opts.max_batch_rows
     );
     let state = gparml::model::ServeState::with_path(pred, std::path::PathBuf::from(path));
-    let stats = serve::serve(&listener, &state, &opts)?;
+    let stats = match args.get("control") {
+        Some(control_addr) => {
+            // `--advertise` is the address replicas are REACHED at —
+            // defaults to the bound address, which only spans hosts if
+            // `--listen` named a routable interface
+            let advertise = args.get_str("advertise", "").to_string();
+            let advertise = if advertise.is_empty() {
+                local.to_string()
+            } else {
+                advertise
+            };
+            let heartbeat = common::interval_ms(args, "heartbeat-ms", 1000)?;
+            println!("fleet: registering with control plane at {control_addr} as {advertise}");
+            let stop = std::sync::atomic::AtomicBool::new(false);
+            let (state_ref, stop_ref) = (&state, &stop);
+            std::thread::scope(|s| {
+                let registrar = s.spawn(|| {
+                    gparml::fleet::client::registration_loop(
+                        control_addr,
+                        &advertise,
+                        state_ref,
+                        heartbeat,
+                        stop_ref,
+                    )
+                });
+                let stats = serve::serve(&listener, state_ref, &opts);
+                stop_ref.store(true, std::sync::atomic::Ordering::Release);
+                let _ = registrar.join();
+                stats
+            })?
+        }
+        None => serve::serve(&listener, &state, &opts)?,
+    };
     eprintln!(
         "[gparml-serve] exiting after {} client(s): {} request(s), {} kernel batch(es), \
          {} coalesced job(s)",
@@ -384,15 +430,84 @@ fn serve_cmd(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `gparml control`: the fleet control plane (DESIGN.md §12) — a
+/// membership registry serve replicas register with. Holds no model
+/// and forwards nothing; runs until killed.
+fn control_cmd(args: &Args) -> Result<()> {
+    let listen = common::listen_addr(args, "127.0.0.1:0")?;
+    let opts = gparml::fleet::ControlOptions {
+        stale_ms: args.get_usize("stale-ms", 5_000)?.max(1) as u64,
+        sweep_ms: args.get_usize("sweep-ms", 500)? as u64,
+    };
+    let listener =
+        std::net::TcpListener::bind(listen).with_context(|| format!("binding {listen}"))?;
+    println!(
+        "gparml control: listening on {} (staleness window {}ms, sweep every {}ms)",
+        listener.local_addr()?,
+        opts.stale_ms,
+        opts.sweep_ms
+    );
+    gparml::fleet::run_control(&listener, &opts)
+}
+
+/// `gparml lb`: the fleet front door — one serve-compatible address
+/// backed by many replicas, discovered from a control plane
+/// (`--connect`) or pinned statically (`--backends`).
+fn lb_cmd(args: &Args) -> Result<()> {
+    let listen = common::listen_addr(args, "127.0.0.1:0")?;
+    let upstream = match (args.get("connect"), args.get("backends")) {
+        (Some(control), None) => gparml::fleet::Upstream::Control(control.to_string()),
+        (None, Some(list)) => {
+            let backends: Vec<String> = list
+                .split(',')
+                .map(|a| a.trim().to_string())
+                .filter(|a| !a.is_empty())
+                .collect();
+            anyhow::ensure!(!backends.is_empty(), "--backends needs at least one HOST:PORT");
+            gparml::fleet::Upstream::Static(backends)
+        }
+        _ => bail!(
+            "lb needs exactly one of --connect CONTROL_ADDR or \
+             --backends HOST:PORT[,HOST:PORT...]"
+        ),
+    };
+    let opts = gparml::fleet::LbOptions {
+        max_clients: args.get_usize("clients", 0)? as u64,
+        refresh_ms: common::interval_ms(args, "interval-ms", 1000)?.as_millis() as u64,
+        drain_timeout_ms: args.get_usize("drain-timeout-ms", 10_000)? as u64,
+        connect: serve::ConnectOpts::from_args(args)?,
+    };
+    let listener =
+        std::net::TcpListener::bind(listen).with_context(|| format!("binding {listen}"))?;
+    let origin = match &upstream {
+        gparml::fleet::Upstream::Control(addr) => format!("control plane {addr}"),
+        gparml::fleet::Upstream::Static(list) => format!("{} static backend(s)", list.len()),
+    };
+    println!(
+        "gparml lb: listening on {} ({origin}, refresh every {}ms)",
+        listener.local_addr()?,
+        opts.refresh_ms
+    );
+    let stats = gparml::fleet::run_lb(&listener, &upstream, &opts)?;
+    eprintln!(
+        "[gparml-lb] exiting after {} client(s): {} request(s), {} failover(s), \
+         {} replica reload(s)",
+        stats.clients, stats.requests, stats.failovers, stats.reloads
+    );
+    Ok(())
+}
+
 /// `gparml reload`: tell a running predict server to atomically
 /// re-read its model artifact — the SIGHUP-equivalent control client.
+/// Pointed at an lb, the same frame drives a fleet-wide rolling swap.
 fn reload_cmd(args: &Args) -> Result<()> {
-    let addr = args
-        .get("connect")
-        .context("reload needs --connect ADDR (a running `gparml serve`)")?;
-    let mut stream = serve::connect(addr)?;
-    let info = serve::remote_reload(&mut stream)?;
-    serve::hangup(&mut stream);
+    let addr = common::connect_addr(
+        args,
+        "reload needs --connect ADDR (a running `gparml serve` or `gparml lb`)",
+    )?;
+    let mut client = serve::ServeClient::with_opts(addr, serve::ConnectOpts::from_args(args)?)?;
+    let info = client.reload()?;
+    client.hangup();
     println!(
         "reloaded: server at {addr} now serves model version {} (m={}, q={}, d={})",
         info.version, info.m, info.q, info.d
@@ -406,19 +521,22 @@ fn reload_cmd(args: &Args) -> Result<()> {
 /// `--watch` re-polls every `--interval-ms` (default 1000) until
 /// `--count` snapshots have been printed (0 = forever).
 fn stats_cmd(args: &Args) -> Result<()> {
-    let addr = args
-        .get("connect")
-        .context("stats needs --connect ADDR (a running `gparml serve`)")?;
+    let addr = common::connect_addr(
+        args,
+        "stats needs --connect ADDR (a running `gparml serve`, `control` or `lb`)",
+    )?;
     let raw = args.has("json");
     let watch = args.has("watch");
-    let interval =
-        std::time::Duration::from_millis(args.get_usize("interval-ms", 1000)?.max(1) as u64);
+    let interval = common::interval_ms(args, "interval-ms", 1000)?;
     let count = args.get_usize("count", 0)?;
+    // ONE connection held across all polls — `--watch` used to dial a
+    // fresh TCP connection per snapshot, inflating the very
+    // client/connection counters it was watching. ServeClient
+    // reconnects internally only after an error.
+    let mut client = serve::ServeClient::with_opts(addr, serve::ConnectOpts::from_args(args)?)?;
     let mut printed = 0usize;
     loop {
-        let mut stream = serve::connect(addr)?;
-        let snapshot = serve::remote_stats(&mut stream)?;
-        serve::hangup(&mut stream);
+        let snapshot = client.stats()?;
         if raw {
             println!("{snapshot}");
         } else {

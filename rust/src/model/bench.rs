@@ -26,7 +26,8 @@ use anyhow::{Context, Result};
 
 use super::artifact::{ModelMeta, TrainedModel};
 use super::predictor::{PredictScratch, Predictor};
-use super::serve::{self, ServeOptions, ServeState, ServeStats};
+use super::serve::{self, ServeClient, ServeOptions, ServeState, ServeStats};
+use crate::fleet::{run_lb, LbOptions, LbStats, Upstream};
 use crate::gp::{GlobalParams, MathMode, PosteriorWeights};
 use crate::linalg::Matrix;
 use crate::obs;
@@ -137,6 +138,21 @@ pub fn run(args: &Args) -> Result<()> {
         pct(&unbatched_hist, 0.99),
     );
 
+    // the same load through the fleet front door: one replica behind a
+    // static-upstream in-process lb, so the series isolates the lb's
+    // per-request forwarding overhead (wall-clock and deliberately NOT
+    // part of the `bench check` gate, like the other serve series)
+    let (lb_s, lb_stats, lb_hist) =
+        lb_round(&model, &xt_mu, &xt_var, clients, reps).context("bench lb round")?;
+    println!(
+        "lb ({clients} clients x {b} points, 1 replica): {:.0} ns/point through the \
+         front door (p50 {} / p99 {} ns/request, {} failover(s))",
+        per_point(lb_s),
+        pct(&lb_hist, 0.50),
+        pct(&lb_hist, 0.99),
+        lb_stats.failovers,
+    );
+
     let json = format!(
         "{{\n  \"config\": \"{cfg_name}\",\n  \"points\": {b},\n  \"m\": {m},\n  \"q\": {q},\n  \
          \"d\": {d},\n  \"reps\": {reps},\n  \"threads\": {threads},\n  \
@@ -147,7 +163,10 @@ pub fn run(args: &Args) -> Result<()> {
          \"serve_batched_p99_ns_per_request\": {},\n  \
          \"serve_unbatched_ns_per_point\": {:.1},\n  \
          \"serve_unbatched_p50_ns_per_request\": {},\n  \
-         \"serve_unbatched_p99_ns_per_request\": {}\n}}\n",
+         \"serve_unbatched_p99_ns_per_request\": {},\n  \
+         \"lb_ns_per_point\": {:.1},\n  \
+         \"lb_p50_ns_per_request\": {},\n  \
+         \"lb_p99_ns_per_request\": {}\n}}\n",
         per_point(single.median_s),
         per_point(concurrent_median),
         per_point(batched_s),
@@ -158,6 +177,9 @@ pub fn run(args: &Args) -> Result<()> {
         per_point(unbatched_s),
         pct(&unbatched_hist, 0.50),
         pct(&unbatched_hist, 0.99),
+        per_point(lb_s),
+        pct(&lb_hist, 0.50),
+        pct(&lb_hist, 0.99),
     );
     std::fs::write(out_path, json).with_context(|| format!("writing {out_path}"))?;
     println!("wrote {out_path}");
@@ -195,17 +217,17 @@ fn serve_round(
                 let addr = &addr;
                 let hist = &hist;
                 s.spawn(move || -> Result<Vec<f64>> {
-                    let mut stream = serve::connect(addr)?;
-                    serve::remote_predict(&mut stream, xt_mu, xt_var)?; // warm-up
+                    let mut client = ServeClient::connect(addr)?;
+                    client.predict(xt_mu, xt_var)?; // warm-up
                     let mut times = Vec::with_capacity(reps);
                     for _ in 0..reps {
                         let t0 = Instant::now();
-                        serve::remote_predict(&mut stream, xt_mu, xt_var)?;
+                        client.predict(xt_mu, xt_var)?;
                         let dt = t0.elapsed();
                         hist.record(dt.as_nanos() as u64);
                         times.push(dt.as_secs_f64());
                     }
-                    serve::hangup(&mut stream);
+                    client.hangup();
                     Ok(times)
                 })
             })
@@ -226,7 +248,7 @@ fn serve_round(
             // fire-and-forget Pings make up the count so the server can
             // exit (writing without reading cannot block)
             for _ in medians.len()..clients {
-                if let Ok(mut s) = serve::connect(&addr) {
+                if let Ok(mut s) = std::net::TcpStream::connect(addr.as_str()) {
                     let _ = crate::cluster::wire::write_frame(
                         &mut s,
                         &crate::cluster::wire::Frame::Ping,
@@ -241,6 +263,100 @@ fn serve_round(
         }
     })
     .map(|(m, server_stats)| (m, server_stats, hist))
+}
+
+/// One lb measurement: a loopback replica behind a loopback
+/// static-upstream `run_lb`, `clients` concurrent TCP clients each
+/// timing `reps` requests through the front door after one warm-up.
+/// Returns the slowest client's median per-request wall seconds, the
+/// lb's stats, and the pooled latency histogram.
+fn lb_round(
+    model: &TrainedModel,
+    xt_mu: &Matrix,
+    xt_var: &Matrix,
+    clients: usize,
+    reps: usize,
+) -> Result<(f64, LbStats, obs::Histogram)> {
+    let state = ServeState::new(Predictor::new(model)?);
+    // the lb holds one backend link per client connection plus one
+    // cached health-probe connection — all count toward the replica's
+    // client budget, which is how both servers exit without a kill
+    let serve_opts = ServeOptions {
+        max_clients: clients as u64 + 1,
+        workers: 2,
+        max_batch_rows: 4096,
+    };
+    let replica_listener = TcpListener::bind("127.0.0.1:0").context("binding bench replica")?;
+    let replica_addr = replica_listener.local_addr()?.to_string();
+    let lb_listener = TcpListener::bind("127.0.0.1:0").context("binding bench lb")?;
+    let lb_addr = lb_listener.local_addr()?.to_string();
+    let lb_opts = LbOptions {
+        max_clients: clients as u64,
+        refresh_ms: 50,
+        ..LbOptions::default()
+    };
+    let upstream = Upstream::Static(vec![replica_addr.clone()]);
+    let hist = obs::Histogram::new();
+
+    std::thread::scope(|s| {
+        let replica = s.spawn(|| serve::serve(&replica_listener, &state, &serve_opts));
+        let front = s.spawn(|| run_lb(&lb_listener, &upstream, &lb_opts));
+        let handles: Vec<_> = (0..clients)
+            .map(|_| {
+                let (addr, hist) = (&lb_addr, &hist);
+                s.spawn(move || -> Result<Vec<f64>> {
+                    let mut client = ServeClient::connect(addr)?;
+                    client.predict(xt_mu, xt_var)?; // warm-up
+                    let mut times = Vec::with_capacity(reps);
+                    for _ in 0..reps {
+                        let t0 = Instant::now();
+                        client.predict(xt_mu, xt_var)?;
+                        let dt = t0.elapsed();
+                        hist.record(dt.as_nanos() as u64);
+                        times.push(dt.as_secs_f64());
+                    }
+                    client.hangup();
+                    Ok(times)
+                })
+            })
+            .collect();
+        // join ALL clients before touching either server (see
+        // serve_round for why an early `?` would hang the scope)
+        let mut medians = Vec::with_capacity(clients);
+        let mut client_err = None;
+        for h in handles {
+            match h.join().expect("bench lb client panicked") {
+                Ok(times) => medians.push(stats::median(&times)),
+                Err(e) => client_err = Some(e),
+            }
+        }
+        if client_err.is_some() {
+            // make up BOTH exit counts with fire-and-forget Pings so
+            // neither server waits forever (Pings count as clients;
+            // overshooting a reached count is harmless)
+            let ping = |addr: &str| {
+                if let Ok(mut sck) = std::net::TcpStream::connect(addr) {
+                    let _ = crate::cluster::wire::write_frame(
+                        &mut sck,
+                        &crate::cluster::wire::Frame::Ping,
+                    );
+                }
+            };
+            for _ in medians.len()..clients {
+                ping(&lb_addr);
+            }
+            for _ in 0..clients + 1 {
+                ping(&replica_addr);
+            }
+        }
+        let lb_stats = front.join().expect("bench lb panicked")?;
+        let _ = replica.join().expect("bench replica panicked")?;
+        match client_err {
+            Some(e) => Err(e).context("bench lb client failed"),
+            None => Ok((stats::max(&medians), lb_stats)),
+        }
+    })
+    .map(|(median, lb_stats)| (median, lb_stats, hist))
 }
 
 /// A structurally valid model at the given shapes with pseudo-random

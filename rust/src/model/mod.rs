@@ -36,4 +36,4 @@ pub mod serve;
 
 pub use artifact::{Checkpoint, ModelMeta, TrainedModel};
 pub use predictor::{PredictScratch, Predictor};
-pub use serve::{ServeOptions, ServeState, ServeStats, ServedModelInfo};
+pub use serve::{ConnectOpts, ServeClient, ServeOptions, ServeState, ServeStats, ServedModelInfo};

@@ -56,7 +56,7 @@
 
 use std::collections::VecDeque;
 use std::io::Write as _;
-use std::net::{TcpListener, TcpStream};
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex, RwLock};
@@ -69,6 +69,7 @@ use super::predictor::{PredictScratch, Predictor};
 use crate::cluster::wire::{self, Frame, Request, Response};
 use crate::linalg::Matrix;
 use crate::obs;
+use crate::util::cli::Args;
 use crate::util::timer::thread_cpu_secs;
 
 /// How the server behaves; independent of the model it serves.
@@ -93,6 +94,20 @@ impl Default for ServeOptions {
             workers: 2,
             max_batch_rows: 4096,
         }
+    }
+}
+
+impl ServeOptions {
+    /// The single parse site for the server-behaviour flags
+    /// (`--clients N`, `--threads N`, `--batch-rows N`), shared by
+    /// `gparml serve` and the `gparml lb` front door.
+    pub fn from_args(args: &Args) -> Result<ServeOptions> {
+        let d = ServeOptions::default();
+        Ok(ServeOptions {
+            max_clients: args.get_usize("clients", d.max_clients as usize)? as u64,
+            workers: args.get_usize("threads", d.workers)?.max(1),
+            max_batch_rows: args.get_usize("batch-rows", d.max_batch_rows)?,
+        })
     }
 }
 
@@ -865,7 +880,7 @@ fn send_reply(job: &Job, encoded: Result<Vec<u8>>, secs: f64) {
 }
 
 // ---------------------------------------------------------------------------
-// client side
+// client side: ServeClient
 // ---------------------------------------------------------------------------
 
 /// Shapes + version a predict server reported for its live model.
@@ -878,26 +893,273 @@ pub struct ServedModelInfo {
     pub version: u64,
 }
 
-/// Dial a predict server.
-pub fn connect(addr: &str) -> Result<TcpStream> {
-    let stream = TcpStream::connect(addr)
-        .with_context(|| format!("connecting to predict server at {addr}"))?;
-    stream.set_nodelay(true).ok();
-    Ok(stream)
+/// Connection/deadline/retry policy for a [`ServeClient`].
+#[derive(Debug, Clone)]
+pub struct ConnectOpts {
+    /// Dial deadline per address (applied to every reconnect too).
+    pub connect_timeout: Duration,
+    /// Per-read deadline on the established stream; `None` blocks
+    /// until the server answers (compute requests can be slow on
+    /// purpose — only set a deadline where a stall must be an error).
+    pub read_timeout: Option<Duration>,
+    /// Extra attempts after a transport error, each on a freshly
+    /// dialed connection. Every verb is one self-contained
+    /// request/response frame, so a retry re-sends the same request;
+    /// semantic failures (`Response::Err`) are never retried.
+    pub retries: u32,
 }
 
-/// Send one request stamped with a fresh trace/request id and collect
-/// the response, verifying the server echoed the same id (a mismatch
-/// means a desynced stream — fail loudly, not with wrong data).
-/// Returns the response together with the id, so callers can print it
-/// for cross-process trace correlation (`gparml predict --connect`).
-fn request_traced(stream: &mut TcpStream, req: Request) -> Result<(Response, u64)> {
-    let trace_id = obs::next_trace_id();
+impl Default for ConnectOpts {
+    fn default() -> ConnectOpts {
+        ConnectOpts {
+            connect_timeout: Duration::from_millis(5_000),
+            read_timeout: None,
+            retries: 1,
+        }
+    }
+}
+
+impl ConnectOpts {
+    /// The single parse site for the client-policy flags
+    /// (`--connect-timeout-ms`, `--read-timeout-ms` — 0 means block —
+    /// and `--retries`), shared by `predict`/`reload`/`stats`/`lb`.
+    pub fn from_args(args: &Args) -> Result<ConnectOpts> {
+        let d = ConnectOpts::default();
+        let connect_timeout = Duration::from_millis(
+            args.get_usize("connect-timeout-ms", d.connect_timeout.as_millis() as usize)? as u64,
+        );
+        let read_timeout = match args.get_usize("read-timeout-ms", 0)? {
+            0 => None,
+            ms => Some(Duration::from_millis(ms as u64)),
+        };
+        let retries = args.get_usize("retries", d.retries as usize)? as u32;
+        Ok(ConnectOpts {
+            connect_timeout,
+            read_timeout,
+            retries,
+        })
+    }
+
+    /// This policy with internal retries disabled — for callers that
+    /// own failover themselves (the lb retries on a *sibling* replica
+    /// instead of the same backend).
+    pub fn no_retry(mut self) -> ConnectOpts {
+        self.retries = 0;
+        self
+    }
+}
+
+/// A typed client for the predict-server wire: ONE connection reused
+/// across calls, every `remote_*` verb as a method, connect/read
+/// deadlines, and transparent reconnect-and-retry on transport errors
+/// ([`ConnectOpts::retries`]). Any IO/desync error drops the
+/// connection entirely, so the next call (or retry) starts on a fresh
+/// stream instead of a half-read one. Dropping the client hangs up
+/// politely (`Frame::Shutdown`).
+///
+/// This is the single client implementation behind the
+/// `predict`/`reload`/`stats` CLI, the lb's backend pool and the
+/// replica→control registration path (DESIGN.md §12).
+pub struct ServeClient {
+    addr: String,
+    opts: ConnectOpts,
+    stream: Option<TcpStream>,
+}
+
+impl ServeClient {
+    /// Dial `addr` with the default policy ([`ConnectOpts::default`]).
+    pub fn connect(addr: &str) -> Result<ServeClient> {
+        ServeClient::with_opts(addr, ConnectOpts::default())
+    }
+
+    /// Dial `addr` with an explicit policy. The first connection is
+    /// established eagerly, so a dead address fails here rather than
+    /// on the first request.
+    pub fn with_opts(addr: &str, opts: ConnectOpts) -> Result<ServeClient> {
+        let mut client = ServeClient {
+            addr: addr.to_string(),
+            opts,
+            stream: None,
+        };
+        client.dial()?;
+        Ok(client)
+    }
+
+    /// The address this client dials.
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// True if a connection is currently established (it may still be
+    /// dead underneath — the next request finds out).
+    pub fn is_connected(&self) -> bool {
+        self.stream.is_some()
+    }
+
+    /// (Re)establish the connection if none is live.
+    fn dial(&mut self) -> Result<()> {
+        if self.stream.is_some() {
+            return Ok(());
+        }
+        let addrs = self
+            .addr
+            .to_socket_addrs()
+            .with_context(|| format!("resolving predict server address {:?}", self.addr))?;
+        let mut last: Option<std::io::Error> = None;
+        for sa in addrs {
+            match TcpStream::connect_timeout(&sa, self.opts.connect_timeout) {
+                Ok(stream) => {
+                    stream.set_nodelay(true).ok();
+                    stream.set_read_timeout(self.opts.read_timeout).ok();
+                    self.stream = Some(stream);
+                    return Ok(());
+                }
+                Err(e) => last = Some(e),
+            }
+        }
+        match last {
+            Some(e) => {
+                Err(anyhow::Error::from(e)
+                    .context(format!("connecting to predict server at {}", self.addr)))
+            }
+            None => bail!("predict server address {:?} resolved to nothing", self.addr),
+        }
+    }
+
+    /// Send `req` stamped with the caller's `trace_id` and collect the
+    /// response — ONE attempt, no id minting, no retry. This is the
+    /// lb's forwarding primitive: the front door passes the
+    /// downstream client's id through unchanged, so one trace id
+    /// follows a request across every hop, and owns failover itself.
+    /// On any transport error the connection is dropped; the next
+    /// call re-dials.
+    pub fn request_with_id(&mut self, trace_id: u64, req: &Request) -> Result<Response> {
+        self.dial()?;
+        let stream = self.stream.as_mut().expect("dial() just succeeded");
+        let result = raw_request(stream, trace_id, req);
+        if result.is_err() {
+            // half-written or desynced stream: never reuse it
+            self.stream = None;
+        }
+        result
+    }
+
+    /// Send `req` stamped with a fresh trace/request id, retrying up
+    /// to [`ConnectOpts::retries`] extra times on transport errors
+    /// (each attempt gets its own id and a fresh connection). Returns
+    /// the response plus the id it was answered under, for
+    /// cross-process trace correlation (`gparml predict --connect`).
+    pub fn request(&mut self, req: &Request) -> Result<(Response, u64)> {
+        let mut last: Option<anyhow::Error> = None;
+        for attempt in 0..=self.opts.retries {
+            let trace_id = obs::next_trace_id();
+            match self.request_with_id(trace_id, req) {
+                Ok(resp) => return Ok((resp, trace_id)),
+                Err(e) => {
+                    if attempt < self.opts.retries {
+                        eprintln!(
+                            "[gparml-client] request to {} failed (attempt {} of {}), \
+                             reconnecting: {e:#}",
+                            self.addr,
+                            attempt + 1,
+                            self.opts.retries + 1
+                        );
+                    }
+                    last = Some(e);
+                }
+            }
+        }
+        Err(last
+            .expect("at least one attempt ran")
+            .context(format!("request to predict server at {}", self.addr)))
+    }
+
+    /// Ask the server for its model shapes and version.
+    pub fn model_info(&mut self) -> Result<ServedModelInfo> {
+        let (resp, _) = self.request(&Request::ModelInfo)?;
+        expect_model_info(resp)
+    }
+
+    /// Ask the server to hot-reload its model artifact from disk;
+    /// returns the reloaded model's info (version bumped).
+    pub fn reload(&mut self) -> Result<ServedModelInfo> {
+        let (resp, _) = self.request(&Request::Reload)?;
+        expect_model_info(resp)
+    }
+
+    /// Fetch the server's live metrics snapshot as a JSON document
+    /// (the `gparml stats --connect` payload; schema in DESIGN.md §10).
+    pub fn stats(&mut self) -> Result<String> {
+        match self.request(&Request::ServeStats)?.0 {
+            Response::StatsJson(json) => Ok(json),
+            Response::Err(e) => bail!("predict server: {e}"),
+            other => bail!("unexpected ServeStats reply {other:?}"),
+        }
+    }
+
+    /// Predict a batch remotely. Every f64 crosses the wire
+    /// bit-for-bit, so the reply equals a local [`Predictor::predict`]
+    /// exactly — whether or not the server micro-batched it with other
+    /// clients, and whichever fleet replica answered it.
+    pub fn predict(&mut self, xt_mu: &Matrix, xt_var: &Matrix) -> Result<(Matrix, Vec<f64>)> {
+        self.predict_traced(xt_mu, xt_var)
+            .map(|(mean, var, _)| (mean, var))
+    }
+
+    /// [`ServeClient::predict`] that also returns the request id the
+    /// call was answered under, so a caller can quote it against the
+    /// server's `--trace-out` spans and `gparml stats` counters.
+    pub fn predict_traced(
+        &mut self,
+        xt_mu: &Matrix,
+        xt_var: &Matrix,
+    ) -> Result<(Matrix, Vec<f64>, u64)> {
+        let req = Request::ServePredict {
+            xt_mu: xt_mu.clone(),
+            xt_var: xt_var.clone(),
+        };
+        let (resp, trace_id) = self.request(&req)?;
+        match resp {
+            Response::Predict { mean, var } => Ok((mean, var, trace_id)),
+            Response::Err(e) => bail!("predict server: {e}"),
+            other => bail!("unexpected predict reply {other:?}"),
+        }
+    }
+
+    /// Project observations into the served model's latent space
+    /// remotely; bit-identical to a local [`Predictor::project`].
+    pub fn project(&mut self, y: &Matrix) -> Result<(Matrix, Vec<f64>)> {
+        let (resp, _) = self.request(&Request::ServeProject { y: y.clone() })?;
+        match resp {
+            Response::Project { xmu, conf } => Ok((xmu, conf)),
+            Response::Err(e) => bail!("predict server: {e}"),
+            other => bail!("unexpected project reply {other:?}"),
+        }
+    }
+
+    /// Politely hang up now. Dropping the client does the same; this
+    /// just makes the intent explicit at call sites.
+    pub fn hangup(self) {}
+}
+
+impl Drop for ServeClient {
+    fn drop(&mut self) {
+        if let Some(stream) = self.stream.as_mut() {
+            // best effort: the server treats EOF the same way
+            let _ = wire::write_frame(stream, &Frame::Shutdown);
+        }
+    }
+}
+
+/// One request/response exchange on an established stream, verifying
+/// the server echoed the caller's id (a mismatch means a desynced
+/// stream — fail loudly, not with wrong data).
+fn raw_request(stream: &mut TcpStream, trace_id: u64, req: &Request) -> Result<Response> {
     wire::write_frame(
         stream,
         &Frame::Request {
             trace_id,
-            req: Box::new(req),
+            req: Box::new(req.clone()),
         },
     )?;
     match wire::read_frame(stream)? {
@@ -914,15 +1176,11 @@ fn request_traced(stream: &mut TcpStream, req: Request) -> Result<(Response, u64
                 "predict server echoed request id {echoed:#018x}, expected {trace_id:#018x} \
                  (desynced stream?)"
             );
-            Ok((*resp, trace_id))
+            Ok(*resp)
         }
         Some((f, _)) => bail!("expected a Response frame, got {f:?}"),
         None => bail!("predict server closed the connection mid-request"),
     }
-}
-
-fn request(stream: &mut TcpStream, req: Request) -> Result<Response> {
-    request_traced(stream, req).map(|(resp, _)| resp)
 }
 
 fn expect_model_info(resp: Response) -> Result<ServedModelInfo> {
@@ -938,47 +1196,72 @@ fn expect_model_info(resp: Response) -> Result<ServedModelInfo> {
     }
 }
 
+// ---------------------------------------------------------------------------
+// deprecated free-function shims (one PR of grace, then removed)
+// ---------------------------------------------------------------------------
+
+/// Dial a predict server.
+#[deprecated(note = "use ServeClient::connect — one connection, typed verbs, retry policy")]
+pub fn connect(addr: &str) -> Result<TcpStream> {
+    let stream = TcpStream::connect(addr)
+        .with_context(|| format!("connecting to predict server at {addr}"))?;
+    stream.set_nodelay(true).ok();
+    Ok(stream)
+}
+
+fn shim_request(stream: &mut TcpStream, req: Request) -> Result<(Response, u64)> {
+    let trace_id = obs::next_trace_id();
+    raw_request(stream, trace_id, &req).map(|resp| (resp, trace_id))
+}
+
 /// Ask the server for its model shapes and version.
+#[deprecated(note = "use ServeClient::model_info")]
 pub fn remote_model_info(stream: &mut TcpStream) -> Result<ServedModelInfo> {
-    expect_model_info(request(stream, Request::ModelInfo)?)
+    expect_model_info(shim_request(stream, Request::ModelInfo)?.0)
 }
 
-/// Ask the server to hot-reload its model artifact from disk; returns
-/// the reloaded model's info (version bumped).
+/// Ask the server to hot-reload its model artifact from disk.
+#[deprecated(note = "use ServeClient::reload")]
 pub fn remote_reload(stream: &mut TcpStream) -> Result<ServedModelInfo> {
-    expect_model_info(request(stream, Request::Reload)?)
+    expect_model_info(shim_request(stream, Request::Reload)?.0)
 }
 
-/// Fetch the server's live metrics snapshot as a JSON document (the
-/// `gparml stats --connect` payload; schema in DESIGN.md §10).
+/// Fetch the server's live metrics snapshot as a JSON document.
+#[deprecated(note = "use ServeClient::stats")]
 pub fn remote_stats(stream: &mut TcpStream) -> Result<String> {
-    match request(stream, Request::ServeStats)? {
+    match shim_request(stream, Request::ServeStats)?.0 {
         Response::StatsJson(json) => Ok(json),
         Response::Err(e) => bail!("predict server: {e}"),
         other => bail!("unexpected ServeStats reply {other:?}"),
     }
 }
 
-/// Predict a batch remotely. Every f64 crosses the wire bit-for-bit,
-/// so the reply equals a local [`Predictor::predict`] exactly —
-/// whether or not the server micro-batched it with other clients.
+/// Predict a batch remotely.
+#[deprecated(note = "use ServeClient::predict")]
 pub fn remote_predict(
     stream: &mut TcpStream,
     xt_mu: &Matrix,
     xt_var: &Matrix,
 ) -> Result<(Matrix, Vec<f64>)> {
-    remote_predict_traced(stream, xt_mu, xt_var).map(|(mean, var, _)| (mean, var))
+    shim_predict(stream, xt_mu, xt_var).map(|(mean, var, _)| (mean, var))
 }
 
-/// [`remote_predict`] that also returns the request id the call was
-/// stamped with, so a caller can quote it against the server's
-/// `--trace-out` spans and `gparml stats` counters.
+/// Predict a batch remotely, returning the request id too.
+#[deprecated(note = "use ServeClient::predict_traced")]
 pub fn remote_predict_traced(
     stream: &mut TcpStream,
     xt_mu: &Matrix,
     xt_var: &Matrix,
 ) -> Result<(Matrix, Vec<f64>, u64)> {
-    let (resp, trace_id) = request_traced(
+    shim_predict(stream, xt_mu, xt_var)
+}
+
+fn shim_predict(
+    stream: &mut TcpStream,
+    xt_mu: &Matrix,
+    xt_var: &Matrix,
+) -> Result<(Matrix, Vec<f64>, u64)> {
+    let (resp, trace_id) = shim_request(
         stream,
         Request::ServePredict {
             xt_mu: xt_mu.clone(),
@@ -992,19 +1275,18 @@ pub fn remote_predict_traced(
     }
 }
 
-/// Project observations into the served model's latent space remotely;
-/// bit-identical to a local [`Predictor::project`].
+/// Project observations into the served model's latent space remotely.
+#[deprecated(note = "use ServeClient::project")]
 pub fn remote_project(stream: &mut TcpStream, y: &Matrix) -> Result<(Matrix, Vec<f64>)> {
-    let resp = request(stream, Request::ServeProject { y: y.clone() })?;
-    match resp {
+    match shim_request(stream, Request::ServeProject { y: y.clone() })?.0 {
         Response::Project { xmu, conf } => Ok((xmu, conf)),
         Response::Err(e) => bail!("predict server: {e}"),
         other => bail!("unexpected project reply {other:?}"),
     }
 }
 
-/// Politely hang up (the server treats EOF the same; this just makes
-/// the intent explicit).
+/// Politely hang up (the server treats EOF the same).
+#[deprecated(note = "ServeClient hangs up on Drop (or via ServeClient::hangup)")]
 pub fn hangup(stream: &mut TcpStream) {
     let _ = wire::write_frame(stream, &Frame::Shutdown);
 }

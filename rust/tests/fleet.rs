@@ -1,0 +1,371 @@
+//! Fleet integration tests (DESIGN.md §12): a REAL `gparml control`
+//! process, two REAL `gparml serve` replica processes and a REAL
+//! `gparml lb` front door over localhost TCP. A predict answered
+//! through the front door must be bit-identical to local prediction
+//! and to a direct replica answer; SIGKILLing a replica mid-stream
+//! must stay invisible to a no-retry client (the lb fails over to the
+//! sibling); a single `reload` at the front door must roll the whole
+//! fleet to the new model version; and the control plane must evict
+//! the killed replica by heartbeat staleness.
+
+use std::io::{BufRead, BufReader};
+use std::net::TcpListener;
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use gparml::coordinator::{partition, GlobalOpt, ModelKind, TrainConfig, Trainer};
+use gparml::fleet::{run_lb, ControlClient, LbOptions, Upstream};
+use gparml::gp::GlobalParams;
+use gparml::linalg::Matrix;
+use gparml::model::{serve, Predictor, ServeClient, ServeOptions, ServeState, TrainedModel};
+use gparml::util::json::Json;
+use gparml::util::rng::Rng;
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn tmp_path(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("gparml_fleet_{}_{name}", std::process::id()))
+}
+
+fn regression_data(n: usize, seed: u64) -> (Matrix, Matrix, Matrix) {
+    let mut rng = Rng::new(seed);
+    let xmu = Matrix::from_fn(n, 2, |_, _| rng.range(-2.0, 2.0));
+    let xvar = Matrix::zeros(n, 2);
+    let y = Matrix::from_fn(n, 3, |i, j| {
+        let x = xmu[(i, 0)];
+        let f = match j {
+            0 => x.sin(),
+            1 => (1.3 * x).cos(),
+            _ => 0.5 * x,
+        };
+        f + 0.05 * rng.normal()
+    });
+    (xmu, xvar, y)
+}
+
+/// Train a tiny regression cluster and export its model.
+fn trained_model(seed: u64, iters: usize) -> TrainedModel {
+    let (xmu, xvar, y) = regression_data(60, seed);
+    let shards = partition(&xmu, &xvar, &y, 0.0, 2);
+    let mut rng = Rng::new(seed + 1);
+    let params = GlobalParams {
+        z: Matrix::from_fn(8, 2, |_, _| rng.range(-2.0, 2.0)),
+        log_ls: vec![0.0, 0.0],
+        log_sf2: 0.0,
+        log_beta: 1.0,
+    };
+    let cfg = TrainConfig {
+        artifact: "test".into(),
+        artifacts_dir: artifacts_dir(),
+        workers: 2,
+        model: ModelKind::Regression,
+        global_opt: GlobalOpt::Scg,
+        seed: 1,
+        ..Default::default()
+    };
+    let mut t = Trainer::new(cfg, params, shards).unwrap();
+    t.train(iters).unwrap();
+    t.export_model().unwrap()
+}
+
+fn assert_bits_eq(a: &[f64], b: &[f64], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: diverged at {i}: {x} vs {y}");
+    }
+}
+
+/// Keep a spawned fleet member from outliving a failed test.
+struct Proc(Child);
+
+impl Drop for Proc {
+    fn drop(&mut self) {
+        let _ = self.0.kill();
+        let _ = self.0.wait();
+    }
+}
+
+/// Spawn `gparml <args>` and block until it announces `listening on
+/// ADDR` on stdout (every fleet command binds `--listen 127.0.0.1:0`
+/// and prints the resolved address in its banner).
+fn spawn_gparml(args: &[&str]) -> (Proc, String) {
+    let bin = env!("CARGO_BIN_EXE_gparml");
+    let mut child = Command::new(bin)
+        .args(args)
+        .stdout(Stdio::piped())
+        .spawn()
+        .expect("spawning gparml fleet process");
+    let stdout = child.stdout.take().expect("child stdout is piped");
+    let mut reader = BufReader::new(stdout);
+    let mut line = String::new();
+    let addr = loop {
+        line.clear();
+        let n = reader.read_line(&mut line).expect("reading child stdout");
+        assert!(n > 0, "gparml {args:?} exited before announcing its address");
+        if let Some((_, rest)) = line.split_once("listening on ") {
+            break rest
+                .split_whitespace()
+                .next()
+                .expect("an address follows the banner")
+                .to_string();
+        }
+    };
+    // keep draining so the child never blocks on a full stdout pipe
+    std::thread::spawn(move || {
+        let mut sink = String::new();
+        while matches!(reader.read_line(&mut sink), Ok(n) if n > 0) {
+            sink.clear();
+        }
+    });
+    (Proc(child), addr)
+}
+
+fn wait_until(what: &str, timeout: Duration, mut cond: impl FnMut() -> bool) {
+    let deadline = Instant::now() + timeout;
+    while !cond() {
+        assert!(Instant::now() < deadline, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(25));
+    }
+}
+
+/// Pull one numeric metric out of a `ServeStats` JSON snapshot.
+fn metric(snapshot: &str, section: &str, name: &str) -> f64 {
+    let json = Json::parse(snapshot).expect("stats snapshot is JSON");
+    json.get(section)
+        .and_then(|s| s.get(name))
+        .unwrap_or_else(|| panic!("snapshot missing {section}/{name}"))
+        .as_f64()
+        .unwrap()
+}
+
+/// The tentpole acceptance, end to end over real processes: register,
+/// route, fail over, roll, evict.
+#[test]
+fn fleet_predicts_fails_over_and_rolls_reloads_through_the_front_door() {
+    let model_a = trained_model(211, 2);
+    let model_b = trained_model(223, 4);
+    let mut rng = Rng::new(29);
+    let xt_mu = Matrix::from_fn(24, 2, |_, _| rng.range(-2.0, 2.0));
+    let xt_var = Matrix::from_fn(24, 2, |_, _| 0.05 * rng.uniform());
+    let local_a = Predictor::new(&model_a).unwrap().predict(&xt_mu, &xt_var).unwrap();
+    let local_b = Predictor::new(&model_b).unwrap().predict(&xt_mu, &xt_var).unwrap();
+
+    let path = tmp_path("fleet.gpm");
+    model_a.save(&path).unwrap();
+    let model_arg = path.to_str().unwrap();
+
+    let (_control, control_addr) = spawn_gparml(&[
+        "control",
+        "--listen",
+        "127.0.0.1:0",
+        "--stale-ms",
+        "2000",
+        "--sweep-ms",
+        "100",
+    ]);
+    let spawn_replica = || {
+        spawn_gparml(&[
+            "serve",
+            "--model",
+            model_arg,
+            "--listen",
+            "127.0.0.1:0",
+            "--control",
+            &control_addr,
+            "--heartbeat-ms",
+            "100",
+        ])
+    };
+    let (mut replica_a, addr_a) = spawn_replica();
+    let (_replica_b, addr_b) = spawn_replica();
+    // NOTE the slow membership refresh: a SIGKILLed replica drops its
+    // control connection, which deregisters it instantly, and a
+    // too-eager lb poll could then remove the corpse from the pool
+    // before the predict loop below ever routes to it — the 1s cadence
+    // keeps the failover path deterministically exercised while the
+    // loop runs.
+    let (_lb, lb_addr) = spawn_gparml(&[
+        "lb",
+        "--listen",
+        "127.0.0.1:0",
+        "--connect",
+        &control_addr,
+        "--interval-ms",
+        "1000",
+    ]);
+
+    // both replicas register with the control plane under their bound
+    // addresses, and the lb's pool follows
+    let mut ctl = ControlClient::connect(&control_addr).unwrap();
+    wait_until("both replicas to register", Duration::from_secs(30), || {
+        ctl.fleet_info().unwrap().len() == 2
+    });
+    let fleet: Vec<String> = ctl.fleet_info().unwrap().into_iter().map(|r| r.addr).collect();
+    assert!(
+        fleet.contains(&addr_a) && fleet.contains(&addr_b),
+        "fleet advertises {fleet:?}, expected {addr_a} and {addr_b}"
+    );
+    let mut stats_client = ServeClient::connect(&lb_addr).unwrap();
+    wait_until(
+        "the lb to see two healthy backends",
+        Duration::from_secs(30),
+        || metric(&stats_client.stats().unwrap(), "gauges", "lb.healthy") >= 2.0,
+    );
+
+    // predict through the front door: a NO-retry client, so any
+    // lb-side slip is a hard failure here, not a masked retry
+    let mut client =
+        ServeClient::with_opts(&lb_addr, serve::ConnectOpts::default().no_retry()).unwrap();
+    let info = client.model_info().unwrap();
+    assert_eq!((info.m, info.q, info.d), (8, 2, 3));
+    assert_eq!(info.version, 1, "fresh replicas must serve model version 1");
+    let (mean, var) = client.predict(&xt_mu, &xt_var).unwrap();
+    assert_bits_eq(local_a.0.data(), mean.data(), "lb predict mean (model A)");
+    assert_bits_eq(&local_a.1, &var, "lb predict var (model A)");
+
+    // a direct replica answer is the same bytes — the front door adds
+    // routing, never arithmetic
+    let mut direct = ServeClient::connect(&addr_a).unwrap();
+    let (mean_d, var_d) = direct.predict(&xt_mu, &xt_var).unwrap();
+    assert_bits_eq(mean.data(), mean_d.data(), "direct vs lb mean");
+    assert_bits_eq(&var, &var_d, "direct vs lb var");
+    direct.hangup();
+
+    // one reload at the front door rolls the WHOLE fleet onto the new
+    // artifact bytes
+    model_b.save(&path).unwrap();
+    let info = client.reload().unwrap();
+    assert_eq!(info.version, 2, "rolling reload must land the fleet on version 2");
+    for addr in [&addr_a, &addr_b] {
+        let mut direct = ServeClient::connect(addr).unwrap();
+        assert_eq!(
+            direct.model_info().unwrap().version,
+            2,
+            "replica {addr} did not reload"
+        );
+        direct.hangup();
+    }
+    let (mean, var) = client.predict(&xt_mu, &xt_var).unwrap();
+    assert_bits_eq(local_b.0.data(), mean.data(), "lb predict mean (model B)");
+    assert_bits_eq(&local_b.1, &var, "lb predict var (model B)");
+    wait_until(
+        "version convergence to surface at the front door",
+        Duration::from_secs(10),
+        || {
+            let snapshot = stats_client.stats().unwrap();
+            metric(&snapshot, "counters", "lb.reloads") >= 2.0
+                && metric(&snapshot, "gauges", "lb.version_skew") == 0.0
+        },
+    );
+
+    // SIGKILL one replica mid-stream: the lb retries the failed
+    // request once on the sibling, so the no-retry client never sees
+    // an error and every answer stays bit-identical
+    for i in 0..30 {
+        if i == 5 {
+            replica_a.0.kill().expect("kill replica");
+            replica_a.0.wait().expect("reap replica");
+        }
+        let (mean, var) = client.predict(&xt_mu, &xt_var).unwrap();
+        assert_bits_eq(local_b.0.data(), mean.data(), "predict mean across the kill");
+        assert_bits_eq(&local_b.1, &var, "predict var across the kill");
+    }
+    assert!(
+        metric(&stats_client.stats().unwrap(), "counters", "lb.failovers") >= 1.0,
+        "the kill never exercised the failover path"
+    );
+
+    // the kill dropped the replica's control connection, which is an
+    // implicit deregister (heartbeat staleness covers wedged-but-
+    // connected replicas); its last beat advertised the reloaded
+    // version, and the front door follows the shrunken fleet
+    wait_until(
+        "the control plane to evict the killed replica",
+        Duration::from_secs(10),
+        || {
+            let fleet = ctl.fleet_info().unwrap();
+            fleet.len() == 1 && fleet[0].addr == addr_b && fleet[0].model_version == 2
+        },
+    );
+    wait_until(
+        "the lb to drop the dead backend",
+        Duration::from_secs(10),
+        || metric(&stats_client.stats().unwrap(), "gauges", "lb.healthy") == 1.0,
+    );
+
+    client.hangup();
+    stats_client.hangup();
+    std::fs::remove_file(&path).ok();
+}
+
+/// In-process front door smoke: a static single-replica lb routes the
+/// standard serve verbs bit-exactly, answers its own `ServeStats`
+/// inline, and the whole stack (replica accept loop + lb accept loop
+/// + health refresher) winds down cleanly by client counting alone —
+/// no kills, no sleeps.
+#[test]
+fn static_lb_routes_bitwise_counts_and_drains_cleanly() {
+    let model = trained_model(241, 3);
+    let pred = Predictor::new(&model).unwrap();
+    let mut rng = Rng::new(31);
+    let xt_mu = Matrix::from_fn(17, 2, |_, _| rng.range(-2.0, 2.0));
+    let xt_var = Matrix::from_fn(17, 2, |_, _| 0.05 * rng.uniform());
+    let (mean_l, var_l) = pred.predict(&xt_mu, &xt_var).unwrap();
+
+    let state = ServeState::new(pred);
+    // replica budget: the lb holds one backend link for our client's
+    // connection plus one cached health-probe connection
+    let replica_opts = ServeOptions {
+        max_clients: 2,
+        ..Default::default()
+    };
+    let replica_listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let replica_addr = replica_listener.local_addr().unwrap().to_string();
+    let lb_listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let lb_addr = lb_listener.local_addr().unwrap().to_string();
+    let lb_opts = LbOptions {
+        max_clients: 1,
+        refresh_ms: 50,
+        ..Default::default()
+    };
+    let upstream = Upstream::Static(vec![replica_addr.clone()]);
+
+    const REPS: usize = 6;
+    let (serve_stats, lb_stats) = std::thread::scope(|s| {
+        let replica = s.spawn(|| serve::serve(&replica_listener, &state, &replica_opts).unwrap());
+        let front = s.spawn(|| run_lb(&lb_listener, &upstream, &lb_opts).unwrap());
+
+        let mut client =
+            ServeClient::with_opts(&lb_addr, serve::ConnectOpts::default().no_retry()).unwrap();
+        assert_eq!(client.model_info().unwrap().version, 1);
+        for _ in 0..REPS {
+            let (mean, var) = client.predict(&xt_mu, &xt_var).unwrap();
+            assert_bits_eq(mean_l.data(), mean.data(), "static lb mean");
+            assert_bits_eq(&var_l, &var, "static lb var");
+        }
+        let snapshot = client.stats().unwrap();
+        assert_eq!(
+            metric(&snapshot, "counters", "lb.requests.predict"),
+            REPS as f64
+        );
+        assert_eq!(metric(&snapshot, "counters", "lb.requests.model_info"), 1.0);
+        client.hangup();
+        (replica.join().unwrap(), front.join().unwrap())
+    });
+    assert_eq!(lb_stats.clients, 1);
+    assert_eq!(
+        lb_stats.failovers, 0,
+        "a healthy static pool must never fail over"
+    );
+    assert_eq!(
+        serve_stats.clients, 2,
+        "the replica should count exactly the backend link and the probe"
+    );
+    assert!(
+        serve_stats.requests >= (REPS + 1) as u64,
+        "the forwarded verbs never reached the replica"
+    );
+}

@@ -298,12 +298,12 @@ fn serve_round_trip_with_two_concurrent_clients_is_bitwise() {
                 let xt_mu = &xt_mu;
                 let xt_var = &xt_var;
                 s.spawn(move || {
-                    let mut stream = serve::connect(&addr).unwrap();
-                    let info = serve::remote_model_info(&mut stream).unwrap();
+                    let mut client = serve::ServeClient::connect(&addr).unwrap();
+                    let info = client.model_info().unwrap();
                     assert_eq!((info.m, info.q, info.d), (8, 2, 3));
                     assert_eq!(info.version, 1, "fresh server must report version 1");
-                    let out = serve::remote_predict(&mut stream, xt_mu, xt_var).unwrap();
-                    serve::hangup(&mut stream);
+                    let out = client.predict(xt_mu, xt_var).unwrap();
+                    client.hangup();
                     out
                 })
             })

@@ -183,13 +183,13 @@ fn serve_stats_snapshot_matches_issued_requests() {
     const PREDICTS: usize = 3;
     let snapshot = std::thread::scope(|s| {
         let server = s.spawn(|| serve::serve(&listener, &state, &opts).unwrap());
-        let mut stream = serve::connect(&addr).unwrap();
-        serve::remote_model_info(&mut stream).unwrap();
+        let mut client = serve::ServeClient::connect(&addr).unwrap();
+        client.model_info().unwrap();
         for _ in 0..PREDICTS {
-            serve::remote_predict(&mut stream, &xt_mu, &xt_var).unwrap();
+            client.predict(&xt_mu, &xt_var).unwrap();
         }
-        let snapshot = serve::remote_stats(&mut stream).unwrap();
-        serve::hangup(&mut stream);
+        let snapshot = client.stats().unwrap();
+        client.hangup();
         server.join().unwrap();
         snapshot
     });
@@ -232,9 +232,9 @@ fn serve_stats_snapshot_matches_issued_requests() {
 
 /// The acceptance criterion: a single request id issued by the client
 /// side of `gparml predict --connect` is traceable end-to-end — the id
-/// returned by `remote_predict_traced` shows up on the server's
+/// returned by `ServeClient::predict_traced` shows up on the server's
 /// enqueue/reply events and batch span after crossing a real TCP
-/// round-trip through the v6 wire codec.
+/// round-trip through the framed wire codec.
 #[test]
 fn client_request_id_round_trips_into_server_spans() {
     let model = train_and_export(31, 2);
@@ -256,9 +256,9 @@ fn client_request_id_round_trips_into_server_spans() {
     obs::trace::init(&path).unwrap();
     let trace_id = std::thread::scope(|s| {
         let server = s.spawn(|| serve::serve(&listener, &state, &opts).unwrap());
-        let mut stream = serve::connect(&addr).unwrap();
-        let (_, _, trace_id) = serve::remote_predict_traced(&mut stream, &xt_mu, &xt_var).unwrap();
-        serve::hangup(&mut stream);
+        let mut client = serve::ServeClient::connect(&addr).unwrap();
+        let (_, _, trace_id) = client.predict_traced(&xt_mu, &xt_var).unwrap();
+        client.hangup();
         server.join().unwrap();
         trace_id
     });

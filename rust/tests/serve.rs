@@ -14,7 +14,7 @@ use gparml::cluster::wire::{self, Frame, Request};
 use gparml::coordinator::{partition, GlobalOpt, ModelKind, TrainConfig, Trainer};
 use gparml::gp::GlobalParams;
 use gparml::linalg::Matrix;
-use gparml::model::{serve, Predictor, ServeOptions, ServeState, TrainedModel};
+use gparml::model::{serve, Predictor, ServeClient, ServeOptions, ServeState, TrainedModel};
 use gparml::util::rng::Rng;
 
 fn artifacts_dir() -> PathBuf {
@@ -123,7 +123,11 @@ fn micro_batched_replies_are_bitwise_under_six_concurrent_clients() {
         let (sent_tx, sent_rx) = std::sync::mpsc::channel::<()>();
 
         let heavy = s.spawn(|| {
-            let mut stream = serve::connect(&addr).unwrap();
+            // raw frames on a raw socket: this client needs to split
+            // the write from the read, which the typed ServeClient
+            // (request = write + read) deliberately does not expose
+            let mut stream = TcpStream::connect(addr.as_str()).unwrap();
+            stream.set_nodelay(true).ok();
             // put the big request on the wire, THEN release the small
             // clients: their requests land while the worker is busy
             wire::write_frame(
@@ -147,7 +151,7 @@ fn micro_batched_replies_are_bitwise_under_six_concurrent_clients() {
             };
             assert_bits_eq(heavy_local.0.data(), mean_r.data(), "heavy mean");
             assert_bits_eq(&heavy_local.1, &var_r, "heavy var");
-            serve::hangup(&mut stream);
+            wire::write_frame(&mut stream, &Frame::Shutdown).unwrap();
         });
 
         sent_rx.recv().unwrap();
@@ -157,10 +161,9 @@ fn micro_batched_replies_are_bitwise_under_six_concurrent_clients() {
                 let (xt_mu, xt_var) = &batches[c];
                 let (mean_l, var_l) = &locals[c];
                 s.spawn(move || {
-                    let mut stream = serve::connect(addr).unwrap();
+                    let mut client = ServeClient::connect(addr).unwrap();
                     for rep in 0..REPS {
-                        let (mean_r, var_r) =
-                            serve::remote_predict(&mut stream, xt_mu, xt_var).unwrap();
+                        let (mean_r, var_r) = client.predict(xt_mu, xt_var).unwrap();
                         assert_bits_eq(
                             mean_l.data(),
                             mean_r.data(),
@@ -168,7 +171,7 @@ fn micro_batched_replies_are_bitwise_under_six_concurrent_clients() {
                         );
                         assert_bits_eq(var_l, &var_r, &format!("client {c} rep {rep} var"));
                     }
-                    serve::hangup(&mut stream);
+                    client.hangup();
                 })
             })
             .collect();
@@ -243,34 +246,24 @@ fn misbehaving_clients_neither_kill_the_server_nor_consume_slots() {
         drop(dier);
 
         // the good client is served correctly through all of the above
-        let mut stream = serve::connect(&addr).unwrap();
-        let info = serve::remote_model_info(&mut stream).unwrap();
+        let mut client = ServeClient::connect(&addr).unwrap();
+        let info = client.model_info().unwrap();
         assert_eq!((info.m, info.q, info.d), (8, 2, 3));
         // (e) a decodable but malformed request — xt_mu/xt_var shapes
         // disagree — draws an error reply, not a dead worker (it must
-        // never reach the batch concatenation)
-        wire::write_frame(
-            &mut stream,
-            &Frame::Request {
-                trace_id: 9,
-                req: Box::new(Request::ServePredict {
-                    xt_mu: xt_mu.clone(),
-                    xt_var: Matrix::zeros(3, 2),
-                }),
-            },
-        )
-        .unwrap();
-        match wire::read_frame(&mut stream).unwrap() {
-            Some((Frame::Response { resp, .. }, _)) => match *resp {
-                wire::Response::Err(e) => assert!(e.contains("disagree"), "{e}"),
-                other => panic!("mismatched shapes answered with {other:?}"),
-            },
-            other => panic!("unexpected frame {other:?}"),
-        }
-        let (mean_r, var_r) = serve::remote_predict(&mut stream, &xt_mu, &xt_var).unwrap();
+        // never reach the batch concatenation). A semantic error keeps
+        // the connection: the next predict reuses it (one counted
+        // client), which this test's max_clients=2 budget relies on.
+        let err = format!(
+            "{:#}",
+            client.predict(&xt_mu, &Matrix::zeros(3, 2)).unwrap_err()
+        );
+        assert!(err.contains("disagree"), "{err}");
+        assert!(client.is_connected(), "semantic error must not drop the connection");
+        let (mean_r, var_r) = client.predict(&xt_mu, &xt_var).unwrap();
         assert_bits_eq(mean_l.data(), mean_r.data(), "post-churn mean");
         assert_bits_eq(&var_l, &var_r, "post-churn var");
-        serve::hangup(&mut stream);
+        client.hangup();
 
         server.join().unwrap()
     });
@@ -313,32 +306,32 @@ fn hot_reload_swaps_model_bumps_version_and_survives_corrupt_files() {
 
     let stats = std::thread::scope(|s| {
         let server = s.spawn(|| serve::serve(&listener, &state, &opts).unwrap());
-        let mut stream = serve::connect(&addr).unwrap();
+        let mut client = ServeClient::connect(&addr).unwrap();
 
-        let info = serve::remote_model_info(&mut stream).unwrap();
+        let info = client.model_info().unwrap();
         assert_eq!(info.version, 1);
-        let (mean_r, var_r) = serve::remote_predict(&mut stream, &xt_mu, &xt_var).unwrap();
+        let (mean_r, var_r) = client.predict(&xt_mu, &xt_var).unwrap();
         assert_bits_eq(mean_a.data(), mean_r.data(), "pre-reload mean");
         assert_bits_eq(&var_a, &var_r, "pre-reload var");
 
         // swap the artifact on disk, then ask the server to reload
         model_b.save(&path).unwrap();
-        let info = serve::remote_reload(&mut stream).unwrap();
+        let info = client.reload().unwrap();
         assert_eq!(info.version, 2, "reload must bump the model version");
-        let (mean_r, var_r) = serve::remote_predict(&mut stream, &xt_mu, &xt_var).unwrap();
+        let (mean_r, var_r) = client.predict(&xt_mu, &xt_var).unwrap();
         assert_bits_eq(mean_b.data(), mean_r.data(), "post-reload mean");
         assert_bits_eq(&var_b, &var_r, "post-reload var");
 
         // a corrupt artifact must fail the reload and keep serving B
         std::fs::write(&path, b"not a model").unwrap();
-        let err = format!("{:#}", serve::remote_reload(&mut stream).unwrap_err());
+        let err = format!("{:#}", client.reload().unwrap_err());
         assert!(err.contains("reload failed"), "{err}");
-        let info = serve::remote_model_info(&mut stream).unwrap();
+        let info = client.model_info().unwrap();
         assert_eq!(info.version, 2, "failed reload must not swap or bump");
-        let (mean_r, _) = serve::remote_predict(&mut stream, &xt_mu, &xt_var).unwrap();
+        let (mean_r, _) = client.predict(&xt_mu, &xt_var).unwrap();
         assert_bits_eq(mean_b.data(), mean_r.data(), "post-failed-reload mean");
 
-        serve::hangup(&mut stream);
+        client.hangup();
         server.join().unwrap()
     });
     std::fs::remove_file(&path).ok();
@@ -375,26 +368,25 @@ fn serve_project_is_bitwise_alongside_predict_clients() {
         for _ in 0..2 {
             let (addr, y, xmu_l, conf_l) = (&addr, &y, &xmu_l, &conf_l);
             handles.push(s.spawn(move || {
-                let mut stream = serve::connect(addr).unwrap();
+                let mut client = ServeClient::connect(addr).unwrap();
                 for _ in 0..8 {
-                    let (xmu_r, conf_r) = serve::remote_project(&mut stream, y).unwrap();
+                    let (xmu_r, conf_r) = client.project(y).unwrap();
                     assert_bits_eq(xmu_l.data(), xmu_r.data(), "remote projection");
                     assert_bits_eq(conf_l, &conf_r, "remote projection conf");
                 }
-                serve::hangup(&mut stream);
+                client.hangup();
             }));
         }
         for _ in 0..2 {
             let (addr, xt_mu, xt_var, mean_l, var_l) = (&addr, &xt_mu, &xt_var, &mean_l, &var_l);
             handles.push(s.spawn(move || {
-                let mut stream = serve::connect(addr).unwrap();
+                let mut client = ServeClient::connect(addr).unwrap();
                 for _ in 0..8 {
-                    let (mean_r, var_r) =
-                        serve::remote_predict(&mut stream, xt_mu, xt_var).unwrap();
+                    let (mean_r, var_r) = client.predict(xt_mu, xt_var).unwrap();
                     assert_bits_eq(mean_l.data(), mean_r.data(), "interleaved predict mean");
                     assert_bits_eq(var_l, &var_r, "interleaved predict var");
                 }
-                serve::hangup(&mut stream);
+                client.hangup();
             }));
         }
         for h in handles {
