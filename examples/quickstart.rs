@@ -5,16 +5,27 @@
 //! it improves, evaluates test RMSE with calibrated error bars, then
 //! exports the trained model to a file and serves the same predictions
 //! from a standalone `Predictor` — no cluster, bit-identical results.
+//! Finally the same dataset is packed into an on-disk sharded store and
+//! the whole training run is reproduced bit-for-bit from a streamed
+//! bring-up (DESIGN.md §13) — the out-of-core path for datasets bigger
+//! than leader RAM. The CLI equivalent:
+//!
+//! ```sh
+//! gparml data pack --gen synthetic --n 800 --out store/   # write shards
+//! gparml data inspect --store store/ --verify             # checksums
+//! gparml train --store store/ --chunk-rows 4096 ...       # stream it
+//! ```
 //!
 //! ```sh
 //! make artifacts && cargo run --release --example quickstart
 //! ```
 
 use anyhow::Result;
-use gparml::coordinator::{partition, GlobalOpt, ModelKind, TrainConfig, Trainer};
+use gparml::coordinator::{partition, GlobalOpt, ModelKind, StreamConfig, TrainConfig, Trainer};
 use gparml::gp::GlobalParams;
 use gparml::linalg::Matrix;
 use gparml::model::{Predictor, TrainedModel};
+use gparml::store::{ShardedDiskSource, SplitColumns, StoreWriter};
 use gparml::util::rng::Rng;
 
 fn main() -> Result<()> {
@@ -44,9 +55,11 @@ fn main() -> Result<()> {
         global_opt: GlobalOpt::Scg,
         ..Default::default()
     };
-    let mut trainer = Trainer::new(cfg, params, shards)?;
+    let mut trainer = Trainer::new(cfg.clone(), params.clone(), shards)?;
+    let mut trace = Vec::with_capacity(25);
     for it in 0..25 {
         let f = trainer.step()?;
+        trace.push(f);
         if it % 5 == 0 || it == 24 {
             println!("iter {it:>3}: bound F = {f:.2}");
         }
@@ -93,6 +106,7 @@ fn main() -> Result<()> {
     // independent of the 800 training points.
     let model_path = std::env::temp_dir().join("quickstart_model.gpm");
     trainer.export_model()?.save(&model_path)?;
+    let final_params = trainer.params.flatten();
     drop(trainer); // the training cluster is gone from here on
 
     let model = TrainedModel::load(&model_path)?;
@@ -114,6 +128,47 @@ fn main() -> Result<()> {
         std::fs::metadata(&model_path)?.len()
     );
     std::fs::remove_file(&model_path).ok();
+
+    // ---- out-of-core bring-up (DESIGN.md §13): pack the same dataset
+    // into a checksummed sharded store on disk, then rebuild the WHOLE
+    // training run by streaming it back chunk-by-chunk — the leader
+    // holds at most chunk_rows rows at once, yet the trace is
+    // bit-identical to the in-memory run above.
+    let store_dir = std::env::temp_dir().join("quickstart_store");
+    std::fs::remove_dir_all(&store_dir).ok();
+    let full = Matrix::from_fn(n, 5, |i, j| if j < 2 { x[(i, j)] } else { y[(i, j - 2)] });
+    let mut w = StoreWriter::create(&store_dir, 2, 256, None)?;
+    w.append(&full)?;
+    let man = w.finish()?;
+    let src = ShardedDiskSource::open(&store_dir)?;
+    let verified = src.verify()?;
+    println!(
+        "packed {} rows into {} shard(s), {verified} bytes checksum-verified",
+        man.n,
+        man.shards.len()
+    );
+    let mapper = SplitColumns { x_cols: 2 };
+    let stream = StreamConfig {
+        source: &src,
+        mapper: &mapper,
+        chunk_rows: 128,
+        kl_weight: 0.0,
+        shard_refs: None,
+    };
+    let mut streamed = Trainer::new_streaming(cfg, params, &stream)?;
+    for (it, f) in trace.iter().enumerate() {
+        let g = streamed.step()?;
+        assert_eq!(
+            f.to_bits(),
+            g.to_bits(),
+            "streamed iteration {it} diverged from the in-memory run"
+        );
+    }
+    for (a, b) in final_params.iter().zip(streamed.params.flatten()) {
+        assert_eq!(a.to_bits(), b.to_bits(), "streamed final params diverged");
+    }
+    println!("re-trained {} iterations from the on-disk store bit-identically", trace.len());
+    std::fs::remove_dir_all(&store_dir).ok();
     println!("quickstart OK");
     Ok(())
 }

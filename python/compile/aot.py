@@ -40,6 +40,9 @@ CONFIGS = {
     "oil":    dict(m=32, q=6, d=12,  B=64,   block_n=32),
     "digits": dict(m=48, q=8, d=256, B=128,  block_n=32),
     "perf":   dict(m=64, q=2, d=3,   B=2048, block_n=256),
+    # the flight-delay regression scenario (gparml experiment flights):
+    # 8 observed covariates, scalar delay output
+    "flights": dict(m=32, q=8, d=1,  B=128,  block_n=32),
 }
 
 ENTRIES = ("shard_stats", "shard_grads", "kmm_grads", "predict")

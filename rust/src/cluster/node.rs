@@ -21,7 +21,8 @@ use crate::gp::MathMode;
 use crate::linalg::Matrix;
 use crate::obs;
 use crate::optim::Adam;
-use crate::runtime::{build_executor_threads, ShardData, ShardExecutor};
+use crate::runtime::{build_executor_threads, ArtifactConfig, ShardData, ShardExecutor};
+use crate::store;
 use crate::util::timer::thread_cpu_secs;
 
 use super::wire::{self, Frame, Init, Request, Response};
@@ -52,7 +53,10 @@ impl WorkerNode {
     /// so it has no fast variant — DESIGN.md §8). The cluster-wide
     /// `Init.fill_threads` (v7) selects the intra-worker psi-fill
     /// parallelism; 0 is rejected (the wire decoder already refuses it,
-    /// this guards in-process construction too).
+    /// this guards in-process construction too). An `Init.shard_ref`
+    /// (v9) makes the node load and checksum-verify its shard from the
+    /// on-disk dataset store instead of taking rows off the wire; any
+    /// mismatch is a bring-up error the leader surfaces loudly.
     pub fn build(init: &Init, artifacts_dir: &Path) -> Result<WorkerNode> {
         ensure!(
             init.psi_cache || init.math_mode == MathMode::Strict,
@@ -71,7 +75,22 @@ impl WorkerNode {
             init.math_mode,
             init.fill_threads as usize,
         )?;
-        let shard = init.shard.clone();
+        let shard = match &init.shard_ref {
+            None => init.shard.clone(),
+            Some(r) => {
+                ensure!(
+                    init.shard.len() == 0,
+                    "Init carries both wire shard rows and a shard_ref; the leader must \
+                     pick one bring-up path"
+                );
+                ensure!(
+                    !init.lvm,
+                    "shard_ref bring-up is regression-only: LVM latent initialisation is \
+                     leader-derived and must ship over the wire"
+                );
+                Self::load_shard_ref_into(r, &init.artifact)?
+            }
+        };
         let dof = shard.xmu.rows() * shard.xmu.cols();
         Ok(WorkerNode {
             exec,
@@ -82,6 +101,55 @@ impl WorkerNode {
             min_xvar: init.min_xvar,
             lvm: init.lvm,
             psi_cache: init.psi_cache,
+        })
+    }
+
+    /// Worker-local shard load (wire v9, DESIGN.md §13): read the
+    /// referenced store shard file, verify its checksum against the
+    /// leader-sent manifest record, and split its columns into the
+    /// regression `ShardData` (first `x_cols` columns are `Xmu` with a
+    /// delta q(X), the rest are `Y`). Every disagreement — checksum,
+    /// row count, column split — is a named bring-up error.
+    fn load_shard_ref_into(r: &wire::ShardRef, art: &ArtifactConfig) -> Result<ShardData> {
+        let q = r.x_cols as usize;
+        ensure!(
+            q == art.q,
+            "shard_ref has {} input columns but the artifact's latent dimensionality is {}",
+            q,
+            art.q
+        );
+        let (m, sum) = store::codec::read_shard(Path::new(&r.path))
+            .with_context(|| format!("worker-local shard load from {}", r.path))?;
+        ensure!(
+            sum == r.checksum,
+            "shard_ref checksum mismatch: leader expects {:#018x}, {} holds {:#018x} — \
+             refusing bring-up",
+            r.checksum,
+            r.path,
+            sum
+        );
+        ensure!(
+            m.rows() == r.rows as usize,
+            "shard_ref row count mismatch: leader expects {} rows, {} holds {}",
+            r.rows,
+            r.path,
+            m.rows()
+        );
+        ensure!(
+            m.cols() == q + art.d,
+            "shard_ref column mismatch: {} has {} columns but the artifact implies \
+             q + d = {}",
+            r.path,
+            m.cols(),
+            q + art.d
+        );
+        let xmu = Matrix::from_fn(m.rows(), q, |i, j| m[(i, j)]);
+        let y = Matrix::from_fn(m.rows(), art.d, |i, j| m[(i, q + j)]);
+        Ok(ShardData {
+            xmu,
+            xvar: Matrix::zeros(m.rows(), q),
+            y,
+            kl_weight: r.kl_weight,
         })
     }
 

@@ -98,7 +98,14 @@ pub const MAGIC: [u8; 4] = *b"GPMR";
 /// eviction, each entry an address + model version + milliseconds
 /// since the last heartbeat. Serve replicas and cluster workers
 /// reject the control-plane frames with an error.
-pub const VERSION: u16 = 8;
+/// v9 — `Init` carries an optional [`ShardRef`] (DESIGN.md §13): a
+/// path + expected checksum into the on-disk sharded dataset store.
+/// When present, the `Init.shard` is empty and a worker co-located
+/// with the store loads and checksum-verifies its own shard locally
+/// instead of receiving the rows over the wire; a mismatching
+/// checksum (or unreadable file) rejects bring-up loudly — the leader
+/// never trains against rows it cannot vouch for.
+pub const VERSION: u16 = 9;
 /// Upper bound on a single frame payload (defends the decoder against
 /// garbage length prefixes).
 pub const MAX_PAYLOAD: usize = 1 << 30;
@@ -248,6 +255,31 @@ pub struct Init {
     /// at bring-up like `math_mode`.
     pub fill_threads: u32,
     pub shard: ShardData,
+    /// v9: worker-local shard load. When `Some`, `shard` is empty and
+    /// the worker reads its rows from this store shard file instead,
+    /// verifying the checksum before accepting them (DESIGN.md §13).
+    pub shard_ref: Option<ShardRef>,
+}
+
+/// A reference into the on-disk dataset store (wire v9): a worker
+/// co-located with the store loads this shard file itself instead of
+/// receiving the rows over the wire. Regression-only — the first
+/// `x_cols` store columns become `Xmu` (with `Xvar = 0`, the delta
+/// q(X) of observed inputs), the rest become `Y`. The checksum is the
+/// manifest-recorded XXH64 of the whole shard file; any disagreement
+/// with what the worker reads rejects bring-up.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardRef {
+    /// Shard file path as seen from the worker process.
+    pub path: String,
+    /// Expected XXH64 of the entire shard file (manifest record).
+    pub checksum: u64,
+    /// Expected row count (cross-checked against the decoded shard).
+    pub rows: u32,
+    /// Leading input columns; must equal the artifact's `q`.
+    pub x_cols: u32,
+    /// KL annealing weight for the shard (mirrors `ShardData`).
+    pub kl_weight: f64,
 }
 
 /// One wire frame.
@@ -815,6 +847,17 @@ impl Frame {
                 e.u8(init.math_mode.code());
                 e.u32(init.fill_threads);
                 e.shard(&init.shard);
+                match &init.shard_ref {
+                    None => e.bool(false),
+                    Some(r) => {
+                        e.bool(true);
+                        e.str(&r.path);
+                        e.u64(r.checksum);
+                        e.u32(r.rows);
+                        e.u32(r.x_cols);
+                        e.f64(r.kl_weight);
+                    }
+                }
             }
             Frame::Request { trace_id, req } => {
                 e.u64(*trace_id);
@@ -861,6 +904,24 @@ impl Frame {
                     t
                 },
                 shard: d.shard()?,
+                shard_ref: if d.bool()? {
+                    let r = ShardRef {
+                        path: d.str()?,
+                        checksum: d.u64()?,
+                        rows: d.u32()?,
+                        x_cols: d.u32()?,
+                        kl_weight: d.f64()?,
+                    };
+                    if r.rows == 0 {
+                        bail!("shard_ref with 0 rows in Init frame");
+                    }
+                    if r.x_cols == 0 {
+                        bail!("shard_ref with 0 input columns in Init frame");
+                    }
+                    Some(r)
+                } else {
+                    None
+                },
             })),
             4 => Frame::Request {
                 trace_id: d.u64()?,
@@ -1245,7 +1306,15 @@ mod tests {
                 y: rand_mat(&mut rng, 4, 3),
                 kl_weight: 1.0,
             },
+            shard_ref: Some(ShardRef {
+                path: "store/shard_00002.gpds".into(),
+                checksum: 0xDEAD_BEEF_CAFE_F00D,
+                rows: 4,
+                x_cols: 2,
+                kl_weight: 0.25,
+            }),
         };
+        let want_ref = init.shard_ref.clone();
         match roundtrip(&Frame::Init(Box::new(init))) {
             Frame::Init(i2) => {
                 assert_eq!(i2.artifact.name, art.name);
@@ -1255,6 +1324,7 @@ mod tests {
                 assert_eq!(i2.math_mode, MathMode::Strict);
                 assert_eq!(i2.fill_threads, 3, "fill_threads must round-trip");
                 assert_eq!(i2.shard.len(), 4);
+                assert_eq!(i2.shard_ref, want_ref, "shard_ref must round-trip");
             }
             f => panic!("wrong frame {f:?}"),
         }
@@ -1307,8 +1377,20 @@ mod tests {
                     y: rand_mat(rng, b, 2),
                     kl_weight: rng.uniform(),
                 },
+                shard_ref: if rng.flip(0.5) {
+                    Some(ShardRef {
+                        path: "s.gpds".into(),
+                        checksum: rng.next_u64(),
+                        rows: 1 + testing::dim(rng, 1, 7) as u32,
+                        x_cols: q as u32,
+                        kl_weight: rng.uniform(),
+                    })
+                } else {
+                    None
+                },
             };
             let psi_cache = init.psi_cache;
+            let want_ref = init.shard_ref.clone();
             let bytes = encode_frame(&Frame::Init(Box::new(init))).unwrap();
             match decode_frame(&bytes) {
                 Ok((Frame::Init(i2), _)) => {
@@ -1320,6 +1402,9 @@ mod tests {
                     }
                     if i2.fill_threads != threads {
                         return Err(format!("fill_threads {} != {threads}", i2.fill_threads));
+                    }
+                    if i2.shard_ref != want_ref {
+                        return Err("shard_ref corrupted in roundtrip (v9)".into());
                     }
                 }
                 other => return Err(format!("bad decode: {other:?}")),
@@ -1362,6 +1447,7 @@ mod tests {
                 y: Matrix::zeros(0, 1),
                 kl_weight: 1.0,
             },
+            shard_ref: None,
         };
         let bytes = encode_frame(&Frame::Init(Box::new(zero))).unwrap();
         let msg = format!("{:#}", decode_frame(&bytes).unwrap_err());

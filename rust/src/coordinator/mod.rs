@@ -25,4 +25,6 @@
 
 mod trainer;
 
-pub use trainer::{make_inits, partition, GlobalOpt, ModelKind, TrainConfig, Trainer};
+pub use trainer::{
+    make_inits, partition, GlobalOpt, ModelKind, StreamConfig, TrainConfig, Trainer,
+};

@@ -15,6 +15,7 @@ use crate::linalg::Matrix;
 use crate::obs;
 use crate::optim::{Adam, Scg};
 use crate::runtime::{ArtifactConfig, Manifest, ShardData};
+use crate::store::{DataSource, RowMapper};
 use crate::telemetry::{IterationLog, RoundTiming, RunLog};
 use crate::util::rng::Rng;
 
@@ -122,8 +123,29 @@ pub fn make_inits(
             math_mode: cfg.math_mode,
             fill_threads: cfg.fill_threads.max(1) as u32,
             shard,
+            shard_ref: None,
         })
         .collect()
+}
+
+/// Out-of-core bring-up input (DESIGN.md §13): a [`DataSource`] the
+/// leader streams chunk-by-chunk plus the [`RowMapper`] that turns
+/// each raw chunk into `(Xmu, Xvar, Y)` rows. The leader never holds
+/// more than one `chunk_rows`-row chunk of the dataset — peak leader
+/// memory is bounded by the chunk size, not n.
+pub struct StreamConfig<'a> {
+    pub source: &'a dyn DataSource,
+    pub mapper: &'a dyn RowMapper,
+    /// Rows per streamed chunk (>= 1); the leader's memory bound.
+    pub chunk_rows: usize,
+    /// KL annealing weight applied to every worker's shard.
+    pub kl_weight: f64,
+    /// Worker-local shard load (wire v9): when `Some`, worker `k`
+    /// reads `shard_refs[k]` from its own disk and verifies the
+    /// checksum — no data rows cross the wire at all. The refs must
+    /// cover exactly the contiguous partition this bring-up computes
+    /// (one store shard per worker); regression-only.
+    pub shard_refs: Option<Vec<wire::ShardRef>>,
 }
 
 /// The distributed trainer (leader).
@@ -203,6 +225,19 @@ impl Trainer<PoolBackend> {
         let dir = cfg.artifacts_dir.clone();
         build_with(cfg, params, shards, |inits| PoolBackend::new(inits, dir))
     }
+
+    /// Out-of-core in-process bring-up: stream the shards from a
+    /// [`DataSource`] chunk-by-chunk instead of materialising them
+    /// (DESIGN.md §13). Strict-mode traces are bit-identical to
+    /// [`Trainer::new`] over the same rows.
+    pub fn new_streaming(
+        cfg: TrainConfig,
+        params: GlobalParams,
+        stream: &StreamConfig<'_>,
+    ) -> Result<Trainer<PoolBackend>> {
+        let dir = cfg.artifacts_dir.clone();
+        build_streaming(cfg, params, stream, |inits| PoolBackend::new(inits, dir))
+    }
 }
 
 impl Trainer<crate::cluster::TcpBackend> {
@@ -232,6 +267,35 @@ impl Trainer<crate::cluster::TcpBackend> {
         addrs: &[String],
     ) -> Result<Trainer<crate::cluster::TcpBackend>> {
         build_with(cfg, params, shards, |inits| {
+            crate::cluster::TcpBackend::connect(addrs, inits)
+        })
+    }
+
+    /// Out-of-core TCP bring-up, accept direction: workers are
+    /// initialised with empty shards (or a v9 `shard_ref` each), then
+    /// — unless the refs made shipping unnecessary — the leader streams
+    /// each worker's rows in `chunk_rows`-sized parts. Leader peak
+    /// memory is bounded by the chunk size, not n (DESIGN.md §13).
+    pub fn accept_tcp_streaming(
+        cfg: TrainConfig,
+        params: GlobalParams,
+        stream: &StreamConfig<'_>,
+        listener: &std::net::TcpListener,
+    ) -> Result<Trainer<crate::cluster::TcpBackend>> {
+        build_streaming(cfg, params, stream, |inits| {
+            crate::cluster::TcpBackend::accept(listener, inits)
+        })
+    }
+
+    /// Out-of-core TCP bring-up, dial direction (see
+    /// [`Self::accept_tcp_streaming`]); `addrs[k]` becomes worker `k`.
+    pub fn connect_tcp_streaming(
+        cfg: TrainConfig,
+        params: GlobalParams,
+        stream: &StreamConfig<'_>,
+        addrs: &[String],
+    ) -> Result<Trainer<crate::cluster::TcpBackend>> {
+        build_streaming(cfg, params, stream, |inits| {
             crate::cluster::TcpBackend::connect(addrs, inits)
         })
     }
@@ -266,6 +330,140 @@ fn build_with<B: Backend>(
     let inits = make_inits(&cfg, &art, shards);
     let t0 = Instant::now();
     let backend = make_backend(inits)?;
+    let startup_secs = t0.elapsed().as_secs_f64();
+    let mut t = Trainer::from_parts(cfg, params, backend, dout, Some(row_ids));
+    t.log.startup_secs = startup_secs;
+    Ok(t)
+}
+
+/// Shared constructor body for the out-of-core bring-ups (DESIGN.md
+/// §13): validate shapes against the artifact FIRST, build every
+/// worker's `Init` with an EMPTY shard (zero rows, correct widths), so
+/// backend construction ships no data — then stream each worker's
+/// contiguous partition in `chunk_rows`-sized `AppendShard` parts (or
+/// skip shipping entirely when v9 `shard_refs` let the workers load
+/// their own store shards). `AppendShard` rebuilds worker optimiser
+/// state from zero at each append, so after bring-up every worker is
+/// in exactly the state a materialised `build_with` would have put it
+/// in — strict-mode traces are bit-identical (tested in
+/// `tests/store.rs`). Startup time (backend construction + the whole
+/// stream) lands in `log.startup_secs`.
+fn build_streaming<B: Backend>(
+    cfg: TrainConfig,
+    params: GlobalParams,
+    stream: &StreamConfig<'_>,
+    make_backend: impl FnOnce(Vec<wire::Init>) -> Result<B>,
+) -> Result<Trainer<B>> {
+    let art = load_checked_artifact(&cfg, &params)?;
+    let dout = art.d;
+    ensure!(cfg.workers >= 1, "need at least one worker");
+    ensure!(stream.chunk_rows >= 1, "chunk_rows must be >= 1");
+    let n = stream.source.rows();
+    ensure!(
+        n >= cfg.workers,
+        "streaming bring-up needs at least one row per worker ({} rows, {} workers)",
+        n,
+        cfg.workers
+    );
+    let (q, d) = stream.mapper.shapes(stream.source.dims())?;
+    ensure!(
+        q == art.q && d == art.d,
+        "mapped shapes (q={}, d={}) do not match artifact {} (q={}, d={})",
+        q,
+        d,
+        cfg.artifact,
+        art.q,
+        art.d
+    );
+
+    // the same contiguous near-equal split `partition` produces — the
+    // bit-identity contract with the materialised bring-up
+    let base = n / cfg.workers;
+    let extra = n % cfg.workers;
+    let mut ranges = Vec::with_capacity(cfg.workers);
+    let mut offset = 0usize;
+    for k in 0..cfg.workers {
+        let len = base + usize::from(k < extra);
+        ranges.push((offset, offset + len));
+        offset += len;
+    }
+
+    if let Some(refs) = &stream.shard_refs {
+        ensure!(
+            refs.len() == cfg.workers,
+            "need exactly one shard_ref per worker ({} vs {})",
+            refs.len(),
+            cfg.workers
+        );
+        ensure!(
+            cfg.model == ModelKind::Regression,
+            "shard_ref bring-up is regression-only: LVM latents are leader-derived and \
+             must ship over the wire"
+        );
+        for (k, r) in refs.iter().enumerate() {
+            let want = ranges[k].1 - ranges[k].0;
+            ensure!(
+                r.rows as usize == want,
+                "shard_ref {} covers {} rows but worker {}'s partition is {} — store \
+                 shards must align 1:1 with the worker partition",
+                k,
+                r.rows,
+                k,
+                want
+            );
+        }
+    }
+
+    let row_ids: Vec<Vec<usize>> = ranges.iter().map(|&(s, e)| (s..e).collect()).collect();
+    let t0 = Instant::now();
+    let inits: Vec<wire::Init> = (0..cfg.workers)
+        .map(|k| {
+            let empty = ShardData {
+                xmu: Matrix::zeros(0, q),
+                xvar: Matrix::zeros(0, q),
+                y: Matrix::zeros(0, d),
+                kl_weight: stream.kl_weight,
+            };
+            let mut init = make_inits(&cfg, &art, vec![empty]).pop().expect("one init");
+            init.shard_ref = stream.shard_refs.as_ref().map(|refs| refs[k].clone());
+            init
+        })
+        .collect();
+    let mut backend = make_backend(inits)?;
+    if stream.shard_refs.is_none() {
+        for (k, &(start, end)) in ranges.iter().enumerate() {
+            stream
+                .source
+                .stream_range(start, end, stream.chunk_rows, &mut |row0, chunk| {
+                    let (xmu, xvar, y) = stream.mapper.map(row0, chunk)?;
+                    ensure!(
+                        xmu.cols() == q && y.cols() == d,
+                        "mapper produced (q={}, d={}) at row {}, expected (q={}, d={})",
+                        xmu.cols(),
+                        y.cols(),
+                        row0,
+                        q,
+                        d
+                    );
+                    let part = ShardData {
+                        xmu,
+                        xvar,
+                        y,
+                        kl_weight: stream.kl_weight,
+                    };
+                    let reply = backend
+                        .map_one(k, &Request::AppendShard { part })
+                        .ok_or_else(|| {
+                            anyhow!("worker {k} died while receiving its shard stream")
+                        })?;
+                    match reply.value {
+                        Response::Ok => Ok(()),
+                        Response::Err(e) => bail!("worker {k}: {e}"),
+                        other => bail!("worker {k}: unexpected reply {other:?}"),
+                    }
+                })?;
+        }
+    }
     let startup_secs = t0.elapsed().as_secs_f64();
     let mut t = Trainer::from_parts(cfg, params, backend, dout, Some(row_ids));
     t.log.startup_secs = startup_secs;

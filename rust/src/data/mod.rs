@@ -7,6 +7,7 @@
 //! own synthetic benchmark (Figs. 1-3).
 
 pub mod digits;
+pub mod flights;
 pub mod kmeans;
 pub mod oilflow;
 pub mod pca;

@@ -13,6 +13,9 @@ pub mod fig5_load;
 pub mod fig6_digits;
 pub mod fig7_failure;
 pub mod fig8_inducing;
+pub mod scenario_flights;
+pub mod scenario_mnist_lvm;
+pub mod scenarios;
 
 use anyhow::{bail, Result};
 
@@ -30,6 +33,10 @@ pub fn run(name: &str, args: &Args) -> Result<()> {
         "fig7" => fig7_failure::run(args),
         "fig8" => fig8_inducing::run(args),
         "ablations" => ablations::run(args),
+        // the paper-scale out-of-core scenarios (DESIGN.md §13) spawn
+        // real worker processes — deliberately NOT part of `all`
+        "flights" => scenario_flights::run(args),
+        "mnist-lvm" => scenario_mnist_lvm::run(args),
         "all" => {
             for f in [
                 "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8",
@@ -39,6 +46,8 @@ pub fn run(name: &str, args: &Args) -> Result<()> {
             }
             Ok(())
         }
-        other => bail!("unknown experiment {other:?} (fig1..fig8 or all)"),
+        other => bail!(
+            "unknown experiment {other:?} (fig1..fig8, ablations, flights, mnist-lvm or all)"
+        ),
     }
 }

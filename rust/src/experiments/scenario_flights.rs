@@ -1,0 +1,215 @@
+//! `gparml experiment flights` — the paper-scale flight-delay
+//! regression scenario (§4.3's headline regime: 700k training records,
+//! 100k held out, 8 covariates). The whole out-of-core pipeline runs
+//! end-to-end (DESIGN.md §13): pack a synthetic flight-delay store to
+//! disk shard-by-shard, spawn real `gparml worker` processes, stream
+//! every worker's partition over TCP chunk-by-chunk (leader peak
+//! memory bounded by `--chunk-rows`, never by n), train, and score
+//! RMSE on held-out rows. Results land in
+//! `BENCH_scenario_flights.json` for the CI scenario gate
+//! (`gparml bench check --scenario ...`).
+//!
+//! `--scale smoke` (default) is the CI mode — ~1.5k rows, seconds,
+//! same moving parts. `--scale full` is the paper-scale operator run.
+
+use std::net::TcpListener;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{GlobalOpt, ModelKind, StreamConfig, TrainConfig, Trainer};
+use crate::data::flights;
+use crate::experiments::{common, scenarios};
+use crate::gp::GlobalParams;
+use crate::linalg::Matrix;
+use crate::store::{ShardedDiskSource, SplitColumns, StoreWriter};
+use crate::util::cli::Args;
+use crate::util::rng::Rng;
+
+struct Dims {
+    n: usize,
+    n_test: usize,
+    workers: usize,
+    iters: usize,
+    shard_rows: usize,
+    chunk_rows: usize,
+}
+
+pub fn run(args: &Args) -> Result<()> {
+    let scale = scenarios::scale(args)?;
+    let d = if scale == "smoke" {
+        Dims {
+            n: 1536,
+            n_test: 256,
+            workers: 2,
+            iters: 3,
+            shard_rows: 256,
+            chunk_rows: 128,
+        }
+    } else {
+        Dims {
+            n: 700_000,
+            n_test: 100_000,
+            workers: 4,
+            iters: 40,
+            shard_rows: 65_536,
+            chunk_rows: 8_192,
+        }
+    };
+    let n = args.get_usize("n", d.n)?;
+    let n_test = args.get_usize("n-test", d.n_test)?;
+    let workers = args.get_usize("workers", d.workers)?;
+    let iters = args.get_usize("iters", d.iters)?;
+    let shard_rows = args.get_usize("shard-rows", d.shard_rows)?;
+    let chunk_rows = args.get_usize("chunk-rows", d.chunk_rows)?;
+    let seed = args.get_usize("seed", 0)? as u64;
+    let out = common::results_dir(args);
+
+    println!(
+        "flights scenario ({scale}): n={n}, test={n_test}, {workers} worker processes, \
+         {iters} iters, shard_rows={shard_rows}, chunk_rows={chunk_rows}"
+    );
+
+    // ---- pack: stream the generator into a sharded on-disk store.
+    // flights::chunk is chunk-invariant (per-row seeding), so the
+    // packer holds at most chunk_rows rows at once.
+    let store_dir = out.join(format!("flights_store_{scale}"));
+    std::fs::remove_dir_all(&store_dir).ok();
+    let t0 = Instant::now();
+    let mut w = StoreWriter::create(
+        &store_dir,
+        flights::INPUT_COLS,
+        shard_rows,
+        Some("flights"),
+    )?;
+    let mut row = 0usize;
+    while row < n {
+        let rows = chunk_rows.min(n - row);
+        w.append(&flights::chunk(seed, row, rows))?;
+        row += rows;
+    }
+    let man = w.finish()?;
+    let pack_secs = t0.elapsed().as_secs_f64();
+    println!(
+        "  packed {} rows into {} shard(s) at {} ({pack_secs:.2}s, {:.0} rows/s)",
+        man.n,
+        man.shards.len(),
+        store_dir.display(),
+        man.n as f64 / pack_secs.max(1e-9)
+    );
+
+    // ---- bring-up: real worker processes over localhost TCP, shards
+    // streamed from the store (the leader never materialises the data)
+    let src = ShardedDiskSource::open(&store_dir)?;
+    let art = common::manifest(args)?.config("flights")?.clone();
+    let art_dir = common::artifacts_dir(args);
+    let listener = TcpListener::bind("127.0.0.1:0").context("binding the leader listener")?;
+    let addr = listener.local_addr()?.to_string();
+    let procs = scenarios::spawn_workers(workers, &addr, &art_dir)?;
+    let cfg = TrainConfig {
+        artifact: "flights".into(),
+        artifacts_dir: art_dir,
+        workers,
+        model: ModelKind::Regression,
+        global_opt: GlobalOpt::Scg,
+        math_mode: common::math_mode(args)?,
+        fill_threads: common::fill_threads(args)?,
+        seed,
+        ..Default::default()
+    };
+    let mut rng = Rng::new(seed ^ 1);
+    let params = GlobalParams {
+        z: Matrix::from_fn(art.m, art.q, |_, _| rng.range(-2.0, 2.0)),
+        log_ls: vec![0.0; art.q],
+        log_sf2: 0.0,
+        log_beta: 1.0,
+    };
+    let mapper = SplitColumns {
+        x_cols: flights::INPUT_COLS,
+    };
+    let stream = StreamConfig {
+        source: &src,
+        mapper: &mapper,
+        chunk_rows,
+        kl_weight: 0.0,
+        shard_refs: None,
+    };
+    let mut t = Trainer::accept_tcp_streaming(cfg, params, &stream, &listener)?;
+    println!(
+        "  cluster up in {:.2}s (streamed bring-up, leader holds <= {chunk_rows} rows)",
+        t.log.startup_secs
+    );
+
+    // ---- train, reporting the bound trajectory and throughput
+    let mut bound = f64::NAN;
+    let mut train_secs = 0.0;
+    for i in 0..iters {
+        let ti = Instant::now();
+        bound = t.step()?;
+        let secs = ti.elapsed().as_secs_f64();
+        train_secs += secs;
+        println!(
+            "  iter {i:>3}: F = {bound:.4}  ({secs:.2}s, {:.0} rows/s)",
+            n as f64 / secs.max(1e-9)
+        );
+    }
+
+    // ---- held-out RMSE: test rows are just the generator's rows
+    // [n, n + n_test), predicted in bounded batches
+    let mut sq = 0.0;
+    let mut dsum = 0.0;
+    let mut dsq = 0.0;
+    let mut row = n;
+    let end = n + n_test;
+    while row < end {
+        let rows = 4096.min(end - row);
+        let test = flights::chunk(seed, row, rows);
+        let xt = Matrix::from_fn(rows, flights::INPUT_COLS, |i, j| test[(i, j)]);
+        let (mean, _) = t.predict(&xt, &Matrix::zeros(rows, flights::INPUT_COLS))?;
+        for i in 0..rows {
+            let delay = test[(i, flights::INPUT_COLS)];
+            let r = mean[(i, 0)] - delay;
+            sq += r * r;
+            dsum += delay;
+            dsq += delay * delay;
+        }
+        row += rows;
+    }
+    let rmse = (sq / n_test as f64).sqrt();
+    let dmean = dsum / n_test as f64;
+    let delay_std = (dsq / n_test as f64 - dmean * dmean).max(0.0).sqrt();
+    let (tx, rx) = t.log.total_network_bytes();
+    println!(
+        "  RMSE {rmse:.4} over {n_test} held-out rows (test delay std {delay_std:.4}); \
+         network {tx} tx / {rx} rx bytes"
+    );
+
+    let report = scenarios::ScenarioReport {
+        scenario: "flights",
+        scale: scale.into(),
+        shape: vec![
+            ("n", n),
+            ("n_test", n_test),
+            ("workers", workers),
+            ("iters", iters),
+            ("shard_rows", shard_rows),
+            ("chunk_rows", chunk_rows),
+            ("m", art.m),
+        ],
+        series: vec![
+            ("pack_ns_per_row", scenarios::ns_per_row(pack_secs, n)),
+            ("train_ns_per_row", scenarios::ns_per_row(train_secs, n * iters)),
+        ],
+        info: vec![
+            ("train_rows_per_sec", (n * iters) as f64 / train_secs.max(1e-9)),
+            ("rmse", rmse),
+            ("test_delay_std", delay_std),
+            ("final_bound", bound),
+        ],
+    };
+    let path = scenarios::write_report(&out, &report)?;
+    println!("  report -> {}", path.display());
+    drop(t); // sends Shutdown frames before the kill-on-drop guard fires
+    drop(procs);
+    Ok(())
+}

@@ -1,0 +1,227 @@
+//! `gparml experiment mnist-lvm` — the paper-scale GPLVM scenario
+//! (§4.5's regime: a density model over tens of thousands of digit
+//! images). The dataset is packed as an outputs-only store
+//! (`x_cols = 0`); the latent initialisation is a PCA projector fit on
+//! a BOUNDED sample of rows streamed back from the store
+//! ([`crate::store::PcaProject`]), so the leader never holds the full
+//! image matrix during bring-up — each chunk is projected to its
+//! initial q(X) on the way to its worker. Training runs over real
+//! worker processes on TCP; the learned embedding is scored by
+//! between/within-class scatter against the PCA initialisation, and
+//! perf lands in `BENCH_scenario_mnist_lvm.json` for the CI gate.
+//!
+//! `--scale smoke` (default) is the CI mode; `--scale full` trains on
+//! 10k digits (16x more than fig6's large model).
+
+use std::net::TcpListener;
+use std::time::Instant;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::coordinator::{GlobalOpt, ModelKind, StreamConfig, TrainConfig, Trainer};
+use crate::data::{digits, kmeans, pca};
+use crate::experiments::{common, scenarios};
+use crate::gp::GlobalParams;
+use crate::linalg::Matrix;
+use crate::store::{PcaProject, RowMapper, ShardedDiskSource, StoreWriter};
+use crate::util::cli::Args;
+use crate::util::rng::Rng;
+
+struct Dims {
+    n: usize,
+    workers: usize,
+    iters: usize,
+    shard_rows: usize,
+    chunk_rows: usize,
+    /// Rows streamed back from the store to fit the PCA projector.
+    pca_sample: usize,
+}
+
+pub fn run(args: &Args) -> Result<()> {
+    let scale = scenarios::scale(args)?;
+    let d = if scale == "smoke" {
+        Dims {
+            n: 600,
+            workers: 2,
+            iters: 2,
+            shard_rows: 128,
+            chunk_rows: 64,
+            pca_sample: 600,
+        }
+    } else {
+        Dims {
+            n: 10_000,
+            workers: 4,
+            iters: 30,
+            shard_rows: 2_048,
+            chunk_rows: 512,
+            pca_sample: 2_000,
+        }
+    };
+    let n = args.get_usize("n", d.n)?;
+    let workers = args.get_usize("workers", d.workers)?;
+    let iters = args.get_usize("iters", d.iters)?;
+    let shard_rows = args.get_usize("shard-rows", d.shard_rows)?;
+    let chunk_rows = args.get_usize("chunk-rows", d.chunk_rows)?;
+    let pca_sample = args.get_usize("pca-sample", d.pca_sample)?.min(n);
+    let seed = args.get_usize("seed", 0)? as u64;
+    let out = common::results_dir(args);
+
+    println!(
+        "mnist-lvm scenario ({scale}): n={n} digit images, {workers} worker processes, \
+         {iters} iters, shard_rows={shard_rows}, chunk_rows={chunk_rows}, \
+         PCA sample {pca_sample}"
+    );
+
+    // ---- pack an outputs-only store (x_cols = 0). The digit
+    // generator's RNG is sequential across rows, so the images are
+    // generated in one pass; the packer still flushes shard-by-shard.
+    let store_dir = out.join(format!("mnist_lvm_store_{scale}"));
+    std::fs::remove_dir_all(&store_dir).ok();
+    let t0 = Instant::now();
+    let data = digits::generate(n, 0.02, seed);
+    let mut w = StoreWriter::create(&store_dir, 0, shard_rows, Some("digits"))?;
+    let mut row = 0usize;
+    while row < n {
+        let rows = chunk_rows.min(n - row);
+        let chunk = Matrix::from_fn(rows, digits::PIXELS, |i, j| data.y[(row + i, j)]);
+        w.append(&chunk)?;
+        row += rows;
+    }
+    let man = w.finish()?;
+    let pack_secs = t0.elapsed().as_secs_f64();
+    drop(data); // from here on everything reads from the store
+    println!(
+        "  packed {} rows x {} px into {} shard(s) at {} ({pack_secs:.2}s)",
+        man.n,
+        man.dims,
+        man.shards.len(),
+        store_dir.display()
+    );
+
+    // ---- latent initialisation: PCA on a bounded sample streamed
+    // back from the store, then a fixed per-row projector for the
+    // full streaming bring-up (paper §4.1 initialisation, out-of-core)
+    let src = ShardedDiskSource::open(&store_dir)?;
+    let art = common::manifest(args)?.config("digits")?.clone();
+    ensure!(
+        art.d == digits::PIXELS,
+        "digits artifact renders {} outputs but the store rows have {} pixels",
+        art.d,
+        digits::PIXELS
+    );
+    let mut sample = Matrix::zeros(pca_sample, digits::PIXELS);
+    src.stream_range(0, pca_sample, chunk_rows, &mut |row0, chunk| {
+        for i in 0..chunk.rows() {
+            sample.row_mut(row0 + i).copy_from_slice(chunk.row(i));
+        }
+        Ok(())
+    })?;
+    let fit = pca::pca(&sample, art.q, 50, seed ^ 0xACE);
+    let sample_latents = pca::whitened_scores(&fit);
+    let mut rng = Rng::new(seed);
+    let z = kmeans::inducing_init(&sample_latents, art.m, 0.05, &mut rng);
+    let mapper = PcaProject::from_pca(&fit, 0.5);
+    let params = GlobalParams {
+        z,
+        log_ls: vec![0.0; art.q],
+        log_sf2: 0.0,
+        log_beta: 1.0,
+    };
+
+    // the PCA-initialised embedding over ALL rows (streamed through
+    // the same projector) — the baseline the trained embedding must beat
+    let labels: Vec<usize> = (0..n).map(|i| i % 10).collect();
+    let mut init_latents = Matrix::zeros(n, art.q);
+    src.stream_range(0, n, chunk_rows, &mut |row0, chunk| {
+        let (xmu, _, _) = mapper.map(row0, chunk)?;
+        for i in 0..xmu.rows() {
+            init_latents.row_mut(row0 + i).copy_from_slice(xmu.row(i));
+        }
+        Ok(())
+    })?;
+    let sep_init = common::class_separation(&init_latents, &labels);
+    drop(init_latents);
+
+    // ---- bring-up over real worker processes, streamed from the store
+    let art_dir = common::artifacts_dir(args);
+    let listener = TcpListener::bind("127.0.0.1:0").context("binding the leader listener")?;
+    let addr = listener.local_addr()?.to_string();
+    let procs = scenarios::spawn_workers(workers, &addr, &art_dir)?;
+    let cfg = TrainConfig {
+        artifact: "digits".into(),
+        artifacts_dir: art_dir,
+        workers,
+        model: ModelKind::Lvm,
+        global_opt: GlobalOpt::Scg,
+        math_mode: common::math_mode(args)?,
+        fill_threads: common::fill_threads(args)?,
+        seed,
+        ..Default::default()
+    };
+    let stream = StreamConfig {
+        source: &src,
+        mapper: &mapper,
+        chunk_rows,
+        kl_weight: 1.0,
+        shard_refs: None,
+    };
+    let mut t = Trainer::accept_tcp_streaming(cfg, params, &stream, &listener)?;
+    println!(
+        "  cluster up in {:.2}s (streamed bring-up, leader holds <= {chunk_rows} rows)",
+        t.log.startup_secs
+    );
+
+    let mut bound = f64::NAN;
+    let mut train_secs = 0.0;
+    for i in 0..iters {
+        let ti = Instant::now();
+        bound = t.step()?;
+        let secs = ti.elapsed().as_secs_f64();
+        train_secs += secs;
+        println!(
+            "  iter {i:>3}: F = {bound:.4}  ({secs:.2}s, {:.0} rows/s)",
+            n as f64 / secs.max(1e-9)
+        );
+    }
+
+    // ---- score the learned embedding against the PCA baseline
+    let trained = common::gathered_xmu(&mut t, art.q)?;
+    let sep_trained = common::class_separation(&trained, &labels);
+    let relevance = common::ard_relevance(&t.params);
+    let active = relevance.iter().filter(|r| **r > 0.1).count();
+    println!(
+        "  class separation: PCA init {sep_init:.4} -> trained {sep_trained:.4}; \
+         {active}/{} latent dims active (ARD)",
+        art.q
+    );
+
+    let report = scenarios::ScenarioReport {
+        scenario: "mnist_lvm",
+        scale: scale.into(),
+        shape: vec![
+            ("n", n),
+            ("workers", workers),
+            ("iters", iters),
+            ("shard_rows", shard_rows),
+            ("chunk_rows", chunk_rows),
+            ("m", art.m),
+            ("q", art.q),
+        ],
+        series: vec![
+            ("pack_ns_per_row", scenarios::ns_per_row(pack_secs, n)),
+            ("train_ns_per_row", scenarios::ns_per_row(train_secs, n * iters)),
+        ],
+        info: vec![
+            ("train_rows_per_sec", (n * iters) as f64 / train_secs.max(1e-9)),
+            ("class_separation_init", sep_init),
+            ("class_separation_trained", sep_trained),
+            ("final_bound", bound),
+        ],
+    };
+    let path = scenarios::write_report(&out, &report)?;
+    println!("  report -> {}", path.display());
+    drop(t);
+    drop(procs);
+    Ok(())
+}

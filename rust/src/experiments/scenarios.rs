@@ -1,0 +1,160 @@
+//! Shared plumbing for the paper-scale experiment scenarios
+//! (`gparml experiment flights` / `mnist-lvm`, DESIGN.md §13): the
+//! smoke/full scale switch, worker-process management for the real
+//! multi-process TCP cluster each scenario drives, and the
+//! `BENCH_scenario_*.json` report writer whose output the CI gate
+//! consumes (`gparml bench check --scenario ...`).
+
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+
+use anyhow::{Context, Result};
+
+use crate::util::cli::Args;
+
+/// `--scale smoke|full` (default `smoke`): `smoke` is the CI mode —
+/// seconds of wall clock, every moving part of the out-of-core
+/// pipeline exercised end-to-end; `full` is the paper-scale operator
+/// run (the 700k-row regime of §4.3).
+pub fn scale(args: &Args) -> Result<&str> {
+    let s = args.get_str("scale", "smoke");
+    anyhow::ensure!(
+        matches!(s, "smoke" | "full"),
+        "--scale expects smoke|full, got {s:?}"
+    );
+    Ok(s)
+}
+
+/// Spawned `gparml worker` processes, killed on drop so an erroring
+/// scenario never leaks children.
+pub struct WorkerProcs(Vec<Child>);
+
+impl Drop for WorkerProcs {
+    fn drop(&mut self) {
+        for c in &mut self.0 {
+            let _ = c.kill();
+            let _ = c.wait();
+        }
+    }
+}
+
+/// Spawn `n` worker processes of THIS binary dialing `leader_addr`
+/// (`std::env::current_exe()`), so the scenario trains over real
+/// processes and real TCP exactly like an operator deployment. Worker
+/// stderr is inherited — a worker-side bring-up failure shows up in
+/// the scenario's output, not a black hole.
+pub fn spawn_workers(n: usize, leader_addr: &str, artifacts: &Path) -> Result<WorkerProcs> {
+    let bin = std::env::current_exe().context("resolving the gparml binary path")?;
+    let art = artifacts
+        .to_str()
+        .context("artifacts dir path is not valid UTF-8")?;
+    let mut procs = Vec::with_capacity(n);
+    for k in 0..n {
+        procs.push(
+            Command::new(&bin)
+                .args(["worker", "--connect", leader_addr, "--artifacts", art])
+                .stdout(Stdio::null())
+                .stderr(Stdio::inherit())
+                .spawn()
+                .with_context(|| format!("spawning scenario worker {k}"))?,
+        );
+    }
+    Ok(WorkerProcs(procs))
+}
+
+/// One scenario's measured report. `series` keys must end in
+/// `_ns_per_row` — they are the gated perf numbers (the scenario gate
+/// compares them against `<scenario>_<series>` ceilings in
+/// `BENCH_scenario_baseline.json`); `info` carries ungated context
+/// (rows/sec, RMSE, bounds, separation scores).
+pub struct ScenarioReport {
+    /// Baseline key prefix and report file stem (`BENCH_scenario_<x>.json`).
+    pub scenario: &'static str,
+    pub scale: String,
+    /// Integer shape fields (n, workers, iters, ...), in output order.
+    pub shape: Vec<(&'static str, usize)>,
+    /// Gated `*_ns_per_row` series.
+    pub series: Vec<(&'static str, f64)>,
+    /// Ungated metrics.
+    pub info: Vec<(&'static str, f64)>,
+}
+
+/// Write `BENCH_scenario_<scenario>.json` under `dir`; returns the path.
+pub fn write_report(dir: &Path, r: &ScenarioReport) -> Result<PathBuf> {
+    for (key, _) in &r.series {
+        anyhow::ensure!(
+            key.ends_with("_ns_per_row"),
+            "gated scenario series {key:?} must end in _ns_per_row"
+        );
+    }
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(format!("BENCH_scenario_{}.json", r.scenario));
+    let mut json = String::from("{\n");
+    json.push_str(&format!(
+        "  \"scenario\": \"{}\",\n  \"scale\": \"{}\"",
+        r.scenario, r.scale
+    ));
+    for (key, v) in &r.shape {
+        json.push_str(&format!(",\n  \"{key}\": {v}"));
+    }
+    for (key, v) in r.series.iter().chain(&r.info) {
+        json.push_str(&format!(",\n  \"{key}\": {v:.3}"));
+    }
+    json.push_str("\n}\n");
+    std::fs::write(&path, json).with_context(|| format!("writing {}", path.display()))?;
+    Ok(path)
+}
+
+/// Nanoseconds per row processed — the machine-comparable unit every
+/// gated scenario series uses (`secs` wall over `rows` total rows).
+pub fn ns_per_row(secs: f64, rows: usize) -> f64 {
+    secs * 1e9 / (rows.max(1) as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    #[test]
+    fn report_writer_emits_gate_compatible_json() {
+        let dir = std::env::temp_dir().join(format!("gpds_scen_{}", std::process::id()));
+        let r = ScenarioReport {
+            scenario: "flights",
+            scale: "smoke".into(),
+            shape: vec![("n", 1536), ("workers", 2)],
+            series: vec![("train_ns_per_row", 123.456), ("pack_ns_per_row", 7.0)],
+            info: vec![("rmse", 0.25)],
+        };
+        let path = write_report(&dir, &r).unwrap();
+        assert!(path.ends_with("BENCH_scenario_flights.json"));
+        let json = Json::from_file(&path).unwrap();
+        assert_eq!(json.get("scenario").unwrap().as_str().unwrap(), "flights");
+        assert_eq!(json.get("n").unwrap().as_f64().unwrap(), 1536.0);
+        let t = json.get("train_ns_per_row").unwrap().as_f64().unwrap();
+        assert!((t - 123.456).abs() < 1e-9);
+        assert!(json.get("rmse").unwrap().as_f64().unwrap() > 0.0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn report_writer_rejects_ununitted_series() {
+        let dir = std::env::temp_dir().join(format!("gpds_scen_bad_{}", std::process::id()));
+        let r = ScenarioReport {
+            scenario: "flights",
+            scale: "smoke".into(),
+            shape: vec![],
+            series: vec![("train_secs", 1.0)],
+            info: vec![],
+        };
+        let msg = format!("{:#}", write_report(&dir, &r).unwrap_err());
+        assert!(msg.contains("_ns_per_row"), "{msg}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn ns_per_row_handles_zero_rows() {
+        assert!(ns_per_row(1.0, 0).is_finite());
+        assert!((ns_per_row(2.0, 1000) - 2e6).abs() < 1e-6);
+    }
+}

@@ -39,6 +39,7 @@ pub mod model;
 pub mod obs;
 pub mod optim;
 pub mod runtime;
+pub mod store;
 pub mod telemetry;
 pub mod testing;
 pub mod util;

@@ -2,12 +2,17 @@
 //! GPLVM (Gal, van der Wilk & Rasmussen, 2014).
 //!
 //! ```text
-//! gparml experiment <fig1..fig8|all> [--n N] [--iters I] [--workers W] ...
+//! gparml experiment <fig1..fig8|flights|mnist-lvm|all> [--n N] [--iters I] ...
 //! gparml train [--data synthetic|oilflow|digits] [--model reg|lvm] ...
+//!              [--store DIR] [--chunk-rows R]    # stream a packed store
+//!              [--shard-local]                   # workers read own shards
 //!              [--math-mode strict|fast]          # execution policy
 //!              [--fill-threads N]                # intra-worker psi fill
 //!              [--connect HOST:PORT,HOST:PORT]   # drive TCP workers
 //!              [--export MODEL] [--checkpoint F] [--resume F]
+//! gparml data pack --out DIR (--csv F [--x-cols C] | --gen NAME)
+//!                  [--n N] [--seed S] [--shard-rows R] [--artifact A]
+//! gparml data inspect --store DIR [--verify]    # manifest + checksums
 //! gparml export [train flags] --out model.gpm   # train, then save the
 //!                                               # TrainedModel artifact
 //! gparml predict (--model model.gpm | --connect ADDR) [--n N] [--seed S]
@@ -56,8 +61,8 @@
 use anyhow::{bail, Context, Result};
 
 use gparml::cluster::Backend;
-use gparml::coordinator::{partition, GlobalOpt, ModelKind, TrainConfig, Trainer};
-use gparml::data::{digits, oilflow, synthetic};
+use gparml::coordinator::{partition, GlobalOpt, ModelKind, StreamConfig, TrainConfig, Trainer};
+use gparml::data::{digits, flights, oilflow, synthetic};
 use gparml::experiments::{self, common};
 use gparml::linalg::Matrix;
 use gparml::model::{serve, Predictor, TrainedModel};
@@ -97,15 +102,19 @@ fn run_command(args: &Args) -> Result<()> {
         Some("stats") => stats_cmd(args),
         Some("worker") => worker(args),
         Some("bench") => bench(args),
+        Some("data") => data_cmd(args),
         Some("info") => info(args),
         _ => {
             eprintln!(
-                "usage: gparml <experiment|train|export|predict|serve|control|lb|reload|stats|worker|bench|info> [flags]\n\
-                 experiments: fig1 fig2 fig3 fig4 fig5 fig6 fig7 fig8 all\n\
+                "usage: gparml <experiment|train|export|predict|serve|control|lb|reload|stats|worker|bench|data|info> [flags]\n\
+                 experiments: fig1 fig2 fig3 fig4 fig5 fig6 fig7 fig8 flights mnist-lvm all\n\
                  common flags: --n --iters --workers --seed --out DIR --artifacts DIR\n\
                  cluster: gparml worker --connect LEADER_ADDR (or --listen ADDR)\n\
                           [--heartbeat-ms N],\n\
-                          gparml train --connect W1,W2,... (synthetic dataset)\n\
+                          gparml train --connect W1,W2,... (synthetic dataset or --store)\n\
+                 store:   gparml data pack --out DIR (--csv F | --gen NAME),\n\
+                          gparml data inspect --store DIR [--verify],\n\
+                          gparml train --store DIR [--chunk-rows R] [--shard-local]\n\
                  serving: gparml export [train flags] --out model.gpm,\n\
                           gparml predict (--model F | --connect ADDR) [--points file.csv]\n\
                           [--project] [--out preds.csv],\n\
@@ -656,6 +665,189 @@ fn info(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `gparml data <pack|inspect>`: the out-of-core sharded dataset
+/// store (DESIGN.md §13). `pack` writes a store directory from a CSV
+/// (`--csv FILE --x-cols C`) or any built-in generator
+/// (`--gen synthetic|oilflow|digits|flights`); `inspect` prints a
+/// store's manifest and, with `--verify`, streams every shard to check
+/// all checksums against the manifest.
+fn data_cmd(args: &Args) -> Result<()> {
+    match args.positional.get(1).map(|s| s.as_str()) {
+        Some("pack") => data_pack(args),
+        Some("inspect") => data_inspect(args),
+        other => bail!(
+            "usage: gparml data <pack|inspect> [flags] (got {other:?})\n\
+             pack:    --out STORE_DIR (--csv FILE [--x-cols C] | --gen \
+             synthetic|oilflow|digits|flights)\n\
+             \x20        [--n N] [--seed S] [--noise X] [--shard-rows R] \
+             [--chunk-rows R] [--artifact NAME]\n\
+             inspect: --store STORE_DIR [--verify]"
+        ),
+    }
+}
+
+fn data_pack(args: &Args) -> Result<()> {
+    let out = args.get("out").context("data pack needs --out STORE_DIR")?;
+    let dir = std::path::PathBuf::from(out);
+    let shard_rows = args.get_usize("shard-rows", 8192)?;
+    let chunk_rows = args.get_usize("chunk-rows", 2048)?.max(1);
+    let seed = args.get_usize("seed", 0)? as u64;
+    let t0 = std::time::Instant::now();
+    let manifest = match (args.get("csv"), args.get("gen")) {
+        (Some(csv), None) => {
+            let x_cols = args.get_usize("x-cols", 0)?;
+            let mut w = gparml::store::StoreWriter::create(
+                &dir,
+                x_cols,
+                shard_rows,
+                args.get("artifact"),
+            )?;
+            // stream the CSV in chunks: neither the file nor the matrix
+            // is ever fully materialised
+            for chunk in gparml::util::csv::read_matrix_chunked(
+                std::path::Path::new(csv),
+                chunk_rows,
+            )? {
+                w.append(&chunk?)?;
+            }
+            w.finish()?
+        }
+        (None, Some(gen)) => pack_generated(args, &dir, gen, shard_rows, chunk_rows, seed)?,
+        _ => bail!(
+            "data pack needs exactly one of --csv FILE or --gen \
+             synthetic|oilflow|digits|flights"
+        ),
+    };
+    let secs = t0.elapsed().as_secs_f64();
+    println!(
+        "packed {} rows x {} cols ({} input col(s)) into {} shard(s) at {} ({:.2}s)",
+        manifest.n,
+        manifest.dims,
+        manifest.x_cols,
+        manifest.shards.len(),
+        dir.display(),
+        secs
+    );
+    Ok(())
+}
+
+/// Pack a built-in generator into a store. `flights` generates
+/// chunk-by-chunk (O(chunk) memory at any n — the paper-scale path);
+/// the other generators are modest and append from memory. Regression
+/// generators store inputs-then-outputs rows with `x_cols` set; the
+/// LVM generators (oilflow, digits) store outputs only (`x_cols` 0).
+fn pack_generated(
+    args: &Args,
+    dir: &std::path::Path,
+    gen: &str,
+    shard_rows: usize,
+    chunk_rows: usize,
+    seed: u64,
+) -> Result<gparml::store::StoreManifest> {
+    let artifact = |default: &str| -> String {
+        args.get_str("artifact", default).to_string()
+    };
+    match gen {
+        "flights" => {
+            let n = args.get_usize("n", 10_000)?;
+            let mut w = gparml::store::StoreWriter::create(
+                dir,
+                flights::INPUT_COLS,
+                shard_rows,
+                Some(&artifact("flights")),
+            )?;
+            let mut start = 0usize;
+            while start < n {
+                let rows = chunk_rows.min(n - start);
+                w.append(&flights::chunk(seed, start, rows))?;
+                start += rows;
+            }
+            w.finish()
+        }
+        "synthetic" => {
+            // same construction as `train --data synthetic --model reg`:
+            // col 0 the true latent, col 1 a small nuisance input
+            let n = args.get_usize("n", 2000)?;
+            let noise = args.get_f64("noise", 0.05)?;
+            let data = synthetic::generate(n, noise, seed);
+            let mut rng = Rng::new(seed);
+            let d = data.y.cols();
+            let rows = Matrix::from_fn(n, 2 + d, |i, j| match j {
+                0 => data.latent[i],
+                1 => 0.1 * rng.normal(),
+                _ => data.y[(i, j - 2)],
+            });
+            let mut w = gparml::store::StoreWriter::create(
+                dir,
+                2,
+                shard_rows,
+                Some(&artifact("small")),
+            )?;
+            w.append(&rows)?;
+            w.finish()
+        }
+        "oilflow" => {
+            let n = args.get_usize("n", 600)?;
+            let data = oilflow::generate(n, seed);
+            let mut w = gparml::store::StoreWriter::create(
+                dir,
+                0,
+                shard_rows,
+                Some(&artifact("oil")),
+            )?;
+            w.append(&data.y)?;
+            w.finish()
+        }
+        "digits" => {
+            let n = args.get_usize("n", 300)?;
+            let noise = args.get_f64("noise", 0.02)?;
+            let data = digits::generate(n, noise, seed);
+            let mut w = gparml::store::StoreWriter::create(
+                dir,
+                0,
+                shard_rows,
+                Some(&artifact("digits")),
+            )?;
+            w.append(&data.y)?;
+            w.finish()
+        }
+        other => bail!("unknown generator {other:?} (synthetic|oilflow|digits|flights)"),
+    }
+}
+
+fn data_inspect(args: &Args) -> Result<()> {
+    let dir = args
+        .get("store")
+        .context("data inspect needs --store STORE_DIR")?;
+    let src = gparml::store::ShardedDiskSource::open(std::path::Path::new(dir))?;
+    let m = src.manifest();
+    println!(
+        "store {dir}: {} rows x {} cols ({} input, {} output), {} shard(s)",
+        m.n,
+        m.dims,
+        m.x_cols,
+        m.y_cols(),
+        m.shards.len()
+    );
+    if let Some(a) = &m.artifact {
+        println!("  artifact hint: {a}");
+    }
+    for (i, s) in m.shards.iter().enumerate() {
+        println!(
+            "  shard {i:>3}: rows [{}, {})  checksum {:#018x}  {}",
+            s.start,
+            s.start + s.rows,
+            s.checksum,
+            s.file
+        );
+    }
+    if args.has("verify") {
+        let bytes = src.verify()?;
+        println!("verified {bytes} bytes: every shard matches both its own checksum and the manifest");
+    }
+    Ok(())
+}
+
 /// Worker addresses from `--connect a,b,c` (leader side).
 fn connect_addrs(args: &Args) -> Option<Vec<String>> {
     args.get("connect").map(|s| {
@@ -677,17 +869,25 @@ fn train(args: &Args) -> Result<()> {
         Some(a) => a.len(),
         None => args.get_usize("workers", 4)?,
     };
-    let model = match args.get_str("model", "lvm") {
-        "reg" | "regression" => ModelKind::Regression,
-        _ => ModelKind::Lvm,
-    };
     if let Some(a) = &addrs {
         if a.is_empty() {
             bail!("--connect needs at least one worker address (host:port[,host:port...])");
         }
-        if dataset != "synthetic" {
-            bail!("--connect currently supports --data synthetic (use the library API for the rest)");
-        }
+    }
+    // `--store DIR`: out-of-core bring-up from a packed dataset store
+    // (DESIGN.md §13); works over threads and `--connect` alike
+    if args.get("store").is_some() {
+        return train_from_store(args, iters, seed, math_mode, fill_threads, addrs, workers);
+    }
+    let model = match args.get_str("model", "lvm") {
+        "reg" | "regression" => ModelKind::Regression,
+        _ => ModelKind::Lvm,
+    };
+    if addrs.is_some() && dataset != "synthetic" {
+        bail!(
+            "--connect currently supports --data synthetic or --store DIR (use the \
+             library API for the rest)"
+        );
     }
 
     match dataset {
@@ -767,6 +967,126 @@ fn train(args: &Args) -> Result<()> {
             run_loop(&mut t, iters, args)
         }
         other => bail!("unknown dataset {other:?} (synthetic|oilflow|digits)"),
+    }
+}
+
+/// `gparml train --store DIR`: regression training streamed from a
+/// packed dataset store. The leader never materialises the dataset —
+/// rows flow disk -> `chunk-rows`-sized chunks -> workers, so leader
+/// peak memory is bounded by the chunk size, not n (DESIGN.md §13).
+/// `--shard-local` (wire v9) goes further: each worker loads its own
+/// store shard from disk and verifies the manifest checksum, and no
+/// data rows cross the wire at all (requires one store shard per
+/// worker — repack with `--shard-rows n/workers`).
+#[allow(clippy::too_many_arguments)]
+fn train_from_store(
+    args: &Args,
+    iters: usize,
+    seed: u64,
+    math_mode: gparml::gp::MathMode,
+    fill_threads: usize,
+    addrs: Option<Vec<String>>,
+    workers: usize,
+) -> Result<()> {
+    let dir = args.get("store").expect("checked by caller");
+    let src = gparml::store::ShardedDiskSource::open(std::path::Path::new(dir))?;
+    let man = src.manifest().clone();
+    if man.x_cols == 0 {
+        bail!(
+            "store {dir} has no input columns (x_cols 0) — `train --store` is \
+             regression-only; outputs-only stores are consumed by \
+             `gparml experiment mnist-lvm`"
+        );
+    }
+    let (q, d) = (man.x_cols, man.y_cols());
+    let artifact = args
+        .get("artifact")
+        .map(str::to_string)
+        .or_else(|| man.artifact.clone())
+        .context("store has no artifact hint; pass --artifact NAME")?;
+    let cfg = TrainConfig {
+        artifact: artifact.clone(),
+        artifacts_dir: common::artifacts_dir(args),
+        workers,
+        model: ModelKind::Regression,
+        global_opt: GlobalOpt::Scg,
+        math_mode,
+        fill_threads,
+        seed,
+        ..Default::default()
+    };
+    let art = Manifest::load(&cfg.artifacts_dir)?.config(&artifact)?.clone();
+    if art.q != q || art.d != d {
+        bail!(
+            "store {dir} ({q} input, {d} output col(s)) does not fit artifact \
+             {artifact} (q={}, d={})",
+            art.q,
+            art.d
+        );
+    }
+    let mut prng = Rng::new(seed ^ 1);
+    let params = gparml::gp::GlobalParams {
+        z: Matrix::from_fn(art.m, q, |_, _| prng.range(-3.0, 3.0)),
+        log_ls: vec![0.0; q],
+        log_sf2: 0.0,
+        log_beta: 1.0,
+    };
+    let shard_refs = if args.has("shard-local") {
+        if man.shards.len() != workers {
+            bail!(
+                "--shard-local needs exactly one store shard per worker ({} shard(s), \
+                 {workers} worker(s)); repack with --shard-rows n/workers",
+                man.shards.len()
+            );
+        }
+        Some(
+            man.shards
+                .iter()
+                .enumerate()
+                .map(|(i, e)| gparml::cluster::wire::ShardRef {
+                    path: src.shard_path(i).display().to_string(),
+                    checksum: e.checksum,
+                    rows: e.rows as u32,
+                    x_cols: man.x_cols as u32,
+                    kl_weight: 0.0,
+                })
+                .collect(),
+        )
+    } else {
+        None
+    };
+    let mapper = gparml::store::SplitColumns { x_cols: man.x_cols };
+    let stream = StreamConfig {
+        source: &src,
+        mapper: &mapper,
+        chunk_rows: args.get_usize("chunk-rows", 4096)?.max(1),
+        kl_weight: 0.0,
+        shard_refs,
+    };
+    println!(
+        "store {dir}: {} rows x {} cols, {} shard(s), artifact {artifact}{}",
+        man.n,
+        man.dims,
+        man.shards.len(),
+        if stream.shard_refs.is_some() {
+            " (worker-local shard load)"
+        } else {
+            ""
+        }
+    );
+    match addrs {
+        Some(addrs) => {
+            println!("cluster: {} TCP worker processes ({addrs:?})", addrs.len());
+            let mut t = Trainer::connect_tcp_streaming(cfg, params, &stream, &addrs)?;
+            run_loop(&mut t, iters, args)?;
+            let (tx, rx) = t.log.total_network_bytes();
+            println!("network: {tx} B to workers, {rx} B back");
+            Ok(())
+        }
+        None => {
+            let mut t = Trainer::new_streaming(cfg, params, &stream)?;
+            run_loop(&mut t, iters, args)
+        }
     }
 }
 

@@ -358,18 +358,36 @@ fn measure(args: &Args) -> Result<PsiReport> {
 /// committed baseline; non-zero exit on regression (the CI gate).
 ///
 /// Flags: `--baseline` (default `BENCH_baseline.json`), `--current`
-/// (default `BENCH_psi.json`), `--max-regress` (fractional ns/point
-/// regression budget, default 0.25).
+/// (default `BENCH_psi.json`), `--max-regress` (fractional regression
+/// budget, default 0.25). `--scenario R1,R2` additionally gates the
+/// named `BENCH_scenario_*.json` reports (written by
+/// `gparml experiment flights` / `mnist-lvm`) against
+/// `--scenario-baseline` (default `BENCH_scenario_baseline.json`) via
+/// [`scenario_gate`] — one command, one exit code for the whole perf
+/// surface.
 pub fn check(args: &Args) -> Result<()> {
     let baseline_path = args.get_str("baseline", "BENCH_baseline.json");
     let current_path = args.get_str("current", "BENCH_psi.json");
     let max_regress = args.get_f64("max-regress", 0.25)?;
     let baseline = Json::from_file(Path::new(baseline_path))?;
     let current = Json::from_file(Path::new(current_path))?;
-    let failures = gate(&baseline, &current, max_regress)?;
+    let mut failures = gate(&baseline, &current, max_regress)?;
+    let mut gated = vec![current_path.to_string()];
+    if let Some(reports) = args.get("scenario") {
+        let sb_path = args.get_str("scenario-baseline", "BENCH_scenario_baseline.json");
+        let sbase = Json::from_file(Path::new(sb_path))
+            .with_context(|| format!("loading scenario baseline {sb_path}"))?;
+        for report in reports.split(',').filter(|r| !r.is_empty()) {
+            let cur = Json::from_file(Path::new(report))
+                .with_context(|| format!("loading scenario report {report}"))?;
+            failures.extend(scenario_gate(&sbase, &cur, max_regress)?);
+            gated.push(report.to_string());
+        }
+    }
     if failures.is_empty() {
         println!(
-            "bench check: OK ({current_path} within {:.0}% of {baseline_path}, fast <= strict)",
+            "bench check: OK ({} within {:.0}% of the committed ceilings, fast <= strict)",
+            gated.join(", "),
             max_regress * 100.0
         );
         return Ok(());
@@ -381,7 +399,7 @@ pub fn check(args: &Args) -> Result<()> {
     // only the last line, and "3 regressions" without WHICH series and
     // against WHAT baseline value is undebuggable from a red check
     bail!(
-        "{} bench regression(s) against {baseline_path} (budget {:.0}%): {}",
+        "{} bench regression(s) against the committed ceilings (budget {:.0}%): {}",
         failures.len(),
         max_regress * 100.0,
         failures.join("; ")
@@ -483,6 +501,63 @@ fn gate(baseline: &Json, current: &Json, max_regress: f64) -> Result<Vec<String>
                 "traced eval ({t:.1} ns/point) exceeds untraced eval_cached \
                  ({s:.1} ns/point) by more than {:.0}% — tracing overhead regression",
                 max_regress * 100.0
+            ));
+        }
+    }
+    Ok(fails)
+}
+
+/// The pure scenario gate (DESIGN.md §13): a scenario report (from
+/// `gparml experiment flights` / `mnist-lvm`) carries a `"scenario"`
+/// name plus un-prefixed `*_ns_per_row` series; the committed
+/// `BENCH_scenario_baseline.json` holds ceilings keyed
+/// `<scenario>_<series>` so one flat file gates every scenario. Every
+/// ceiling with a matching prefix must be met within
+/// `(1 + max_regress)`, and — mirroring [`gate`]'s reverse direction —
+/// every measured `*_ns_per_row` series must carry a committed ceiling,
+/// so a new series can never ship silently ungated. Ceilings for OTHER
+/// scenarios are ignored (each report is gated per-scenario; the
+/// missing-report case is the CI job's job, not this function's).
+fn scenario_gate(baseline: &Json, current: &Json, max_regress: f64) -> Result<Vec<String>> {
+    let mut fails = Vec::new();
+    let name = current
+        .get("scenario")
+        .context("scenario report has no \"scenario\" field")?
+        .as_str()?
+        .to_string();
+    let prefix = format!("{name}_");
+    let base_obj = baseline.as_obj()?;
+    for (key, bv) in base_obj {
+        if !key.ends_with("_ns_per_row") || !key.starts_with(&prefix) {
+            continue;
+        }
+        let series = &key[prefix.len()..];
+        let base = bv.as_f64()?;
+        let Some(cv) = current.opt(series) else {
+            fails.push(format!(
+                "scenario {name}: series {series} (ceiling {base:.1} ns/row) is missing \
+                 from the report"
+            ));
+            continue;
+        };
+        let cur = cv.as_f64()?;
+        if base > 0.0 && cur > base * (1.0 + max_regress) {
+            fails.push(format!(
+                "scenario {name}: {series} at {cur:.1} ns/row vs ceiling {base:.1} \
+                 (>{:.0}% over)",
+                max_regress * 100.0
+            ));
+        }
+    }
+    for (series, cv) in current.as_obj()? {
+        if !series.ends_with("_ns_per_row") {
+            continue;
+        }
+        let cur = cv.as_f64()?;
+        if !base_obj.contains_key(&format!("{prefix}{series}")) {
+            fails.push(format!(
+                "scenario {name}: series {series} ({cur:.1} ns/row) has no ceiling \
+                 {prefix}{series} in the scenario baseline — add one"
             ));
         }
     }
@@ -651,6 +726,79 @@ mod tests {
         assert!((base_stats - 115.0).abs() < 1e-9, "headroom not applied: {base_stats}");
         // the fresh report passes the gate against its own rebaseline
         assert!(gate(&baseline, &current, 0.25).unwrap().is_empty());
+    }
+
+    #[test]
+    fn scenario_gate_passes_and_flags_regressions() {
+        let base = j(
+            r#"{"flights_pack_ns_per_row": 1000.0, "flights_train_ns_per_row": 5000.0}"#,
+        );
+        let ok = j(
+            r#"{"scenario": "flights", "pack_ns_per_row": 1100.0,
+                "train_ns_per_row": 4000.0}"#,
+        );
+        assert!(scenario_gate(&base, &ok, 0.25).unwrap().is_empty());
+
+        let slow = j(
+            r#"{"scenario": "flights", "pack_ns_per_row": 1300.0,
+                "train_ns_per_row": 4000.0}"#,
+        );
+        let fails = scenario_gate(&base, &slow, 0.25).unwrap();
+        assert_eq!(fails.len(), 1, "{fails:?}");
+        assert!(
+            fails[0].contains("flights") && fails[0].contains("pack_ns_per_row"),
+            "failure must name the scenario and series: {fails:?}"
+        );
+    }
+
+    /// Both directions fail loudly — a ceiling with no measurement and a
+    /// measurement with no ceiling — while ceilings that belong to OTHER
+    /// scenarios are ignored entirely.
+    #[test]
+    fn scenario_gate_is_bidirectional_and_per_scenario() {
+        let base = j(
+            r#"{"flights_pack_ns_per_row": 1000.0, "flights_train_ns_per_row": 5000.0,
+                "mnist_lvm_train_ns_per_row": 9000.0}"#,
+        );
+        // train series measured but unceilinged extra series present;
+        // pack series (ceilinged) missing; mnist_lvm ceiling irrelevant
+        let cur = j(
+            r#"{"scenario": "flights", "train_ns_per_row": 4000.0,
+                "rmse_ns_per_row": 7.0}"#,
+        );
+        let fails = scenario_gate(&base, &cur, 0.25).unwrap();
+        assert_eq!(fails.len(), 2, "{fails:?}");
+        assert!(fails.iter().any(|f| f.contains("pack_ns_per_row") && f.contains("missing")));
+        assert!(fails.iter().any(|f| f.contains("rmse_ns_per_row") && f.contains("no ceiling")));
+
+        // the mnist_lvm report gates only against its own prefix
+        let lvm = j(r#"{"scenario": "mnist_lvm", "train_ns_per_row": 8000.0}"#);
+        assert!(scenario_gate(&base, &lvm, 0.25).unwrap().is_empty());
+
+        // a report without a scenario name is a hard error, not a pass
+        let anon = j(r#"{"train_ns_per_row": 1.0}"#);
+        assert!(scenario_gate(&base, &anon, 0.25).is_err());
+    }
+
+    /// The committed scenario baseline must stay parseable and carry a
+    /// ceiling for every series the scenario runners emit.
+    #[test]
+    fn committed_scenario_baseline_is_gate_compatible() {
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .parent()
+            .unwrap()
+            .join("BENCH_scenario_baseline.json");
+        let base = Json::from_file(&path).expect("committed BENCH_scenario_baseline.json");
+        let obj = base.as_obj().unwrap();
+        for key in [
+            "flights_pack_ns_per_row",
+            "flights_train_ns_per_row",
+            "mnist_lvm_pack_ns_per_row",
+            "mnist_lvm_train_ns_per_row",
+        ] {
+            assert!(obj.contains_key(key), "scenario baseline missing {key}");
+            assert!(obj[key].as_f64().unwrap() > 0.0, "{key} not positive");
+        }
     }
 
     /// The committed CI baseline must stay parseable and carry every

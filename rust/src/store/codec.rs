@@ -1,0 +1,341 @@
+//! On-disk shard codec for the dataset store (DESIGN.md §13).
+//!
+//! One shard file holds a contiguous block of dataset rows as f64
+//! row-major little-endian payload behind a fixed header, with a
+//! trailing XXH64 checksum over everything before it:
+//!
+//! ```text
+//! offset  size          field
+//! 0       4             magic "GPDS"
+//! 4       2             format version (u16 LE, currently 1)
+//! 6       4             rows (u32 LE, >= 1)
+//! 10      4             cols (u32 LE, >= 1)
+//! 14      rows*cols*8   payload, f64 LE row-major
+//! end-8   8             XXH64 of bytes [0, end-8) (u64 LE)
+//! ```
+//!
+//! Same discipline as the `TrainedModel` artifact codec: decode
+//! validates in a fixed order (length → magic → version → implied
+//! length → checksum), every rejection is a named error, and writes
+//! are atomic (temp file + rename). The streaming reader hashes the
+//! file as it goes, so chunked reads are verified without ever
+//! materialising the shard — but note that chunks are delivered to the
+//! callback *before* the trailing checksum is reached; on mismatch the
+//! stream errors and the caller must treat everything delivered as
+//! poisoned (bring-up does: the constructor fails loudly).
+
+use std::fs;
+use std::io::{BufReader, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::xxh::{xxh64, Xxh64};
+use crate::linalg::Matrix;
+
+pub const MAGIC: [u8; 4] = *b"GPDS";
+pub const FORMAT_VERSION: u16 = 1;
+pub const HEADER_LEN: usize = 4 + 2 + 4 + 4;
+pub const CHECKSUM_LEN: usize = 8;
+
+/// Encode `m` as a shard file image. Rejects empty matrices and
+/// non-finite values (a dataset cell that is NaN/Inf would poison the
+/// bound silently thousands of rows later).
+pub fn encode_shard(m: &Matrix) -> Result<Vec<u8>> {
+    ensure!(m.rows() >= 1 && m.cols() >= 1, "refusing to pack an empty shard");
+    ensure!(
+        m.rows() <= u32::MAX as usize && m.cols() <= u32::MAX as usize,
+        "shard shape {}x{} does not fit the u32 header",
+        m.rows(),
+        m.cols()
+    );
+    for (i, v) in m.data().iter().enumerate() {
+        ensure!(
+            v.is_finite(),
+            "non-finite value at row {} col {} — refusing to pack",
+            i / m.cols(),
+            i % m.cols()
+        );
+    }
+    let mut out = Vec::with_capacity(HEADER_LEN + m.data().len() * 8 + CHECKSUM_LEN);
+    out.extend_from_slice(&MAGIC);
+    out.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+    out.extend_from_slice(&(m.rows() as u32).to_le_bytes());
+    out.extend_from_slice(&(m.cols() as u32).to_le_bytes());
+    for v in m.data() {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    let sum = xxh64(&out);
+    out.extend_from_slice(&sum.to_le_bytes());
+    Ok(out)
+}
+
+/// Parse and fully validate a shard header (shared by the in-memory
+/// and streaming decoders): returns (rows, cols).
+fn decode_header(header: &[u8; HEADER_LEN], what: &str) -> Result<(usize, usize)> {
+    ensure!(header[0..4] == MAGIC, "bad shard magic in {what}");
+    let version = u16::from_le_bytes(header[4..6].try_into().unwrap());
+    ensure!(
+        version == FORMAT_VERSION,
+        "shard format version mismatch: {what} has v{version}, this build reads v{FORMAT_VERSION}"
+    );
+    let rows = u32::from_le_bytes(header[6..10].try_into().unwrap()) as usize;
+    let cols = u32::from_le_bytes(header[10..14].try_into().unwrap()) as usize;
+    ensure!(rows >= 1 && cols >= 1, "empty shard ({rows}x{cols}) in {what}");
+    Ok((rows, cols))
+}
+
+/// Decode a full shard image: returns the matrix and its checksum.
+pub fn decode_shard(bytes: &[u8]) -> Result<(Matrix, u64)> {
+    ensure!(
+        bytes.len() >= HEADER_LEN + CHECKSUM_LEN,
+        "truncated shard file ({} bytes)",
+        bytes.len()
+    );
+    let header: &[u8; HEADER_LEN] = bytes[..HEADER_LEN].try_into().unwrap();
+    let (rows, cols) = decode_header(header, "shard file")?;
+    let expect = (HEADER_LEN + CHECKSUM_LEN) as u64 + (rows as u64) * (cols as u64) * 8;
+    ensure!(
+        bytes.len() as u64 == expect,
+        "truncated or oversized shard file: {} bytes, header implies {expect}",
+        bytes.len()
+    );
+    let body = &bytes[..bytes.len() - CHECKSUM_LEN];
+    let stored = u64::from_le_bytes(bytes[bytes.len() - CHECKSUM_LEN..].try_into().unwrap());
+    let actual = xxh64(body);
+    ensure!(
+        stored == actual,
+        "shard checksum mismatch: stored {stored:#018x}, computed {actual:#018x}"
+    );
+    let payload = &body[HEADER_LEN..];
+    let data: Vec<f64> = payload
+        .chunks_exact(8)
+        .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    Ok((Matrix::from_vec(rows, cols, data), actual))
+}
+
+/// Load and verify a whole shard file (worker-local `shard_ref` loads,
+/// `data inspect`, tests). Use [`stream_shard`] to avoid materialising.
+pub fn read_shard(path: &Path) -> Result<(Matrix, u64)> {
+    let bytes = fs::read(path).with_context(|| format!("reading shard {}", path.display()))?;
+    decode_shard(&bytes).with_context(|| format!("decoding shard {}", path.display()))
+}
+
+/// Read only a shard file's header: (rows, cols). Cheap (14 bytes) —
+/// used to cross-check the manifest before any payload is streamed.
+pub fn read_header(path: &Path) -> Result<(usize, usize)> {
+    let file =
+        fs::File::open(path).with_context(|| format!("opening shard {}", path.display()))?;
+    let mut header = [0u8; HEADER_LEN];
+    let mut r = BufReader::new(file);
+    r.read_exact(&mut header)
+        .map_err(|_| anyhow::anyhow!("truncated shard file {}", path.display()))?;
+    decode_header(&header, &path.display().to_string())
+}
+
+/// Stream a shard file in chunks of at most `chunk_rows` rows without
+/// materialising it. `f` receives `(first_row_within_shard, chunk)`.
+/// The whole file is hashed while it is read; the trailing checksum
+/// (and exact file length) are verified after the last chunk, and the
+/// computed checksum is returned alongside the decoded shape.
+pub fn stream_shard(
+    path: &Path,
+    chunk_rows: usize,
+    f: &mut dyn FnMut(usize, &Matrix) -> Result<()>,
+) -> Result<(usize, usize, u64)> {
+    ensure!(chunk_rows >= 1, "chunk_rows must be >= 1");
+    let file =
+        fs::File::open(path).with_context(|| format!("opening shard {}", path.display()))?;
+    let mut r = BufReader::new(file);
+    let mut header = [0u8; HEADER_LEN];
+    r.read_exact(&mut header)
+        .map_err(|_| anyhow::anyhow!("truncated shard file {}", path.display()))?;
+    let (rows, cols) = decode_header(&header, &path.display().to_string())?;
+    let mut hash = Xxh64::new();
+    hash.update(&header);
+    let row_bytes = cols * 8;
+    let mut buf = vec![0u8; chunk_rows.min(rows) * row_bytes];
+    let mut done = 0usize;
+    while done < rows {
+        let take = chunk_rows.min(rows - done);
+        let bytes = &mut buf[..take * row_bytes];
+        r.read_exact(bytes)
+            .map_err(|_| anyhow::anyhow!("truncated shard file {}", path.display()))?;
+        hash.update(bytes);
+        let data: Vec<f64> = bytes
+            .chunks_exact(8)
+            .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        let chunk = Matrix::from_vec(take, cols, data);
+        f(done, &chunk)?;
+        done += take;
+    }
+    let mut tail = [0u8; CHECKSUM_LEN];
+    r.read_exact(&mut tail)
+        .map_err(|_| anyhow::anyhow!("truncated shard file {}", path.display()))?;
+    let mut probe = [0u8; 1];
+    if r.read(&mut probe)? != 0 {
+        bail!("truncated or oversized shard file: trailing bytes after the checksum in {}",
+            path.display());
+    }
+    let stored = u64::from_le_bytes(tail);
+    let actual = hash.finish();
+    ensure!(
+        stored == actual,
+        "shard checksum mismatch in {}: stored {stored:#018x}, computed {actual:#018x}",
+        path.display()
+    );
+    Ok((rows, cols, actual))
+}
+
+/// Write a shard file atomically (temp file + rename, the artifact
+/// codec's discipline); returns the shard's checksum.
+pub fn write_shard(path: &Path, m: &Matrix) -> Result<u64> {
+    let bytes = encode_shard(m)?;
+    let sum = u64::from_le_bytes(bytes[bytes.len() - CHECKSUM_LEN..].try_into().unwrap());
+    write_atomic(path, &bytes)?;
+    Ok(sum)
+}
+
+/// Atomic byte write: temp file in the target directory, then rename.
+pub fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            fs::create_dir_all(dir)
+                .with_context(|| format!("creating directory {}", dir.display()))?;
+        }
+    }
+    let tmp = path.with_extension(format!("tmp.{}", std::process::id()));
+    {
+        let mut f = fs::File::create(&tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?;
+        f.write_all(bytes)?;
+        f.sync_all()?;
+    }
+    fs::rename(&tmp, path)
+        .with_context(|| format!("renaming {} into place", tmp.display()))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(rows: usize, cols: usize) -> Matrix {
+        Matrix::from_fn(rows, cols, |i, j| (i as f64 + 1.0) * 0.5 - (j as f64) * 1.25)
+    }
+
+    #[test]
+    fn roundtrips_bit_for_bit() {
+        let m = sample(5, 3);
+        let bytes = encode_shard(&m).unwrap();
+        let (back, sum) = decode_shard(&bytes).unwrap();
+        assert_eq!(back.rows(), 5);
+        assert_eq!(back.cols(), 3);
+        for (a, b) in m.data().iter().zip(back.data()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(sum, xxh64(&bytes[..bytes.len() - CHECKSUM_LEN]));
+    }
+
+    #[test]
+    fn rejects_empty_and_nonfinite() {
+        let msg = format!("{:#}", encode_shard(&Matrix::zeros(0, 3)).unwrap_err());
+        assert!(msg.contains("empty shard"), "{msg}");
+        let mut m = sample(2, 2);
+        m.data_mut()[3] = f64::NAN;
+        let msg = format!("{:#}", encode_shard(&m).unwrap_err());
+        assert!(msg.contains("non-finite"), "{msg}");
+    }
+
+    #[test]
+    fn every_single_byte_corruption_is_rejected() {
+        let bytes = encode_shard(&sample(3, 2)).unwrap();
+        for i in 0..bytes.len() {
+            let mut bad = bytes.clone();
+            bad[i] ^= 0x40;
+            let err = decode_shard(&bad).expect_err(&format!("byte {i} corruption accepted"));
+            let msg = format!("{err:#}");
+            assert!(
+                msg.contains("magic")
+                    || msg.contains("version mismatch")
+                    || msg.contains("truncated or oversized")
+                    || msg.contains("empty shard")
+                    || msg.contains("checksum mismatch"),
+                "byte {i}: unexpected error {msg}"
+            );
+        }
+    }
+
+    #[test]
+    fn every_truncation_is_rejected() {
+        let bytes = encode_shard(&sample(3, 2)).unwrap();
+        for cut in 0..bytes.len() {
+            let err = decode_shard(&bytes[..cut]).expect_err(&format!("cut at {cut} accepted"));
+            let msg = format!("{err:#}");
+            assert!(
+                msg.contains("truncated"),
+                "cut {cut}: unexpected error {msg}"
+            );
+        }
+    }
+
+    #[test]
+    fn version_mismatch_is_named() {
+        let mut bytes = encode_shard(&sample(2, 2)).unwrap();
+        bytes[4..6].copy_from_slice(&(FORMAT_VERSION + 1).to_le_bytes());
+        let msg = format!("{:#}", decode_shard(&bytes).unwrap_err());
+        assert!(msg.contains("shard format version mismatch"), "{msg}");
+    }
+
+    #[test]
+    fn stream_matches_full_decode_at_every_chunk_size() {
+        let m = sample(11, 4);
+        let dir = std::env::temp_dir().join(format!("gpds_codec_{}", std::process::id()));
+        fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("s.gpds");
+        let want_sum = write_shard(&path, &m).unwrap();
+        for chunk_rows in [1usize, 2, 3, 5, 11, 64] {
+            let mut got = Matrix::zeros(11, 4);
+            let (rows, cols, sum) = stream_shard(&path, chunk_rows, &mut |row0, chunk| {
+                for i in 0..chunk.rows() {
+                    got.row_mut(row0 + i).copy_from_slice(chunk.row(i));
+                }
+                Ok(())
+            })
+            .unwrap();
+            assert_eq!((rows, cols, sum), (11, 4, want_sum));
+            for (a, b) in m.data().iter().zip(got.data()) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn stream_rejects_corruption_and_trailing_bytes() {
+        let dir = std::env::temp_dir().join(format!("gpds_codec_bad_{}", std::process::id()));
+        fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("s.gpds");
+        let mut bytes = encode_shard(&sample(4, 3)).unwrap();
+        // flip one payload byte: the stream must fail at checksum time
+        bytes[HEADER_LEN + 5] ^= 0x01;
+        fs::write(&path, &bytes).unwrap();
+        let msg = format!(
+            "{:#}",
+            stream_shard(&path, 2, &mut |_, _| Ok(())).unwrap_err()
+        );
+        assert!(msg.contains("checksum mismatch"), "{msg}");
+        // trailing garbage after the checksum
+        let mut bytes = encode_shard(&sample(4, 3)).unwrap();
+        bytes.push(0xAB);
+        fs::write(&path, &bytes).unwrap();
+        let msg = format!(
+            "{:#}",
+            stream_shard(&path, 2, &mut |_, _| Ok(())).unwrap_err()
+        );
+        assert!(msg.contains("trailing bytes"), "{msg}");
+        fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,231 @@
+//! The store manifest: one `manifest.json` per store directory naming
+//! every shard file, its contiguous row range, and its checksum
+//! (DESIGN.md §13). The manifest is the unit of trust — every streamed
+//! shard is verified against the checksum recorded here, so a shard
+//! file swapped or corrupted after packing is rejected even when the
+//! file's own trailing checksum is internally consistent.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, ensure, Context, Result};
+
+use crate::util::json::{self, Json};
+
+pub const MANIFEST_FILE: &str = "manifest.json";
+
+/// One shard file's entry: contiguous rows `[start, start + rows)`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardEntry {
+    pub file: String,
+    pub start: usize,
+    pub rows: usize,
+    pub checksum: u64,
+}
+
+/// The dataset store's schema and shard map.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StoreManifest {
+    /// total dataset rows
+    pub n: usize,
+    /// columns per row (inputs then outputs)
+    pub dims: usize,
+    /// leading input columns (0 for an outputs-only / LVM store)
+    pub x_cols: usize,
+    /// suggested `ArtifactConfig` name for training (packer hint)
+    pub artifact: Option<String>,
+    pub shards: Vec<ShardEntry>,
+}
+
+impl StoreManifest {
+    /// Output columns per row.
+    pub fn y_cols(&self) -> usize {
+        self.dims - self.x_cols
+    }
+
+    pub fn shard_path(&self, dir: &Path, i: usize) -> PathBuf {
+        dir.join(&self.shards[i].file)
+    }
+
+    /// Structural invariants: at least one shard, every shard non-empty,
+    /// ranges contiguous from 0, totals matching `n`, `x_cols` leaving
+    /// at least one output column.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.dims >= 1, "store manifest: dims must be >= 1");
+        ensure!(
+            self.x_cols < self.dims,
+            "store manifest: x_cols ({}) must leave at least one output column (dims {})",
+            self.x_cols,
+            self.dims
+        );
+        ensure!(!self.shards.is_empty(), "store manifest: no shards");
+        let mut next = 0usize;
+        for (i, s) in self.shards.iter().enumerate() {
+            ensure!(s.rows >= 1, "store manifest: shard {i} is empty");
+            ensure!(
+                s.start == next,
+                "store manifest: shard {i} starts at row {} but the previous shard ends at {next}",
+                s.start
+            );
+            ensure!(!s.file.is_empty(), "store manifest: shard {i} has no file name");
+            next += s.rows;
+        }
+        ensure!(
+            next == self.n,
+            "store manifest: shards cover {next} rows but n is {}",
+            self.n
+        );
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let shards: Vec<Json> = self
+            .shards
+            .iter()
+            .map(|s| {
+                json::obj(vec![
+                    ("file", Json::Str(s.file.clone())),
+                    ("start", Json::Num(s.start as f64)),
+                    ("rows", Json::Num(s.rows as f64)),
+                    ("checksum", Json::Str(format!("{:#018x}", s.checksum))),
+                ])
+            })
+            .collect();
+        let mut pairs = vec![
+            ("format", Json::Str("gpds".into())),
+            ("version", Json::Num(1.0)),
+            ("n", Json::Num(self.n as f64)),
+            ("dims", Json::Num(self.dims as f64)),
+            ("x_cols", Json::Num(self.x_cols as f64)),
+            ("shards", Json::Arr(shards)),
+        ];
+        if let Some(a) = &self.artifact {
+            pairs.push(("artifact", Json::Str(a.clone())));
+        }
+        json::obj(pairs)
+    }
+
+    pub fn from_json(j: &Json) -> Result<StoreManifest> {
+        let format = j.get("format")?.as_str()?;
+        ensure!(format == "gpds", "store manifest: unknown format {format:?}");
+        let version = j.get("version")?.as_usize()?;
+        ensure!(
+            version == 1,
+            "store manifest version mismatch: file has v{version}, this build reads v1"
+        );
+        let shards = j
+            .get("shards")?
+            .as_arr()?
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                Ok(ShardEntry {
+                    file: s.get("file")?.as_str()?.to_string(),
+                    start: s.get("start")?.as_usize()?,
+                    rows: s.get("rows")?.as_usize()?,
+                    checksum: parse_checksum(s.get("checksum")?.as_str()?)
+                        .with_context(|| format!("store manifest: shard {i}"))?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let m = StoreManifest {
+            n: j.get("n")?.as_usize()?,
+            dims: j.get("dims")?.as_usize()?,
+            x_cols: j.get("x_cols")?.as_usize()?,
+            artifact: match j.opt("artifact") {
+                Some(a) => Some(a.as_str()?.to_string()),
+                None => None,
+            },
+            shards,
+        };
+        m.validate()?;
+        Ok(m)
+    }
+
+    /// Write `dir/manifest.json` atomically.
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        self.validate()?;
+        super::codec::write_atomic(&dir.join(MANIFEST_FILE), self.to_json().to_string().as_bytes())
+    }
+
+    /// Load and validate `dir/manifest.json`.
+    pub fn load(dir: &Path) -> Result<StoreManifest> {
+        let path = dir.join(MANIFEST_FILE);
+        let j = Json::from_file(&path)
+            .with_context(|| format!("reading store manifest {}", path.display()))?;
+        Self::from_json(&j).with_context(|| format!("parsing store manifest {}", path.display()))
+    }
+}
+
+/// Checksums are stored as `0x`-prefixed hex strings (a u64 does not
+/// round-trip through a JSON number).
+fn parse_checksum(s: &str) -> Result<u64> {
+    let hex = s
+        .strip_prefix("0x")
+        .ok_or_else(|| anyhow!("bad checksum {s:?} (expected 0x-prefixed hex)"))?;
+    u64::from_str_radix(hex, 16).map_err(|_| anyhow!("bad checksum {s:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> StoreManifest {
+        StoreManifest {
+            n: 7,
+            dims: 3,
+            x_cols: 2,
+            artifact: Some("small".into()),
+            shards: vec![
+                ShardEntry { file: "shard_00000.gpds".into(), start: 0, rows: 4, checksum: 0xDEAD_BEEF },
+                ShardEntry { file: "shard_00001.gpds".into(), start: 4, rows: 3, checksum: u64::MAX },
+            ],
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_is_exact() {
+        let m = sample();
+        let back = StoreManifest::from_json(&Json::parse(&m.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(m, back);
+    }
+
+    #[test]
+    fn validation_names_each_failure() {
+        let mut m = sample();
+        m.shards[1].start = 5;
+        let msg = format!("{:#}", m.validate().unwrap_err());
+        assert!(msg.contains("previous shard ends"), "{msg}");
+
+        let mut m = sample();
+        m.n = 9;
+        let msg = format!("{:#}", m.validate().unwrap_err());
+        assert!(msg.contains("cover 7 rows but n is 9"), "{msg}");
+
+        let mut m = sample();
+        m.x_cols = 3;
+        let msg = format!("{:#}", m.validate().unwrap_err());
+        assert!(msg.contains("at least one output column"), "{msg}");
+
+        let mut m = sample();
+        m.shards.clear();
+        let msg = format!("{:#}", m.validate().unwrap_err());
+        assert!(msg.contains("no shards"), "{msg}");
+    }
+
+    #[test]
+    fn bad_checksum_strings_are_rejected() {
+        assert!(parse_checksum("deadbeef").is_err());
+        assert!(parse_checksum("0xzz").is_err());
+        assert_eq!(parse_checksum("0x00000000deadbeef").unwrap(), 0xDEAD_BEEF);
+    }
+
+    #[test]
+    fn manifest_version_mismatch_is_named() {
+        let mut j = sample().to_json();
+        if let Json::Obj(o) = &mut j {
+            o.insert("version".into(), Json::Num(2.0));
+        }
+        let msg = format!("{:#}", StoreManifest::from_json(&j).unwrap_err());
+        assert!(msg.contains("store manifest version mismatch"), "{msg}");
+    }
+}

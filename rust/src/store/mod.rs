@@ -1,0 +1,470 @@
+//! Out-of-core sharded dataset store (DESIGN.md §13).
+//!
+//! The paper's headline regime — 700k flight records, MNIST-scale
+//! GPLVMs — needs n bounded by disk, not leader RAM. This layer stores
+//! a dataset as a directory of checksummed binary shard files
+//! ([`codec`]: `GPDS` magic, versioned header, f64 row-major payload,
+//! trailing XXH64) plus a JSON manifest ([`manifest`]: row ranges and
+//! per-shard checksums), written by a streaming packer ([`writer`])
+//! and read back through the [`DataSource`] trait:
+//!
+//! - [`InMemorySource`] wraps today's in-memory matrices (the
+//!   bit-identical reference);
+//! - [`ShardedDiskSource`] streams shard files chunk-by-chunk and
+//!   never materialises the dataset; every streamed shard is verified
+//!   against both its own trailing checksum and the manifest's record.
+//!
+//! Trainer bring-up consumes a source through a [`RowMapper`], which
+//! turns raw store rows into worker-shard content (split input/output
+//! columns for regression; a latent projector for LVM stores).
+
+pub mod codec;
+pub mod manifest;
+pub mod writer;
+pub mod xxh;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{ensure, Context, Result};
+
+use crate::linalg::Matrix;
+
+pub use manifest::{ShardEntry, StoreManifest};
+pub use writer::StoreWriter;
+
+/// A dataset that can be read as ordered row chunks. `stream_range`
+/// visits rows `[start, end)` in order, in chunks of at most
+/// `chunk_rows` rows, calling `f(global_row_of_first_chunk_row, chunk)`.
+pub trait DataSource {
+    fn rows(&self) -> usize;
+    fn dims(&self) -> usize;
+    fn stream_range(
+        &self,
+        start: usize,
+        end: usize,
+        chunk_rows: usize,
+        f: &mut dyn FnMut(usize, &Matrix) -> Result<()>,
+    ) -> Result<()>;
+}
+
+fn check_range(rows: usize, start: usize, end: usize, chunk_rows: usize) -> Result<()> {
+    ensure!(chunk_rows >= 1, "chunk_rows must be >= 1");
+    ensure!(
+        start <= end && end <= rows,
+        "row range [{start}, {end}) out of bounds for {rows} rows"
+    );
+    Ok(())
+}
+
+/// The trivial source: a dataset already materialised as a matrix.
+/// This is the bit-identical reference the disk source is tested
+/// against — chunking must never change what a consumer sees.
+pub struct InMemorySource {
+    data: Matrix,
+}
+
+impl InMemorySource {
+    pub fn new(data: Matrix) -> InMemorySource {
+        InMemorySource { data }
+    }
+
+    pub fn data(&self) -> &Matrix {
+        &self.data
+    }
+}
+
+impl DataSource for InMemorySource {
+    fn rows(&self) -> usize {
+        self.data.rows()
+    }
+
+    fn dims(&self) -> usize {
+        self.data.cols()
+    }
+
+    fn stream_range(
+        &self,
+        start: usize,
+        end: usize,
+        chunk_rows: usize,
+        f: &mut dyn FnMut(usize, &Matrix) -> Result<()>,
+    ) -> Result<()> {
+        check_range(self.data.rows(), start, end, chunk_rows)?;
+        let mut lo = start;
+        while lo < end {
+            let hi = (lo + chunk_rows).min(end);
+            let chunk = Matrix::from_fn(hi - lo, self.data.cols(), |r, c| self.data[(lo + r, c)]);
+            f(lo, &chunk)?;
+            lo = hi;
+        }
+        Ok(())
+    }
+}
+
+/// A store directory opened for streaming reads. Opening cross-checks
+/// every shard file's header (14 bytes each) against the manifest, so
+/// a swapped or reshaped shard fails before any payload is streamed;
+/// payload checksums are verified during each streamed read.
+pub struct ShardedDiskSource {
+    dir: PathBuf,
+    manifest: StoreManifest,
+}
+
+impl ShardedDiskSource {
+    pub fn open(dir: &Path) -> Result<ShardedDiskSource> {
+        let manifest = StoreManifest::load(dir)?;
+        for (i, e) in manifest.shards.iter().enumerate() {
+            let path = manifest.shard_path(dir, i);
+            let (rows, cols) = codec::read_header(&path)?;
+            ensure!(
+                rows == e.rows,
+                "store shard {i} row count mismatch: manifest says {}, {} has {rows}",
+                e.rows,
+                path.display()
+            );
+            ensure!(
+                cols == manifest.dims,
+                "store shard {i} column count mismatch: manifest says {}, {} has {cols}",
+                manifest.dims,
+                path.display()
+            );
+        }
+        Ok(ShardedDiskSource {
+            dir: dir.to_path_buf(),
+            manifest,
+        })
+    }
+
+    pub fn manifest(&self) -> &StoreManifest {
+        &self.manifest
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn shard_path(&self, i: usize) -> PathBuf {
+        self.manifest.shard_path(&self.dir, i)
+    }
+
+    /// Deep verification: stream every shard, checking each file's own
+    /// checksum AND the manifest's record of it. Returns bytes read.
+    pub fn verify(&self) -> Result<u64> {
+        let mut bytes = 0u64;
+        for i in 0..self.manifest.shards.len() {
+            let e = &self.manifest.shards[i];
+            let path = self.shard_path(i);
+            let (rows, cols, sum) = codec::stream_shard(&path, 4096, &mut |_, _| Ok(()))
+                .with_context(|| format!("verifying store shard {i}"))?;
+            ensure!(
+                sum == e.checksum,
+                "store checksum mismatch for shard {i}: manifest records {:#018x}, {} has {sum:#018x}",
+                e.checksum,
+                path.display()
+            );
+            bytes += (codec::HEADER_LEN + codec::CHECKSUM_LEN) as u64
+                + (rows as u64) * (cols as u64) * 8;
+        }
+        Ok(bytes)
+    }
+
+    /// Materialise the whole store (inspect/tests/small stores only —
+    /// this is exactly what the streaming paths exist to avoid).
+    pub fn read_all(&self) -> Result<Matrix> {
+        let mut out = Matrix::zeros(self.manifest.n, self.manifest.dims);
+        self.stream_range(0, self.manifest.n, 4096, &mut |row0, chunk| {
+            for i in 0..chunk.rows() {
+                out.row_mut(row0 + i).copy_from_slice(chunk.row(i));
+            }
+            Ok(())
+        })?;
+        Ok(out)
+    }
+}
+
+impl DataSource for ShardedDiskSource {
+    fn rows(&self) -> usize {
+        self.manifest.n
+    }
+
+    fn dims(&self) -> usize {
+        self.manifest.dims
+    }
+
+    fn stream_range(
+        &self,
+        start: usize,
+        end: usize,
+        chunk_rows: usize,
+        f: &mut dyn FnMut(usize, &Matrix) -> Result<()>,
+    ) -> Result<()> {
+        check_range(self.manifest.n, start, end, chunk_rows)?;
+        for (i, e) in self.manifest.shards.iter().enumerate() {
+            let s_lo = e.start;
+            let s_hi = e.start + e.rows;
+            if s_hi <= start || s_lo >= end {
+                continue;
+            }
+            // the WHOLE overlapping shard file is streamed (and hashed)
+            // even when the range clips it: integrity is per shard, and
+            // sequential IO of the tail costs less than losing the
+            // checksum. Rows outside [start, end) are clipped out of
+            // each chunk before delivery.
+            let path = self.shard_path(i);
+            let (_, _, sum) = codec::stream_shard(&path, chunk_rows, &mut |row0, chunk| {
+                let g_lo = s_lo + row0;
+                let g_hi = g_lo + chunk.rows();
+                let lo = g_lo.max(start);
+                let hi = g_hi.min(end);
+                if lo >= hi {
+                    return Ok(());
+                }
+                if lo == g_lo && hi == g_hi {
+                    return f(g_lo, chunk);
+                }
+                let clipped = Matrix::from_fn(hi - lo, chunk.cols(), |r, c| {
+                    chunk[(lo - g_lo + r, c)]
+                });
+                f(lo, &clipped)
+            })
+            .with_context(|| format!("streaming store shard {i}"))?;
+            ensure!(
+                sum == e.checksum,
+                "store checksum mismatch for shard {i}: manifest records {:#018x}, {} has {sum:#018x}",
+                e.checksum,
+                path.display()
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Maps a chunk of raw store rows onto worker-shard content
+/// `(xmu, xvar, y)`. `row0` is the global dataset row of the chunk's
+/// first row, so mappers may key per-row state off absolute position.
+pub trait RowMapper {
+    /// `(q, d)` this mapper produces from a store of `dims` columns.
+    fn shapes(&self, dims: usize) -> Result<(usize, usize)>;
+    fn map(&self, row0: usize, chunk: &Matrix) -> Result<(Matrix, Matrix, Matrix)>;
+}
+
+/// Regression stores: the first `x_cols` columns are the inputs
+/// (observed, so `q(X)` is a delta: Xvar = 0), the rest the outputs.
+pub struct SplitColumns {
+    pub x_cols: usize,
+}
+
+/// LVM stores (`x_cols = 0`): every store column is an output. The
+/// latent initialisation is a FIXED linear map — subtract `mean`,
+/// project onto `components`, whiten by `scale` — applied per row, so
+/// any chunking of the store produces bit-identical worker shards.
+/// Built from a PCA fit of a bounded sample of rows via
+/// [`PcaProject::from_pca`] (paper §4.1 initialisation, out-of-core:
+/// the sample bounds leader memory, not n).
+pub struct PcaProject {
+    /// d x q orthonormal projection axes (the sample's PCA components).
+    pub components: Matrix,
+    /// Column means subtracted before projecting (length d).
+    pub mean: Vec<f64>,
+    /// Per-latent whitening factor `1/sigma_c` (length q).
+    pub scale: Vec<f64>,
+    /// Initial q(X) variance for every latent coordinate.
+    pub xvar0: f64,
+}
+
+impl PcaProject {
+    pub fn from_pca(p: &crate::data::pca::Pca, xvar0: f64) -> PcaProject {
+        PcaProject {
+            components: p.components.clone(),
+            mean: p.mean.clone(),
+            scale: p
+                .eigenvalues
+                .iter()
+                .map(|e| 1.0 / e.sqrt().max(1e-12))
+                .collect(),
+            xvar0,
+        }
+    }
+}
+
+impl RowMapper for PcaProject {
+    fn shapes(&self, dims: usize) -> Result<(usize, usize)> {
+        ensure!(
+            self.components.rows() == dims,
+            "PCA projector was fit on {}-column rows but the store has {dims}",
+            self.components.rows()
+        );
+        Ok((self.components.cols(), dims))
+    }
+
+    fn map(&self, _row0: usize, chunk: &Matrix) -> Result<(Matrix, Matrix, Matrix)> {
+        let (q, d) = self.shapes(chunk.cols())?;
+        let xmu = Matrix::from_fn(chunk.rows(), q, |r, c| {
+            let mut s = 0.0;
+            for j in 0..d {
+                s += (chunk[(r, j)] - self.mean[j]) * self.components[(j, c)];
+            }
+            s * self.scale[c]
+        });
+        let xvar = Matrix::from_fn(chunk.rows(), q, |_, _| self.xvar0);
+        Ok((xmu, xvar, chunk.clone()))
+    }
+}
+
+impl RowMapper for SplitColumns {
+    fn shapes(&self, dims: usize) -> Result<(usize, usize)> {
+        ensure!(
+            self.x_cols >= 1 && self.x_cols < dims,
+            "x_cols ({}) must be in [1, dims) for a regression store (dims {dims})",
+            self.x_cols
+        );
+        Ok((self.x_cols, dims - self.x_cols))
+    }
+
+    fn map(&self, _row0: usize, chunk: &Matrix) -> Result<(Matrix, Matrix, Matrix)> {
+        let (q, d) = self.shapes(chunk.cols())?;
+        let xmu = Matrix::from_fn(chunk.rows(), q, |r, c| chunk[(r, c)]);
+        let xvar = Matrix::zeros(chunk.rows(), q);
+        let y = Matrix::from_fn(chunk.rows(), d, |r, c| chunk[(r, q + c)]);
+        Ok((xmu, xvar, y))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn store_fixture(name: &str, n: usize, dims: usize, shard_rows: usize) -> (PathBuf, Matrix) {
+        let dir = std::env::temp_dir().join(format!("gpds_src_{}_{name}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let data = Matrix::from_fn(n, dims, |i, j| ((i * dims + j) as f64).sin());
+        let mut w = StoreWriter::create(&dir, 0, shard_rows, None).unwrap();
+        w.append(&data).unwrap();
+        w.finish().unwrap();
+        (dir, data)
+    }
+
+    fn collect_range(src: &dyn DataSource, start: usize, end: usize, chunk: usize) -> Matrix {
+        let mut out = Matrix::zeros(end - start, src.dims());
+        src.stream_range(start, end, chunk, &mut |row0, c| {
+            for i in 0..c.rows() {
+                out.row_mut(row0 - start + i).copy_from_slice(c.row(i));
+            }
+            Ok(())
+        })
+        .unwrap();
+        out
+    }
+
+    #[test]
+    fn disk_source_matches_in_memory_on_every_range_and_chunking() {
+        let (dir, data) = store_fixture("ranges", 29, 3, 7);
+        let disk = ShardedDiskSource::open(&dir).unwrap();
+        let mem = InMemorySource::new(data);
+        for (start, end) in [(0, 29), (0, 5), (5, 9), (6, 23), (28, 29), (7, 7)] {
+            for chunk in [1usize, 2, 5, 7, 8, 64] {
+                let a = collect_range(&mem, start, end, chunk);
+                let b = collect_range(&disk, start, end, chunk);
+                assert_eq!(a.data().len(), b.data().len());
+                for (x, y) in a.data().iter().zip(b.data()) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "range [{start},{end}) chunk {chunk}");
+                }
+            }
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn manifest_checksum_disagreement_is_rejected() {
+        let (dir, _) = store_fixture("disagree", 12, 2, 4);
+        // rewrite shard 1 with different content: its own trailing
+        // checksum is valid, but the manifest still records the old one
+        let path = dir.join("shard_00001.gpds");
+        codec::write_shard(&path, &Matrix::from_fn(4, 2, |i, j| (i + j) as f64)).unwrap();
+        let src = ShardedDiskSource::open(&dir).unwrap();
+        let msg = format!("{:#}", src.verify().unwrap_err());
+        assert!(msg.contains("store checksum mismatch for shard 1"), "{msg}");
+        let msg = format!(
+            "{:#}",
+            src.stream_range(0, 12, 4, &mut |_, _| Ok(())).unwrap_err()
+        );
+        assert!(msg.contains("store checksum mismatch for shard 1"), "{msg}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn reshaped_shard_is_rejected_at_open() {
+        let (dir, _) = store_fixture("reshape", 12, 2, 4);
+        // swap shard 2 for a valid file with the wrong shape: the cheap
+        // header cross-check at open() must catch it, pre-payload
+        codec::write_shard(
+            &dir.join("shard_00002.gpds"),
+            &Matrix::from_fn(3, 2, |i, j| (i + j) as f64),
+        )
+        .unwrap();
+        let msg = format!("{:#}", ShardedDiskSource::open(&dir).unwrap_err());
+        assert!(msg.contains("row count mismatch"), "{msg}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corrupted_shard_fails_streaming_with_named_error() {
+        let (dir, _) = store_fixture("corrupt", 10, 2, 5);
+        let path = dir.join("shard_00000.gpds");
+        let mut bytes = std::fs::read(&path).unwrap();
+        let k = codec::HEADER_LEN + 3;
+        bytes[k] ^= 0x10;
+        std::fs::write(&path, &bytes).unwrap();
+        let src = ShardedDiskSource::open(&dir).unwrap();
+        let msg = format!(
+            "{:#}",
+            src.stream_range(0, 10, 5, &mut |_, _| Ok(())).unwrap_err()
+        );
+        assert!(msg.contains("checksum mismatch"), "{msg}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn pca_projector_matches_whitened_scores_and_is_chunk_invariant() {
+        let mut rng = crate::util::rng::Rng::new(3);
+        let y = Matrix::from_fn(40, 6, |_, _| rng.normal());
+        let p = crate::data::pca::pca(&y, 2, 50, 7);
+        let want = crate::data::pca::whitened_scores(&p);
+        let m = PcaProject::from_pca(&p, 0.5);
+        assert_eq!(m.shapes(6).unwrap(), (2, 6));
+        assert!(m.shapes(5).is_err(), "dims mismatch must be rejected");
+
+        // on the fit sample, the projector reproduces the whitened scores
+        let (xmu, xvar, back) = m.map(0, &y).unwrap();
+        assert_eq!((xmu.rows(), xmu.cols()), (40, 2));
+        for (a, b) in want.data().iter().zip(xmu.data()) {
+            assert!((a - b).abs() < 1e-9, "{a} vs {b}");
+        }
+        assert!(xvar.data().iter().all(|v| *v == 0.5));
+        assert_eq!(back.max_abs_diff(&y), 0.0, "y must pass through untouched");
+
+        // per-row map: chunking never changes the produced latents
+        let top = Matrix::from_fn(15, 6, |r, c| y[(r, c)]);
+        let rest = Matrix::from_fn(25, 6, |r, c| y[(15 + r, c)]);
+        let (a, _, _) = m.map(0, &top).unwrap();
+        let (b, _, _) = m.map(15, &rest).unwrap();
+        for (i, v) in a.data().iter().chain(b.data()).enumerate() {
+            assert_eq!(v.to_bits(), xmu.data()[i].to_bits(), "row-major index {i}");
+        }
+    }
+
+    #[test]
+    fn split_columns_mapper_splits_and_checks() {
+        let chunk = Matrix::from_fn(4, 5, |i, j| (i * 5 + j) as f64);
+        let m = SplitColumns { x_cols: 2 };
+        assert_eq!(m.shapes(5).unwrap(), (2, 3));
+        let (xmu, xvar, y) = m.map(0, &chunk).unwrap();
+        assert_eq!((xmu.rows(), xmu.cols()), (4, 2));
+        assert_eq!((y.rows(), y.cols()), (4, 3));
+        assert_eq!(xmu[(1, 1)], 6.0);
+        assert_eq!(y[(1, 0)], 7.0);
+        assert_eq!(xvar.max_abs(), 0.0);
+        assert!(SplitColumns { x_cols: 0 }.shapes(5).is_err());
+        assert!(SplitColumns { x_cols: 5 }.shapes(5).is_err());
+    }
+}

@@ -1,0 +1,172 @@
+//! Streaming store packer: rows in, shard files + manifest out, with
+//! peak memory bounded by one shard (DESIGN.md §13). `gparml data
+//! pack` drives this from a chunked CSV reader or a chunked generator,
+//! so CSV → store conversion never materialises the dataset either.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{ensure, Result};
+
+use super::codec;
+use super::manifest::{ShardEntry, StoreManifest};
+use crate::linalg::Matrix;
+
+/// Incremental store writer. `append` buffers at most one shard's rows;
+/// each full shard is flushed to `shard_NNNNN.gpds` as it completes,
+/// and `finish` writes the remainder plus the manifest.
+pub struct StoreWriter {
+    dir: PathBuf,
+    /// columns per row; learned from the first appended chunk so CSV
+    /// packing does not need to pre-scan the file
+    dims: Option<usize>,
+    x_cols: usize,
+    shard_rows: usize,
+    artifact: Option<String>,
+    buf: Vec<f64>,
+    buf_rows: usize,
+    shards: Vec<ShardEntry>,
+    total: usize,
+}
+
+impl StoreWriter {
+    pub fn create(
+        dir: &Path,
+        x_cols: usize,
+        shard_rows: usize,
+        artifact: Option<&str>,
+    ) -> Result<StoreWriter> {
+        ensure!(shard_rows >= 1, "shard_rows must be >= 1");
+        std::fs::create_dir_all(dir)?;
+        Ok(StoreWriter {
+            dir: dir.to_path_buf(),
+            dims: None,
+            x_cols,
+            shard_rows,
+            artifact: artifact.map(str::to_string),
+            buf: Vec::new(),
+            buf_rows: 0,
+            shards: Vec::new(),
+            total: 0,
+        })
+    }
+
+    /// Rows written so far (flushed + buffered).
+    pub fn rows(&self) -> usize {
+        self.total + self.buf_rows
+    }
+
+    pub fn append(&mut self, chunk: &Matrix) -> Result<()> {
+        if chunk.rows() == 0 {
+            return Ok(());
+        }
+        let dims = *self.dims.get_or_insert_with(|| chunk.cols());
+        ensure!(
+            chunk.cols() == dims,
+            "chunk has {} columns but the store was started with {dims}",
+            chunk.cols()
+        );
+        ensure!(
+            self.x_cols < dims,
+            "x_cols ({}) must leave at least one output column (dims {dims})",
+            self.x_cols
+        );
+        let mut offset = 0usize;
+        while offset < chunk.rows() {
+            let take = (self.shard_rows - self.buf_rows).min(chunk.rows() - offset);
+            let lo = offset * dims;
+            let hi = (offset + take) * dims;
+            self.buf.extend_from_slice(&chunk.data()[lo..hi]);
+            self.buf_rows += take;
+            offset += take;
+            if self.buf_rows == self.shard_rows {
+                self.flush_shard()?;
+            }
+        }
+        Ok(())
+    }
+
+    fn flush_shard(&mut self) -> Result<()> {
+        let dims = self.dims.expect("flush with no rows appended");
+        let rows = self.buf_rows;
+        let m = Matrix::from_vec(rows, dims, std::mem::take(&mut self.buf));
+        let file = format!("shard_{:05}.gpds", self.shards.len());
+        let checksum = codec::write_shard(&self.dir.join(&file), &m)?;
+        self.shards.push(ShardEntry {
+            file,
+            start: self.total,
+            rows,
+            checksum,
+        });
+        self.total += rows;
+        self.buf_rows = 0;
+        Ok(())
+    }
+
+    /// Flush the final partial shard and write the manifest; returns it.
+    pub fn finish(mut self) -> Result<StoreManifest> {
+        if self.buf_rows > 0 {
+            self.flush_shard()?;
+        }
+        ensure!(self.total >= 1, "store has no rows");
+        let manifest = StoreManifest {
+            n: self.total,
+            dims: self.dims.expect("rows exist"),
+            x_cols: self.x_cols,
+            artifact: self.artifact.clone(),
+            shards: std::mem::take(&mut self.shards),
+        };
+        manifest.save(&self.dir)?;
+        Ok(manifest)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::ShardedDiskSource;
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("gpds_writer_{}_{name}", std::process::id()))
+    }
+
+    #[test]
+    fn packs_across_chunk_and_shard_boundaries() {
+        let dir = tmp("pack");
+        let data = Matrix::from_fn(23, 4, |i, j| (i * 4 + j) as f64 * 0.25);
+        let mut w = StoreWriter::create(&dir, 1, 5, Some("small")).unwrap();
+        // append in awkward chunk sizes: 1, 7, 15 rows
+        let slice = |lo: usize, hi: usize| {
+            Matrix::from_fn(hi - lo, 4, |r, c| data[(lo + r, c)])
+        };
+        w.append(&slice(0, 1)).unwrap();
+        w.append(&slice(1, 8)).unwrap();
+        w.append(&slice(8, 23)).unwrap();
+        let man = w.finish().unwrap();
+        assert_eq!(man.n, 23);
+        assert_eq!(man.dims, 4);
+        assert_eq!(man.shards.len(), 5); // 5+5+5+5+3
+        assert_eq!(man.shards[4].rows, 3);
+        assert_eq!(man.artifact.as_deref(), Some("small"));
+
+        let src = ShardedDiskSource::open(&dir).unwrap();
+        let all = src.read_all().unwrap();
+        for (a, b) in data.data().iter().zip(all.data()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_column_drift_and_empty_stores() {
+        let dir = tmp("drift");
+        let mut w = StoreWriter::create(&dir, 0, 4, None).unwrap();
+        w.append(&Matrix::zeros(2, 3)).unwrap();
+        let msg = format!("{:#}", w.append(&Matrix::zeros(2, 2)).unwrap_err());
+        assert!(msg.contains("columns"), "{msg}");
+
+        let w = StoreWriter::create(&dir, 0, 4, None).unwrap();
+        let msg = format!("{:#}", w.finish().unwrap_err());
+        assert!(msg.contains("no rows"), "{msg}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,181 @@
+//! Streaming XXH64 — the shard checksum of the on-disk dataset store
+//! (DESIGN.md §13). Self-contained (the `xxhash` crates are not in the
+//! offline set) and incremental, so a shard file can be verified while
+//! it is read chunk-by-chunk without ever holding the whole payload.
+//!
+//! This is the reference XXH64 algorithm with seed 0; the one-shot and
+//! streaming paths are bit-identical by construction (and by test).
+
+const P1: u64 = 0x9E3779B185EBCA87;
+const P2: u64 = 0xC2B2AE3D27D4EB4F;
+const P3: u64 = 0x165667B19E3779F9;
+const P4: u64 = 0x85EBCA77C2B2AE63;
+const P5: u64 = 0x27D4EB2F165667C5;
+
+#[inline]
+fn round(acc: u64, lane: u64) -> u64 {
+    acc.wrapping_add(lane.wrapping_mul(P2))
+        .rotate_left(31)
+        .wrapping_mul(P1)
+}
+
+#[inline]
+fn merge(acc: u64, val: u64) -> u64 {
+    (acc ^ round(0, val)).wrapping_mul(P1).wrapping_add(P4)
+}
+
+/// Incremental XXH64 state (seed 0).
+pub struct Xxh64 {
+    acc: [u64; 4],
+    /// partial 32-byte stripe carried between `update` calls
+    buf: [u8; 32],
+    buf_len: usize,
+    total: u64,
+}
+
+impl Default for Xxh64 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Xxh64 {
+    pub fn new() -> Xxh64 {
+        Xxh64 {
+            acc: [P1.wrapping_add(P2), P2, 0, 0u64.wrapping_sub(P1)],
+            buf: [0; 32],
+            buf_len: 0,
+            total: 0,
+        }
+    }
+
+    fn stripe(&mut self, s: &[u8]) {
+        debug_assert_eq!(s.len(), 32);
+        for i in 0..4 {
+            let lane = u64::from_le_bytes(s[i * 8..i * 8 + 8].try_into().unwrap());
+            self.acc[i] = round(self.acc[i], lane);
+        }
+    }
+
+    pub fn update(&mut self, mut data: &[u8]) {
+        self.total = self.total.wrapping_add(data.len() as u64);
+        if self.buf_len > 0 {
+            let take = (32 - self.buf_len).min(data.len());
+            self.buf[self.buf_len..self.buf_len + take].copy_from_slice(&data[..take]);
+            self.buf_len += take;
+            data = &data[take..];
+            if self.buf_len == 32 {
+                let full = self.buf;
+                self.stripe(&full);
+                self.buf_len = 0;
+            }
+        }
+        while data.len() >= 32 {
+            let (s, rest) = data.split_at(32);
+            self.stripe(s);
+            data = rest;
+        }
+        if !data.is_empty() {
+            self.buf[..data.len()].copy_from_slice(data);
+            self.buf_len = data.len();
+        }
+    }
+
+    pub fn finish(&self) -> u64 {
+        let mut h = if self.total >= 32 {
+            let [a1, a2, a3, a4] = self.acc;
+            let mut h = a1
+                .rotate_left(1)
+                .wrapping_add(a2.rotate_left(7))
+                .wrapping_add(a3.rotate_left(12))
+                .wrapping_add(a4.rotate_left(18));
+            h = merge(h, a1);
+            h = merge(h, a2);
+            h = merge(h, a3);
+            merge(h, a4)
+        } else {
+            P5 // seed 0 + PRIME64_5
+        };
+        h = h.wrapping_add(self.total);
+        let mut rem = &self.buf[..self.buf_len];
+        while rem.len() >= 8 {
+            let lane = u64::from_le_bytes(rem[..8].try_into().unwrap());
+            h = (h ^ round(0, lane))
+                .rotate_left(27)
+                .wrapping_mul(P1)
+                .wrapping_add(P4);
+            rem = &rem[8..];
+        }
+        if rem.len() >= 4 {
+            let lane = u64::from(u32::from_le_bytes(rem[..4].try_into().unwrap()));
+            h = (h ^ lane.wrapping_mul(P1))
+                .rotate_left(23)
+                .wrapping_mul(P2)
+                .wrapping_add(P3);
+            rem = &rem[4..];
+        }
+        for &b in rem {
+            h = (h ^ u64::from(b).wrapping_mul(P5))
+                .rotate_left(11)
+                .wrapping_mul(P1);
+        }
+        h ^= h >> 33;
+        h = h.wrapping_mul(P2);
+        h ^= h >> 29;
+        h = h.wrapping_mul(P3);
+        h ^ (h >> 32)
+    }
+}
+
+/// One-shot XXH64 (seed 0) of `data`.
+pub fn xxh64(data: &[u8]) -> u64 {
+    let mut h = Xxh64::new();
+    h.update(data);
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // reference values from the canonical xxHash test suite (seed 0)
+        assert_eq!(xxh64(b""), 0xEF46_DB37_51D8_E999);
+        assert_eq!(xxh64(b"abc"), 0x44BC_2CF5_AD77_0999);
+    }
+
+    #[test]
+    fn streaming_matches_oneshot_at_every_split() {
+        // spans all tail paths: <32, exactly 32, >32, 8/4/1-byte remainders
+        let data: Vec<u8> = (0..157u32).map(|i| (i.wrapping_mul(97) % 251) as u8).collect();
+        let want = xxh64(&data);
+        for split in 0..=data.len() {
+            let mut h = Xxh64::new();
+            h.update(&data[..split]);
+            h.update(&data[split..]);
+            assert_eq!(h.finish(), want, "split at {split}");
+        }
+        // three-way splits across the stripe boundary
+        for a in [1usize, 31, 32, 33, 63, 64, 65] {
+            for b in [a + 1, a + 32, (a + 40).min(data.len())] {
+                if b > data.len() {
+                    continue;
+                }
+                let mut h = Xxh64::new();
+                h.update(&data[..a]);
+                h.update(&data[a..b]);
+                h.update(&data[b..]);
+                assert_eq!(h.finish(), want, "splits at {a},{b}");
+            }
+        }
+    }
+
+    #[test]
+    fn distinct_inputs_distinct_hashes() {
+        let a = xxh64(&[0u8; 64]);
+        let mut bytes = [0u8; 64];
+        bytes[63] = 1;
+        assert_ne!(a, xxh64(&bytes));
+    }
+}

@@ -1,15 +1,72 @@
-//! CSV result writers, plus the numeric-matrix reader the serving CLI
-//! uses for `gparml predict --points file.csv`. Every experiment emits
-//! its series to `results/` so figures can be regenerated/plotted
-//! externally (EXPERIMENTS.md).
+//! CSV result writers, plus the numeric-matrix readers the serving CLI
+//! and the dataset store use (`gparml predict --points`, `gparml data
+//! pack --csv`). Every experiment emits its series to `results/` so
+//! figures can be regenerated/plotted externally (EXPERIMENTS.md).
+//!
+//! Reading is streaming: a buffered line reader, never
+//! `read_to_string` (which holds file + matrix simultaneously — 2x
+//! peak memory on exactly the million-row files the store exists
+//! for). [`read_matrix_chunked`] exposes the same parser as an
+//! iterator of row chunks so CSV → store conversion is O(chunk).
 
 use std::fs;
-use std::io::Write;
+use std::io::{BufRead, BufReader, Write};
 use std::path::Path;
 
 use anyhow::{bail, ensure, Context, Result};
 
 use crate::linalg::Matrix;
+
+/// Shared line parser: the header/ragged/garbage rules below are the
+/// contract both readers obey (and the tests pin).
+struct RowParser {
+    path: String,
+    cols: usize,
+    seen_content: bool,
+}
+
+impl RowParser {
+    fn new(path: &Path) -> RowParser {
+        RowParser {
+            path: path.display().to_string(),
+            cols: 0,
+            seen_content: false,
+        }
+    }
+
+    /// `Ok(None)` for blank lines and a (fully non-numeric) header row.
+    fn parse_line(&mut self, lineno: usize, line: &str) -> Result<Option<Vec<f64>>> {
+        let line = line.trim();
+        if line.is_empty() {
+            return Ok(None);
+        }
+        let first_content = !self.seen_content;
+        self.seen_content = true;
+        let cells: Vec<&str> = line.split(',').map(str::trim).collect();
+        let parsed: Result<Vec<f64>, _> = cells.iter().map(|c| c.parse::<f64>()).collect();
+        let row = match parsed {
+            Ok(row) => row,
+            // a fully non-numeric leading row is a header; a partially
+            // numeric one is a corrupt data row and must not be skipped
+            Err(_) if first_content && cells.iter().all(|c| c.parse::<f64>().is_err()) => {
+                return Ok(None)
+            }
+            Err(_) => bail!("{}:{}: non-numeric cell in {:?}", self.path, lineno + 1, line),
+        };
+        if self.cols == 0 {
+            self.cols = row.len();
+        }
+        ensure!(
+            row.len() == self.cols,
+            "{}:{}: row has {} columns, expected {}",
+            self.path,
+            lineno + 1,
+            row.len(),
+            self.cols
+        );
+        Ok(Some(row))
+    }
+}
 
 /// Read a numeric CSV into a [`Matrix`]. An optional single header row
 /// is skipped — but only if NONE of its cells parse as a float, so a
@@ -19,49 +76,88 @@ use crate::linalg::Matrix;
 /// `f64` parser, so a file written with `{:.17e}` formatting reloads
 /// bit-for-bit.
 pub fn read_matrix(path: &Path) -> Result<Matrix> {
-    let text = fs::read_to_string(path)
-        .with_context(|| format!("reading CSV {}", path.display()))?;
-    let mut rows: Vec<Vec<f64>> = Vec::new();
+    let mut data: Vec<f64> = Vec::new();
+    let mut rows = 0usize;
     let mut cols = 0usize;
-    let mut seen_content = false;
-    for (lineno, line) in text.lines().enumerate() {
-        let line = line.trim();
-        if line.is_empty() {
-            continue;
-        }
-        let first_content = !seen_content;
-        seen_content = true;
-        let cells: Vec<&str> = line.split(',').map(str::trim).collect();
-        let parsed: Result<Vec<f64>, _> = cells.iter().map(|c| c.parse::<f64>()).collect();
-        let row = match parsed {
-            Ok(row) => row,
-            // a fully non-numeric leading row is a header; a partially
-            // numeric one is a corrupt data row and must not be skipped
-            Err(_) if first_content && cells.iter().all(|c| c.parse::<f64>().is_err()) => {
-                continue
-            }
-            Err(_) => bail!(
-                "{}:{}: non-numeric cell in {:?}",
-                path.display(),
-                lineno + 1,
-                line
-            ),
-        };
-        if rows.is_empty() {
-            cols = row.len();
-        }
-        ensure!(
-            row.len() == cols,
-            "{}:{}: row has {} columns, expected {cols}",
-            path.display(),
-            lineno + 1,
-            row.len()
-        );
-        rows.push(row);
+    for chunk in read_matrix_chunked(path, 4096)? {
+        let chunk = chunk?;
+        cols = chunk.cols();
+        rows += chunk.rows();
+        data.extend_from_slice(chunk.data());
     }
     ensure!(cols > 0, "{}: no data rows", path.display());
-    let n = rows.len();
-    Ok(Matrix::from_vec(n, cols, rows.into_iter().flatten().collect()))
+    Ok(Matrix::from_vec(rows, cols, data))
+}
+
+/// Streaming CSV reader: yields the file's data rows as matrices of at
+/// most `chunk_rows` rows, under exactly [`read_matrix`]'s parsing
+/// rules. The file is never materialised — `gparml data pack --csv`
+/// streams a CSV into the dataset store through this.
+pub fn read_matrix_chunked(path: &Path, chunk_rows: usize) -> Result<CsvChunks> {
+    ensure!(chunk_rows >= 1, "chunk_rows must be >= 1");
+    let file = fs::File::open(path).with_context(|| format!("reading CSV {}", path.display()))?;
+    Ok(CsvChunks {
+        lines: BufReader::new(file).lines().enumerate(),
+        parser: RowParser::new(path),
+        chunk_rows,
+        done: false,
+    })
+}
+
+/// Iterator over a CSV file's row chunks (see [`read_matrix_chunked`]).
+pub struct CsvChunks {
+    lines: std::iter::Enumerate<std::io::Lines<BufReader<fs::File>>>,
+    parser: RowParser,
+    chunk_rows: usize,
+    done: bool,
+}
+
+impl CsvChunks {
+    /// Columns per row, once the first data row has been parsed.
+    pub fn cols(&self) -> usize {
+        self.parser.cols
+    }
+}
+
+impl Iterator for CsvChunks {
+    type Item = Result<Matrix>;
+
+    fn next(&mut self) -> Option<Result<Matrix>> {
+        if self.done {
+            return None;
+        }
+        let mut data: Vec<f64> = Vec::new();
+        let mut rows = 0usize;
+        while rows < self.chunk_rows {
+            match self.lines.next() {
+                None => {
+                    self.done = true;
+                    break;
+                }
+                Some((_, Err(e))) => {
+                    self.done = true;
+                    return Some(
+                        Err(e).with_context(|| format!("reading CSV {}", self.parser.path)),
+                    );
+                }
+                Some((lineno, Ok(line))) => match self.parser.parse_line(lineno, &line) {
+                    Err(e) => {
+                        self.done = true;
+                        return Some(Err(e));
+                    }
+                    Ok(None) => continue,
+                    Ok(Some(row)) => {
+                        data.extend_from_slice(&row);
+                        rows += 1;
+                    }
+                },
+            }
+        }
+        if rows == 0 {
+            return None;
+        }
+        Some(Ok(Matrix::from_vec(rows, self.parser.cols, data)))
+    }
 }
 
 /// A CSV table accumulated in memory and flushed to disk.
@@ -177,5 +273,42 @@ mod tests {
         let msg = format!("{:#}", read_matrix(&p).unwrap_err());
         fs::remove_file(&p).ok();
         assert!(msg.contains("no data"), "{msg}");
+    }
+
+    #[test]
+    fn chunked_reader_matches_read_matrix_at_every_chunk_size() {
+        let mut content = String::from("h0,h1,h2\n");
+        for i in 0..23 {
+            content.push_str(&format!("{},{},{}\n", i, i * 2, 0.5 * i as f64));
+        }
+        let p = tmp_csv("chunked.csv", &content);
+        let whole = read_matrix(&p).unwrap();
+        for chunk_rows in [1usize, 2, 5, 23, 64] {
+            let mut rows = 0usize;
+            let mut data: Vec<f64> = Vec::new();
+            for chunk in read_matrix_chunked(&p, chunk_rows).unwrap() {
+                let chunk = chunk.unwrap();
+                assert!(chunk.rows() <= chunk_rows);
+                rows += chunk.rows();
+                data.extend_from_slice(chunk.data());
+            }
+            assert_eq!(rows, 23, "chunk_rows {chunk_rows}");
+            for (a, b) in whole.data().iter().zip(&data) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+        fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn chunked_reader_propagates_parse_errors_and_stops() {
+        let p = tmp_csv("chunked_bad.csv", "1,2\n3,4\nx,y\n5,6\n");
+        let mut it = read_matrix_chunked(&p, 1).unwrap();
+        assert!(it.next().unwrap().is_ok());
+        assert!(it.next().unwrap().is_ok());
+        let msg = format!("{:#}", it.next().unwrap().unwrap_err());
+        assert!(msg.contains("non-numeric"), "{msg}");
+        assert!(it.next().is_none(), "iterator must fuse after an error");
+        fs::remove_file(&p).ok();
     }
 }

@@ -1,0 +1,363 @@
+//! Out-of-core store integration tests (DESIGN.md §13): a strict-mode
+//! training run brought up by STREAMING a packed on-disk store must be
+//! bit-for-bit identical to one brought up from the same data
+//! materialised in memory — on the in-process Pool backend across
+//! chunk sizes, over real worker processes on TCP, and on the wire-v9
+//! worker-local `shard_ref` path (no data rows on the wire at all).
+//! A tampered manifest checksum must reject bring-up, not train.
+
+use std::net::TcpListener;
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::time::Duration;
+
+use gparml::cluster::wire::ShardRef;
+use gparml::coordinator::{
+    partition, GlobalOpt, ModelKind, StreamConfig, TrainConfig, Trainer,
+};
+use gparml::gp::GlobalParams;
+use gparml::linalg::Matrix;
+use gparml::store::{InMemorySource, ShardedDiskSource, SplitColumns, StoreWriter};
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// Keep spawned workers from outliving a failed test.
+struct Workers(Vec<Child>);
+
+impl Drop for Workers {
+    fn drop(&mut self) {
+        for c in &mut self.0 {
+            let _ = c.kill();
+            let _ = c.wait();
+        }
+    }
+}
+
+fn spawn_workers(n: usize, leader_addr: &str) -> Workers {
+    let bin = env!("CARGO_BIN_EXE_gparml");
+    let art = artifacts_dir();
+    Workers(
+        (0..n)
+            .map(|_| {
+                Command::new(bin)
+                    .args([
+                        "worker",
+                        "--connect",
+                        leader_addr,
+                        "--artifacts",
+                        art.to_str().unwrap(),
+                    ])
+                    .stdout(Stdio::null())
+                    .stderr(Stdio::null())
+                    .spawn()
+                    .expect("spawning gparml worker process")
+            })
+            .collect(),
+    )
+}
+
+fn init_params(seed: u64) -> GlobalParams {
+    let mut rng = gparml::util::rng::Rng::new(seed);
+    GlobalParams {
+        z: Matrix::from_fn(8, 2, |_, _| rng.range(-2.0, 2.0)),
+        log_ls: vec![0.0, 0.0],
+        log_sf2: 0.0,
+        log_beta: 1.0,
+    }
+}
+
+fn config(workers: usize) -> TrainConfig {
+    TrainConfig {
+        artifact: "test".into(),
+        artifacts_dir: artifacts_dir(),
+        workers,
+        model: ModelKind::Regression,
+        global_opt: GlobalOpt::Scg,
+        seed: 1,
+        ..Default::default()
+    }
+}
+
+/// A 60 x 5 regression dataset in STORE layout: columns 0-1 are the
+/// inputs, 2-4 the outputs. Built as one matrix so the materialised
+/// reference and every store reader start from identical f64 bits.
+fn dataset() -> Matrix {
+    let mut rng = gparml::util::rng::Rng::new(3);
+    let mut full = Matrix::zeros(60, 5);
+    for i in 0..60 {
+        let x0 = rng.range(-2.0, 2.0);
+        let x1 = rng.range(-2.0, 2.0);
+        full[(i, 0)] = x0;
+        full[(i, 1)] = x1;
+        full[(i, 2)] = x0.sin() + 0.05 * rng.normal();
+        full[(i, 3)] = (1.3 * x0).cos() + 0.05 * rng.normal();
+        full[(i, 4)] = 0.5 * x1 + 0.05 * rng.normal();
+    }
+    full
+}
+
+/// The materialised split of [`dataset`] for `partition`-based bring-up.
+fn split(full: &Matrix) -> (Matrix, Matrix, Matrix) {
+    let n = full.rows();
+    let xmu = Matrix::from_fn(n, 2, |i, j| full[(i, j)]);
+    let xvar = Matrix::zeros(n, 2);
+    let y = Matrix::from_fn(n, 3, |i, j| full[(i, 2 + j)]);
+    (xmu, xvar, y)
+}
+
+/// Pack [`dataset`] into a fresh store directory with the given shard
+/// size, appending in deliberately unaligned chunks to exercise the
+/// writer's rebuffering.
+fn pack(name: &str, full: &Matrix, shard_rows: usize) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("gpds_it_{}_{name}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let mut w = StoreWriter::create(&dir, 2, shard_rows, None).unwrap();
+    let head = Matrix::from_fn(37, 5, |i, j| full[(i, j)]);
+    let tail = Matrix::from_fn(23, 5, |i, j| full[(37 + i, j)]);
+    w.append(&head).unwrap();
+    w.append(&tail).unwrap();
+    w.finish().unwrap();
+    dir
+}
+
+fn run_trace<B: gparml::cluster::Backend>(t: &mut Trainer<B>, iters: usize) -> Vec<f64> {
+    (0..iters).map(|_| t.step().unwrap()).collect()
+}
+
+fn assert_bitwise(label: &str, reference: &[f64], got: &[f64]) {
+    for (i, (a, b)) in reference.iter().zip(got).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "{label} iteration {i}: F={a} vs F={b}");
+    }
+}
+
+fn assert_params_bitwise<A: gparml::cluster::Backend, B: gparml::cluster::Backend>(
+    label: &str,
+    a: &Trainer<A>,
+    b: &Trainer<B>,
+) {
+    for (x, y) in a.params.flatten().iter().zip(b.params.flatten()) {
+        assert_eq!(x.to_bits(), y.to_bits(), "{label}: final params diverged");
+    }
+}
+
+/// Worker-local shard refs for a store whose shards align 1:1 with the
+/// worker partition.
+fn shard_refs(src: &ShardedDiskSource) -> Vec<ShardRef> {
+    src.manifest()
+        .shards
+        .iter()
+        .enumerate()
+        .map(|(i, e)| ShardRef {
+            path: src.shard_path(i).to_str().unwrap().to_string(),
+            checksum: e.checksum,
+            rows: e.rows as u32,
+            x_cols: 2,
+            kl_weight: 0.0,
+        })
+        .collect()
+}
+
+/// Pool backend: a store streamed at ANY chunk size — and the in-memory
+/// source, and the worker-local shard_ref path — must reproduce the
+/// materialised bring-up's training trace bit-for-bit. shard_rows = 17
+/// is deliberately unaligned with every chunk size AND with the 30/30
+/// worker partition, so chunks cross shard boundaries both ways.
+#[test]
+fn streamed_store_bringup_matches_materialised_pool_training_bitwise() {
+    let full = dataset();
+    let (xmu, xvar, y) = split(&full);
+    let workers = 2;
+    let iters = 6;
+
+    let mut ref_t = Trainer::new(
+        config(workers),
+        init_params(5),
+        partition(&xmu, &xvar, &y, 0.0, workers),
+    )
+    .unwrap();
+    let reference = run_trace(&mut ref_t, iters);
+
+    let dir = pack("pool", &full, 17);
+    let src = ShardedDiskSource::open(&dir).unwrap();
+    let mapper = SplitColumns { x_cols: 2 };
+    for chunk_rows in [1usize, 7, 64] {
+        let stream = StreamConfig {
+            source: &src,
+            mapper: &mapper,
+            chunk_rows,
+            kl_weight: 0.0,
+            shard_refs: None,
+        };
+        let mut t = Trainer::new_streaming(config(workers), init_params(5), &stream).unwrap();
+        let trace = run_trace(&mut t, iters);
+        assert_bitwise(&format!("disk chunk_rows={chunk_rows}"), &reference, &trace);
+        assert_params_bitwise(&format!("disk chunk_rows={chunk_rows}"), &ref_t, &t);
+    }
+
+    // the in-memory source through the SAME streaming bring-up
+    let mem = InMemorySource::new(full.clone());
+    let stream = StreamConfig {
+        source: &mem,
+        mapper: &mapper,
+        chunk_rows: 13,
+        kl_weight: 0.0,
+        shard_refs: None,
+    };
+    let mut t = Trainer::new_streaming(config(workers), init_params(5), &stream).unwrap();
+    assert_bitwise("in-memory source", &reference, &run_trace(&mut t, iters));
+    assert_params_bitwise("in-memory source", &ref_t, &t);
+
+    // worker-local load: a 30-row-shard store aligns 1:1 with the
+    // 30/30 partition, so each (in-process) worker reads and verifies
+    // its own shard file — same trace, zero data rows through bring-up
+    let adir = pack("pool_aligned", &full, 30);
+    let asrc = ShardedDiskSource::open(&adir).unwrap();
+    let refs = shard_refs(&asrc);
+    assert_eq!(refs.len(), workers, "fixture must align shards to workers");
+    let stream = StreamConfig {
+        source: &asrc,
+        mapper: &mapper,
+        chunk_rows: 9,
+        kl_weight: 0.0,
+        shard_refs: Some(refs),
+    };
+    let mut t = Trainer::new_streaming(config(workers), init_params(5), &stream).unwrap();
+    assert_bitwise("pool shard_ref", &reference, &run_trace(&mut t, iters));
+    assert_params_bitwise("pool shard_ref", &ref_t, &t);
+
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::remove_dir_all(&adir).ok();
+}
+
+/// Real worker processes over TCP: both the leader-streamed bring-up
+/// (rows chunked over the wire) and the v9 shard_ref bring-up (each
+/// worker process reads its own shard file) must reproduce the
+/// materialised Pool trace bit-for-bit.
+#[test]
+fn tcp_streamed_and_shard_ref_bringup_match_pool_bitwise() {
+    let full = dataset();
+    let (xmu, xvar, y) = split(&full);
+    let workers = 2;
+    let iters = 4;
+
+    let mut ref_t = Trainer::new(
+        config(workers),
+        init_params(5),
+        partition(&xmu, &xvar, &y, 0.0, workers),
+    )
+    .unwrap();
+    let reference = run_trace(&mut ref_t, iters);
+
+    let dir = pack("tcp", &full, 30);
+    let src = ShardedDiskSource::open(&dir).unwrap();
+    let mapper = SplitColumns { x_cols: 2 };
+    let refs = shard_refs(&src);
+    assert_eq!(refs.len(), workers, "fixture must align shards to workers");
+
+    for (label, shard_refs) in [("tcp streamed", None), ("tcp shard_ref", Some(refs))] {
+        let stream = StreamConfig {
+            source: &src,
+            mapper: &mapper,
+            chunk_rows: 7,
+            kl_weight: 0.0,
+            shard_refs,
+        };
+        let listener = TcpListener::bind("127.0.0.1:0").expect("bind leader listener");
+        let addr = listener.local_addr().unwrap().to_string();
+        let procs = spawn_workers(workers, &addr);
+        let mut t =
+            Trainer::accept_tcp_streaming(config(workers), init_params(5), &stream, &listener)
+                .expect("streamed cluster bring-up");
+        t.backend_mut().set_timeout(Duration::from_secs(30));
+        t.backend_mut().set_heartbeat_timeout(Duration::from_secs(5));
+        let trace = run_trace(&mut t, iters);
+        assert_bitwise(label, &reference, &trace);
+        assert_params_bitwise(label, &ref_t, &t);
+        let (tx, rx) = t.log.total_network_bytes();
+        assert!(tx > 0 && rx > 0, "{label}: no network traffic recorded");
+        drop(t); // sends Shutdown frames
+        drop(procs);
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A shard_ref whose checksum disagrees with the file on disk must
+/// reject bring-up with an error that names the mismatch — a worker
+/// never trains on rows it could not verify. (WorkerNode::build is
+/// shared by the Pool and TCP backends, so the Pool covers the
+/// verification logic itself; the TCP leg proves worker-process Init
+/// errors propagate into the leader's bring-up error.)
+#[test]
+fn tampered_shard_ref_checksum_rejects_bringup() {
+    let full = dataset();
+    let dir = pack("tamper", &full, 30);
+    let src = ShardedDiskSource::open(&dir).unwrap();
+    let mapper = SplitColumns { x_cols: 2 };
+    let mut refs = shard_refs(&src);
+    refs[1].checksum ^= 1;
+
+    let stream = StreamConfig {
+        source: &src,
+        mapper: &mapper,
+        chunk_rows: 9,
+        kl_weight: 0.0,
+        shard_refs: Some(refs.clone()),
+    };
+    let err = Trainer::new_streaming(config(2), init_params(5), &stream)
+        .err()
+        .expect("pool bring-up must reject a tampered shard_ref checksum");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("checksum mismatch"), "unexplained rejection: {msg}");
+
+    // same tampered refs over real worker processes: the worker's Init
+    // error must surface as the leader's bring-up error
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind leader listener");
+    let addr = listener.local_addr().unwrap().to_string();
+    let procs = spawn_workers(2, &addr);
+    let stream = StreamConfig {
+        source: &src,
+        mapper: &mapper,
+        chunk_rows: 9,
+        kl_weight: 0.0,
+        shard_refs: Some(refs),
+    };
+    let err = Trainer::accept_tcp_streaming(config(2), init_params(5), &stream, &listener)
+        .err()
+        .expect("tcp bring-up must reject a tampered shard_ref checksum");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("checksum"), "unexplained tcp rejection: {msg}");
+    drop(procs);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Pack -> open -> verify -> read_all across degenerate and chunky
+/// shapes: the store must hand back exactly the f64 bits that went in.
+#[test]
+fn store_roundtrip_is_bitwise_across_shapes() {
+    for (n, dims, shard_rows) in [(1usize, 2usize, 1usize), (5, 3, 2), (23, 4, 7), (64, 2, 64)] {
+        let mut rng = gparml::util::rng::Rng::new((n * dims) as u64);
+        let data = Matrix::from_fn(n, dims, |_, _| rng.normal());
+        let dir = std::env::temp_dir().join(format!(
+            "gpds_it_rt_{}_{n}x{dims}",
+            std::process::id()
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+        let mut w = StoreWriter::create(&dir, 1, shard_rows, None).unwrap();
+        w.append(&data).unwrap();
+        let man = w.finish().unwrap();
+        assert_eq!(man.n, n);
+        assert_eq!(man.dims, dims);
+        assert_eq!(man.shards.len(), (n + shard_rows - 1) / shard_rows);
+
+        let src = ShardedDiskSource::open(&dir).unwrap();
+        let bytes = src.verify().unwrap();
+        assert!(bytes > (n * dims * 8) as u64, "verify must count payload + framing");
+        let back = src.read_all().unwrap();
+        for (a, b) in data.data().iter().zip(back.data()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{n}x{dims} shard_rows={shard_rows}");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
