@@ -19,6 +19,10 @@
 //! ```sh
 //! make artifacts && cargo run --release --example quickstart
 //! ```
+//!
+//! Hacking on the repo? `gparml analyze` lints the sources against the
+//! standing contracts (determinism, panic-freedom, wire totality —
+//! DESIGN.md §14) and is a blocking CI job; run it before pushing.
 
 use anyhow::Result;
 use gparml::coordinator::{partition, GlobalOpt, ModelKind, StreamConfig, TrainConfig, Trainer};

@@ -1,0 +1,195 @@
+//! `analyze-allowlist.toml` — the committed escape hatch for findings
+//! that are deliberate (DESIGN.md §14).
+//!
+//! Format: a sequence of `[[allow]]` tables, each with string keys
+//!
+//! ```toml
+//! [[allow]]
+//! rule = "lock-hygiene"
+//! file = "rust/src/model/serve.rs"
+//! contains = "conn.shutdown"   # or: line = 478
+//! reason = "why this is safe — required, shown in reports"
+//! ```
+//!
+//! `contains` matches a substring of the flagged line (stable across
+//! unrelated edits); `line` pins an exact line number. Exactly one of
+//! the two must be given. The parser is a deliberate TOML subset —
+//! tables of string/integer pairs and `#` comments — so the engine
+//! stays dependency-free.
+
+use crate::analyze::Finding;
+use anyhow::{bail, Context, Result};
+
+/// One `[[allow]]` entry.
+#[derive(Debug, Clone)]
+pub struct Allow {
+    pub rule: String,
+    pub file: String,
+    /// Substring of the flagged line (preferred: survives line drift).
+    pub contains: Option<String>,
+    /// Exact 1-based line number (for lines with no stable substring).
+    pub line: Option<usize>,
+    pub reason: String,
+}
+
+/// The parsed allowlist.
+#[derive(Debug, Default)]
+pub struct Allowlist {
+    pub allows: Vec<Allow>,
+}
+
+impl Allowlist {
+    /// Parse the TOML-subset format. Errors name the offending line.
+    pub fn parse(text: &str) -> Result<Allowlist> {
+        let mut allows = Vec::new();
+        let mut current: Option<Allow> = None;
+        for (idx, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if line == "[[allow]]" {
+                if let Some(done) = current.take() {
+                    allows.push(validate(done, idx)?);
+                }
+                current = Some(Allow {
+                    rule: String::new(),
+                    file: String::new(),
+                    contains: None,
+                    line: None,
+                    reason: String::new(),
+                });
+                continue;
+            }
+            let entry = match current.as_mut() {
+                Some(e) => e,
+                None => bail!("allowlist line {}: key outside [[allow]] table", idx + 1),
+            };
+            let (key, value) = split_kv(&line)
+                .with_context(|| format!("allowlist line {}: expected key = value", idx + 1))?;
+            match key {
+                "rule" => entry.rule = parse_str(value, idx)?,
+                "file" => entry.file = parse_str(value, idx)?,
+                "contains" => entry.contains = Some(parse_str(value, idx)?),
+                "reason" => entry.reason = parse_str(value, idx)?,
+                "line" => {
+                    entry.line = Some(value.parse().with_context(|| {
+                        format!("allowlist line {}: line must be an integer", idx + 1)
+                    })?)
+                }
+                other => bail!("allowlist line {}: unknown key {other:?}", idx + 1),
+            }
+        }
+        if let Some(done) = current.take() {
+            allows.push(validate(done, 0)?);
+        }
+        Ok(Allowlist { allows })
+    }
+
+    /// Load from disk.
+    pub fn load(path: &std::path::Path) -> Result<Allowlist> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading allowlist {}", path.display()))?;
+        Self::parse(&text).with_context(|| format!("parsing allowlist {}", path.display()))
+    }
+
+    /// Index of the first entry matching `f`, if any.
+    pub fn matches(&self, f: &Finding) -> Option<usize> {
+        self.allows.iter().position(|a| {
+            a.rule == f.rule
+                && a.file == f.file
+                && match (&a.contains, a.line) {
+                    (Some(sub), _) => f.snippet.contains(sub.as_str()),
+                    (None, Some(n)) => n == f.line,
+                    (None, None) => false,
+                }
+        })
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' inside a quoted value would break this, so allowlist reasons
+    // must not contain '#'; validate() enforces the quoting either way
+    match line.find('#') {
+        Some(pos) if !line[..pos].contains('"') || line[..pos].matches('"').count() % 2 == 0 => {
+            &line[..pos]
+        }
+        _ => line,
+    }
+}
+
+fn split_kv(line: &str) -> Option<(&str, &str)> {
+    let eq = line.find('=')?;
+    Some((line[..eq].trim(), line[eq + 1..].trim()))
+}
+
+fn parse_str(value: &str, idx: usize) -> Result<String> {
+    let inner = value
+        .strip_prefix('"')
+        .and_then(|v| v.strip_suffix('"'))
+        .with_context(|| format!("allowlist line {}: expected a quoted string", idx + 1))?;
+    Ok(inner.to_string())
+}
+
+fn validate(a: Allow, idx: usize) -> Result<Allow> {
+    if a.rule.is_empty() || a.file.is_empty() {
+        bail!("allowlist entry ending at line {}: rule and file are required", idx + 1);
+    }
+    if a.reason.is_empty() {
+        bail!("allowlist entry for {} in {}: a reason is required", a.rule, a.file);
+    }
+    if a.contains.is_none() && a.line.is_none() {
+        bail!("allowlist entry for {} in {}: give contains or line", a.rule, a.file);
+    }
+    Ok(a)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn finding(rule: &'static str, file: &str, line: usize, snippet: &str) -> Finding {
+        Finding {
+            rule,
+            file: file.to_string(),
+            line,
+            snippet: snippet.to_string(),
+            message: String::new(),
+        }
+    }
+
+    #[test]
+    fn parses_and_matches_contains_and_line_entries() {
+        let text = "\n# comment\n[[allow]]\nrule = \"lock-hygiene\"\nfile = \"rust/src/model/serve.rs\"\ncontains = \"conn.shutdown\"\nreason = \"shutdown is non-blocking\"\n\n[[allow]]\nrule = \"panic-freedom\"\nfile = \"rust/src/fleet/lb.rs\"\nline = 12\nreason = \"startup only\"\n";
+        let al = Allowlist::parse(text).unwrap();
+        assert_eq!(al.allows.len(), 2);
+        let hit = finding(
+            "lock-hygiene",
+            "rust/src/model/serve.rs",
+            99,
+            "conn.shutdown(std::net::Shutdown::Both).ok();",
+        );
+        assert_eq!(al.matches(&hit), Some(0));
+        let by_line = finding("panic-freedom", "rust/src/fleet/lb.rs", 12, "x.unwrap()");
+        assert_eq!(al.matches(&by_line), Some(1));
+        let wrong_line = finding("panic-freedom", "rust/src/fleet/lb.rs", 13, "x.unwrap()");
+        assert_eq!(al.matches(&wrong_line), None);
+        let wrong_rule = finding(
+            "determinism",
+            "rust/src/model/serve.rs",
+            99,
+            "conn.shutdown()",
+        );
+        assert_eq!(al.matches(&wrong_rule), None);
+    }
+
+    #[test]
+    fn rejects_entries_missing_reason_or_selector() {
+        let no_reason = "[[allow]]\nrule = \"determinism\"\nfile = \"a.rs\"\nline = 1\n";
+        assert!(Allowlist::parse(no_reason).is_err());
+        let no_selector = "[[allow]]\nrule = \"determinism\"\nfile = \"a.rs\"\nreason = \"x\"\n";
+        assert!(Allowlist::parse(no_selector).is_err());
+        let stray_key = "rule = \"determinism\"\n";
+        assert!(Allowlist::parse(stray_key).is_err());
+    }
+}

@@ -1,0 +1,97 @@
+//! Rule `determinism` — the hot paths that produce or move numbers
+//! must be bit-reproducible (DESIGN.md §11).
+//!
+//! Scope: `gp/`, `linalg/`, `cluster/wire.rs`, `store/codec.rs` — the
+//! psi/kernel math, the wire encoders and the shard codec. In these
+//! files non-test code may not use `HashMap`/`HashSet` (iteration
+//! order is randomized per-process), wall-clock reads
+//! (`Instant::now`/`SystemTime::now`), or RNG (`Rng`, `thread_rng`,
+//! `rand::`). Ordered containers (`BTreeMap`/`Vec`) and seeds passed
+//! in from the caller are the sanctioned alternatives.
+
+use crate::analyze::source::{find_ident, SourceFile};
+use crate::analyze::Finding;
+
+pub const RULE: &str = "determinism";
+
+/// Files the rule applies to (path prefixes / exact paths, repo-relative).
+fn in_scope(path: &str) -> bool {
+    path.starts_with("rust/src/gp/")
+        || path.starts_with("rust/src/linalg/")
+        || path == "rust/src/cluster/wire.rs"
+        || path == "rust/src/store/codec.rs"
+}
+
+/// (needle, whole-ident?, what to say).
+const BANNED: &[(&str, bool, &str)] = &[
+    ("HashMap", true, "HashMap iteration order is nondeterministic; use BTreeMap or Vec"),
+    ("HashSet", true, "HashSet iteration order is nondeterministic; use BTreeSet or a sorted Vec"),
+    ("Instant::now", false, "wall-clock reads make hot-path output time-dependent"),
+    ("SystemTime::now", false, "wall-clock reads make hot-path output time-dependent"),
+    ("Rng", true, "RNG in a deterministic hot path; thread seeds through from the caller"),
+    ("thread_rng", true, "thread_rng is seeded per-thread; hot paths must be reproducible"),
+    ("rand", true, "RNG in a deterministic hot path; thread seeds through from the caller"),
+];
+
+pub fn check(files: &[SourceFile]) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for f in files.iter().filter(|f| in_scope(&f.path)) {
+        for (idx, line) in f.lines.iter().enumerate() {
+            if line.in_test {
+                continue;
+            }
+            for &(needle, ident, why) in BANNED {
+                let hit = if ident {
+                    find_ident(&line.code, needle).is_some()
+                } else {
+                    line.code.contains(needle)
+                };
+                if hit {
+                    out.push(Finding {
+                        rule: RULE,
+                        file: f.path.clone(),
+                        line: idx + 1,
+                        snippet: line.raw.trim().to_string(),
+                        message: format!("{needle} in a determinism-scoped file: {why}"),
+                    });
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analyze::source::parse;
+
+    fn run(path: &str, src: &str) -> Vec<Finding> {
+        check(&[parse(path, src)])
+    }
+
+    #[test]
+    fn flags_hashmap_clock_and_rng_in_scoped_files() {
+        let src = "use std::collections::HashMap;\nfn f() {\n    let t = std::time::Instant::now();\n    let mut r = Rng::new(0);\n}\n";
+        let hits = run("rust/src/gp/kernel.rs", src);
+        assert_eq!(hits.len(), 3, "{hits:?}");
+        assert_eq!(hits[0].line, 1);
+        assert!(hits[1].message.contains("wall-clock"));
+        assert!(hits[2].message.contains("RNG"));
+    }
+
+    #[test]
+    fn ignores_test_code_and_out_of_scope_files() {
+        let src = "#[cfg(test)]\nmod tests {\n    use crate::util::rng::Rng;\n    fn t() { let _ = Rng::new(7); }\n}\n";
+        assert!(run("rust/src/linalg/matrix.rs", src).is_empty());
+        let shipped = "fn f() { let m: HashMap<u32, u8> = HashMap::new(); }\n";
+        assert!(run("rust/src/obs/trace.rs", shipped).is_empty(), "obs/ is out of scope");
+        assert_eq!(run("rust/src/store/codec.rs", shipped).len(), 2);
+    }
+
+    #[test]
+    fn strings_and_comments_do_not_trigger() {
+        let src = "fn f() {\n    let msg = \"HashMap order\"; // Instant::now here is prose\n}\n";
+        assert!(run("rust/src/cluster/wire.rs", src).is_empty());
+    }
+}

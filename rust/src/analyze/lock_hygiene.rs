@@ -1,0 +1,162 @@
+//! Rule `lock-hygiene` — no lock guard held across blocking socket I/O
+//! (DESIGN.md §14).
+//!
+//! Scope: `model/serve.rs`, `fleet/`, `cluster/` — the code that holds
+//! both registries and sockets. A `MutexGuard`/`RwLockGuard` bound
+//! while the thread performs `read_frame`/`write_frame` or raw socket
+//! calls serializes every peer behind the slowest one and turns a
+//! stalled client into a fleet-wide stall. The rule is a
+//! statement-level heuristic: a `let` statement (joined across rustfmt
+//! chain breaks, up to its `;`) whose initializer contains `.lock()` /
+//! `.read()` / `.write()` (empty parens — the io traits always take a
+//! buffer argument) binds a guard; if a socket call appears before the
+//! guard's enclosing block closes or the guard is `drop`ped, flag it.
+//! Deliberate holds (e.g. a drain sweep calling non-blocking
+//! `shutdown()`) go in analyze-allowlist.toml with a reason.
+
+use crate::analyze::source::SourceFile;
+use crate::analyze::Finding;
+
+pub const RULE: &str = "lock-hygiene";
+
+fn in_scope(path: &str) -> bool {
+    path == "rust/src/model/serve.rs"
+        || path.starts_with("rust/src/fleet/")
+        || path.starts_with("rust/src/cluster/")
+}
+
+const GUARD_CALLS: &[&str] = &[".lock()", ".read()", ".write()"];
+
+const SOCKET_CALLS: &[&str] = &[
+    "read_frame(",
+    "write_frame(",
+    ".write_all(",
+    ".read_exact(",
+    ".flush(",
+    ".shutdown(",
+    "TcpStream::connect",
+];
+
+pub fn check(files: &[SourceFile]) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for f in files.iter().filter(|f| in_scope(&f.path)) {
+        for (idx, line) in f.lines.iter().enumerate() {
+            if line.in_test {
+                continue;
+            }
+            let name = match let_binding(&line.code) {
+                Some(n) => n,
+                None => continue,
+            };
+            // join the whole statement: rustfmt breaks guard chains
+            // like `let g = self\n.inner\n.lock()\n.unwrap_or_else(…);`
+            // across lines, so the guard call is rarely on the `let`
+            // line itself
+            let mut stmt = String::new();
+            let mut end = idx;
+            for (j, l) in f.lines.iter().enumerate().skip(idx) {
+                stmt.push_str(&l.code);
+                stmt.push('\n');
+                end = j;
+                if l.code.contains(';') {
+                    break;
+                }
+            }
+            if !GUARD_CALLS.iter().any(|g| stmt.contains(g)) {
+                continue;
+            }
+            let let_depth = line.depth;
+            let drop_call = format!("drop({name})");
+            for later in &f.lines[end + 1..] {
+                if later.depth < let_depth || later.code.contains(&drop_call) {
+                    break; // guard scope ended
+                }
+                if let Some(call) = SOCKET_CALLS.iter().find(|c| later.code.contains(**c)) {
+                    out.push(Finding {
+                        rule: RULE,
+                        file: f.path.clone(),
+                        line: idx + 1,
+                        snippet: later.raw.trim().to_string(),
+                        message: format!(
+                            "guard `{name}` is live across `{}` — drop it (or scope it) before \
+                             blocking I/O, or justify the hold in analyze-allowlist.toml",
+                            call.trim_start_matches('.').trim_end_matches('(')
+                        ),
+                    });
+                    break; // one finding per guard
+                }
+            }
+        }
+    }
+    out
+}
+
+/// If the line starts a `let` statement, return the binding's name.
+/// Whether the statement binds a *guard* is decided by the caller on
+/// the joined statement text.
+fn let_binding(code: &str) -> Option<String> {
+    let after_let = code.trim_start().strip_prefix("let ")?;
+    let pat = after_let.strip_prefix("mut ").unwrap_or(after_let);
+    let name: String = pat
+        .chars()
+        .take_while(|c| c.is_ascii_alphanumeric() || *c == '_')
+        .collect();
+    if name.is_empty() {
+        None
+    } else {
+        Some(name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analyze::source::parse;
+
+    fn run(src: &str) -> Vec<Finding> {
+        check(&[parse("rust/src/model/serve.rs", src)])
+    }
+
+    #[test]
+    fn guard_across_write_frame_is_flagged() {
+        let src = "fn h() {\n    let g = reg.lock().unwrap_or_else(std::sync::PoisonError::into_inner);\n    g.insert(id);\n    write_frame(&mut sock, &frame)?;\n}\n";
+        let hits = run(src);
+        assert_eq!(hits.len(), 1, "{hits:?}");
+        assert_eq!(hits[0].line, 2, "span anchors on the guard binding");
+        assert!(hits[0].message.contains("write_frame"));
+    }
+
+    #[test]
+    fn multiline_chain_bindings_are_guards_too() {
+        // rustfmt breaks long guard chains — the repo's canonical form
+        let src = "fn h() {\n    let conns = registry\n        .lock()\n        .unwrap_or_else(std::sync::PoisonError::into_inner);\n    for conn in conns.values() {\n        let _ = conn.shutdown(std::net::Shutdown::Both);\n    }\n}\n";
+        let hits = run(src);
+        assert_eq!(hits.len(), 1, "{hits:?}");
+        assert_eq!(hits[0].line, 2, "span anchors on the `let` line");
+        assert!(hits[0].message.contains("shutdown"));
+        assert!(hits[0].snippet.contains("conn.shutdown"));
+    }
+
+    #[test]
+    fn dropped_or_scoped_guards_pass() {
+        let dropped = "fn h() {\n    let g = reg.lock().unwrap_or_else(std::sync::PoisonError::into_inner);\n    g.insert(id);\n    drop(g);\n    write_frame(&mut sock, &frame)?;\n}\n";
+        assert!(run(dropped).is_empty());
+        let scoped = "fn h() {\n    {\n        let g = reg.lock().unwrap_or_else(std::sync::PoisonError::into_inner);\n        g.insert(id);\n    }\n    sock.write_all(&bytes)?;\n}\n";
+        assert!(run(scoped).is_empty());
+    }
+
+    #[test]
+    fn io_trait_reads_are_not_guards() {
+        // .read(&mut buf) has an argument, so it is io::Read, not RwLock
+        let src = "fn h() {\n    let n = sock.read(&mut buf)?;\n    sock.write_all(&buf[..n])?;\n}\n";
+        assert!(run(src).is_empty());
+        let shipped = "fn h() {\n    let g = slot.read();\n    sock.flush()?;\n}\n";
+        assert_eq!(run(shipped).len(), 1, "empty-paren .read() is a guard");
+    }
+
+    #[test]
+    fn out_of_scope_files_are_ignored() {
+        let src = "fn h() {\n    let g = reg.lock().unwrap_or_else(std::sync::PoisonError::into_inner);\n    write_frame(&mut sock, &frame)?;\n}\n";
+        assert!(check(&[parse("rust/src/util/timer.rs", src)]).is_empty());
+    }
+}

@@ -1,0 +1,262 @@
+//! `gparml analyze` — the repo-invariant lint engine (DESIGN.md §14).
+//!
+//! A dependency-free, token/line-level static-analysis pass over the
+//! repo's own Rust sources. It enforces the contracts the runtime
+//! tests can only sample: determinism of the hot paths (DESIGN.md
+//! §11), panic-freedom of the serve/fleet/cluster request paths, wire
+//! encode/decode totality and version agreement with DESIGN.md §6,
+//! `// SAFETY:` discipline around unsafe blocks, and no lock guard
+//! held across socket I/O. Violations fail the run (and the blocking
+//! CI job) unless justified in the committed `analyze-allowlist.toml`.
+//!
+//! ```sh
+//! gparml analyze                 # human-readable report, exit 1 on findings
+//! gparml analyze --json          # machine-readable report (CI artifact)
+//! gparml analyze --allowlist F   # explicit allowlist path
+//! gparml analyze --root DIR      # explicit repo root (default: auto-detect)
+//! ```
+
+pub mod allowlist;
+pub mod determinism;
+pub mod lock_hygiene;
+pub mod panic_freedom;
+pub mod source;
+pub mod unsafe_hygiene;
+pub mod wire_conformance;
+
+use crate::util::cli::Args;
+use crate::util::json::{obj, Json};
+use allowlist::Allowlist;
+use anyhow::{bail, Context, Result};
+use source::SourceFile;
+use std::path::{Path, PathBuf};
+
+/// All rule ids, in report order.
+pub const RULE_IDS: &[&str] = &[
+    determinism::RULE,
+    panic_freedom::RULE,
+    wire_conformance::RULE,
+    unsafe_hygiene::RULE,
+    lock_hygiene::RULE,
+];
+
+/// One violation.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    /// Stable rule id (kebab-case, one per rule module).
+    pub rule: &'static str,
+    /// Repo-relative path with forward slashes.
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// The offending line, trimmed (allowlist `contains` matches this).
+    pub snippet: String,
+    pub message: String,
+}
+
+/// The result of a full repo pass.
+#[derive(Debug)]
+pub struct Report {
+    /// Unallowed findings — any entry here fails the run.
+    pub findings: Vec<Finding>,
+    /// Findings matched by an allowlist entry, with the entry's reason.
+    pub allowed: Vec<(Finding, String)>,
+    /// Allowlist entries that matched nothing (stale debt — reported
+    /// so the allowlist shrinks instead of accreting).
+    pub unused_allows: Vec<String>,
+    /// Number of source files analysed.
+    pub files: usize,
+}
+
+/// Run every rule over the repo rooted at `root` and partition the
+/// findings against `allowlist`.
+pub fn analyze_repo(root: &Path, allowlist: &Allowlist) -> Result<Report> {
+    let src_root = root.join("rust").join("src");
+    let mut paths = Vec::new();
+    walk(&src_root, &mut paths)
+        .with_context(|| format!("walking {}", src_root.display()))?;
+    paths.sort();
+
+    let mut files = Vec::with_capacity(paths.len());
+    for p in &paths {
+        let text = std::fs::read_to_string(p)
+            .with_context(|| format!("reading {}", p.display()))?;
+        let rel = p
+            .strip_prefix(root)
+            .unwrap_or(p)
+            .to_string_lossy()
+            .replace('\\', "/");
+        files.push(source::parse(&rel, &text));
+    }
+
+    let design_path = root.join("DESIGN.md");
+    let design = std::fs::read_to_string(&design_path).ok();
+
+    let mut all = Vec::new();
+    all.extend(determinism::check(&files));
+    all.extend(panic_freedom::check(&files));
+    all.extend(wire_conformance::check(&files, design.as_deref()));
+    all.extend(unsafe_hygiene::check(&files));
+    all.extend(lock_hygiene::check(&files));
+    all.sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+
+    let mut used = vec![false; allowlist.allows.len()];
+    let mut findings = Vec::new();
+    let mut allowed = Vec::new();
+    for f in all {
+        match allowlist.matches(&f) {
+            Some(i) => {
+                used[i] = true;
+                allowed.push((f, allowlist.allows[i].reason.clone()));
+            }
+            None => findings.push(f),
+        }
+    }
+    let unused_allows = allowlist
+        .allows
+        .iter()
+        .zip(&used)
+        .filter(|(_, u)| !**u)
+        .map(|(a, _)| format!("{} in {}", a.rule, a.file))
+        .collect();
+
+    Ok(Report {
+        findings,
+        allowed,
+        unused_allows,
+        files: files.len(),
+    })
+}
+
+/// Recursively collect `.rs` files under `dir` (sorted by the caller;
+/// `read_dir` order is platform-dependent).
+fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.is_dir() {
+            walk(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Locate the repo root: `--root`, else cwd or its parents (the root
+/// is the directory containing `rust/src`).
+fn find_root(args: &Args) -> Result<PathBuf> {
+    if let Some(r) = args.get("root") {
+        return Ok(PathBuf::from(r));
+    }
+    let mut dir = std::env::current_dir().context("reading current dir")?;
+    loop {
+        if dir.join("rust").join("src").is_dir() {
+            return Ok(dir);
+        }
+        if !dir.pop() {
+            bail!("no repo root found (no rust/src above the current dir); pass --root DIR");
+        }
+    }
+}
+
+impl Report {
+    pub fn to_json(&self) -> Json {
+        let finding_json = |f: &Finding| {
+            obj(vec![
+                ("rule", Json::Str(f.rule.to_string())),
+                ("file", Json::Str(f.file.clone())),
+                ("line", Json::Num(f.line as f64)),
+                ("snippet", Json::Str(f.snippet.clone())),
+                ("message", Json::Str(f.message.clone())),
+            ])
+        };
+        obj(vec![
+            ("files", Json::Num(self.files as f64)),
+            (
+                "rules",
+                Json::Arr(
+                    RULE_IDS
+                        .iter()
+                        .map(|r| Json::Str(r.to_string()))
+                        .collect(),
+                ),
+            ),
+            (
+                "findings",
+                Json::Arr(self.findings.iter().map(finding_json).collect()),
+            ),
+            (
+                "allowed",
+                Json::Arr(
+                    self.allowed
+                        .iter()
+                        .map(|(f, reason)| {
+                            let mut j = finding_json(f);
+                            if let Json::Obj(m) = &mut j {
+                                m.insert("reason".to_string(), Json::Str(reason.clone()));
+                            }
+                            j
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "unused_allows",
+                Json::Arr(
+                    self.unused_allows
+                        .iter()
+                        .map(|s| Json::Str(s.clone()))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// CLI entry point (`gparml analyze`).
+pub fn run_cli(args: &Args) -> Result<()> {
+    let root = find_root(args)?;
+    let allowlist = match args.get("allowlist") {
+        Some(p) => Allowlist::load(Path::new(p))?,
+        None => {
+            let default = root.join("analyze-allowlist.toml");
+            if default.exists() {
+                Allowlist::load(&default)?
+            } else {
+                Allowlist::default()
+            }
+        }
+    };
+    let report = analyze_repo(&root, &allowlist)?;
+
+    if args.has("json") {
+        println!("{}", report.to_json().to_string());
+    } else {
+        for (f, reason) in &report.allowed {
+            println!("{}:{}: [{}] allowed: {}", f.file, f.line, f.rule, reason);
+        }
+        for u in &report.unused_allows {
+            println!("note: unused allowlist entry: {u}");
+        }
+        for f in &report.findings {
+            println!("{}:{}: [{}] {}", f.file, f.line, f.rule, f.message);
+            println!("    {}", f.snippet);
+        }
+        println!(
+            "analyze: {} file(s), {} finding(s), {} allowed, {} unused allow(s)",
+            report.files,
+            report.findings.len(),
+            report.allowed.len(),
+            report.unused_allows.len()
+        );
+    }
+
+    if !report.findings.is_empty() {
+        bail!(
+            "analyze found {} unallowed violation(s); fix them or justify each in \
+             analyze-allowlist.toml",
+            report.findings.len()
+        );
+    }
+    Ok(())
+}

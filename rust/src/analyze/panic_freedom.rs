@@ -1,0 +1,91 @@
+//! Rule `panic-freedom` — the request-handling paths must degrade to
+//! `Err`, never abort a connection thread (DESIGN.md §14).
+//!
+//! Scope: `model/serve.rs`, `fleet/`, and the cluster transport
+//! (`cluster/wire.rs`, `cluster/node.rs`, `cluster/tcp.rs`) — every
+//! thread that holds a socket or a registry entry for a remote peer.
+//! Non-test code there may not call `.unwrap()`/`.expect(` or invoke
+//! `panic!`/`todo!`/`unimplemented!`: a panic in a connection thread
+//! poisons shared locks and silently drops the peer. Poisoned-lock
+//! recovery is `unwrap_or_else(PoisonError::into_inner)` (which this
+//! rule deliberately does not match), not `.expect("poisoned")`.
+
+use crate::analyze::source::SourceFile;
+use crate::analyze::Finding;
+
+pub const RULE: &str = "panic-freedom";
+
+fn in_scope(path: &str) -> bool {
+    path == "rust/src/model/serve.rs"
+        || path.starts_with("rust/src/fleet/")
+        || path == "rust/src/cluster/wire.rs"
+        || path == "rust/src/cluster/node.rs"
+        || path == "rust/src/cluster/tcp.rs"
+}
+
+/// Exact-substring needles. `.unwrap()` with the parens, so
+/// `unwrap_or_else`/`unwrap_or_default` do not match; `.expect(` with
+/// the dot, so `expect_model_info(`/`expect_err(` do not match.
+const BANNED: &[(&str, &str)] = &[
+    (".unwrap()", "use ? / match / unwrap_or_else(PoisonError::into_inner)"),
+    (".expect(", "use ? / match / unwrap_or_else(PoisonError::into_inner)"),
+    ("panic!(", "return Err via bail! so the peer sees an error reply"),
+    ("todo!(", "request paths must not ship placeholders"),
+    ("unimplemented!(", "request paths must not ship placeholders"),
+];
+
+pub fn check(files: &[SourceFile]) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for f in files.iter().filter(|f| in_scope(&f.path)) {
+        for (idx, line) in f.lines.iter().enumerate() {
+            if line.in_test {
+                continue;
+            }
+            for &(needle, fix) in BANNED {
+                if line.code.contains(needle) {
+                    out.push(Finding {
+                        rule: RULE,
+                        file: f.path.clone(),
+                        line: idx + 1,
+                        snippet: line.raw.trim().to_string(),
+                        message: format!("{needle} in a request path: {fix}"),
+                    });
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analyze::source::parse;
+
+    fn run(path: &str, src: &str) -> Vec<Finding> {
+        check(&[parse(path, src)])
+    }
+
+    #[test]
+    fn flags_every_banned_form_in_request_paths() {
+        let src = "fn handler() {\n    let g = m.lock().unwrap();\n    let v = o.expect(\"present\");\n    panic!(\"boom\");\n    todo!()\n}\n";
+        let hits = run("rust/src/fleet/lb.rs", src);
+        assert_eq!(hits.len(), 4, "{hits:?}");
+        let src2 = "fn h() { todo!(); unimplemented!(); }\n";
+        assert_eq!(run("rust/src/model/serve.rs", src2).len(), 2);
+    }
+
+    #[test]
+    fn sanctioned_recovery_forms_do_not_match() {
+        let src = "fn h() {\n    let g = m.lock().unwrap_or_else(std::sync::PoisonError::into_inner);\n    let v = o.unwrap_or_default();\n    let i = c.expect_model_info()?;\n    let e = r.expect_err; // field, not a call\n}\n";
+        assert!(run("rust/src/cluster/wire.rs", src).is_empty());
+    }
+
+    #[test]
+    fn test_code_and_out_of_scope_files_are_ignored() {
+        let src = "#[cfg(test)]\nmod tests {\n    fn t() { x.unwrap(); }\n}\n";
+        assert!(run("rust/src/fleet/control.rs", src).is_empty());
+        let shipped = "fn f() { x.unwrap(); }\n";
+        assert!(run("rust/src/util/cli.rs", shipped).is_empty(), "util/ is out of scope");
+    }
+}

@@ -1,0 +1,339 @@
+//! Line-oriented Rust source model for the analyze rules
+//! (DESIGN.md §14).
+//!
+//! The rules are token/line-level, not AST-level, so the only lexing
+//! the engine needs is the part that prevents false positives: string
+//! and char literal *contents* are blanked (a log message mentioning
+//! `unwrap()` is not a violation), comments are stripped from the
+//! `code` view (but kept in `raw`, where the unsafe-hygiene rule looks
+//! for `// SAFETY:`), brace depth is tracked per line (scope tracking
+//! for the lock-hygiene rule), and `#[cfg(test)]` regions are marked
+//! so every rule can skip test code — the contracts cover shipped
+//! paths, and tests are *supposed* to unwrap.
+
+/// One analysed line of a source file.
+#[derive(Debug, Clone)]
+pub struct Line {
+    /// The original line text, comments and all (the unsafe-hygiene
+    /// rule reads `// SAFETY:` markers from here).
+    pub raw: String,
+    /// The code view: comments removed, string/char literal contents
+    /// replaced with spaces (delimiters kept), everything else intact.
+    pub code: String,
+    /// True inside a `#[cfg(test)]` item (attribute line through the
+    /// closing brace of the block it gates).
+    pub in_test: bool,
+    /// Brace depth at the START of the line.
+    pub depth: usize,
+}
+
+/// A parsed source file: repo-relative path + analysed lines.
+#[derive(Debug)]
+pub struct SourceFile {
+    /// Repo-relative path with forward slashes (span reporting).
+    pub path: String,
+    pub lines: Vec<Line>,
+}
+
+/// Lexer state carried across lines.
+enum Mode {
+    Code,
+    /// Nested block comment depth (Rust block comments nest).
+    BlockComment(usize),
+    /// Inside a normal `"` string (they may span lines).
+    Str,
+    /// Inside a raw string with this many `#` marks.
+    RawStr(usize),
+}
+
+/// Parse `text` into the line model. `path` should be repo-relative
+/// with forward slashes; it is stored verbatim for span reporting.
+pub fn parse(path: &str, text: &str) -> SourceFile {
+    let mut mode = Mode::Code;
+    let mut depth: usize = 0;
+    // test-region tracking: a `#[cfg(test)]` attribute arms `pending`;
+    // the next opening brace starts the region, which runs until depth
+    // returns to the level the region opened at.
+    let mut pending_test = false;
+    let mut test_start_depth: Option<usize> = None;
+    let mut lines = Vec::new();
+
+    for raw in text.lines() {
+        let start_depth = depth;
+        let chars: Vec<char> = raw.chars().collect();
+        let mut code = String::with_capacity(raw.len());
+        let mut i = 0;
+        while i < chars.len() {
+            match mode {
+                Mode::BlockComment(d) => {
+                    if chars[i] == '*' && chars.get(i + 1) == Some(&'/') {
+                        i += 2;
+                        mode = if d == 1 {
+                            Mode::Code
+                        } else {
+                            Mode::BlockComment(d - 1)
+                        };
+                    } else if chars[i] == '/' && chars.get(i + 1) == Some(&'*') {
+                        i += 2;
+                        mode = Mode::BlockComment(d + 1);
+                    } else {
+                        i += 1;
+                    }
+                }
+                Mode::Str => {
+                    match chars[i] {
+                        '\\' => {
+                            code.push(' ');
+                            if i + 1 < chars.len() {
+                                code.push(' ');
+                            }
+                            i += 2;
+                        }
+                        '"' => {
+                            code.push('"');
+                            i += 1;
+                            mode = Mode::Code;
+                        }
+                        _ => {
+                            code.push(' ');
+                            i += 1;
+                        }
+                    }
+                }
+                Mode::RawStr(hashes) => {
+                    if chars[i] == '"' && closes_raw(&chars[i + 1..], hashes) {
+                        code.push('"');
+                        for _ in 0..hashes {
+                            code.push(' ');
+                        }
+                        i += 1 + hashes;
+                        mode = Mode::Code;
+                    } else {
+                        code.push(' ');
+                        i += 1;
+                    }
+                }
+                Mode::Code => {
+                    let c = chars[i];
+                    if c == '/' && chars.get(i + 1) == Some(&'/') {
+                        // line comment: the rest of the line is raw-only
+                        break;
+                    }
+                    if c == '/' && chars.get(i + 1) == Some(&'*') {
+                        i += 2;
+                        mode = Mode::BlockComment(1);
+                        continue;
+                    }
+                    if let Some((hashes, consumed)) = raw_string_open(&chars[i..]) {
+                        for _ in 0..consumed - 1 {
+                            code.push(' ');
+                        }
+                        code.push('"');
+                        i += consumed;
+                        mode = Mode::RawStr(hashes);
+                        continue;
+                    }
+                    match c {
+                        '"' => {
+                            code.push('"');
+                            i += 1;
+                            mode = Mode::Str;
+                        }
+                        '\'' => {
+                            // char literal vs lifetime: 'x' / '\n' are
+                            // literals (blank them — '{' must not skew
+                            // brace depth); anything else is a lifetime
+                            if chars.get(i + 1) == Some(&'\\') {
+                                let mut j = i + 2;
+                                while j < chars.len() && chars[j] != '\'' {
+                                    j += 1;
+                                }
+                                code.push_str("' '");
+                                i = (j + 1).min(chars.len());
+                            } else if chars.get(i + 2) == Some(&'\'') {
+                                code.push_str("' '");
+                                i += 3;
+                            } else {
+                                code.push('\'');
+                                i += 1;
+                            }
+                        }
+                        '{' => {
+                            depth += 1;
+                            code.push('{');
+                            i += 1;
+                        }
+                        '}' => {
+                            depth = depth.saturating_sub(1);
+                            code.push('}');
+                            i += 1;
+                        }
+                        c => {
+                            code.push(c);
+                            i += 1;
+                        }
+                    }
+                }
+            }
+        }
+
+        // test-region bookkeeping: the attribute line, the block it
+        // gates and the closing brace are all `in_test`
+        let mut in_test = test_start_depth.is_some();
+        if test_start_depth.is_none() {
+            if code.contains("#[cfg(test)]") {
+                pending_test = true;
+                in_test = true;
+            }
+            if pending_test {
+                in_test = true;
+                if depth > start_depth {
+                    test_start_depth = Some(start_depth);
+                    pending_test = false;
+                }
+            }
+        } else if let Some(sd) = test_start_depth {
+            if depth <= sd {
+                // this line closed the region (its closing brace is
+                // still test code); the next line is shipped code again
+                test_start_depth = None;
+            }
+        }
+
+        lines.push(Line {
+            raw: raw.to_string(),
+            code,
+            in_test,
+            depth: start_depth,
+        });
+    }
+
+    SourceFile {
+        path: path.to_string(),
+        lines,
+    }
+}
+
+/// Does `rest` (the chars after a `"` inside a raw string) close a raw
+/// string with `hashes` marks?
+fn closes_raw(rest: &[char], hashes: usize) -> bool {
+    rest.len() >= hashes && rest[..hashes].iter().all(|&c| c == '#')
+}
+
+/// Detect a raw-string opening at the start of `s`: `r"`, `r#"`, `br"`,
+/// `b"` etc. Returns (hash count, chars consumed incl. the quote).
+fn raw_string_open(s: &[char]) -> Option<(usize, usize)> {
+    let mut i = 0;
+    if s.get(i) == Some(&'b') {
+        i += 1;
+    }
+    let raw = s.get(i) == Some(&'r');
+    if raw {
+        i += 1;
+    }
+    if i == 0 {
+        return None; // plain '"' is handled by the Str branch
+    }
+    let mut hashes = 0;
+    while s.get(i + hashes) == Some(&'#') {
+        hashes += 1;
+    }
+    if s.get(i + hashes) == Some(&'"') && (raw || hashes == 0) {
+        // b"..." (hashes == 0, not raw) is a byte string; br#"/r#" raw
+        Some((if raw { hashes } else { 0 }, i + hashes + 1))
+    } else {
+        None
+    }
+}
+
+/// True if `code` contains `token` as a whole identifier (neither
+/// neighbour is an identifier character).
+pub fn has_ident(code: &str, token: &str) -> bool {
+    find_ident(code, token).is_some()
+}
+
+/// Byte offset of the first whole-identifier occurrence of `token`.
+pub fn find_ident(code: &str, token: &str) -> Option<usize> {
+    let bytes = code.as_bytes();
+    let mut from = 0;
+    while let Some(pos) = code[from..].find(token) {
+        let at = from + pos;
+        let before_ok = at == 0 || !is_ident_byte(bytes[at - 1]);
+        let end = at + token.len();
+        let after_ok = end >= bytes.len() || !is_ident_byte(bytes[end]);
+        if before_ok && after_ok {
+            return Some(at);
+        }
+        from = at + 1;
+    }
+    None
+}
+
+fn is_ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strings_and_comments_are_blanked() {
+        let f = parse(
+            "x.rs",
+            "let a = \"unwrap() inside a string\"; // unwrap() in comment\nlet b = 1; /* unwrap()\nstill a comment */ let c = 2;",
+        );
+        assert!(!f.lines[0].code.contains("unwrap"));
+        assert!(f.lines[0].raw.contains("unwrap() in comment"));
+        assert!(!f.lines[1].code.contains("unwrap"));
+        assert!(f.lines[2].code.contains("let c = 2;"));
+        assert!(!f.lines[2].code.contains("still"));
+    }
+
+    #[test]
+    fn raw_strings_and_char_literals_are_blanked() {
+        let f = parse(
+            "x.rs",
+            "let a = r#\"panic!() { } \"#; let b = '{'; let c: &'static str = \"\";",
+        );
+        assert!(!f.lines[0].code.contains("panic"));
+        // the blanked brace literals must not skew depth
+        assert_eq!(f.lines[0].depth, 0);
+        assert!(f.lines[0].code.contains("&'static str"));
+    }
+
+    #[test]
+    fn escaped_quotes_do_not_end_strings() {
+        let f = parse("x.rs", "let a = \"he said \\\"hi\\\" loudly\"; let b = 1;");
+        assert!(f.lines[0].code.contains("let b = 1;"));
+        assert!(!f.lines[0].code.contains("loudly"));
+    }
+
+    #[test]
+    fn cfg_test_regions_are_marked() {
+        let src = "fn shipped() {\n    x.unwrap();\n}\n\n#[cfg(test)]\nmod tests {\n    fn t() {\n        y.unwrap();\n    }\n}\nfn shipped_again() {}\n";
+        let f = parse("x.rs", src);
+        assert!(!f.lines[1].in_test, "shipped code is not test code");
+        assert!(f.lines[4].in_test, "the attribute line is test code");
+        assert!(f.lines[7].in_test, "inside the test mod");
+        assert!(f.lines[9].in_test, "closing brace is test code");
+        assert!(!f.lines[10].in_test, "code after the region is shipped");
+    }
+
+    #[test]
+    fn depth_tracks_braces() {
+        let f = parse("x.rs", "fn a() {\n    if x {\n        y();\n    }\n}\n");
+        assert_eq!(f.lines[0].depth, 0);
+        assert_eq!(f.lines[1].depth, 1);
+        assert_eq!(f.lines[2].depth, 2);
+        assert_eq!(f.lines[4].depth, 1);
+    }
+
+    #[test]
+    fn ident_matching_respects_boundaries() {
+        assert!(has_ident("let m: HashMap<u32, u8>;", "HashMap"));
+        assert!(!has_ident("let m = MyHashMapLike::new();", "HashMap"));
+        assert!(has_ident("Rng::new(7)", "Rng"));
+        assert!(!has_ident("rng_seed", "Rng"));
+    }
+}

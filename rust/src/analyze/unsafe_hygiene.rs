@@ -1,0 +1,95 @@
+//! Rule `unsafe-hygiene` — every `unsafe` block carries a written-down
+//! proof obligation (DESIGN.md §14).
+//!
+//! Scope: the whole crate. An `unsafe` token in non-test code must
+//! have a `SAFETY:` comment either on the same line or in the
+//! contiguous comment block immediately above it. The workspace also
+//! denies `unsafe_code` via `[lints]`; a file that opts back in with
+//! `#![allow(unsafe_code)]` still has to satisfy this rule for each
+//! block it writes.
+
+use crate::analyze::source::{find_ident, SourceFile};
+use crate::analyze::Finding;
+
+pub const RULE: &str = "unsafe-hygiene";
+
+pub fn check(files: &[SourceFile]) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for f in files {
+        for (idx, line) in f.lines.iter().enumerate() {
+            if line.in_test || find_ident(&line.code, "unsafe").is_none() {
+                continue;
+            }
+            // `#![allow(unsafe_code)]` / `forbid(unsafe_code)` attribute
+            // lines mention the lint, not an unsafe block
+            if line.code.contains("unsafe_code") {
+                continue;
+            }
+            if !has_safety_comment(f, idx) {
+                out.push(Finding {
+                    rule: RULE,
+                    file: f.path.clone(),
+                    line: idx + 1,
+                    snippet: line.raw.trim().to_string(),
+                    message: "unsafe without a `// SAFETY:` comment on the line or immediately \
+                              above stating why the invariants hold"
+                        .to_string(),
+                });
+            }
+        }
+    }
+    out
+}
+
+/// SAFETY marker on the line itself or in the contiguous run of
+/// comment/attribute lines directly above.
+fn has_safety_comment(f: &SourceFile, idx: usize) -> bool {
+    if f.lines[idx].raw.contains("SAFETY:") {
+        return true;
+    }
+    for line in f.lines[..idx].iter().rev() {
+        let t = line.raw.trim();
+        let is_annotation = t.starts_with("//") || t.starts_with('#') || t.starts_with("*");
+        if !is_annotation {
+            return false;
+        }
+        if t.contains("SAFETY:") {
+            return true;
+        }
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analyze::source::parse;
+
+    fn run(src: &str) -> Vec<Finding> {
+        check(&[parse("rust/src/util/timer.rs", src)])
+    }
+
+    #[test]
+    fn bare_unsafe_is_flagged() {
+        let hits = run("fn f() {\n    let rc = unsafe { syscall() };\n}\n");
+        assert_eq!(hits.len(), 1, "{hits:?}");
+        assert_eq!(hits[0].line, 2);
+    }
+
+    #[test]
+    fn safety_comment_above_or_inline_passes() {
+        let above = "fn f() {\n    // SAFETY: ts is a valid exclusive reference.\n    // The layout matches the C struct.\n    let rc = unsafe { syscall() };\n}\n";
+        assert!(run(above).is_empty());
+        let gap = "fn f() {\n    // SAFETY: stale — a blank code line breaks the run.\n    let x = 1;\n    let rc = unsafe { syscall() };\n}\n";
+        assert_eq!(run(gap).len(), 1, "comment must be contiguous");
+        let inline = "fn f() { unsafe { syscall() } } // SAFETY: inline proof\n";
+        assert!(run(inline).is_empty());
+    }
+
+    #[test]
+    fn lint_attributes_and_test_code_are_ignored() {
+        assert!(run("#![allow(unsafe_code)]\n").is_empty());
+        let test_src = "#[cfg(test)]\nmod tests {\n    fn t() { unsafe { x() } }\n}\n";
+        assert!(run(test_src).is_empty());
+    }
+}

@@ -1,0 +1,286 @@
+//! Rule `wire-conformance` — the wire protocol stays total and
+//! versioned (DESIGN.md §6, §14).
+//!
+//! Three checks:
+//! 1. every `Frame` enum variant appears in BOTH `encode_payload` and
+//!    `decode_payload` (a variant with no decode arm ships frames the
+//!    peer rejects as "unknown frame kind");
+//! 2. no `match` whose arms dispatch on `Frame::` carries a `_ =>`
+//!    wildcard — a wildcard silently swallows the next frame kind
+//!    instead of forcing the author through every dispatch site;
+//! 3. `wire::VERSION` equals the newest `**vN**` entry in DESIGN.md
+//!    §6's version history, so the doc can't drift from the code.
+
+use crate::analyze::source::{find_ident, SourceFile};
+use crate::analyze::Finding;
+
+pub const RULE: &str = "wire-conformance";
+
+const WIRE: &str = "rust/src/cluster/wire.rs";
+
+pub fn check(files: &[SourceFile], design_md: Option<&str>) -> Vec<Finding> {
+    let mut out = Vec::new();
+    if let Some(wire) = files.iter().find(|f| f.path == WIRE) {
+        check_arms(wire, &mut out);
+        check_version(wire, design_md, &mut out);
+    }
+    for f in files {
+        check_wildcards(f, &mut out);
+    }
+    out
+}
+
+/// Every Frame variant must appear in both encode_payload and
+/// decode_payload.
+fn check_arms(wire: &SourceFile, out: &mut Vec<Finding>) {
+    let variants = frame_variants(wire);
+    let enc = fn_body(wire, "encode_payload");
+    let dec = fn_body(wire, "decode_payload");
+    for (name, line) in &variants {
+        let needle = format!("Frame::{name}");
+        let misses: &[(&str, &Option<String>)] =
+            &[("encode_payload", &enc), ("decode_payload", &dec)];
+        for (fn_name, body) in misses {
+            let present = body.as_deref().is_some_and(|b| b.contains(&needle));
+            if !present {
+                out.push(Finding {
+                    rule: RULE,
+                    file: wire.path.clone(),
+                    line: *line,
+                    snippet: format!("Frame::{name}"),
+                    message: format!("Frame variant {name} has no arm in {fn_name}"),
+                });
+            }
+        }
+    }
+}
+
+/// Variant names of `enum Frame` with their 1-based declaration lines.
+fn frame_variants(wire: &SourceFile) -> Vec<(String, usize)> {
+    let mut out = Vec::new();
+    let start = match wire
+        .lines
+        .iter()
+        .position(|l| find_ident(&l.code, "enum").is_some() && find_ident(&l.code, "Frame").is_some())
+    {
+        Some(i) => i,
+        None => return out,
+    };
+    let enum_depth = wire.lines[start].depth;
+    for (idx, line) in wire.lines.iter().enumerate().skip(start + 1) {
+        // a start-of-line depth back at the enum's own level means the
+        // enum block closed on the previous line
+        if line.depth <= enum_depth {
+            break;
+        }
+        if line.depth != enum_depth + 1 {
+            continue;
+        }
+        let t = line.code.trim();
+        if t.chars().next().is_some_and(|c| c.is_ascii_uppercase()) {
+            let name: String = t
+                .chars()
+                .take_while(|c| c.is_ascii_alphanumeric() || *c == '_')
+                .collect();
+            if !name.is_empty() {
+                out.push((name, idx + 1));
+            }
+        }
+    }
+    out
+}
+
+/// The concatenated `code` text of the named fn's block, if present.
+fn fn_body(file: &SourceFile, name: &str) -> Option<String> {
+    let start = file.lines.iter().position(|l| {
+        find_ident(&l.code, "fn").is_some() && find_ident(&l.code, name).is_some()
+    })?;
+    let fn_depth = file.lines[start].depth;
+    let mut body = String::new();
+    for (i, line) in file.lines.iter().enumerate().skip(start) {
+        if i > start && line.depth <= fn_depth {
+            break; // the fn block closed on the previous line
+        }
+        body.push_str(&line.code);
+        body.push('\n');
+    }
+    Some(body)
+}
+
+/// Flag `_ =>` arms inside matches that dispatch on `Frame::`.
+fn check_wildcards(f: &SourceFile, out: &mut Vec<Finding>) {
+    for (idx, line) in f.lines.iter().enumerate() {
+        if line.in_test || !line.code.trim_start().starts_with("_ =>") {
+            continue;
+        }
+        // nearest preceding line that opened this block
+        let opener = match f.lines[..idx].iter().rposition(|l| l.depth < line.depth) {
+            Some(j) => j,
+            None => continue,
+        };
+        if find_ident(&f.lines[opener].code, "match").is_none() {
+            continue;
+        }
+        // does any arm of that match dispatch on Frame::?
+        let open_depth = f.lines[opener].depth;
+        let mut frame_match = false;
+        for l in &f.lines[opener + 1..] {
+            if l.depth <= open_depth {
+                break; // the match block closed on the previous line
+            }
+            if l.code.contains("Frame::") {
+                frame_match = true;
+                break;
+            }
+        }
+        if frame_match {
+            out.push(Finding {
+                rule: RULE,
+                file: f.path.clone(),
+                line: idx + 1,
+                snippet: line.raw.trim().to_string(),
+                message: "wildcard `_ =>` in a Frame dispatch match swallows new frame kinds; \
+                          name every variant"
+                    .to_string(),
+            });
+        }
+    }
+}
+
+/// wire::VERSION must equal the newest `**vN**` in DESIGN.md §6.
+fn check_version(wire: &SourceFile, design_md: Option<&str>, out: &mut Vec<Finding>) {
+    let (code_version, version_line) = match wire.lines.iter().enumerate().find_map(|(i, l)| {
+        l.code
+            .find("const VERSION")
+            .and_then(|_| trailing_int(&l.code))
+            .map(|v| (v, i + 1))
+    }) {
+        Some(v) => v,
+        None => return,
+    };
+    let design = match design_md {
+        Some(d) => d,
+        None => return,
+    };
+    let doc_version = match newest_doc_version(design) {
+        Some(v) => v,
+        None => {
+            out.push(Finding {
+                rule: RULE,
+                file: wire.path.clone(),
+                line: version_line,
+                snippet: format!("VERSION = {code_version}"),
+                message: "DESIGN.md wire-format section has no **vN** version history entries"
+                    .to_string(),
+            });
+            return;
+        }
+    };
+    if doc_version != code_version {
+        out.push(Finding {
+            rule: RULE,
+            file: wire.path.clone(),
+            line: version_line,
+            snippet: format!("VERSION = {code_version}"),
+            message: format!(
+                "wire::VERSION is {code_version} but DESIGN.md §6's newest history entry is \
+                 **v{doc_version}** — update whichever lags"
+            ),
+        });
+    }
+}
+
+/// Last integer literal on the line (e.g. `pub const VERSION: u16 = 9;`).
+fn trailing_int(code: &str) -> Option<u64> {
+    let digits: String = code
+        .chars()
+        .skip_while(|c| *c != '=')
+        .filter(|c| c.is_ascii_digit())
+        .collect();
+    digits.parse().ok()
+}
+
+/// Max N over `**vN**` markers in the wire-format section of DESIGN.md.
+fn newest_doc_version(design: &str) -> Option<u64> {
+    let mut in_section = false;
+    let mut max = None;
+    for line in design.lines() {
+        if line.starts_with('#') {
+            in_section = line.contains("Wire format");
+            continue;
+        }
+        if !in_section {
+            continue;
+        }
+        let mut rest = line;
+        while let Some(pos) = rest.find("**v") {
+            let tail = &rest[pos + 3..];
+            let digits: String = tail.chars().take_while(|c| c.is_ascii_digit()).collect();
+            if !digits.is_empty() && tail[digits.len()..].starts_with("**") {
+                let v: u64 = digits.parse().ok()?;
+                max = Some(max.map_or(v, |m: u64| m.max(v)));
+            }
+            rest = &rest[pos + 3..];
+        }
+    }
+    max
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analyze::source::parse;
+
+    /// A miniature wire.rs with an enum, encoder and decoder.
+    fn mini_wire(encode_arms: &str, decode_arms: &str, version: u64) -> String {
+        format!(
+            "pub const VERSION: u16 = {version};\npub enum Frame {{\n    Hello {{ worker_id: u32 }},\n    Ping,\n    Pong,\n}}\nimpl Frame {{\n    fn encode_payload(&self) {{\n        match self {{\n{encode_arms}\n        }}\n    }}\n    fn decode_payload(kind: u8) {{\n        match kind {{\n{decode_arms}\n        }}\n    }}\n}}\n"
+        )
+    }
+
+    const DESIGN: &str = "### Wire format\n\nhistory: **v1** first, **v2** newest.\n\n### Next section\n**v9** (not wire history)\n";
+
+    #[test]
+    fn complete_enum_and_matching_version_pass() {
+        let src = mini_wire(
+            "            Frame::Hello { .. } => {}\n            Frame::Ping | Frame::Pong => {}",
+            "            1 => Frame::Hello { worker_id: 0 },\n            6 => Frame::Ping,\n            7 => Frame::Pong,\n            k => bail!(\"unknown {k}\"),",
+            2,
+        );
+        let hits = check(&[parse("rust/src/cluster/wire.rs", &src)], Some(DESIGN));
+        assert!(hits.is_empty(), "{hits:?}");
+    }
+
+    #[test]
+    fn missing_decode_arm_is_flagged() {
+        let src = mini_wire(
+            "            Frame::Hello { .. } => {}\n            Frame::Ping | Frame::Pong => {}",
+            "            1 => Frame::Hello { worker_id: 0 },\n            6 => Frame::Ping,",
+            2,
+        );
+        let hits = check(&[parse("rust/src/cluster/wire.rs", &src)], Some(DESIGN));
+        assert_eq!(hits.len(), 1, "{hits:?}");
+        assert!(hits[0].message.contains("Pong"));
+        assert!(hits[0].message.contains("decode_payload"));
+    }
+
+    #[test]
+    fn wildcard_in_frame_dispatch_is_flagged_anywhere() {
+        let src = "fn dispatch(f: Frame) {\n    match f {\n        Frame::Ping => pong(),\n        _ => {}\n    }\n    match n {\n        1 => a(),\n        _ => b(),\n    }\n}\n";
+        let hits = check(&[parse("rust/src/cluster/node.rs", src)], None);
+        assert_eq!(hits.len(), 1, "only the Frame match is flagged: {hits:?}");
+        assert_eq!(hits[0].line, 4);
+    }
+
+    #[test]
+    fn version_drift_against_design_is_flagged() {
+        let src = mini_wire(
+            "            Frame::Hello { .. } => {}\n            Frame::Ping | Frame::Pong => {}",
+            "            1 => Frame::Hello { worker_id: 0 },\n            6 => Frame::Ping,\n            7 => Frame::Pong,",
+            3,
+        );
+        let hits = check(&[parse("rust/src/cluster/wire.rs", &src)], Some(DESIGN));
+        assert_eq!(hits.len(), 1, "{hits:?}");
+        assert!(hits[0].message.contains("**v2**"));
+    }
+}

@@ -466,15 +466,18 @@ impl<'a> Dec<'a> {
     }
 
     pub fn u32(&mut self) -> Result<u32> {
-        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
     }
 
     pub fn u64(&mut self) -> Result<u64> {
-        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
     }
 
     pub fn f64(&mut self) -> Result<f64> {
-        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+        let b = self.take(8)?;
+        Ok(f64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
     }
 
     pub fn str(&mut self) -> Result<String> {
@@ -1472,6 +1475,73 @@ mod tests {
         }
         // clean EOF between frames is not an error
         assert!(read_frame(&mut &[][..]).unwrap().is_none());
+    }
+
+    /// Wire v6/v8: the `ShardRef`-bearing `Init` and the fleet
+    /// `Register` frame reject truncation at every cut, and an
+    /// over-length payload (header claiming more bytes than the fields
+    /// consume) fails on the unread tail instead of being ignored.
+    #[test]
+    fn shard_ref_and_register_frames_reject_truncation_and_overlength() {
+        let mut rng = Rng::new(11);
+        let init = Init {
+            artifact: ArtifactConfig {
+                name: "cut".into(),
+                m: 4,
+                q: 2,
+                d: 2,
+                cap: 16,
+                block_n: 4,
+                entries: [("shard_stats".to_string(), "s.hlo.txt".to_string())]
+                    .into_iter()
+                    .collect(),
+            },
+            lvm: false,
+            local_lr: 0.01,
+            min_xvar: 1e-6,
+            psi_cache: true,
+            math_mode: MathMode::Strict,
+            fill_threads: 1,
+            shard: ShardData {
+                xmu: rand_mat(&mut rng, 3, 2),
+                xvar: rand_mat(&mut rng, 3, 2),
+                y: rand_mat(&mut rng, 3, 2),
+                kl_weight: 1.0,
+            },
+            shard_ref: Some(ShardRef {
+                path: "store/shard_00007.gpds".into(),
+                checksum: 0x0123_4567_89AB_CDEF,
+                rows: 3,
+                x_cols: 2,
+                kl_weight: 0.5,
+            }),
+        };
+        let register = Frame::Request {
+            trace_id: 42,
+            req: Box::new(Request::Register {
+                addr: "10.0.0.7:9100".into(),
+                model_version: 3,
+            }),
+        };
+        for frame in [Frame::Init(Box::new(init)), register] {
+            let bytes = encode_frame(&frame).unwrap();
+            assert!(bytes.len() > HEADER_LEN);
+            for cut in 1..bytes.len() {
+                let err = decode_frame(&bytes[..cut]).unwrap_err();
+                let msg = format!("{err:#}");
+                assert!(
+                    msg.contains("truncated") || msg.contains("header"),
+                    "cut at {cut}: unhelpful error {msg}"
+                );
+            }
+            // over-length: claim and supply 3 extra payload bytes
+            let mut long = bytes.clone();
+            let claimed = (long.len() - HEADER_LEN + 3) as u32;
+            long[7..11].copy_from_slice(&claimed.to_le_bytes());
+            long.extend_from_slice(&[0xAB, 0xCD, 0xEF]);
+            let msg = format!("{:#}", decode_frame(&long).unwrap_err());
+            assert!(msg.contains("trailing"), "{msg}");
+        }
     }
 
     #[test]

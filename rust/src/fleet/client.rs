@@ -145,14 +145,14 @@ fn beat(
     advertise: &str,
     version: u64,
 ) -> Result<()> {
-    if client.is_none() {
-        let mut fresh = ControlClient::with_opts(control_addr, ConnectOpts::default().no_retry())?;
-        fresh.register(advertise, version)?;
-        *client = Some(fresh);
-        return Ok(());
+    match client {
+        None => {
+            let mut fresh =
+                ControlClient::with_opts(control_addr, ConnectOpts::default().no_retry())?;
+            fresh.register(advertise, version)?;
+            *client = Some(fresh);
+            Ok(())
+        }
+        Some(c) => c.heartbeat(advertise, version),
     }
-    client
-        .as_mut()
-        .expect("just checked for None")
-        .heartbeat(advertise, version)
 }

@@ -104,7 +104,10 @@ impl FleetRegistry {
     /// Explicit join (or upsert) of `addr`, tied to control connection
     /// `conn_id`.
     pub fn register(&self, addr: &str, model_version: u64, conn_id: u64, now: Instant) {
-        let mut g = self.inner.lock().expect("fleet registry poisoned");
+        let mut g = self
+            .inner
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner);
         let prior = g.insert(
             addr.to_string(),
             Member {
@@ -125,7 +128,10 @@ impl FleetRegistry {
     /// that reconnect after a control restart or connection drop
     /// rejoin without special-casing.
     pub fn heartbeat(&self, addr: &str, model_version: u64, conn_id: u64, now: Instant) {
-        let mut g = self.inner.lock().expect("fleet registry poisoned");
+        let mut g = self
+            .inner
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner);
         match g.get_mut(addr) {
             Some(member) => {
                 member.model_version = model_version;
@@ -154,7 +160,10 @@ impl FleetRegistry {
 
     /// Clean leave; unknown addresses are ignored (idempotent).
     pub fn deregister(&self, addr: &str) {
-        let mut g = self.inner.lock().expect("fleet registry poisoned");
+        let mut g = self
+            .inner
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner);
         if g.remove(addr).is_some() {
             self.deregisters.inc();
             eprintln!("[gparml-control] replica {addr} left");
@@ -165,7 +174,10 @@ impl FleetRegistry {
     /// A control connection died: drop every member registered through
     /// it (implicit deregister).
     pub fn drop_conn(&self, conn_id: u64) {
-        let mut g = self.inner.lock().expect("fleet registry poisoned");
+        let mut g = self
+            .inner
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner);
         let doomed: Vec<String> = g
             .iter()
             .filter(|(_, m)| m.conn_id == conn_id)
@@ -182,7 +194,10 @@ impl FleetRegistry {
     /// Evict members not heard from within `window`; returns the
     /// evicted addresses (logged by callers).
     pub fn evict_stale(&self, now: Instant, window: Duration) -> Vec<String> {
-        let mut g = self.inner.lock().expect("fleet registry poisoned");
+        let mut g = self
+            .inner
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner);
         let doomed: Vec<String> = g
             .iter()
             .filter(|(_, m)| now.saturating_duration_since(m.last_seen) > window)
@@ -200,7 +215,10 @@ impl FleetRegistry {
     /// The live member set, sorted by address (BTreeMap order — equal
     /// registries produce equal snapshots).
     pub fn snapshot(&self, now: Instant) -> Vec<ReplicaInfo> {
-        let g = self.inner.lock().expect("fleet registry poisoned");
+        let g = self
+            .inner
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner);
         g.iter()
             .map(|(addr, m)| ReplicaInfo {
                 addr: addr.clone(),

@@ -151,7 +151,12 @@ impl Pool {
     /// and fails over, so clients stay whole either way. New addresses
     /// join healthy; vanished ones are dropped.
     fn set_members(&self, infos: &[(String, u64)]) {
-        let mut members = self.members.write().expect("lb pool poisoned");
+        // the member Vec stays coherent even if a forwarder panicked
+        // (Arc swaps only) — recover instead of poisoning the fleet
+        let mut members = self
+            .members
+            .write()
+            .unwrap_or_else(std::sync::PoisonError::into_inner);
         let mut next = Vec::with_capacity(infos.len());
         for (addr, version) in infos {
             match members.iter().find(|b| &b.addr == addr) {
@@ -186,7 +191,10 @@ impl Pool {
     /// `exclude` address (the one that just failed), least in-flight,
     /// round-robin among ties.
     fn pick(&self, exclude: Option<&str>) -> Option<Arc<Backend>> {
-        let members = self.members.read().expect("lb pool poisoned");
+        let members = self
+            .members
+            .read()
+            .unwrap_or_else(std::sync::PoisonError::into_inner);
         let eligible: Vec<&Arc<Backend>> = members
             .iter()
             .filter(|b| {
@@ -212,11 +220,17 @@ impl Pool {
 
     /// The current member set in upstream (address-sorted) order.
     fn snapshot(&self) -> Vec<Arc<Backend>> {
-        self.members.read().expect("lb pool poisoned").clone()
+        self.members
+            .read()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+            .clone()
     }
 
     fn update_gauges(&self) {
-        let members = self.members.read().expect("lb pool poisoned");
+        let members = self
+            .members
+            .read()
+            .unwrap_or_else(std::sync::PoisonError::into_inner);
         self.backends_gauge.set(members.len() as u64);
         let healthy: Vec<&Arc<Backend>> = members
             .iter()
@@ -326,7 +340,7 @@ pub fn run_lb(listener: &TcpListener, upstream: &Upstream, opts: &LbOptions) -> 
                     if let Ok(clone) = stream.try_clone() {
                         registry
                             .lock()
-                            .expect("conn registry poisoned")
+                            .unwrap_or_else(std::sync::PoisonError::into_inner)
                             .insert(conn_id, clone);
                     }
                     let (pool, counters, registry, metrics) =
@@ -341,7 +355,7 @@ pub fn run_lb(listener: &TcpListener, upstream: &Upstream, opts: &LbOptions) -> 
                         }
                         registry
                             .lock()
-                            .expect("conn registry poisoned")
+                            .unwrap_or_else(std::sync::PoisonError::into_inner)
                             .remove(&conn_id);
                         counters.active_conns.fetch_sub(1, Ordering::AcqRel);
                     });
@@ -363,7 +377,12 @@ pub fn run_lb(listener: &TcpListener, upstream: &Upstream, opts: &LbOptions) -> 
             std::thread::sleep(Duration::from_millis(5));
             waited_ms += 5;
             if waited_ms == DRAIN_GRACE_MS {
-                let conns = registry.lock().expect("conn registry poisoned");
+                // the guard is deliberately live across shutdown() (a
+                // non-blocking fd call) so handlers cannot deregister
+                // mid-sweep; justified in analyze-allowlist.toml
+                let conns = registry
+                    .lock()
+                    .unwrap_or_else(std::sync::PoisonError::into_inner);
                 if !conns.is_empty() {
                     eprintln!(
                         "[gparml-lb] force-closing {} lingering connection(s) after the \
@@ -465,13 +484,11 @@ fn poll_control(
     addr: &str,
     connect: &ConnectOpts,
 ) -> Result<Vec<(String, u64)>> {
-    if control.is_none() {
-        *control = Some(ControlClient::with_opts(addr, connect.clone().no_retry())?);
-    }
-    let replicas = control
-        .as_mut()
-        .expect("just checked for None")
-        .fleet_info()?;
+    let client = match control {
+        Some(client) => client,
+        None => control.insert(ControlClient::with_opts(addr, connect.clone().no_retry())?),
+    };
+    let replicas = client.fleet_info()?;
     Ok(replicas
         .into_iter()
         .map(|r| (r.addr, r.model_version))
@@ -485,11 +502,13 @@ fn probe(
     addr: &str,
     connect: &ConnectOpts,
 ) -> Result<ServedModelInfo> {
-    if !probes.contains_key(addr) {
-        let client = ServeClient::with_opts(addr, connect.clone().no_retry())?;
-        probes.insert(addr.to_string(), client);
-    }
-    probes.get_mut(addr).expect("just inserted").model_info()
+    let client = match probes.entry(addr.to_string()) {
+        std::collections::hash_map::Entry::Occupied(e) => e.into_mut(),
+        std::collections::hash_map::Entry::Vacant(v) => {
+            v.insert(ServeClient::with_opts(addr, connect.clone().no_retry())?)
+        }
+    };
+    client.model_info()
 }
 
 // ---------------------------------------------------------------------------
@@ -579,7 +598,6 @@ fn lb_client(
 /// trace id across the hop. A transport failure marks the backend
 /// unhealthy and retries ONCE on a sibling (never the same address);
 /// a second failure — or an empty pool — yields `Response::Err`.
-#[allow(clippy::too_many_arguments)]
 fn forward(
     conns: &mut HashMap<String, ServeClient>,
     pool: &Pool,
@@ -640,14 +658,13 @@ fn backend_request(
     trace_id: u64,
     req: &Request,
 ) -> Result<Response> {
-    if !conns.contains_key(addr) {
-        let client = ServeClient::with_opts(addr, connect.clone().no_retry())?;
-        conns.insert(addr.to_string(), client);
-    }
-    conns
-        .get_mut(addr)
-        .expect("just inserted")
-        .request_with_id(trace_id, req)
+    let client = match conns.entry(addr.to_string()) {
+        std::collections::hash_map::Entry::Occupied(e) => e.into_mut(),
+        std::collections::hash_map::Entry::Vacant(v) => {
+            v.insert(ServeClient::with_opts(addr, connect.clone().no_retry())?)
+        }
+    };
+    client.request_with_id(trace_id, req)
 }
 
 // ---------------------------------------------------------------------------
@@ -721,7 +738,10 @@ fn rolling_reload(
         );
     }
     pool.update_gauges();
-    let info = last.expect("non-empty fleet rolled at least one replica");
+    let info = match last {
+        Some(info) => info,
+        None => bail!("the fleet emptied out mid-reload; nothing was rolled"),
+    };
     Ok(Response::ModelInfo {
         m: info.m as u32,
         q: info.q as u32,

@@ -2077,6 +2077,24 @@ mod tests {
         assert_eq!(fill_ranges(9, 4), vec![(0, 3), (3, 5), (5, 7), (7, 9)]);
     }
 
+    /// The degenerate corners pin down exactly: more threads than rows
+    /// collapses to one range per row (never an empty range), zero rows
+    /// yields the single empty `(0, 0)` whatever the thread count,
+    /// one thread (or the `threads == 0` guard) takes every row.
+    #[test]
+    fn fill_ranges_edge_cases() {
+        // threads > rows: one range per row, no empties
+        assert_eq!(fill_ranges(3, 8), vec![(0, 1), (1, 2), (2, 3)]);
+        assert_eq!(fill_ranges(1, 64), vec![(0, 1)]);
+        // zero rows: a single empty range, regardless of threads
+        assert_eq!(fill_ranges(0, 1), vec![(0, 0)]);
+        assert_eq!(fill_ranges(0, 7), vec![(0, 0)]);
+        assert_eq!(fill_ranges(0, 0), vec![(0, 0)]);
+        // one thread (and the threads == 0 guard): the whole row span
+        assert_eq!(fill_ranges(9, 1), vec![(0, 9)]);
+        assert_eq!(fill_ranges(5, 0), vec![(0, 5)]);
+    }
+
     /// Threaded fills (strict) must be bit-identical to the scratch-free
     /// reference at every thread count, across cached, tiled-streaming
     /// and degenerate slab configurations — the determinism contract of

@@ -26,6 +26,7 @@
 //! story built on them (DESIGN.md §9). See `DESIGN.md` for the system
 //! inventory and the experiment index.
 
+pub mod analyze;
 pub mod baselines;
 pub mod cluster;
 pub mod coordinator;

@@ -43,6 +43,9 @@
 //! gparml bench predict [--points B] [--threads T] # BENCH_predict.json
 //! gparml bench check [--baseline F] [--current F] # CI regression gate
 //! gparml bench rebaseline [--headroom X]          # regenerate baseline
+//! gparml analyze [--json] [--allowlist F]  # repo-invariant lint engine
+//!                                          # (DESIGN.md §14); nonzero on
+//!                                          # unallowed findings
 //! gparml info                      # artifact manifest summary
 //! ```
 //!
@@ -103,10 +106,11 @@ fn run_command(args: &Args) -> Result<()> {
         Some("worker") => worker(args),
         Some("bench") => bench(args),
         Some("data") => data_cmd(args),
+        Some("analyze") => gparml::analyze::run_cli(args),
         Some("info") => info(args),
         _ => {
             eprintln!(
-                "usage: gparml <experiment|train|export|predict|serve|control|lb|reload|stats|worker|bench|data|info> [flags]\n\
+                "usage: gparml <experiment|train|export|predict|serve|control|lb|reload|stats|worker|bench|data|analyze|info> [flags]\n\
                  experiments: fig1 fig2 fig3 fig4 fig5 fig6 fig7 fig8 flights mnist-lvm all\n\
                  common flags: --n --iters --workers --seed --out DIR --artifacts DIR\n\
                  cluster: gparml worker --connect LEADER_ADDR (or --listen ADDR)\n\
@@ -134,7 +138,8 @@ fn run_command(args: &Args) -> Result<()> {
                  bench:   gparml bench psi [--config perf] [--points B] [--reps R],\n\
                           gparml bench predict [--points B] [--threads T] [--clients C],\n\
                           gparml bench check [--baseline F] [--current F] [--max-regress X],\n\
-                          gparml bench rebaseline [--headroom X] [--out F]"
+                          gparml bench rebaseline [--headroom X] [--out F]\n\
+                 lint:    gparml analyze [--json] [--allowlist F] (DESIGN.md §14)"
             );
             bail!("no command given")
         }
@@ -978,7 +983,6 @@ fn train(args: &Args) -> Result<()> {
 /// store shard from disk and verifies the manifest checksum, and no
 /// data rows cross the wire at all (requires one store shard per
 /// worker — repack with `--shard-rows n/workers`).
-#[allow(clippy::too_many_arguments)]
 fn train_from_store(
     args: &Args,
     iters: usize,

@@ -153,12 +153,20 @@ impl ServeState {
 
     /// Snapshot the live model (cheap: one Arc clone under a read lock).
     pub fn current(&self) -> Arc<ModelSlot> {
-        self.slot.read().expect("model slot lock poisoned").clone()
+        // a poisoned slot still holds a coherent Arc (the swap in
+        // `install` is a single assignment) — recover, don't panic
+        self.slot
+            .read()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+            .clone()
     }
 
     /// Atomically swap in a new predictor; returns the new version.
     pub fn install(&self, predictor: Predictor) -> u64 {
-        let mut slot = self.slot.write().expect("model slot lock poisoned");
+        let mut slot = self
+            .slot
+            .write()
+            .unwrap_or_else(std::sync::PoisonError::into_inner);
         let version = slot.version + 1;
         *slot = Arc::new(ModelSlot { predictor, version });
         version
@@ -264,7 +272,12 @@ impl Queue {
     /// reply.
     #[must_use]
     fn push(&self, job: Job) -> bool {
-        let mut g = self.inner.lock().expect("serve queue poisoned");
+        // queue state (jobs, closed flag) stays coherent even if a
+        // worker panicked mid-drain; recover rather than poison-cascade
+        let mut g = self
+            .inner
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner);
         if g.1 {
             return false;
         }
@@ -284,7 +297,10 @@ impl Queue {
     /// an incompatible backlog spreads across the pool instead of
     /// serialising behind one worker. Empty result = shut down.
     fn pop_batch(&self, max_jobs: usize, max_rows: usize) -> Vec<Job> {
-        let mut g = self.inner.lock().expect("serve queue poisoned");
+        let mut g = self
+            .inner
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner);
         loop {
             if let Some(first) = g.0.pop_front() {
                 let (kind, cols) = (first.work.kind(), first.work.cols());
@@ -300,7 +316,10 @@ impl Queue {
                         if !fits {
                             break;
                         }
-                        let next = g.0.pop_front().expect("front just checked");
+                        let next = match g.0.pop_front() {
+                            Some(next) => next,
+                            None => break,
+                        };
                         rows += next.work.rows();
                         out.push(next);
                     }
@@ -317,12 +336,18 @@ impl Queue {
             if g.1 {
                 return Vec::new();
             }
-            g = self.cv.wait(g).expect("serve queue poisoned");
+            g = self
+                .cv
+                .wait(g)
+                .unwrap_or_else(std::sync::PoisonError::into_inner);
         }
     }
 
     fn close(&self) {
-        self.inner.lock().expect("serve queue poisoned").1 = true;
+        self.inner
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+            .1 = true;
         self.cv.notify_all();
     }
 }
@@ -438,7 +463,10 @@ pub fn serve(
                     let conn_id = next_conn;
                     next_conn += 1;
                     if let Ok(clone) = stream.try_clone() {
-                        registry.lock().expect("conn registry poisoned").insert(conn_id, clone);
+                        registry
+                            .lock()
+                            .unwrap_or_else(std::sync::PoisonError::into_inner)
+                            .insert(conn_id, clone);
                     }
                     let (queue, state, counters, registry, metrics) =
                         (&queue, state, &counters, &registry, &metrics);
@@ -452,7 +480,10 @@ pub fn serve(
                                 eprintln!("[gparml-serve] client {peer} failed: {e:#}")
                             }
                         }
-                        registry.lock().expect("conn registry poisoned").remove(&conn_id);
+                        registry
+                            .lock()
+                            .unwrap_or_else(std::sync::PoisonError::into_inner)
+                            .remove(&conn_id);
                         counters.active_conns.fetch_sub(1, Ordering::AcqRel);
                     });
                 }
@@ -475,7 +506,12 @@ pub fn serve(
             std::thread::sleep(Duration::from_millis(5));
             waited_ms += 5;
             if waited_ms == DRAIN_GRACE_MS {
-                let conns = registry.lock().expect("conn registry poisoned");
+                // the guard is deliberately live across shutdown() (a
+                // non-blocking fd call) so handlers cannot deregister
+                // mid-sweep; justified in analyze-allowlist.toml
+                let conns = registry
+                    .lock()
+                    .unwrap_or_else(std::sync::PoisonError::into_inner);
                 if !conns.is_empty() {
                     eprintln!(
                         "[gparml-serve] force-closing {} lingering connection(s) after the \
@@ -1035,7 +1071,10 @@ impl ServeClient {
     /// call re-dials.
     pub fn request_with_id(&mut self, trace_id: u64, req: &Request) -> Result<Response> {
         self.dial()?;
-        let stream = self.stream.as_mut().expect("dial() just succeeded");
+        let stream = match self.stream.as_mut() {
+            Some(stream) => stream,
+            None => bail!("no connection to {} after dial", self.addr),
+        };
         let result = raw_request(stream, trace_id, req);
         if result.is_err() {
             // half-written or desynced stream: never reuse it
@@ -1069,9 +1108,10 @@ impl ServeClient {
                 }
             }
         }
-        Err(last
-            .expect("at least one attempt ran")
-            .context(format!("request to predict server at {}", self.addr)))
+        match last {
+            Some(e) => Err(e.context(format!("request to predict server at {}", self.addr))),
+            None => bail!("request to {} made no attempts", self.addr),
+        }
     }
 
     /// Ask the server for its model shapes and version.
@@ -1194,99 +1234,4 @@ fn expect_model_info(resp: Response) -> Result<ServedModelInfo> {
         Response::Err(e) => bail!("predict server: {e}"),
         other => bail!("unexpected ModelInfo reply {other:?}"),
     }
-}
-
-// ---------------------------------------------------------------------------
-// deprecated free-function shims (one PR of grace, then removed)
-// ---------------------------------------------------------------------------
-
-/// Dial a predict server.
-#[deprecated(note = "use ServeClient::connect — one connection, typed verbs, retry policy")]
-pub fn connect(addr: &str) -> Result<TcpStream> {
-    let stream = TcpStream::connect(addr)
-        .with_context(|| format!("connecting to predict server at {addr}"))?;
-    stream.set_nodelay(true).ok();
-    Ok(stream)
-}
-
-fn shim_request(stream: &mut TcpStream, req: Request) -> Result<(Response, u64)> {
-    let trace_id = obs::next_trace_id();
-    raw_request(stream, trace_id, &req).map(|resp| (resp, trace_id))
-}
-
-/// Ask the server for its model shapes and version.
-#[deprecated(note = "use ServeClient::model_info")]
-pub fn remote_model_info(stream: &mut TcpStream) -> Result<ServedModelInfo> {
-    expect_model_info(shim_request(stream, Request::ModelInfo)?.0)
-}
-
-/// Ask the server to hot-reload its model artifact from disk.
-#[deprecated(note = "use ServeClient::reload")]
-pub fn remote_reload(stream: &mut TcpStream) -> Result<ServedModelInfo> {
-    expect_model_info(shim_request(stream, Request::Reload)?.0)
-}
-
-/// Fetch the server's live metrics snapshot as a JSON document.
-#[deprecated(note = "use ServeClient::stats")]
-pub fn remote_stats(stream: &mut TcpStream) -> Result<String> {
-    match shim_request(stream, Request::ServeStats)?.0 {
-        Response::StatsJson(json) => Ok(json),
-        Response::Err(e) => bail!("predict server: {e}"),
-        other => bail!("unexpected ServeStats reply {other:?}"),
-    }
-}
-
-/// Predict a batch remotely.
-#[deprecated(note = "use ServeClient::predict")]
-pub fn remote_predict(
-    stream: &mut TcpStream,
-    xt_mu: &Matrix,
-    xt_var: &Matrix,
-) -> Result<(Matrix, Vec<f64>)> {
-    shim_predict(stream, xt_mu, xt_var).map(|(mean, var, _)| (mean, var))
-}
-
-/// Predict a batch remotely, returning the request id too.
-#[deprecated(note = "use ServeClient::predict_traced")]
-pub fn remote_predict_traced(
-    stream: &mut TcpStream,
-    xt_mu: &Matrix,
-    xt_var: &Matrix,
-) -> Result<(Matrix, Vec<f64>, u64)> {
-    shim_predict(stream, xt_mu, xt_var)
-}
-
-fn shim_predict(
-    stream: &mut TcpStream,
-    xt_mu: &Matrix,
-    xt_var: &Matrix,
-) -> Result<(Matrix, Vec<f64>, u64)> {
-    let (resp, trace_id) = shim_request(
-        stream,
-        Request::ServePredict {
-            xt_mu: xt_mu.clone(),
-            xt_var: xt_var.clone(),
-        },
-    )?;
-    match resp {
-        Response::Predict { mean, var } => Ok((mean, var, trace_id)),
-        Response::Err(e) => bail!("predict server: {e}"),
-        other => bail!("unexpected predict reply {other:?}"),
-    }
-}
-
-/// Project observations into the served model's latent space remotely.
-#[deprecated(note = "use ServeClient::project")]
-pub fn remote_project(stream: &mut TcpStream, y: &Matrix) -> Result<(Matrix, Vec<f64>)> {
-    match shim_request(stream, Request::ServeProject { y: y.clone() })?.0 {
-        Response::Project { xmu, conf } => Ok((xmu, conf)),
-        Response::Err(e) => bail!("predict server: {e}"),
-        other => bail!("unexpected project reply {other:?}"),
-    }
-}
-
-/// Politely hang up (the server treats EOF the same).
-#[deprecated(note = "ServeClient hangs up on Drop (or via ServeClient::hangup)")]
-pub fn hangup(stream: &mut TcpStream) {
-    let _ = wire::write_frame(stream, &Frame::Shutdown);
 }
